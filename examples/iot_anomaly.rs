@@ -1,0 +1,86 @@
+//! IoT anomaly-detection scenario: a 3-stage ingest → featurize →
+//! detect-anomaly pipeline under steady HIGH load (the paper's Fig. 4c/5c
+//! regime, where the 30-core resource ceiling binds and the cost/QoS of the
+//! non-random algorithms converge).
+//!
+//! Also demonstrates config introspection: prints the deployed configuration
+//! the winning agent settles on.
+//!
+//! Run: cargo run --release --example iot_anomaly
+
+use std::rc::Rc;
+
+use opd::agents::Agent;
+use opd::cli::{make_agent, make_predictor};
+use opd::cluster::ClusterTopology;
+use opd::config::AgentKind;
+use opd::pipeline::{catalog, QosWeights};
+use opd::runtime::OpdRuntime;
+use opd::sim::{run_cycle, Env};
+use opd::workload::{Trace, WorkloadGen, WorkloadKind};
+
+fn main() {
+    let seed = 7;
+    let cycle = 600usize;
+    let rt = OpdRuntime::load(None).map(Rc::new).ok();
+    let np = catalog::iot_anomaly();
+    println!("pipeline: {} ({})", np.spec.name, np.description);
+    for (i, t) in np.spec.tasks.iter().enumerate() {
+        let names: Vec<&str> = t.variants.iter().map(|v| v.name.as_str()).collect();
+        println!("  stage {i}: {} [{}]", t.name, names.join(", "));
+    }
+
+    let trace = Trace::new(
+        "steady-high",
+        WorkloadGen::new(WorkloadKind::SteadyHigh, seed).trace(cycle + 1),
+    );
+    println!("\nsteady-high load ≈ {:.0} req/s on a 30-core edge cluster\n", 120.0);
+    println!("{:<8} {:>9} {:>10} {:>10} {:>8}", "agent", "avg QoS", "avg cost", "reward", "clamped");
+
+    let mut final_config = None;
+    for kind in AgentKind::all() {
+        let mut env = Env::from_trace(
+            catalog::iot_anomaly().spec,
+            ClusterTopology::paper_testbed(),
+            QosWeights::default(),
+            &trace,
+            make_predictor(&rt),
+            10,
+            3.0,
+        );
+        let mut agent = make_agent(kind, seed, &rt, None, true).unwrap();
+        let res = run_cycle(&mut env, agent.as_mut());
+        println!(
+            "{:<8} {:>9.3} {:>10.2} {:>10.3} {:>8}",
+            res.agent,
+            res.avg_qos(),
+            res.avg_cost(),
+            res.avg_reward(),
+            res.clamped
+        );
+        if kind == AgentKind::Ipa {
+            // capture the steady-state config IPA converges to
+            let cfg = {
+                let obs = env.observe();
+                let mut ipa = opd::agents::IpaAgent::new();
+                ipa.decide(&obs)
+            };
+            final_config = Some((env.spec.clone(), cfg));
+        }
+    }
+
+    if let Some((spec, cfg)) = final_config {
+        println!("\nIPA steady-state deployment @ ~120 req/s:");
+        for (t, c) in spec.tasks.iter().zip(&cfg) {
+            println!(
+                "  {:<16} variant={:<12} replicas={} batch={:>2}  ({:.1} cores)",
+                t.name,
+                t.variants[c.variant].name,
+                c.replicas,
+                c.batch(),
+                c.cores(t)
+            );
+        }
+        println!("  total cores: {:.1} / 30", spec.total_cores(&cfg));
+    }
+}

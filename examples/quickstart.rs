@@ -1,0 +1,65 @@
+//! Quickstart: the smallest end-to-end use of the public API.
+//!
+//! Builds the 4-stage video-analytics pipeline on the paper's 3×10-core
+//! testbed, drives it with a fluctuating workload for 300 simulated seconds,
+//! and lets the OPD agent (AOT HLO policy if `make artifacts` has run,
+//! pure-rust mirror otherwise) pick configurations every 10 s.
+//!
+//! Run: cargo run --release --example quickstart
+
+use std::rc::Rc;
+
+use opd::agents::OpdAgent;
+use opd::cluster::ClusterTopology;
+use opd::pipeline::{catalog, QosWeights};
+use opd::runtime::OpdRuntime;
+use opd::sim::{run_cycle, Env};
+use opd::workload::predictor::{LoadPredictor, LstmPredictor, MovingMaxPredictor};
+use opd::workload::WorkloadKind;
+
+fn main() {
+    // 1. pipeline + cluster + workload
+    let pipeline = catalog::video_analytics();
+    println!("pipeline: {} ({})", pipeline.spec.name, pipeline.description);
+
+    // 2. runtime (AOT HLO) with graceful native fallback
+    let (mut agent, predictor): (OpdAgent, Box<dyn LoadPredictor>) =
+        match OpdRuntime::load(None).map(Rc::new) {
+            Ok(rt) => {
+                println!("PJRT runtime: {} (AOT HLO decision path)", rt.engine.platform());
+                (OpdAgent::from_runtime(rt.clone(), 42), Box::new(LstmPredictor::hlo(rt)))
+            }
+            Err(e) => {
+                println!("runtime unavailable ({e:#}); using native mirrors");
+                let params = vec![0.01f32; opd::nn::spec::POLICY_PARAM_COUNT];
+                (OpdAgent::native(params, 42), Box::new(MovingMaxPredictor::default()))
+            }
+        };
+    agent.greedy = true; // evaluation mode: argmax, no exploration
+
+    // 3. environment: 300 s cycle, 10 s adaptation interval
+    let mut env = Env::from_workload(
+        pipeline.spec,
+        ClusterTopology::paper_testbed(),
+        QosWeights::default(),
+        WorkloadKind::Fluctuating,
+        42,
+        predictor,
+        10,
+        300,
+        3.0,
+    );
+
+    // 4. run one cycle and report
+    let res = run_cycle(&mut env, &mut agent);
+    println!("\n=== results over {} simulated seconds ===", res.qos_series.len());
+    println!("average QoS (Eq. 3)        : {:8.3}", res.avg_qos());
+    println!("average cost (Eq. 2, cores): {:8.2}", res.avg_cost());
+    println!("average reward (Eq. 7)     : {:8.3}", res.avg_reward());
+    println!("decisions                  : {:8}", res.decision_times.len());
+    println!(
+        "decision time              : {:8.3} ms mean / {:.3} ms total",
+        res.mean_decision_time() * 1e3,
+        res.total_decision_time() * 1e3
+    );
+}

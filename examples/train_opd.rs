@@ -1,0 +1,93 @@
+//! Train the OPD policy (Algorithm 2: PPO + expert guidance) and evaluate it
+//! against the baselines — the full paper loop in one binary.
+//!
+//! Requires `make artifacts` (training runs through the AOT HLO train step).
+//!
+//! Run: cargo run --release --example train_opd [-- episodes]
+
+use std::rc::Rc;
+
+use opd::cli::{make_agent, make_predictor};
+use opd::cluster::ClusterTopology;
+use opd::config::AgentKind;
+use opd::pipeline::{catalog, QosWeights};
+use opd::rl::{Trainer, TrainerConfig};
+use opd::runtime::OpdRuntime;
+use opd::sim::{run_cycle, Env};
+use opd::workload::{Trace, WorkloadGen, WorkloadKind};
+
+fn main() {
+    opd::util::logging::init();
+    let episodes: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(40);
+    let rt = match OpdRuntime::load(None).map(Rc::new) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("training needs artifacts: {e:#}\nrun `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+
+    // --- train (Algorithm 2) -------------------------------------------
+    let tcfg = TrainerConfig { episodes, expert_freq: 4, seed: 42, ..Default::default() };
+    println!("training OPD: {episodes} episodes (expert every {}th), 400 s episodes", tcfg.expert_freq);
+    let rt2 = rt.clone();
+    let mut trainer = Trainer::new(rt.clone(), tcfg, move |seed| {
+        // alternate the training distribution across all three load regimes
+        // so the policy learns to adapt (Fig. 4/5 evaluate all three)
+        let kind = match seed % 3 {
+            0 => WorkloadKind::SteadyLow,
+            1 => WorkloadKind::Fluctuating,
+            _ => WorkloadKind::SteadyHigh,
+        };
+        Env::from_workload(
+            catalog::video_analytics().spec,
+            ClusterTopology::paper_testbed(),
+            QosWeights::default(),
+            kind,
+            seed,
+            make_predictor(&Some(rt2.clone())),
+            10,
+            400,
+            3.0,
+        )
+    });
+    trainer.train().expect("training failed");
+    trainer.save_checkpoint("opd_checkpoint.bin").unwrap();
+    trainer.history.save("opd_training_history.json").unwrap();
+    println!("saved opd_checkpoint.bin + opd_training_history.json");
+
+    // --- evaluate vs baselines on a held-out trace ----------------------
+    let eval_seed = 999;
+    let trace = Trace::new(
+        "eval",
+        WorkloadGen::new(WorkloadKind::Fluctuating, eval_seed).trace(601),
+    );
+    println!("\nevaluation on held-out fluctuating trace (600 s):");
+    println!("{:<8} {:>9} {:>10} {:>10}", "agent", "avg QoS", "avg cost", "objective");
+    for kind in AgentKind::all() {
+        let mut env = Env::from_trace(
+            catalog::video_analytics().spec,
+            ClusterTopology::paper_testbed(),
+            QosWeights::default(),
+            &trace,
+            make_predictor(&Some(rt.clone())),
+            10,
+            3.0,
+        );
+        let params = if kind == AgentKind::Opd { Some("opd_checkpoint.bin") } else { None };
+        let mut agent = make_agent(kind, eval_seed, &Some(rt.clone()), params, true).unwrap();
+        let res = run_cycle(&mut env, agent.as_mut());
+        let w = QosWeights::default();
+        let objective = res.avg_qos() - w.lambda * res.avg_cost() / w.cost_scale;
+        println!(
+            "{:<8} {:>9.3} {:>10.2} {:>10.3}",
+            res.agent,
+            res.avg_qos(),
+            res.avg_cost(),
+            objective
+        );
+    }
+}

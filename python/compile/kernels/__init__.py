@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp reference oracles."""
+
+from . import dense, lstm, ref, resblock  # noqa: F401

@@ -1,0 +1,35 @@
+"""Fused dense (+bias +ReLU) Pallas kernel.
+
+The matmul epilogue (bias add + activation) is fused into the kernel so the
+intermediate never round-trips to HBM. Shapes in this system are tiny
+(≤128×144), so a single VMEM-resident block suffices — the whole weight matrix
+is the block, which is exactly the TPU-friendly regime: one MXU pass, epilogue
+on the VPU. ``interpret=True`` everywhere (CPU PJRT cannot run Mosaic
+custom-calls; see DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    y = x_ref[...] @ w_ref[...] + b_ref[...][None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, relu: bool = False) -> jnp.ndarray:
+    """y = x @ w + b (+ReLU), fused.  x: (B, I), w: (I, O), b: (O,)."""
+    batch, _ = x.shape
+    out = jax.ShapeDtypeStruct((batch, w.shape[1]), x.dtype)
+    return pl.pallas_call(
+        functools.partial(_dense_kernel, relu=relu),
+        out_shape=out,
+        interpret=True,
+    )(x, w, b)

@@ -1,0 +1,51 @@
+"""Fused LSTM cell Pallas kernel.
+
+One step fuses BOTH gate matmuls (x·Wx + h·Wh), the bias add, all four gate
+nonlinearities, and the state update — on a GPU this would be four separate
+GEMM launches + elementwise kernels; on TPU we keep Wx/Wh resident in VMEM and
+do two MXU passes + VPU epilogue per step with no HBM round-trips for the gate
+pre-activations. The sequence dimension is driven by ``lax.scan`` at L2
+(``model.predictor_fwd``), so the same compiled cell body is reused for all 120
+timesteps of the paper's 2-minute window.
+
+Gate order: i, f, g, o (matches kernels/ref.py and the offline trainer).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lstm_cell_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref, h_out_ref, c_out_ref):
+    hd = h_ref.shape[-1]
+    gates = x_ref[...] @ wx_ref[...] + h_ref[...] @ wh_ref[...] + b_ref[...][None, :]
+    i = 1.0 / (1.0 + jnp.exp(-gates[:, 0 * hd : 1 * hd]))
+    f = 1.0 / (1.0 + jnp.exp(-gates[:, 1 * hd : 2 * hd]))
+    g = jnp.tanh(gates[:, 2 * hd : 3 * hd])
+    o = 1.0 / (1.0 + jnp.exp(-gates[:, 3 * hd : 4 * hd]))
+    c_new = f * c_ref[...] + i * g
+    h_out_ref[...] = o * jnp.tanh(c_new)
+    c_out_ref[...] = c_new
+
+
+def lstm_cell(
+    x: jnp.ndarray,
+    h: jnp.ndarray,
+    c: jnp.ndarray,
+    wx: jnp.ndarray,
+    wh: jnp.ndarray,
+    b: jnp.ndarray,
+):
+    """Fused LSTM step.  x: (B, I), h/c: (B, H) → (h', c')."""
+    batch, hd = h.shape
+    out = (
+        jax.ShapeDtypeStruct((batch, hd), x.dtype),
+        jax.ShapeDtypeStruct((batch, hd), x.dtype),
+    )
+    return pl.pallas_call(
+        _lstm_cell_kernel,
+        out_shape=out,
+        interpret=True,
+    )(x, h, c, wx, wh, b)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracle implementations of every L1 Pallas kernel.
+
+These are the correctness reference (pytest asserts kernel ≡ ref) AND the ops
+used inside the PPO *training* graph: ``pallas_call`` does not define a general
+VJP, so the grad-able graph is built from these while the decision-path forward
+uses the fused Pallas kernels. A dedicated test asserts the two forwards agree.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dense_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, relu: bool) -> jnp.ndarray:
+    """y = x @ w + b, optionally ReLU-fused.  x: (B, I), w: (I, O), b: (O,)."""
+    y = x @ w + b
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def resblock_ref(
+    x: jnp.ndarray,
+    w1: jnp.ndarray,
+    b1: jnp.ndarray,
+    w2: jnp.ndarray,
+    b2: jnp.ndarray,
+) -> jnp.ndarray:
+    """Residual MLP block: y = x + (relu(x@w1 + b1)) @ w2 + b2.  x: (B, H)."""
+    h = jnp.maximum(x @ w1 + b1, 0.0)
+    return x + h @ w2 + b2
+
+
+def lstm_cell_ref(
+    x: jnp.ndarray,
+    h: jnp.ndarray,
+    c: jnp.ndarray,
+    wx: jnp.ndarray,
+    wh: jnp.ndarray,
+    b: jnp.ndarray,
+):
+    """One fused LSTM step (gate order i, f, g, o).
+
+    x: (B, I), h/c: (B, H), wx: (I, 4H), wh: (H, 4H), b: (4H,).
+    Returns (h', c').
+    """
+    hd = h.shape[-1]
+    gates = x @ wx + h @ wh + b
+    i = 1.0 / (1.0 + jnp.exp(-gates[:, 0 * hd : 1 * hd]))
+    f = 1.0 / (1.0 + jnp.exp(-gates[:, 1 * hd : 2 * hd]))
+    g = jnp.tanh(gates[:, 2 * hd : 3 * hd])
+    o = 1.0 / (1.0 + jnp.exp(-gates[:, 3 * hd : 4 * hd]))
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new

@@ -1,0 +1,34 @@
+"""Fused residual MLP block Pallas kernel.
+
+y = x + relu(x@w1 + b1) @ w2 + b2 in ONE kernel: both weight tiles stay
+VMEM-resident, the hidden activation never leaves VMEM, and the residual add is
+the epilogue. On a real TPU this is two MXU passes back-to-back with zero HBM
+traffic for intermediates — the paper's residual feature extractor's hot loop.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _resblock_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...]
+    h = jnp.maximum(x @ w1_ref[...] + b1_ref[...][None, :], 0.0)
+    o_ref[...] = x + h @ w2_ref[...] + b2_ref[...][None, :]
+
+
+def resblock(
+    x: jnp.ndarray,
+    w1: jnp.ndarray,
+    b1: jnp.ndarray,
+    w2: jnp.ndarray,
+    b2: jnp.ndarray,
+) -> jnp.ndarray:
+    """Fused residual block.  x: (B, H); w1, w2: (H, H); b1, b2: (H,)."""
+    return pl.pallas_call(
+        _resblock_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x, w1, b1, w2, b2)

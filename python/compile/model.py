@@ -1,0 +1,223 @@
+"""L2: JAX compute graphs for the OPD system (paper §IV).
+
+Three graphs are AOT-lowered to HLO text by ``aot.py`` and executed from the
+rust coordinator via PJRT:
+
+* ``policy_fwd``      — decision-path forward (Pallas kernels): state → logits + value.
+* ``ppo_train_step``  — one full PPO minibatch update (Eq. 9–12): loss → grads →
+                        global-norm clip → Adam. Built from the grad-able ref ops.
+* ``predictor_fwd``   — LSTM workload predictor forward (Pallas LSTM cell under
+                        ``lax.scan``): 120 s window → max load of next 20 s (§IV-A).
+
+All cross-boundary tensors are f32; action indices are carried as f32 and
+compared against an iota in-graph (no integer dtypes cross PJRT).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import params as P
+from .kernels import ref
+from .kernels.dense import dense
+from .kernels.lstm import lstm_cell
+from .kernels.resblock import resblock
+
+# Workload values are normalized by this scale inside the predictor graph, so
+# rust passes raw requests/sec. Must match rust/src/workload/predictor.rs.
+LOAD_SCALE = 200.0
+
+_NEG = -1e9  # mask value for invalid logits
+
+
+# ---------------------------------------------------------------------------
+# Policy network forward
+# ---------------------------------------------------------------------------
+
+def _trunk(p: dict, state: jnp.ndarray, use_pallas: bool) -> jnp.ndarray:
+    """Shared feature-extraction trunk (paper: FC + residual blocks)."""
+    if use_pallas:
+        h = dense(state, p["fc_in/w"], p["fc_in/b"], relu=True)
+        for i in range(P.N_RES):
+            h = resblock(h, p[f"res{i}/w1"], p[f"res{i}/b1"], p[f"res{i}/w2"], p[f"res{i}/b2"])
+    else:
+        h = ref.dense_ref(state, p["fc_in/w"], p["fc_in/b"], relu=True)
+        for i in range(P.N_RES):
+            h = ref.resblock_ref(h, p[f"res{i}/w1"], p[f"res{i}/b1"], p[f"res{i}/w2"], p[f"res{i}/b2"])
+    return h
+
+
+def policy_fwd(params_flat: jnp.ndarray, state: jnp.ndarray):
+    """Decision-path forward using the fused Pallas kernels.
+
+    state: (B, STATE_DIM) → (logits (B, LOGITS_DIM), value (B, 1)).
+    """
+    p = P.unflatten(params_flat, P.policy_spec())
+    h = _trunk(p, state, use_pallas=True)
+    logits = dense(h, p["head/w"], p["head/b"], relu=False)
+    value = dense(h, p["value/w"], p["value/b"], relu=False)
+    return logits, value
+
+
+def policy_fwd_ref(params_flat: jnp.ndarray, state: jnp.ndarray):
+    """Same forward built from the pure-jnp ref ops (grad-able)."""
+    p = P.unflatten(params_flat, P.policy_spec())
+    h = _trunk(p, state, use_pallas=False)
+    logits = ref.dense_ref(h, p["head/w"], p["head/b"], relu=False)
+    value = ref.dense_ref(h, p["value/w"], p["value/b"], relu=False)
+    return logits, value
+
+
+# ---------------------------------------------------------------------------
+# Factored-categorical log-prob / entropy with masking
+# ---------------------------------------------------------------------------
+
+def _split_heads(x: jnp.ndarray):
+    """(B, LOGITS_DIM) → list of 3 arrays (B, MAX_TASKS, head_dim_k)."""
+    b = x.shape[0]
+    x = x.reshape(b, P.MAX_TASKS, P.HEAD_DIM)
+    outs, off = [], 0
+    for d in P.HEAD_DIMS:
+        outs.append(x[:, :, off : off + d])
+        off += d
+    return outs
+
+
+def logp_entropy(
+    logits: jnp.ndarray,
+    actions: jnp.ndarray,
+    head_mask: jnp.ndarray,
+    task_mask: jnp.ndarray,
+):
+    """Masked factored-categorical log π(a|s) and entropy.
+
+    logits:    (B, LOGITS_DIM)
+    actions:   (B, ACT_DIM) f32 indices, layout (task, head) row-major
+    head_mask: (B, LOGITS_DIM) 1.0 where the logit is a valid choice
+    task_mask: (B, MAX_TASKS)  1.0 where the pipeline stage exists
+    Returns (logp (B,), entropy (B,)).
+    """
+    b = logits.shape[0]
+    act = actions.reshape(b, P.MAX_TASKS, 3)
+    logit_heads = _split_heads(logits)
+    mask_heads = _split_heads(head_mask)
+    logp = jnp.zeros((b, P.MAX_TASKS), logits.dtype)
+    ent = jnp.zeros((b, P.MAX_TASKS), logits.dtype)
+    for k, (lg, mk) in enumerate(zip(logit_heads, mask_heads)):
+        d = lg.shape[-1]
+        masked = lg + (mk - 1.0) * (-_NEG)  # invalid → -1e9
+        ls = jax.nn.log_softmax(masked, axis=-1)           # (B, T, d)
+        onehot = (
+            jnp.arange(d, dtype=jnp.float32)[None, None, :] == act[:, :, k : k + 1]
+        ).astype(logits.dtype)
+        logp = logp + jnp.sum(ls * onehot, axis=-1)
+        prob = jnp.exp(ls) * mk
+        ent = ent - jnp.sum(prob * ls * mk, axis=-1)
+    logp = jnp.sum(logp * task_mask, axis=-1)
+    ent = jnp.sum(ent * task_mask, axis=-1)
+    return logp, ent
+
+
+# ---------------------------------------------------------------------------
+# PPO train step (Eq. 9–12 + Adam)
+# ---------------------------------------------------------------------------
+
+def _ppo_loss(params_flat, states, actions, old_logp, adv, ret, head_mask, task_mask):
+    logits, value = policy_fwd_ref(params_flat, states)
+    logp, ent = logp_entropy(logits, actions, head_mask, task_mask)
+    # normalize advantages within the minibatch (standard PPO practice)
+    adv = (adv - jnp.mean(adv)) / (jnp.std(adv) + 1e-8)
+    # log-ratio clamp: once the policy drifts far from old (e.g. expert
+    # actions under a peaked policy), exp() explodes and min(r·A, clip·A)
+    # is unbounded below for A < 0 — clamping keeps every update finite.
+    log_ratio = jnp.clip(logp - old_logp, -4.0, 4.0)
+    ratio = jnp.exp(log_ratio)                                     # r_t(θ)
+    clipped = jnp.clip(ratio, 1.0 - P.CLIP_EPS, 1.0 + P.CLIP_EPS)
+    pi_loss = -jnp.mean(jnp.minimum(ratio * adv, clipped * adv))   # L^CLIP
+    v_loss = jnp.mean((value[:, 0] - ret) ** 2)                    # L^VF
+    entropy = jnp.mean(ent)                                        # S[π]
+    total = pi_loss + P.VF_COEF * v_loss - P.ENT_COEF * entropy    # Eq. 11
+    approx_kl = jnp.mean(old_logp - logp)
+    return total, (pi_loss, v_loss, entropy, approx_kl)
+
+
+def ppo_train_step(
+    params_flat: jnp.ndarray,
+    adam_m: jnp.ndarray,
+    adam_v: jnp.ndarray,
+    step: jnp.ndarray,       # (1,) f32 — number of updates already applied
+    states: jnp.ndarray,     # (TRAIN_BATCH, STATE_DIM)
+    actions: jnp.ndarray,    # (TRAIN_BATCH, ACT_DIM) f32 indices
+    old_logp: jnp.ndarray,   # (TRAIN_BATCH,)
+    adv: jnp.ndarray,        # (TRAIN_BATCH,)
+    ret: jnp.ndarray,        # (TRAIN_BATCH,)
+    head_mask: jnp.ndarray,  # (TRAIN_BATCH, LOGITS_DIM)
+    task_mask: jnp.ndarray,  # (TRAIN_BATCH, MAX_TASKS)
+):
+    """One PPO minibatch update. Returns (params', m', v', metrics (6,)).
+
+    metrics = [pi_loss, v_loss, entropy, approx_kl, total_loss, grad_norm].
+    """
+    (total, (pi_loss, v_loss, entropy, approx_kl)), grads = jax.value_and_grad(
+        _ppo_loss, has_aux=True
+    )(params_flat, states, actions, old_logp, adv, ret, head_mask, task_mask)
+
+    gnorm = jnp.sqrt(jnp.sum(grads**2))
+    scale = jnp.minimum(1.0, P.MAX_GRAD_NORM / (gnorm + 1e-8))
+    grads = grads * scale
+
+    t = step[0] + 1.0
+    m = P.ADAM_B1 * adam_m + (1.0 - P.ADAM_B1) * grads
+    v = P.ADAM_B2 * adam_v + (1.0 - P.ADAM_B2) * grads**2
+    mhat = m / (1.0 - P.ADAM_B1**t)
+    vhat = v / (1.0 - P.ADAM_B2**t)
+    new_params = params_flat - P.ADAM_LR * mhat / (jnp.sqrt(vhat) + P.ADAM_EPS)
+
+    metrics = jnp.stack([pi_loss, v_loss, entropy, approx_kl, total, gnorm])
+    return new_params, m, v, metrics
+
+
+# ---------------------------------------------------------------------------
+# LSTM workload predictor (paper §IV-A)
+# ---------------------------------------------------------------------------
+
+def _predictor_core(pparams_flat: jnp.ndarray, window: jnp.ndarray, use_pallas: bool):
+    """window: (B, PRED_WINDOW) raw req/s → prediction (B, 1) raw req/s."""
+    p = P.unflatten(pparams_flat, P.predictor_spec())
+    x = window / LOAD_SCALE
+    b = x.shape[0]
+    h0 = jnp.zeros((b, P.LSTM_HIDDEN), x.dtype)
+    c0 = jnp.zeros((b, P.LSTM_HIDDEN), x.dtype)
+    xs = jnp.transpose(x, (1, 0))[:, :, None]  # (W, B, 1)
+
+    cell = lstm_cell if use_pallas else ref.lstm_cell_ref
+
+    def scan_fn(carry, x_t):
+        h, c = carry
+        h, c = cell(x_t, h, c, p["lstm/wx"], p["lstm/wh"], p["lstm/b"])
+        return (h, c), None
+
+    (h, _), _ = jax.lax.scan(scan_fn, (h0, c0), xs)
+    out = (
+        dense(h, p["dense/w"], p["dense/b"], relu=False)
+        if use_pallas
+        else ref.dense_ref(h, p["dense/w"], p["dense/b"], relu=False)
+    )
+    return out * LOAD_SCALE
+
+
+def predictor_fwd(pparams_flat: jnp.ndarray, window: jnp.ndarray):
+    """Decision-path predictor forward (Pallas LSTM cell)."""
+    return _predictor_core(pparams_flat, window, use_pallas=True)
+
+
+def predictor_fwd_ref(pparams_flat: jnp.ndarray, window: jnp.ndarray):
+    """Grad-able predictor forward used by the offline trainer in aot.py."""
+    return _predictor_core(pparams_flat, window, use_pallas=False)
+
+
+def predictor_loss(pparams_flat, windows, targets):
+    """MSE in normalized load units.  windows: (B, W), targets: (B,)."""
+    pred = predictor_fwd_ref(pparams_flat, windows)[:, 0]
+    return jnp.mean(((pred - targets) / LOAD_SCALE) ** 2)

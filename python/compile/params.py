@@ -1,0 +1,204 @@
+"""Single source of truth for model dimensions and parameter layout.
+
+Both the Pallas decision-path forward (L1 kernels) and the pure-jnp training
+graph (ref ops, grad-able) unflatten parameters from ONE flat f32 vector using
+the spec below, so the rust side only ever moves flat blobs around.
+
+The rust mirror of these constants lives in ``rust/src/nn/spec.rs``; the
+manifest emitted by ``aot.py`` carries them across the language boundary and a
+rust unit test cross-checks them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Problem constants (see DESIGN.md §3). These fix the NN interface; shorter
+# pipelines are handled by masking.
+# ---------------------------------------------------------------------------
+MAX_TASKS = 8
+MAX_VARIANTS = 4
+F_MAX = 8           # replica choices 1..F_MAX  -> 8-way head
+N_BATCH = 6         # batch choices {1,2,4,8,16,32}
+BATCH_CHOICES = (1, 2, 4, 8, 16, 32)
+
+NODE_FEATS = 6
+TASK_FEATS = 10
+STATE_DIM = NODE_FEATS + MAX_TASKS * TASK_FEATS          # 86
+
+HEAD_DIMS = (MAX_VARIANTS, F_MAX, N_BATCH)               # per-task heads
+HEAD_DIM = sum(HEAD_DIMS)                                # 18
+LOGITS_DIM = MAX_TASKS * HEAD_DIM                        # 144
+ACT_DIM = MAX_TASKS * 3                                  # action indices / state
+
+HIDDEN = 128
+N_RES = 3
+
+# Predictor (paper §IV-A): 2 min of per-second load -> max load of next 20 s.
+PRED_WINDOW = 120
+PRED_HORIZON = 20
+LSTM_HIDDEN = 25
+
+# PPO train-step minibatch (fixed shape; rust pads the last minibatch).
+TRAIN_BATCH = 64
+
+# Adam / PPO hyper-parameters baked into the training graph.
+ADAM_LR = 3e-4
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+CLIP_EPS = 0.2       # PPO epsilon (Eq. 12)
+VF_COEF = 0.5        # c1 (Eq. 11)
+ENT_COEF = 0.03      # c2 (Eq. 11) — keeps exploration alive against
+                     # per-minibatch-normalized advantages
+MAX_GRAD_NORM = 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: Tuple[int, ...]
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape))
+
+
+def policy_spec() -> List[ParamSpec]:
+    """Parameter layout of the policy network, in flat order."""
+    spec = [
+        ParamSpec("fc_in/w", (STATE_DIM, HIDDEN)),
+        ParamSpec("fc_in/b", (HIDDEN,)),
+    ]
+    for i in range(N_RES):
+        spec += [
+            ParamSpec(f"res{i}/w1", (HIDDEN, HIDDEN)),
+            ParamSpec(f"res{i}/b1", (HIDDEN,)),
+            ParamSpec(f"res{i}/w2", (HIDDEN, HIDDEN)),
+            ParamSpec(f"res{i}/b2", (HIDDEN,)),
+        ]
+    spec += [
+        ParamSpec("head/w", (HIDDEN, LOGITS_DIM)),
+        ParamSpec("head/b", (LOGITS_DIM,)),
+        ParamSpec("value/w", (HIDDEN, 1)),
+        ParamSpec("value/b", (1,)),
+    ]
+    return spec
+
+
+def predictor_spec() -> List[ParamSpec]:
+    """Parameter layout of the LSTM workload predictor, in flat order."""
+    return [
+        ParamSpec("lstm/wx", (1, 4 * LSTM_HIDDEN)),
+        ParamSpec("lstm/wh", (LSTM_HIDDEN, 4 * LSTM_HIDDEN)),
+        ParamSpec("lstm/b", (4 * LSTM_HIDDEN,)),
+        ParamSpec("dense/w", (LSTM_HIDDEN, 1)),
+        ParamSpec("dense/b", (1,)),
+    ]
+
+
+def spec_size(spec: List[ParamSpec]) -> int:
+    return sum(p.size for p in spec)
+
+
+POLICY_PARAM_COUNT = spec_size(policy_spec())
+PREDICTOR_PARAM_COUNT = spec_size(predictor_spec())
+
+
+def unflatten(flat: jnp.ndarray, spec: List[ParamSpec]) -> dict:
+    """Slice one flat vector into the named parameter tensors of ``spec``."""
+    out = {}
+    off = 0
+    for p in spec:
+        out[p.name] = jax.lax.dynamic_slice_in_dim(flat, off, p.size).reshape(p.shape)
+        off += p.size
+    return out
+
+
+def flatten(params: dict, spec: List[ParamSpec]) -> jnp.ndarray:
+    """Inverse of :func:`unflatten` (same ordering)."""
+    return jnp.concatenate([jnp.asarray(params[p.name]).reshape(-1) for p in spec])
+
+
+def init_policy(seed: int = 0) -> np.ndarray:
+    """He-style init for the trunk, small-scale init for the heads.
+
+    Small head init keeps the initial policy near-uniform, which stabilizes
+    early PPO updates (standard practice).
+    """
+    rng = np.random.default_rng(seed)
+    out = []
+    for p in policy_spec():
+        if p.name.endswith("/b"):
+            out.append(np.zeros(p.shape, np.float32))
+        elif p.name.startswith(("head/", "value/")):
+            out.append(rng.normal(0.0, 0.01, p.shape).astype(np.float32))
+        else:
+            fan_in = p.shape[0]
+            out.append(
+                rng.normal(0.0, np.sqrt(2.0 / fan_in), p.shape).astype(np.float32)
+            )
+    return np.concatenate([a.reshape(-1) for a in out])
+
+
+def init_predictor(seed: int = 1) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    out = []
+    for p in predictor_spec():
+        if p.name.endswith("/b"):
+            b = np.zeros(p.shape, np.float32)
+            if p.name == "lstm/b":
+                # forget-gate bias = 1 (standard LSTM trick)
+                b[LSTM_HIDDEN : 2 * LSTM_HIDDEN] = 1.0
+            out.append(b)
+        else:
+            fan_in = p.shape[0]
+            out.append(
+                rng.normal(0.0, np.sqrt(1.0 / max(fan_in, 1)), p.shape).astype(
+                    np.float32
+                )
+            )
+    return np.concatenate([a.reshape(-1) for a in out])
+
+
+def manifest_dict() -> dict:
+    """Constants exported to rust via artifacts/manifest.json."""
+    return {
+        "max_tasks": MAX_TASKS,
+        "max_variants": MAX_VARIANTS,
+        "f_max": F_MAX,
+        "n_batch": N_BATCH,
+        "batch_choices": list(BATCH_CHOICES),
+        "node_feats": NODE_FEATS,
+        "task_feats": TASK_FEATS,
+        "state_dim": STATE_DIM,
+        "head_dims": list(HEAD_DIMS),
+        "logits_dim": LOGITS_DIM,
+        "act_dim": ACT_DIM,
+        "hidden": HIDDEN,
+        "n_res": N_RES,
+        "pred_window": PRED_WINDOW,
+        "pred_horizon": PRED_HORIZON,
+        "lstm_hidden": LSTM_HIDDEN,
+        "train_batch": TRAIN_BATCH,
+        "policy_param_count": POLICY_PARAM_COUNT,
+        "predictor_param_count": PREDICTOR_PARAM_COUNT,
+        "adam": {
+            "lr": ADAM_LR,
+            "b1": ADAM_B1,
+            "b2": ADAM_B2,
+            "eps": ADAM_EPS,
+        },
+        "ppo": {
+            "clip_eps": CLIP_EPS,
+            "vf_coef": VF_COEF,
+            "ent_coef": ENT_COEF,
+            "max_grad_norm": MAX_GRAD_NORM,
+        },
+    }

@@ -1,0 +1,162 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes/values; assert_allclose against ref.py is the
+core correctness signal of the compile path.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.dense import dense
+from compile.kernels.lstm import lstm_cell
+from compile.kernels.resblock import resblock
+
+DIMS = st.integers(min_value=1, max_value=48)
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def rand(rng, *shape, scale=1.0):
+    return rng.normal(0.0, scale, shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(b=DIMS, i=DIMS, o=DIMS, relu=st.booleans(), seed=SEEDS)
+def test_dense_matches_ref(b, i, o, relu, seed):
+    rng = np.random.default_rng(seed)
+    x, w, bias = rand(rng, b, i), rand(rng, i, o), rand(rng, o)
+    got = dense(jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias), relu=relu)
+    want = ref.dense_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias), relu=relu)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_dense_relu_clamps_negatives():
+    x = jnp.asarray([[-1.0, 2.0]], jnp.float32)
+    w = jnp.eye(2, dtype=jnp.float32)
+    b = jnp.zeros(2, jnp.float32)
+    out = np.asarray(dense(x, w, b, relu=True))
+    assert out.min() >= 0.0
+    np.testing.assert_allclose(out, [[0.0, 2.0]])
+
+
+def test_dense_identity():
+    rng = np.random.default_rng(3)
+    x = rand(rng, 5, 7)
+    out = dense(jnp.asarray(x), jnp.eye(7, dtype=jnp.float32), jnp.zeros(7, jnp.float32))
+    np.testing.assert_allclose(np.asarray(out), x, rtol=1e-6)
+
+
+def test_dense_bias_broadcast():
+    x = jnp.zeros((3, 4), jnp.float32)
+    w = jnp.zeros((4, 2), jnp.float32)
+    b = jnp.asarray([1.5, -2.5], jnp.float32)
+    out = np.asarray(dense(x, w, b))
+    np.testing.assert_allclose(out, np.tile([1.5, -2.5], (3, 1)))
+
+
+# ---------------------------------------------------------------------------
+# resblock
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(b=DIMS, h=DIMS, seed=SEEDS)
+def test_resblock_matches_ref(b, h, seed):
+    rng = np.random.default_rng(seed)
+    x, w1, b1, w2, b2 = (
+        rand(rng, b, h), rand(rng, h, h), rand(rng, h), rand(rng, h, h), rand(rng, h),
+    )
+    args = [jnp.asarray(a) for a in (x, w1, b1, w2, b2)]
+    got = resblock(*args)
+    want = ref.resblock_ref(*args)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_resblock_zero_weights_is_identity():
+    rng = np.random.default_rng(0)
+    x = rand(rng, 4, 16)
+    z = jnp.zeros((16, 16), jnp.float32)
+    zb = jnp.zeros(16, jnp.float32)
+    out = resblock(jnp.asarray(x), z, zb, z, zb)
+    np.testing.assert_allclose(np.asarray(out), x, rtol=1e-6)
+
+
+def test_resblock_residual_path_preserved():
+    """Even with huge weights the output must contain the skip connection."""
+    rng = np.random.default_rng(1)
+    x = rand(rng, 2, 8)
+    w1, b1, w2, b2 = rand(rng, 8, 8), rand(rng, 8), rand(rng, 8, 8), rand(rng, 8)
+    got = np.asarray(resblock(*[jnp.asarray(a) for a in (x, w1, b1, w2, b2)]))
+    inner = np.maximum(x @ w1 + b1, 0.0) @ w2 + b2
+    np.testing.assert_allclose(got - inner, x, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# lstm cell
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(b=DIMS, i=st.integers(1, 8), h=st.integers(1, 32), seed=SEEDS)
+def test_lstm_cell_matches_ref(b, i, h, seed):
+    rng = np.random.default_rng(seed)
+    x, hh, cc = rand(rng, b, i), rand(rng, b, h), rand(rng, b, h)
+    wx, wh, bias = rand(rng, i, 4 * h), rand(rng, h, 4 * h), rand(rng, 4 * h)
+    args = [jnp.asarray(a) for a in (x, hh, cc, wx, wh, bias)]
+    gh, gc = lstm_cell(*args)
+    wh_, wc_ = ref.lstm_cell_ref(*args)
+    np.testing.assert_allclose(np.asarray(gh), np.asarray(wh_), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gc), np.asarray(wc_), rtol=1e-5, atol=1e-5)
+
+
+def test_lstm_cell_state_bounded():
+    """h' = o * tanh(c') must be in (-1, 1)."""
+    rng = np.random.default_rng(7)
+    b, i, h = 4, 1, 25
+    args = [
+        jnp.asarray(a)
+        for a in (
+            rand(rng, b, i, scale=5),
+            rand(rng, b, h, scale=5),
+            rand(rng, b, h, scale=5),
+            rand(rng, i, 4 * h, scale=5),
+            rand(rng, h, 4 * h, scale=5),
+            rand(rng, 4 * h, scale=5),
+        )
+    ]
+    gh, _ = lstm_cell(*args)
+    # o·tanh(c') is < 1 mathematically; f32 rounding can saturate to 1.0
+    assert np.abs(np.asarray(gh)).max() <= 1.0
+
+
+def test_lstm_cell_forget_gate_zero_input():
+    """With saturated-negative forget/input gates the cell state dies out."""
+    b, i, h = 1, 1, 4
+    x = jnp.zeros((b, i), jnp.float32)
+    hh = jnp.zeros((b, h), jnp.float32)
+    cc = jnp.ones((b, h), jnp.float32)
+    wx = jnp.zeros((i, 4 * h), jnp.float32)
+    wh = jnp.zeros((h, 4 * h), jnp.float32)
+    bias = np.zeros(4 * h, np.float32)
+    bias[h : 2 * h] = -30.0  # forget gate ≈ 0
+    bias[0:h] = -30.0        # input gate ≈ 0
+    _, gc = lstm_cell(x, hh, cc, wx, wh, jnp.asarray(bias))
+    assert np.abs(np.asarray(gc)).max() < 1e-6
+
+
+def test_lstm_gate_order_is_ifgo():
+    """Open only the forget gate → c' == c exactly (validates gate layout)."""
+    b, i, h = 1, 1, 3
+    x = jnp.zeros((b, i), jnp.float32)
+    hh = jnp.zeros((b, h), jnp.float32)
+    cc = jnp.asarray([[0.3, -0.7, 1.2]], jnp.float32)
+    wx = jnp.zeros((i, 4 * h), jnp.float32)
+    wh = jnp.zeros((h, 4 * h), jnp.float32)
+    bias = np.full(4 * h, -30.0, np.float32)
+    bias[h : 2 * h] = 30.0  # forget ≈ 1, others ≈ 0
+    _, gc = lstm_cell(x, hh, cc, wx, wh, jnp.asarray(bias))
+    np.testing.assert_allclose(np.asarray(gc), np.asarray(cc), atol=1e-5)

@@ -1,0 +1,89 @@
+"""Parameter layout: flatten/unflatten roundtrip and manifest consistency.
+
+The rust side (rust/src/nn/spec.rs) mirrors these constants; manifest.json is
+the cross-language contract, so these tests guard the contract itself.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import params as P
+
+
+def test_sizes_match_closed_form():
+    h, s, lo = P.HIDDEN, P.STATE_DIM, P.LOGITS_DIM
+    want = (
+        s * h + h
+        + P.N_RES * (2 * h * h + 2 * h)
+        + h * lo + lo
+        + h + 1
+    )
+    assert P.POLICY_PARAM_COUNT == want
+    hd = P.LSTM_HIDDEN
+    assert P.PREDICTOR_PARAM_COUNT == 4 * hd + hd * 4 * hd + 4 * hd + hd + 1
+
+
+def test_state_dim_composition():
+    assert P.STATE_DIM == P.NODE_FEATS + P.MAX_TASKS * P.TASK_FEATS
+    assert P.LOGITS_DIM == P.MAX_TASKS * sum(P.HEAD_DIMS)
+    assert P.ACT_DIM == P.MAX_TASKS * 3
+    assert len(P.BATCH_CHOICES) == P.N_BATCH
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_flatten_unflatten_roundtrip_policy(seed):
+    rng = np.random.default_rng(seed)
+    flat = jnp.asarray(rng.normal(0, 1, P.POLICY_PARAM_COUNT).astype(np.float32))
+    tree = P.unflatten(flat, P.policy_spec())
+    back = P.flatten(tree, P.policy_spec())
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(flat))
+
+
+def test_flatten_unflatten_roundtrip_predictor():
+    rng = np.random.default_rng(0)
+    flat = jnp.asarray(rng.normal(0, 1, P.PREDICTOR_PARAM_COUNT).astype(np.float32))
+    tree = P.unflatten(flat, P.predictor_spec())
+    back = P.flatten(tree, P.predictor_spec())
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(flat))
+
+
+def test_unflatten_shapes():
+    flat = jnp.zeros(P.POLICY_PARAM_COUNT)
+    tree = P.unflatten(flat, P.policy_spec())
+    assert tree["fc_in/w"].shape == (P.STATE_DIM, P.HIDDEN)
+    assert tree["head/w"].shape == (P.HIDDEN, P.LOGITS_DIM)
+    assert tree["value/b"].shape == (1,)
+
+
+def test_init_policy_deterministic_and_head_scale():
+    a = P.init_policy(42)
+    b = P.init_policy(42)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (P.POLICY_PARAM_COUNT,)
+    tree = P.unflatten(jnp.asarray(a), P.policy_spec())
+    # heads initialized near-zero for near-uniform initial policy
+    assert float(np.abs(np.asarray(tree["head/w"])).max()) < 0.1
+    assert float(np.abs(np.asarray(tree["fc_in/w"])).std()) > 0.05
+
+
+def test_init_predictor_forget_bias():
+    tree = P.unflatten(jnp.asarray(P.init_predictor(1)), P.predictor_spec())
+    b = np.asarray(tree["lstm/b"])
+    h = P.LSTM_HIDDEN
+    np.testing.assert_allclose(b[h : 2 * h], 1.0)
+    np.testing.assert_allclose(b[:h], 0.0)
+
+
+def test_manifest_contract_keys():
+    m = P.manifest_dict()
+    for key in (
+        "state_dim", "logits_dim", "act_dim", "max_tasks", "max_variants",
+        "f_max", "n_batch", "batch_choices", "hidden", "n_res", "pred_window",
+        "lstm_hidden", "train_batch", "policy_param_count",
+        "predictor_param_count", "adam", "ppo",
+    ):
+        assert key in m, key
+    assert m["state_dim"] == P.STATE_DIM
+    assert m["batch_choices"] == [1, 2, 4, 8, 16, 32]

@@ -1,0 +1,185 @@
+//! Ablations of the design choices DESIGN.md calls out:
+//!
+//!  A. expert guidance (Algorithm 2): expert_freq ∈ {0 (off), 2, 4, 8} —
+//!     how much does the IPA expert accelerate early convergence?
+//!  B. workload predictor: last-value vs moving-max vs LSTM driving the
+//!     agents — what does prediction quality buy in QoS?
+//!  C. IPA switching hysteresis: naive re-solve vs the enhanced solver —
+//!     what do variant-switch restarts cost?
+//!  D. variant adaptation: FA2-style replica-only autoscaler vs agents that
+//!     also pick variants/batches.
+//!
+//! Run: cargo bench --bench ablations     (A needs `make artifacts`)
+
+use std::rc::Rc;
+
+use opd::agents::{Agent, AutoscaleAgent, GreedyAgent, IpaAgent};
+use opd::cli::make_predictor;
+use opd::cluster::ClusterTopology;
+use opd::pipeline::{catalog, QosWeights};
+use opd::rl::{Trainer, TrainerConfig};
+use opd::runtime::OpdRuntime;
+use opd::sim::{run_cycle, Env};
+use opd::util::stats;
+use opd::workload::predictor::{
+    LastValuePredictor, LoadPredictor, LstmPredictor, MovingMaxPredictor,
+};
+use opd::workload::{Trace, WorkloadGen, WorkloadKind};
+
+const SEED: u64 = 42;
+
+fn env_with(trace: &Trace, predictor: Box<dyn LoadPredictor>) -> Env {
+    Env::from_trace(
+        catalog::video_analytics().spec,
+        ClusterTopology::paper_testbed(),
+        QosWeights::default(),
+        trace,
+        predictor,
+        10,
+        3.0,
+    )
+}
+
+fn ablation_expert(rt: &Rc<OpdRuntime>) {
+    println!("--- A. expert guidance (Algorithm 2), 30 episodes each ---");
+    println!("{:>11} {:>16} {:>16}", "expert_freq", "reward ep 1-10", "reward ep 21-30");
+    for freq in [0usize, 2, 4, 8] {
+        let tcfg = TrainerConfig {
+            episodes: 30,
+            expert_freq: freq,
+            seed: SEED,
+            ..Default::default()
+        };
+        let rt2 = rt.clone();
+        let mut trainer = Trainer::new(rt.clone(), tcfg, move |seed| {
+            Env::from_workload(
+                catalog::video_analytics().spec,
+                ClusterTopology::paper_testbed(),
+                QosWeights::default(),
+                WorkloadKind::Fluctuating,
+                seed,
+                make_predictor(&Some(rt2.clone())),
+                10,
+                400,
+                3.0,
+            )
+        });
+        trainer.train().expect("ablation training failed");
+        // compare learning progress on NON-expert episodes only
+        let own: Vec<(usize, f64)> = trainer
+            .history
+            .episodes
+            .iter()
+            .filter(|e| !e.expert)
+            .map(|e| (e.episode, e.mean_reward))
+            .collect();
+        let early: Vec<f64> =
+            own.iter().filter(|(i, _)| *i <= 10).map(|(_, r)| *r).collect();
+        let late: Vec<f64> =
+            own.iter().filter(|(i, _)| *i > 20).map(|(_, r)| *r).collect();
+        println!(
+            "{:>11} {:>16.3} {:>16.3}",
+            if freq == 0 { "off".to_string() } else { freq.to_string() },
+            stats::mean(&early),
+            stats::mean(&late)
+        );
+    }
+}
+
+fn ablation_predictor(rt: &Option<Rc<OpdRuntime>>) {
+    println!("\n--- B. predictor quality → agent QoS (greedy + IPA, fluctuating 600 s) ---");
+    let trace = Trace::new(
+        "fluct",
+        WorkloadGen::new(WorkloadKind::Fluctuating, SEED).trace(601),
+    );
+    println!("{:<12} {:>12} {:>12} {:>12} {:>12}", "predictor", "greedy QoS", "greedy cost", "IPA QoS", "IPA cost");
+    let mk: Vec<(&str, Box<dyn Fn() -> Box<dyn LoadPredictor>>)> = vec![
+        ("last-value", Box::new(|| Box::new(LastValuePredictor))),
+        ("moving-max", Box::new(|| Box::new(MovingMaxPredictor::default()))),
+    ];
+    let mut rows = mk;
+    if let Some(rt) = rt {
+        let rt = rt.clone();
+        rows.push((
+            "lstm",
+            Box::new(move || Box::new(LstmPredictor::hlo(rt.clone()))),
+        ));
+    }
+    for (name, mkp) in rows {
+        let mut env = env_with(&trace, mkp());
+        let mut greedy = GreedyAgent::new();
+        let g = run_cycle(&mut env, &mut greedy);
+        let mut env = env_with(&trace, mkp());
+        let mut ipa = IpaAgent::new();
+        let i = run_cycle(&mut env, &mut ipa);
+        println!(
+            "{:<12} {:>12.3} {:>12.2} {:>12.3} {:>12.2}",
+            name,
+            g.avg_qos(),
+            g.avg_cost(),
+            i.avg_qos(),
+            i.avg_cost()
+        );
+    }
+}
+
+fn ablation_hysteresis() {
+    println!("\n--- C. IPA switching hysteresis (fluctuating 600 s) ---");
+    let trace = Trace::new(
+        "fluct",
+        WorkloadGen::new(WorkloadKind::Fluctuating, SEED).trace(601),
+    );
+    println!("{:<22} {:>10} {:>10} {:>10}", "solver", "QoS", "cost", "restarts");
+    for (name, mut agent) in [
+        ("ipa (naive re-solve)", IpaAgent::naive()),
+        ("ipa (hysteresis 5%)", IpaAgent::new()),
+    ] {
+        let mut env = env_with(&trace, Box::new(MovingMaxPredictor::default()));
+        let r = run_cycle(&mut env, &mut agent);
+        println!(
+            "{:<22} {:>10.3} {:>10.2} {:>10}",
+            name,
+            r.avg_qos(),
+            r.avg_cost(),
+            r.restarts
+        );
+    }
+}
+
+fn ablation_variant_adaptation() {
+    println!("\n--- D. replica-only autoscaling (FA2-style) vs full adaptation ---");
+    let trace = Trace::new(
+        "fluct",
+        WorkloadGen::new(WorkloadKind::Fluctuating, SEED).trace(601),
+    );
+    println!("{:<12} {:>10} {:>10} {:>10}", "agent", "QoS", "cost", "restarts");
+    let agents: Vec<Box<dyn Agent>> = vec![
+        Box::new(AutoscaleAgent::new()),
+        Box::new(GreedyAgent::new()),
+        Box::new(IpaAgent::new()),
+    ];
+    for mut agent in agents {
+        let mut env = env_with(&trace, Box::new(MovingMaxPredictor::default()));
+        let r = run_cycle(&mut env, agent.as_mut());
+        println!(
+            "{:<12} {:>10.3} {:>10.2} {:>10}",
+            r.agent,
+            r.avg_qos(),
+            r.avg_cost(),
+            r.restarts
+        );
+    }
+    println!("(autoscale never changes variants/batches — the dimension OPD/IPA exploit)");
+}
+
+fn main() {
+    println!("=== Ablations (DESIGN.md §5 design choices) ===\n");
+    let rt = OpdRuntime::load(None).map(Rc::new).ok();
+    match &rt {
+        Some(rt) => ablation_expert(rt),
+        None => println!("--- A. expert guidance: SKIPPED (needs `make artifacts`) ---"),
+    }
+    ablation_predictor(&rt);
+    ablation_hysteresis();
+    ablation_variant_adaptation();
+}

@@ -1,0 +1,93 @@
+#![allow(dead_code)]
+//! Shared helpers for the per-figure bench harnesses.
+
+use std::rc::Rc;
+
+use opd::cli::{make_agent, make_predictor};
+use opd::cluster::ClusterTopology;
+use opd::config::AgentKind;
+use opd::pipeline::{catalog, QosWeights};
+use opd::rl::{Trainer, TrainerConfig};
+use opd::runtime::OpdRuntime;
+use opd::sim::{run_cycle, CycleResult, Env};
+use opd::workload::{Trace, WorkloadGen, WorkloadKind};
+
+pub const BENCH_SEED: u64 = 42;
+
+/// Checkpoint used by the Fig. 4/5 benches: an existing
+/// `opd_checkpoint.bin`, else train one quickly (fixed seed) and cache it
+/// under target/ so subsequent benches reuse it.
+pub fn ensure_checkpoint(rt: &Rc<OpdRuntime>) -> String {
+    for cand in ["opd_checkpoint.bin", "target/opd_bench_checkpoint.bin"] {
+        if std::path::Path::new(cand).exists() {
+            eprintln!("[bench] using checkpoint {cand}");
+            return cand.to_string();
+        }
+    }
+    eprintln!("[bench] no checkpoint found — training OPD (40 episodes, fixed seed)...");
+    let tcfg = TrainerConfig { episodes: 120, expert_freq: 4, seed: BENCH_SEED, ..Default::default() };
+    let rt2 = rt.clone();
+    let mut trainer = Trainer::new(rt.clone(), tcfg, move |seed| {
+        // train across all three load regimes (matches examples/train_opd.rs)
+        let kind = match seed % 3 {
+            0 => WorkloadKind::SteadyLow,
+            1 => WorkloadKind::Fluctuating,
+            _ => WorkloadKind::SteadyHigh,
+        };
+        Env::from_workload(
+            catalog::video_analytics().spec,
+            ClusterTopology::paper_testbed(),
+            QosWeights::default(),
+            kind,
+            seed,
+            make_predictor(&Some(rt2.clone())),
+            10,
+            400,
+            3.0,
+        )
+    });
+    trainer.train().expect("bench training failed");
+    let path = "target/opd_bench_checkpoint.bin".to_string();
+    let _ = std::fs::create_dir_all("target");
+    trainer.save_checkpoint(&path).unwrap();
+    eprintln!("[bench] cached {path}");
+    path
+}
+
+/// Run all four agents on the same recorded trace (the Fig. 4/5 protocol).
+pub fn compare_on_workload(
+    rt: &Option<Rc<OpdRuntime>>,
+    kind: WorkloadKind,
+    cycle_secs: usize,
+    params_path: Option<&str>,
+) -> Vec<CycleResult> {
+    let trace = Trace::new(
+        kind.name(),
+        WorkloadGen::new(kind, BENCH_SEED).trace(cycle_secs + 1),
+    );
+    AgentKind::all()
+        .iter()
+        .map(|&agent_kind| {
+            let mut env = Env::from_trace(
+                catalog::video_analytics().spec,
+                ClusterTopology::paper_testbed(),
+                QosWeights::default(),
+                &trace,
+                make_predictor(rt),
+                10,
+                3.0,
+            );
+            let params = if agent_kind == AgentKind::Opd { params_path } else { None };
+            let mut agent = make_agent(agent_kind, BENCH_SEED, rt, params, true).unwrap();
+            run_cycle(&mut env, agent.as_mut())
+        })
+        .collect()
+}
+
+/// Downsample a series by block means (for compact temporal tables).
+pub fn downsample(series: &[f64], block: usize) -> Vec<f64> {
+    series
+        .chunks(block)
+        .map(|c| c.iter().sum::<f64>() / c.len() as f64)
+        .collect()
+}

@@ -1,0 +1,141 @@
+//! Fig. 3 — "Lstm Prediction": the LSTM workload predictor tracks the
+//! fluctuating load with SMAPE ≈ 6 % and predicts "in under 50 ms".
+//!
+//! Regenerates: predicted-vs-actual series on a held-out fluctuating trace,
+//! SMAPE/MAE table (LSTM vs naive baselines), and the per-prediction latency
+//! (HLO path and native mirror).
+//!
+//! Run: cargo bench --bench fig3_predictor
+
+use std::rc::Rc;
+
+use opd::nn::spec::{PRED_HORIZON, PRED_WINDOW};
+use opd::runtime::OpdRuntime;
+use opd::util::stats;
+use opd::util::timer::Bench;
+use opd::workload::predictor::{
+    LastValuePredictor, LoadPredictor, LstmPredictor, MovingMaxPredictor,
+};
+use opd::workload::{WorkloadGen, WorkloadKind};
+
+/// Held-out trace with the paper's Fig. 3 load profile: smooth periodic
+/// (diurnal sinusoid + secondary wave) with rare mild bursts — the same
+/// family `python/compile/aot.py::synth_trace` trains on (fresh seed).
+fn fig3_trace(seed: u64, n: usize) -> Vec<f64> {
+    use opd::util::prng::Pcg32;
+    let mut rng = Pcg32::new(seed);
+    let mut out = Vec::with_capacity(n);
+    let mut burst: Option<(u64, f64)> = None;
+    for t in 0..n {
+        let tf = t as f64;
+        let base = 70.0
+            + 50.0 * (2.0 * std::f64::consts::PI * tf / 600.0).sin()
+            + 10.0 * (2.0 * std::f64::consts::PI * tf / 97.0).sin();
+        let b = match burst.take() {
+            Some((k, mag)) if k > 1 => {
+                burst = Some((k - 1, mag));
+                mag
+            }
+            Some((_, mag)) => mag,
+            None => {
+                if rng.uniform() < 0.002 {
+                    let dur = rng.int_range(10, 40) as u64;
+                    let mag = rng.uniform_range(10.0, 30.0);
+                    burst = Some((dur, mag));
+                    mag
+                } else {
+                    0.0
+                }
+            }
+        };
+        out.push((base + b + rng.normal_scaled(0.0, 2.0)).clamp(1.0, 250.0));
+    }
+    out
+}
+
+fn main() {
+    println!("=== Fig. 3: LSTM workload prediction ===\n");
+    let rt = OpdRuntime::load(None).map(Rc::new).ok();
+    // held-out trace with the paper's Fig. 3 smooth-periodic profile
+    let trace = fig3_trace(31_337, 2400);
+    // heavier control trace (the Fig. 4 fluctuating generator) for a
+    // robustness row — bursts are inherently unpredictable, so SMAPE rises
+    let bursty = WorkloadGen::new(WorkloadKind::Fluctuating, 31_337).trace(2400);
+
+    let mut predictors: Vec<Box<dyn LoadPredictor>> = vec![
+        Box::new(LastValuePredictor),
+        Box::new(MovingMaxPredictor::default()),
+    ];
+    match &rt {
+        Some(rt) => {
+            predictors.push(Box::new(LstmPredictor::hlo(rt.clone())));
+            println!("predictor weights: artifacts (offline SMAPE {:.2}%)\n",
+                rt.manifest.predictor_smape * 100.0);
+        }
+        None => println!("(no artifacts — LSTM rows skipped; run `make artifacts`)\n"),
+    }
+
+    // sliding evaluation on both traces
+    let eval = |p: &mut Box<dyn LoadPredictor>, tr: &[f64]| {
+        let mut preds = Vec::new();
+        let mut actuals = Vec::new();
+        let mut i = PRED_WINDOW;
+        while i + PRED_HORIZON < tr.len() {
+            preds.push(p.predict_max(&tr[i - PRED_WINDOW..i]));
+            actuals.push(tr[i..i + PRED_HORIZON].iter().copied().fold(f64::MIN, f64::max));
+            i += 5;
+        }
+        (stats::smape(&preds, &actuals), stats::mae(&preds, &actuals), preds, actuals)
+    };
+    let mut rows = Vec::new();
+    println!(
+        "{:<12} {:>14} {:>14} {:>16}",
+        "predictor", "SMAPE (Fig.3)", "MAE (req/s)", "SMAPE (bursty)"
+    );
+    for p in predictors.iter_mut() {
+        let (smape, mae, preds, actuals) = eval(p, &trace);
+        let (smape_b, _, _, _) = eval(p, &bursty);
+        println!(
+            "{:<12} {:>13.2}% {:>14.2} {:>15.2}%",
+            p.name(),
+            smape * 100.0,
+            mae,
+            smape_b * 100.0
+        );
+        rows.push((p.name(), smape, mae, preds, actuals));
+    }
+
+    // series excerpt (the plot of Fig. 3), downsampled
+    if let Some((name, _, _, preds, actuals)) = rows.last() {
+        println!("\npredicted vs actual ({name}), every 100 s:");
+        println!("{:>6} {:>10} {:>10}", "t(s)", "actual", "predicted");
+        for (k, (p, a)) in preds.iter().zip(actuals).enumerate() {
+            if k % 20 == 0 {
+                println!("{:>6} {a:>10.1} {p:>10.1}", PRED_WINDOW + k * 5);
+            }
+        }
+    }
+
+    // latency (paper: "trained to predict workloads in under 50 ms")
+    println!("\nper-prediction latency:");
+    let bench = Bench::default();
+    let window: Vec<f64> = trace[..PRED_WINDOW].to_vec();
+    if let Some(rt) = &rt {
+        let mut lstm = LstmPredictor::hlo(rt.clone());
+        let r = bench.run("lstm (AOT HLO via PJRT)", || {
+            std::hint::black_box(lstm.predict_max(&window));
+        });
+        println!("  {}", r.row());
+        let mut lstm_native = LstmPredictor::native(rt.predictor_weights.clone());
+        let r = bench.run("lstm (native rust mirror)", || {
+            std::hint::black_box(lstm_native.predict_max(&window));
+        });
+        println!("  {}", r.row());
+    }
+    let mut mm = MovingMaxPredictor::default();
+    let r = bench.run("moving-max baseline", || {
+        std::hint::black_box(mm.predict_max(&window));
+    });
+    println!("  {}", r.row());
+    println!("\npaper band: SMAPE ≈ 6 %, prediction < 50 ms");
+}

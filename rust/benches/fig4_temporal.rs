@@ -1,0 +1,67 @@
+//! Fig. 4 — "Temporal analysis under different workloads": per-second cost
+//! and QoS of Random / Greedy / IPA / OPD over a 1200 s cycle with a 10 s
+//! adaptation interval, for (a) steady low, (b) fluctuating, (c) steady high
+//! load, all on identical replayed traces with fixed seeds (§VI-B).
+//!
+//! Run: cargo bench --bench fig4_temporal
+//! (OPD is trained on first run if no checkpoint exists; ~1 min.)
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::rc::Rc;
+
+use opd::runtime::OpdRuntime;
+use opd::workload::WorkloadKind;
+
+fn main() {
+    println!("=== Fig. 4: temporal cost & QoS under different workloads ===");
+    let rt = OpdRuntime::load(None).map(Rc::new).ok();
+    let params = rt.as_ref().map(common::ensure_checkpoint);
+    if rt.is_none() {
+        println!("(no artifacts — OPD uses the native mirror with init params)");
+    }
+
+    const CYCLE: usize = 1200;
+    const BLOCK: usize = 60; // 60 s means for a compact table
+
+    for (fig, kind) in [
+        ("4(a) steady low", WorkloadKind::SteadyLow),
+        ("4(b) fluctuating", WorkloadKind::Fluctuating),
+        ("4(c) steady high", WorkloadKind::SteadyHigh),
+    ] {
+        println!("\n--- Fig. {fig} ({}, {CYCLE} s cycle, seed {}) ---", kind.name(), common::BENCH_SEED);
+        let results = common::compare_on_workload(&rt, kind, CYCLE, params.as_deref());
+
+        // temporal table: 60-second block means
+        print!("{:>6}", "t(s)");
+        for r in &results {
+            print!(" | {:>7}-qos {:>7}-cost", r.agent, r.agent);
+        }
+        println!();
+        let qos: Vec<Vec<f64>> =
+            results.iter().map(|r| common::downsample(&r.qos_series, BLOCK)).collect();
+        let cost: Vec<Vec<f64>> =
+            results.iter().map(|r| common::downsample(&r.cost_series, BLOCK)).collect();
+        for b in 0..CYCLE / BLOCK {
+            print!("{:>6}", (b + 1) * BLOCK);
+            for a in 0..results.len() {
+                print!(" | {:>11.2} {:>12.2}", qos[a][b], cost[a][b]);
+            }
+            println!();
+        }
+        println!("\nsummary:");
+        for r in &results {
+            println!(
+                "  {:<8} qos mean {:7.3} (σ {:5.3})   cost mean {:7.2} (σ {:5.2})",
+                r.agent,
+                r.avg_qos(),
+                opd::util::stats::std_dev(&r.qos_series),
+                r.avg_cost(),
+                opd::util::stats::std_dev(&r.cost_series),
+            );
+        }
+    }
+    println!("\npaper shape: random unstable; greedy cheapest/lowest QoS; IPA highest \
+              QoS & cost; OPD between; all converge under steady high load.");
+}

@@ -1,0 +1,85 @@
+//! Fig. 5 — "Performance analysis under different workloads": cycle-average
+//! cost and QoS per algorithm, plus the paper's headline ratios:
+//!
+//!   steady low : OPD cost +120 % vs greedy, QoS +36 %; vs IPA cost −16 %,
+//!                QoS −3.8 %
+//!   fluctuating: OPD cost +37 % vs greedy, QoS +21 %; vs IPA cost −6 %,
+//!                QoS −3 %
+//!   steady high: greedy/IPA/OPD ≈ identical cost and QoS
+//!
+//! We reproduce the *shape* (ordering + who wins where), not the absolute
+//! percentages — the substrate is a simulator (DESIGN.md §2).
+//!
+//! Run: cargo bench --bench fig5_averages
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::rc::Rc;
+
+use opd::runtime::OpdRuntime;
+use opd::sim::CycleResult;
+use opd::workload::WorkloadKind;
+
+fn pct(new: f64, base: f64) -> f64 {
+    (new - base) / base.abs().max(1e-9) * 100.0
+}
+
+fn find<'a>(rs: &'a [CycleResult], name: &str) -> &'a CycleResult {
+    rs.iter().find(|r| r.agent == name).unwrap()
+}
+
+fn main() {
+    println!("=== Fig. 5: cycle-average cost & QoS per algorithm ===");
+    let rt = OpdRuntime::load(None).map(Rc::new).ok();
+    let params = rt.as_ref().map(common::ensure_checkpoint);
+
+    const CYCLE: usize = 1200;
+    for (fig, kind) in [
+        ("5(a) steady low", WorkloadKind::SteadyLow),
+        ("5(b) fluctuating", WorkloadKind::Fluctuating),
+        ("5(c) steady high", WorkloadKind::SteadyHigh),
+    ] {
+        let results = common::compare_on_workload(&rt, kind, CYCLE, params.as_deref());
+        println!("\n--- Fig. {fig} ---");
+        println!("{:<8} {:>10} {:>10}", "agent", "avg cost", "avg QoS");
+        for r in &results {
+            println!("{:<8} {:>10.2} {:>10.3}", r.agent, r.avg_cost(), r.avg_qos());
+        }
+        let opd = find(&results, "opd");
+        let greedy = find(&results, "greedy");
+        let ipa = find(&results, "ipa");
+        println!(
+            "OPD vs greedy : cost {:+6.1}%  qos {:+6.1}%   (paper {}: cost {}, qos {})",
+            pct(opd.avg_cost(), greedy.avg_cost()),
+            pct(opd.avg_qos(), greedy.avg_qos()),
+            kind.name(),
+            match kind {
+                WorkloadKind::SteadyLow => "+120%",
+                WorkloadKind::Fluctuating => "+37%",
+                WorkloadKind::SteadyHigh => "~0%",
+            },
+            match kind {
+                WorkloadKind::SteadyLow => "+36%",
+                WorkloadKind::Fluctuating => "+21%",
+                WorkloadKind::SteadyHigh => "~0%",
+            },
+        );
+        println!(
+            "OPD vs IPA    : cost {:+6.1}%  qos {:+6.1}%   (paper {}: cost {}, qos {})",
+            pct(opd.avg_cost(), ipa.avg_cost()),
+            pct(opd.avg_qos(), ipa.avg_qos()),
+            kind.name(),
+            match kind {
+                WorkloadKind::SteadyLow => "-16%",
+                WorkloadKind::Fluctuating => "-6%",
+                WorkloadKind::SteadyHigh => "~0%",
+            },
+            match kind {
+                WorkloadKind::SteadyLow => "-3.8%",
+                WorkloadKind::Fluctuating => "-3%",
+                WorkloadKind::SteadyHigh => "~0%",
+            },
+        );
+    }
+}

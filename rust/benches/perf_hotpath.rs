@@ -1,0 +1,131 @@
+//! §Perf — decision-path microbenchmarks (the L3 optimization target of
+//! DESIGN.md §7): state assembly, policy forward (AOT HLO vs native mirror),
+//! masked sampling, the full decide() path, predictor, IPA solver per
+//! preset, and raw simulator throughput.
+//!
+//! Run: cargo bench --bench perf_hotpath
+
+use std::rc::Rc;
+
+use opd::agents::{Agent, IpaAgent, OpdAgent};
+use opd::cluster::ClusterTopology;
+use opd::nn::policy::policy_fwd_native;
+use opd::pipeline::catalog::{self, Preset};
+use opd::pipeline::QosWeights;
+use opd::runtime::OpdRuntime;
+use opd::sim::{build_masks, build_state, Env};
+use opd::util::timer::Bench;
+use opd::workload::predictor::{LoadPredictor, LstmPredictor, MovingMaxPredictor};
+use opd::workload::WorkloadKind;
+
+fn mk_env() -> Env {
+    Env::from_workload(
+        catalog::video_analytics().spec,
+        ClusterTopology::paper_testbed(),
+        QosWeights::default(),
+        WorkloadKind::Fluctuating,
+        42,
+        Box::new(MovingMaxPredictor::default()),
+        10,
+        100_000,
+        3.0,
+    )
+}
+
+fn main() {
+    println!("=== §Perf: decision-path microbenchmarks ===\n");
+    let rt = OpdRuntime::load(None).map(Rc::new).ok();
+    let bench = Bench::default();
+
+    // ---- state assembly -------------------------------------------------
+    let mut env = mk_env();
+    let r = bench.run("build_state (Eq. 5, 86 feats)", || {
+        let obs = env.observe();
+        std::hint::black_box(build_state(&obs));
+    });
+    println!("{}", r.row());
+    let spec = catalog::video_analytics().spec;
+    let r = bench.run("build_masks", || {
+        std::hint::black_box(build_masks(&spec));
+    });
+    println!("{}", r.row());
+
+    // ---- policy forward: HLO vs native -----------------------------------
+    let state = {
+        let obs = env.observe();
+        build_state(&obs)
+    };
+    let params: Vec<f32> = match &rt {
+        Some(rt) => rt.policy_init.clone(),
+        None => vec![0.01; opd::nn::spec::POLICY_PARAM_COUNT],
+    };
+    if let Some(rt) = &rt {
+        let r = bench.run("policy_fwd HLO (params staged per call)", || {
+            std::hint::black_box(rt.policy_forward(&params, &state).unwrap());
+        });
+        println!("{}", r.row());
+        let pinned = rt.pin_params(&params).unwrap();
+        let r = bench.run("policy_fwd HLO (params pinned, §Perf)", || {
+            std::hint::black_box(rt.policy_forward_pinned(&pinned, &state).unwrap());
+        });
+        println!("{}", r.row());
+    }
+    let r = bench.run("policy_fwd native mirror", || {
+        std::hint::black_box(policy_fwd_native(&params, &state));
+    });
+    println!("{}", r.row());
+
+    // ---- full decide() path ----------------------------------------------
+    let mut opd_agent = match &rt {
+        Some(rt) => OpdAgent::from_runtime(rt.clone(), 1),
+        None => OpdAgent::native(params.clone(), 1),
+    };
+    let r = bench.run("OPD decide() end-to-end", || {
+        let obs = env.observe();
+        std::hint::black_box(opd_agent.decide(&obs));
+    });
+    println!("{}", r.row());
+
+    // ---- predictor --------------------------------------------------------
+    let window: Vec<f64> = (0..120).map(|i| 60.0 + (i as f64).sin() * 30.0).collect();
+    if let Some(rt) = &rt {
+        let mut p = LstmPredictor::hlo(rt.clone());
+        let r = bench.run("predictor AOT HLO (120-step LSTM)", || {
+            std::hint::black_box(p.predict_max(&window));
+        });
+        println!("{}", r.row());
+        let mut p = LstmPredictor::native(rt.predictor_weights.clone());
+        let r = bench.run("predictor native mirror", || {
+            std::hint::black_box(p.predict_max(&window));
+        });
+        println!("{}", r.row());
+    }
+
+    // ---- IPA solver per preset (the Fig. 6 cost driver) --------------------
+    println!();
+    for preset in Preset::all() {
+        let spec = catalog::preset(preset).spec;
+        let agent = IpaAgent::new();
+        let (s, v) = preset.dims();
+        let r = bench.run(
+            &format!("IPA solve {} ({s}×{v})", preset.name()),
+            || {
+                std::hint::black_box(agent.solve(&spec, 80.0, 30.0));
+            },
+        );
+        println!("{}", r.row());
+    }
+
+    // ---- simulator throughput ----------------------------------------------
+    println!();
+    let mut env = mk_env();
+    let action = env.spec.default_config();
+    let r = bench.run("env.step (10 sim-seconds)", || {
+        std::hint::black_box(env.step(&action));
+    });
+    println!("{}", r.row());
+    println!(
+        "  → simulator speed ≈ {:.0} sim-seconds / wall-second",
+        10.0 / (r.mean_ns / 1e9)
+    );
+}

@@ -1,0 +1,171 @@
+//! FA2-style reactive autoscaler baseline (Razavi et al., RTAS'22 — the
+//! paper's related work on "fast, accurate autoscaling"). It never switches
+//! model variants (the dimension the paper argues matters); it only scales
+//! replicas per stage from utilization thresholds, the classic
+//! HPA-with-better-targets recipe:
+//!
+//!   ρ > upper  → add replicas to bring ρ to target
+//!   ρ < lower  → remove replicas (never below 1)
+//!
+//! Used by the ablation bench to quantify what variant/batch adaptation
+//! adds on top of pure replica autoscaling.
+
+use crate::agents::Agent;
+use crate::pipeline::{TaskConfig, F_MAX};
+use crate::sim::env::Observation;
+
+pub struct AutoscaleAgent {
+    /// utilization target the controller steers toward
+    pub target_util: f64,
+    pub upper: f64,
+    pub lower: f64,
+    /// fixed variant index per stage (clamped to the stage's catalog)
+    pub variant: usize,
+    /// fixed batch index
+    pub batch_idx: usize,
+}
+
+impl Default for AutoscaleAgent {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AutoscaleAgent {
+    pub fn new() -> Self {
+        // middle-of-catalog variant, batch 4: a sane static choice
+        Self { target_util: 0.6, upper: 0.8, lower: 0.3, variant: 1, batch_idx: 2 }
+    }
+}
+
+impl Agent for AutoscaleAgent {
+    fn name(&self) -> &'static str {
+        "autoscale"
+    }
+
+    fn decide(&mut self, obs: &Observation<'_>) -> Vec<TaskConfig> {
+        let demand = obs.load_now.max(obs.load_pred).max(1.0);
+        obs.spec
+            .tasks
+            .iter()
+            .enumerate()
+            .map(|(t, task)| {
+                let variant = self.variant.min(task.n_variants() - 1);
+                let current = obs
+                    .current
+                    .get(t)
+                    .map(|c| TaskConfig { variant, batch_idx: self.batch_idx, ..*c })
+                    .unwrap_or(TaskConfig {
+                        variant,
+                        replicas: 1,
+                        batch_idx: self.batch_idx,
+                    });
+                let prof = &task.variants[variant];
+                let per_replica = prof.replica_throughput(current.batch());
+                let capacity = current.replicas as f64 * per_replica;
+                let util = demand / capacity.max(1e-9);
+                let replicas = if util > self.upper || util < self.lower {
+                    // steer to target utilization
+                    ((demand / self.target_util) / per_replica).ceil() as usize
+                } else {
+                    current.replicas
+                };
+                TaskConfig {
+                    variant,
+                    replicas: replicas.clamp(1, F_MAX),
+                    batch_idx: self.batch_idx,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterTopology;
+    use crate::pipeline::{catalog, QosWeights};
+    use crate::sim::env::Env;
+    use crate::workload::predictor::MovingMaxPredictor;
+    use crate::workload::WorkloadKind;
+
+    fn env(kind: WorkloadKind) -> Env {
+        Env::from_workload(
+            catalog::video_analytics().spec,
+            ClusterTopology::paper_testbed(),
+            QosWeights::default(),
+            kind,
+            11,
+            Box::new(MovingMaxPredictor::default()),
+            10,
+            200,
+            3.0,
+        )
+    }
+
+    #[test]
+    fn valid_configs_and_fixed_variant() {
+        let mut e = env(WorkloadKind::Fluctuating);
+        let mut a = AutoscaleAgent::new();
+        for _ in 0..10 {
+            let action = {
+                let obs = e.observe();
+                let act = a.decide(&obs);
+                obs.spec.validate_config(&act).unwrap();
+                // variant never exceeds the stage's catalog and never changes
+                for (t, c) in act.iter().enumerate() {
+                    assert_eq!(c.variant, 1usize.min(obs.spec.tasks[t].n_variants() - 1));
+                }
+                act
+            };
+            e.step(&action);
+        }
+    }
+
+    #[test]
+    fn scales_with_load() {
+        let mut lo = env(WorkloadKind::SteadyLow);
+        let mut hi = env(WorkloadKind::SteadyHigh);
+        let mut a = AutoscaleAgent::new();
+        for _ in 0..5 {
+            let act = {
+                let obs = lo.observe();
+                a.decide(&obs)
+            };
+            lo.step(&act);
+            let act = {
+                let obs = hi.observe();
+                a.decide(&obs)
+            };
+            hi.step(&act);
+        }
+        let obs_lo = lo.observe();
+        let r_lo: usize = a.decide(&obs_lo).iter().map(|c| c.replicas).sum();
+        let obs_hi = hi.observe();
+        let r_hi: usize = a.decide(&obs_hi).iter().map(|c| c.replicas).sum();
+        assert!(r_hi > r_lo, "autoscaler must add replicas under load: {r_lo} vs {r_hi}");
+    }
+
+    #[test]
+    fn hysteresis_band_keeps_config() {
+        // within [lower, upper] utilization the replica count is unchanged
+        let mut e = env(WorkloadKind::SteadyLow);
+        let mut a = AutoscaleAgent::new();
+        let mut last: Option<Vec<TaskConfig>> = None;
+        let mut stable = 0;
+        for _ in 0..8 {
+            let act = {
+                let obs = e.observe();
+                a.decide(&obs)
+            };
+            if let Some(prev) = &last {
+                if *prev == act {
+                    stable += 1;
+                }
+            }
+            last = Some(act.clone());
+            e.step(&act);
+        }
+        assert!(stable >= 4, "steady load should mostly keep the config ({stable})");
+    }
+}

@@ -1,0 +1,152 @@
+//! Greedy baseline (§VI-A): "chooses the configuration for each pipeline
+//! task to minimize costs while adhering to available resource constraints."
+//!
+//! Concretely: always the cheapest variant, then per stage the fewest
+//! replicas (the cost driver, Eq. 2) that still cover the predicted demand —
+//! choosing the batch size that minimizes the replica count first and the
+//! batch itself second. Cheap, but its QoS suffers: lowest accuracy variants
+//! and zero headroom (exactly the Fig. 4/5 behaviour).
+
+use crate::agents::Agent;
+use crate::pipeline::{TaskConfig, BATCH_CHOICES, F_MAX};
+use crate::sim::env::Observation;
+
+#[derive(Default)]
+pub struct GreedyAgent;
+
+impl GreedyAgent {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl Agent for GreedyAgent {
+    fn name(&self) -> &'static str {
+        "greedy"
+    }
+
+    fn decide(&mut self, obs: &Observation<'_>) -> Vec<TaskConfig> {
+        // provision for the worse of current and predicted load
+        let demand = obs.load_now.max(obs.load_pred).max(1.0);
+        obs.spec
+            .tasks
+            .iter()
+            .map(|task| {
+                let prof = &task.variants[0]; // cheapest variant
+                let mut best: Option<(usize, usize)> = None; // (f, b_idx)
+                for (b_idx, _) in BATCH_CHOICES.iter().enumerate() {
+                    let thr = prof.replica_throughput(BATCH_CHOICES[b_idx]);
+                    let f_needed = (demand / thr).ceil() as usize;
+                    if f_needed == 0 || f_needed > F_MAX {
+                        continue;
+                    }
+                    let better = match best {
+                        None => true,
+                        Some((bf, bb)) => {
+                            f_needed < bf || (f_needed == bf && b_idx < bb)
+                        }
+                    };
+                    if better {
+                        best = Some((f_needed, b_idx));
+                    }
+                }
+                match best {
+                    Some((f, b_idx)) => TaskConfig { variant: 0, replicas: f, batch_idx: b_idx },
+                    // demand unreachable even at F_MAX: max out throughput
+                    None => TaskConfig {
+                        variant: 0,
+                        replicas: F_MAX,
+                        batch_idx: BATCH_CHOICES.len() - 1,
+                    },
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterTopology;
+    use crate::pipeline::{catalog, pipeline_metrics, QosWeights};
+    use crate::sim::env::Env;
+    use crate::workload::predictor::MovingMaxPredictor;
+    use crate::workload::WorkloadKind;
+
+    fn env(kind: WorkloadKind) -> Env {
+        Env::from_workload(
+            catalog::video_analytics().spec,
+            ClusterTopology::paper_testbed(),
+            QosWeights::default(),
+            kind,
+            1,
+            Box::new(MovingMaxPredictor::default()),
+            10,
+            120,
+            3.0,
+        )
+    }
+
+    #[test]
+    fn always_cheapest_variant() {
+        let mut e = env(WorkloadKind::SteadyLow);
+        let mut a = GreedyAgent::new();
+        let obs = e.observe();
+        let cfgs = a.decide(&obs);
+        assert!(cfgs.iter().all(|c| c.variant == 0));
+        obs.spec.validate_config(&cfgs).unwrap();
+    }
+
+    #[test]
+    fn capacity_covers_demand_when_feasible() {
+        let mut e = env(WorkloadKind::SteadyLow);
+        let mut a = GreedyAgent::new();
+        let obs = e.observe();
+        let demand = obs.load_now.max(obs.load_pred);
+        let cfgs = a.decide(&obs);
+        let ready: Vec<usize> = cfgs.iter().map(|c| c.replicas).collect();
+        let m = pipeline_metrics(obs.spec, &cfgs, &ready, demand);
+        for s in &m.stages {
+            assert!(
+                s.capacity + 1e-9 >= demand.min(s.arrival.max(demand)),
+                "stage capacity {} below demand {demand}",
+                s.capacity
+            );
+        }
+    }
+
+    #[test]
+    fn scales_up_under_high_load() {
+        let mut lo = env(WorkloadKind::SteadyLow);
+        let mut hi = env(WorkloadKind::SteadyHigh);
+        let mut a = GreedyAgent::new();
+        // warm both histories a bit
+        for _ in 0..3 {
+            let act_lo = {
+                let obs = lo.observe();
+                a.decide(&obs)
+            };
+            lo.step(&act_lo);
+            let act_hi = {
+                let obs = hi.observe();
+                a.decide(&obs)
+            };
+            hi.step(&act_hi);
+        }
+        let obs_lo = lo.observe();
+        let cfg_lo = a.decide(&obs_lo);
+        let cost_lo = obs_lo.spec.total_cores(&cfg_lo);
+        let obs_hi = hi.observe();
+        let cfg_hi = a.decide(&obs_hi);
+        let cost_hi = obs_hi.spec.total_cores(&cfg_hi);
+        assert!(cost_hi > cost_lo, "high load must cost more: {cost_hi} vs {cost_lo}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut e = env(WorkloadKind::Fluctuating);
+        let mut a = GreedyAgent::new();
+        let obs = e.observe();
+        assert_eq!(a.decide(&obs), a.decide(&obs));
+    }
+}

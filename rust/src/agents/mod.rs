@@ -1,0 +1,36 @@
+//! Decision agents: the paper's OPD (RL policy) and the three baselines of
+//! §VI-A (Random, Greedy, IPA).
+
+pub mod autoscale;
+pub mod greedy;
+pub mod ipa;
+pub mod opd;
+pub mod random;
+
+pub use autoscale::AutoscaleAgent;
+pub use greedy::GreedyAgent;
+pub use ipa::IpaAgent;
+pub use opd::OpdAgent;
+pub use random::RandomAgent;
+
+use crate::config::AgentKind;
+use crate::pipeline::TaskConfig;
+use crate::sim::env::Observation;
+
+/// A configuration-selection agent. `decide` returns the Eq. 6 action: one
+/// (variant, replicas, batch) triple per pipeline task.
+pub trait Agent {
+    fn name(&self) -> &'static str;
+    fn decide(&mut self, obs: &Observation<'_>) -> Vec<TaskConfig>;
+}
+
+/// Construct a baseline agent by kind (OPD needs runtime wiring; see
+/// `OpdAgent::new` / the CLI).
+pub fn baseline(kind: AgentKind, seed: u64) -> Option<Box<dyn Agent>> {
+    match kind {
+        AgentKind::Random => Some(Box::new(RandomAgent::new(seed))),
+        AgentKind::Greedy => Some(Box::new(GreedyAgent::new())),
+        AgentKind::Ipa => Some(Box::new(IpaAgent::new())),
+        AgentKind::Opd => None,
+    }
+}

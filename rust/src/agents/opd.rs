@@ -1,0 +1,276 @@
+//! The OPD agent (paper §IV): residual-network feature extraction + factored
+//! categorical policy heads, executed through the AOT-compiled HLO program
+//! (Pallas kernels inside) on the PJRT runtime. Sampling / masking / logp
+//! bookkeeping happens rust-side so rollouts are reproducible and the
+//! trainer can consume the trajectory.
+
+use std::rc::Rc;
+
+use crate::agents::Agent;
+use crate::nn::math::{argmax_masked, sample_masked};
+use crate::nn::policy::policy_fwd_native;
+use crate::nn::spec::*;
+use crate::pipeline::TaskConfig;
+use crate::runtime::OpdRuntime;
+use crate::sim::env::{build_masks, build_state, decode_action, Observation};
+use crate::util::prng::Pcg32;
+
+/// Trajectory record of the last decision (consumed by rl::trainer).
+#[derive(Clone, Debug, Default)]
+pub struct DecisionRecord {
+    pub state: Vec<f32>,
+    pub action_idx: Vec<usize>, // ACT_DIM entries
+    pub logp: f32,
+    pub value: f32,
+    pub head_mask: Vec<bool>,
+    pub task_mask: Vec<bool>,
+}
+
+/// How the policy network is evaluated.
+enum Backend {
+    /// AOT HLO program via PJRT (the production path). The parameter vector
+    /// is pinned as a device buffer once per `set_params` — only the
+    /// 86-float state crosses the host↔device boundary per decision (§Perf).
+    Hlo(Rc<OpdRuntime>, std::cell::OnceCell<Option<xla::PjRtBuffer>>),
+    /// pure-rust mirror (tests / no-artifacts fallback)
+    Native,
+}
+
+pub struct OpdAgent {
+    backend: Backend,
+    pub params: Vec<f32>,
+    rng: Pcg32,
+    /// argmax instead of sampling (evaluation mode)
+    pub greedy: bool,
+    pub last: DecisionRecord,
+}
+
+impl OpdAgent {
+    /// Production agent: HLO policy with the artifact's initial parameters
+    /// (or trained parameters loaded separately via `set_params`).
+    pub fn from_runtime(rt: Rc<OpdRuntime>, seed: u64) -> Self {
+        let params = rt.policy_init.clone();
+        Self {
+            backend: Backend::Hlo(rt, std::cell::OnceCell::new()),
+            params,
+            rng: Pcg32::stream(seed, 0x4f5044), // "OPD"
+            greedy: false,
+            last: DecisionRecord::default(),
+        }
+    }
+
+    /// Native fallback (no PJRT): same layout, pure-rust forward.
+    pub fn native(params: Vec<f32>, seed: u64) -> Self {
+        assert_eq!(params.len(), POLICY_PARAM_COUNT);
+        Self {
+            backend: Backend::Native,
+            params,
+            rng: Pcg32::stream(seed, 0x4f5044),
+            greedy: false,
+            last: DecisionRecord::default(),
+        }
+    }
+
+    pub fn set_params(&mut self, params: Vec<f32>) {
+        assert_eq!(params.len(), POLICY_PARAM_COUNT);
+        self.params = params;
+        // invalidate the pinned device buffer
+        if let Backend::Hlo(_, pinned) = &mut self.backend {
+            *pinned = std::cell::OnceCell::new();
+        }
+    }
+
+    /// Evaluate the policy network (HLO or native).
+    pub fn forward(&self, state: &[f32]) -> (Vec<f32>, f32) {
+        match &self.backend {
+            Backend::Hlo(rt, pinned) => {
+                let buf = pinned.get_or_init(|| rt.pin_params(&self.params).ok());
+                match buf {
+                    Some(b) => rt
+                        .policy_forward_pinned(b, state)
+                        .unwrap_or_else(|_| policy_fwd_native(&self.params, state)),
+                    None => policy_fwd_native(&self.params, state),
+                }
+            }
+            Backend::Native => policy_fwd_native(&self.params, state),
+        }
+    }
+
+    /// Select per-task head indices from logits under masks.
+    /// Returns (ACT_DIM indices, total logp).
+    pub fn select(
+        &mut self,
+        logits: &[f32],
+        head_mask: &[bool],
+        task_mask: &[bool],
+    ) -> (Vec<usize>, f32) {
+        let mut idx = vec![0usize; ACT_DIM];
+        let mut logp = 0.0f32;
+        for t in 0..MAX_TASKS {
+            if !task_mask[t] {
+                continue;
+            }
+            let base = t * HEAD_DIM;
+            let mut off = 0usize;
+            for (k, d) in HEAD_DIMS.iter().enumerate() {
+                let lg = &logits[base + off..base + off + d];
+                let mk = &head_mask[base + off..base + off + d];
+                let (i, lp) = if self.greedy {
+                    argmax_masked(lg, mk)
+                } else {
+                    sample_masked(lg, mk, &mut self.rng)
+                };
+                idx[t * 3 + k] = i;
+                logp += lp;
+                off += d;
+            }
+        }
+        (idx, logp)
+    }
+}
+
+impl Agent for OpdAgent {
+    fn name(&self) -> &'static str {
+        "opd"
+    }
+
+    fn decide(&mut self, obs: &Observation<'_>) -> Vec<TaskConfig> {
+        let state = build_state(obs);
+        let masks = build_masks(obs.spec);
+        let (logits, value) = self.forward(&state);
+        let (idx, logp) = self.select(&logits, &masks.head, &masks.task);
+        self.last = DecisionRecord {
+            state,
+            action_idx: idx.clone(),
+            logp,
+            value,
+            head_mask: masks.head,
+            task_mask: masks.task,
+        };
+        decode_action(obs.spec, &idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterTopology;
+    use crate::pipeline::{catalog, QosWeights};
+    use crate::sim::env::Env;
+    use crate::workload::predictor::MovingMaxPredictor;
+    use crate::workload::WorkloadKind;
+
+    fn test_params(seed: u64) -> Vec<f32> {
+        // small random params (native path, no artifacts needed)
+        let mut rng = Pcg32::new(seed);
+        (0..POLICY_PARAM_COUNT)
+            .map(|_| (rng.normal() * 0.02) as f32)
+            .collect()
+    }
+
+    fn env() -> Env {
+        Env::from_workload(
+            catalog::video_analytics().spec,
+            ClusterTopology::paper_testbed(),
+            QosWeights::default(),
+            WorkloadKind::Fluctuating,
+            3,
+            Box::new(MovingMaxPredictor::default()),
+            10,
+            120,
+            3.0,
+        )
+    }
+
+    #[test]
+    fn decisions_are_valid_configs() {
+        let mut e = env();
+        let mut a = OpdAgent::native(test_params(1), 9);
+        for _ in 0..10 {
+            let action = {
+                let obs = e.observe();
+                let act = a.decide(&obs);
+                obs.spec.validate_config(&act).unwrap();
+                act
+            };
+            e.step(&action);
+        }
+    }
+
+    #[test]
+    fn record_is_populated() {
+        let mut e = env();
+        let mut a = OpdAgent::native(test_params(1), 9);
+        let obs = e.observe();
+        let _ = a.decide(&obs);
+        assert_eq!(a.last.state.len(), STATE_DIM);
+        assert_eq!(a.last.action_idx.len(), ACT_DIM);
+        assert!(a.last.logp < 0.0, "log-prob of a stochastic pick is negative");
+        assert!(a.last.value.is_finite());
+    }
+
+    #[test]
+    fn respects_variant_masks() {
+        // task 0 of video-analytics has only 2 variants; the sampled variant
+        // index must never be ≥ 2
+        let mut e = env();
+        let mut a = OpdAgent::native(test_params(2), 11);
+        for _ in 0..30 {
+            let obs = e.observe();
+            let act = a.decide(&obs);
+            assert!(act[0].variant < 2);
+            assert!(act[3].variant < 3); // track has 3 variants
+        }
+    }
+
+    #[test]
+    fn greedy_mode_is_deterministic() {
+        let mut e = env();
+        let mut a = OpdAgent::native(test_params(3), 1);
+        a.greedy = true;
+        let obs = e.observe();
+        let x = a.decide(&obs);
+        let y = a.decide(&obs);
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn sampling_mode_explores() {
+        let mut e = env();
+        let mut a = OpdAgent::native(test_params(4), 2);
+        let obs = e.observe();
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..40 {
+            seen.insert(format!("{:?}", a.decide(&obs)));
+        }
+        assert!(seen.len() > 5, "near-uniform init policy should explore");
+    }
+
+    #[test]
+    fn logp_matches_manual_recompute() {
+        use crate::nn::math::log_softmax_masked;
+        let mut e = env();
+        let mut a = OpdAgent::native(test_params(5), 3);
+        let obs = e.observe();
+        let _ = a.decide(&obs);
+        let rec = a.last.clone();
+        let (logits, _) = a.forward(&rec.state);
+        let mut want = 0.0f32;
+        for t in 0..MAX_TASKS {
+            if !rec.task_mask[t] {
+                continue;
+            }
+            let base = t * HEAD_DIM;
+            let mut off = 0;
+            for (k, d) in HEAD_DIMS.iter().enumerate() {
+                let lp = log_softmax_masked(
+                    &logits[base + off..base + off + d],
+                    &rec.head_mask[base + off..base + off + d],
+                );
+                want += lp[rec.action_idx[t * 3 + k]];
+                off += d;
+            }
+        }
+        assert!((want - rec.logp).abs() < 1e-4, "{want} vs {}", rec.logp);
+    }
+}

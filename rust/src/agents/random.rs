@@ -1,0 +1,91 @@
+//! Random baseline (§VI-A): uniformly random valid configuration per task —
+//! maximum exploration, no intelligence. The paper uses it to show the cost
+//! of ignoring state entirely (wild cost/QoS fluctuations in Fig. 4).
+
+use crate::agents::Agent;
+use crate::pipeline::{TaskConfig, F_MAX};
+use crate::sim::env::Observation;
+use crate::util::prng::Pcg32;
+
+pub struct RandomAgent {
+    rng: Pcg32,
+}
+
+impl RandomAgent {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Pcg32::stream(seed, 0x52414e44) } // "RAND"
+    }
+}
+
+impl Agent for RandomAgent {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn decide(&mut self, obs: &Observation<'_>) -> Vec<TaskConfig> {
+        obs.spec
+            .tasks
+            .iter()
+            .map(|t| TaskConfig {
+                variant: self.rng.below(t.n_variants() as u32) as usize,
+                replicas: 1 + self.rng.below(F_MAX as u32) as usize,
+                batch_idx: self.rng.below(crate::pipeline::BATCH_CHOICES.len() as u32)
+                    as usize,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterTopology;
+    use crate::pipeline::{catalog, QosWeights};
+    use crate::sim::env::Env;
+    use crate::workload::predictor::MovingMaxPredictor;
+    use crate::workload::WorkloadKind;
+
+    #[test]
+    fn produces_valid_configs() {
+        let mut env = Env::from_workload(
+            catalog::video_analytics().spec,
+            ClusterTopology::paper_testbed(),
+            QosWeights::default(),
+            WorkloadKind::SteadyLow,
+            1,
+            Box::new(MovingMaxPredictor::default()),
+            10,
+            60,
+            3.0,
+        );
+        let mut agent = RandomAgent::new(7);
+        for _ in 0..20 {
+            let obs = env.observe();
+            let action = agent.decide(&obs);
+            obs.spec.validate_config(&action).unwrap();
+        }
+    }
+
+    #[test]
+    fn explores_the_space() {
+        let mut env = Env::from_workload(
+            catalog::video_analytics().spec,
+            ClusterTopology::paper_testbed(),
+            QosWeights::default(),
+            WorkloadKind::SteadyLow,
+            1,
+            Box::new(MovingMaxPredictor::default()),
+            10,
+            60,
+            3.0,
+        );
+        let mut agent = RandomAgent::new(7);
+        let obs = env.observe();
+        let mut distinct = std::collections::HashSet::new();
+        for _ in 0..50 {
+            let a = agent.decide(&obs);
+            distinct.insert(format!("{a:?}"));
+        }
+        assert!(distinct.len() > 30, "random agent should vary: {}", distinct.len());
+    }
+}

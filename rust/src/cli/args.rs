@@ -1,0 +1,146 @@
+//! Hand-rolled CLI flag parsing (clap is unavailable offline).
+//!
+//! Grammar: `opd <command> [--flag value]... [--switch]...`. Values never
+//! start with `--`; unknown flags are collected so commands can reject them
+//! with a helpful message.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    /// flags the command actually consumed (for unknown-flag detection)
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                let next_is_value =
+                    argv.get(i + 1).map(|n| !n.starts_with("--")).unwrap_or(false);
+                if next_is_value {
+                    a.flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    a.switches.push(name.to_string());
+                    i += 1;
+                }
+            } else if a.command.is_none() {
+                a.command = Some(tok.clone());
+                i += 1;
+            } else {
+                return Err(format!("unexpected positional argument '{tok}'"));
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&argv)
+    }
+
+    fn mark(&self, name: &str) {
+        self.consumed.borrow_mut().push(name.to_string());
+    }
+
+    pub fn str_flag(&self, name: &str) -> Option<String> {
+        self.mark(name);
+        self.flags.get(name).cloned()
+    }
+
+    pub fn u64_flag(&self, name: &str, default: u64) -> Result<u64, String> {
+        self.mark(name);
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn usize_flag(&self, name: &str, default: usize) -> Result<usize, String> {
+        Ok(self.u64_flag(name, default as u64)? as usize)
+    }
+
+    pub fn f64_flag(&self, name: &str, default: f64) -> Result<f64, String> {
+        self.mark(name);
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.mark(name);
+        self.switches.iter().any(|s| s == name)
+    }
+
+    /// Flags present on the command line that no accessor asked about.
+    pub fn unknown(&self) -> Vec<String> {
+        let seen = self.consumed.borrow();
+        self.flags
+            .keys()
+            .chain(self.switches.iter())
+            .filter(|k| !seen.contains(k))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_command_flags_switches() {
+        let a = Args::parse(&argv("simulate --seed 7 --verbose --pipeline P2")).unwrap();
+        assert_eq!(a.command.as_deref(), Some("simulate"));
+        assert_eq!(a.u64_flag("seed", 0).unwrap(), 7);
+        assert_eq!(a.str_flag("pipeline").as_deref(), Some("P2"));
+        assert!(a.switch("verbose"));
+        assert!(!a.switch("quiet"));
+    }
+
+    #[test]
+    fn defaults_when_absent() {
+        let a = Args::parse(&argv("train")).unwrap();
+        assert_eq!(a.u64_flag("episodes", 60).unwrap(), 60);
+        assert_eq!(a.f64_flag("gamma", 0.99).unwrap(), 0.99);
+        assert_eq!(a.str_flag("out"), None);
+    }
+
+    #[test]
+    fn bad_number_is_an_error() {
+        let a = Args::parse(&argv("x --seed abc")).unwrap();
+        assert!(a.u64_flag("seed", 0).is_err());
+    }
+
+    #[test]
+    fn rejects_double_positional() {
+        assert!(Args::parse(&argv("a b")).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_are_reported() {
+        let a = Args::parse(&argv("sim --seed 1 --bogus 2")).unwrap();
+        let _ = a.u64_flag("seed", 0);
+        let unknown = a.unknown();
+        assert_eq!(unknown, vec!["bogus".to_string()]);
+    }
+
+    #[test]
+    fn negative_numbers_are_values() {
+        // "--x -3" : "-3" doesn't start with "--", so it's a value
+        let a = Args::parse(&argv("c --x -3")).unwrap();
+        assert_eq!(a.f64_flag("x", 0.0).unwrap(), -3.0);
+    }
+}

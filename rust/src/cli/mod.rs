@@ -1,0 +1,509 @@
+//! Command-line interface of the `opd` coordinator binary.
+//!
+//! Commands:
+//!   simulate  one agent × one workload cycle → summary (+ optional JSON)
+//!   compare   all four agents on the same replayed trace (Fig. 4/5 view)
+//!   train     Algorithm-2 PPO training → checkpoint + history (Fig. 7 data)
+//!   predict   predictor evaluation (Fig. 3 view: LSTM vs naive baselines)
+//!   serve     end-to-end leader: sim loop + Prometheus/JSON HTTP endpoints
+//!   info      artifact manifest + runtime platform report
+
+pub mod args;
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use crate::agents::{baseline, Agent, OpdAgent};
+use crate::config::{AgentKind, ExperimentConfig};
+use crate::pipeline::catalog;
+use crate::runtime::{read_params, OpdRuntime};
+use crate::sim::{run_cycle, CycleResult, Env};
+use crate::util::json::Json;
+use crate::util::stats;
+use crate::workload::predictor::{
+    LastValuePredictor, LoadPredictor, LstmPredictor, MovingMaxPredictor,
+};
+use crate::workload::{Trace, WorkloadGen, WorkloadKind};
+use args::Args;
+
+pub const USAGE: &str = "\
+opd — Adaptive Configuration Selection for Multi-Model Inference Pipelines
+
+USAGE: opd <command> [flags]
+
+COMMANDS
+  simulate   --pipeline P --workload W --agent A [--seed N] [--cycle S]
+             [--interval S] [--params ckpt.bin] [--native] [--out out.json]
+  compare    --pipeline P --workload W [--seed N] [--cycle S] [--params ckpt.bin]
+  train      [--episodes N] [--expert-freq F] [--cycle S] [--pipeline P]
+             [--workload W] [--out ckpt.bin] [--history hist.json]
+  predict    [--workload W] [--secs N] [--seed N] [--native]
+  serve      --addr HOST:PORT [--pipeline P] [--workload W] [--agent A]
+             [--cycle S] [--realtime]
+  info       [--artifacts DIR]
+
+COMMON FLAGS
+  --artifacts DIR   artifacts directory (default: $OPD_ARTIFACTS or ./artifacts)
+  --native          use the pure-rust policy/predictor mirrors (no PJRT)
+
+Pipelines: P1 P2 P3 P4 video-analytics iot-anomaly
+Workloads: steady-low fluctuating steady-high
+Agents:    random greedy ipa opd
+";
+
+/// Build the experiment config shared by most commands.
+fn config_from(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = ExperimentConfig::default();
+    if let Some(path) = args.str_flag("config") {
+        cfg = ExperimentConfig::load(&path).map_err(|e| anyhow!(e))?;
+    }
+    if let Some(p) = args.str_flag("pipeline") {
+        cfg.pipeline = p;
+    }
+    if let Some(w) = args.str_flag("workload") {
+        cfg.workload = WorkloadKind::from_name(&w).ok_or_else(|| anyhow!("unknown workload {w}"))?;
+    }
+    if let Some(a) = args.str_flag("agent") {
+        cfg.agent = AgentKind::from_name(&a).ok_or_else(|| anyhow!("unknown agent {a}"))?;
+    }
+    cfg.seed = args.u64_flag("seed", cfg.seed).map_err(|e| anyhow!(e))?;
+    cfg.cycle_secs = args.usize_flag("cycle", cfg.cycle_secs).map_err(|e| anyhow!(e))?;
+    cfg.adapt_interval_secs =
+        args.usize_flag("interval", cfg.adapt_interval_secs).map_err(|e| anyhow!(e))?;
+    cfg.artifacts_dir = args.str_flag("artifacts").or(cfg.artifacts_dir);
+    cfg.validate().map_err(|e| anyhow!(e))?;
+    Ok(cfg)
+}
+
+/// Try to load the PJRT runtime; `--native` forces the fallback.
+fn load_runtime(cfg: &ExperimentConfig, native: bool) -> Option<Rc<OpdRuntime>> {
+    if native {
+        return None;
+    }
+    match OpdRuntime::load(cfg.artifacts_dir.as_deref()) {
+        Ok(rt) => Some(Rc::new(rt)),
+        Err(e) => {
+            crate::log_warn!("PJRT runtime unavailable ({e:#}); using native fallback");
+            None
+        }
+    }
+}
+
+/// Predictor choice: LSTM when we have weights, else moving-max baseline.
+pub fn make_predictor(rt: &Option<Rc<OpdRuntime>>) -> Box<dyn LoadPredictor> {
+    match rt {
+        Some(rt) => Box::new(LstmPredictor::hlo(rt.clone())),
+        None => Box::new(MovingMaxPredictor::default()),
+    }
+}
+
+/// Build an agent; OPD wires the runtime + optional checkpoint.
+pub fn make_agent(
+    kind: AgentKind,
+    seed: u64,
+    rt: &Option<Rc<OpdRuntime>>,
+    params_path: Option<&str>,
+    greedy: bool,
+) -> Result<Box<dyn Agent>> {
+    if let Some(b) = baseline(kind, seed) {
+        return Ok(b);
+    }
+    let mut agent = match rt {
+        Some(rt) => OpdAgent::from_runtime(rt.clone(), seed),
+        None => {
+            // native fallback: prefer artifact init params if present
+            let dir = crate::runtime::resolve_dir(None);
+            let params = read_params(
+                &dir.join("policy_init.bin"),
+                crate::nn::spec::POLICY_PARAM_COUNT,
+            )
+            .unwrap_or_else(|_| {
+                // deterministic small random init
+                let mut rng = crate::util::prng::Pcg32::new(seed);
+                (0..crate::nn::spec::POLICY_PARAM_COUNT)
+                    .map(|_| (rng.normal() * 0.02) as f32)
+                    .collect()
+            });
+            OpdAgent::native(params, seed)
+        }
+    };
+    if let Some(path) = params_path {
+        let params =
+            read_params(std::path::Path::new(path), crate::nn::spec::POLICY_PARAM_COUNT)?;
+        agent.set_params(params);
+    }
+    agent.greedy = greedy;
+    Ok(Box::new(agent))
+}
+
+/// Build the environment for a config (fresh generator seeded by cfg.seed).
+pub fn make_env(cfg: &ExperimentConfig, rt: &Option<Rc<OpdRuntime>>) -> Result<Env> {
+    Ok(Env::from_workload(
+        cfg.pipeline_spec().map_err(|e| anyhow!(e))?,
+        cfg.topology(),
+        cfg.weights,
+        cfg.workload,
+        cfg.seed,
+        make_predictor(rt),
+        cfg.adapt_interval_secs,
+        cfg.cycle_secs,
+        cfg.startup_secs,
+    ))
+}
+
+fn summary_json(r: &CycleResult) -> Json {
+    Json::obj()
+        .set("agent", r.agent.as_str())
+        .set("avg_qos", r.avg_qos())
+        .set("avg_cost", r.avg_cost())
+        .set("avg_reward", r.avg_reward())
+        .set("total_decision_time_s", r.total_decision_time())
+        .set("mean_decision_time_ms", r.mean_decision_time() * 1e3)
+        .set("decisions", r.decision_times.len())
+        .set("clamped", r.clamped)
+        .set("restarts", r.restarts)
+}
+
+fn print_summary(r: &CycleResult) {
+    println!(
+        "{:<8}  qos {:8.3}  cost {:7.2}  reward {:8.3}  decisions {:4}  \
+         decision-time total {:8.2} ms (mean {:7.3} ms)  clamped {}  restarts {}",
+        r.agent,
+        r.avg_qos(),
+        r.avg_cost(),
+        r.avg_reward(),
+        r.decision_times.len(),
+        r.total_decision_time() * 1e3,
+        r.mean_decision_time() * 1e3,
+        r.clamped,
+        r.restarts
+    );
+}
+
+fn check_unknown(args: &Args) -> Result<()> {
+    let unknown = args.unknown();
+    if unknown.is_empty() {
+        Ok(())
+    } else {
+        Err(anyhow!("unknown flags: --{}", unknown.join(" --")))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// commands
+// ---------------------------------------------------------------------------
+
+pub fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let native = args.switch("native");
+    let params_path = args.str_flag("params");
+    let out_path = args.str_flag("out");
+    let greedy = args.switch("greedy-eval");
+    check_unknown(args)?;
+    let rt = load_runtime(&cfg, native);
+    let mut env = make_env(&cfg, &rt)?;
+    let mut agent = make_agent(cfg.agent, cfg.seed, &rt, params_path.as_deref(), greedy)?;
+    let res = run_cycle(&mut env, agent.as_mut());
+    print_summary(&res);
+    if let Some(path) = out_path {
+        let j = summary_json(&res)
+            .set("qos_series", Json::Arr(res.qos_series.iter().map(|x| Json::Num(*x)).collect()))
+            .set("cost_series", Json::Arr(res.cost_series.iter().map(|x| Json::Num(*x)).collect()))
+            .set("load_series", Json::Arr(res.load_series.iter().map(|x| Json::Num(*x)).collect()));
+        std::fs::write(&path, j.to_pretty())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// All four agents on the *same* trace (the Fig. 4/5 protocol).
+pub fn cmd_compare(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let native = args.switch("native");
+    let params_path = args.str_flag("params");
+    let out_path = args.str_flag("out");
+    check_unknown(args)?;
+    let rt = load_runtime(&cfg, native);
+    // record one trace so every agent sees identical arrivals
+    let trace = Trace::new(
+        cfg.workload.name(),
+        WorkloadGen::new(cfg.workload, cfg.seed).trace(cfg.cycle_secs + 1),
+    );
+    println!(
+        "pipeline={} workload={} seed={} cycle={}s interval={}s",
+        cfg.pipeline, cfg.workload.name(), cfg.seed, cfg.cycle_secs, cfg.adapt_interval_secs
+    );
+    let mut results = Vec::new();
+    for kind in AgentKind::all() {
+        let mut env = Env::from_trace(
+            cfg.pipeline_spec().map_err(|e| anyhow!(e))?,
+            cfg.topology(),
+            cfg.weights,
+            &trace,
+            make_predictor(&rt),
+            cfg.adapt_interval_secs,
+            cfg.startup_secs,
+        );
+        let mut agent = make_agent(kind, cfg.seed, &rt, params_path.as_deref(), true)?;
+        let res = run_cycle(&mut env, agent.as_mut());
+        print_summary(&res);
+        results.push(summary_json(&res));
+    }
+    if let Some(path) = out_path {
+        std::fs::write(&path, Json::Arr(results).to_pretty())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+pub fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = config_from(args)?;
+    // shorter default episodes for training
+    if args.str_flag("cycle").is_none() && cfg.cycle_secs == 1200 {
+        cfg.cycle_secs = 400;
+    }
+    let episodes = args.usize_flag("episodes", 60).map_err(|e| anyhow!(e))?;
+    let expert_freq = args.usize_flag("expert-freq", 4).map_err(|e| anyhow!(e))?;
+    let out = args.str_flag("out").unwrap_or_else(|| "opd_checkpoint.bin".into());
+    let history_path = args.str_flag("history");
+    check_unknown(args)?;
+    let rt = load_runtime(&cfg, false)
+        .ok_or_else(|| anyhow!("training requires the PJRT runtime (run `make artifacts`)"))?;
+    let tcfg = crate::rl::TrainerConfig {
+        episodes,
+        expert_freq,
+        seed: cfg.seed,
+        ..Default::default()
+    };
+    let cfg2 = cfg.clone();
+    let rt2 = rt.clone();
+    let mut trainer = crate::rl::Trainer::new(rt, tcfg, move |seed| {
+        let mut c = cfg2.clone();
+        c.seed = seed;
+        make_env(&c, &Some(rt2.clone())).expect("env")
+    });
+    trainer.train()?;
+    trainer.save_checkpoint(&out)?;
+    println!("checkpoint written to {out}");
+    if let Some(h) = history_path {
+        trainer.history.save(&h)?;
+        println!("training history written to {h}");
+    }
+    let last10: Vec<f64> = trainer
+        .history
+        .episodes
+        .iter()
+        .rev()
+        .take(10)
+        .map(|e| e.mean_reward)
+        .collect();
+    println!("final mean reward (last 10 episodes): {:.3}", stats::mean(&last10));
+    Ok(())
+}
+
+pub fn cmd_predict(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let secs = args.usize_flag("secs", 2000).map_err(|e| anyhow!(e))?;
+    let native = args.switch("native");
+    check_unknown(args)?;
+    let rt = load_runtime(&cfg, native);
+    let trace = WorkloadGen::new(cfg.workload, cfg.seed).trace(secs);
+    let window = crate::nn::spec::PRED_WINDOW;
+    let horizon = crate::nn::spec::PRED_HORIZON;
+
+    let mut predictors: Vec<Box<dyn LoadPredictor>> = vec![
+        Box::new(LastValuePredictor),
+        Box::new(MovingMaxPredictor::default()),
+    ];
+    match &rt {
+        Some(rt) => predictors.push(Box::new(LstmPredictor::hlo(rt.clone()))),
+        None => {
+            let dir = crate::runtime::resolve_dir(cfg.artifacts_dir.as_deref());
+            if let Ok(w) = read_params(
+                &dir.join("predictor_weights.bin"),
+                crate::nn::spec::PREDICTOR_PARAM_COUNT,
+            ) {
+                predictors.push(Box::new(LstmPredictor::native(w)));
+            }
+        }
+    }
+    println!("workload={} secs={secs} window={window}s horizon={horizon}s", cfg.workload.name());
+    for p in predictors.iter_mut() {
+        let mut preds = Vec::new();
+        let mut actuals = Vec::new();
+        let mut i = window;
+        while i + horizon < trace.len() {
+            preds.push(p.predict_max(&trace[i - window..i]));
+            actuals
+                .push(trace[i..i + horizon].iter().copied().fold(f64::MIN, f64::max));
+            i += 5;
+        }
+        let smape = stats::smape(&preds, &actuals);
+        let mae = stats::mae(&preds, &actuals);
+        println!(
+            "{:<12} SMAPE {:6.2}%   MAE {:7.2} req/s   ({} windows)",
+            p.name(),
+            smape * 100.0,
+            mae,
+            preds.len()
+        );
+    }
+    Ok(())
+}
+
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let addr = args.str_flag("addr").unwrap_or_else(|| "127.0.0.1:9100".into());
+    let realtime = args.switch("realtime");
+    let native = args.switch("native");
+    let params_path = args.str_flag("params");
+    check_unknown(args)?;
+    let rt = load_runtime(&cfg, native);
+    let cp = std::sync::Arc::new(crate::serve::ControlPlane::new());
+    let server = cp.serve(&addr)?;
+    println!("leader serving on http://{} (/metrics /state /series /healthz)", server.addr);
+
+    let mut env = make_env(&cfg, &rt)?;
+    let mut agent = make_agent(cfg.agent, cfg.seed, &rt, params_path.as_deref(), true)?;
+    cp.metrics.describe("opd_qos", "pipeline QoS (Eq. 3)");
+    cp.metrics.describe("opd_cost_cores", "pipeline cost in CPU cores (Eq. 2)");
+    cp.metrics.describe("opd_decisions_total", "configuration decisions applied");
+
+    while !env.done() {
+        let t0 = std::time::Instant::now();
+        let action = {
+            let obs = env.observe();
+            cp.series.record("load", obs.load_now);
+            cp.series.record("load_pred", obs.load_pred);
+            agent.decide(&obs)
+        };
+        let decision_s = t0.elapsed().as_secs_f64();
+        let step = env.step(&action);
+        for (q, c) in step.qos_series.iter().zip(&step.cost_series) {
+            cp.series.record("qos", *q);
+            cp.series.record("cost", *c);
+        }
+        cp.metrics.set_gauge("opd_qos", &[("agent", agent.name())], step.qos);
+        cp.metrics.set_gauge("opd_cost_cores", &[("agent", agent.name())], step.cost);
+        cp.metrics.inc("opd_decisions_total", &[], 1.0);
+        cp.metrics.observe("opd_decision_seconds", &[], decision_s);
+        cp.publish_state(
+            Json::obj()
+                .set("t", env.elapsed())
+                .set("agent", agent.name())
+                .set("qos", step.qos)
+                .set("cost", step.cost)
+                .set("clamped", step.clamped)
+                .set(
+                    "config",
+                    Json::Arr(
+                        step.applied
+                            .iter()
+                            .map(|c| {
+                                Json::obj()
+                                    .set("variant", c.variant)
+                                    .set("replicas", c.replicas)
+                                    .set("batch", c.batch())
+                            })
+                            .collect(),
+                    ),
+                ),
+        );
+        if realtime {
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                (cfg.adapt_interval_secs as f64 - decision_s).max(0.0),
+            ));
+        }
+    }
+    println!("cycle complete ({}s simulated); shutting down", cfg.cycle_secs);
+    server.shutdown();
+    Ok(())
+}
+
+pub fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    check_unknown(args)?;
+    println!("opd {}", crate::version());
+    match OpdRuntime::load(cfg.artifacts_dir.as_deref()) {
+        Ok(rt) => {
+            println!("PJRT platform : {}", rt.engine.platform());
+            println!("artifacts dir : {}", rt.dir.display());
+            println!("policy params : {}", rt.policy_init.len());
+            println!("pred params   : {}", rt.predictor_weights.len());
+            println!("pred SMAPE    : {:.2}%", rt.manifest.predictor_smape * 100.0);
+            for (name, bytes) in &rt.manifest.artifact_bytes {
+                println!("  {name:<26} {bytes:>10} bytes");
+            }
+        }
+        Err(e) => println!("runtime unavailable: {e:#}"),
+    }
+    println!("pipelines     : {}", catalog::available().join(", "));
+    Ok(())
+}
+
+/// Entry point used by main.rs; returns the process exit code.
+pub fn run() -> i32 {
+    crate::util::logging::init();
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            return 2;
+        }
+    };
+    let result = match args.command.as_deref() {
+        Some("simulate") => cmd_simulate(&args),
+        Some("compare") => cmd_compare(&args),
+        Some("train") => cmd_train(&args),
+        Some("predict") => cmd_predict(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("info") => cmd_info(&args),
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => Err(anyhow!("unknown command '{other}'\n\n{USAGE}")),
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Args {
+        Args::parse(&s.split_whitespace().map(String::from).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn config_from_flags() {
+        let args = argv("simulate --pipeline P2 --workload steady-high --agent greedy --seed 9 --cycle 300");
+        let cfg = config_from(&args).unwrap();
+        assert_eq!(cfg.pipeline, "P2");
+        assert_eq!(cfg.workload, WorkloadKind::SteadyHigh);
+        assert_eq!(cfg.agent, AgentKind::Greedy);
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.cycle_secs, 300);
+    }
+
+    #[test]
+    fn config_rejects_bad_values() {
+        assert!(config_from(&argv("x --workload nope")).is_err());
+        assert!(config_from(&argv("x --pipeline nope")).is_err());
+        assert!(config_from(&argv("x --cycle 0")).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let args = argv("simulate --bogus 1 --agent greedy");
+        let _ = config_from(&args).unwrap();
+        assert!(check_unknown(&args).is_err());
+    }
+}

@@ -1,0 +1,314 @@
+//! The "Kubernetes API" substrate: applying a pipeline configuration to the
+//! cluster (the paper applies SeldonDeployment changes via the Kubernetes
+//! Python API; the agents here call `ClusterApi::apply`).
+//!
+//! Behavioural fidelity that matters to the algorithms:
+//!  * **Resource constraint** (Eq. 4): a configuration whose total cores
+//!    exceed capacity is *clamped* — replicas are shed round-robin from the
+//!    most expensive stages until it fits (the paper's "restrictions ... to
+//!    prevent ... system overload").
+//!  * **Container startup delay**: scaled-up or restarted replicas become
+//!    ready only after `startup_secs` — switching a variant restarts the
+//!    whole stage (image pull + model load), so config thrashing has a real
+//!    QoS price. Scale-down takes effect immediately.
+//!  * **Placement**: replicas must bin-pack onto nodes (placement.rs);
+//!    fragmentation can shrink a config further even below W_max.
+
+use crate::cluster::node::ClusterTopology;
+use crate::cluster::placement::{place, PlacementRequest};
+use crate::pipeline::{PipelineSpec, TaskConfig};
+
+/// A deployed replica.
+#[derive(Clone, Copy, Debug)]
+pub struct Container {
+    pub stage: usize,
+    pub variant: usize,
+    pub cores: f64,
+    pub node: usize,
+    /// simulation time at which this replica is Ready
+    pub ready_at: f64,
+}
+
+/// Result of one `apply` call.
+#[derive(Clone, Debug)]
+pub struct ApplyOutcome {
+    /// configuration actually deployed (may be clamped)
+    pub applied: Vec<TaskConfig>,
+    /// true when the requested config had to be shrunk to fit
+    pub clamped: bool,
+    /// replicas restarted or newly created by this apply
+    pub restarts: usize,
+}
+
+/// Cluster state + deployment controller.
+pub struct ClusterApi {
+    pub topo: ClusterTopology,
+    pub startup_secs: f64,
+    containers: Vec<Container>,
+    current: Vec<TaskConfig>,
+}
+
+impl ClusterApi {
+    pub fn new(topo: ClusterTopology, startup_secs: f64) -> Self {
+        Self { topo, startup_secs, containers: Vec::new(), current: Vec::new() }
+    }
+
+    pub fn current_config(&self) -> &[TaskConfig] {
+        &self.current
+    }
+
+    pub fn containers(&self) -> &[Container] {
+        &self.containers
+    }
+
+    /// Shrink `cfgs` until it both respects W_max and bin-packs onto nodes.
+    /// Sheds one replica at a time from the stage with the highest per-stage
+    /// cost, never going below 1 replica per stage.
+    pub fn fit_config(&self, spec: &PipelineSpec, cfgs: &[TaskConfig]) -> (Vec<TaskConfig>, bool) {
+        let mut cfgs = cfgs.to_vec();
+        let mut clamped = false;
+        loop {
+            let requests: Vec<PlacementRequest> = spec
+                .tasks
+                .iter()
+                .zip(&cfgs)
+                .enumerate()
+                .map(|(i, (t, c))| PlacementRequest {
+                    stage: i,
+                    count: c.replicas,
+                    cores: t.variants[c.variant].cores,
+                })
+                .collect();
+            let fits_total = spec.total_cores(&cfgs) <= self.topo.capacity() + 1e-9;
+            if fits_total && place(&self.topo, &requests).is_ok() {
+                return (cfgs, clamped);
+            }
+            // shed from the most expensive stage that still has >1 replica
+            let victim = cfgs
+                .iter()
+                .enumerate()
+                .filter(|(_, c)| c.replicas > 1)
+                .max_by(|(i, a), (j, b)| {
+                    let ca = a.cores(&spec.tasks[*i]);
+                    let cb = b.cores(&spec.tasks[*j]);
+                    ca.partial_cmp(&cb).unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .map(|(i, _)| i);
+            match victim {
+                Some(i) => {
+                    cfgs[i].replicas -= 1;
+                    clamped = true;
+                }
+                None => {
+                    // all stages at 1 replica and still infeasible: downgrade
+                    // the most expensive variant; if already minimal, give up
+                    // and return the floor config
+                    let heavy = cfgs
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, c)| c.variant > 0)
+                        .max_by(|(i, a), (j, b)| {
+                            let ca = spec.tasks[*i].variants[a.variant].cores;
+                            let cb = spec.tasks[*j].variants[b.variant].cores;
+                            ca.partial_cmp(&cb).unwrap_or(std::cmp::Ordering::Equal)
+                        })
+                        .map(|(i, _)| i);
+                    match heavy {
+                        Some(i) => {
+                            cfgs[i].variant -= 1;
+                            clamped = true;
+                        }
+                        None => return (cfgs, true),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Apply a (possibly infeasible) configuration at simulation time `now`.
+    pub fn apply(
+        &mut self,
+        spec: &PipelineSpec,
+        cfgs: &[TaskConfig],
+        now: f64,
+    ) -> Result<ApplyOutcome, String> {
+        spec.validate_config(cfgs)?;
+        let (applied, clamped) = self.fit_config(spec, cfgs);
+
+        // Diff against the running deployment, stage by stage.
+        let mut new_containers: Vec<Container> = Vec::new();
+        let mut restarts = 0usize;
+        let requests: Vec<PlacementRequest> = spec
+            .tasks
+            .iter()
+            .zip(&applied)
+            .enumerate()
+            .map(|(i, (t, c))| PlacementRequest {
+                stage: i,
+                count: c.replicas,
+                cores: t.variants[c.variant].cores,
+            })
+            .collect();
+        let bindings = place(&self.topo, &requests)
+            .map_err(|s| format!("placement failed for stage {s} after clamping"))?;
+
+        for (stage, (task, cfg)) in spec.tasks.iter().zip(&applied).enumerate() {
+            let cores = task.variants[cfg.variant].cores;
+            let old: Vec<&Container> =
+                self.containers.iter().filter(|c| c.stage == stage).collect();
+            let variant_changed =
+                self.current.get(stage).map(|c| c.variant != cfg.variant).unwrap_or(true);
+            let stage_bindings = bindings.iter().filter(|b| b.stage == stage);
+            for (ri, b) in stage_bindings.enumerate() {
+                let ready_at = if variant_changed {
+                    // rolling restart of the whole stage: model load time
+                    restarts += 1;
+                    now + self.startup_secs
+                } else if ri < old.len() {
+                    // surviving replica keeps its readiness
+                    old[ri].ready_at
+                } else {
+                    // scale-up: new replica must start
+                    restarts += 1;
+                    now + self.startup_secs
+                };
+                new_containers.push(Container {
+                    stage,
+                    variant: cfg.variant,
+                    cores,
+                    node: b.node,
+                    ready_at,
+                });
+            }
+        }
+
+        // commit: rebuild node usage from the new container set
+        self.topo.reset();
+        for c in &new_containers {
+            self.topo.nodes[c.node].alloc(c.cores);
+        }
+        self.containers = new_containers;
+        self.current = applied.clone();
+        Ok(ApplyOutcome { applied, clamped, restarts })
+    }
+
+    /// Ready replica count per stage at time `now`.
+    pub fn ready_replicas(&self, n_stages: usize, now: f64) -> Vec<usize> {
+        let mut ready = vec![0usize; n_stages];
+        for c in &self.containers {
+            if c.ready_at <= now && c.stage < n_stages {
+                ready[c.stage] += 1;
+            }
+        }
+        ready
+    }
+
+    /// Cores currently allocated (the billed cost basis).
+    pub fn allocated_cores(&self) -> f64 {
+        self.containers.iter().map(|c| c.cores).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::catalog;
+
+    fn setup() -> (PipelineSpec, ClusterApi) {
+        let spec = catalog::preset(catalog::Preset::P2).spec;
+        let api = ClusterApi::new(ClusterTopology::paper_testbed(), 3.0);
+        (spec, api)
+    }
+
+    #[test]
+    fn apply_default_config() {
+        let (spec, mut api) = setup();
+        let out = api.apply(&spec, &spec.default_config(), 0.0).unwrap();
+        assert!(!out.clamped);
+        assert_eq!(out.applied.len(), spec.n_tasks());
+        assert_eq!(api.containers().len(), spec.n_tasks()); // 1 replica each
+        // nothing ready before startup completes
+        assert_eq!(api.ready_replicas(spec.n_tasks(), 1.0), vec![0; spec.n_tasks()]);
+        assert_eq!(api.ready_replicas(spec.n_tasks(), 3.5), vec![1; spec.n_tasks()]);
+    }
+
+    #[test]
+    fn infeasible_config_is_clamped() {
+        let (spec, mut api) = setup();
+        // max everything: way over 30 cores
+        let cfgs: Vec<TaskConfig> = spec
+            .tasks
+            .iter()
+            .map(|t| TaskConfig::new(t.n_variants() - 1, 8, 5))
+            .collect();
+        let out = api.apply(&spec, &cfgs, 0.0).unwrap();
+        assert!(out.clamped);
+        assert!(spec.total_cores(&out.applied) <= api.topo.capacity() + 1e-9);
+        // every stage keeps at least one replica
+        assert!(out.applied.iter().all(|c| c.replicas >= 1));
+    }
+
+    #[test]
+    fn scale_up_preserves_existing_replicas() {
+        let (spec, mut api) = setup();
+        let mut cfgs = spec.default_config();
+        api.apply(&spec, &cfgs, 0.0).unwrap();
+        // at t=10 everything is ready
+        assert_eq!(api.ready_replicas(spec.n_tasks(), 10.0)[0], 1);
+        cfgs[0].replicas = 3;
+        let out = api.apply(&spec, &cfgs, 10.0).unwrap();
+        assert_eq!(out.restarts, 2); // two new replicas only
+        let ready = api.ready_replicas(spec.n_tasks(), 10.5);
+        assert_eq!(ready[0], 1, "old replica stays ready during scale-up");
+        let ready_later = api.ready_replicas(spec.n_tasks(), 14.0);
+        assert_eq!(ready_later[0], 3);
+    }
+
+    #[test]
+    fn variant_switch_restarts_stage() {
+        let (spec, mut api) = setup();
+        let mut cfgs = spec.default_config();
+        cfgs[1].replicas = 2;
+        api.apply(&spec, &cfgs, 0.0).unwrap();
+        cfgs[1].variant = 1;
+        let out = api.apply(&spec, &cfgs, 10.0).unwrap();
+        assert!(out.restarts >= 2);
+        let ready = api.ready_replicas(spec.n_tasks(), 10.5);
+        assert_eq!(ready[1], 0, "variant switch takes the stage down briefly");
+        assert_eq!(api.ready_replicas(spec.n_tasks(), 14.0)[1], 2);
+    }
+
+    #[test]
+    fn scale_down_is_immediate() {
+        let (spec, mut api) = setup();
+        let mut cfgs = spec.default_config();
+        cfgs[0].replicas = 4;
+        api.apply(&spec, &cfgs, 0.0).unwrap();
+        cfgs[0].replicas = 1;
+        api.apply(&spec, &cfgs, 100.0).unwrap();
+        assert_eq!(api.ready_replicas(spec.n_tasks(), 100.0)[0], 1);
+        assert_eq!(
+            api.containers().iter().filter(|c| c.stage == 0).count(),
+            1
+        );
+    }
+
+    #[test]
+    fn node_usage_matches_containers() {
+        let (spec, mut api) = setup();
+        let mut cfgs = spec.default_config();
+        cfgs[2].replicas = 3;
+        api.apply(&spec, &cfgs, 0.0).unwrap();
+        let want: f64 = api.allocated_cores();
+        assert!((api.topo.used() - want).abs() < 1e-9);
+        assert!(want <= api.topo.capacity());
+    }
+
+    #[test]
+    fn rejects_invalid_config() {
+        let (spec, mut api) = setup();
+        let mut cfgs = spec.default_config();
+        cfgs[0].variant = 42;
+        assert!(api.apply(&spec, &cfgs, 0.0).is_err());
+    }
+}

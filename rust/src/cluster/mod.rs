@@ -1,0 +1,11 @@
+//! Simulated Kubernetes edge cluster: nodes, replica placement, and the
+//! deployment API the agents act through (see DESIGN.md §2 for the
+//! paper→build substitution argument).
+
+pub mod api;
+pub mod node;
+pub mod placement;
+
+pub use api::{ApplyOutcome, ClusterApi, Container};
+pub use node::{ClusterTopology, Node};
+pub use placement::{place, Binding, PlacementRequest};

@@ -1,0 +1,139 @@
+//! Edge-cluster nodes (the paper's three physical machines).
+//!
+//! Kubernetes assigns CPU resources by core count (paper §III-B "Cost"); a
+//! node here is a bag of allocatable cores. The default topology mirrors the
+//! paper's testbed: 3 machines × 10-core i9-10900K.
+
+/// One edge node.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub name: String,
+    pub cores_total: f64,
+    pub cores_used: f64,
+}
+
+impl Node {
+    pub fn new(name: impl Into<String>, cores_total: f64) -> Self {
+        assert!(cores_total > 0.0);
+        Self { name: name.into(), cores_total, cores_used: 0.0 }
+    }
+
+    pub fn cores_free(&self) -> f64 {
+        (self.cores_total - self.cores_used).max(0.0)
+    }
+
+    pub fn can_fit(&self, cores: f64) -> bool {
+        // small epsilon so repeated f64 alloc/free cycles don't drift into
+        // spurious rejections
+        self.cores_free() + 1e-9 >= cores
+    }
+
+    pub fn alloc(&mut self, cores: f64) -> bool {
+        if self.can_fit(cores) {
+            self.cores_used += cores;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn free(&mut self, cores: f64) {
+        self.cores_used = (self.cores_used - cores).max(0.0);
+    }
+}
+
+/// The cluster topology: a set of nodes with a total capacity W_max (Eq. 4).
+#[derive(Clone, Debug)]
+pub struct ClusterTopology {
+    pub nodes: Vec<Node>,
+}
+
+impl ClusterTopology {
+    pub fn new(nodes: Vec<Node>) -> Self {
+        assert!(!nodes.is_empty(), "cluster needs at least one node");
+        Self { nodes }
+    }
+
+    /// The paper's testbed: 3 × 10-core machines.
+    pub fn paper_testbed() -> Self {
+        Self::new(
+            (0..3).map(|i| Node::new(format!("edge-{i}"), 10.0)).collect(),
+        )
+    }
+
+    /// Uniform topology helper.
+    pub fn uniform(n_nodes: usize, cores_each: f64) -> Self {
+        Self::new(
+            (0..n_nodes)
+                .map(|i| Node::new(format!("edge-{i}"), cores_each))
+                .collect(),
+        )
+    }
+
+    /// W_max of Eq. 4.
+    pub fn capacity(&self) -> f64 {
+        self.nodes.iter().map(|n| n.cores_total).sum()
+    }
+
+    pub fn used(&self) -> f64 {
+        self.nodes.iter().map(|n| n.cores_used).sum()
+    }
+
+    pub fn free(&self) -> f64 {
+        self.capacity() - self.used()
+    }
+
+    pub fn reset(&mut self) {
+        for n in &mut self.nodes {
+            n.cores_used = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_capacity() {
+        let t = ClusterTopology::paper_testbed();
+        assert_eq!(t.nodes.len(), 3);
+        assert_eq!(t.capacity(), 30.0);
+        assert_eq!(t.free(), 30.0);
+    }
+
+    #[test]
+    fn alloc_free_cycle() {
+        let mut n = Node::new("a", 4.0);
+        assert!(n.alloc(2.5));
+        assert!(!n.alloc(2.0));
+        assert!(n.alloc(1.5));
+        assert_eq!(n.cores_free(), 0.0);
+        n.free(2.5);
+        assert!((n.cores_free() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn free_never_goes_negative() {
+        let mut n = Node::new("a", 4.0);
+        n.free(10.0);
+        assert_eq!(n.cores_used, 0.0);
+    }
+
+    #[test]
+    fn epsilon_tolerance() {
+        let mut n = Node::new("a", 1.0);
+        for _ in 0..10 {
+            assert!(n.alloc(0.1));
+        }
+        // 10 × 0.1 may exceed 1.0 by f64 error; can_fit must not be spooked
+        n.free(0.1);
+        assert!(n.can_fit(0.1));
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_cluster_panics() {
+        ClusterTopology::new(vec![]);
+    }
+}

@@ -1,0 +1,298 @@
+//! Experiment configuration: one JSON document describes a full run —
+//! pipeline, workload, cluster topology, QoS weights, agent, timing. Used by
+//! the CLI, the examples, and every bench harness so experiments are
+//! reproducible from a single artifact.
+
+use crate::cluster::ClusterTopology;
+use crate::pipeline::{catalog, PipelineSpec, QosWeights};
+use crate::util::json::Json;
+use crate::workload::WorkloadKind;
+
+/// Which decision algorithm drives the run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AgentKind {
+    Random,
+    Greedy,
+    Ipa,
+    Opd,
+}
+
+impl AgentKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            AgentKind::Random => "random",
+            AgentKind::Greedy => "greedy",
+            AgentKind::Ipa => "ipa",
+            AgentKind::Opd => "opd",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "random" => Some(AgentKind::Random),
+            "greedy" => Some(AgentKind::Greedy),
+            "ipa" => Some(AgentKind::Ipa),
+            "opd" => Some(AgentKind::Opd),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [AgentKind; 4] {
+        [AgentKind::Random, AgentKind::Greedy, AgentKind::Ipa, AgentKind::Opd]
+    }
+}
+
+/// Full experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub seed: u64,
+    /// pipeline preset name (catalog::by_name)
+    pub pipeline: String,
+    pub workload: WorkloadKind,
+    pub agent: AgentKind,
+    /// evaluation cycle length, seconds (paper: 1200)
+    pub cycle_secs: usize,
+    /// adaptation interval, seconds (paper: 10)
+    pub adapt_interval_secs: usize,
+    /// container startup delay, seconds
+    pub startup_secs: f64,
+    pub nodes: usize,
+    pub cores_per_node: f64,
+    pub weights: QosWeights,
+    /// artifacts directory (None → resolve via env / default)
+    pub artifacts_dir: Option<String>,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            seed: 42,
+            pipeline: "video-analytics".into(),
+            workload: WorkloadKind::Fluctuating,
+            agent: AgentKind::Opd,
+            cycle_secs: 1200,
+            adapt_interval_secs: 10,
+            startup_secs: 3.0,
+            nodes: 3,
+            cores_per_node: 10.0,
+            weights: QosWeights::default(),
+            artifacts_dir: None,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn pipeline_spec(&self) -> Result<PipelineSpec, String> {
+        catalog::by_name(&self.pipeline)
+            .map(|np| np.spec)
+            .ok_or_else(|| {
+                format!(
+                    "unknown pipeline '{}' (available: {})",
+                    self.pipeline,
+                    catalog::available().join(", ")
+                )
+            })
+    }
+
+    pub fn topology(&self) -> ClusterTopology {
+        ClusterTopology::uniform(self.nodes, self.cores_per_node)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        self.pipeline_spec()?;
+        if self.cycle_secs == 0 {
+            return Err("cycle_secs must be positive".into());
+        }
+        if self.adapt_interval_secs == 0 || self.adapt_interval_secs > self.cycle_secs {
+            return Err("adapt_interval_secs must be in 1..=cycle_secs".into());
+        }
+        if self.nodes == 0 || self.cores_per_node <= 0.0 {
+            return Err("cluster must have nodes with positive cores".into());
+        }
+        if self.startup_secs < 0.0 {
+            return Err("startup_secs must be non-negative".into());
+        }
+        let spec = self.pipeline_spec()?;
+        if spec.n_tasks() > crate::nn::spec::MAX_TASKS {
+            return Err(format!(
+                "pipeline has {} stages; the NN interface supports up to {}",
+                spec.n_tasks(),
+                crate::nn::spec::MAX_TASKS
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let w = &self.weights;
+        Json::obj()
+            .set("seed", self.seed as i64)
+            .set("pipeline", self.pipeline.as_str())
+            .set("workload", self.workload.name())
+            .set("agent", self.agent.name())
+            .set("cycle_secs", self.cycle_secs)
+            .set("adapt_interval_secs", self.adapt_interval_secs)
+            .set("startup_secs", self.startup_secs)
+            .set("nodes", self.nodes)
+            .set("cores_per_node", self.cores_per_node)
+            .set(
+                "weights",
+                Json::obj()
+                    .set("alpha", w.alpha)
+                    .set("beta", w.beta)
+                    .set("gamma", w.gamma)
+                    .set("delta", w.delta)
+                    .set("lambda", w.lambda)
+                    .set("beta_cost", w.beta_cost)
+                    .set("gamma_batch", w.gamma_batch)
+                    .set("throughput_scale", w.throughput_scale)
+                    .set("latency_scale_ms", w.latency_scale_ms)
+                    .set("excess_scale", w.excess_scale)
+                    .set("cost_scale", w.cost_scale),
+            )
+            .set(
+                "artifacts_dir",
+                match &self.artifacts_dir {
+                    Some(d) => Json::Str(d.clone()),
+                    None => Json::Null,
+                },
+            )
+    }
+
+    pub fn from_json(j: &Json) -> Result<ExperimentConfig, String> {
+        let mut c = ExperimentConfig::default();
+        if let Some(v) = j.get("seed").and_then(Json::as_i64) {
+            c.seed = v as u64;
+        }
+        if let Some(v) = j.get("pipeline").and_then(Json::as_str) {
+            c.pipeline = v.to_string();
+        }
+        if let Some(v) = j.get("workload").and_then(Json::as_str) {
+            c.workload =
+                WorkloadKind::from_name(v).ok_or_else(|| format!("unknown workload '{v}'"))?;
+        }
+        if let Some(v) = j.get("agent").and_then(Json::as_str) {
+            c.agent = AgentKind::from_name(v).ok_or_else(|| format!("unknown agent '{v}'"))?;
+        }
+        if let Some(v) = j.get("cycle_secs").and_then(Json::as_usize) {
+            c.cycle_secs = v;
+        }
+        if let Some(v) = j.get("adapt_interval_secs").and_then(Json::as_usize) {
+            c.adapt_interval_secs = v;
+        }
+        if let Some(v) = j.get("startup_secs").and_then(Json::as_f64) {
+            c.startup_secs = v;
+        }
+        if let Some(v) = j.get("nodes").and_then(Json::as_usize) {
+            c.nodes = v;
+        }
+        if let Some(v) = j.get("cores_per_node").and_then(Json::as_f64) {
+            c.cores_per_node = v;
+        }
+        if let Some(w) = j.get("weights") {
+            let mut qw = QosWeights::default();
+            let set = |field: &mut f64, key: &str| {
+                if let Some(v) = w.get(key).and_then(Json::as_f64) {
+                    *field = v;
+                }
+            };
+            set(&mut qw.alpha, "alpha");
+            set(&mut qw.beta, "beta");
+            set(&mut qw.gamma, "gamma");
+            set(&mut qw.delta, "delta");
+            set(&mut qw.lambda, "lambda");
+            set(&mut qw.beta_cost, "beta_cost");
+            set(&mut qw.gamma_batch, "gamma_batch");
+            set(&mut qw.throughput_scale, "throughput_scale");
+            set(&mut qw.latency_scale_ms, "latency_scale_ms");
+            set(&mut qw.excess_scale, "excess_scale");
+            set(&mut qw.cost_scale, "cost_scale");
+            c.weights = qw;
+        }
+        if let Some(Json::Str(d)) = j.get("artifacts_dir") {
+            c.artifacts_dir = Some(d.clone());
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn load(path: &str) -> Result<ExperimentConfig, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let j = Json::parse(&text).map_err(|e| e.to_string())?;
+        Self::from_json(&j)
+    }
+
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_pretty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = ExperimentConfig::default();
+        c.seed = 7;
+        c.pipeline = "P3".into();
+        c.workload = WorkloadKind::SteadyHigh;
+        c.agent = AgentKind::Ipa;
+        c.weights.gamma = 3.5;
+        let j = c.to_json();
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.seed, 7);
+        assert_eq!(back.pipeline, "P3");
+        assert_eq!(back.workload, WorkloadKind::SteadyHigh);
+        assert_eq!(back.agent, AgentKind::Ipa);
+        assert!((back.weights.gamma - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validation_catches_errors() {
+        let mut c = ExperimentConfig::default();
+        c.pipeline = "bogus".into();
+        assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::default();
+        c.adapt_interval_secs = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::default();
+        c.cycle_secs = 5;
+        c.adapt_interval_secs = 10;
+        assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::default();
+        c.nodes = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_enum_values() {
+        let j = Json::parse(r#"{"workload": "nope"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"agent": "nope"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn agent_kind_roundtrip() {
+        for a in AgentKind::all() {
+            assert_eq!(AgentKind::from_name(a.name()), Some(a));
+        }
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let j = Json::parse(r#"{"seed": 5}"#).unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.seed, 5);
+        assert_eq!(c.cycle_secs, 1200);
+    }
+}

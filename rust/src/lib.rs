@@ -1,0 +1,40 @@
+//! # OPD — Adaptive Configuration Selection for Multi-Model Inference
+//! # Pipelines in Edge Computing
+//!
+//! A from-scratch reproduction of Sheng et al. (HPCC 2024): an online
+//! reinforcement-learning controller (policy-gradient / PPO with expert
+//! guidance) that selects, for every stage of a multi-model inference
+//! pipeline on an edge cluster, the *(model variant, replica count, batch
+//! size)* configuration that maximizes QoS (Eq. 3) minus cost (Eq. 2).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **L3 (this crate)** — rust coordinator: simulated Kubernetes edge
+//!   cluster, pipeline performance model, workload generation + monitoring,
+//!   the four agents (Random / Greedy / IPA / OPD), and the PPO trainer.
+//! * **L2** — JAX compute graphs (policy forward, PPO train step, LSTM
+//!   predictor), AOT-lowered to HLO text by `python/compile/aot.py`.
+//! * **L1** — Pallas kernels (fused dense / residual block / LSTM cell)
+//!   inside the L2 graphs.
+//!
+//! Python never runs on the decision path: `rust/src/runtime` loads the HLO
+//! artifacts via the PJRT C API (`xla` crate) once and executes them from
+//! the coordinator's hot loop.
+
+pub mod agents;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod nn;
+pub mod pipeline;
+pub mod rl;
+pub mod runtime;
+pub mod serve;
+pub mod sim;
+pub mod telemetry;
+pub mod util;
+pub mod workload;
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

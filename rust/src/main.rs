@@ -1,0 +1,6 @@
+//! `opd` — leader binary of the OPD coordinator (see cli/mod.rs for the
+//! command surface and lib.rs for the architecture overview).
+
+fn main() {
+    std::process::exit(opd::cli::run());
+}

@@ -1,0 +1,214 @@
+//! Small-vector NN math on the decision path: masked softmax, categorical
+//! sampling, log-probabilities, entropy, argmax — everything the coordinator
+//! does *around* the HLO policy forward (sampling happens rust-side so the
+//! graph stays deterministic and replayable).
+
+use crate::util::prng::Pcg32;
+
+pub const NEG_INF: f32 = -1.0e9;
+
+/// Numerically-stable masked log-softmax. `mask[i] == false` → excluded.
+pub fn log_softmax_masked(logits: &[f32], mask: &[bool]) -> Vec<f32> {
+    assert_eq!(logits.len(), mask.len());
+    let mx = logits
+        .iter()
+        .zip(mask)
+        .filter(|(_, m)| **m)
+        .map(|(x, _)| *x)
+        .fold(f32::NEG_INFINITY, f32::max);
+    if mx == f32::NEG_INFINITY {
+        // fully-masked head: return NEG_INF everywhere (caller guards)
+        return vec![NEG_INF; logits.len()];
+    }
+    let mut denom = 0.0f32;
+    for (x, m) in logits.iter().zip(mask) {
+        if *m {
+            denom += (x - mx).exp();
+        }
+    }
+    let log_denom = denom.ln();
+    logits
+        .iter()
+        .zip(mask)
+        .map(|(x, m)| if *m { x - mx - log_denom } else { NEG_INF })
+        .collect()
+}
+
+/// Masked softmax probabilities (sum to 1 over the valid entries).
+pub fn softmax_masked(logits: &[f32], mask: &[bool]) -> Vec<f32> {
+    log_softmax_masked(logits, mask)
+        .iter()
+        .map(|lp| if *lp <= NEG_INF / 2.0 { 0.0 } else { lp.exp() })
+        .collect()
+}
+
+/// Sample an index from masked logits; returns (index, log-prob).
+pub fn sample_masked(logits: &[f32], mask: &[bool], rng: &mut Pcg32) -> (usize, f32) {
+    let lp = log_softmax_masked(logits, mask);
+    let probs: Vec<f64> = lp
+        .iter()
+        .map(|l| if *l <= NEG_INF / 2.0 { 0.0 } else { (*l as f64).exp() })
+        .collect();
+    let idx = rng
+        .categorical(&probs)
+        .unwrap_or_else(|| mask.iter().position(|m| *m).unwrap_or(0));
+    (idx, lp[idx])
+}
+
+/// Greedy (argmax) choice from masked logits; returns (index, log-prob).
+pub fn argmax_masked(logits: &[f32], mask: &[bool]) -> (usize, f32) {
+    let lp = log_softmax_masked(logits, mask);
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, (l, m)) in logits.iter().zip(mask).enumerate() {
+        if *m && *l > best_v {
+            best_v = *l;
+            best = i;
+        }
+    }
+    (best, lp[best])
+}
+
+/// Entropy (nats) of the masked categorical.
+pub fn entropy_masked(logits: &[f32], mask: &[bool]) -> f32 {
+    let lp = log_softmax_masked(logits, mask);
+    let mut h = 0.0f32;
+    for (l, m) in lp.iter().zip(mask) {
+        if *m && *l > NEG_INF / 2.0 {
+            h -= l.exp() * l;
+        }
+    }
+    h
+}
+
+/// y = x @ w + b where x is (i,), w is (i, o) row-major, b is (o,).
+pub fn dense(x: &[f32], w: &[f32], b: &[f32], o: usize, relu: bool) -> Vec<f32> {
+    let i = x.len();
+    assert_eq!(w.len(), i * o, "dense: weight shape mismatch");
+    assert_eq!(b.len(), o);
+    let mut y = b.to_vec();
+    for (row, &xv) in x.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let wrow = &w[row * o..(row + 1) * o];
+        for (yj, wj) in y.iter_mut().zip(wrow) {
+            *yj += xv * wj;
+        }
+    }
+    if relu {
+        for v in &mut y {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+    y
+}
+
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_true(n: usize) -> Vec<bool> {
+        vec![true; n]
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let logits = [1.0, 2.0, 3.0, -1.0];
+        let p = softmax_masked(&logits, &all_true(4));
+        let sum: f32 = p.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+        assert!(p[2] > p[1] && p[1] > p[0] && p[0] > p[3]);
+    }
+
+    #[test]
+    fn mask_zeroes_probability() {
+        let logits = [10.0, 0.0, 0.0];
+        let mask = [false, true, true];
+        let p = softmax_masked(&logits, &mask);
+        assert_eq!(p[0], 0.0);
+        assert!((p[1] - 0.5).abs() < 1e-5);
+    }
+
+    #[test]
+    fn log_softmax_matches_manual() {
+        let logits = [0.0, 0.0];
+        let lp = log_softmax_masked(&logits, &all_true(2));
+        assert!((lp[0] - (-std::f32::consts::LN_2)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stable_under_huge_logits() {
+        let logits = [1e8, 1e8 - 1.0];
+        let p = softmax_masked(&logits, &all_true(2));
+        assert!(p.iter().all(|x| x.is_finite()));
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn sample_respects_mask_and_distribution() {
+        let mut rng = Pcg32::new(1);
+        let logits = [0.0, 5.0, 0.0];
+        let mask = [true, false, true];
+        let mut counts = [0u32; 3];
+        for _ in 0..2000 {
+            let (i, lp) = sample_masked(&logits, &mask, &mut rng);
+            counts[i] += 1;
+            assert!((lp - (-std::f32::consts::LN_2)).abs() < 1e-5);
+        }
+        assert_eq!(counts[1], 0);
+        assert!(counts[0] > 800 && counts[2] > 800);
+    }
+
+    #[test]
+    fn argmax_ignores_masked_max() {
+        let logits = [9.0, 1.0, 2.0];
+        let mask = [false, true, true];
+        let (i, lp) = argmax_masked(&logits, &mask);
+        assert_eq!(i, 2);
+        assert!(lp < 0.0);
+    }
+
+    #[test]
+    fn entropy_uniform_is_log_n() {
+        let logits = [0.0; 4];
+        let h = entropy_masked(&logits, &all_true(4));
+        assert!((h - (4.0f32).ln()).abs() < 1e-5);
+        // masked to 2 entries → ln 2
+        let h2 = entropy_masked(&logits, &[true, true, false, false]);
+        assert!((h2 - (2.0f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn entropy_peaked_is_small() {
+        let h = entropy_masked(&[100.0, 0.0, 0.0], &all_true(3));
+        assert!(h < 1e-3);
+    }
+
+    #[test]
+    fn dense_matches_manual() {
+        // x (2,) @ w (2,3): w row-major
+        let x = [1.0, 2.0];
+        let w = [1.0, 0.0, -1.0, /* row 1 */ 0.5, 1.0, 1.0];
+        let b = [0.0, 1.0, 0.0];
+        let y = dense(&x, &w, &b, 3, false);
+        assert_eq!(y, vec![2.0, 3.0, 1.0]);
+        let yr = dense(&x, &w, &b, 3, true);
+        assert!(yr.iter().all(|v| *v >= 0.0));
+    }
+
+    #[test]
+    fn fully_masked_head_is_guarded() {
+        let lp = log_softmax_masked(&[1.0, 2.0], &[false, false]);
+        assert!(lp.iter().all(|l| *l <= NEG_INF / 2.0));
+        let mut rng = Pcg32::new(0);
+        let (i, _) = sample_masked(&[1.0, 2.0], &[false, false], &mut rng);
+        assert_eq!(i, 0); // deterministic fallback
+    }
+}

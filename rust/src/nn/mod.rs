@@ -1,0 +1,9 @@
+//! Neural-network support on the rust side: the cross-language parameter
+//! contract (spec), decision-path math (masked softmax/sampling), and a
+//! pure-rust mirror of the L2 forwards for cross-checking and fallback.
+
+pub mod math;
+pub mod policy;
+pub mod spec;
+
+pub use spec::Manifest;

@@ -1,0 +1,247 @@
+//! Pure-rust mirror of the L2 forward passes (policy network + LSTM
+//! predictor), operating on the SAME flat parameter layout as
+//! `python/compile/params.py`.
+//!
+//! Three uses:
+//!  1. startup/integration cross-check: native(params, s) ≡ HLO(params, s)
+//!     (catches parameter-layout drift end-to-end);
+//!  2. a no-artifacts fallback so unit tests and quick sims run without the
+//!     PJRT runtime;
+//!  3. a perf baseline the bench harness compares the HLO path against.
+
+use crate::nn::math::{dense, sigmoid};
+use crate::nn::spec::*;
+
+/// Offsets of each tensor inside the flat policy parameter vector, in the
+/// exact order of `params.policy_spec()`.
+#[derive(Clone, Copy, Debug)]
+pub struct PolicyLayout {
+    pub fc_in_w: usize,
+    pub fc_in_b: usize,
+    pub res: [(usize, usize, usize, usize); N_RES], // w1, b1, w2, b2
+    pub head_w: usize,
+    pub head_b: usize,
+    pub value_w: usize,
+    pub value_b: usize,
+    pub total: usize,
+}
+
+impl PolicyLayout {
+    pub const fn compute() -> PolicyLayout {
+        let mut off = 0usize;
+        let fc_in_w = off;
+        off += STATE_DIM * HIDDEN;
+        let fc_in_b = off;
+        off += HIDDEN;
+        let mut res = [(0usize, 0usize, 0usize, 0usize); N_RES];
+        let mut i = 0;
+        while i < N_RES {
+            let w1 = off;
+            off += HIDDEN * HIDDEN;
+            let b1 = off;
+            off += HIDDEN;
+            let w2 = off;
+            off += HIDDEN * HIDDEN;
+            let b2 = off;
+            off += HIDDEN;
+            res[i] = (w1, b1, w2, b2);
+            i += 1;
+        }
+        let head_w = off;
+        off += HIDDEN * LOGITS_DIM;
+        let head_b = off;
+        off += LOGITS_DIM;
+        let value_w = off;
+        off += HIDDEN;
+        let value_b = off;
+        off += 1;
+        PolicyLayout {
+            fc_in_w,
+            fc_in_b,
+            res,
+            head_w,
+            head_b,
+            value_w,
+            value_b,
+            total: off,
+        }
+    }
+}
+
+pub const POLICY_LAYOUT: PolicyLayout = PolicyLayout::compute();
+
+/// Native policy forward: state (STATE_DIM,) → (logits (LOGITS_DIM,), value).
+pub fn policy_fwd_native(params: &[f32], state: &[f32]) -> (Vec<f32>, f32) {
+    assert_eq!(params.len(), POLICY_PARAM_COUNT, "bad param vector length");
+    assert_eq!(state.len(), STATE_DIM, "bad state length");
+    let l = &POLICY_LAYOUT;
+    let p = |a: usize, b: usize| &params[a..a + b];
+
+    let mut h = dense(
+        state,
+        p(l.fc_in_w, STATE_DIM * HIDDEN),
+        p(l.fc_in_b, HIDDEN),
+        HIDDEN,
+        true,
+    );
+    for (w1, b1, w2, b2) in l.res {
+        let hidden = dense(&h, p(w1, HIDDEN * HIDDEN), p(b1, HIDDEN), HIDDEN, true);
+        let out = dense(&hidden, p(w2, HIDDEN * HIDDEN), p(b2, HIDDEN), HIDDEN, false);
+        for (hi, oi) in h.iter_mut().zip(out) {
+            *hi += oi; // residual add happens on x: y = x + f(x)
+        }
+    }
+    let logits = dense(
+        &h,
+        p(l.head_w, HIDDEN * LOGITS_DIM),
+        p(l.head_b, LOGITS_DIM),
+        LOGITS_DIM,
+        false,
+    );
+    let value = dense(&h, p(l.value_w, HIDDEN), p(l.value_b, 1), 1, false)[0];
+    (logits, value)
+}
+
+/// Offsets inside the flat predictor parameter vector.
+#[derive(Clone, Copy, Debug)]
+pub struct PredictorLayout {
+    pub wx: usize,
+    pub wh: usize,
+    pub b: usize,
+    pub dense_w: usize,
+    pub dense_b: usize,
+    pub total: usize,
+}
+
+pub const PREDICTOR_LAYOUT: PredictorLayout = {
+    let wx = 0usize;
+    let wh = wx + 4 * LSTM_HIDDEN; // input dim is 1
+    let b = wh + LSTM_HIDDEN * 4 * LSTM_HIDDEN;
+    let dense_w = b + 4 * LSTM_HIDDEN;
+    let dense_b = dense_w + LSTM_HIDDEN;
+    PredictorLayout { wx, wh, b, dense_w, dense_b, total: dense_b + 1 }
+};
+
+/// Native LSTM predictor forward: raw req/s window (PRED_WINDOW,) → predicted
+/// max load of the next horizon (raw req/s). Mirrors model.predictor_fwd.
+pub fn predictor_fwd_native(params: &[f32], window: &[f32]) -> f32 {
+    assert_eq!(params.len(), PREDICTOR_PARAM_COUNT);
+    assert_eq!(window.len(), PRED_WINDOW);
+    let l = &PREDICTOR_LAYOUT;
+    let hd = LSTM_HIDDEN;
+    let wx = &params[l.wx..l.wx + 4 * hd]; // (1, 4H) row-major = (4H,)
+    let wh = &params[l.wh..l.wh + hd * 4 * hd]; // (H, 4H) row-major
+    let bias = &params[l.b..l.b + 4 * hd];
+
+    let mut h = vec![0.0f32; hd];
+    let mut c = vec![0.0f32; hd];
+    let mut gates = vec![0.0f32; 4 * hd];
+    for &x_raw in window {
+        let x = x_raw / LOAD_SCALE as f32;
+        // gates = x*wx + h@wh + b
+        for g in 0..4 * hd {
+            gates[g] = x * wx[g] + bias[g];
+        }
+        for (row, &hv) in h.iter().enumerate() {
+            if hv == 0.0 {
+                continue;
+            }
+            let wrow = &wh[row * 4 * hd..(row + 1) * 4 * hd];
+            for (g, wv) in gates.iter_mut().zip(wrow) {
+                *g += hv * wv;
+            }
+        }
+        for j in 0..hd {
+            let i_g = sigmoid(gates[j]);
+            let f_g = sigmoid(gates[hd + j]);
+            let g_g = gates[2 * hd + j].tanh();
+            let o_g = sigmoid(gates[3 * hd + j]);
+            c[j] = f_g * c[j] + i_g * g_g;
+            h[j] = o_g * c[j].tanh();
+        }
+    }
+    let dw = &params[l.dense_w..l.dense_w + hd];
+    let db = params[l.dense_b];
+    let mut out = db;
+    for (hv, wv) in h.iter().zip(dw) {
+        out += hv * wv;
+    }
+    out * LOAD_SCALE as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_totals_match_counts() {
+        assert_eq!(POLICY_LAYOUT.total, POLICY_PARAM_COUNT);
+        assert_eq!(PREDICTOR_LAYOUT.total, PREDICTOR_PARAM_COUNT);
+    }
+
+    #[test]
+    fn policy_fwd_shapes_and_determinism() {
+        let params = vec![0.01f32; POLICY_PARAM_COUNT];
+        let state = vec![0.5f32; STATE_DIM];
+        let (l1, v1) = policy_fwd_native(&params, &state);
+        let (l2, v2) = policy_fwd_native(&params, &state);
+        assert_eq!(l1.len(), LOGITS_DIM);
+        assert_eq!(l1, l2);
+        assert_eq!(v1, v2);
+        assert!(l1.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn zero_params_give_zero_outputs() {
+        let params = vec![0.0f32; POLICY_PARAM_COUNT];
+        let state = vec![1.0f32; STATE_DIM];
+        let (logits, value) = policy_fwd_native(&params, &state);
+        assert!(logits.iter().all(|x| *x == 0.0));
+        assert_eq!(value, 0.0);
+    }
+
+    #[test]
+    fn residual_identity_with_zero_res_weights() {
+        // params: fc_in identity-ish is hard; instead verify the residual
+        // property: zeroing res blocks leaves trunk output = fc_in output,
+        // i.e. logits from head applied to relu(fc_in(x)).
+        let mut params = vec![0.0f32; POLICY_PARAM_COUNT];
+        let l = &POLICY_LAYOUT;
+        // fc_in/w = 0, fc_in/b = 1 → h = relu(1) = 1 everywhere
+        for i in 0..HIDDEN {
+            params[l.fc_in_b + i] = 1.0;
+        }
+        // head/w: first column sums h → logits[0] = HIDDEN
+        for r in 0..HIDDEN {
+            params[l.head_w + r * LOGITS_DIM] = 1.0;
+        }
+        let state = vec![0.3f32; STATE_DIM];
+        let (logits, _) = policy_fwd_native(&params, &state);
+        assert!((logits[0] - HIDDEN as f32).abs() < 1e-3);
+        assert_eq!(logits[1], 0.0);
+    }
+
+    #[test]
+    fn predictor_fwd_finite_and_deterministic() {
+        let params: Vec<f32> =
+            (0..PREDICTOR_PARAM_COUNT).map(|i| ((i % 13) as f32 - 6.0) * 0.01).collect();
+        let window: Vec<f32> = (0..PRED_WINDOW).map(|i| 50.0 + (i as f32).sin() * 10.0).collect();
+        let a = predictor_fwd_native(&params, &window);
+        let b = predictor_fwd_native(&params, &window);
+        assert_eq!(a, b);
+        assert!(a.is_finite());
+    }
+
+    #[test]
+    fn predictor_zero_params_predicts_zero() {
+        let params = vec![0.0f32; PREDICTOR_PARAM_COUNT];
+        let window = vec![100.0f32; PRED_WINDOW];
+        assert_eq!(predictor_fwd_native(&params, &window), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_param_length_panics() {
+        policy_fwd_native(&[0.0; 10], &[0.0; STATE_DIM]);
+    }
+}

@@ -1,0 +1,192 @@
+//! Rust mirror of `python/compile/params.py` — the cross-language contract.
+//!
+//! The constants below fix the neural-network interface (state layout, action
+//! heads, parameter counts). `Manifest::load` reads `artifacts/manifest.json`
+//! (written by the AOT step) and `Manifest::validate` cross-checks every
+//! constant, so a drift between the python and rust sides fails loudly at
+//! startup instead of silently mis-slicing tensors.
+
+use crate::util::json::Json;
+
+pub const MAX_TASKS: usize = 8;
+pub const MAX_VARIANTS: usize = 4;
+pub const F_MAX: usize = 8;
+pub const N_BATCH: usize = 6;
+pub const BATCH_CHOICES: [usize; N_BATCH] = [1, 2, 4, 8, 16, 32];
+
+pub const NODE_FEATS: usize = 6;
+pub const TASK_FEATS: usize = 10;
+pub const STATE_DIM: usize = NODE_FEATS + MAX_TASKS * TASK_FEATS; // 86
+
+pub const HEAD_DIMS: [usize; 3] = [MAX_VARIANTS, F_MAX, N_BATCH];
+pub const HEAD_DIM: usize = MAX_VARIANTS + F_MAX + N_BATCH; // 18
+pub const LOGITS_DIM: usize = MAX_TASKS * HEAD_DIM; // 144
+pub const ACT_DIM: usize = MAX_TASKS * 3; // 24
+
+pub const HIDDEN: usize = 128;
+pub const N_RES: usize = 3;
+
+pub const PRED_WINDOW: usize = 120;
+pub const PRED_HORIZON: usize = 20;
+pub const LSTM_HIDDEN: usize = 25;
+pub const TRAIN_BATCH: usize = 64;
+
+/// Load scale baked into the predictor graph (model.py::LOAD_SCALE).
+pub const LOAD_SCALE: f64 = 200.0;
+
+/// Closed-form policy parameter count (must equal python's).
+pub const POLICY_PARAM_COUNT: usize = STATE_DIM * HIDDEN
+    + HIDDEN
+    + N_RES * (2 * HIDDEN * HIDDEN + 2 * HIDDEN)
+    + HIDDEN * LOGITS_DIM
+    + LOGITS_DIM
+    + HIDDEN
+    + 1;
+
+/// Closed-form predictor parameter count.
+pub const PREDICTOR_PARAM_COUNT: usize =
+    4 * LSTM_HIDDEN + LSTM_HIDDEN * 4 * LSTM_HIDDEN + 4 * LSTM_HIDDEN + LSTM_HIDDEN + 1;
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub state_dim: usize,
+    pub logits_dim: usize,
+    pub act_dim: usize,
+    pub max_tasks: usize,
+    pub train_batch: usize,
+    pub policy_param_count: usize,
+    pub predictor_param_count: usize,
+    pub pred_window: usize,
+    pub batch_choices: Vec<usize>,
+    pub predictor_smape: f64,
+    /// artifact name → byte size (integrity check)
+    pub artifact_bytes: Vec<(String, usize)>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        let req = |k: &str| j.req_usize(k).map_err(|e| e.to_string());
+        let batch_choices = j
+            .get("batch_choices")
+            .and_then(Json::as_arr)
+            .ok_or("missing batch_choices")?
+            .iter()
+            .map(|x| x.as_usize().ok_or("bad batch choice"))
+            .collect::<Result<Vec<_>, _>>()?;
+        let artifact_bytes = j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or("missing artifacts")?
+            .iter()
+            .map(|(k, v)| {
+                v.req_usize("bytes")
+                    .map(|b| (k.clone(), b))
+                    .map_err(|e| e.to_string())
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Manifest {
+            state_dim: req("state_dim")?,
+            logits_dim: req("logits_dim")?,
+            act_dim: req("act_dim")?,
+            max_tasks: req("max_tasks")?,
+            train_batch: req("train_batch")?,
+            policy_param_count: req("policy_param_count")?,
+            predictor_param_count: req("predictor_param_count")?,
+            pred_window: req("pred_window")?,
+            batch_choices,
+            predictor_smape: j.get("predictor_smape").and_then(Json::as_f64).unwrap_or(f64::NAN),
+            artifact_bytes,
+        })
+    }
+
+    pub fn load(path: &str) -> Result<Manifest, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {path}: {e} (run `make artifacts`)"))?;
+        Self::parse(&text)
+    }
+
+    /// Cross-check every constant against this compiled binary.
+    pub fn validate(&self) -> Result<(), String> {
+        let checks = [
+            ("state_dim", self.state_dim, STATE_DIM),
+            ("logits_dim", self.logits_dim, LOGITS_DIM),
+            ("act_dim", self.act_dim, ACT_DIM),
+            ("max_tasks", self.max_tasks, MAX_TASKS),
+            ("train_batch", self.train_batch, TRAIN_BATCH),
+            ("policy_param_count", self.policy_param_count, POLICY_PARAM_COUNT),
+            ("predictor_param_count", self.predictor_param_count, PREDICTOR_PARAM_COUNT),
+            ("pred_window", self.pred_window, PRED_WINDOW),
+        ];
+        for (name, got, want) in checks {
+            if got != want {
+                return Err(format!(
+                    "manifest/{name} = {got} but binary expects {want}: \
+                     python and rust sides have drifted; re-run `make artifacts`"
+                ));
+            }
+        }
+        if self.batch_choices != BATCH_CHOICES.to_vec() {
+            return Err(format!(
+                "manifest batch_choices {:?} != {:?}",
+                self.batch_choices, BATCH_CHOICES
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_form_counts() {
+        // values computed by python/compile/params.py (test_params.py pins
+        // the same closed forms on that side)
+        assert_eq!(POLICY_PARAM_COUNT, 128_913);
+        assert_eq!(PREDICTOR_PARAM_COUNT, 2_726);
+        assert_eq!(STATE_DIM, 86);
+        assert_eq!(LOGITS_DIM, 144);
+        assert_eq!(ACT_DIM, 24);
+    }
+
+    fn manifest_json() -> String {
+        format!(
+            r#"{{"state_dim":86,"logits_dim":144,"act_dim":24,"max_tasks":8,
+                "train_batch":64,"policy_param_count":{POLICY_PARAM_COUNT},
+                "predictor_param_count":{PREDICTOR_PARAM_COUNT},"pred_window":120,
+                "batch_choices":[1,2,4,8,16,32],"predictor_smape":0.06,
+                "artifacts":{{"policy_fwd.hlo.txt":{{"bytes":100,"sha256":"x"}}}}}}"#
+        )
+    }
+
+    #[test]
+    fn parse_and_validate_good_manifest() {
+        let m = Manifest::parse(&manifest_json()).unwrap();
+        m.validate().unwrap();
+        assert_eq!(m.artifact_bytes.len(), 1);
+        assert!((m.predictor_smape - 0.06).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_catches_drift() {
+        let bad = manifest_json().replace("\"state_dim\":86", "\"state_dim\":90");
+        let m = Manifest::parse(&bad).unwrap();
+        let err = m.validate().unwrap_err();
+        assert!(err.contains("state_dim"), "{err}");
+    }
+
+    #[test]
+    fn validate_catches_batch_choice_drift() {
+        let bad = manifest_json().replace("[1,2,4,8,16,32]", "[1,2,4,8,16,64]");
+        let m = Manifest::parse(&bad).unwrap();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn parse_rejects_missing_fields() {
+        assert!(Manifest::parse("{}").is_err());
+    }
+}

@@ -1,0 +1,231 @@
+//! Variant catalog + pipeline presets.
+//!
+//! The paper evaluates (a) three workload regimes on one pipeline (Fig. 4/5)
+//! and (b) four pipelines of growing complexity for decision time (Fig. 6:
+//! 2×2, 4×3, 6×4, 8×4 stages×variants). Real deployments would profile
+//! TensorRT/ONNX variants offline; here the catalog generates profiles along
+//! the same accuracy↔cost↔latency frontier (see DESIGN.md §2 substitutions).
+
+use crate::pipeline::task::TaskSpec;
+use crate::pipeline::variant::VariantProfile;
+use crate::pipeline::PipelineSpec;
+
+/// A stage archetype describes the frontier endpoints between the lightest
+/// and the heaviest variant of that kind of model.
+#[derive(Clone, Copy, Debug)]
+pub struct Archetype {
+    pub kind: &'static str,
+    pub acc: (f64, f64),
+    pub cores: (f64, f64),
+    pub base_ms: (f64, f64),
+    pub per_item_ms: (f64, f64),
+}
+
+/// Archetypes loosely modelled on common edge-vision / IoT stages.
+///
+/// Per-item latencies are sized so that a single light replica saturates
+/// around 80–500 items/s and a single heavy replica around 25–250 items/s —
+/// the regime where the paper's steady-high load (~120 req/s) genuinely
+/// forces replica scaling on a 30-core cluster (Fig. 4c: "the high volume of
+/// task requests leads to increased costs for all algorithms").
+pub const ARCHETYPES: [Archetype; 6] = [
+    Archetype { kind: "preprocess", acc: (0.90, 0.99), cores: (0.5, 2.0), base_ms: (4.0, 12.0), per_item_ms: (8.0, 15.0) },
+    Archetype { kind: "detect", acc: (0.55, 0.92), cores: (1.0, 6.0), base_ms: (15.0, 80.0), per_item_ms: (30.0, 60.0) },
+    Archetype { kind: "classify", acc: (0.65, 0.95), cores: (0.5, 4.0), base_ms: (8.0, 50.0), per_item_ms: (20.0, 40.0) },
+    Archetype { kind: "track", acc: (0.70, 0.93), cores: (0.5, 3.0), base_ms: (6.0, 30.0), per_item_ms: (10.0, 25.0) },
+    Archetype { kind: "recognize", acc: (0.60, 0.94), cores: (1.0, 5.0), base_ms: (12.0, 60.0), per_item_ms: (25.0, 50.0) },
+    Archetype { kind: "postprocess", acc: (0.92, 0.995), cores: (0.25, 1.5), base_ms: (2.0, 8.0), per_item_ms: (4.0, 8.0) },
+];
+
+fn geo(lo: f64, hi: f64, frac: f64) -> f64 {
+    lo * (hi / lo).powf(frac)
+}
+
+/// Build `n` variants of an archetype spanning its frontier (variant 0 is the
+/// lightest/cheapest/least accurate — matching the greedy baseline's bias).
+pub fn make_variants(arch: &Archetype, n: usize) -> Vec<VariantProfile> {
+    assert!(n >= 1);
+    (0..n)
+        .map(|i| {
+            let frac = if n == 1 { 0.0 } else { i as f64 / (n - 1) as f64 };
+            VariantProfile::new(
+                format!("{}-v{}", arch.kind, i),
+                // accuracy saturates (diminishing returns at the heavy end)
+                arch.acc.0 + (arch.acc.1 - arch.acc.0) * frac.powf(0.7),
+                geo(arch.cores.0, arch.cores.1, frac),
+                geo(arch.base_ms.0, arch.base_ms.1, frac),
+                geo(arch.per_item_ms.0, arch.per_item_ms.1, frac),
+            )
+        })
+        .collect()
+}
+
+/// Build a pipeline of `stages` tasks × `variants` variants each, cycling
+/// through the archetypes.
+pub fn generated(name: &str, stages: usize, variants: usize) -> PipelineSpec {
+    let tasks = (0..stages)
+        .map(|i| {
+            let arch = &ARCHETYPES[i % ARCHETYPES.len()];
+            TaskSpec::new(format!("{}-{}", arch.kind, i), make_variants(arch, variants))
+        })
+        .collect();
+    PipelineSpec::new(name, tasks)
+}
+
+/// The paper's four decision-time pipelines (Fig. 6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Preset {
+    /// 2 stages × 2 variants
+    P1,
+    /// 4 stages × 3 variants
+    P2,
+    /// 6 stages × 4 variants
+    P3,
+    /// 8 stages × 4 variants
+    P4,
+}
+
+impl Preset {
+    pub fn dims(self) -> (usize, usize) {
+        match self {
+            Preset::P1 => (2, 2),
+            Preset::P2 => (4, 3),
+            Preset::P3 => (6, 4),
+            Preset::P4 => (8, 4),
+        }
+    }
+
+    pub fn all() -> [Preset; 4] {
+        [Preset::P1, Preset::P2, Preset::P3, Preset::P4]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Preset::P1 => "P1",
+            Preset::P2 => "P2",
+            Preset::P3 => "P3",
+            Preset::P4 => "P4",
+        }
+    }
+}
+
+/// Named pipeline with descriptive metadata.
+pub struct NamedPipeline {
+    pub spec: PipelineSpec,
+    pub description: &'static str,
+}
+
+pub fn preset(p: Preset) -> NamedPipeline {
+    let (s, v) = p.dims();
+    NamedPipeline {
+        spec: generated(p.name(), s, v),
+        description: "paper Fig. 6 complexity preset",
+    }
+}
+
+/// 4-stage edge video-analytics pipeline (the paper's motivating scenario).
+pub fn video_analytics() -> NamedPipeline {
+    let tasks = vec![
+        TaskSpec::new("decode", make_variants(&ARCHETYPES[0], 2)),
+        TaskSpec::new("detect", make_variants(&ARCHETYPES[1], 4)),
+        TaskSpec::new("classify", make_variants(&ARCHETYPES[2], 4)),
+        TaskSpec::new("track", make_variants(&ARCHETYPES[3], 3)),
+    ];
+    NamedPipeline {
+        spec: PipelineSpec::new("video-analytics", tasks),
+        description: "decode → detect → classify → track",
+    }
+}
+
+/// 3-stage IoT anomaly-detection pipeline.
+pub fn iot_anomaly() -> NamedPipeline {
+    let tasks = vec![
+        TaskSpec::new("ingest", make_variants(&ARCHETYPES[0], 2)),
+        TaskSpec::new("featurize", make_variants(&ARCHETYPES[2], 3)),
+        TaskSpec::new("detect-anomaly", make_variants(&ARCHETYPES[4], 4)),
+    ];
+    NamedPipeline {
+        spec: PipelineSpec::new("iot-anomaly", tasks),
+        description: "ingest → featurize → detect-anomaly",
+    }
+}
+
+/// Look up any pipeline by name (CLI/config entry point).
+pub fn by_name(name: &str) -> Option<NamedPipeline> {
+    match name {
+        "P1" => Some(preset(Preset::P1)),
+        "P2" => Some(preset(Preset::P2)),
+        "P3" => Some(preset(Preset::P3)),
+        "P4" => Some(preset(Preset::P4)),
+        "video-analytics" => Some(video_analytics()),
+        "iot-anomaly" => Some(iot_anomaly()),
+        _ => None,
+    }
+}
+
+pub fn available() -> &'static [&'static str] {
+    &["P1", "P2", "P3", "P4", "video-analytics", "iot-anomaly"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variants_span_monotone_frontier() {
+        for arch in &ARCHETYPES {
+            let vs = make_variants(arch, 4);
+            for w in vs.windows(2) {
+                assert!(w[1].accuracy > w[0].accuracy, "{}", arch.kind);
+                assert!(w[1].cores > w[0].cores);
+                assert!(w[1].base_latency_ms > w[0].base_latency_ms);
+            }
+        }
+    }
+
+    #[test]
+    fn single_variant_is_lightest() {
+        let vs = make_variants(&ARCHETYPES[1], 1);
+        assert_eq!(vs.len(), 1);
+        assert!((vs[0].accuracy - ARCHETYPES[1].acc.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn presets_have_paper_dims() {
+        for p in Preset::all() {
+            let (s, v) = p.dims();
+            let np = preset(p);
+            assert_eq!(np.spec.tasks.len(), s);
+            assert!(np.spec.tasks.iter().all(|t| t.n_variants() == v));
+        }
+        assert_eq!(Preset::P4.dims(), (8, 4));
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for name in available() {
+            assert!(by_name(name).is_some(), "{name}");
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn named_pipelines_validate() {
+        for np in [video_analytics(), iot_anomaly()] {
+            for t in &np.spec.tasks {
+                for v in &t.variants {
+                    v.validate().unwrap();
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_profiles_valid() {
+        for arch in &ARCHETYPES {
+            for v in make_variants(arch, 4) {
+                v.validate().unwrap();
+            }
+        }
+    }
+}

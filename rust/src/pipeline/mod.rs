@@ -1,0 +1,109 @@
+//! Multi-model inference pipeline substrate: model-variant profiles, task
+//! configuration (z, f, b), the analytic performance/QoS model (Eq. 1–4, 7),
+//! and the pipeline catalog used across experiments.
+
+pub mod catalog;
+pub mod perf;
+pub mod task;
+pub mod variant;
+
+pub use perf::{pipeline_metrics, PipelineMetrics, QosWeights, StageMetrics};
+pub use task::{TaskConfig, TaskSpec, BATCH_CHOICES, F_MAX};
+pub use variant::VariantProfile;
+
+/// Static description of a linear multi-model inference pipeline.
+#[derive(Clone, Debug)]
+pub struct PipelineSpec {
+    pub name: String,
+    pub tasks: Vec<TaskSpec>,
+}
+
+impl PipelineSpec {
+    pub fn new(name: impl Into<String>, tasks: Vec<TaskSpec>) -> Self {
+        let p = Self { name: name.into(), tasks };
+        assert!(!p.tasks.is_empty(), "pipeline {} has no tasks", p.name);
+        p
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Size of the per-stage configuration space Π|Z|·F_max·|B| (log-scale
+    /// proxy for the solver cost that Fig. 6 measures).
+    pub fn config_space(&self) -> f64 {
+        self.tasks
+            .iter()
+            .map(|t| (t.n_variants() * F_MAX * BATCH_CHOICES.len()) as f64)
+            .product()
+    }
+
+    /// Validate a full pipeline configuration against the spec and the box
+    /// constraints of Eq. 4 (resource capacity is checked by the cluster).
+    pub fn validate_config(&self, cfgs: &[TaskConfig]) -> Result<(), String> {
+        if cfgs.len() != self.tasks.len() {
+            return Err(format!(
+                "pipeline {}: config has {} stages, spec has {}",
+                self.name,
+                cfgs.len(),
+                self.tasks.len()
+            ));
+        }
+        for (t, c) in self.tasks.iter().zip(cfgs) {
+            c.validate(t)?;
+        }
+        Ok(())
+    }
+
+    /// Total CPU cores a configuration requests (Σ w_n(z_i)·f_n of Eq. 4).
+    pub fn total_cores(&self, cfgs: &[TaskConfig]) -> f64 {
+        self.tasks.iter().zip(cfgs).map(|(t, c)| c.cores(t)).sum()
+    }
+
+    /// Cheapest valid configuration (variant 0, 1 replica, batch 1).
+    pub fn default_config(&self) -> Vec<TaskConfig> {
+        vec![TaskConfig::default(); self.tasks.len()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_space_grows_with_complexity() {
+        let sizes: Vec<f64> = catalog::Preset::all()
+            .iter()
+            .map(|p| catalog::preset(*p).spec.config_space())
+            .collect();
+        for w in sizes.windows(2) {
+            assert!(w[1] > w[0], "{sizes:?}");
+        }
+    }
+
+    #[test]
+    fn validate_config_checks_length_and_items() {
+        let spec = catalog::preset(catalog::Preset::P1).spec;
+        assert!(spec.validate_config(&spec.default_config()).is_ok());
+        assert!(spec.validate_config(&[]).is_err());
+        let mut bad = spec.default_config();
+        bad[0].variant = 99;
+        assert!(spec.validate_config(&bad).is_err());
+    }
+
+    #[test]
+    fn total_cores_matches_manual_sum() {
+        let spec = catalog::preset(catalog::Preset::P1).spec;
+        let mut cfg = spec.default_config();
+        cfg[0].replicas = 3;
+        let want: f64 = 3.0 * spec.tasks[0].variants[0].cores
+            + spec.tasks[1].variants[0].cores;
+        assert!((spec.total_cores(&cfg) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_pipeline_panics() {
+        PipelineSpec::new("x", vec![]);
+    }
+}

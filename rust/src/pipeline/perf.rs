@@ -1,0 +1,333 @@
+//! Analytic performance model of a linear multi-model inference pipeline —
+//! the quantities of the paper's §III-B: accuracy V (Eq. 1), cost C (Eq. 2),
+//! QoS Q (Eq. 3), objective (Eq. 4) and reward (Eq. 7).
+//!
+//! Each stage is a centralized batch queue in front of `f` replicas of the
+//! chosen variant (the paper's system design: centralized queue per stage,
+//! Istio-balanced replicas). Per-stage latency combines
+//!   batch fill time  +  congestion wait  +  batch service latency,
+//! with congestion modelled as an M/D/c-style term that blows up (capped) as
+//! utilization approaches 1 — this is what makes under-provisioning hurt QoS
+//! and over-provisioning hurt cost, the trade-off the whole paper is about.
+
+use crate::pipeline::task::{TaskConfig, TaskSpec};
+use crate::pipeline::PipelineSpec;
+
+/// Latency cap (ms) a single stage can contribute while saturated; keeps the
+/// QoS signal finite when a stage is overloaded (queues would grow unbounded).
+pub const MAX_STAGE_WAIT_MS: f64 = 2_000.0;
+
+/// Maximum time (ms) the stage queue waits to fill a batch before dispatching
+/// a partial batch (standard serving-system batching timeout).
+pub const BATCH_TIMEOUT_MS: f64 = 250.0;
+
+/// Per-stage instantaneous metrics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageMetrics {
+    /// offered load at this stage, items/s
+    pub arrival: f64,
+    /// saturated capacity with the ready replicas, items/s
+    pub capacity: f64,
+    /// served throughput = min(arrival, capacity)
+    pub served: f64,
+    /// utilization ρ = arrival / capacity (∞-safe)
+    pub utilization: f64,
+    /// end-to-end stage latency (fill + wait + service), ms
+    pub latency_ms: f64,
+    /// accuracy of the selected variant
+    pub accuracy: f64,
+    /// CPU cores consumed (replicas × cores)
+    pub cores: f64,
+}
+
+/// Stage model: selected variant + config + how many replicas are actually
+/// ready (container startup is not instantaneous — see cluster::api).
+pub fn stage_metrics(
+    spec: &TaskSpec,
+    cfg: &TaskConfig,
+    ready_replicas: usize,
+    arrival: f64,
+) -> StageMetrics {
+    let prof = &spec.variants[cfg.variant];
+    let batch = cfg.batch();
+    let service_ms = prof.batch_latency_ms(batch);
+    let capacity = ready_replicas as f64 * prof.replica_throughput(batch);
+
+    let utilization = if capacity > 0.0 { arrival / capacity } else { f64::INFINITY };
+    let served = arrival.min(capacity);
+
+    // Batch fill: expected wait for a request until its batch dispatches.
+    // At arrival rate λ the queue fills b items in b/λ seconds; a request
+    // waits half of that on average, capped by the dispatch timeout.
+    let fill_ms = if arrival > 0.0 {
+        (1000.0 * batch as f64 / arrival / 2.0).min(BATCH_TIMEOUT_MS)
+    } else {
+        BATCH_TIMEOUT_MS
+    };
+
+    // Congestion: M/D/c-flavoured wait ρ/(2(1−ρ))·service, capped when the
+    // stage saturates (ρ → 1) or is overloaded (ρ > 1).
+    let queue_ms = if utilization.is_infinite() {
+        MAX_STAGE_WAIT_MS
+    } else if utilization < 1.0 {
+        (utilization / (2.0 * (1.0 - utilization)) * service_ms).min(MAX_STAGE_WAIT_MS)
+    } else {
+        MAX_STAGE_WAIT_MS
+    };
+
+    StageMetrics {
+        arrival,
+        capacity,
+        served,
+        utilization,
+        latency_ms: fill_ms + queue_ms + service_ms,
+        accuracy: prof.accuracy,
+        cores: cfg.replicas as f64 * prof.cores,
+    }
+}
+
+/// Whole-pipeline metrics (paper §III-B definitions).
+#[derive(Clone, Debug, Default)]
+pub struct PipelineMetrics {
+    pub stages: Vec<StageMetrics>,
+    /// V: Σ v_n(z_i) (Eq. 1)
+    pub accuracy: f64,
+    /// C: Σ f_n·c_n(z_i) (Eq. 2) — *configured* cost, billed even while
+    /// containers are still starting
+    pub cost: f64,
+    /// T: pipeline throughput = min stage served (paper: min over tasks)
+    pub throughput: f64,
+    /// L: Σ stage latency, ms
+    pub latency_ms: f64,
+    /// E: excess load = demand − bottleneck capacity (Eq. 3's e), items/s;
+    /// positive = unmet demand, negative = spare capacity
+    pub excess: f64,
+    /// max batch size across stages (B in Eq. 7)
+    pub max_batch: usize,
+}
+
+/// Evaluate the pipeline under offered load `demand` (items/s).
+///
+/// `ready` gives the number of ready replicas per stage (≤ configured). The
+/// load entering stage i is the served throughput of stage i−1 (a lossy
+/// bottleneck upstream shields downstream stages).
+pub fn pipeline_metrics(
+    spec: &PipelineSpec,
+    cfgs: &[TaskConfig],
+    ready: &[usize],
+    demand: f64,
+) -> PipelineMetrics {
+    assert_eq!(spec.tasks.len(), cfgs.len());
+    assert_eq!(spec.tasks.len(), ready.len());
+    let mut m = PipelineMetrics::default();
+    let mut arrival = demand;
+    let mut min_capacity = f64::INFINITY;
+    for ((task, cfg), &r) in spec.tasks.iter().zip(cfgs).zip(ready) {
+        let s = stage_metrics(task, cfg, r, arrival);
+        m.accuracy += s.accuracy;
+        m.cost += s.cores;
+        m.latency_ms += s.latency_ms;
+        min_capacity = min_capacity.min(s.capacity);
+        m.max_batch = m.max_batch.max(cfg.batch());
+        arrival = s.served;
+        m.stages.push(s);
+    }
+    m.throughput = arrival; // what actually leaves the last stage
+    // E (Eq. 3): demand minus bottleneck capacity. Positive = unmet demand,
+    // negative = spare capacity.
+    m.excess = demand - min_capacity;
+    m
+}
+
+/// QoS weighting parameters (Eq. 3, Eq. 4, Eq. 7). The raw T/L/E terms live
+/// on different scales, so each is normalized before weighting (the paper
+/// tunes weights on absolute values; normalization just relocates them).
+#[derive(Clone, Copy, Debug)]
+pub struct QosWeights {
+    pub alpha: f64,     // accuracy weight
+    pub beta: f64,      // throughput weight
+    pub gamma: f64,     // excess-load (unmet demand) penalty
+    pub delta: f64,     // spare-capacity penalty (e < 0 branch)
+    pub lambda: f64,    // cost weight in the objective (Eq. 4)
+    pub beta_cost: f64, // cost weight in the reward (Eq. 7's β)
+    pub gamma_batch: f64, // batch penalty in the reward (Eq. 7's γ)
+    pub throughput_scale: f64,
+    pub latency_scale_ms: f64,
+    pub excess_scale: f64,
+    pub cost_scale: f64,
+}
+
+impl Default for QosWeights {
+    fn default() -> Self {
+        Self {
+            alpha: 1.0,
+            beta: 1.0,
+            gamma: 2.0,
+            delta: 0.15,
+            lambda: 1.0,
+            beta_cost: 1.5,
+            gamma_batch: 0.3,
+            throughput_scale: 100.0,
+            latency_scale_ms: 1_000.0,
+            excess_scale: 100.0,
+            cost_scale: 30.0,
+        }
+    }
+}
+
+impl QosWeights {
+    /// Q of Eq. 3.
+    pub fn qos(&self, m: &PipelineMetrics) -> f64 {
+        let t = m.throughput / self.throughput_scale;
+        let l = m.latency_ms / self.latency_scale_ms;
+        let e = m.excess / self.excess_scale;
+        let base = self.alpha * m.accuracy + self.beta * t - l;
+        if m.excess >= 0.0 {
+            base - self.gamma * e
+        } else {
+            base - self.delta * (-e)
+        }
+    }
+
+    /// Normalized cost term used by objective/reward.
+    pub fn cost_term(&self, m: &PipelineMetrics) -> f64 {
+        m.cost / self.cost_scale
+    }
+
+    /// Eq. 4 objective: Q − λ·C.
+    pub fn objective(&self, m: &PipelineMetrics) -> f64 {
+        self.qos(m) - self.lambda * self.cost_term(m)
+    }
+
+    /// Eq. 7 reward: Q − β·C − γ·B (B = max batch across stages, normalized
+    /// by the largest batch choice).
+    pub fn reward(&self, m: &PipelineMetrics) -> f64 {
+        let b = m.max_batch as f64 / *crate::pipeline::task::BATCH_CHOICES.last().unwrap() as f64;
+        self.qos(m) - self.beta_cost * self.cost_term(m) - self.gamma_batch * b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::catalog;
+    use crate::pipeline::variant::VariantProfile;
+    use crate::pipeline::PipelineSpec;
+    use crate::pipeline::task::TaskSpec;
+
+    fn one_stage() -> PipelineSpec {
+        PipelineSpec::new(
+            "t",
+            vec![TaskSpec::new(
+                "s0",
+                vec![VariantProfile::new("m", 0.8, 2.0, 20.0, 5.0)],
+            )],
+        )
+    }
+
+    #[test]
+    fn stage_capacity_scales_with_replicas() {
+        let p = one_stage();
+        let cfg = TaskConfig::new(0, 4, 0);
+        let s1 = stage_metrics(&p.tasks[0], &cfg, 1, 10.0);
+        let s4 = stage_metrics(&p.tasks[0], &cfg, 4, 10.0);
+        assert!((s4.capacity - 4.0 * s1.capacity).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_ready_replicas_is_overloaded() {
+        let p = one_stage();
+        let s = stage_metrics(&p.tasks[0], &TaskConfig::new(0, 2, 0), 0, 10.0);
+        assert_eq!(s.capacity, 0.0);
+        assert_eq!(s.served, 0.0);
+        assert!(s.utilization.is_infinite());
+        assert!(s.latency_ms >= MAX_STAGE_WAIT_MS);
+    }
+
+    #[test]
+    fn latency_grows_with_utilization() {
+        let p = one_stage();
+        let cfg = TaskConfig::new(0, 1, 0); // capacity 40/s
+        let lo = stage_metrics(&p.tasks[0], &cfg, 1, 5.0);
+        let hi = stage_metrics(&p.tasks[0], &cfg, 1, 38.0);
+        assert!(hi.latency_ms > lo.latency_ms, "{} vs {}", hi.latency_ms, lo.latency_ms);
+    }
+
+    #[test]
+    fn overload_latency_capped() {
+        let p = one_stage();
+        let cfg = TaskConfig::new(0, 1, 0);
+        let s = stage_metrics(&p.tasks[0], &cfg, 1, 400.0);
+        assert!(s.latency_ms <= MAX_STAGE_WAIT_MS + BATCH_TIMEOUT_MS + 100.0);
+        assert!((s.served - s.capacity).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pipeline_throughput_is_bottleneck() {
+        // two stages; stage 1 much slower
+        let spec = PipelineSpec::new(
+            "p",
+            vec![
+                TaskSpec::new("fast", vec![VariantProfile::new("f", 0.9, 1.0, 5.0, 1.0)]),
+                TaskSpec::new("slow", vec![VariantProfile::new("s", 0.9, 1.0, 100.0, 20.0)]),
+            ],
+        );
+        let cfgs = vec![TaskConfig::new(0, 1, 0); 2];
+        let m = pipeline_metrics(&spec, &cfgs, &[1, 1], 50.0);
+        let slow_cap = spec.tasks[1].variants[0].replica_throughput(1);
+        assert!((m.throughput - slow_cap).abs() < 1e-9);
+        assert!(m.excess > 0.0); // demand 50 > bottleneck ~8.3
+    }
+
+    #[test]
+    fn pipeline_accuracy_and_cost_sum() {
+        let spec = catalog::preset(catalog::Preset::P2).spec;
+        let cfgs: Vec<TaskConfig> = spec.tasks.iter().map(|_| TaskConfig::new(0, 2, 1)).collect();
+        let ready: Vec<usize> = cfgs.iter().map(|c| c.replicas).collect();
+        let m = pipeline_metrics(&spec, &cfgs, &ready, 10.0);
+        let want_acc: f64 = spec.tasks.iter().map(|t| t.variants[0].accuracy).sum();
+        let want_cost: f64 = spec.tasks.iter().map(|t| 2.0 * t.variants[0].cores).sum();
+        assert!((m.accuracy - want_acc).abs() < 1e-9);
+        assert!((m.cost - want_cost).abs() < 1e-9);
+        assert_eq!(m.stages.len(), spec.tasks.len());
+    }
+
+    #[test]
+    fn excess_sign_convention() {
+        let p = one_stage();
+        let cfg = TaskConfig::new(0, 8, 5); // huge capacity
+        let m = pipeline_metrics(&p, &[cfg], &[8], 10.0);
+        assert!(m.excess < 0.0, "spare capacity must be negative excess");
+        let m2 = pipeline_metrics(&p, &[TaskConfig::new(0, 1, 0)], &[1], 500.0);
+        assert!(m2.excess > 0.0, "unmet demand must be positive excess");
+    }
+
+    #[test]
+    fn qos_penalizes_overload_more_than_spare() {
+        let w = QosWeights::default();
+        let p = one_stage();
+        let over = pipeline_metrics(&p, &[TaskConfig::new(0, 1, 0)], &[1], 300.0);
+        let spare = pipeline_metrics(&p, &[TaskConfig::new(0, 8, 5)], &[8], 10.0);
+        assert!(w.qos(&spare) > w.qos(&over));
+    }
+
+    #[test]
+    fn objective_decreases_with_cost() {
+        let w = QosWeights::default();
+        let p = one_stage();
+        let cheap = pipeline_metrics(&p, &[TaskConfig::new(0, 2, 2)], &[2], 10.0);
+        let pricey = pipeline_metrics(&p, &[TaskConfig::new(0, 8, 2)], &[8], 10.0);
+        // same QoS regime (both have spare capacity) → extra replicas cost
+        assert!(w.objective(&cheap) > w.objective(&pricey));
+    }
+
+    #[test]
+    fn reward_penalizes_large_batches() {
+        let w = QosWeights::default();
+        let p = one_stage();
+        let small_b = pipeline_metrics(&p, &[TaskConfig::new(0, 4, 0)], &[4], 10.0);
+        let big_b = pipeline_metrics(&p, &[TaskConfig::new(0, 4, 5)], &[4], 10.0);
+        // reward includes -γ·B; with low demand the bigger batch gains little
+        assert!(w.reward(&small_b) > w.reward(&big_b));
+    }
+}

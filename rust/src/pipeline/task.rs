@@ -1,0 +1,140 @@
+//! Pipeline tasks (paper `n ∈ N`) and their runtime configuration
+//! `(z_n, f_n, b_n)` — the per-stage action components of Eq. 6.
+
+use crate::pipeline::variant::VariantProfile;
+
+/// Batch-size choices exposed to the agents. Must match
+/// `python/compile/params.py::BATCH_CHOICES` (cross-checked against the
+/// artifact manifest at runtime).
+pub const BATCH_CHOICES: [usize; 6] = [1, 2, 4, 8, 16, 32];
+
+/// Maximum replication factor F_max (Eq. 4 constraint).
+pub const F_MAX: usize = 8;
+
+/// Static description of one pipeline task: its name and variant catalog.
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    pub name: String,
+    pub variants: Vec<VariantProfile>,
+}
+
+impl TaskSpec {
+    pub fn new(name: impl Into<String>, variants: Vec<VariantProfile>) -> Self {
+        let t = Self { name: name.into(), variants };
+        assert!(!t.variants.is_empty(), "task {} has no variants", t.name);
+        t
+    }
+
+    pub fn n_variants(&self) -> usize {
+        self.variants.len()
+    }
+}
+
+/// Runtime configuration of one task: the (z, f, b) triple of Eq. 6.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TaskConfig {
+    /// model-variant index z into `TaskSpec::variants`
+    pub variant: usize,
+    /// replication factor f (1..=F_MAX)
+    pub replicas: usize,
+    /// index into BATCH_CHOICES
+    pub batch_idx: usize,
+}
+
+impl TaskConfig {
+    pub fn new(variant: usize, replicas: usize, batch_idx: usize) -> Self {
+        Self { variant, replicas, batch_idx }
+    }
+
+    pub fn batch(&self) -> usize {
+        BATCH_CHOICES[self.batch_idx]
+    }
+
+    /// Validity against a task spec and the Eq. 4 box constraints.
+    pub fn validate(&self, spec: &TaskSpec) -> Result<(), String> {
+        if self.variant >= spec.n_variants() {
+            return Err(format!(
+                "task {}: variant {} out of range (|Z|={})",
+                spec.name,
+                self.variant,
+                spec.n_variants()
+            ));
+        }
+        if self.replicas == 0 || self.replicas > F_MAX {
+            return Err(format!(
+                "task {}: replicas {} outside 1..={F_MAX}",
+                spec.name, self.replicas
+            ));
+        }
+        if self.batch_idx >= BATCH_CHOICES.len() {
+            return Err(format!(
+                "task {}: batch_idx {} out of range",
+                spec.name, self.batch_idx
+            ));
+        }
+        Ok(())
+    }
+
+    /// Per-stage CPU cost f_n × c_n(z_i) (Eq. 2 summand).
+    pub fn cores(&self, spec: &TaskSpec) -> f64 {
+        self.replicas as f64 * spec.variants[self.variant].cores
+    }
+}
+
+impl Default for TaskConfig {
+    /// Cheapest safe default: first variant, one replica, batch 1.
+    fn default() -> Self {
+        Self { variant: 0, replicas: 1, batch_idx: 0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> TaskSpec {
+        TaskSpec::new(
+            "det",
+            vec![
+                VariantProfile::new("s", 0.6, 1.0, 10.0, 2.0),
+                VariantProfile::new("l", 0.9, 4.0, 40.0, 8.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn batch_lookup() {
+        assert_eq!(TaskConfig::new(0, 1, 0).batch(), 1);
+        assert_eq!(TaskConfig::new(0, 1, 5).batch(), 32);
+    }
+
+    #[test]
+    fn validation() {
+        let s = spec();
+        assert!(TaskConfig::new(0, 1, 0).validate(&s).is_ok());
+        assert!(TaskConfig::new(2, 1, 0).validate(&s).is_err()); // bad variant
+        assert!(TaskConfig::new(0, 0, 0).validate(&s).is_err()); // zero replicas
+        assert!(TaskConfig::new(0, F_MAX + 1, 0).validate(&s).is_err());
+        assert!(TaskConfig::new(0, 1, 6).validate(&s).is_err()); // bad batch idx
+    }
+
+    #[test]
+    fn cores_cost() {
+        let s = spec();
+        assert_eq!(TaskConfig::new(1, 3, 0).cores(&s), 12.0);
+        assert_eq!(TaskConfig::new(0, 2, 0).cores(&s), 2.0);
+    }
+
+    #[test]
+    fn default_is_cheapest() {
+        let c = TaskConfig::default();
+        assert_eq!((c.variant, c.replicas, c.batch_idx), (0, 1, 0));
+        assert!(c.validate(&spec()).is_ok());
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_variants_panics() {
+        TaskSpec::new("x", vec![]);
+    }
+}

@@ -1,0 +1,117 @@
+//! Model-variant profiles (paper §III-A "Model Loading").
+//!
+//! Each pipeline task has a set of model variants (TensorRT/ONNX quantization
+//! levels, NAS candidates, ...). The decision algorithm only ever observes a
+//! variant through its profile: accuracy `v_n(z_i)`, per-replica CPU cost
+//! `c_n(z_i)` (Kubernetes cores, Eq. 2), and a batch-latency curve
+//! `l(b) = l0 + k·b` from which throughput is derived. The profiles span the
+//! same cheap/fast/inaccurate ↔ costly/slow/accurate frontier as the paper's
+//! real variants, which is all the algorithms can exploit.
+
+/// Profile of one model variant of one pipeline task.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VariantProfile {
+    /// human-readable name, e.g. "yolov5n-int8"
+    pub name: String,
+    /// offline-measured accuracy v_n(z_i) in [0, 1] (Eq. 1 summand)
+    pub accuracy: f64,
+    /// CPU cores requested per replica — c_n(z_i) and w_n(z_i) in Eq. 2/4
+    pub cores: f64,
+    /// fixed inference overhead per batch, milliseconds
+    pub base_latency_ms: f64,
+    /// marginal per-item latency, milliseconds/item
+    pub per_item_ms: f64,
+}
+
+impl VariantProfile {
+    pub fn new(
+        name: impl Into<String>,
+        accuracy: f64,
+        cores: f64,
+        base_latency_ms: f64,
+        per_item_ms: f64,
+    ) -> Self {
+        let v = Self {
+            name: name.into(),
+            accuracy,
+            cores,
+            base_latency_ms,
+            per_item_ms,
+        };
+        v.validate().expect("invalid variant profile");
+        v
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(0.0..=1.0).contains(&self.accuracy) {
+            return Err(format!("{}: accuracy {} outside [0,1]", self.name, self.accuracy));
+        }
+        if self.cores <= 0.0 {
+            return Err(format!("{}: cores must be positive", self.name));
+        }
+        if self.base_latency_ms <= 0.0 || self.per_item_ms < 0.0 {
+            return Err(format!("{}: latency parameters must be positive", self.name));
+        }
+        Ok(())
+    }
+
+    /// Service latency for one batch of size `b` (ms).
+    pub fn batch_latency_ms(&self, batch: usize) -> f64 {
+        self.base_latency_ms + self.per_item_ms * batch as f64
+    }
+
+    /// Saturated throughput of ONE replica at batch size `b`, items/s.
+    /// Larger batches amortize `base_latency_ms` → higher throughput,
+    /// at the price of higher per-request latency (the paper's batch-size
+    /// trade-off that Eq. 7 penalizes with γ·B).
+    pub fn replica_throughput(&self, batch: usize) -> f64 {
+        1000.0 * batch as f64 / self.batch_latency_ms(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v() -> VariantProfile {
+        VariantProfile::new("m", 0.8, 2.0, 20.0, 5.0)
+    }
+
+    #[test]
+    fn batch_latency_linear() {
+        let p = v();
+        assert_eq!(p.batch_latency_ms(1), 25.0);
+        assert_eq!(p.batch_latency_ms(8), 60.0);
+    }
+
+    #[test]
+    fn throughput_increases_with_batch() {
+        let p = v();
+        let t1 = p.replica_throughput(1);
+        let t8 = p.replica_throughput(8);
+        let t32 = p.replica_throughput(32);
+        assert!(t1 < t8 && t8 < t32, "{t1} {t8} {t32}");
+        // asymptote: 1000/per_item = 200 items/s
+        assert!(t32 < 1000.0 / p.per_item_ms);
+    }
+
+    #[test]
+    fn throughput_units() {
+        // batch 1: 1000 ms/s / 25 ms = 40 items/s
+        assert!((v().replica_throughput(1) - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validation_rejects_bad_profiles() {
+        assert!(VariantProfile { name: "x".into(), accuracy: 1.5, cores: 1.0, base_latency_ms: 1.0, per_item_ms: 0.1 }.validate().is_err());
+        assert!(VariantProfile { name: "x".into(), accuracy: 0.5, cores: 0.0, base_latency_ms: 1.0, per_item_ms: 0.1 }.validate().is_err());
+        assert!(VariantProfile { name: "x".into(), accuracy: 0.5, cores: 1.0, base_latency_ms: 0.0, per_item_ms: 0.1 }.validate().is_err());
+        assert!(v().validate().is_ok());
+    }
+
+    #[test]
+    #[should_panic]
+    fn constructor_panics_on_invalid() {
+        VariantProfile::new("bad", 2.0, 1.0, 1.0, 1.0);
+    }
+}

@@ -1,0 +1,175 @@
+//! Rollout buffer (the replay memory D of Algorithm 2): accumulates
+//! per-decision records, finalizes with GAE, and assembles the fixed-shape
+//! minibatches the AOT train step consumes.
+
+use crate::nn::spec::*;
+use crate::rl::gae::gae;
+use crate::util::prng::Pcg32;
+
+/// One decision's worth of training data.
+#[derive(Clone, Debug)]
+pub struct Transition {
+    pub state: Vec<f32>,       // STATE_DIM
+    pub action_idx: Vec<usize>, // ACT_DIM
+    pub logp: f32,
+    pub value: f32,
+    pub reward: f64,
+    pub head_mask: Vec<bool>, // LOGITS_DIM
+    pub task_mask: Vec<bool>, // MAX_TASKS
+}
+
+/// A finalized, fixed-shape minibatch (flat row-major buffers, ready to be
+/// staged as PJRT inputs of the policy_train program).
+#[derive(Clone, Debug)]
+pub struct Minibatch {
+    pub states: Vec<f32>,    // TRAIN_BATCH × STATE_DIM
+    pub actions: Vec<f32>,   // TRAIN_BATCH × ACT_DIM (f32 indices)
+    pub old_logp: Vec<f32>,  // TRAIN_BATCH
+    pub adv: Vec<f32>,       // TRAIN_BATCH
+    pub ret: Vec<f32>,       // TRAIN_BATCH
+    pub head_mask: Vec<f32>, // TRAIN_BATCH × LOGITS_DIM
+    pub task_mask: Vec<f32>, // TRAIN_BATCH × MAX_TASKS
+}
+
+#[derive(Default)]
+pub struct RolloutBuffer {
+    pub transitions: Vec<Transition>,
+}
+
+impl RolloutBuffer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, t: Transition) {
+        debug_assert_eq!(t.state.len(), STATE_DIM);
+        debug_assert_eq!(t.action_idx.len(), ACT_DIM);
+        self.transitions.push(t);
+    }
+
+    pub fn len(&self) -> usize {
+        self.transitions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.transitions.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.transitions.clear();
+    }
+
+    /// Compute GAE over the stored (ordered) trajectory.
+    pub fn advantages(&self, last_value: f64, gamma: f64, lam: f64) -> (Vec<f64>, Vec<f64>) {
+        let rewards: Vec<f64> = self.transitions.iter().map(|t| t.reward).collect();
+        let values: Vec<f64> = self.transitions.iter().map(|t| t.value as f64).collect();
+        gae(&rewards, &values, last_value, gamma, lam)
+    }
+
+    /// Assemble `n_batches` minibatches of TRAIN_BATCH rows each, sampling
+    /// uniformly with replacement (keeps every update the same size, as the
+    /// paper's complexity analysis assumes).
+    pub fn minibatches(
+        &self,
+        adv: &[f64],
+        ret: &[f64],
+        n_batches: usize,
+        rng: &mut Pcg32,
+    ) -> Vec<Minibatch> {
+        assert!(!self.is_empty(), "minibatches on empty buffer");
+        assert_eq!(adv.len(), self.len());
+        let mut out = Vec::with_capacity(n_batches);
+        for _ in 0..n_batches {
+            let mut mb = Minibatch {
+                states: Vec::with_capacity(TRAIN_BATCH * STATE_DIM),
+                actions: Vec::with_capacity(TRAIN_BATCH * ACT_DIM),
+                old_logp: Vec::with_capacity(TRAIN_BATCH),
+                adv: Vec::with_capacity(TRAIN_BATCH),
+                ret: Vec::with_capacity(TRAIN_BATCH),
+                head_mask: Vec::with_capacity(TRAIN_BATCH * LOGITS_DIM),
+                task_mask: Vec::with_capacity(TRAIN_BATCH * MAX_TASKS),
+            };
+            for _ in 0..TRAIN_BATCH {
+                let i = rng.below(self.len() as u32) as usize;
+                let t = &self.transitions[i];
+                mb.states.extend_from_slice(&t.state);
+                mb.actions.extend(t.action_idx.iter().map(|&a| a as f32));
+                mb.old_logp.push(t.logp);
+                mb.adv.push(adv[i] as f32);
+                mb.ret.push(ret[i] as f32);
+                mb.head_mask.extend(t.head_mask.iter().map(|&m| m as u8 as f32));
+                mb.task_mask.extend(t.task_mask.iter().map(|&m| m as u8 as f32));
+            }
+            out.push(mb);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_transition(seed: u64) -> Transition {
+        let mut rng = Pcg32::new(seed);
+        Transition {
+            state: (0..STATE_DIM).map(|_| rng.uniform() as f32).collect(),
+            action_idx: (0..ACT_DIM).map(|_| rng.below(4) as usize).collect(),
+            logp: -3.0,
+            value: rng.uniform() as f32,
+            reward: rng.uniform(),
+            head_mask: vec![true; LOGITS_DIM],
+            task_mask: vec![true; MAX_TASKS],
+        }
+    }
+
+    #[test]
+    fn push_and_advantages() {
+        let mut b = RolloutBuffer::new();
+        for i in 0..10 {
+            b.push(fake_transition(i));
+        }
+        assert_eq!(b.len(), 10);
+        let (adv, ret) = b.advantages(0.0, 0.99, 0.95);
+        assert_eq!(adv.len(), 10);
+        assert_eq!(ret.len(), 10);
+        assert!(adv.iter().all(|a| a.is_finite()));
+    }
+
+    #[test]
+    fn minibatch_shapes() {
+        let mut b = RolloutBuffer::new();
+        for i in 0..5 {
+            b.push(fake_transition(i));
+        }
+        let (adv, ret) = b.advantages(0.0, 0.99, 0.95);
+        let mut rng = Pcg32::new(0);
+        let mbs = b.minibatches(&adv, &ret, 3, &mut rng);
+        assert_eq!(mbs.len(), 3);
+        for mb in &mbs {
+            assert_eq!(mb.states.len(), TRAIN_BATCH * STATE_DIM);
+            assert_eq!(mb.actions.len(), TRAIN_BATCH * ACT_DIM);
+            assert_eq!(mb.old_logp.len(), TRAIN_BATCH);
+            assert_eq!(mb.head_mask.len(), TRAIN_BATCH * LOGITS_DIM);
+            assert_eq!(mb.task_mask.len(), TRAIN_BATCH * MAX_TASKS);
+            assert!(mb.actions.iter().all(|a| a.fract() == 0.0));
+            assert!(mb.head_mask.iter().all(|m| *m == 0.0 || *m == 1.0));
+        }
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut b = RolloutBuffer::new();
+        b.push(fake_transition(0));
+        b.clear();
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn minibatches_on_empty_buffer_panics() {
+        let b = RolloutBuffer::new();
+        let mut rng = Pcg32::new(0);
+        b.minibatches(&[], &[], 1, &mut rng);
+    }
+}

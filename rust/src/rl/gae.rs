@@ -1,0 +1,94 @@
+//! Generalized Advantage Estimation (the Â_t of Eq. 9–12).
+//!
+//! Computed rust-side over the rollout (the HLO train step consumes the
+//! finished advantages/returns): standard GAE(γ, λ) with bootstrap from the
+//! value of the state after the last step.
+
+/// Compute advantages and returns.
+///
+/// rewards[t], values[t] for t in 0..T; `last_value` bootstraps the value of
+/// the post-rollout state (0.0 for terminal episodes).
+pub fn gae(
+    rewards: &[f64],
+    values: &[f64],
+    last_value: f64,
+    gamma: f64,
+    lam: f64,
+) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(rewards.len(), values.len());
+    let t_max = rewards.len();
+    let mut adv = vec![0.0; t_max];
+    let mut acc = 0.0;
+    for t in (0..t_max).rev() {
+        let next_v = if t + 1 < t_max { values[t + 1] } else { last_value };
+        let delta = rewards[t] + gamma * next_v - values[t];
+        acc = delta + gamma * lam * acc;
+        adv[t] = acc;
+    }
+    let returns: Vec<f64> = adv.iter().zip(values).map(|(a, v)| a + v).collect();
+    (adv, returns)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_rewards_perfect_values_zero_adv() {
+        // V(s)=0 everywhere, r=0 → adv=0, ret=0
+        let (adv, ret) = gae(&[0.0; 5], &[0.0; 5], 0.0, 0.99, 0.95);
+        assert!(adv.iter().all(|a| a.abs() < 1e-12));
+        assert!(ret.iter().all(|r| r.abs() < 1e-12));
+    }
+
+    #[test]
+    fn single_step_matches_td_error() {
+        let (adv, ret) = gae(&[2.0], &[0.5], 1.0, 0.9, 0.95);
+        // delta = 2 + 0.9*1 - 0.5 = 2.4
+        assert!((adv[0] - 2.4).abs() < 1e-12);
+        assert!((ret[0] - 2.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lambda_zero_is_one_step_td() {
+        let rewards = [1.0, 1.0, 1.0];
+        let values = [0.2, 0.4, 0.6];
+        let (adv, _) = gae(&rewards, &values, 0.8, 0.9, 0.0);
+        for t in 0..3 {
+            let next_v = if t + 1 < 3 { values[t + 1] } else { 0.8 };
+            let delta = rewards[t] + 0.9 * next_v - values[t];
+            assert!((adv[t] - delta).abs() < 1e-12, "t={t}");
+        }
+    }
+
+    #[test]
+    fn lambda_one_is_discounted_monte_carlo() {
+        let rewards = [1.0, 2.0, 3.0];
+        let values = [0.0, 0.0, 0.0];
+        let gamma = 0.5;
+        let (adv, ret) = gae(&rewards, &values, 0.0, gamma, 1.0);
+        // returns: r0 + γ r1 + γ² r2 = 1 + 1 + 0.75 = 2.75
+        assert!((ret[0] - 2.75).abs() < 1e-12);
+        assert!((ret[2] - 3.0).abs() < 1e-12);
+        assert_eq!(adv, ret); // zero values
+    }
+
+    #[test]
+    fn constant_reward_constant_value_converges() {
+        // r=1, V=10 with γ=0.9: true V = 10 → adv ≈ 0
+        let rewards = vec![1.0; 200];
+        let values = vec![10.0; 200];
+        let (adv, _) = gae(&rewards, &values, 10.0, 0.9, 0.95);
+        assert!(adv[0].abs() < 1e-9, "adv[0]={}", adv[0]);
+    }
+
+    #[test]
+    fn good_action_gets_positive_advantage() {
+        // one big reward at t=1 not predicted by the value fn
+        let rewards = [0.0, 10.0, 0.0];
+        let values = [0.0, 0.0, 0.0];
+        let (adv, _) = gae(&rewards, &values, 0.0, 0.99, 0.95);
+        assert!(adv[1] > adv[2]);
+        assert!(adv[0] > 0.0, "credit flows backward");
+    }
+}

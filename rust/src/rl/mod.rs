@@ -1,0 +1,13 @@
+//! Reinforcement-learning machinery for the OPD algorithm: GAE, rollout
+//! buffer / replay memory, the PPO learner (AOT train step), and the
+//! Algorithm-2 trainer with expert guidance.
+
+pub mod buffer;
+pub mod gae;
+pub mod ppo;
+pub mod trainer;
+
+pub use buffer::{Minibatch, RolloutBuffer, Transition};
+pub use gae::gae;
+pub use ppo::{PpoLearner, UpdateMetrics};
+pub use trainer::{logp_of_action, EpisodeStats, Trainer, TrainerConfig, TrainingHistory};

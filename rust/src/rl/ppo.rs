@@ -1,0 +1,111 @@
+//! PPO learner: owns the flat parameter vector + Adam state and applies the
+//! AOT-compiled train step (Eq. 9–12 → grads → clip → Adam, all inside ONE
+//! HLO program — rust never differentiates anything).
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use crate::nn::spec::*;
+use crate::rl::buffer::Minibatch;
+use crate::runtime::{OpdRuntime, TensorView};
+
+/// Metrics of one update (order fixed by model.ppo_train_step).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UpdateMetrics {
+    pub pi_loss: f64,
+    pub v_loss: f64,
+    pub entropy: f64,
+    pub approx_kl: f64,
+    pub total_loss: f64,
+    pub grad_norm: f64,
+}
+
+impl UpdateMetrics {
+    fn from_vec(v: &[f32]) -> Result<Self> {
+        if v.len() != 6 {
+            return Err(anyhow!("train step returned {} metrics, want 6", v.len()));
+        }
+        Ok(Self {
+            pi_loss: v[0] as f64,
+            v_loss: v[1] as f64,
+            entropy: v[2] as f64,
+            approx_kl: v[3] as f64,
+            total_loss: v[4] as f64,
+            grad_norm: v[5] as f64,
+        })
+    }
+}
+
+pub struct PpoLearner {
+    rt: Rc<OpdRuntime>,
+    pub params: Vec<f32>,
+    adam_m: Vec<f32>,
+    adam_v: Vec<f32>,
+    pub step: u64,
+}
+
+impl PpoLearner {
+    pub fn new(rt: Rc<OpdRuntime>) -> Self {
+        let params = rt.policy_init.clone();
+        let n = params.len();
+        Self { rt, params, adam_m: vec![0.0; n], adam_v: vec![0.0; n], step: 0 }
+    }
+
+    pub fn with_params(rt: Rc<OpdRuntime>, params: Vec<f32>) -> Self {
+        assert_eq!(params.len(), POLICY_PARAM_COUNT);
+        let n = params.len();
+        Self { rt, params, adam_m: vec![0.0; n], adam_v: vec![0.0; n], step: 0 }
+    }
+
+    /// One minibatch update through the AOT train step.
+    pub fn update(&mut self, mb: &Minibatch) -> Result<UpdateMetrics> {
+        let program = self.rt.policy_train()?;
+        let step_in = [self.step as f32];
+        let d_states = [TRAIN_BATCH, STATE_DIM];
+        let d_actions = [TRAIN_BATCH, ACT_DIM];
+        let d_head = [TRAIN_BATCH, LOGITS_DIM];
+        let d_task = [TRAIN_BATCH, MAX_TASKS];
+        let inputs = [
+            TensorView::vec(&self.params),
+            TensorView::vec(&self.adam_m),
+            TensorView::vec(&self.adam_v),
+            TensorView::vec(&step_in),
+            TensorView::mat(&mb.states, &d_states),
+            TensorView::mat(&mb.actions, &d_actions),
+            TensorView::vec(&mb.old_logp),
+            TensorView::vec(&mb.adv),
+            TensorView::vec(&mb.ret),
+            TensorView::mat(&mb.head_mask, &d_head),
+            TensorView::mat(&mb.task_mask, &d_task),
+        ];
+        let mut outs = program.run(&self.rt.engine, &inputs)?;
+        if outs.len() != 4 {
+            return Err(anyhow!("train step returned {} outputs, want 4", outs.len()));
+        }
+        let metrics = UpdateMetrics::from_vec(&outs.pop().unwrap())?;
+        if !metrics.total_loss.is_finite() {
+            return Err(anyhow!("non-finite loss — diverged update rejected"));
+        }
+        self.adam_v = outs.pop().unwrap();
+        self.adam_m = outs.pop().unwrap();
+        self.params = outs.pop().unwrap();
+        self.step += 1;
+        Ok(metrics)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-backed learner tests live in rust/tests/train_integration.rs
+    // (they need `make artifacts`). Pure logic below.
+    use super::*;
+
+    #[test]
+    fn metrics_parse() {
+        let m = UpdateMetrics::from_vec(&[0.1, 0.2, 0.3, 0.4, 0.5, 0.6]).unwrap();
+        assert!((m.pi_loss - 0.1).abs() < 1e-7);
+        assert!((m.grad_norm - 0.6).abs() < 1e-7);
+        assert!(UpdateMetrics::from_vec(&[0.0; 5]).is_err());
+    }
+}

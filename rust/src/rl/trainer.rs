@@ -1,0 +1,291 @@
+//! The OPD training loop — Algorithm 2 of the paper: PPO with periodic
+//! expert-guided episodes (every f-th episode the IPA solver drives the
+//! actions; its decisions enter the replay memory with their log-probs under
+//! the *current* policy, bootstrapping the sparse early training signal).
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::agents::{Agent, IpaAgent, OpdAgent};
+use crate::nn::math::log_softmax_masked;
+use crate::nn::spec::*;
+use crate::rl::buffer::{RolloutBuffer, Transition};
+use crate::rl::ppo::{PpoLearner, UpdateMetrics};
+use crate::runtime::{write_params, OpdRuntime};
+use crate::sim::env::{build_masks, build_state, encode_action, Env};
+use crate::util::json::Json;
+use crate::util::prng::Pcg32;
+
+/// log π(a|s) of an arbitrary action-index vector under given logits/masks
+/// (used to score expert actions under the current policy).
+pub fn logp_of_action(
+    logits: &[f32],
+    head_mask: &[bool],
+    task_mask: &[bool],
+    idx: &[usize],
+) -> f32 {
+    let mut logp = 0.0f32;
+    for t in 0..MAX_TASKS {
+        if !task_mask[t] {
+            continue;
+        }
+        let base = t * HEAD_DIM;
+        let mut off = 0usize;
+        for (k, d) in HEAD_DIMS.iter().enumerate() {
+            let lp = log_softmax_masked(
+                &logits[base + off..base + off + d],
+                &head_mask[base + off..base + off + d],
+            );
+            logp += lp[idx[t * 3 + k].min(d - 1)];
+            off += d;
+        }
+    }
+    logp
+}
+
+/// Per-episode training statistics (the Fig. 7 series).
+#[derive(Clone, Debug)]
+pub struct EpisodeStats {
+    pub episode: usize,
+    pub expert: bool,
+    pub mean_reward: f64,
+    pub pi_loss: f64,
+    pub v_loss: f64,
+    pub entropy: f64,
+    pub approx_kl: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TrainingHistory {
+    pub episodes: Vec<EpisodeStats>,
+}
+
+impl TrainingHistory {
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.episodes
+                .iter()
+                .map(|e| {
+                    Json::obj()
+                        .set("episode", e.episode)
+                        .set("expert", e.expert)
+                        .set("mean_reward", e.mean_reward)
+                        .set("pi_loss", e.pi_loss)
+                        .set("v_loss", e.v_loss)
+                        .set("entropy", e.entropy)
+                        .set("approx_kl", e.approx_kl)
+                })
+                .collect(),
+        )
+    }
+
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_pretty())
+    }
+}
+
+/// Trainer hyper-parameters (the graph-side ones — lr, clip, coefficients —
+/// are baked into the AOT train step; see python/compile/params.py).
+#[derive(Clone, Copy, Debug)]
+pub struct TrainerConfig {
+    pub episodes: usize,
+    /// expert frequency f of Algorithm 2 (every f-th episode is expert-driven)
+    pub expert_freq: usize,
+    pub gamma: f64,
+    pub gae_lambda: f64,
+    /// PPO epochs per episode
+    pub epochs: usize,
+    /// minibatches per epoch (each TRAIN_BATCH rows, resampled)
+    pub minibatches: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        Self {
+            episodes: 60,
+            expert_freq: 4,
+            // configuration decisions have mostly-immediate effects (the
+            // reward lands within the same adaptation interval), so a short
+            // effective horizon (~10 decisions) keeps |returns| ≈ |rewards|
+            // and the value loss from starving the policy gradient under
+            // the shared global-norm clip
+            gamma: 0.9,
+            gae_lambda: 0.9,
+            epochs: 4,
+            minibatches: 2,
+            seed: 42,
+        }
+    }
+}
+
+/// Algorithm 2. `env_factory(episode_seed)` builds a fresh environment per
+/// episode ("Reset the environment and obtain the initial state s0").
+pub struct Trainer<F: FnMut(u64) -> Env> {
+    pub cfg: TrainerConfig,
+    pub learner: PpoLearner,
+    pub agent: OpdAgent,
+    expert: IpaAgent,
+    env_factory: F,
+    rng: Pcg32,
+    pub history: TrainingHistory,
+}
+
+impl<F: FnMut(u64) -> Env> Trainer<F> {
+    pub fn new(rt: Rc<OpdRuntime>, cfg: TrainerConfig, env_factory: F) -> Self {
+        let learner = PpoLearner::new(rt.clone());
+        let agent = OpdAgent::from_runtime(rt, cfg.seed);
+        Self {
+            cfg,
+            learner,
+            agent,
+            expert: IpaAgent::new(),
+            env_factory,
+            rng: Pcg32::stream(cfg.seed, 0x545249), // "TRI"
+            history: TrainingHistory::default(),
+        }
+    }
+
+    /// Run one episode, filling `buf`. Returns (mean reward, bootstrap value).
+    fn rollout(&mut self, episode: usize, expert_episode: bool, buf: &mut RolloutBuffer) -> (f64, f64) {
+        let mut env = (self.env_factory)(self.cfg.seed + episode as u64);
+        self.agent.set_params(self.learner.params.clone());
+        self.agent.greedy = false;
+        let mut reward_sum = 0.0f64;
+        let mut n = 0.0f64;
+        while !env.done() {
+            let (action, transition_proto) = {
+                let obs = env.observe();
+                if expert_episode {
+                    // expert action, scored under the current policy
+                    let action = self.expert.decide(&obs);
+                    let state = build_state(&obs);
+                    let masks = build_masks(obs.spec);
+                    let (logits, value) = self.agent.forward(&state);
+                    let idx = encode_action(obs.spec, &action);
+                    let logp = logp_of_action(&logits, &masks.head, &masks.task, &idx);
+                    (
+                        action,
+                        Transition {
+                            state,
+                            action_idx: idx,
+                            logp,
+                            value,
+                            reward: 0.0,
+                            head_mask: masks.head,
+                            task_mask: masks.task,
+                        },
+                    )
+                } else {
+                    let action = self.agent.decide(&obs);
+                    let rec = self.agent.last.clone();
+                    (
+                        action,
+                        Transition {
+                            state: rec.state,
+                            action_idx: rec.action_idx,
+                            logp: rec.logp,
+                            value: rec.value,
+                            reward: 0.0,
+                            head_mask: rec.head_mask,
+                            task_mask: rec.task_mask,
+                        },
+                    )
+                }
+            };
+            let step = env.step(&action);
+            let mut tr = transition_proto;
+            tr.reward = step.reward;
+            reward_sum += step.reward;
+            n += 1.0;
+            buf.push(tr);
+        }
+        // bootstrap value of the final state
+        let bootstrap = {
+            let obs = env.observe();
+            let state = build_state(&obs);
+            self.agent.forward(&state).1 as f64
+        };
+        (reward_sum / n.max(1.0), bootstrap)
+    }
+
+    /// Run the full training loop.
+    pub fn train(&mut self) -> Result<&TrainingHistory> {
+        for episode in 1..=self.cfg.episodes {
+            let expert_episode =
+                self.cfg.expert_freq > 0 && episode % self.cfg.expert_freq == 0;
+            let mut buf = RolloutBuffer::new();
+            let (mean_reward, bootstrap) = self.rollout(episode, expert_episode, &mut buf);
+            let (adv, ret) = buf.advantages(bootstrap, self.cfg.gamma, self.cfg.gae_lambda);
+
+            let mut last = UpdateMetrics::default();
+            'epochs: for _ in 0..self.cfg.epochs {
+                for mb in buf.minibatches(&adv, &ret, self.cfg.minibatches, &mut self.rng) {
+                    last = self.learner.update(&mb)?;
+                    // KL early stop (standard PPO guard): once the policy has
+                    // moved this far from the rollout policy, further epochs
+                    // on the same data destabilize training
+                    if last.approx_kl.abs() > 1.0 {
+                        break 'epochs;
+                    }
+                }
+            }
+            self.history.episodes.push(EpisodeStats {
+                episode,
+                expert: expert_episode,
+                mean_reward,
+                pi_loss: last.pi_loss,
+                v_loss: last.v_loss,
+                entropy: last.entropy,
+                approx_kl: last.approx_kl,
+            });
+            crate::log_info!(
+                "episode {episode:3} {} reward {mean_reward:8.3} piL {:7.4} vL {:8.4} H {:6.3} KL {:7.4}",
+                if expert_episode { "[expert]" } else { "        " },
+                last.pi_loss,
+                last.v_loss,
+                last.entropy,
+                last.approx_kl,
+            );
+        }
+        Ok(&self.history)
+    }
+
+    /// Save the trained parameters as a checkpoint blob.
+    pub fn save_checkpoint(&self, path: &str) -> Result<()> {
+        write_params(std::path::Path::new(path), &self.learner.params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logp_of_action_uniform_logits() {
+        let logits = vec![0.0f32; LOGITS_DIM];
+        let head_mask = vec![true; LOGITS_DIM];
+        let task_mask = vec![true; MAX_TASKS];
+        let idx = vec![0usize; ACT_DIM];
+        let lp = logp_of_action(&logits, &head_mask, &task_mask, &idx);
+        let want: f32 = -(MAX_TASKS as f32)
+            * ((MAX_VARIANTS as f32).ln() + (F_MAX as f32).ln() + (N_BATCH as f32).ln());
+        assert!((lp - want).abs() < 1e-4, "{lp} vs {want}");
+    }
+
+    #[test]
+    fn logp_of_action_masked_tasks_contribute_nothing() {
+        let logits = vec![1.0f32; LOGITS_DIM];
+        let head_mask = vec![true; LOGITS_DIM];
+        let mut task_mask = vec![false; MAX_TASKS];
+        task_mask[0] = true;
+        let idx = vec![0usize; ACT_DIM];
+        let lp1 = logp_of_action(&logits, &head_mask, &task_mask, &idx);
+        task_mask[1] = true;
+        let lp2 = logp_of_action(&logits, &head_mask, &task_mask, &idx);
+        assert!(lp2 < lp1, "more active tasks → more negative logp");
+    }
+
+    // End-to-end trainer tests (PJRT) live in rust/tests/train_integration.rs.
+}

@@ -1,0 +1,219 @@
+//! Artifact store: locates the AOT outputs (`artifacts/`), validates the
+//! manifest against this binary's compiled-in constants, loads flat f32
+//! parameter blobs, and exposes the compiled programs the coordinator uses.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::nn::spec::{self, Manifest};
+use crate::runtime::engine::{Engine, Program, TensorView};
+
+/// Resolve the artifacts directory: explicit arg > `OPD_ARTIFACTS` env >
+/// `./artifacts` relative to the working directory.
+pub fn resolve_dir(explicit: Option<&str>) -> PathBuf {
+    if let Some(d) = explicit {
+        return PathBuf::from(d);
+    }
+    if let Ok(d) = std::env::var("OPD_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    PathBuf::from("artifacts")
+}
+
+/// Read a flat f32 (little-endian) parameter blob, checking the length.
+pub fn read_params(path: &Path, expect_len: usize) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() != expect_len * 4 {
+        return Err(anyhow!(
+            "{}: {} bytes but expected {} f32 ({} bytes) — stale artifacts?",
+            path.display(),
+            bytes.len(),
+            expect_len,
+            expect_len * 4
+        ));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Write a flat f32 blob (checkpoints).
+pub fn write_params(path: &Path, params: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(params.len() * 4);
+    for p in params {
+        bytes.extend_from_slice(&p.to_le_bytes());
+    }
+    std::fs::write(path, bytes).with_context(|| format!("writing {}", path.display()))
+}
+
+/// Everything the coordinator needs from the AOT step, loaded once.
+pub struct OpdRuntime {
+    pub engine: Engine,
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+    pub policy_fwd: Program,
+    pub predictor_fwd: Program,
+    /// loaded lazily by the trainer (compiling the train step takes longer)
+    policy_train: std::cell::OnceCell<Program>,
+    /// device-pinned predictor weights (lazy; §Perf)
+    pinned_predictor: std::cell::OnceCell<Option<xla::PjRtBuffer>>,
+    pub policy_init: Vec<f32>,
+    pub predictor_weights: Vec<f32>,
+}
+
+impl OpdRuntime {
+    /// Load and validate everything under `dir`.
+    pub fn load(dir: Option<&str>) -> Result<OpdRuntime> {
+        let dir = resolve_dir(dir);
+        let manifest = Manifest::load(
+            dir.join("manifest.json").to_str().unwrap(),
+        )
+        .map_err(|e| anyhow!(e))?;
+        manifest.validate().map_err(|e| anyhow!(e))?;
+
+        // integrity: artifact sizes must match the manifest
+        for (name, bytes) in &manifest.artifact_bytes {
+            let p = dir.join(name);
+            let got = std::fs::metadata(&p)
+                .with_context(|| format!("missing artifact {}", p.display()))?
+                .len() as usize;
+            if got != *bytes {
+                return Err(anyhow!(
+                    "{}: {} bytes on disk, {} in manifest — rebuild artifacts",
+                    p.display(),
+                    got,
+                    bytes
+                ));
+            }
+        }
+
+        let engine = Engine::cpu()?;
+        let policy_fwd = engine.load_program(dir.join("policy_fwd.hlo.txt").to_str().unwrap())?;
+        let predictor_fwd =
+            engine.load_program(dir.join("predictor_fwd.hlo.txt").to_str().unwrap())?;
+        let policy_init =
+            read_params(&dir.join("policy_init.bin"), spec::POLICY_PARAM_COUNT)?;
+        let predictor_weights =
+            read_params(&dir.join("predictor_weights.bin"), spec::PREDICTOR_PARAM_COUNT)?;
+        Ok(OpdRuntime {
+            engine,
+            manifest,
+            dir,
+            policy_fwd,
+            predictor_fwd,
+            policy_train: std::cell::OnceCell::new(),
+            pinned_predictor: std::cell::OnceCell::new(),
+            policy_init,
+            predictor_weights,
+        })
+    }
+
+    /// The PPO train-step program (compiled on first use).
+    pub fn policy_train(&self) -> Result<&Program> {
+        if self.policy_train.get().is_none() {
+            let p = self
+                .engine
+                .load_program(self.dir.join("policy_train.hlo.txt").to_str().unwrap())?;
+            let _ = self.policy_train.set(p);
+        }
+        Ok(self.policy_train.get().unwrap())
+    }
+
+    /// Policy forward via HLO: state (STATE_DIM,) → (logits, value).
+    ///
+    /// NOTE: this stages the full 128k-float parameter vector every call;
+    /// the decision hot path should pin the parameters once with
+    /// [`OpdRuntime::pin_params`] and use [`OpdRuntime::policy_forward_pinned`]
+    /// (§Perf in EXPERIMENTS.md: ~2.6× faster end-to-end).
+    pub fn policy_forward(&self, params: &[f32], state: &[f32]) -> Result<(Vec<f32>, f32)> {
+        let pinned = self.pin_params(params)?;
+        self.policy_forward_pinned(&pinned, state)
+    }
+
+    /// Stage a parameter vector as a device-resident buffer (do this once
+    /// per parameter update, not per decision).
+    pub fn pin_params(&self, params: &[f32]) -> Result<xla::PjRtBuffer> {
+        self.engine.stage(TensorView::vec(params))
+    }
+
+    /// Policy forward with pinned parameters: only the 86-float state is
+    /// transferred per decision.
+    pub fn policy_forward_pinned(
+        &self,
+        pinned_params: &xla::PjRtBuffer,
+        state: &[f32],
+    ) -> Result<(Vec<f32>, f32)> {
+        let state_dims = [1usize, spec::STATE_DIM];
+        let state_buf = self.engine.stage(TensorView::mat(state, &state_dims))?;
+        let outs = self.policy_fwd.run_buffers(&[pinned_params, &state_buf])?;
+        let value = *outs
+            .get(1)
+            .and_then(|v| v.first())
+            .ok_or_else(|| anyhow!("policy_fwd: missing value output"))?;
+        Ok((outs.into_iter().next().unwrap(), value))
+    }
+
+    /// Predictor forward via HLO: raw window (PRED_WINDOW,) → raw prediction.
+    pub fn predict_load(&self, window: &[f32]) -> Result<f32> {
+        // pin the (small) predictor weights on first use
+        let pinned = self
+            .pinned_predictor
+            .get_or_init(|| self.engine.stage(TensorView::vec(&self.predictor_weights)).ok());
+        let dims = [1usize, spec::PRED_WINDOW];
+        let outs = match pinned {
+            Some(p) => {
+                let w = self.engine.stage(TensorView::mat(window, &dims))?;
+                self.predictor_fwd.run_buffers(&[p, &w])?
+            }
+            None => self.predictor_fwd.run(
+                &self.engine,
+                &[
+                    TensorView::vec(&self.predictor_weights),
+                    TensorView::mat(window, &dims),
+                ],
+            )?,
+        };
+        outs.first()
+            .and_then(|v| v.first())
+            .copied()
+            .ok_or_else(|| anyhow!("predictor_fwd: empty output"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_roundtrip() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("opd_params_test.bin");
+        let data: Vec<f32> = (0..100).map(|i| i as f32 * 0.5 - 10.0).collect();
+        write_params(&path, &data).unwrap();
+        let back = read_params(&path, 100).unwrap();
+        assert_eq!(data, back);
+        assert!(read_params(&path, 99).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn resolve_dir_precedence() {
+        assert_eq!(resolve_dir(Some("/x")), PathBuf::from("/x"));
+        // (env-var branch exercised in integration tests to avoid polluting
+        // the process environment here)
+        std::env::remove_var("OPD_ARTIFACTS");
+        assert_eq!(resolve_dir(None), PathBuf::from("artifacts"));
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        match OpdRuntime::load(Some("/nonexistent-opd")) {
+            Ok(_) => panic!("load from missing dir must fail"),
+            Err(err) => {
+                assert!(format!("{err:#}").contains("make artifacts"), "{err:#}")
+            }
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! PJRT runtime wrapper: load AOT-compiled HLO-text programs and execute
+//! them from the coordinator's hot path.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO **text** is the interchange format —
+//! jax ≥ 0.5 serialized protos carry 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! Inputs are staged as `PjRtBuffer`s. Callers can pin long-lived inputs
+//! (the 128k-float policy parameter vector) as device buffers once and pass
+//! them by handle every decision (`execute_b`), so the hot path transfers
+//! only the 86-float state.
+
+use anyhow::{anyhow, Context, Result};
+
+/// Host-side tensor view handed to `Program::run`.
+#[derive(Clone, Copy, Debug)]
+pub struct TensorView<'a> {
+    pub data: &'a [f32],
+    pub dims: &'a [usize],
+}
+
+impl<'a> TensorView<'a> {
+    pub fn vec(data: &'a [f32]) -> Self {
+        Self { data, dims: &[] }
+    }
+
+    pub fn mat(data: &'a [f32], dims: &'a [usize]) -> Self {
+        Self { data, dims }
+    }
+
+    fn check(&self) -> Result<Vec<usize>> {
+        let dims: Vec<usize> =
+            if self.dims.is_empty() { vec![self.data.len()] } else { self.dims.to_vec() };
+        let n: usize = dims.iter().product();
+        if n != self.data.len() {
+            return Err(anyhow!(
+                "tensor dims {:?} want {} elements, data has {}",
+                dims,
+                n,
+                self.data.len()
+            ));
+        }
+        Ok(dims)
+    }
+}
+
+/// The PJRT client (one per process).
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// CPU PJRT client. (GPU/TPU clients exist in the `xla` crate but the
+    /// offline image ships the CPU plugin only — see DESIGN.md §2.)
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text program.
+    pub fn load_program(&self, path: &str) -> Result<Program> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {path}"))?;
+        Ok(Program { exe, name: path.to_string() })
+    }
+
+    /// Stage a host tensor as a device buffer (pin long-lived inputs once).
+    pub fn stage(&self, t: TensorView<'_>) -> Result<xla::PjRtBuffer> {
+        let dims = t.check()?;
+        self.client
+            .buffer_from_host_buffer::<f32>(t.data, &dims, None)
+            .context("staging buffer")
+    }
+}
+
+/// One compiled executable (one artifact).
+pub struct Program {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Program {
+    /// Execute with staged device buffers; returns each tuple element as a
+    /// flat f32 vector. All our artifacts are lowered with
+    /// `return_tuple=True`, so the single output is always a tuple.
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<Vec<f32>>> {
+        let outs = self.exe.execute_b(args).with_context(|| format!("executing {}", self.name))?;
+        let lit = outs
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("{}: no output buffer", self.name))?
+            .to_literal_sync()
+            .context("fetching output literal")?;
+        let parts = lit.to_tuple().context("untupling output")?;
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().context("reading output tensor"))
+            .collect()
+    }
+
+    /// Convenience: stage host tensors then execute.
+    pub fn run(&self, engine: &Engine, inputs: &[TensorView<'_>]) -> Result<Vec<Vec<f32>>> {
+        let staged: Vec<xla::PjRtBuffer> =
+            inputs.iter().map(|t| engine.stage(*t)).collect::<Result<_>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = staged.iter().collect();
+        self.run_buffers(&refs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_view_check() {
+        let d = [1.0f32, 2.0, 3.0, 4.0];
+        assert_eq!(TensorView::vec(&d).check().unwrap(), vec![4]);
+        assert_eq!(TensorView::mat(&d, &[2, 2]).check().unwrap(), vec![2, 2]);
+        assert!(TensorView::mat(&d, &[3, 2]).check().is_err());
+    }
+
+    // PJRT-backed tests live in rust/tests/runtime_integration.rs (they need
+    // the artifacts from `make artifacts`).
+}

@@ -1,0 +1,9 @@
+//! AOT runtime: PJRT client + compiled HLO programs + artifact/parameter
+//! store. Python runs only at `make artifacts` time; this module is the
+//! bridge that makes the rust binary self-contained afterwards.
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{read_params, resolve_dir, write_params, OpdRuntime};
+pub use engine::{Engine, Program, TensorView};

@@ -1,0 +1,296 @@
+//! Minimal HTTP/1.1 server substrate (std::net + a fixed thread pool; no
+//! tokio offline). Enough surface for the leader process: GET/POST routing,
+//! request bodies, content types, graceful shutdown.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Parsed request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub query: String,
+    pub body: String,
+}
+
+/// Response under construction.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: String,
+    pub body: String,
+}
+
+impl Response {
+    pub fn ok(body: impl Into<String>) -> Self {
+        Self { status: 200, content_type: "text/plain; charset=utf-8".into(), body: body.into() }
+    }
+
+    pub fn json(body: impl Into<String>) -> Self {
+        Self { status: 200, content_type: "application/json".into(), body: body.into() }
+    }
+
+    pub fn not_found() -> Self {
+        Self { status: 404, content_type: "text/plain".into(), body: "not found\n".into() }
+    }
+
+    pub fn bad_request(msg: impl Into<String>) -> Self {
+        Self { status: 400, content_type: "text/plain".into(), body: msg.into() }
+    }
+
+    fn status_text(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            500 => "Internal Server Error",
+            _ => "Unknown",
+        }
+    }
+
+    fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
+        let head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            self.status,
+            self.status_text(),
+            self.content_type,
+            self.body.len()
+        );
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(self.body.as_bytes())
+    }
+}
+
+pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
+
+/// Route table: (METHOD, path) → handler.
+#[derive(Default, Clone)]
+pub struct Router {
+    routes: HashMap<(String, String), Handler>,
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn get<F>(&mut self, path: &str, f: F) -> &mut Self
+    where
+        F: Fn(&Request) -> Response + Send + Sync + 'static,
+    {
+        self.routes.insert(("GET".into(), path.into()), Arc::new(f));
+        self
+    }
+
+    pub fn post<F>(&mut self, path: &str, f: F) -> &mut Self
+    where
+        F: Fn(&Request) -> Response + Send + Sync + 'static,
+    {
+        self.routes.insert(("POST".into(), path.into()), Arc::new(f));
+        self
+    }
+
+    pub fn dispatch(&self, req: &Request) -> Response {
+        match self.routes.get(&(req.method.clone(), req.path.clone())) {
+            Some(h) => h(req),
+            None => Response::not_found(),
+        }
+    }
+}
+
+fn parse_request(stream: &mut TcpStream) -> std::io::Result<Request> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let target = parts.next().unwrap_or("/").to_string();
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target, String::new()),
+    };
+    // headers
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+            content_length = v.trim().parse().unwrap_or(0);
+        }
+    }
+    let mut body = vec![0u8; content_length.min(1 << 20)];
+    if content_length > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    Ok(Request {
+        method,
+        path,
+        query,
+        body: String::from_utf8_lossy(&body).into_owned(),
+    })
+}
+
+/// Running server handle.
+pub struct HttpServer {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind and serve on `addr` (e.g. "127.0.0.1:0" for an ephemeral port)
+    /// with `workers` handler threads.
+    pub fn start(addr: &str, router: Router, workers: usize) -> std::io::Result<HttpServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let (tx, rx) = mpsc::channel::<TcpStream>();
+        let rx = Arc::new(Mutex::new(rx));
+        let router = Arc::new(router);
+        // worker pool
+        for _ in 0..workers.max(1) {
+            let rx = rx.clone();
+            let router = router.clone();
+            std::thread::spawn(move || loop {
+                let stream = { rx.lock().unwrap().recv() };
+                match stream {
+                    Ok(mut s) => {
+                        let resp = match parse_request(&mut s) {
+                            Ok(req) => router.dispatch(&req),
+                            Err(e) => Response::bad_request(format!("parse error: {e}\n")),
+                        };
+                        let _ = resp.write_to(&mut s);
+                    }
+                    Err(_) => break, // channel closed → shut down
+                }
+            });
+        }
+        let accept_thread = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((s, _)) => {
+                        let _ = s.set_nonblocking(false);
+                        if tx.send(s).is_err() {
+                            break;
+                        }
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+            drop(tx);
+        });
+        Ok(HttpServer { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+/// Tiny client helper (tests, CLI health checks).
+pub fn http_get(addr: &std::net::SocketAddr, path: &str) -> std::io::Result<(u16, String)> {
+    let mut s = TcpStream::connect(addr)?;
+    let req = format!("GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n");
+    s.write_all(req.as_bytes())?;
+    let mut buf = String::new();
+    s.read_to_string(&mut buf)?;
+    let status: u16 = buf
+        .split_whitespace()
+        .nth(1)
+        .and_then(|x| x.parse().ok())
+        .unwrap_or(0);
+    let body = buf.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+    Ok((status, body))
+}
+
+pub fn http_post(
+    addr: &std::net::SocketAddr,
+    path: &str,
+    body: &str,
+) -> std::io::Result<(u16, String)> {
+    let mut s = TcpStream::connect(addr)?;
+    let req = format!(
+        "POST {path} HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes())?;
+    let mut buf = String::new();
+    s.read_to_string(&mut buf)?;
+    let status: u16 =
+        buf.split_whitespace().nth(1).and_then(|x| x.parse().ok()).unwrap_or(0);
+    let resp_body = buf.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+    Ok((status, resp_body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_and_post_roundtrip() {
+        let mut router = Router::new();
+        router.get("/ping", |_| Response::ok("pong"));
+        router.post("/echo", |req| Response::ok(req.body.clone()));
+        let server = HttpServer::start("127.0.0.1:0", router, 2).unwrap();
+        let addr = server.addr;
+
+        let (code, body) = http_get(&addr, "/ping").unwrap();
+        assert_eq!((code, body.as_str()), (200, "pong"));
+
+        let (code, body) = http_post(&addr, "/echo", "hello world").unwrap();
+        assert_eq!((code, body.as_str()), (200, "hello world"));
+
+        let (code, _) = http_get(&addr, "/missing").unwrap();
+        assert_eq!(code, 404);
+        server.shutdown();
+    }
+
+    #[test]
+    fn query_strings_are_split() {
+        let mut router = Router::new();
+        router.get("/q", |req| Response::ok(req.query.clone()));
+        let server = HttpServer::start("127.0.0.1:0", router, 1).unwrap();
+        let (code, body) = http_get(&server.addr, "/q?a=1&b=2").unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(body, "a=1&b=2");
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_requests() {
+        let mut router = Router::new();
+        router.get("/x", |_| Response::ok("y"));
+        let server = HttpServer::start("127.0.0.1:0", router, 4).unwrap();
+        let addr = server.addr;
+        let handles: Vec<_> = (0..8)
+            .map(|_| std::thread::spawn(move || http_get(&addr, "/x").unwrap().0))
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 200);
+        }
+        server.shutdown();
+    }
+}

@@ -1,0 +1,110 @@
+//! Serving layer: the leader process's HTTP face — Prometheus-format
+//! `/metrics`, JSON `/state`, and `/healthz` — mirroring the paper's
+//! Prometheus/Grafana monitoring story. The decision loop itself stays on
+//! the main thread (the PJRT runtime is single-threaded by design); the
+//! server shares state through `ControlPlane`.
+
+pub mod http;
+
+use std::sync::{Arc, Mutex};
+
+pub use http::{http_get, http_post, HttpServer, Request, Response, Router};
+
+use crate::telemetry::{MetricsRegistry, TimeSeriesStore};
+use crate::util::json::Json;
+
+/// Shared state between the coordinator loop and the HTTP server threads.
+pub struct ControlPlane {
+    pub metrics: Arc<MetricsRegistry>,
+    pub series: Arc<TimeSeriesStore>,
+    state: Mutex<Json>,
+}
+
+impl Default for ControlPlane {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ControlPlane {
+    pub fn new() -> Self {
+        Self {
+            metrics: Arc::new(MetricsRegistry::new()),
+            series: Arc::new(TimeSeriesStore::new(4096)),
+            state: Mutex::new(Json::obj()),
+        }
+    }
+
+    /// Publish the coordinator's current view (shown at `/state`).
+    pub fn publish_state(&self, state: Json) {
+        *self.state.lock().unwrap() = state;
+    }
+
+    pub fn state_json(&self) -> String {
+        self.state.lock().unwrap().to_pretty()
+    }
+
+    /// Build the router and start serving.
+    pub fn serve(self: &Arc<Self>, addr: &str) -> std::io::Result<HttpServer> {
+        let mut router = Router::new();
+        let cp = self.clone();
+        router.get("/metrics", move |_| Response::ok(cp.metrics.expose()));
+        let cp = self.clone();
+        router.get("/state", move |_| Response::json(cp.state_json()));
+        router.get("/healthz", |_| Response::ok("ok\n"));
+        let cp = self.clone();
+        router.get("/series", move |req| {
+            // /series?name=<series>&n=<count>
+            let mut name = "load";
+            let mut n = 120usize;
+            for kv in req.query.split('&') {
+                if let Some((k, v)) = kv.split_once('=') {
+                    match k {
+                        "name" => name = v,
+                        "n" => n = v.parse().unwrap_or(120),
+                        _ => {}
+                    }
+                }
+            }
+            let w = cp.series.window(name, n);
+            Response::json(
+                Json::obj()
+                    .set("name", name)
+                    .set("values", Json::Arr(w.iter().map(|x| Json::Num(*x)).collect()))
+                    .to_string(),
+            )
+        });
+        HttpServer::start(addr, router, 4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn control_plane_endpoints() {
+        let cp = Arc::new(ControlPlane::new());
+        cp.metrics.set_gauge("qos", &[], 1.25);
+        cp.series.record("load", 42.0);
+        cp.publish_state(Json::obj().set("agent", "opd").set("t", 10.0));
+        let server = cp.serve("127.0.0.1:0").unwrap();
+        let addr = server.addr;
+
+        let (code, body) = http_get(&addr, "/healthz").unwrap();
+        assert_eq!((code, body.as_str()), (200, "ok\n"));
+
+        let (code, body) = http_get(&addr, "/metrics").unwrap();
+        assert_eq!(code, 200);
+        assert!(body.contains("qos 1.25"));
+
+        let (code, body) = http_get(&addr, "/state").unwrap();
+        assert_eq!(code, 200);
+        assert!(body.contains("\"agent\""));
+
+        let (code, body) = http_get(&addr, "/series?name=load&n=5").unwrap();
+        assert_eq!(code, 200);
+        assert!(body.contains("42"));
+        server.shutdown();
+    }
+}

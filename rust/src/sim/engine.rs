@@ -1,0 +1,131 @@
+//! Cycle runner: drives one agent through one workload cycle (paper §VI-B:
+//! 1200 s cycles, 10 s adaptation interval) and collects the temporal
+//! cost/QoS series of Fig. 4, the averages of Fig. 5, and the per-decision
+//! times of Fig. 6.
+
+use std::time::Instant;
+
+use crate::agents::Agent;
+use crate::sim::env::Env;
+use crate::util::stats;
+
+/// Everything one cycle produces.
+#[derive(Clone, Debug, Default)]
+pub struct CycleResult {
+    pub agent: String,
+    /// per-second series over the whole cycle
+    pub qos_series: Vec<f64>,
+    pub cost_series: Vec<f64>,
+    pub load_series: Vec<f64>,
+    /// wall-clock seconds spent inside agent.decide(), one per decision
+    pub decision_times: Vec<f64>,
+    /// per-decision rewards (Eq. 7)
+    pub rewards: Vec<f64>,
+    /// how many applies were clamped by the resource guard
+    pub clamped: usize,
+    pub restarts: usize,
+}
+
+impl CycleResult {
+    pub fn avg_qos(&self) -> f64 {
+        stats::mean(&self.qos_series)
+    }
+
+    pub fn avg_cost(&self) -> f64 {
+        stats::mean(&self.cost_series)
+    }
+
+    /// H in Algorithm 1: cumulative decision time over the cycle (seconds).
+    pub fn total_decision_time(&self) -> f64 {
+        self.decision_times.iter().sum()
+    }
+
+    pub fn mean_decision_time(&self) -> f64 {
+        stats::mean(&self.decision_times)
+    }
+
+    pub fn avg_reward(&self) -> f64 {
+        stats::mean(&self.rewards)
+    }
+}
+
+/// Run `agent` through the environment until the cycle completes
+/// (Algorithm 1's main loop, including the decision-time bookkeeping).
+pub fn run_cycle(env: &mut Env, agent: &mut dyn Agent) -> CycleResult {
+    let mut res = CycleResult { agent: agent.name().to_string(), ..Default::default() };
+    while !env.done() {
+        let t0 = Instant::now();
+        let action = {
+            let obs = env.observe();
+            agent.decide(&obs)
+        };
+        res.decision_times.push(t0.elapsed().as_secs_f64());
+        let step = env.step(&action);
+        res.qos_series.extend_from_slice(&step.qos_series);
+        res.cost_series.extend_from_slice(&step.cost_series);
+        res.load_series.extend_from_slice(&step.load_series);
+        res.rewards.push(step.reward);
+        if step.clamped {
+            res.clamped += 1;
+        }
+        res.restarts += step.restarts;
+    }
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agents::GreedyAgent;
+    use crate::cluster::ClusterTopology;
+    use crate::pipeline::{catalog, QosWeights};
+    use crate::workload::predictor::MovingMaxPredictor;
+    use crate::workload::WorkloadKind;
+
+    #[test]
+    fn cycle_produces_full_series() {
+        let mut env = Env::from_workload(
+            catalog::preset(catalog::Preset::P1).spec,
+            ClusterTopology::paper_testbed(),
+            QosWeights::default(),
+            WorkloadKind::SteadyLow,
+            1,
+            Box::new(MovingMaxPredictor::default()),
+            10,
+            100,
+            3.0,
+        );
+        let mut agent = GreedyAgent::new();
+        let res = run_cycle(&mut env, &mut agent);
+        assert_eq!(res.qos_series.len(), 100);
+        assert_eq!(res.cost_series.len(), 100);
+        assert_eq!(res.decision_times.len(), 10);
+        assert_eq!(res.rewards.len(), 10);
+        assert!(res.avg_cost() > 0.0);
+        assert!(res.total_decision_time() >= res.mean_decision_time());
+        assert_eq!(res.agent, "greedy");
+    }
+
+    #[test]
+    fn identical_seeds_identical_results() {
+        let run = || {
+            let mut env = Env::from_workload(
+                catalog::preset(catalog::Preset::P1).spec,
+                ClusterTopology::paper_testbed(),
+                QosWeights::default(),
+                WorkloadKind::Fluctuating,
+                7,
+                Box::new(MovingMaxPredictor::default()),
+                10,
+                60,
+                3.0,
+            );
+            let mut agent = GreedyAgent::new();
+            run_cycle(&mut env, &mut agent)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.qos_series, b.qos_series);
+        assert_eq!(a.cost_series, b.cost_series);
+    }
+}

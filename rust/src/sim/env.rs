@@ -1,0 +1,471 @@
+//! The MDP environment (paper §III-C / §IV-B): wraps the simulated cluster +
+//! pipeline + workload into the state (Eq. 5) / action (Eq. 6) / reward
+//! (Eq. 7) interface the agents and the PPO trainer consume.
+//!
+//! Time advances in 1 s ticks; the agent acts every `adapt_interval` ticks
+//! (paper: 10 s) and the reward aggregates the per-second QoS/cost over the
+//! elapsed interval — so thrashing (container restarts) and under-capacity
+//! genuinely show up in the signal.
+
+use crate::cluster::{ClusterApi, ClusterTopology};
+use crate::nn::spec::*;
+use crate::pipeline::{
+    pipeline_metrics, PipelineMetrics, PipelineSpec, QosWeights, TaskConfig,
+};
+use crate::workload::predictor::LoadPredictor;
+use crate::workload::{LoadHistory, Trace, WorkloadGen, WorkloadKind};
+
+/// Where per-second arrivals come from.
+pub enum LoadSource {
+    Gen(WorkloadGen),
+    Replay { rates: Vec<f64>, idx: usize },
+}
+
+impl LoadSource {
+    fn next_rate(&mut self) -> f64 {
+        match self {
+            LoadSource::Gen(g) => g.next_rate(),
+            LoadSource::Replay { rates, idx } => {
+                let r = rates[*idx % rates.len()];
+                *idx += 1;
+                r
+            }
+        }
+    }
+}
+
+/// Everything an agent may look at when deciding (the paper's monitoring +
+/// Kubernetes-API view).
+pub struct Observation<'a> {
+    pub spec: &'a PipelineSpec,
+    /// most recent per-second arrival rate (req/s)
+    pub load_now: f64,
+    /// predicted max load over the next horizon (req/s)
+    pub load_pred: f64,
+    /// W_max (Eq. 4)
+    pub capacity: f64,
+    pub cores_free: f64,
+    pub current: Vec<TaskConfig>,
+    pub ready: Vec<usize>,
+    /// pipeline metrics under the current config at load_now
+    pub metrics: PipelineMetrics,
+    pub adapt_interval_secs: f64,
+}
+
+/// Boolean masks for the factored action heads (invalid variants of shorter
+/// variant lists, inactive task slots).
+#[derive(Clone, Debug)]
+pub struct ActionMasks {
+    /// LOGITS_DIM entries, laid out (task, [variant|replica|batch]) like the
+    /// policy head
+    pub head: Vec<bool>,
+    /// MAX_TASKS entries
+    pub task: Vec<bool>,
+}
+
+/// Build the Eq. 5 state vector (STATE_DIM = 86 f32, normalized).
+pub fn build_state(obs: &Observation<'_>) -> Vec<f32> {
+    let mut s = Vec::with_capacity(STATE_DIM);
+    let cap = obs.capacity.max(1.0);
+    // node features u_t, p_t, m_t ... (6)
+    s.push((obs.load_now / LOAD_SCALE) as f32);
+    s.push((obs.load_pred / LOAD_SCALE) as f32);
+    s.push((obs.cores_free / cap) as f32);
+    s.push((obs.capacity / 32.0) as f32);
+    s.push((obs.adapt_interval_secs / 10.0) as f32);
+    s.push(obs.spec.n_tasks() as f32 / MAX_TASKS as f32);
+    // per-task features (10 × MAX_TASKS)
+    for t in 0..MAX_TASKS {
+        if t < obs.spec.n_tasks() {
+            let cfg = &obs.current[t];
+            let stage = &obs.metrics.stages[t];
+            let nv = obs.spec.tasks[t].n_variants() as f32;
+            s.push(1.0); // active
+            s.push(cfg.variant as f32 / nv.max(1.0));
+            s.push(cfg.replicas as f32 / F_MAX as f32);
+            s.push(cfg.batch_idx as f32 / N_BATCH as f32);
+            s.push((stage.cores / 30.0) as f32);
+            s.push((stage.latency_ms / 1000.0) as f32);
+            s.push((stage.served / LOAD_SCALE) as f32);
+            s.push(stage.accuracy as f32);
+            s.push((stage.utilization.min(2.0) / 2.0) as f32);
+            let ready_frac = if cfg.replicas > 0 {
+                obs.ready[t] as f32 / cfg.replicas as f32
+            } else {
+                0.0
+            };
+            s.push(ready_frac);
+        } else {
+            s.extend_from_slice(&[0.0; TASK_FEATS]);
+        }
+    }
+    debug_assert_eq!(s.len(), STATE_DIM);
+    s
+}
+
+/// Build action masks for a pipeline spec.
+pub fn build_masks(spec: &PipelineSpec) -> ActionMasks {
+    let mut head = vec![false; LOGITS_DIM];
+    let mut task = vec![false; MAX_TASKS];
+    for t in 0..spec.n_tasks().min(MAX_TASKS) {
+        task[t] = true;
+        let base = t * HEAD_DIM;
+        let nv = spec.tasks[t].n_variants().min(MAX_VARIANTS);
+        for v in 0..nv {
+            head[base + v] = true;
+        }
+        for f in 0..F_MAX {
+            head[base + MAX_VARIANTS + f] = true;
+        }
+        for b in 0..N_BATCH {
+            head[base + MAX_VARIANTS + F_MAX + b] = true;
+        }
+    }
+    ActionMasks { head, task }
+}
+
+/// Encode a pipeline configuration as the 24 factored action indices
+/// (task-major: [z, f−1, b_idx] per task, zero-padded).
+pub fn encode_action(spec: &PipelineSpec, cfgs: &[TaskConfig]) -> Vec<usize> {
+    let mut a = vec![0usize; ACT_DIM];
+    for (t, cfg) in cfgs.iter().enumerate().take(spec.n_tasks()) {
+        a[t * 3] = cfg.variant;
+        a[t * 3 + 1] = cfg.replicas - 1;
+        a[t * 3 + 2] = cfg.batch_idx;
+    }
+    a
+}
+
+/// Decode factored action indices back into task configs.
+pub fn decode_action(spec: &PipelineSpec, idx: &[usize]) -> Vec<TaskConfig> {
+    (0..spec.n_tasks())
+        .map(|t| TaskConfig {
+            variant: idx[t * 3].min(spec.tasks[t].n_variants() - 1),
+            replicas: idx[t * 3 + 1] + 1,
+            batch_idx: idx[t * 3 + 2].min(N_BATCH - 1),
+        })
+        .collect()
+}
+
+/// Result of one adaptation step.
+#[derive(Clone, Debug)]
+pub struct StepResult {
+    /// Eq. 7 reward aggregated over the interval
+    pub reward: f64,
+    /// interval-average QoS (Eq. 3) and cost (Eq. 2)
+    pub qos: f64,
+    pub cost: f64,
+    /// per-second series over the interval (for the Fig. 4 plots)
+    pub qos_series: Vec<f64>,
+    pub cost_series: Vec<f64>,
+    pub load_series: Vec<f64>,
+    /// what was actually deployed after clamping
+    pub applied: Vec<TaskConfig>,
+    pub clamped: bool,
+    pub restarts: usize,
+    pub done: bool,
+}
+
+/// The environment.
+pub struct Env {
+    pub spec: PipelineSpec,
+    pub api: ClusterApi,
+    pub weights: QosWeights,
+    pub adapt_interval_secs: usize,
+    pub now: f64,
+    pub history: LoadHistory,
+    source: LoadSource,
+    predictor: Box<dyn LoadPredictor>,
+    cycle_secs: usize,
+    last_rate: f64,
+}
+
+impl Env {
+    pub fn new(
+        spec: PipelineSpec,
+        topo: ClusterTopology,
+        weights: QosWeights,
+        source: LoadSource,
+        predictor: Box<dyn LoadPredictor>,
+        adapt_interval_secs: usize,
+        cycle_secs: usize,
+        startup_secs: f64,
+    ) -> Self {
+        let mut env = Self {
+            spec,
+            api: ClusterApi::new(topo, startup_secs),
+            weights,
+            adapt_interval_secs,
+            now: 0.0,
+            history: LoadHistory::new(PRED_WINDOW * 4),
+            source,
+            predictor,
+            cycle_secs,
+            last_rate: 0.0,
+        };
+        env.bootstrap();
+        env
+    }
+
+    /// Convenience constructor from a workload kind.
+    pub fn from_workload(
+        spec: PipelineSpec,
+        topo: ClusterTopology,
+        weights: QosWeights,
+        kind: WorkloadKind,
+        seed: u64,
+        predictor: Box<dyn LoadPredictor>,
+        adapt_interval_secs: usize,
+        cycle_secs: usize,
+        startup_secs: f64,
+    ) -> Self {
+        Self::new(
+            spec,
+            topo,
+            weights,
+            LoadSource::Gen(WorkloadGen::new(kind, seed)),
+            predictor,
+            adapt_interval_secs,
+            cycle_secs,
+            startup_secs,
+        )
+    }
+
+    pub fn from_trace(
+        spec: PipelineSpec,
+        topo: ClusterTopology,
+        weights: QosWeights,
+        trace: &Trace,
+        predictor: Box<dyn LoadPredictor>,
+        adapt_interval_secs: usize,
+        startup_secs: f64,
+    ) -> Self {
+        let cycle = trace.rates.len();
+        Self::new(
+            spec,
+            topo,
+            weights,
+            LoadSource::Replay { rates: trace.rates.clone(), idx: 0 },
+            predictor,
+            adapt_interval_secs,
+            cycle,
+            startup_secs,
+        )
+    }
+
+    /// Deploy the default config and warm the load history so the first
+    /// observation is meaningful.
+    fn bootstrap(&mut self) {
+        let cfg = self.spec.default_config();
+        self.api
+            .apply(&self.spec, &cfg, self.now - self.api.startup_secs)
+            .expect("bootstrap apply cannot fail");
+        let r = self.source.next_rate();
+        self.history.push(r);
+        self.last_rate = r;
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.now
+    }
+
+    pub fn done(&self) -> bool {
+        self.now >= self.cycle_secs as f64
+    }
+
+    /// Current observation (state of the MDP).
+    pub fn observe(&mut self) -> Observation<'_> {
+        let window = self.history.window(PRED_WINDOW);
+        let load_pred = self.predictor.predict_max(&window);
+        let current = self.api.current_config().to_vec();
+        let ready = self.api.ready_replicas(self.spec.n_tasks(), self.now);
+        let metrics = pipeline_metrics(&self.spec, &current, &ready, self.last_rate);
+        Observation {
+            spec: &self.spec,
+            load_now: self.last_rate,
+            load_pred,
+            capacity: self.api.topo.capacity(),
+            cores_free: self.api.topo.free(),
+            current,
+            ready,
+            metrics,
+            adapt_interval_secs: self.adapt_interval_secs as f64,
+        }
+    }
+
+    /// Apply `action` and advance one adaptation interval.
+    pub fn step(&mut self, action: &[TaskConfig]) -> StepResult {
+        let out = self
+            .api
+            .apply(&self.spec, action, self.now)
+            .expect("validated action must apply");
+        let mut qos_series = Vec::with_capacity(self.adapt_interval_secs);
+        let mut cost_series = Vec::with_capacity(self.adapt_interval_secs);
+        let mut load_series = Vec::with_capacity(self.adapt_interval_secs);
+        let mut reward_acc = 0.0;
+        let mut max_batch = 0usize;
+        for _ in 0..self.adapt_interval_secs {
+            self.now += 1.0;
+            let rate = self.source.next_rate();
+            self.history.push(rate);
+            self.last_rate = rate;
+            let ready = self.api.ready_replicas(self.spec.n_tasks(), self.now);
+            let m = pipeline_metrics(&self.spec, &out.applied, &ready, rate);
+            qos_series.push(self.weights.qos(&m));
+            cost_series.push(m.cost);
+            load_series.push(rate);
+            reward_acc += self.weights.reward(&m);
+            max_batch = max_batch.max(m.max_batch);
+        }
+        let n = self.adapt_interval_secs as f64;
+        StepResult {
+            reward: reward_acc / n,
+            qos: crate::util::stats::mean(&qos_series),
+            cost: crate::util::stats::mean(&cost_series),
+            qos_series,
+            cost_series,
+            load_series,
+            applied: out.applied,
+            clamped: out.clamped,
+            restarts: out.restarts,
+            done: self.done(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::catalog;
+    use crate::workload::predictor::MovingMaxPredictor;
+
+    fn env(kind: WorkloadKind) -> Env {
+        Env::from_workload(
+            catalog::video_analytics().spec,
+            ClusterTopology::paper_testbed(),
+            QosWeights::default(),
+            kind,
+            42,
+            Box::new(MovingMaxPredictor::default()),
+            10,
+            120,
+            3.0,
+        )
+    }
+
+    #[test]
+    fn state_vector_shape_and_range() {
+        let mut e = env(WorkloadKind::SteadyLow);
+        let obs = e.observe();
+        let s = build_state(&obs);
+        assert_eq!(s.len(), STATE_DIM);
+        assert!(s.iter().all(|x| x.is_finite()));
+        // normalized features should be mostly small
+        assert!(s.iter().all(|x| x.abs() <= 16.0));
+        // 4 active tasks, slots 4..8 inactive (all-zero)
+        let base = NODE_FEATS + 4 * TASK_FEATS;
+        assert!(s[base..base + TASK_FEATS].iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn masks_reflect_spec() {
+        let spec = catalog::video_analytics().spec; // 4 tasks, 2/4/4/3 variants
+        let m = build_masks(&spec);
+        assert_eq!(m.task[..4], [true; 4]);
+        assert_eq!(m.task[4..], [false; 4]);
+        // task 0 has 2 variants
+        assert!(m.head[0] && m.head[1] && !m.head[2] && !m.head[3]);
+        // task 1 has 4 variants
+        let b1 = HEAD_DIM;
+        assert!(m.head[b1] && m.head[b1 + 3]);
+        // inactive task 5 fully masked
+        let b5 = 5 * HEAD_DIM;
+        assert!(m.head[b5..b5 + HEAD_DIM].iter().all(|x| !x));
+    }
+
+    #[test]
+    fn action_encode_decode_roundtrip() {
+        let spec = catalog::video_analytics().spec;
+        let cfgs = vec![
+            TaskConfig::new(1, 3, 2),
+            TaskConfig::new(0, 1, 0),
+            TaskConfig::new(3, 8, 5),
+            TaskConfig::new(2, 4, 1),
+        ];
+        let idx = encode_action(&spec, &cfgs);
+        let back = decode_action(&spec, &idx);
+        assert_eq!(cfgs, back);
+    }
+
+    #[test]
+    fn step_advances_time_and_returns_series() {
+        let mut e = env(WorkloadKind::Fluctuating);
+        let action = e.spec.default_config();
+        let r = e.step(&action);
+        assert_eq!(r.qos_series.len(), 10);
+        assert_eq!(e.elapsed(), 10.0);
+        assert!(r.cost > 0.0);
+        assert!(r.reward.is_finite());
+        assert!(!r.done);
+        for _ in 0..11 {
+            e.step(&action);
+        }
+        assert!(e.done());
+    }
+
+    #[test]
+    fn infeasible_action_is_clamped_not_fatal() {
+        let mut e = env(WorkloadKind::SteadyLow);
+        let action: Vec<TaskConfig> = e
+            .spec
+            .tasks
+            .iter()
+            .map(|t| TaskConfig::new(t.n_variants() - 1, 8, 5))
+            .collect();
+        let r = e.step(&action);
+        assert!(r.clamped);
+        assert!(e.spec.total_cores(&r.applied) <= e.api.topo.capacity() + 1e-9);
+    }
+
+    #[test]
+    fn better_provisioning_better_qos_under_high_load() {
+        // under steady high load, a provisioned config beats the minimal one
+        let mut e1 = env(WorkloadKind::SteadyHigh);
+        let minimal = e1.spec.default_config();
+        let mut q_min = 0.0;
+        for _ in 0..6 {
+            q_min = e1.step(&minimal).qos;
+        }
+        let mut e2 = env(WorkloadKind::SteadyHigh);
+        let provisioned: Vec<TaskConfig> =
+            e2.spec.tasks.iter().map(|_| TaskConfig::new(0, 6, 3)).collect();
+        let mut q_prov = 0.0;
+        for _ in 0..6 {
+            q_prov = e2.step(&provisioned).qos;
+        }
+        assert!(
+            q_prov > q_min,
+            "provisioned {q_prov} should beat minimal {q_min} at high load"
+        );
+    }
+
+    #[test]
+    fn replay_source_loops_deterministically() {
+        let trace = Trace::new("t", (0..50).map(|i| 10.0 + i as f64).collect());
+        let spec = catalog::preset(catalog::Preset::P1).spec;
+        let mut e = Env::from_trace(
+            spec,
+            ClusterTopology::paper_testbed(),
+            QosWeights::default(),
+            &trace,
+            Box::new(MovingMaxPredictor::default()),
+            10,
+            3.0,
+        );
+        let a = e.spec.default_config();
+        let r = e.step(&a);
+        // bootstrap consumed rates[0]=10, so the step sees 11..=20
+        assert_eq!(r.load_series[0], 11.0);
+        assert_eq!(r.load_series[9], 20.0);
+    }
+}

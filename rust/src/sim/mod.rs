@@ -1,0 +1,12 @@
+//! Discrete-time simulation of the edge serving system: the MDP environment
+//! (state/action/reward of §IV-B) and the cycle runner used by every
+//! experiment.
+
+pub mod engine;
+pub mod env;
+
+pub use engine::{run_cycle, CycleResult};
+pub use env::{
+    build_masks, build_state, decode_action, encode_action, ActionMasks, Env, LoadSource,
+    Observation, StepResult,
+};

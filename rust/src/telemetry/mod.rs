@@ -1,0 +1,11 @@
+//! Monitoring substrate — the Prometheus stand-in (paper §III-A
+//! "Monitoring"): a metrics registry (counters / gauges / histograms) with
+//! Prometheus text exposition, and a time-series store that retains the
+//! per-second samples the RL agent's state builder and the LSTM predictor
+//! read back.
+
+pub mod registry;
+pub mod timeseries;
+
+pub use registry::{MetricsRegistry, MetricsSnapshot};
+pub use timeseries::TimeSeriesStore;

@@ -1,0 +1,203 @@
+//! Metrics registry with Prometheus text-format exposition.
+//!
+//! Counters, gauges and histograms are keyed by `name{label="value",...}`.
+//! The serve layer exposes `/metrics` in the text format Prometheus scrapes,
+//! so the monitoring story matches the paper's deployment (§V-B: "integration
+//! with Prometheus and Grafana is also possible").
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::stats::Histogram;
+
+/// Fully-qualified metric key: name + sorted label pairs.
+fn key(name: &str, labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let mut ls: Vec<(String, String)> =
+        labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+    ls.sort();
+    let inner: Vec<String> =
+        ls.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+    format!("{name}{{{}}}", inner.join(","))
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, f64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+    help: BTreeMap<String, String>,
+}
+
+/// Thread-safe metrics registry.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<Inner>,
+}
+
+/// Point-in-time copy of all scalar metrics (for state building / tests).
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub counters: BTreeMap<String, f64>,
+    pub gauges: BTreeMap<String, f64>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn describe(&self, name: &str, help: &str) {
+        let mut g = self.inner.lock().unwrap();
+        g.help.insert(name.to_string(), help.to_string());
+    }
+
+    pub fn inc(&self, name: &str, labels: &[(&str, &str)], by: f64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(key(name, labels)).or_insert(0.0) += by;
+    }
+
+    pub fn set_gauge(&self, name: &str, labels: &[(&str, &str)], value: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.gauges.insert(key(name, labels), value);
+    }
+
+    pub fn observe(&self, name: &str, labels: &[(&str, &str)], value: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.histograms
+            .entry(key(name, labels))
+            .or_insert_with(|| Histogram::exponential(0.001, 2.0, 18))
+            .observe(value);
+    }
+
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> f64 {
+        self.inner.lock().unwrap().counters.get(&key(name, labels)).copied().unwrap_or(0.0)
+    }
+
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        self.inner.lock().unwrap().gauges.get(&key(name, labels)).copied()
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        MetricsSnapshot { counters: g.counters.clone(), gauges: g.gauges.clone() }
+    }
+
+    /// Prometheus text exposition format (v0.0.4).
+    pub fn expose(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        let mut out = String::new();
+        let mut seen_help: Vec<&str> = Vec::new();
+        let mut help_for = |out: &mut String, full: &str, kind: &str| {
+            let base = full.split('{').next().unwrap_or(full);
+            if !seen_help.contains(&base) {
+                if let Some(h) = g.help.get(base) {
+                    out.push_str(&format!("# HELP {base} {h}\n"));
+                }
+                out.push_str(&format!("# TYPE {base} {kind}\n"));
+                // leak a 'static-ish copy via Box is overkill; track by String
+                seen_help.push(Box::leak(base.to_string().into_boxed_str()));
+            }
+        };
+        for (k, v) in &g.counters {
+            help_for(&mut out, k, "counter");
+            out.push_str(&format!("{k} {v}\n"));
+        }
+        for (k, v) in &g.gauges {
+            help_for(&mut out, k, "gauge");
+            out.push_str(&format!("{k} {v}\n"));
+        }
+        for (k, h) in &g.histograms {
+            help_for(&mut out, k, "histogram");
+            let (base, labels) = match k.find('{') {
+                Some(i) => (&k[..i], k[i + 1..k.len() - 1].to_string()),
+                None => (k.as_str(), String::new()),
+            };
+            let mut cum = 0u64;
+            for (bound, count) in h.buckets() {
+                cum += count;
+                let le = if bound.is_infinite() { "+Inf".to_string() } else { format!("{bound}") };
+                let sep = if labels.is_empty() { String::new() } else { format!("{labels},") };
+                out.push_str(&format!("{base}_bucket{{{sep}le=\"{le}\"}} {cum}\n"));
+            }
+            let lbl = if labels.is_empty() { String::new() } else { format!("{{{labels}}}") };
+            out.push_str(&format!("{base}_sum{lbl} {}\n", h.sum()));
+            out.push_str(&format!("{base}_count{lbl} {}\n", h.count()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let r = MetricsRegistry::new();
+        r.inc("requests_total", &[("stage", "0")], 1.0);
+        r.inc("requests_total", &[("stage", "0")], 2.0);
+        r.inc("requests_total", &[("stage", "1")], 5.0);
+        assert_eq!(r.counter("requests_total", &[("stage", "0")]), 3.0);
+        assert_eq!(r.counter("requests_total", &[("stage", "1")]), 5.0);
+        assert_eq!(r.counter("requests_total", &[("stage", "9")]), 0.0);
+    }
+
+    #[test]
+    fn label_order_is_canonical() {
+        let r = MetricsRegistry::new();
+        r.inc("m", &[("b", "2"), ("a", "1")], 1.0);
+        assert_eq!(r.counter("m", &[("a", "1"), ("b", "2")]), 1.0);
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let r = MetricsRegistry::new();
+        r.set_gauge("load", &[], 10.0);
+        r.set_gauge("load", &[], 20.0);
+        assert_eq!(r.gauge("load", &[]), Some(20.0));
+        assert_eq!(r.gauge("nope", &[]), None);
+    }
+
+    #[test]
+    fn exposition_format_contains_series() {
+        let r = MetricsRegistry::new();
+        r.describe("qos", "pipeline QoS (Eq. 3)");
+        r.set_gauge("qos", &[("algo", "opd")], 3.5);
+        r.inc("decisions_total", &[], 7.0);
+        r.observe("decision_seconds", &[], 0.004);
+        let text = r.expose();
+        assert!(text.contains("# HELP qos pipeline QoS (Eq. 3)"));
+        assert!(text.contains("# TYPE qos gauge"));
+        assert!(text.contains("qos{algo=\"opd\"} 3.5"));
+        assert!(text.contains("decisions_total 7"));
+        assert!(text.contains("decision_seconds_bucket"));
+        assert!(text.contains("decision_seconds_count 1"));
+        assert!(text.contains("le=\"+Inf\""));
+    }
+
+    #[test]
+    fn histogram_cumulative_buckets() {
+        let r = MetricsRegistry::new();
+        for v in [0.002, 0.002, 10.0] {
+            r.observe("lat", &[], v);
+        }
+        let text = r.expose();
+        assert!(text.contains("lat_count 3"));
+        // +Inf bucket must equal total count
+        let inf_line = text.lines().find(|l| l.contains("le=\"+Inf\"")).unwrap();
+        assert!(inf_line.ends_with(" 3"), "{inf_line}");
+    }
+
+    #[test]
+    fn snapshot_is_point_in_time() {
+        let r = MetricsRegistry::new();
+        r.inc("c", &[], 1.0);
+        let snap = r.snapshot();
+        r.inc("c", &[], 1.0);
+        assert_eq!(snap.counters.get("c"), Some(&1.0));
+        assert_eq!(r.counter("c", &[]), 2.0);
+    }
+}

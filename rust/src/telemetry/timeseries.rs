@@ -1,0 +1,92 @@
+//! Time-series store: named per-second series with bounded retention — the
+//! part of the Prometheus stand-in the agent reads back (incoming load for
+//! the predictor window, per-stage QoS/cost series for the Fig. 4 plots).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::workload::trace::LoadHistory;
+
+/// Bounded multi-series store.
+pub struct TimeSeriesStore {
+    retention: usize,
+    series: Mutex<BTreeMap<String, LoadHistory>>,
+}
+
+impl TimeSeriesStore {
+    pub fn new(retention: usize) -> Self {
+        Self { retention, series: Mutex::new(BTreeMap::new()) }
+    }
+
+    pub fn record(&self, name: &str, value: f64) {
+        let mut g = self.series.lock().unwrap();
+        g.entry(name.to_string())
+            .or_insert_with(|| LoadHistory::new(self.retention))
+            .push(value);
+    }
+
+    pub fn latest(&self, name: &str) -> Option<f64> {
+        self.series.lock().unwrap().get(name).and_then(|h| h.latest())
+    }
+
+    /// Last `n` values (left-padded; see LoadHistory::window). Empty vec when
+    /// the series does not exist.
+    pub fn window(&self, name: &str, n: usize) -> Vec<f64> {
+        match self.series.lock().unwrap().get(name) {
+            Some(h) => h.window(n),
+            None => Vec::new(),
+        }
+    }
+
+    pub fn len(&self, name: &str) -> usize {
+        self.series.lock().unwrap().get(name).map(|h| h.len()).unwrap_or(0)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.series.lock().unwrap().keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_read_back() {
+        let ts = TimeSeriesStore::new(100);
+        for i in 0..5 {
+            ts.record("load", i as f64);
+        }
+        assert_eq!(ts.latest("load"), Some(4.0));
+        assert_eq!(ts.window("load", 3), vec![2.0, 3.0, 4.0]);
+        assert_eq!(ts.len("load"), 5);
+    }
+
+    #[test]
+    fn missing_series() {
+        let ts = TimeSeriesStore::new(10);
+        assert_eq!(ts.latest("x"), None);
+        assert!(ts.window("x", 3).is_empty());
+        assert_eq!(ts.len("x"), 0);
+    }
+
+    #[test]
+    fn retention_bounds_memory() {
+        let ts = TimeSeriesStore::new(3);
+        for i in 0..10 {
+            ts.record("s", i as f64);
+        }
+        assert_eq!(ts.len("s"), 3);
+        assert_eq!(ts.window("s", 3), vec![7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn multiple_series_isolated() {
+        let ts = TimeSeriesStore::new(10);
+        ts.record("a", 1.0);
+        ts.record("b", 2.0);
+        assert_eq!(ts.latest("a"), Some(1.0));
+        assert_eq!(ts.latest("b"), Some(2.0));
+        assert_eq!(ts.names(), vec!["a".to_string(), "b".to_string()]);
+    }
+}

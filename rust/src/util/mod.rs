@@ -1,0 +1,8 @@
+//! Foundational substrates built from scratch for the offline environment:
+//! PRNG, JSON, statistics, logging, and timing/benchmarking.
+
+pub mod json;
+pub mod logging;
+pub mod prng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,336 @@
+//! Statistics substrate: summary stats, percentiles, SMAPE, EMA, Welford
+//! online accumulation, and fixed-bucket histograms.
+//!
+//! Used by the monitoring daemon (telemetry), the bench harnesses (per-figure
+//! result tables), and the evaluation of the LSTM predictor (SMAPE, the
+//! paper's Fig. 3 metric).
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population variance; 0.0 for fewer than 2 samples.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Percentile via linear interpolation on the sorted copy (q in [0, 100]).
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let q = q.clamp(0.0, 100.0) / 100.0;
+    let rank = q * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Symmetric Mean Absolute Percentage Error — the paper's predictor metric
+/// (Fig. 3, "SMAPE of only 6%"). Definition: mean(2|p−a| / (|p|+|a|)).
+pub fn smape(pred: &[f64], actual: &[f64]) -> f64 {
+    assert_eq!(pred.len(), actual.len(), "smape: length mismatch");
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = pred
+        .iter()
+        .zip(actual)
+        .map(|(p, a)| {
+            let denom = p.abs() + a.abs();
+            if denom < 1e-12 {
+                0.0
+            } else {
+                2.0 * (p - a).abs() / denom
+            }
+        })
+        .sum();
+    s / pred.len() as f64
+}
+
+/// Mean absolute error.
+pub fn mae(pred: &[f64], actual: &[f64]) -> f64 {
+    assert_eq!(pred.len(), actual.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    pred.iter().zip(actual).map(|(p, a)| (p - a).abs()).sum::<f64>() / pred.len() as f64
+}
+
+/// Exponential moving average over a series (α = smoothing factor).
+pub fn ema(xs: &[f64], alpha: f64) -> Vec<f64> {
+    let mut out = Vec::with_capacity(xs.len());
+    let mut acc = None;
+    for &x in xs {
+        let next = match acc {
+            None => x,
+            Some(prev) => alpha * x + (1.0 - alpha) * prev,
+        };
+        out.push(next);
+        acc = Some(next);
+    }
+    out
+}
+
+/// Welford's online mean/variance accumulator (numerically stable).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+}
+
+/// Fixed-bucket histogram (telemetry latency distributions).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+    n: u64,
+}
+
+impl Histogram {
+    /// `bounds` are the inclusive upper edges; an implicit +inf bucket is added.
+    pub fn new(bounds: &[f64]) -> Self {
+        let mut b = bounds.to_vec();
+        b.sort_by(|a, c| a.partial_cmp(c).unwrap());
+        let len = b.len() + 1;
+        Self { bounds: b, counts: vec![0; len], sum: 0.0, n: 0 }
+    }
+
+    /// Exponential edges: `start * factor^i` for i in 0..n.
+    pub fn exponential(start: f64, factor: f64, n: usize) -> Self {
+        let bounds: Vec<f64> = (0..n).map(|i| start * factor.powi(i as i32)).collect();
+        Self::new(&bounds)
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        let idx = self.bounds.iter().position(|b| x <= *b).unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += x;
+        self.n += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn buckets(&self) -> impl Iterator<Item = (f64, u64)> + '_ {
+        self.bounds
+            .iter()
+            .copied()
+            .chain(std::iter::once(f64::INFINITY))
+            .zip(self.counts.iter().copied())
+    }
+
+    /// Approximate quantile from the cumulative bucket counts.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.n as f64).ceil() as u64;
+        let mut cum = 0;
+        for (bound, c) in self.buckets() {
+            cum += c;
+            if cum >= target {
+                return bound;
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_variance() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert_eq!(mean(&xs), 5.0);
+        assert!((variance(&xs) - 4.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_slices_are_safe() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(variance(&[]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(smape(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_unsorted_input() {
+        let xs = [9.0, 1.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 9.0);
+    }
+
+    #[test]
+    fn smape_perfect_and_symmetric() {
+        assert_eq!(smape(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        let a = smape(&[110.0], &[100.0]);
+        let b = smape(&[100.0], &[110.0]);
+        assert!((a - b).abs() < 1e-15, "smape must be symmetric");
+        // 2*10/210 ≈ 0.0952
+        assert!((a - 2.0 * 10.0 / 210.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn smape_zero_denominator() {
+        assert_eq!(smape(&[0.0], &[0.0]), 0.0);
+    }
+
+    #[test]
+    fn ema_smooths() {
+        let out = ema(&[0.0, 10.0, 10.0, 10.0], 0.5);
+        assert_eq!(out[0], 0.0);
+        assert_eq!(out[1], 5.0);
+        assert_eq!(out[2], 7.5);
+        assert!(out[3] > out[2] && out[3] < 10.0);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((w.variance() - variance(&xs)).abs() < 1e-12);
+        assert_eq!(w.min(), 1.0);
+        assert_eq!(w.max(), 9.0);
+        assert_eq!(w.count(), 8);
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantile() {
+        let mut h = Histogram::new(&[1.0, 10.0, 100.0]);
+        for x in [0.5, 0.7, 5.0, 50.0, 500.0] {
+            h.observe(x);
+        }
+        let buckets: Vec<_> = h.buckets().collect();
+        assert_eq!(buckets[0], (1.0, 2));
+        assert_eq!(buckets[1], (10.0, 1));
+        assert_eq!(buckets[2], (100.0, 1));
+        assert_eq!(buckets[3].1, 1);
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.quantile(0.4), 1.0);
+        assert_eq!(h.quantile(1.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn histogram_exponential_edges() {
+        let h = Histogram::exponential(1.0, 2.0, 4);
+        let edges: Vec<f64> = h.buckets().map(|(b, _)| b).collect();
+        assert_eq!(&edges[..4], &[1.0, 2.0, 4.0, 8.0]);
+    }
+
+    #[test]
+    fn mae_basic() {
+        assert!((mae(&[1.0, 2.0], &[2.0, 0.0]) - 1.5).abs() < 1e-12);
+    }
+}

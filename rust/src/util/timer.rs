@@ -1,0 +1,202 @@
+//! Timing + micro-benchmark substrate (criterion is unavailable offline).
+//!
+//! `Stopwatch` measures wall-clock sections; `Bench` provides a small
+//! criterion-like runner (warmup, fixed measurement budget, summary stats)
+//! used by every `rust/benches/fig*.rs` harness.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// Simple wall-clock stopwatch with lap support.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    last: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Self { start: now, last: now }
+    }
+
+    /// Seconds since creation.
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Seconds since the previous lap (or creation).
+    pub fn lap(&mut self) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        dt
+    }
+}
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    /// One row in the standard bench output format.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<40} {:>12} iters   mean {:>12}   p50 {:>12}   p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Criterion-like micro-bench runner.
+pub struct Bench {
+    /// target measurement time per case
+    pub measure: Duration,
+    /// warmup time per case
+    pub warmup: Duration,
+    /// hard cap on iterations (for very slow cases)
+    pub max_iters: u64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            measure: Duration::from_millis(700),
+            warmup: Duration::from_millis(150),
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self {
+            measure: Duration::from_millis(200),
+            warmup: Duration::from_millis(50),
+            max_iters: 100_000,
+        }
+    }
+
+    /// Run `f` repeatedly; each invocation is timed individually.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // warmup
+        let wstart = Instant::now();
+        while wstart.elapsed() < self.warmup {
+            f();
+        }
+        // measure
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let mstart = Instant::now();
+        while mstart.elapsed() < self.measure && (samples_ns.len() as u64) < self.max_iters {
+            let t0 = Instant::now();
+            f();
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        if samples_ns.is_empty() {
+            samples_ns.push(0.0);
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters: samples_ns.len() as u64,
+            mean_ns: stats::mean(&samples_ns),
+            p50_ns: stats::percentile(&samples_ns, 50.0),
+            p95_ns: stats::percentile(&samples_ns, 95.0),
+            min_ns: stats::min(&samples_ns),
+            max_ns: stats::max(&samples_ns),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(2));
+        let lap1 = sw.lap();
+        assert!(lap1 >= 0.002);
+        let lap2 = sw.lap();
+        assert!(lap2 < lap1);
+        assert!(sw.elapsed() >= lap1);
+    }
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bench {
+            measure: Duration::from_millis(20),
+            warmup: Duration::from_millis(5),
+            max_iters: 10_000,
+        };
+        let mut acc = 0u64;
+        let r = b.run("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(r.iters > 10);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.p95_ns >= r.p50_ns);
+        assert!(r.max_ns >= r.min_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with('s'));
+    }
+
+    #[test]
+    fn bench_row_contains_name() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1.0,
+            p50_ns: 1.0,
+            p95_ns: 1.0,
+            min_ns: 1.0,
+            max_ns: 1.0,
+        };
+        assert!(r.row().contains('x'));
+    }
+}

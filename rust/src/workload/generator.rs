@@ -1,0 +1,151 @@
+//! Workload generators for the paper's three evaluation regimes (§VI-B):
+//! steady low load, fluctuating load, steady high load — 1200 s cycles with
+//! per-second arrival rates, seeded for reproducibility ("we fix the seed for
+//! all random generators").
+
+use crate::util::prng::Pcg32;
+
+/// Workload regime selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkloadKind {
+    SteadyLow,
+    Fluctuating,
+    SteadyHigh,
+}
+
+impl WorkloadKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            WorkloadKind::SteadyLow => "steady-low",
+            WorkloadKind::Fluctuating => "fluctuating",
+            WorkloadKind::SteadyHigh => "steady-high",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "steady-low" | "low" => Some(WorkloadKind::SteadyLow),
+            "fluctuating" | "fluct" => Some(WorkloadKind::Fluctuating),
+            "steady-high" | "high" => Some(WorkloadKind::SteadyHigh),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [WorkloadKind; 3] {
+        [WorkloadKind::SteadyLow, WorkloadKind::Fluctuating, WorkloadKind::SteadyHigh]
+    }
+}
+
+/// Stateful per-second load generator (req/s).
+pub struct WorkloadGen {
+    pub kind: WorkloadKind,
+    rng: Pcg32,
+    t: u64,
+    /// remaining seconds + magnitude of the active burst (fluctuating only)
+    burst: Option<(u64, f64)>,
+}
+
+impl WorkloadGen {
+    pub fn new(kind: WorkloadKind, seed: u64) -> Self {
+        Self { kind, rng: Pcg32::stream(seed, kind as u64 + 1), t: 0, burst: None }
+    }
+
+    /// Arrival rate for the next second.
+    pub fn next_rate(&mut self) -> f64 {
+        let t = self.t as f64;
+        self.t += 1;
+        match self.kind {
+            WorkloadKind::SteadyLow => {
+                // ~20 req/s with mild noise
+                (20.0 + self.rng.normal_scaled(0.0, 2.0)).max(1.0)
+            }
+            WorkloadKind::SteadyHigh => {
+                // ~120 req/s: enough to saturate the 30-core testbed
+                (120.0 + self.rng.normal_scaled(0.0, 6.0)).max(1.0)
+            }
+            WorkloadKind::Fluctuating => {
+                // diurnal-style sinusoid 20..120 + secondary wave + bursts
+                let base = 70.0
+                    + 50.0 * (2.0 * std::f64::consts::PI * t / 600.0).sin()
+                    + 10.0 * (2.0 * std::f64::consts::PI * t / 97.0).sin();
+                let burst = match self.burst.take() {
+                    Some((n, mag)) if n > 1 => {
+                        self.burst = Some((n - 1, mag));
+                        mag
+                    }
+                    Some((_, mag)) => mag,
+                    None => {
+                        if self.rng.uniform() < 0.01 {
+                            let dur = self.rng.int_range(10, 40) as u64;
+                            let mag = self.rng.uniform_range(20.0, 60.0);
+                            self.burst = Some((dur, mag));
+                            mag
+                        } else {
+                            0.0
+                        }
+                    }
+                };
+                (base + burst + self.rng.normal_scaled(0.0, 4.0)).max(1.0)
+            }
+        }
+    }
+
+    /// Generate a whole trace of `n` seconds.
+    pub fn trace(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.next_rate()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = WorkloadGen::new(WorkloadKind::Fluctuating, 42).trace(200);
+        let b = WorkloadGen::new(WorkloadKind::Fluctuating, 42).trace(200);
+        assert_eq!(a, b);
+        let c = WorkloadGen::new(WorkloadKind::Fluctuating, 43).trace(200);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn steady_low_stays_low() {
+        let tr = WorkloadGen::new(WorkloadKind::SteadyLow, 1).trace(1200);
+        let m = stats::mean(&tr);
+        assert!((m - 20.0).abs() < 2.0, "mean={m}");
+        assert!(stats::std_dev(&tr) < 5.0);
+        assert!(stats::min(&tr) >= 1.0);
+    }
+
+    #[test]
+    fn steady_high_is_high() {
+        let tr = WorkloadGen::new(WorkloadKind::SteadyHigh, 1).trace(1200);
+        assert!((stats::mean(&tr) - 120.0).abs() < 5.0);
+    }
+
+    #[test]
+    fn fluctuating_spans_wide_range() {
+        let tr = WorkloadGen::new(WorkloadKind::Fluctuating, 7).trace(1200);
+        assert!(stats::min(&tr) < 40.0);
+        assert!(stats::max(&tr) > 110.0);
+        assert!(stats::std_dev(&tr) > 25.0, "should really fluctuate");
+    }
+
+    #[test]
+    fn rates_always_positive() {
+        for kind in WorkloadKind::all() {
+            let tr = WorkloadGen::new(kind, 3).trace(2000);
+            assert!(tr.iter().all(|&x| x >= 1.0), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for kind in WorkloadKind::all() {
+            assert_eq!(WorkloadKind::from_name(kind.name()), Some(kind));
+        }
+        assert_eq!(WorkloadKind::from_name("x"), None);
+    }
+}

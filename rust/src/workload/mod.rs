@@ -1,0 +1,10 @@
+//! Workload substrate: seeded generators for the paper's three load regimes,
+//! load-history traces (record/replay), and the workload predictors
+//! (LSTM-via-HLO plus naive baselines).
+
+pub mod generator;
+pub mod predictor;
+pub mod trace;
+
+pub use generator::{WorkloadGen, WorkloadKind};
+pub use trace::{LoadHistory, Trace};

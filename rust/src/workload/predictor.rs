@@ -1,0 +1,143 @@
+//! Workload predictors (paper §IV-A): the LSTM (2-minute window → max load
+//! of the next 20 s) plus the naive baselines Fig. 3 is implicitly compared
+//! against. The LSTM runs either through the AOT HLO program (decision path)
+//! or the pure-rust mirror (fallback / cross-check).
+
+use std::rc::Rc;
+
+use crate::nn::policy::predictor_fwd_native;
+use crate::nn::spec::{PRED_HORIZON, PRED_WINDOW};
+use crate::runtime::OpdRuntime;
+
+/// A load predictor consumes the recent per-second history (raw req/s,
+/// oldest first) and predicts the maximum load over the next horizon.
+pub trait LoadPredictor {
+    fn name(&self) -> &'static str;
+    fn predict_max(&mut self, window: &[f64]) -> f64;
+}
+
+/// Baseline: tomorrow looks like right now.
+pub struct LastValuePredictor;
+
+impl LoadPredictor for LastValuePredictor {
+    fn name(&self) -> &'static str {
+        "last-value"
+    }
+
+    fn predict_max(&mut self, window: &[f64]) -> f64 {
+        window.last().copied().unwrap_or(0.0)
+    }
+}
+
+/// Baseline: max over the trailing horizon (a strong naive predictor for
+/// max-of-horizon targets).
+pub struct MovingMaxPredictor {
+    pub horizon: usize,
+}
+
+impl Default for MovingMaxPredictor {
+    fn default() -> Self {
+        Self { horizon: PRED_HORIZON }
+    }
+}
+
+impl LoadPredictor for MovingMaxPredictor {
+    fn name(&self) -> &'static str {
+        "moving-max"
+    }
+
+    fn predict_max(&mut self, window: &[f64]) -> f64 {
+        let n = window.len().min(self.horizon);
+        window[window.len() - n..]
+            .iter()
+            .copied()
+            .fold(0.0f64, f64::max)
+    }
+}
+
+/// The paper's LSTM predictor, with trained weights from the AOT step.
+pub struct LstmPredictor {
+    weights: Vec<f32>,
+    runtime: Option<Rc<OpdRuntime>>,
+}
+
+impl LstmPredictor {
+    /// HLO-backed (Pallas LSTM cell kernel inside the lowered graph).
+    pub fn hlo(runtime: Rc<OpdRuntime>) -> Self {
+        Self { weights: runtime.predictor_weights.clone(), runtime: Some(runtime) }
+    }
+
+    /// Pure-rust mirror (no PJRT needed).
+    pub fn native(weights: Vec<f32>) -> Self {
+        Self { weights, runtime: None }
+    }
+
+    fn window_f32(window: &[f64]) -> Vec<f32> {
+        // left-pad / truncate to exactly PRED_WINDOW
+        let mut w = vec![0.0f32; PRED_WINDOW];
+        let n = window.len().min(PRED_WINDOW);
+        let pad = PRED_WINDOW - n;
+        let first = window.first().copied().unwrap_or(0.0) as f32;
+        for slot in w.iter_mut().take(pad) {
+            *slot = first;
+        }
+        for (i, &x) in window[window.len() - n..].iter().enumerate() {
+            w[pad + i] = x as f32;
+        }
+        w
+    }
+}
+
+impl LoadPredictor for LstmPredictor {
+    fn name(&self) -> &'static str {
+        "lstm"
+    }
+
+    fn predict_max(&mut self, window: &[f64]) -> f64 {
+        let w = Self::window_f32(window);
+        let pred = match &self.runtime {
+            Some(rt) => rt.predict_load(&w).unwrap_or_else(|_| {
+                predictor_fwd_native(&self.weights, &w)
+            }),
+            None => predictor_fwd_native(&self.weights, &w),
+        };
+        (pred as f64).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn last_value() {
+        let mut p = LastValuePredictor;
+        assert_eq!(p.predict_max(&[1.0, 2.0, 7.0]), 7.0);
+        assert_eq!(p.predict_max(&[]), 0.0);
+    }
+
+    #[test]
+    fn moving_max_window() {
+        let mut p = MovingMaxPredictor { horizon: 3 };
+        assert_eq!(p.predict_max(&[9.0, 1.0, 2.0, 3.0]), 3.0);
+        assert_eq!(p.predict_max(&[5.0]), 5.0);
+    }
+
+    #[test]
+    fn lstm_native_pads_short_windows() {
+        let weights = vec![0.01f32; crate::nn::spec::PREDICTOR_PARAM_COUNT];
+        let mut p = LstmPredictor::native(weights);
+        let short = p.predict_max(&[50.0; 10]);
+        let full = p.predict_max(&[50.0; PRED_WINDOW]);
+        assert!(short.is_finite() && full.is_finite());
+        // padded-with-first-value constant window ≡ full constant window
+        assert!((short - full).abs() < 1e-3, "{short} vs {full}");
+    }
+
+    #[test]
+    fn lstm_never_negative() {
+        let weights = vec![-0.5f32; crate::nn::spec::PREDICTOR_PARAM_COUNT];
+        let mut p = LstmPredictor::native(weights);
+        assert!(p.predict_max(&[100.0; PRED_WINDOW]) >= 0.0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Load traces: the monitoring daemon's view of per-second arrivals, with
+//! the sliding-window accessors the predictor consumes (2-minute history →
+//! 20-second horizon, paper §IV-A) plus record/replay for reproducible
+//! experiments.
+
+use std::collections::VecDeque;
+
+use crate::util::json::Json;
+
+/// Ring-buffered per-second load history (the Prometheus stand-in keeps a
+/// bounded retention window, like a scrape retention period).
+#[derive(Clone, Debug)]
+pub struct LoadHistory {
+    buf: VecDeque<f64>,
+    capacity: usize,
+}
+
+impl LoadHistory {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self { buf: VecDeque::with_capacity(capacity), capacity }
+    }
+
+    pub fn push(&mut self, rate: f64) {
+        if self.buf.len() == self.capacity {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(rate);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn latest(&self) -> Option<f64> {
+        self.buf.back().copied()
+    }
+
+    /// Last `n` seconds, oldest first, left-padded with the earliest value
+    /// when fewer than `n` samples exist (cold-start behaviour).
+    pub fn window(&self, n: usize) -> Vec<f64> {
+        let have = self.buf.len();
+        let pad_val = self.buf.front().copied().unwrap_or(0.0);
+        let mut out = Vec::with_capacity(n);
+        if have < n {
+            out.resize(n - have, pad_val);
+            out.extend(self.buf.iter().copied());
+        } else {
+            out.extend(self.buf.iter().skip(have - n).copied());
+        }
+        out
+    }
+}
+
+/// A recorded trace (for replay across agents — every algorithm in Fig. 4/5
+/// must see the *same* arrivals).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    pub name: String,
+    pub rates: Vec<f64>,
+}
+
+impl Trace {
+    pub fn new(name: impl Into<String>, rates: Vec<f64>) -> Self {
+        Self { name: name.into(), rates }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("rates", Json::Arr(self.rates.iter().map(|r| Json::Num(*r)).collect()))
+    }
+
+    pub fn from_json(j: &Json) -> Result<Trace, String> {
+        let name = j.req_str("name").map_err(|e| e.to_string())?.to_string();
+        let rates = j
+            .get("rates")
+            .and_then(Json::as_arr)
+            .ok_or("missing rates array")?
+            .iter()
+            .map(|x| x.as_f64().ok_or("non-numeric rate"))
+            .collect::<Result<Vec<f64>, _>>()?;
+        Ok(Trace { name, rates })
+    }
+
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_pretty())
+    }
+
+    pub fn load(path: &str) -> Result<Trace, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let j = Json::parse(&text).map_err(|e| e.to_string())?;
+        Trace::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn history_ring_buffer_evicts() {
+        let mut h = LoadHistory::new(3);
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            h.push(x);
+        }
+        assert_eq!(h.len(), 3);
+        assert_eq!(h.window(3), vec![2.0, 3.0, 4.0]);
+        assert_eq!(h.latest(), Some(4.0));
+    }
+
+    #[test]
+    fn window_pads_cold_start() {
+        let mut h = LoadHistory::new(10);
+        h.push(5.0);
+        h.push(6.0);
+        assert_eq!(h.window(4), vec![5.0, 5.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn window_empty_history_is_zeros() {
+        let h = LoadHistory::new(10);
+        assert_eq!(h.window(3), vec![0.0, 0.0, 0.0]);
+        assert_eq!(h.latest(), None);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn trace_json_roundtrip() {
+        let t = Trace::new("demo", vec![1.5, 2.5, 3.0]);
+        let j = t.to_json();
+        let back = Trace::from_json(&j).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn trace_file_roundtrip() {
+        let t = Trace::new("file-demo", vec![1.0, 2.0]);
+        let path = std::env::temp_dir().join("opd_trace_test.json");
+        let path = path.to_str().unwrap();
+        t.save(path).unwrap();
+        let back = Trace::load(path).unwrap();
+        assert_eq!(t, back);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn trace_from_bad_json_errors() {
+        let j = Json::parse(r#"{"name": "x"}"#).unwrap();
+        assert!(Trace::from_json(&j).is_err());
+        let j2 = Json::parse(r#"{"name": "x", "rates": ["a"]}"#).unwrap();
+        assert!(Trace::from_json(&j2).is_err());
+    }
+}

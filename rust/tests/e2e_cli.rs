@@ -1,0 +1,90 @@
+//! End-to-end CLI tests: drive the command surface the way a user would
+//! (Args → command functions), including file outputs.
+
+use opd::cli::args::Args;
+use opd::cli::{cmd_compare, cmd_info, cmd_predict, cmd_simulate};
+use opd::util::json::Json;
+
+fn argv(s: &str) -> Args {
+    Args::parse(&s.split_whitespace().map(String::from).collect::<Vec<_>>()).unwrap()
+}
+
+fn tmp(name: &str) -> String {
+    std::env::temp_dir().join(name).to_str().unwrap().to_string()
+}
+
+#[test]
+fn simulate_greedy_writes_summary_json() {
+    let out = tmp("opd_e2e_sim.json");
+    let args = argv(&format!(
+        "simulate --pipeline P1 --workload steady-low --agent greedy --seed 3 \
+         --cycle 100 --native --out {out}"
+    ));
+    cmd_simulate(&args).unwrap();
+    let j = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+    assert_eq!(j.req_str("agent").unwrap(), "greedy");
+    assert!(j.req_f64("avg_cost").unwrap() > 0.0);
+    assert_eq!(j.get("qos_series").unwrap().as_arr().unwrap().len(), 100);
+    let _ = std::fs::remove_file(&out);
+}
+
+#[test]
+fn simulate_all_agents_native() {
+    for agent in ["random", "greedy", "ipa", "opd"] {
+        let args = argv(&format!(
+            "simulate --pipeline P1 --workload fluctuating --agent {agent} \
+             --seed 1 --cycle 60 --native"
+        ));
+        cmd_simulate(&args).unwrap_or_else(|e| panic!("{agent}: {e:#}"));
+    }
+}
+
+#[test]
+fn compare_writes_four_results() {
+    let out = tmp("opd_e2e_compare.json");
+    let args = argv(&format!(
+        "compare --pipeline P2 --workload steady-low --seed 4 --cycle 80 --native --out {out}"
+    ));
+    cmd_compare(&args).unwrap();
+    let j = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+    let arr = j.as_arr().unwrap();
+    assert_eq!(arr.len(), 4);
+    let agents: Vec<&str> = arr.iter().map(|x| x.req_str("agent").unwrap()).collect();
+    assert_eq!(agents, vec!["random", "greedy", "ipa", "opd"]);
+    let _ = std::fs::remove_file(&out);
+}
+
+#[test]
+fn predict_runs_native() {
+    let args = argv("predict --workload fluctuating --secs 400 --seed 2 --native");
+    cmd_predict(&args).unwrap();
+}
+
+#[test]
+fn info_reports() {
+    cmd_info(&argv("info")).unwrap();
+}
+
+#[test]
+fn unknown_flags_rejected() {
+    let args = argv("simulate --pipeline P1 --agent greedy --cycle 50 --native --frobnicate 9");
+    assert!(cmd_simulate(&args).is_err());
+}
+
+#[test]
+fn simulate_rejects_bad_pipeline() {
+    let args = argv("simulate --pipeline NOPE --native");
+    assert!(cmd_simulate(&args).is_err());
+}
+
+#[test]
+fn serve_smoke_over_hlo_when_available() {
+    // tiny serve cycle; exercises the HTTP control plane + decision loop.
+    // uses native policy to stay artifact-independent.
+    use opd::cli::cmd_serve;
+    let args = argv(
+        "serve --addr 127.0.0.1:0 --pipeline P1 --workload steady-low \
+         --agent greedy --seed 1 --cycle 40 --native",
+    );
+    cmd_serve(&args).unwrap();
+}

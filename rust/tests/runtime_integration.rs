@@ -1,0 +1,135 @@
+//! Integration tests over the PJRT runtime + AOT artifacts: the HLO programs
+//! must load, execute, and agree with the pure-rust mirrors.
+//!
+//! These need `make artifacts` to have run; they are skipped (with a notice)
+//! when the artifacts are absent so `cargo test` stays usable pre-AOT.
+
+use opd::nn::policy::{policy_fwd_native, predictor_fwd_native};
+use opd::nn::spec::*;
+use opd::runtime::OpdRuntime;
+use opd::util::prng::Pcg32;
+
+fn runtime() -> Option<OpdRuntime> {
+    match OpdRuntime::load(None) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (no artifacts): {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_matches_binary_constants() {
+    let Some(rt) = runtime() else { return };
+    rt.manifest.validate().unwrap();
+    assert_eq!(rt.policy_init.len(), POLICY_PARAM_COUNT);
+    assert_eq!(rt.predictor_weights.len(), PREDICTOR_PARAM_COUNT);
+}
+
+#[test]
+fn policy_fwd_hlo_matches_native_mirror() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg32::new(7);
+    for trial in 0..5 {
+        let state: Vec<f32> =
+            (0..STATE_DIM).map(|_| (rng.normal() * 0.5) as f32).collect();
+        let (hlo_logits, hlo_value) = rt.policy_forward(&rt.policy_init, &state).unwrap();
+        let (nat_logits, nat_value) = policy_fwd_native(&rt.policy_init, &state);
+        assert_eq!(hlo_logits.len(), LOGITS_DIM);
+        for (i, (a, b)) in hlo_logits.iter().zip(&nat_logits).enumerate() {
+            assert!(
+                (a - b).abs() < 2e-3 + 1e-3 * b.abs(),
+                "trial {trial} logit {i}: hlo {a} vs native {b}"
+            );
+        }
+        assert!(
+            (hlo_value - nat_value).abs() < 2e-3 + 1e-3 * nat_value.abs(),
+            "value: {hlo_value} vs {nat_value}"
+        );
+    }
+}
+
+#[test]
+fn predictor_hlo_matches_native_mirror() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg32::new(11);
+    for _ in 0..3 {
+        let window: Vec<f32> =
+            (0..PRED_WINDOW).map(|_| rng.uniform_range(5.0, 180.0) as f32).collect();
+        let hlo = rt.predict_load(&window).unwrap();
+        let native = predictor_fwd_native(&rt.predictor_weights, &window);
+        assert!(
+            (hlo - native).abs() < 0.5 + 0.01 * native.abs(),
+            "hlo {hlo} vs native {native}"
+        );
+    }
+}
+
+#[test]
+fn predictor_tracks_workload_scale() {
+    // trained predictor should predict high for high windows, low for low
+    let Some(rt) = runtime() else { return };
+    let low = vec![20.0f32; PRED_WINDOW];
+    let high = vec![120.0f32; PRED_WINDOW];
+    let p_low = rt.predict_load(&low).unwrap();
+    let p_high = rt.predict_load(&high).unwrap();
+    assert!(p_high > p_low, "predictor must track scale: {p_low} vs {p_high}");
+    assert!((p_low - 20.0).abs() < 25.0, "low pred {p_low} too far from 20");
+    assert!((p_high - 120.0).abs() < 60.0, "high pred {p_high} too far from 120");
+}
+
+#[test]
+fn manifest_smape_in_paper_band() {
+    // paper §VI-A: SMAPE ≈ 6 % — accept anything ≤ 12 %
+    let Some(rt) = runtime() else { return };
+    assert!(
+        rt.manifest.predictor_smape < 0.12,
+        "trained predictor SMAPE {} too high",
+        rt.manifest.predictor_smape
+    );
+}
+
+#[test]
+fn hlo_policy_is_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let state = vec![0.25f32; STATE_DIM];
+    let (a, av) = rt.policy_forward(&rt.policy_init, &state).unwrap();
+    let (b, bv) = rt.policy_forward(&rt.policy_init, &state).unwrap();
+    assert_eq!(a, b);
+    assert_eq!(av, bv);
+}
+
+#[test]
+fn opd_agent_over_hlo_produces_valid_configs() {
+    use opd::agents::{Agent, OpdAgent};
+    use opd::cluster::ClusterTopology;
+    use opd::pipeline::{catalog, QosWeights};
+    use opd::sim::Env;
+    use opd::workload::predictor::LstmPredictor;
+    use opd::workload::WorkloadKind;
+    let Some(rt) = runtime() else { return };
+    let rt = std::rc::Rc::new(rt);
+    let mut env = Env::from_workload(
+        catalog::video_analytics().spec,
+        ClusterTopology::paper_testbed(),
+        QosWeights::default(),
+        WorkloadKind::Fluctuating,
+        3,
+        Box::new(LstmPredictor::hlo(rt.clone())),
+        10,
+        60,
+        3.0,
+    );
+    let mut agent = OpdAgent::from_runtime(rt, 1);
+    while !env.done() {
+        let action = {
+            let obs = env.observe();
+            let a = agent.decide(&obs);
+            obs.spec.validate_config(&a).unwrap();
+            a
+        };
+        let step = env.step(&action);
+        assert!(step.reward.is_finite());
+    }
+}

@@ -1,0 +1,255 @@
+//! Property-based tests over system invariants (hand-rolled generative
+//! testing on the PCG substrate — proptest is unavailable offline).
+//!
+//! Each property runs hundreds of randomized cases with a fixed master seed,
+//! so failures are reproducible.
+
+use opd::cluster::{ClusterApi, ClusterTopology};
+use opd::pipeline::catalog::{self, Preset};
+use opd::pipeline::{pipeline_metrics, PipelineSpec, QosWeights, TaskConfig, BATCH_CHOICES, F_MAX};
+use opd::rl::gae;
+use opd::sim::{build_masks, build_state, decode_action, encode_action, Env};
+use opd::util::prng::Pcg32;
+use opd::workload::predictor::MovingMaxPredictor;
+use opd::workload::WorkloadKind;
+
+fn random_config(rng: &mut Pcg32, spec: &PipelineSpec) -> Vec<TaskConfig> {
+    spec.tasks
+        .iter()
+        .map(|t| TaskConfig {
+            variant: rng.below(t.n_variants() as u32) as usize,
+            replicas: 1 + rng.below(F_MAX as u32) as usize,
+            batch_idx: rng.below(BATCH_CHOICES.len() as u32) as usize,
+        })
+        .collect()
+}
+
+fn any_spec(rng: &mut Pcg32) -> PipelineSpec {
+    let presets = Preset::all();
+    let idx = rng.below(presets.len() as u32 + 2) as usize;
+    match idx {
+        0..=3 => catalog::preset(presets[idx]).spec,
+        4 => catalog::video_analytics().spec,
+        _ => catalog::iot_anomaly().spec,
+    }
+}
+
+/// PROPERTY: after any apply (valid or infeasible), the deployed config
+/// respects W_max, keeps ≥1 replica per stage, and node usage is consistent.
+#[test]
+fn prop_cluster_never_over_capacity() {
+    let mut rng = Pcg32::new(1000);
+    for case in 0..300 {
+        let spec = any_spec(&mut rng);
+        let mut api = ClusterApi::new(ClusterTopology::paper_testbed(), 3.0);
+        let mut now = 0.0;
+        for _ in 0..4 {
+            let cfgs = random_config(&mut rng, &spec);
+            let out = api.apply(&spec, &cfgs, now).unwrap_or_else(|e| {
+                panic!("case {case}: apply failed: {e}");
+            });
+            assert!(
+                spec.total_cores(&out.applied) <= api.topo.capacity() + 1e-6,
+                "case {case}: over capacity"
+            );
+            assert!(out.applied.iter().all(|c| c.replicas >= 1));
+            let used: f64 = api.containers().iter().map(|c| c.cores).sum();
+            assert!((api.topo.used() - used).abs() < 1e-6, "case {case}: usage drift");
+            // per-node capacity respected
+            for n in &api.topo.nodes {
+                assert!(n.cores_used <= n.cores_total + 1e-6);
+            }
+            now += 10.0;
+        }
+    }
+}
+
+/// PROPERTY: pipeline metrics are physically sane for any config/load.
+#[test]
+fn prop_pipeline_metrics_sane() {
+    let mut rng = Pcg32::new(2000);
+    for case in 0..500 {
+        let spec = any_spec(&mut rng);
+        let cfgs = random_config(&mut rng, &spec);
+        let ready: Vec<usize> =
+            cfgs.iter().map(|c| rng.below(c.replicas as u32 + 1) as usize).collect();
+        let demand = rng.uniform_range(0.5, 400.0);
+        let m = pipeline_metrics(&spec, &cfgs, &ready, demand);
+        assert!(m.throughput <= demand + 1e-9, "case {case}: throughput exceeds demand");
+        assert!(m.throughput >= 0.0);
+        assert!(m.latency_ms > 0.0);
+        assert!(m.cost > 0.0);
+        assert!(m.accuracy > 0.0 && m.accuracy <= spec.n_tasks() as f64);
+        assert!(m.excess <= demand + 1e-9, "excess can't exceed demand");
+        for s in &m.stages {
+            assert!(s.served <= s.arrival + 1e-9, "case {case}: stage served > arrival");
+            assert!(s.served <= s.capacity + 1e-9);
+        }
+        // stage arrivals are non-increasing along a lossy chain
+        for w in m.stages.windows(2) {
+            assert!(w[1].arrival <= w[0].arrival + 1e-9, "case {case}: arrivals grew");
+        }
+    }
+}
+
+/// PROPERTY: adding a ready replica never increases unmet demand.
+#[test]
+fn prop_more_replicas_never_hurt_capacity() {
+    let mut rng = Pcg32::new(3000);
+    for _ in 0..300 {
+        let spec = any_spec(&mut rng);
+        let mut cfgs = random_config(&mut rng, &spec);
+        let stage = rng.below(spec.n_tasks() as u32) as usize;
+        cfgs[stage].replicas = cfgs[stage].replicas.min(F_MAX - 1);
+        let ready: Vec<usize> = cfgs.iter().map(|c| c.replicas).collect();
+        let demand = rng.uniform_range(50.0, 300.0);
+        let m1 = pipeline_metrics(&spec, &cfgs, &ready, demand);
+        let mut cfgs2 = cfgs.clone();
+        cfgs2[stage].replicas += 1;
+        let ready2: Vec<usize> = cfgs2.iter().map(|c| c.replicas).collect();
+        let m2 = pipeline_metrics(&spec, &cfgs2, &ready2, demand);
+        assert!(
+            m2.excess <= m1.excess + 1e-9,
+            "extra replica increased excess: {} -> {}",
+            m1.excess,
+            m2.excess
+        );
+    }
+}
+
+/// PROPERTY: action encode/decode roundtrips for every valid config.
+#[test]
+fn prop_action_roundtrip() {
+    let mut rng = Pcg32::new(4000);
+    for _ in 0..500 {
+        let spec = any_spec(&mut rng);
+        let cfgs = random_config(&mut rng, &spec);
+        let idx = encode_action(&spec, &cfgs);
+        let back = decode_action(&spec, &idx);
+        assert_eq!(cfgs, back);
+    }
+}
+
+/// PROPERTY: the state vector is finite and the masks agree with the spec.
+#[test]
+fn prop_state_and_masks_consistent() {
+    let mut rng = Pcg32::new(5000);
+    for case in 0..40 {
+        let spec = any_spec(&mut rng);
+        let kind = match case % 3 {
+            0 => WorkloadKind::SteadyLow,
+            1 => WorkloadKind::Fluctuating,
+            _ => WorkloadKind::SteadyHigh,
+        };
+        let mut env = Env::from_workload(
+            spec,
+            ClusterTopology::paper_testbed(),
+            QosWeights::default(),
+            kind,
+            rng.next_u64(),
+            Box::new(MovingMaxPredictor::default()),
+            10,
+            60,
+            3.0,
+        );
+        for _ in 0..3 {
+            let action = {
+                let obs = env.observe();
+                let s = build_state(&obs);
+                assert!(s.iter().all(|x| x.is_finite()), "case {case}: non-finite state");
+                let masks = build_masks(obs.spec);
+                for t in 0..obs.spec.n_tasks() {
+                    let base = t * opd::nn::spec::HEAD_DIM;
+                    for v in 0..opd::nn::spec::MAX_VARIANTS {
+                        assert_eq!(
+                            masks.head[base + v],
+                            v < obs.spec.tasks[t].n_variants(),
+                            "case {case}: variant mask mismatch"
+                        );
+                    }
+                }
+                random_config(&mut rng, obs.spec)
+            };
+            env.step(&action);
+        }
+    }
+}
+
+/// PROPERTY: GAE is linear in (rewards, values) jointly scaled.
+#[test]
+fn prop_gae_linearity() {
+    let mut rng = Pcg32::new(6000);
+    for _ in 0..200 {
+        let t = 1 + rng.below(50) as usize;
+        let rewards: Vec<f64> = (0..t).map(|_| rng.normal()).collect();
+        let values: Vec<f64> = (0..t).map(|_| rng.normal()).collect();
+        let (adv1, _) = gae(&rewards, &values, 0.0, 0.99, 0.95);
+        let r2: Vec<f64> = rewards.iter().map(|r| r * 2.0).collect();
+        let v2: Vec<f64> = values.iter().map(|v| v * 2.0).collect();
+        let (adv2, _) = gae(&r2, &v2, 0.0, 0.99, 0.95);
+        for (a1, a2) in adv1.iter().zip(&adv2) {
+            assert!((a2 - 2.0 * a1).abs() < 1e-9, "GAE must be linear");
+        }
+    }
+}
+
+/// PROPERTY: every agent's decision is a valid configuration on every
+/// pipeline and workload.
+#[test]
+fn prop_agents_always_valid() {
+    use opd::agents::{Agent, GreedyAgent, IpaAgent, OpdAgent, RandomAgent};
+    let mut rng = Pcg32::new(7000);
+    for case in 0..20 {
+        let spec = any_spec(&mut rng);
+        let mut env = Env::from_workload(
+            spec,
+            ClusterTopology::paper_testbed(),
+            QosWeights::default(),
+            WorkloadKind::Fluctuating,
+            rng.next_u64(),
+            Box::new(MovingMaxPredictor::default()),
+            10,
+            40,
+            3.0,
+        );
+        let params = vec![0.01f32; opd::nn::spec::POLICY_PARAM_COUNT];
+        let mut agents: Vec<Box<dyn Agent>> = vec![
+            Box::new(RandomAgent::new(case as u64)),
+            Box::new(GreedyAgent::new()),
+            Box::new(IpaAgent::new()),
+            Box::new(OpdAgent::native(params, case as u64)),
+        ];
+        for agent in agents.iter_mut() {
+            let obs = env.observe();
+            let action = agent.decide(&obs);
+            obs.spec
+                .validate_config(&action)
+                .unwrap_or_else(|e| panic!("case {case} {}: {e}", agent.name()));
+        }
+    }
+}
+
+/// PROPERTY: deterministic replay — same seeds, same everything.
+#[test]
+fn prop_full_determinism() {
+    use opd::agents::RandomAgent;
+    use opd::sim::run_cycle;
+    let run = |seed: u64| {
+        let mut env = Env::from_workload(
+            catalog::preset(Preset::P2).spec,
+            ClusterTopology::paper_testbed(),
+            QosWeights::default(),
+            WorkloadKind::Fluctuating,
+            seed,
+            Box::new(MovingMaxPredictor::default()),
+            10,
+            120,
+            3.0,
+        );
+        let mut agent = RandomAgent::new(seed);
+        let r = run_cycle(&mut env, &mut agent);
+        (r.qos_series, r.cost_series)
+    };
+    assert_eq!(run(5), run(5));
+    assert_ne!(run(5), run(6));
+}
