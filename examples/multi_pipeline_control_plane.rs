@@ -1,0 +1,91 @@
+//! Multi-pipeline control-plane driver: boots an *empty* leader, then drives
+//! the v1 REST API the way an operator (or `opd apply`) would — two
+//! pipelines deployed onto the shared 30-core cluster, an agent hot-swap,
+//! cluster accounting, a delete — all over real HTTP, no PJRT required.
+//!
+//! Run: cargo run --release --example multi_pipeline_control_plane
+
+use std::sync::Arc;
+
+use opd::cluster::ClusterTopology;
+use opd::serve::{
+    http_delete, http_get, http_post, v1_router, ControlPlane, HttpServer, Leader, TenantFactory,
+};
+use opd::util::json::Json;
+
+fn main() {
+    opd::util::logging::init();
+    let cp = Arc::new(ControlPlane::new());
+    let (mut leader, tx) = Leader::new(
+        cp.clone(),
+        ClusterTopology::paper_testbed(),
+        3.0,
+        TenantFactory::native(),
+    );
+    let server = HttpServer::start("127.0.0.1:0", v1_router(&cp, tx), 4).expect("bind leader");
+    let addr = server.addr;
+    println!("leader control plane: http://{addr}\n");
+
+    let client = std::thread::spawn(move || {
+        let post = |path: &str, body: &str| http_post(&addr, path, body).expect("http");
+        let get = |path: &str| http_get(&addr, path).expect("http");
+
+        let (code, body) = post(
+            "/v1/pipelines",
+            r#"{"name":"vid","pipeline":"video-analytics","workload":"steady-high","agent":"greedy","seed":42}"#,
+        );
+        println!("POST /v1/pipelines vid          → {code}");
+        assert_eq!(code, 201, "{body}");
+        let (code, _) = post(
+            "/v1/pipelines",
+            r#"{"name":"iot","pipeline":"iot-anomaly","workload":"steady-low","agent":"ipa","seed":7}"#,
+        );
+        println!("POST /v1/pipelines iot          → {code}");
+        assert_eq!(code, 201);
+
+        // let the shared loop serve both for a while
+        std::thread::sleep(std::time::Duration::from_millis(500));
+
+        let (code, _) = post("/v1/pipelines/vid/agent", r#"{"agent":"ipa"}"#);
+        println!("POST /v1/pipelines/vid/agent    → {code} (greedy → ipa hot-swap)");
+        assert_eq!(code, 200);
+
+        let (code, body) = get("/v1/cluster");
+        assert_eq!(code, 200);
+        let cl = Json::parse(&body).expect("cluster json");
+        println!(
+            "GET  /v1/cluster                → {code}: used {:.1} / {:.0} cores across {} pipelines",
+            cl.req_f64("used").unwrap(),
+            cl.req_f64("capacity").unwrap(),
+            cl.get("pipelines").unwrap().as_arr().unwrap().len()
+        );
+
+        let (code, body) = get("/v1/pipelines/vid");
+        assert_eq!(code, 200);
+        let s = Json::parse(&body).expect("status json");
+        println!(
+            "GET  /v1/pipelines/vid          → {code}: agent={} gen={} avg_qos={:.3} avg_cost={:.1}",
+            s.req_str("agent").unwrap(),
+            s.get("generation").unwrap().as_i64().unwrap(),
+            s.req_f64("avg_qos").unwrap(),
+            s.req_f64("avg_cost").unwrap()
+        );
+
+        let (code, _) = http_delete(&addr, "/v1/pipelines/iot").expect("http");
+        println!("DEL  /v1/pipelines/iot          → {code}");
+        assert_eq!(code, 200);
+
+        let (code, _) = post("/v1/shutdown", "");
+        println!("POST /v1/shutdown               → {code}");
+        assert_eq!(code, 200);
+    });
+
+    leader.run(); // single-threaded sim loop; returns on /v1/shutdown
+    client.join().unwrap();
+    println!(
+        "\nOK: {} pipeline(s) still deployed at t={:.0}s of shared-cluster serving.",
+        leader.env.n_tenants(),
+        leader.env.now
+    );
+    server.shutdown();
+}

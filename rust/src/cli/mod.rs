@@ -5,7 +5,10 @@
 //!   compare   all four agents on the same replayed trace (Fig. 4/5 view)
 //!   train     Algorithm-2 PPO training → checkpoint + history (Fig. 7 data)
 //!   predict   predictor evaluation (Fig. 3 view: LSTM vs naive baselines)
-//!   serve     end-to-end leader: sim loop + Prometheus/JSON HTTP endpoints
+//!   serve     multi-pipeline leader: shared-cluster sim loop + v1 REST API
+//!             (+ Prometheus/JSON observability endpoints)
+//!   apply     client: declaratively apply/delete a pipeline, or hot-swap its
+//!             agent, on a running leader over the v1 API
 //!   info      artifact manifest + runtime platform report
 
 pub mod args;
@@ -18,6 +21,9 @@ use crate::agents::{baseline, Agent, OpdAgent};
 use crate::config::{AgentKind, ExperimentConfig};
 use crate::pipeline::catalog;
 use crate::runtime::{read_params, OpdRuntime};
+use crate::serve::{
+    http_delete, http_post, http_put, v1_router, DeploySpec, HttpServer, Leader, TenantFactory,
+};
 use crate::sim::{run_cycle, CycleResult, Env};
 use crate::util::json::Json;
 use crate::util::stats;
@@ -40,7 +46,17 @@ COMMANDS
              [--workload W] [--out ckpt.bin] [--history hist.json]
   predict    [--workload W] [--secs N] [--seed N] [--native]
   serve      --addr HOST:PORT [--pipeline P] [--workload W] [--agent A]
-             [--cycle S] [--realtime]
+             [--name NAME] [--cycle S] [--interval S] [--realtime] [--empty]
+             boots the multi-pipeline leader; --empty starts with no pipeline
+             (terminate via POST /v1/shutdown). v1 REST API:
+               GET/POST   /v1/pipelines          list / create
+               GET/PUT/DELETE /v1/pipelines/{name}  status / apply / remove
+               POST       /v1/pipelines/{name}/agent  hot-swap agent
+               GET        /v1/cluster            shared-capacity accounting
+               POST       /v1/shutdown           stop the leader
+  apply      --addr HOST:PORT --name NAME (--pipeline P [--workload W]
+             [--agent A] [--interval S] [--seed N] | --delete | --set-agent A)
+             PUTs a declarative pipeline spec to a running leader
   info       [--artifacts DIR]
 
 COMMON FLAGS
@@ -357,67 +373,118 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.str_flag("addr").unwrap_or_else(|| "127.0.0.1:9100".into());
     let realtime = args.switch("realtime");
     let native = args.switch("native");
+    let empty = args.switch("empty");
     let params_path = args.str_flag("params");
+    let name = args.str_flag("name").unwrap_or_else(|| cfg.pipeline.clone());
     check_unknown(args)?;
     let rt = load_runtime(&cfg, native);
+
     let cp = std::sync::Arc::new(crate::serve::ControlPlane::new());
-    let server = cp.serve(&addr)?;
-    println!("leader serving on http://{} (/metrics /state /series /healthz)", server.addr);
-
-    let mut env = make_env(&cfg, &rt)?;
-    let mut agent = make_agent(cfg.agent, cfg.seed, &rt, params_path.as_deref(), true)?;
-    cp.metrics.describe("opd_qos", "pipeline QoS (Eq. 3)");
-    cp.metrics.describe("opd_cost_cores", "pipeline cost in CPU cores (Eq. 2)");
+    cp.metrics.describe("opd_qos", "per-pipeline QoS (Eq. 3)");
+    cp.metrics.describe("opd_cost_cores", "per-pipeline cost in CPU cores (Eq. 2)");
     cp.metrics.describe("opd_decisions_total", "configuration decisions applied");
+    cp.metrics.describe("opd_decision_seconds", "wall-clock seconds per agent decision");
+    cp.metrics.describe("opd_pipelines", "pipelines deployed on the shared cluster");
+    cp.metrics.describe("opd_cluster_used_cores", "cores allocated across all pipelines");
 
-    while !env.done() {
-        let t0 = std::time::Instant::now();
-        let action = {
-            let obs = env.observe();
-            cp.series.record("load", obs.load_now);
-            cp.series.record("load_pred", obs.load_pred);
-            agent.decide(&obs)
+    // agents/predictors for API-applied pipelines reuse the CLI wiring (HLO
+    // runtime when available, native fallback otherwise)
+    let rt_agent = rt.clone();
+    let params_agent = params_path.clone();
+    let rt_pred = rt.clone();
+    let factory = TenantFactory {
+        make_agent: Box::new(move |kind, seed| {
+            make_agent(kind, seed, &rt_agent, params_agent.as_deref(), true)
+                .map_err(|e| format!("{e:#}"))
+        }),
+        make_predictor: Box::new(move || make_predictor(&rt_pred)),
+    };
+    let (mut leader, tx) = Leader::new(cp.clone(), cfg.topology(), cfg.startup_secs, factory);
+    leader.weights = cfg.weights;
+    // --empty boots a long-running control plane (stop via POST /v1/shutdown)
+    // and therefore paces to wall-clock so the loop doesn't spin a core with
+    // a racing sim clock; otherwise the leader serves one --cycle worth of
+    // simulated time as fast as the hardware allows unless --realtime asks
+    // for pacing
+    leader.realtime = realtime || empty;
+    leader.max_secs = if empty { None } else { Some(cfg.cycle_secs as f64) };
+    if !empty {
+        let spec = DeploySpec {
+            name,
+            pipeline: cfg.pipeline.clone(),
+            workload: cfg.workload,
+            agent: cfg.agent,
+            adapt_interval_secs: cfg.adapt_interval_secs,
+            seed: cfg.seed,
+            initial: None,
         };
-        let decision_s = t0.elapsed().as_secs_f64();
-        let step = env.step(&action);
-        for (q, c) in step.qos_series.iter().zip(&step.cost_series) {
-            cp.series.record("qos", *q);
-            cp.series.record("cost", *c);
-        }
-        cp.metrics.set_gauge("opd_qos", &[("agent", agent.name())], step.qos);
-        cp.metrics.set_gauge("opd_cost_cores", &[("agent", agent.name())], step.cost);
-        cp.metrics.inc("opd_decisions_total", &[], 1.0);
-        cp.metrics.observe("opd_decision_seconds", &[], decision_s);
-        cp.publish_state(
-            Json::obj()
-                .set("t", env.elapsed())
-                .set("agent", agent.name())
-                .set("qos", step.qos)
-                .set("cost", step.cost)
-                .set("clamped", step.clamped)
-                .set(
-                    "config",
-                    Json::Arr(
-                        step.applied
-                            .iter()
-                            .map(|c| {
-                                Json::obj()
-                                    .set("variant", c.variant)
-                                    .set("replicas", c.replicas)
-                                    .set("batch", c.batch())
-                            })
-                            .collect(),
-                    ),
-                ),
-        );
-        if realtime {
-            std::thread::sleep(std::time::Duration::from_secs_f64(
-                (cfg.adapt_interval_secs as f64 - decision_s).max(0.0),
-            ));
-        }
+        leader
+            .deploy(&spec)
+            .map_err(|e| anyhow!("initial deploy of '{}' failed: {}", cfg.pipeline, e.message))?;
     }
-    println!("cycle complete ({}s simulated); shutting down", cfg.cycle_secs);
+    let server = HttpServer::start(&addr, v1_router(&cp, tx), 4)?;
+    println!(
+        "leader serving on http://{} (v1: /v1/pipelines /v1/cluster; classic: /metrics /state /series /healthz)",
+        server.addr
+    );
+    leader.run();
+    println!(
+        "leader stopped at t={:.0}s ({} pipeline(s) deployed); shutting down",
+        leader.env.now,
+        leader.env.n_tenants()
+    );
     server.shutdown();
+    Ok(())
+}
+
+/// Declarative client: PUT a pipeline spec to a running leader (or delete a
+/// pipeline / hot-swap its agent) over the v1 API.
+pub fn cmd_apply(args: &Args) -> Result<()> {
+    use std::net::ToSocketAddrs;
+
+    let addr_s = args.str_flag("addr").unwrap_or_else(|| "127.0.0.1:9100".into());
+    let name = args.str_flag("name").ok_or_else(|| anyhow!("apply requires --name"))?;
+    let delete = args.switch("delete");
+    let set_agent = args.str_flag("set-agent");
+    let pipeline = args.str_flag("pipeline");
+    let workload = args.str_flag("workload");
+    let agent = args.str_flag("agent");
+    let interval = args.usize_flag("interval", 10).map_err(|e| anyhow!(e))?;
+    let seed = args.u64_flag("seed", 42).map_err(|e| anyhow!(e))?;
+    check_unknown(args)?;
+    let addr = addr_s
+        .to_socket_addrs()
+        .map_err(|e| anyhow!("cannot resolve --addr '{addr_s}': {e}"))?
+        .next()
+        .ok_or_else(|| anyhow!("--addr '{addr_s}' resolved to nothing"))?;
+
+    let (code, body) = if delete {
+        http_delete(&addr, &format!("/v1/pipelines/{name}"))?
+    } else if let Some(kind) = set_agent {
+        http_post(
+            &addr,
+            &format!("/v1/pipelines/{name}/agent"),
+            &Json::obj().set("agent", kind.as_str()).set("seed", seed as i64).to_string(),
+        )?
+    } else {
+        let pipeline = pipeline
+            .ok_or_else(|| anyhow!("apply requires --pipeline (or --delete / --set-agent A)"))?;
+        let mut j = Json::obj()
+            .set("pipeline", pipeline.as_str())
+            .set("adapt_interval_secs", interval)
+            .set("seed", seed as i64);
+        if let Some(w) = workload {
+            j = j.set("workload", w.as_str());
+        }
+        if let Some(a) = agent {
+            j = j.set("agent", a.as_str());
+        }
+        http_put(&addr, &format!("/v1/pipelines/{name}"), &j.to_string())?
+    };
+    println!("HTTP {code}\n{body}");
+    if code >= 400 {
+        return Err(anyhow!("apply failed with HTTP {code}"));
+    }
     Ok(())
 }
 
@@ -458,6 +525,7 @@ pub fn run() -> i32 {
         Some("train") => cmd_train(&args),
         Some("predict") => cmd_predict(&args),
         Some("serve") => cmd_serve(&args),
+        Some("apply") => cmd_apply(&args),
         Some("info") => cmd_info(&args),
         Some("help") | None => {
             println!("{USAGE}");

@@ -1,128 +1,60 @@
-//! The "Kubernetes API" substrate: applying a pipeline configuration to the
-//! cluster (the paper applies SeldonDeployment changes via the Kubernetes
-//! Python API; the agents here call `ClusterApi::apply`).
+//! Single-tenant facade over the multi-tenant `DeploymentStore` (store.rs).
 //!
-//! Behavioural fidelity that matters to the algorithms:
+//! The paper's testbed applies SeldonDeployment changes via the Kubernetes
+//! Python API; agents here call `ClusterApi::apply`. Historically this type
+//! owned the whole cluster; the control-plane redesign moved the state into
+//! `DeploymentStore` (named pipelines sharing W_max) and `ClusterApi` became
+//! the one-pipeline view the single-pipeline `Env`, trainer and benches use.
+//!
+//! Behavioural fidelity that matters to the algorithms (implemented in the
+//! store, identical for one tenant):
 //!  * **Resource constraint** (Eq. 4): a configuration whose total cores
 //!    exceed capacity is *clamped* — replicas are shed round-robin from the
-//!    most expensive stages until it fits (the paper's "restrictions ... to
-//!    prevent ... system overload").
+//!    most expensive stages until it fits, then variants are downgraded.
 //!  * **Container startup delay**: scaled-up or restarted replicas become
-//!    ready only after `startup_secs` — switching a variant restarts the
-//!    whole stage (image pull + model load), so config thrashing has a real
-//!    QoS price. Scale-down takes effect immediately.
+//!    ready only after `startup_secs`; a variant switch restarts the whole
+//!    stage. Scale-down takes effect immediately.
 //!  * **Placement**: replicas must bin-pack onto nodes (placement.rs);
 //!    fragmentation can shrink a config further even below W_max.
 
 use crate::cluster::node::ClusterTopology;
-use crate::cluster::placement::{place, PlacementRequest};
+use crate::cluster::store::DeploymentStore;
+pub use crate::cluster::store::{ApplyOutcome, Container};
 use crate::pipeline::{PipelineSpec, TaskConfig};
 
-/// A deployed replica.
-#[derive(Clone, Copy, Debug)]
-pub struct Container {
-    pub stage: usize,
-    pub variant: usize,
-    pub cores: f64,
-    pub node: usize,
-    /// simulation time at which this replica is Ready
-    pub ready_at: f64,
-}
+/// Name under which `ClusterApi` keeps its single deployment in the store.
+pub const DEFAULT_DEPLOYMENT: &str = "default";
 
-/// Result of one `apply` call.
-#[derive(Clone, Debug)]
-pub struct ApplyOutcome {
-    /// configuration actually deployed (may be clamped)
-    pub applied: Vec<TaskConfig>,
-    /// true when the requested config had to be shrunk to fit
-    pub clamped: bool,
-    /// replicas restarted or newly created by this apply
-    pub restarts: usize,
-}
-
-/// Cluster state + deployment controller.
+/// Cluster state + deployment controller for exactly one pipeline.
 pub struct ClusterApi {
-    pub topo: ClusterTopology,
-    pub startup_secs: f64,
-    containers: Vec<Container>,
-    current: Vec<TaskConfig>,
+    store: DeploymentStore,
 }
 
 impl ClusterApi {
     pub fn new(topo: ClusterTopology, startup_secs: f64) -> Self {
-        Self { topo, startup_secs, containers: Vec::new(), current: Vec::new() }
+        Self { store: DeploymentStore::new(topo, startup_secs) }
+    }
+
+    /// The underlying multi-tenant store (e.g. to hand the cluster over to a
+    /// multi-pipeline environment).
+    pub fn into_store(self) -> DeploymentStore {
+        self.store
     }
 
     pub fn current_config(&self) -> &[TaskConfig] {
-        &self.current
+        self.store.get(DEFAULT_DEPLOYMENT).map(|d| d.config.as_slice()).unwrap_or(&[])
     }
 
     pub fn containers(&self) -> &[Container] {
-        &self.containers
+        self.store
+            .get(DEFAULT_DEPLOYMENT)
+            .map(|d| d.containers.as_slice())
+            .unwrap_or(&[])
     }
 
     /// Shrink `cfgs` until it both respects W_max and bin-packs onto nodes.
-    /// Sheds one replica at a time from the stage with the highest per-stage
-    /// cost, never going below 1 replica per stage.
     pub fn fit_config(&self, spec: &PipelineSpec, cfgs: &[TaskConfig]) -> (Vec<TaskConfig>, bool) {
-        let mut cfgs = cfgs.to_vec();
-        let mut clamped = false;
-        loop {
-            let requests: Vec<PlacementRequest> = spec
-                .tasks
-                .iter()
-                .zip(&cfgs)
-                .enumerate()
-                .map(|(i, (t, c))| PlacementRequest {
-                    stage: i,
-                    count: c.replicas,
-                    cores: t.variants[c.variant].cores,
-                })
-                .collect();
-            let fits_total = spec.total_cores(&cfgs) <= self.topo.capacity() + 1e-9;
-            if fits_total && place(&self.topo, &requests).is_ok() {
-                return (cfgs, clamped);
-            }
-            // shed from the most expensive stage that still has >1 replica
-            let victim = cfgs
-                .iter()
-                .enumerate()
-                .filter(|(_, c)| c.replicas > 1)
-                .max_by(|(i, a), (j, b)| {
-                    let ca = a.cores(&spec.tasks[*i]);
-                    let cb = b.cores(&spec.tasks[*j]);
-                    ca.partial_cmp(&cb).unwrap_or(std::cmp::Ordering::Equal)
-                })
-                .map(|(i, _)| i);
-            match victim {
-                Some(i) => {
-                    cfgs[i].replicas -= 1;
-                    clamped = true;
-                }
-                None => {
-                    // all stages at 1 replica and still infeasible: downgrade
-                    // the most expensive variant; if already minimal, give up
-                    // and return the floor config
-                    let heavy = cfgs
-                        .iter()
-                        .enumerate()
-                        .filter(|(_, c)| c.variant > 0)
-                        .max_by(|(i, a), (j, b)| {
-                            let ca = spec.tasks[*i].variants[a.variant].cores;
-                            let cb = spec.tasks[*j].variants[b.variant].cores;
-                            ca.partial_cmp(&cb).unwrap_or(std::cmp::Ordering::Equal)
-                        })
-                        .map(|(i, _)| i);
-                    match heavy {
-                        Some(i) => {
-                            cfgs[i].variant -= 1;
-                            clamped = true;
-                        }
-                        None => return (cfgs, true),
-                    }
-                }
-            }
-        }
+        self.store.fit_config(DEFAULT_DEPLOYMENT, spec, cfgs)
     }
 
     /// Apply a (possibly infeasible) configuration at simulation time `now`.
@@ -132,80 +64,27 @@ impl ClusterApi {
         cfgs: &[TaskConfig],
         now: f64,
     ) -> Result<ApplyOutcome, String> {
-        spec.validate_config(cfgs)?;
-        let (applied, clamped) = self.fit_config(spec, cfgs);
-
-        // Diff against the running deployment, stage by stage.
-        let mut new_containers: Vec<Container> = Vec::new();
-        let mut restarts = 0usize;
-        let requests: Vec<PlacementRequest> = spec
-            .tasks
-            .iter()
-            .zip(&applied)
-            .enumerate()
-            .map(|(i, (t, c))| PlacementRequest {
-                stage: i,
-                count: c.replicas,
-                cores: t.variants[c.variant].cores,
-            })
-            .collect();
-        let bindings = place(&self.topo, &requests)
-            .map_err(|s| format!("placement failed for stage {s} after clamping"))?;
-
-        for (stage, (task, cfg)) in spec.tasks.iter().zip(&applied).enumerate() {
-            let cores = task.variants[cfg.variant].cores;
-            let old: Vec<&Container> =
-                self.containers.iter().filter(|c| c.stage == stage).collect();
-            let variant_changed =
-                self.current.get(stage).map(|c| c.variant != cfg.variant).unwrap_or(true);
-            let stage_bindings = bindings.iter().filter(|b| b.stage == stage);
-            for (ri, b) in stage_bindings.enumerate() {
-                let ready_at = if variant_changed {
-                    // rolling restart of the whole stage: model load time
-                    restarts += 1;
-                    now + self.startup_secs
-                } else if ri < old.len() {
-                    // surviving replica keeps its readiness
-                    old[ri].ready_at
-                } else {
-                    // scale-up: new replica must start
-                    restarts += 1;
-                    now + self.startup_secs
-                };
-                new_containers.push(Container {
-                    stage,
-                    variant: cfg.variant,
-                    cores,
-                    node: b.node,
-                    ready_at,
-                });
-            }
-        }
-
-        // commit: rebuild node usage from the new container set
-        self.topo.reset();
-        for c in &new_containers {
-            self.topo.nodes[c.node].alloc(c.cores);
-        }
-        self.containers = new_containers;
-        self.current = applied.clone();
-        Ok(ApplyOutcome { applied, clamped, restarts })
+        self.store.apply(DEFAULT_DEPLOYMENT, spec, cfgs, now)
     }
 
     /// Ready replica count per stage at time `now`.
     pub fn ready_replicas(&self, n_stages: usize, now: f64) -> Vec<usize> {
-        let mut ready = vec![0usize; n_stages];
-        for c in &self.containers {
-            if c.ready_at <= now && c.stage < n_stages {
-                ready[c.stage] += 1;
-            }
-        }
-        ready
+        self.store.ready_replicas(DEFAULT_DEPLOYMENT, n_stages, now)
     }
 
     /// Cores currently allocated (the billed cost basis).
     pub fn allocated_cores(&self) -> f64 {
-        self.containers.iter().map(|c| c.cores).sum()
+        self.store.allocated_cores()
+    }
+}
+
+/// Read-through to the store so existing call sites (`api.topo.capacity()`,
+/// `api.startup_secs`, …) keep working against the shared-cluster state.
+impl std::ops::Deref for ClusterApi {
+    type Target = DeploymentStore;
+
+    fn deref(&self) -> &DeploymentStore {
+        &self.store
     }
 }
 
@@ -225,6 +104,7 @@ mod tests {
         let (spec, mut api) = setup();
         let out = api.apply(&spec, &spec.default_config(), 0.0).unwrap();
         assert!(!out.clamped);
+        assert_eq!(out.generation, 1);
         assert_eq!(out.applied.len(), spec.n_tasks());
         assert_eq!(api.containers().len(), spec.n_tasks()); // 1 replica each
         // nothing ready before startup completes
@@ -258,6 +138,7 @@ mod tests {
         cfgs[0].replicas = 3;
         let out = api.apply(&spec, &cfgs, 10.0).unwrap();
         assert_eq!(out.restarts, 2); // two new replicas only
+        assert_eq!(out.generation, 2);
         let ready = api.ready_replicas(spec.n_tasks(), 10.5);
         assert_eq!(ready[0], 1, "old replica stays ready during scale-up");
         let ready_later = api.ready_replicas(spec.n_tasks(), 14.0);

@@ -1,11 +1,14 @@
-//! Simulated Kubernetes edge cluster: nodes, replica placement, and the
-//! deployment API the agents act through (see DESIGN.md §2 for the
+//! Simulated Kubernetes edge cluster: nodes, replica placement, the
+//! multi-tenant deployment store behind the v1 control-plane API, and the
+//! single-pipeline facade the agents act through (see DESIGN.md §2 for the
 //! paper→build substitution argument).
 
 pub mod api;
 pub mod node;
 pub mod placement;
+pub mod store;
 
-pub use api::{ApplyOutcome, ClusterApi, Container};
+pub use api::{ClusterApi, DEFAULT_DEPLOYMENT};
 pub use node::{ClusterTopology, Node};
-pub use placement::{place, Binding, PlacementRequest};
+pub use placement::{place, place_onto, Binding, PlacementRequest};
+pub use store::{ApplyOutcome, Container, Deployment, DeploymentStore};

@@ -29,7 +29,18 @@ pub fn place(
     topo: &ClusterTopology,
     requests: &[PlacementRequest],
 ) -> Result<Vec<Binding>, usize> {
-    let mut free: Vec<f64> = topo.nodes.iter().map(|n| n.cores_total).collect();
+    let free: Vec<f64> = topo.nodes.iter().map(|n| n.cores_total).collect();
+    place_onto(&free, requests)
+}
+
+/// Place onto explicit per-node free-core budgets — the shared-cluster path,
+/// where `free` is each node's capacity minus the cores other tenants'
+/// containers already hold there.
+pub fn place_onto(
+    free: &[f64],
+    requests: &[PlacementRequest],
+) -> Result<Vec<Binding>, usize> {
+    let mut free = free.to_vec();
     // FFD: sort stages by per-replica size descending for better packing
     let mut order: Vec<usize> = (0..requests.len()).collect();
     order.sort_by(|&a, &b| {
@@ -107,6 +118,18 @@ mod tests {
             PlacementRequest { stage: 7, count: 4, cores: 1.0 },
         ];
         assert_eq!(place(&topo, &reqs), Err(7));
+    }
+
+    #[test]
+    fn place_onto_respects_per_node_free_budgets() {
+        // 2×4-core nodes but one node already holds 3 cores of another
+        // tenant: a 2-core replica must land on the emptier node
+        let reqs = [PlacementRequest { stage: 0, count: 2, cores: 2.0 }];
+        let b = place_onto(&[1.0, 4.0], &reqs).unwrap();
+        assert!(b.iter().all(|x| x.node == 1));
+        // and three of them no longer fit
+        let reqs = [PlacementRequest { stage: 0, count: 3, cores: 2.0 }];
+        assert_eq!(place_onto(&[1.0, 4.0], &reqs), Err(0));
     }
 
     #[test]

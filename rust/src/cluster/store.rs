@@ -1,0 +1,492 @@
+//! Multi-tenant deployment store: the control-plane heart of the shared
+//! cluster. Several *named* pipelines bin-pack onto one `ClusterTopology`;
+//! each `apply` is a declarative, versioned deployment change (the paper
+//! applies SeldonDeployment changes through the Kubernetes API — this is the
+//! equivalent server-side object store, generalized from one hard-wired
+//! pipeline to InferLine/IPA-style shared-capacity provisioning).
+//!
+//! Invariants the rest of the system leans on:
+//!  * **Shared W_max** (Eq. 4): a tenant's feasible region is the capacity
+//!    left over by *other* tenants' running containers, per node. Clamping
+//!    (`fit_config`) sheds replicas, then downgrades variants, against that
+//!    shared budget.
+//!  * **Versioned applies**: every successful apply bumps the deployment's
+//!    generation (1 on create), so clients can detect staleness.
+//!  * **Startup delay**: identical semantics to the single-tenant API —
+//!    variant switches restart a stage, scale-ups start cold, scale-downs
+//!    are immediate.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::node::ClusterTopology;
+use crate::cluster::placement::{place_onto, PlacementRequest};
+use crate::pipeline::{PipelineSpec, TaskConfig};
+
+/// A deployed replica.
+#[derive(Clone, Copy, Debug)]
+pub struct Container {
+    pub stage: usize,
+    pub variant: usize,
+    pub cores: f64,
+    pub node: usize,
+    /// simulation time at which this replica is Ready
+    pub ready_at: f64,
+}
+
+/// Result of one `apply` call.
+#[derive(Clone, Debug)]
+pub struct ApplyOutcome {
+    /// configuration actually deployed (may be clamped)
+    pub applied: Vec<TaskConfig>,
+    /// true when the requested config had to be shrunk to fit
+    pub clamped: bool,
+    /// replicas restarted or newly created by this apply
+    pub restarts: usize,
+    /// per-deployment version, bumped on every successful apply (1 = create)
+    pub generation: u64,
+}
+
+/// One named pipeline deployment living on the shared cluster.
+#[derive(Clone, Debug)]
+pub struct Deployment {
+    pub name: String,
+    pub spec: PipelineSpec,
+    /// configuration currently deployed (post-clamping)
+    pub config: Vec<TaskConfig>,
+    pub generation: u64,
+    pub containers: Vec<Container>,
+}
+
+impl Deployment {
+    /// Cores this deployment holds (its share of the Eq. 2 bill).
+    pub fn allocated_cores(&self) -> f64 {
+        self.containers.iter().map(|c| c.cores).sum()
+    }
+}
+
+fn build_requests(spec: &PipelineSpec, cfgs: &[TaskConfig]) -> Vec<PlacementRequest> {
+    spec.tasks
+        .iter()
+        .zip(cfgs)
+        .enumerate()
+        .map(|(i, (t, c))| PlacementRequest {
+            stage: i,
+            count: c.replicas,
+            cores: t.variants[c.variant].cores,
+        })
+        .collect()
+}
+
+/// Cluster state + multi-tenant deployment controller.
+pub struct DeploymentStore {
+    pub topo: ClusterTopology,
+    pub startup_secs: f64,
+    deployments: BTreeMap<String, Deployment>,
+}
+
+impl DeploymentStore {
+    pub fn new(topo: ClusterTopology, startup_secs: f64) -> Self {
+        Self { topo, startup_secs, deployments: BTreeMap::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.deployments.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.deployments.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Deployment> {
+        self.deployments.get(name)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.deployments.keys().cloned().collect()
+    }
+
+    pub fn deployments(&self) -> impl Iterator<Item = &Deployment> {
+        self.deployments.values()
+    }
+
+    /// Per-node cores still available to deployment `name`: node capacity
+    /// minus every *other* tenant's running containers.
+    fn free_excluding(&self, name: &str) -> Vec<f64> {
+        let mut free: Vec<f64> =
+            self.topo.nodes.iter().map(|n| n.cores_total).collect();
+        for d in self.deployments.values() {
+            if d.name == name {
+                continue;
+            }
+            for c in &d.containers {
+                if c.node < free.len() {
+                    free[c.node] -= c.cores;
+                }
+            }
+        }
+        for f in &mut free {
+            if *f < 0.0 {
+                *f = 0.0;
+            }
+        }
+        free
+    }
+
+    /// Total cores available to deployment `name` (W_max minus other
+    /// tenants' allocations) — the budget its agent should plan against.
+    pub fn capacity_for(&self, name: &str) -> f64 {
+        self.free_excluding(name).iter().sum()
+    }
+
+    /// Cores held by all deployments *except* `name`.
+    pub fn cores_used_by_others(&self, name: &str) -> f64 {
+        self.deployments
+            .values()
+            .filter(|d| d.name != name)
+            .map(|d| d.allocated_cores())
+            .sum()
+    }
+
+    /// Shrink `cfgs` until it both respects the tenant's shared budget and
+    /// bin-packs onto the nodes next to the other tenants' replicas. Sheds
+    /// one replica at a time from the stage with the highest per-stage cost
+    /// (never below 1 replica); once every stage is at 1 replica, downgrades
+    /// the most expensive variant; at the floor config, gives up and returns
+    /// it flagged as clamped.
+    pub fn fit_config(
+        &self,
+        name: &str,
+        spec: &PipelineSpec,
+        cfgs: &[TaskConfig],
+    ) -> (Vec<TaskConfig>, bool) {
+        let free = self.free_excluding(name);
+        let budget: f64 = free.iter().sum();
+        let mut cfgs = cfgs.to_vec();
+        let mut clamped = false;
+        loop {
+            let requests = build_requests(spec, &cfgs);
+            let fits_total = spec.total_cores(&cfgs) <= budget + 1e-9;
+            if fits_total && place_onto(&free, &requests).is_ok() {
+                return (cfgs, clamped);
+            }
+            // shed from the most expensive stage that still has >1 replica
+            let victim = cfgs
+                .iter()
+                .enumerate()
+                .filter(|(_, c)| c.replicas > 1)
+                .max_by(|(i, a), (j, b)| {
+                    let ca = a.cores(&spec.tasks[*i]);
+                    let cb = b.cores(&spec.tasks[*j]);
+                    ca.partial_cmp(&cb).unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .map(|(i, _)| i);
+            match victim {
+                Some(i) => {
+                    cfgs[i].replicas -= 1;
+                    clamped = true;
+                }
+                None => {
+                    // all stages at 1 replica and still infeasible: downgrade
+                    // the most expensive variant; if already minimal, give up
+                    // and return the floor config
+                    let heavy = cfgs
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, c)| c.variant > 0)
+                        .max_by(|(i, a), (j, b)| {
+                            let ca = spec.tasks[*i].variants[a.variant].cores;
+                            let cb = spec.tasks[*j].variants[b.variant].cores;
+                            ca.partial_cmp(&cb).unwrap_or(std::cmp::Ordering::Equal)
+                        })
+                        .map(|(i, _)| i);
+                    match heavy {
+                        Some(i) => {
+                            cfgs[i].variant -= 1;
+                            clamped = true;
+                        }
+                        None => return (cfgs, true),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Apply a (possibly infeasible) configuration for deployment `name` at
+    /// simulation time `now`. Creates the deployment on first apply; on
+    /// failure (the floor config cannot place next to the other tenants)
+    /// the previous deployment, if any, is left untouched.
+    pub fn apply(
+        &mut self,
+        name: &str,
+        spec: &PipelineSpec,
+        cfgs: &[TaskConfig],
+        now: f64,
+    ) -> Result<ApplyOutcome, String> {
+        spec.validate_config(cfgs)?;
+        let (applied, clamped) = self.fit_config(name, spec, cfgs);
+        let free = self.free_excluding(name);
+        let requests = build_requests(spec, &applied);
+        let bindings = place_onto(&free, &requests).map_err(|s| {
+            format!("pipeline '{name}': placement failed for stage {s} after clamping")
+        })?;
+
+        // Diff against this deployment's running replicas, stage by stage.
+        // A different pipeline (PUT replacing the spec) restarts everything —
+        // matching on identity, not just stage count, so swapping e.g. a
+        // 4-stage pipeline for a different 4-stage pipeline reloads models.
+        let old = self.deployments.get(name);
+        let same_shape = old
+            .map(|d| d.spec.name == spec.name && d.spec.n_tasks() == spec.n_tasks())
+            .unwrap_or(false);
+        let generation = old.map(|d| d.generation + 1).unwrap_or(1);
+        let mut new_containers: Vec<Container> = Vec::new();
+        let mut restarts = 0usize;
+        for (stage, (task, cfg)) in spec.tasks.iter().zip(&applied).enumerate() {
+            let cores = task.variants[cfg.variant].cores;
+            let old_stage: Vec<&Container> = old
+                .map(|d| d.containers.iter().filter(|c| c.stage == stage).collect())
+                .unwrap_or_default();
+            let variant_changed = !same_shape
+                || old
+                    .and_then(|d| d.config.get(stage))
+                    .map(|c| c.variant != cfg.variant)
+                    .unwrap_or(true);
+            let stage_bindings = bindings.iter().filter(|b| b.stage == stage);
+            for (ri, b) in stage_bindings.enumerate() {
+                let ready_at = if variant_changed {
+                    // rolling restart of the whole stage: model load time
+                    restarts += 1;
+                    now + self.startup_secs
+                } else if ri < old_stage.len() {
+                    // surviving replica keeps its readiness
+                    old_stage[ri].ready_at
+                } else {
+                    // scale-up: new replica must start
+                    restarts += 1;
+                    now + self.startup_secs
+                };
+                new_containers.push(Container {
+                    stage,
+                    variant: cfg.variant,
+                    cores,
+                    node: b.node,
+                    ready_at,
+                });
+            }
+        }
+
+        self.deployments.insert(
+            name.to_string(),
+            Deployment {
+                name: name.to_string(),
+                spec: spec.clone(),
+                config: applied.clone(),
+                generation,
+                containers: new_containers,
+            },
+        );
+        self.rebuild_usage();
+        Ok(ApplyOutcome { applied, clamped, restarts, generation })
+    }
+
+    /// Remove a deployment, releasing its cores immediately.
+    pub fn delete(&mut self, name: &str) -> Option<Deployment> {
+        let d = self.deployments.remove(name);
+        if d.is_some() {
+            self.rebuild_usage();
+        }
+        d
+    }
+
+    /// Rebuild node usage from the full container set of every tenant.
+    fn rebuild_usage(&mut self) {
+        self.topo.reset();
+        for d in self.deployments.values() {
+            for c in &d.containers {
+                self.topo.nodes[c.node].alloc(c.cores);
+            }
+        }
+    }
+
+    /// Ready replica count per stage for one deployment at time `now`.
+    pub fn ready_replicas(&self, name: &str, n_stages: usize, now: f64) -> Vec<usize> {
+        let mut ready = vec![0usize; n_stages];
+        if let Some(d) = self.deployments.get(name) {
+            for c in &d.containers {
+                if c.ready_at <= now && c.stage < n_stages {
+                    ready[c.stage] += 1;
+                }
+            }
+        }
+        ready
+    }
+
+    /// Cores currently allocated across all tenants (the billed cost basis).
+    pub fn allocated_cores(&self) -> f64 {
+        self.deployments.values().map(|d| d.allocated_cores()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::catalog;
+
+    fn maxed(spec: &PipelineSpec) -> Vec<TaskConfig> {
+        spec.tasks
+            .iter()
+            .map(|t| TaskConfig::new(t.n_variants() - 1, 8, 5))
+            .collect()
+    }
+
+    #[test]
+    fn generations_are_per_pipeline_and_monotone() {
+        let mut store = DeploymentStore::new(ClusterTopology::paper_testbed(), 3.0);
+        let a = catalog::preset(catalog::Preset::P1).spec;
+        let b = catalog::iot_anomaly().spec;
+        let o1 = store.apply("a", &a, &a.default_config(), 0.0).unwrap();
+        let o2 = store.apply("b", &b, &b.default_config(), 0.0).unwrap();
+        let o3 = store.apply("a", &a, &a.default_config(), 10.0).unwrap();
+        assert_eq!((o1.generation, o2.generation, o3.generation), (1, 1, 2));
+        assert_eq!(store.get("a").unwrap().generation, 2);
+        assert_eq!(store.get("b").unwrap().generation, 1);
+    }
+
+    #[test]
+    fn two_tenants_share_w_max() {
+        let mut store = DeploymentStore::new(ClusterTopology::paper_testbed(), 3.0);
+        let vid = catalog::video_analytics().spec;
+        let iot = catalog::iot_anomaly().spec;
+        // both ask for far more than 30 cores; each gets clamped against
+        // what the other holds
+        let o1 = store.apply("vid", &vid, &maxed(&vid), 0.0).unwrap();
+        assert!(o1.clamped);
+        let o2 = store.apply("iot", &iot, &maxed(&iot), 0.0).unwrap();
+        assert!(o2.clamped);
+        let total = store.allocated_cores();
+        assert!(total <= store.topo.capacity() + 1e-6, "total {total} over W_max");
+        assert!((store.topo.used() - total).abs() < 1e-6);
+        // no node is over-committed
+        for n in &store.topo.nodes {
+            assert!(n.cores_used <= n.cores_total + 1e-6, "{} overfull", n.name);
+        }
+        // both tenants keep at least one replica per stage
+        for name in ["vid", "iot"] {
+            let d = store.get(name).unwrap();
+            assert!(d.config.iter().all(|c| c.replicas >= 1), "{name}");
+            assert!(d.allocated_cores() > 0.0, "{name} starved out entirely");
+        }
+    }
+
+    #[test]
+    fn second_tenant_sees_reduced_budget() {
+        let mut store = DeploymentStore::new(ClusterTopology::paper_testbed(), 3.0);
+        let vid = catalog::video_analytics().spec;
+        assert_eq!(store.capacity_for("vid"), store.topo.capacity());
+        store.apply("vid", &vid, &maxed(&vid), 0.0).unwrap();
+        let held = store.get("vid").unwrap().allocated_cores();
+        assert!(held > 0.0);
+        let left = store.capacity_for("iot");
+        assert!((left - (store.topo.capacity() - held)).abs() < 1e-6);
+        assert!((store.cores_used_by_others("iot") - held).abs() < 1e-6);
+        // the tenant's own cores do not count against itself
+        assert!((store.capacity_for("vid") - store.topo.capacity()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn delete_releases_capacity() {
+        let mut store = DeploymentStore::new(ClusterTopology::paper_testbed(), 3.0);
+        let vid = catalog::video_analytics().spec;
+        let iot = catalog::iot_anomaly().spec;
+        store.apply("vid", &vid, &maxed(&vid), 0.0).unwrap();
+        store.apply("iot", &iot, &iot.default_config(), 0.0).unwrap();
+        let free_before = store.topo.free();
+        assert!(store.delete("vid").is_some());
+        assert!(store.get("vid").is_none());
+        assert!(store.topo.free() > free_before);
+        assert!(store.delete("vid").is_none(), "double delete is a no-op");
+        assert_eq!(store.len(), 1);
+    }
+
+    #[test]
+    fn fit_config_downgrades_variants_when_replica_shedding_is_not_enough() {
+        // satellite: the variant-downgrade fallback — a 1×4-core node cannot
+        // host P2's heavy variants even at 1 replica each (Σ = 15 cores), so
+        // fit_config must walk variants down until the config fits
+        let store = DeploymentStore::new(ClusterTopology::uniform(1, 4.0), 3.0);
+        let spec = catalog::preset(catalog::Preset::P2).spec;
+        let cfgs: Vec<TaskConfig> =
+            spec.tasks.iter().map(|t| TaskConfig::new(t.n_variants() - 1, 1, 0)).collect();
+        let (fitted, clamped) = store.fit_config("solo", &spec, &cfgs);
+        assert!(clamped);
+        assert!(fitted.iter().all(|c| c.replicas == 1));
+        assert!(
+            fitted.iter().any(|c| c.variant < spec.tasks[0].n_variants() - 1),
+            "at least one variant must have been downgraded: {fitted:?}"
+        );
+        assert!(spec.total_cores(&fitted) <= 4.0 + 1e-9);
+    }
+
+    #[test]
+    fn fit_config_floor_is_returned_when_nothing_fits() {
+        // satellite: all stages at 1 replica of the lightest variant still
+        // exceed a 2-core node (P2 floor = 2.5 cores) — fit_config gives up
+        // and returns the floor config flagged clamped; apply then refuses
+        let mut store = DeploymentStore::new(ClusterTopology::uniform(1, 2.0), 3.0);
+        let spec = catalog::preset(catalog::Preset::P2).spec;
+        let (fitted, clamped) = store.fit_config("solo", &spec, &spec.default_config());
+        assert!(clamped);
+        assert!(fitted.iter().all(|c| c.variant == 0 && c.replicas == 1));
+        assert!(spec.total_cores(&fitted) > 2.0, "floor config genuinely infeasible");
+        let err = store.apply("solo", &spec, &spec.default_config(), 0.0);
+        assert!(err.is_err());
+        assert!(store.get("solo").is_none(), "failed apply must not create state");
+    }
+
+    #[test]
+    fn failed_apply_keeps_previous_deployment() {
+        let mut store = DeploymentStore::new(ClusterTopology::paper_testbed(), 3.0);
+        let vid = catalog::video_analytics().spec;
+        store.apply("vid", &vid, &maxed(&vid), 0.0).unwrap();
+        // a second tenant whose floor cannot fit in the leftover space:
+        // fill vid up, then try an 8-stage pipeline in the scraps
+        let big = catalog::preset(catalog::Preset::P4).spec;
+        let before = store.get("vid").unwrap().generation;
+        let _ = store.apply("big", &big, &big.default_config(), 0.0);
+        // whatever happened to 'big', vid is untouched
+        assert_eq!(store.get("vid").unwrap().generation, before);
+    }
+
+    #[test]
+    fn same_stage_count_different_pipeline_still_restarts() {
+        // 'video-analytics' and P2 are both 4-stage pipelines; replacing one
+        // with the other must restart every stage (new models), not inherit
+        // the old containers' readiness
+        let mut store = DeploymentStore::new(ClusterTopology::paper_testbed(), 3.0);
+        let vid = catalog::video_analytics().spec;
+        let p2 = catalog::preset(catalog::Preset::P2).spec;
+        assert_eq!(vid.n_tasks(), p2.n_tasks());
+        store.apply("x", &vid, &vid.default_config(), 0.0).unwrap();
+        assert_eq!(store.ready_replicas("x", 4, 10.0), vec![1; 4]);
+        let out = store.apply("x", &p2, &p2.default_config(), 10.0).unwrap();
+        assert_eq!(out.restarts, 4);
+        assert_eq!(store.ready_replicas("x", 4, 10.5), vec![0; 4]);
+        assert_eq!(store.ready_replicas("x", 4, 14.0), vec![1; 4]);
+    }
+
+    #[test]
+    fn spec_replacement_restarts_everything() {
+        let mut store = DeploymentStore::new(ClusterTopology::paper_testbed(), 3.0);
+        let vid = catalog::video_analytics().spec;
+        store.apply("x", &vid, &vid.default_config(), 0.0).unwrap();
+        // fully ready at t=10
+        assert_eq!(store.ready_replicas("x", vid.n_tasks(), 10.0), vec![1; 4]);
+        // replace with a different pipeline shape under the same name
+        let iot = catalog::iot_anomaly().spec;
+        let out = store.apply("x", &iot, &iot.default_config(), 10.0).unwrap();
+        assert_eq!(out.generation, 2);
+        assert_eq!(out.restarts, iot.n_tasks());
+        assert_eq!(store.ready_replicas("x", iot.n_tasks(), 10.5), vec![0; 3]);
+        assert_eq!(store.ready_replicas("x", iot.n_tasks(), 14.0), vec![1; 3]);
+    }
+}

@@ -40,6 +40,11 @@ impl AgentKind {
     pub fn all() -> [AgentKind; 4] {
         [AgentKind::Random, AgentKind::Greedy, AgentKind::Ipa, AgentKind::Opd]
     }
+
+    /// Agent names for CLI/API error messages.
+    pub fn available() -> &'static [&'static str] {
+        &["random", "greedy", "ipa", "opd"]
+    }
 }
 
 /// Full experiment configuration.

@@ -9,8 +9,11 @@
 //!
 //! Three-layer architecture (see DESIGN.md):
 //! * **L3 (this crate)** — rust coordinator: simulated Kubernetes edge
-//!   cluster, pipeline performance model, workload generation + monitoring,
-//!   the four agents (Random / Greedy / IPA / OPD), and the PPO trainer.
+//!   cluster with a multi-tenant deployment store, pipeline performance
+//!   model, workload generation + monitoring, the four agents (Random /
+//!   Greedy / IPA / OPD), the PPO trainer, and the v1 control-plane REST
+//!   API (`serve/`) for declaratively deploying many pipelines onto the
+//!   shared cluster (DESIGN.md §3).
 //! * **L2** — JAX compute graphs (policy forward, PPO train step, LSTM
 //!   predictor), AOT-lowered to HLO text by `python/compile/aot.py`.
 //! * **L1** — Pallas kernels (fused dense / residual block / LSTM cell)

@@ -1,0 +1,347 @@
+//! v1 control-plane REST API: typed request/response structs plus the router
+//! wiring. HTTP handlers never touch the simulation directly — the sim/agent
+//! state is single-threaded by design (the PJRT runtime is not Sync) — they
+//! translate HTTP into `ControlRequest`s sent over a channel to the `Leader`
+//! loop and block on its typed reply. The same pattern as the paper's
+//! Kubernetes API server fronting a single controller loop.
+//!
+//! Surface:
+//!   GET    /v1/pipelines               list deployed pipelines
+//!   POST   /v1/pipelines               create (409 when the name exists)
+//!   GET    /v1/pipelines/{name}        status of one pipeline
+//!   PUT    /v1/pipelines/{name}        declaratively apply (create-or-update)
+//!   DELETE /v1/pipelines/{name}        remove, releasing its cluster share
+//!   POST   /v1/pipelines/{name}/agent  hot-swap the decision agent
+//!   GET    /v1/cluster                 nodes + shared-capacity accounting
+//!   POST   /v1/shutdown                stop the leader loop
+//! plus the classic observability routes (/metrics /state /series /healthz).
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::config::AgentKind;
+use crate::pipeline::{TaskConfig, BATCH_CHOICES};
+use crate::serve::http::{Request, Response, Router};
+use crate::serve::ControlPlane;
+use crate::util::json::Json;
+use crate::workload::WorkloadKind;
+
+/// Typed API error → HTTP status + `{"error": …}` body.
+#[derive(Clone, Debug)]
+pub struct ApiError {
+    pub status: u16,
+    pub message: String,
+}
+
+impl ApiError {
+    pub fn bad_request(message: impl Into<String>) -> Self {
+        Self { status: 400, message: message.into() }
+    }
+
+    pub fn not_found(message: impl Into<String>) -> Self {
+        Self { status: 404, message: message.into() }
+    }
+
+    pub fn conflict(message: impl Into<String>) -> Self {
+        Self { status: 409, message: message.into() }
+    }
+
+    pub fn internal(message: impl Into<String>) -> Self {
+        Self { status: 500, message: message.into() }
+    }
+}
+
+/// Declarative pipeline deployment spec — the POST/PUT /v1/pipelines body.
+#[derive(Clone, Debug)]
+pub struct DeploySpec {
+    /// deployment name (the key on the shared cluster)
+    pub name: String,
+    /// catalog pipeline (P1..P4, video-analytics, iot-anomaly)
+    pub pipeline: String,
+    pub workload: WorkloadKind,
+    pub agent: AgentKind,
+    pub adapt_interval_secs: usize,
+    pub seed: u64,
+    /// optional explicit initial config (cheapest config when None)
+    pub initial: Option<Vec<TaskConfig>>,
+}
+
+impl DeploySpec {
+    /// Parse a deploy spec from JSON. `path_name`, when given (PUT/DELETE
+    /// routes), wins over any "name" field in the body.
+    pub fn from_json(j: &Json, path_name: Option<&str>) -> Result<DeploySpec, String> {
+        let name = match path_name {
+            Some(n) => n.to_string(),
+            None => j
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or("missing field 'name'")?
+                .to_string(),
+        };
+        if name.is_empty()
+            || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+        {
+            return Err(format!("invalid pipeline name '{name}' (use [A-Za-z0-9_-]+)"));
+        }
+        let pipeline = j
+            .get("pipeline")
+            .and_then(Json::as_str)
+            .ok_or("missing field 'pipeline'")?
+            .to_string();
+        let workload = match j.get("workload").and_then(Json::as_str) {
+            Some(w) => WorkloadKind::from_name(w).ok_or(format!("unknown workload '{w}'"))?,
+            None => WorkloadKind::Fluctuating,
+        };
+        let agent = match j.get("agent").and_then(Json::as_str) {
+            Some(a) => AgentKind::from_name(a).ok_or(format!(
+                "unknown agent '{a}' (available: {})",
+                AgentKind::available().join(", ")
+            ))?,
+            None => AgentKind::Greedy,
+        };
+        let adapt_interval_secs =
+            j.get("adapt_interval_secs").and_then(Json::as_usize).unwrap_or(10);
+        if adapt_interval_secs == 0 {
+            return Err("adapt_interval_secs must be >= 1".into());
+        }
+        let seed = j.get("seed").and_then(Json::as_i64).map(|v| v as u64).unwrap_or(42);
+        let initial = match j.get("config") {
+            Some(Json::Arr(items)) => Some(
+                items
+                    .iter()
+                    .map(task_config_from_json)
+                    .collect::<Result<Vec<TaskConfig>, String>>()?,
+            ),
+            Some(_) => return Err("'config' must be an array of task configs".into()),
+            None => None,
+        };
+        Ok(DeploySpec { name, pipeline, workload, agent, adapt_interval_secs, seed, initial })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("name", self.name.as_str())
+            .set("pipeline", self.pipeline.as_str())
+            .set("workload", self.workload.name())
+            .set("agent", self.agent.name())
+            .set("adapt_interval_secs", self.adapt_interval_secs)
+            .set("seed", self.seed as i64);
+        if let Some(cfgs) = &self.initial {
+            j = j.set("config", Json::Arr(cfgs.iter().map(task_config_json).collect()));
+        }
+        j
+    }
+}
+
+fn task_config_from_json(j: &Json) -> Result<TaskConfig, String> {
+    let batch_idx = match j.get("batch") {
+        Some(b) => {
+            let b = b.as_usize().ok_or("'batch' must be an integer")?;
+            BATCH_CHOICES
+                .iter()
+                .position(|&x| x == b)
+                .ok_or(format!("batch {b} not one of {BATCH_CHOICES:?}"))?
+        }
+        None => j.get("batch_idx").and_then(Json::as_usize).unwrap_or(0),
+    };
+    Ok(TaskConfig {
+        variant: j.get("variant").and_then(Json::as_usize).unwrap_or(0),
+        replicas: j.get("replicas").and_then(Json::as_usize).unwrap_or(1),
+        batch_idx,
+    })
+}
+
+/// JSON view of one task configuration (batch serialized as the real size).
+pub fn task_config_json(c: &TaskConfig) -> Json {
+    Json::obj()
+        .set("variant", c.variant)
+        .set("replicas", c.replicas)
+        .set("batch", c.batch())
+}
+
+/// Commands the HTTP face sends to the leader loop.
+pub enum ControlRequest {
+    ListPipelines,
+    GetPipeline(String),
+    /// `create_only` → POST semantics (409 when the name exists); otherwise
+    /// PUT semantics (declarative create-or-update)
+    ApplyPipeline { spec: DeploySpec, create_only: bool },
+    DeletePipeline(String),
+    SwapAgent { pipeline: String, agent: AgentKind, seed: u64 },
+    GetCluster,
+    Shutdown,
+}
+
+/// (status, body) reply from the leader.
+pub type ControlReply = Result<(u16, Json), ApiError>;
+
+pub struct ControlMsg {
+    pub req: ControlRequest,
+    pub reply: Sender<ControlReply>,
+}
+
+fn error_response(status: u16, message: &str) -> Response {
+    Response::json_with_status(status, Json::obj().set("error", message).to_pretty())
+}
+
+/// Send one command to the leader and block (bounded) on its reply.
+fn call(tx: &Arc<Mutex<Sender<ControlMsg>>>, req: ControlRequest) -> Response {
+    let (rtx, rrx) = channel();
+    let sent = tx.lock().unwrap().send(ControlMsg { req, reply: rtx }).is_ok();
+    if !sent {
+        return error_response(503, "leader loop is not running");
+    }
+    match rrx.recv_timeout(Duration::from_secs(10)) {
+        Ok(Ok((status, body))) => Response::json_with_status(status, body.to_pretty()),
+        Ok(Err(e)) => error_response(e.status, &e.message),
+        Err(_) => error_response(504, "leader did not answer in time"),
+    }
+}
+
+fn parse_body(req: &Request) -> Result<Json, Response> {
+    Json::parse(&req.body).map_err(|e| error_response(400, &format!("invalid JSON body: {e}")))
+}
+
+/// Build the leader's full router: classic observability endpoints plus the
+/// versioned v1 control-plane API backed by `tx`.
+pub fn v1_router(cp: &Arc<ControlPlane>, tx: Sender<ControlMsg>) -> Router {
+    let mut router = cp.base_router();
+    let tx = Arc::new(Mutex::new(tx));
+
+    let t = tx.clone();
+    router.get("/v1/pipelines", move |_| call(&t, ControlRequest::ListPipelines));
+
+    let t = tx.clone();
+    router.post("/v1/pipelines", move |req| match parse_body(req) {
+        Ok(j) => match DeploySpec::from_json(&j, None) {
+            Ok(spec) => call(&t, ControlRequest::ApplyPipeline { spec, create_only: true }),
+            Err(e) => error_response(400, &e),
+        },
+        Err(resp) => resp,
+    });
+
+    let t = tx.clone();
+    router.get("/v1/pipelines/{name}", move |req| {
+        call(&t, ControlRequest::GetPipeline(req.param("name").to_string()))
+    });
+
+    let t = tx.clone();
+    router.put("/v1/pipelines/{name}", move |req| match parse_body(req) {
+        Ok(j) => match DeploySpec::from_json(&j, Some(req.param("name"))) {
+            Ok(spec) => call(&t, ControlRequest::ApplyPipeline { spec, create_only: false }),
+            Err(e) => error_response(400, &e),
+        },
+        Err(resp) => resp,
+    });
+
+    let t = tx.clone();
+    router.delete("/v1/pipelines/{name}", move |req| {
+        call(&t, ControlRequest::DeletePipeline(req.param("name").to_string()))
+    });
+
+    let t = tx.clone();
+    router.post("/v1/pipelines/{name}/agent", move |req| {
+        let j = match parse_body(req) {
+            Ok(j) => j,
+            Err(resp) => return resp,
+        };
+        let kind = match j.get("agent").and_then(Json::as_str) {
+            Some(k) => k,
+            None => return error_response(400, "missing field 'agent'"),
+        };
+        let agent = match AgentKind::from_name(kind) {
+            Some(a) => a,
+            None => {
+                return error_response(
+                    400,
+                    &format!(
+                        "unknown agent '{kind}' (available: {})",
+                        AgentKind::available().join(", ")
+                    ),
+                )
+            }
+        };
+        let seed = j.get("seed").and_then(Json::as_i64).map(|v| v as u64).unwrap_or(42);
+        call(
+            &t,
+            ControlRequest::SwapAgent {
+                pipeline: req.param("name").to_string(),
+                agent,
+                seed,
+            },
+        )
+    });
+
+    let t = tx.clone();
+    router.get("/v1/cluster", move |_| call(&t, ControlRequest::GetCluster));
+
+    let t = tx.clone();
+    router.post("/v1/shutdown", move |_| call(&t, ControlRequest::Shutdown));
+
+    router
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deploy_spec_parses_with_defaults() {
+        let j = Json::parse(r#"{"name":"vid","pipeline":"video-analytics"}"#).unwrap();
+        let s = DeploySpec::from_json(&j, None).unwrap();
+        assert_eq!(s.name, "vid");
+        assert_eq!(s.pipeline, "video-analytics");
+        assert_eq!(s.workload, WorkloadKind::Fluctuating);
+        assert_eq!(s.agent, AgentKind::Greedy);
+        assert_eq!(s.adapt_interval_secs, 10);
+        assert!(s.initial.is_none());
+    }
+
+    #[test]
+    fn deploy_spec_full_roundtrip() {
+        let j = Json::parse(
+            r#"{"name":"x","pipeline":"P2","workload":"steady-high","agent":"ipa",
+                "adapt_interval_secs":5,"seed":9,
+                "config":[{"variant":1,"replicas":2,"batch":4}]}"#,
+        )
+        .unwrap();
+        let s = DeploySpec::from_json(&j, None).unwrap();
+        assert_eq!(s.agent, AgentKind::Ipa);
+        assert_eq!(s.workload, WorkloadKind::SteadyHigh);
+        assert_eq!(s.adapt_interval_secs, 5);
+        let cfg = &s.initial.as_ref().unwrap()[0];
+        assert_eq!((cfg.variant, cfg.replicas, cfg.batch()), (1, 2, 4));
+        // serialize → reparse is stable
+        let back = DeploySpec::from_json(&s.to_json(), None).unwrap();
+        assert_eq!(back.name, s.name);
+        assert_eq!(back.initial.as_ref().unwrap()[0], s.initial.as_ref().unwrap()[0]);
+    }
+
+    #[test]
+    fn path_name_wins_over_body_name() {
+        let j = Json::parse(r#"{"name":"body","pipeline":"P1"}"#).unwrap();
+        let s = DeploySpec::from_json(&j, Some("path")).unwrap();
+        assert_eq!(s.name, "path");
+        // and the body may omit name entirely on PUT
+        let j = Json::parse(r#"{"pipeline":"P1"}"#).unwrap();
+        assert!(DeploySpec::from_json(&j, Some("p")).is_ok());
+        assert!(DeploySpec::from_json(&j, None).is_err());
+    }
+
+    #[test]
+    fn deploy_spec_rejects_bad_values() {
+        for body in [
+            r#"{"pipeline":"P1"}"#,
+            r#"{"name":"a b","pipeline":"P1"}"#,
+            r#"{"name":"a","pipeline":"P1","workload":"nope"}"#,
+            r#"{"name":"a","pipeline":"P1","agent":"nope"}"#,
+            r#"{"name":"a","pipeline":"P1","adapt_interval_secs":0}"#,
+            r#"{"name":"a","pipeline":"P1","config":[{"batch":3}]}"#,
+            r#"{"name":"a","pipeline":"P1","config":{}}"#,
+        ] {
+            let j = Json::parse(body).unwrap();
+            assert!(DeploySpec::from_json(&j, None).is_err(), "{body}");
+        }
+    }
+}

@@ -1,6 +1,7 @@
 //! Minimal HTTP/1.1 server substrate (std::net + a fixed thread pool; no
-//! tokio offline). Enough surface for the leader process: GET/POST routing,
-//! request bodies, content types, graceful shutdown.
+//! tokio offline). Enough surface for the leader process: GET/POST/PUT/DELETE
+//! routing with path parameters (`/v1/pipelines/{name}`), request bodies with
+//! a hard size cap, content types, graceful shutdown that joins every thread.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
@@ -9,6 +10,10 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 
+/// Largest request body the server accepts; larger declared lengths are
+/// rejected with 413 instead of being silently truncated.
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+
 /// Parsed request.
 #[derive(Clone, Debug)]
 pub struct Request {
@@ -16,6 +21,15 @@ pub struct Request {
     pub path: String,
     pub query: String,
     pub body: String,
+    /// path parameters captured by `{name}` route segments
+    pub params: HashMap<String, String>,
+}
+
+impl Request {
+    /// Path parameter by name ("" when the route declared none).
+    pub fn param(&self, name: &str) -> &str {
+        self.params.get(name).map(String::as_str).unwrap_or("")
+    }
 }
 
 /// Response under construction.
@@ -32,23 +46,48 @@ impl Response {
     }
 
     pub fn json(body: impl Into<String>) -> Self {
-        Self { status: 200, content_type: "application/json".into(), body: body.into() }
+        Self::json_with_status(200, body)
+    }
+
+    pub fn json_with_status(status: u16, body: impl Into<String>) -> Self {
+        Self { status, content_type: "application/json".into(), body: body.into() }
+    }
+
+    pub fn with_status(status: u16, body: impl Into<String>) -> Self {
+        Self { status, content_type: "text/plain".into(), body: body.into() }
     }
 
     pub fn not_found() -> Self {
-        Self { status: 404, content_type: "text/plain".into(), body: "not found\n".into() }
+        Self::with_status(404, "not found\n")
     }
 
     pub fn bad_request(msg: impl Into<String>) -> Self {
-        Self { status: 400, content_type: "text/plain".into(), body: msg.into() }
+        Self::with_status(400, msg)
+    }
+
+    pub fn method_not_allowed() -> Self {
+        Self::with_status(405, "method not allowed\n")
+    }
+
+    pub fn payload_too_large(declared: usize) -> Self {
+        Self::with_status(
+            413,
+            format!("request body of {declared} bytes exceeds the {MAX_BODY_BYTES}-byte cap\n"),
+        )
     }
 
     fn status_text(&self) -> &'static str {
         match self.status {
             200 => "OK",
+            201 => "Created",
             400 => "Bad Request",
             404 => "Not Found",
+            405 => "Method Not Allowed",
+            409 => "Conflict",
+            413 => "Payload Too Large",
             500 => "Internal Server Error",
+            503 => "Service Unavailable",
+            504 => "Gateway Timeout",
             _ => "Unknown",
         }
     }
@@ -68,10 +107,27 @@ impl Response {
 
 pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
 
-/// Route table: (METHOD, path) → handler.
+/// One path segment of a pattern route.
+#[derive(Clone, Debug)]
+enum Seg {
+    Lit(String),
+    Param(String),
+}
+
+#[derive(Clone)]
+struct PatternRoute {
+    method: String,
+    segs: Vec<Seg>,
+    handler: Handler,
+}
+
+/// Route table. Exact routes live in a method → path map looked up with
+/// borrowed keys (no per-request allocation); routes containing `{param}`
+/// segments are matched against the split path.
 #[derive(Default, Clone)]
 pub struct Router {
-    routes: HashMap<(String, String), Handler>,
+    exact: HashMap<String, HashMap<String, Handler>>,
+    patterns: Vec<PatternRoute>,
 }
 
 impl Router {
@@ -79,32 +135,126 @@ impl Router {
         Self::default()
     }
 
+    pub fn route<F>(&mut self, method: &str, path: &str, f: F) -> &mut Self
+    where
+        F: Fn(&Request) -> Response + Send + Sync + 'static,
+    {
+        let handler: Handler = Arc::new(f);
+        if path.contains('{') {
+            let segs = path
+                .trim_start_matches('/')
+                .split('/')
+                .map(|s| match s.strip_prefix('{').and_then(|s| s.strip_suffix('}')) {
+                    Some(p) => Seg::Param(p.to_string()),
+                    None => Seg::Lit(s.to_string()),
+                })
+                .collect();
+            self.patterns.push(PatternRoute { method: method.to_string(), segs, handler });
+        } else {
+            self.exact
+                .entry(method.to_string())
+                .or_default()
+                .insert(path.to_string(), handler);
+        }
+        self
+    }
+
     pub fn get<F>(&mut self, path: &str, f: F) -> &mut Self
     where
         F: Fn(&Request) -> Response + Send + Sync + 'static,
     {
-        self.routes.insert(("GET".into(), path.into()), Arc::new(f));
-        self
+        self.route("GET", path, f)
     }
 
     pub fn post<F>(&mut self, path: &str, f: F) -> &mut Self
     where
         F: Fn(&Request) -> Response + Send + Sync + 'static,
     {
-        self.routes.insert(("POST".into(), path.into()), Arc::new(f));
-        self
+        self.route("POST", path, f)
+    }
+
+    pub fn put<F>(&mut self, path: &str, f: F) -> &mut Self
+    where
+        F: Fn(&Request) -> Response + Send + Sync + 'static,
+    {
+        self.route("PUT", path, f)
+    }
+
+    pub fn delete<F>(&mut self, path: &str, f: F) -> &mut Self
+    where
+        F: Fn(&Request) -> Response + Send + Sync + 'static,
+    {
+        self.route("DELETE", path, f)
+    }
+
+    fn match_pattern(segs: &[Seg], path: &str) -> Option<HashMap<String, String>> {
+        let parts: Vec<&str> = path.trim_start_matches('/').split('/').collect();
+        if parts.len() != segs.len() {
+            return None;
+        }
+        let mut params = HashMap::new();
+        for (seg, part) in segs.iter().zip(&parts) {
+            match seg {
+                Seg::Lit(l) => {
+                    if l != part {
+                        return None;
+                    }
+                }
+                Seg::Param(p) => {
+                    if part.is_empty() {
+                        return None;
+                    }
+                    params.insert(p.clone(), (*part).to_string());
+                }
+            }
+        }
+        Some(params)
     }
 
     pub fn dispatch(&self, req: &Request) -> Response {
-        match self.routes.get(&(req.method.clone(), req.path.clone())) {
-            Some(h) => h(req),
-            None => Response::not_found(),
+        if let Some(h) =
+            self.exact.get(req.method.as_str()).and_then(|m| m.get(req.path.as_str()))
+        {
+            return h(req);
         }
+        for r in &self.patterns {
+            if r.method == req.method {
+                if let Some(params) = Self::match_pattern(&r.segs, &req.path) {
+                    let mut with = req.clone();
+                    with.params = params;
+                    return (r.handler)(&with);
+                }
+            }
+        }
+        // the path exists under another method → 405, not 404
+        let other_method = self
+            .exact
+            .iter()
+            .any(|(m, routes)| *m != req.method && routes.contains_key(req.path.as_str()))
+            || self.patterns.iter().any(|r| {
+                r.method != req.method && Self::match_pattern(&r.segs, &req.path).is_some()
+            });
+        if other_method {
+            return Response::method_not_allowed();
+        }
+        Response::not_found()
     }
 }
 
-fn parse_request(stream: &mut TcpStream) -> std::io::Result<Request> {
-    let mut reader = BufReader::new(stream.try_clone()?);
+enum ParseError {
+    Io(std::io::Error),
+    /// declared Content-Length above `MAX_BODY_BYTES`
+    TooLarge(usize),
+}
+
+impl From<std::io::Error> for ParseError {
+    fn from(e: std::io::Error) -> Self {
+        ParseError::Io(e)
+    }
+}
+
+fn parse_request(stream: &mut TcpStream) -> Result<Request, ParseError> {
+    let mut reader = BufReader::new(stream.try_clone().map_err(ParseError::Io)?);
     let mut line = String::new();
     reader.read_line(&mut line)?;
     let mut parts = line.split_whitespace();
@@ -127,7 +277,10 @@ fn parse_request(stream: &mut TcpStream) -> std::io::Result<Request> {
             content_length = v.trim().parse().unwrap_or(0);
         }
     }
-    let mut body = vec![0u8; content_length.min(1 << 20)];
+    if content_length > MAX_BODY_BYTES {
+        return Err(ParseError::TooLarge(content_length));
+    }
+    let mut body = vec![0u8; content_length];
     if content_length > 0 {
         reader.read_exact(&mut body)?;
     }
@@ -136,6 +289,7 @@ fn parse_request(stream: &mut TcpStream) -> std::io::Result<Request> {
         path,
         query,
         body: String::from_utf8_lossy(&body).into_owned(),
+        params: HashMap::new(),
     })
 }
 
@@ -144,6 +298,7 @@ pub struct HttpServer {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
 }
 
 impl HttpServer {
@@ -159,22 +314,26 @@ impl HttpServer {
         let rx = Arc::new(Mutex::new(rx));
         let router = Arc::new(router);
         // worker pool
+        let mut worker_threads = Vec::with_capacity(workers.max(1));
         for _ in 0..workers.max(1) {
             let rx = rx.clone();
             let router = router.clone();
-            std::thread::spawn(move || loop {
+            worker_threads.push(std::thread::spawn(move || loop {
                 let stream = { rx.lock().unwrap().recv() };
                 match stream {
                     Ok(mut s) => {
                         let resp = match parse_request(&mut s) {
                             Ok(req) => router.dispatch(&req),
-                            Err(e) => Response::bad_request(format!("parse error: {e}\n")),
+                            Err(ParseError::TooLarge(n)) => Response::payload_too_large(n),
+                            Err(ParseError::Io(e)) => {
+                                Response::bad_request(format!("parse error: {e}\n"))
+                            }
                         };
                         let _ = resp.write_to(&mut s);
                     }
                     Err(_) => break, // channel closed → shut down
                 }
-            });
+            }));
         }
         let accept_thread = std::thread::spawn(move || {
             while !stop2.load(Ordering::Relaxed) {
@@ -193,13 +352,23 @@ impl HttpServer {
             }
             drop(tx);
         });
-        Ok(HttpServer { addr: local, stop, accept_thread: Some(accept_thread) })
+        Ok(HttpServer {
+            addr: local,
+            stop,
+            accept_thread: Some(accept_thread),
+            workers: worker_threads,
+        })
     }
 
+    /// Stop accepting, then join the accept thread *and* every worker (the
+    /// accept thread dropping the channel sender is what unblocks workers).
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
         }
     }
 }
@@ -210,30 +379,17 @@ impl Drop for HttpServer {
     }
 }
 
-/// Tiny client helper (tests, CLI health checks).
-pub fn http_get(addr: &std::net::SocketAddr, path: &str) -> std::io::Result<(u16, String)> {
-    let mut s = TcpStream::connect(addr)?;
-    let req = format!("GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n");
-    s.write_all(req.as_bytes())?;
-    let mut buf = String::new();
-    s.read_to_string(&mut buf)?;
-    let status: u16 = buf
-        .split_whitespace()
-        .nth(1)
-        .and_then(|x| x.parse().ok())
-        .unwrap_or(0);
-    let body = buf.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
-    Ok((status, body))
-}
-
-pub fn http_post(
+/// Tiny client helper (tests, CLI health checks and the `opd apply` client).
+pub fn http_request(
     addr: &std::net::SocketAddr,
+    method: &str,
     path: &str,
-    body: &str,
+    body: Option<&str>,
 ) -> std::io::Result<(u16, String)> {
     let mut s = TcpStream::connect(addr)?;
+    let body = body.unwrap_or("");
     let req = format!(
-        "POST {path} HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        "{method} {path} HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
         body.len()
     );
     s.write_all(req.as_bytes())?;
@@ -243,6 +399,30 @@ pub fn http_post(
         buf.split_whitespace().nth(1).and_then(|x| x.parse().ok()).unwrap_or(0);
     let resp_body = buf.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
     Ok((status, resp_body))
+}
+
+pub fn http_get(addr: &std::net::SocketAddr, path: &str) -> std::io::Result<(u16, String)> {
+    http_request(addr, "GET", path, None)
+}
+
+pub fn http_post(
+    addr: &std::net::SocketAddr,
+    path: &str,
+    body: &str,
+) -> std::io::Result<(u16, String)> {
+    http_request(addr, "POST", path, Some(body))
+}
+
+pub fn http_put(
+    addr: &std::net::SocketAddr,
+    path: &str,
+    body: &str,
+) -> std::io::Result<(u16, String)> {
+    http_request(addr, "PUT", path, Some(body))
+}
+
+pub fn http_delete(addr: &std::net::SocketAddr, path: &str) -> std::io::Result<(u16, String)> {
+    http_request(addr, "DELETE", path, None)
 }
 
 #[cfg(test)]
@@ -291,6 +471,87 @@ mod tests {
         for h in handles {
             assert_eq!(h.join().unwrap(), 200);
         }
+        server.shutdown();
+    }
+
+    #[test]
+    fn path_params_are_captured() {
+        let mut router = Router::new();
+        router.get("/v1/pipelines/{name}", |req| Response::ok(req.param("name").to_string()));
+        router.post("/v1/pipelines/{name}/agent", |req| {
+            Response::ok(format!("{}:{}", req.param("name"), req.body))
+        });
+        router.get("/v1/pipelines", |_| Response::ok("list"));
+        let server = HttpServer::start("127.0.0.1:0", router, 2).unwrap();
+        let addr = server.addr;
+
+        let (code, body) = http_get(&addr, "/v1/pipelines/vid").unwrap();
+        assert_eq!((code, body.as_str()), (200, "vid"));
+        let (code, body) = http_post(&addr, "/v1/pipelines/iot/agent", "ipa").unwrap();
+        assert_eq!((code, body.as_str()), (200, "iot:ipa"));
+        // exact route still wins over the pattern space
+        let (code, body) = http_get(&addr, "/v1/pipelines").unwrap();
+        assert_eq!((code, body.as_str()), (200, "list"));
+        // unmatched depth → 404
+        let (code, _) = http_get(&addr, "/v1/pipelines/a/b/c").unwrap();
+        assert_eq!(code, 404);
+        server.shutdown();
+    }
+
+    #[test]
+    fn wrong_method_is_405_not_404() {
+        let mut router = Router::new();
+        router.get("/only-get", |_| Response::ok("x"));
+        router.put("/v1/pipelines/{name}", |_| Response::ok("put"));
+        let server = HttpServer::start("127.0.0.1:0", router, 1).unwrap();
+        let addr = server.addr;
+
+        let (code, _) = http_post(&addr, "/only-get", "").unwrap();
+        assert_eq!(code, 405);
+        let (code, _) = http_get(&addr, "/v1/pipelines/x").unwrap();
+        assert_eq!(code, 405);
+        let (code, _) = http_get(&addr, "/never-registered").unwrap();
+        assert_eq!(code, 404);
+        server.shutdown();
+    }
+
+    #[test]
+    fn oversize_body_is_rejected_with_413() {
+        let mut router = Router::new();
+        router.post("/sink", |req| Response::ok(format!("{}", req.body.len())));
+        let server = HttpServer::start("127.0.0.1:0", router, 1).unwrap();
+        // declare a body over the cap without sending it: the server must
+        // answer 413 instead of truncating at 1 MiB and dispatching
+        let mut s = TcpStream::connect(server.addr).unwrap();
+        let head = format!(
+            "POST /sink HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        );
+        s.write_all(head.as_bytes()).unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        let status: u16 =
+            buf.split_whitespace().nth(1).and_then(|x| x.parse().ok()).unwrap_or(0);
+        assert_eq!(status, 413, "{buf}");
+        // a body at the cap still works
+        let body = "x".repeat(1024);
+        let (code, got) = http_post(&server.addr, "/sink", &body).unwrap();
+        assert_eq!((code, got.as_str()), (200, "1024"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn put_and_delete_roundtrip() {
+        let mut router = Router::new();
+        router.put("/thing/{id}", |req| {
+            Response::json_with_status(201, format!("{{\"id\":\"{}\"}}", req.param("id")))
+        });
+        router.delete("/thing/{id}", |req| Response::ok(req.param("id").to_string()));
+        let server = HttpServer::start("127.0.0.1:0", router, 1).unwrap();
+        let (code, body) = http_put(&server.addr, "/thing/42", "{}").unwrap();
+        assert_eq!((code, body.as_str()), (201, "{\"id\":\"42\"}"));
+        let (code, body) = http_delete(&server.addr, "/thing/42").unwrap();
+        assert_eq!((code, body.as_str()), (200, "42"));
         server.shutdown();
     }
 }

@@ -1,0 +1,462 @@
+//! The leader loop: owns the multi-pipeline environment and answers
+//! control-plane commands from the HTTP face over a channel. Deliberately
+//! single-threaded — the PJRT runtime (and therefore the OPD agent) is not
+//! Sync, so the HTTP workers only ever talk to the simulation through
+//! `ControlMsg`s; the loop interleaves command handling with 1 s sim ticks.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::agents::Agent;
+use crate::cluster::ClusterTopology;
+use crate::config::AgentKind;
+use crate::pipeline::{catalog, QosWeights};
+use crate::serve::api::{task_config_json, ApiError, ControlMsg, ControlRequest, DeploySpec};
+use crate::serve::ControlPlane;
+use crate::sim::env::LoadSource;
+use crate::sim::{MultiEnv, Tenant, TenantStatus};
+use crate::util::json::Json;
+use crate::workload::predictor::{LoadPredictor, MovingMaxPredictor};
+use crate::workload::WorkloadGen;
+
+/// Builds agents/predictors for newly applied pipelines. Wired by the CLI so
+/// OPD's runtime handles stay on the leader thread; the native constructor
+/// covers baseline agents without any PJRT wiring.
+pub struct TenantFactory {
+    pub make_agent: Box<dyn Fn(AgentKind, u64) -> Result<Box<dyn Agent>, String>>,
+    pub make_predictor: Box<dyn Fn() -> Box<dyn LoadPredictor>>,
+}
+
+impl TenantFactory {
+    /// Baseline agents + moving-max predictor (no PJRT, no artifacts).
+    pub fn native() -> Self {
+        Self {
+            make_agent: Box::new(|kind, seed| {
+                crate::agents::baseline(kind, seed).ok_or_else(|| {
+                    "the opd agent needs runtime wiring; boot the leader via `opd serve`"
+                        .to_string()
+                })
+            }),
+            make_predictor: Box::new(|| Box::new(MovingMaxPredictor::default())),
+        }
+    }
+}
+
+/// JSON view of one tenant status (shared by /v1 responses and /state).
+pub fn status_json(s: &TenantStatus) -> Json {
+    Json::obj()
+        .set("name", s.name.as_str())
+        .set("pipeline", s.pipeline.as_str())
+        .set("agent", s.agent.as_str())
+        .set("generation", s.generation as i64)
+        .set("adapt_interval_secs", s.adapt_interval_secs)
+        .set("load_now", s.load_now)
+        .set("cores", s.cores)
+        .set("avg_qos", s.avg_qos)
+        .set("avg_cost", s.avg_cost)
+        .set("last_qos", s.last_qos)
+        .set("last_cost", s.last_cost)
+        .set("load_pred", s.load_pred)
+        .set("decisions", s.decisions)
+        .set("clamped", s.clamped)
+        .set("restarts", s.restarts)
+        .set("last_decision_secs", s.last_decision_secs)
+        .set("config", Json::Arr(s.config.iter().map(task_config_json).collect()))
+        .set(
+            "ready",
+            Json::Arr(s.ready.iter().map(|r| Json::Num(*r as f64)).collect()),
+        )
+}
+
+/// The leader process state.
+pub struct Leader {
+    pub env: MultiEnv,
+    cp: Arc<ControlPlane>,
+    rx: Receiver<ControlMsg>,
+    factory: TenantFactory,
+    /// QoS weights handed to every new tenant
+    pub weights: QosWeights,
+    /// pace ticks to wall-clock seconds
+    pub realtime: bool,
+    /// stop once simulated time reaches this (None → run until shutdown)
+    pub max_secs: Option<f64>,
+    /// per-tenant decision counts already published (for counter deltas)
+    published_decisions: std::collections::BTreeMap<String, usize>,
+}
+
+impl Leader {
+    /// Create a leader plus the command-channel sender the HTTP router needs.
+    pub fn new(
+        cp: Arc<ControlPlane>,
+        topo: ClusterTopology,
+        startup_secs: f64,
+        factory: TenantFactory,
+    ) -> (Leader, Sender<ControlMsg>) {
+        let (tx, rx) = channel();
+        (
+            Leader {
+                env: MultiEnv::new(topo, startup_secs),
+                cp,
+                rx,
+                factory,
+                weights: QosWeights::default(),
+                realtime: false,
+                max_secs: None,
+                published_decisions: std::collections::BTreeMap::new(),
+            },
+            tx,
+        )
+    }
+
+    /// Deploy a pipeline directly (the CLI bootstrap path, before `run`).
+    pub fn deploy(&mut self, spec: &DeploySpec) -> Result<Json, ApiError> {
+        self.apply_spec(spec, false).map(|(_, j)| j)
+    }
+
+    fn apply_spec(
+        &mut self,
+        spec: &DeploySpec,
+        create_only: bool,
+    ) -> Result<(u16, Json), ApiError> {
+        let existed = self.env.contains(&spec.name);
+        if create_only && existed {
+            return Err(ApiError::conflict(format!(
+                "pipeline '{}' already exists (PUT /v1/pipelines/{} to update)",
+                spec.name, spec.name
+            )));
+        }
+        let np = catalog::by_name(&spec.pipeline).ok_or_else(|| {
+            ApiError::bad_request(format!(
+                "unknown pipeline '{}' (available: {})",
+                spec.pipeline,
+                catalog::available().join(", ")
+            ))
+        })?;
+        if np.spec.n_tasks() > crate::nn::spec::MAX_TASKS {
+            return Err(ApiError::bad_request(format!(
+                "pipeline '{}' has {} stages; the NN interface supports up to {}",
+                spec.pipeline,
+                np.spec.n_tasks(),
+                crate::nn::spec::MAX_TASKS
+            )));
+        }
+        let agent =
+            (self.factory.make_agent)(spec.agent, spec.seed).map_err(ApiError::internal)?;
+        let predictor = (self.factory.make_predictor)();
+        let tenant = Tenant::new(
+            spec.name.clone(),
+            np.spec,
+            agent,
+            self.weights,
+            LoadSource::Gen(WorkloadGen::new(spec.workload, spec.seed)),
+            predictor,
+            spec.adapt_interval_secs,
+        );
+        let out = self.env.deploy(tenant, spec.initial.clone()).map_err(ApiError::bad_request)?;
+        let status = self.env.status(&spec.name).expect("just deployed");
+        let body = status_json(&status)
+            .set("clamped_on_apply", out.clamped)
+            .set("workload", spec.workload.name());
+        Ok((if existed { 200 } else { 201 }, body))
+    }
+
+    fn cluster_json(&self) -> Json {
+        let topo = &self.env.store.topo;
+        Json::obj()
+            .set("now", self.env.now)
+            .set("capacity", topo.capacity())
+            .set("used", topo.used())
+            .set("free", topo.free())
+            .set(
+                "nodes",
+                Json::Arr(
+                    topo.nodes
+                        .iter()
+                        .map(|n| {
+                            Json::obj()
+                                .set("name", n.name.as_str())
+                                .set("cores_total", n.cores_total)
+                                .set("cores_used", n.cores_used)
+                        })
+                        .collect(),
+                ),
+            )
+            .set(
+                "pipelines",
+                Json::Arr(
+                    self.env
+                        .statuses()
+                        .iter()
+                        .map(|s| {
+                            Json::obj()
+                                .set("name", s.name.as_str())
+                                .set("cores", s.cores)
+                                .set("generation", s.generation as i64)
+                                .set("agent", s.agent.as_str())
+                        })
+                        .collect(),
+                ),
+            )
+    }
+
+    fn handle(&mut self, req: ControlRequest) -> Result<(u16, Json), ApiError> {
+        match req {
+            ControlRequest::ListPipelines => {
+                let arr: Vec<Json> = self.env.statuses().iter().map(status_json).collect();
+                Ok((
+                    200,
+                    Json::obj().set("now", self.env.now).set("pipelines", Json::Arr(arr)),
+                ))
+            }
+            ControlRequest::GetPipeline(name) => self
+                .env
+                .status(&name)
+                .map(|s| (200, status_json(&s)))
+                .ok_or_else(|| ApiError::not_found(format!("no pipeline named '{name}'"))),
+            ControlRequest::ApplyPipeline { spec, create_only } => {
+                self.apply_spec(&spec, create_only)
+            }
+            ControlRequest::DeletePipeline(name) => {
+                if self.env.remove(&name) {
+                    Ok((200, Json::obj().set("deleted", name.as_str())))
+                } else {
+                    Err(ApiError::not_found(format!("no pipeline named '{name}'")))
+                }
+            }
+            ControlRequest::SwapAgent { pipeline, agent, seed } => {
+                if !self.env.contains(&pipeline) {
+                    return Err(ApiError::not_found(format!("no pipeline named '{pipeline}'")));
+                }
+                let a = (self.factory.make_agent)(agent, seed).map_err(ApiError::internal)?;
+                self.env.set_agent(&pipeline, a).map_err(ApiError::not_found)?;
+                let s = self.env.status(&pipeline).expect("checked above");
+                Ok((200, status_json(&s)))
+            }
+            ControlRequest::GetCluster => Ok((200, self.cluster_json())),
+            ControlRequest::Shutdown => Ok((200, Json::obj().set("shutdown", true))),
+        }
+    }
+
+    /// Answer one command; returns true when the loop should stop.
+    fn process(&mut self, msg: ControlMsg) -> bool {
+        let shutdown = matches!(msg.req, ControlRequest::Shutdown);
+        let reply = self.handle(msg.req);
+        let _ = msg.reply.send(reply);
+        shutdown
+    }
+
+    /// Publish the tick's metrics/state to the observability endpoints.
+    fn publish(&mut self) {
+        let statuses = self.env.statuses();
+        let m = &self.cp.metrics;
+        let mut total_load = 0.0;
+        let mut total_pred = 0.0;
+        let mut qos_sum = 0.0;
+        let mut cost_sum = 0.0;
+        for s in &statuses {
+            m.set_gauge("opd_qos", &[("pipeline", s.name.as_str())], s.last_qos);
+            m.set_gauge("opd_cost_cores", &[("pipeline", s.name.as_str())], s.last_cost);
+            m.set_gauge("opd_load", &[("pipeline", s.name.as_str())], s.load_now);
+            self.cp.series.record(&format!("load:{}", s.name), s.load_now);
+            self.cp.series.record(&format!("load_pred:{}", s.name), s.load_pred);
+            self.cp.series.record(&format!("qos:{}", s.name), s.last_qos);
+            self.cp.series.record(&format!("cost:{}", s.name), s.last_cost);
+            total_load += s.load_now;
+            total_pred += s.load_pred;
+            qos_sum += s.last_qos;
+            cost_sum += s.last_cost;
+            // decision counter/timing: publish only the delta since the last
+            // tick (a replaced tenant resets its count — just resync then)
+            let seen = self.published_decisions.get(&s.name).copied().unwrap_or(0);
+            if s.decisions > seen {
+                m.inc("opd_decisions_total", &[], (s.decisions - seen) as f64);
+                m.observe("opd_decision_seconds", &[], s.last_decision_secs);
+            }
+            self.published_decisions.insert(s.name.clone(), s.decisions);
+        }
+        self.published_decisions.retain(|name, _| statuses.iter().any(|s| &s.name == name));
+        let n = statuses.len().max(1) as f64;
+        self.cp.series.record("load", total_load);
+        self.cp.series.record("load_pred", total_pred);
+        self.cp.series.record("qos", qos_sum / n);
+        self.cp.series.record("cost", cost_sum);
+        m.set_gauge("opd_pipelines", &[], statuses.len() as f64);
+        m.set_gauge("opd_cluster_used_cores", &[], self.env.store.topo.used());
+        m.set_gauge("opd_cluster_free_cores", &[], self.env.store.topo.free());
+        self.cp.publish_state(
+            Json::obj()
+                .set("t", self.env.now)
+                .set("pipelines", Json::Arr(statuses.iter().map(status_json).collect()))
+                .set("cluster", self.cluster_json()),
+        );
+    }
+
+    /// Main loop. Returns when a shutdown command arrives, every command
+    /// sender is gone, or simulated time reaches `max_secs`. With no
+    /// pipelines deployed the clock does not advance — the leader idles,
+    /// waiting for `POST /v1/pipelines`.
+    pub fn run(&mut self) {
+        loop {
+            // drain pending control commands
+            loop {
+                match self.rx.try_recv() {
+                    Ok(msg) => {
+                        if self.process(msg) {
+                            return;
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+            if self.env.n_tenants() == 0 {
+                // idle: block briefly for a command instead of spinning
+                match self.rx.recv_timeout(Duration::from_millis(25)) {
+                    Ok(msg) => {
+                        if self.process(msg) {
+                            return;
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => return,
+                }
+                continue;
+            }
+            let t0 = Instant::now();
+            self.env.tick();
+            self.publish();
+            if let Some(max) = self.max_secs {
+                if self.env.now + 1e-9 >= max {
+                    return;
+                }
+            }
+            if self.realtime {
+                // sleep out the remainder of the second, staying responsive
+                loop {
+                    let elapsed = t0.elapsed();
+                    if elapsed >= Duration::from_secs(1) {
+                        break;
+                    }
+                    match self.rx.recv_timeout(Duration::from_secs(1) - elapsed) {
+                        Ok(msg) => {
+                            if self.process(msg) {
+                                return;
+                            }
+                        }
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => return,
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::WorkloadKind;
+
+    fn spec(name: &str, pipeline: &str, agent: AgentKind) -> DeploySpec {
+        DeploySpec {
+            name: name.into(),
+            pipeline: pipeline.into(),
+            workload: WorkloadKind::SteadyLow,
+            agent,
+            adapt_interval_secs: 10,
+            seed: 1,
+            initial: None,
+        }
+    }
+
+    fn leader() -> (Leader, Sender<ControlMsg>) {
+        Leader::new(
+            Arc::new(ControlPlane::new()),
+            ClusterTopology::paper_testbed(),
+            1.0,
+            TenantFactory::native(),
+        )
+    }
+
+    #[test]
+    fn handle_covers_crud_and_errors() {
+        let (mut l, _tx) = leader();
+        // create
+        let (code, body) = l
+            .handle(ControlRequest::ApplyPipeline {
+                spec: spec("a", "P1", AgentKind::Greedy),
+                create_only: true,
+            })
+            .unwrap();
+        assert_eq!(code, 201);
+        assert_eq!(body.req_str("agent").unwrap(), "greedy");
+        // duplicate POST → 409
+        let err = l
+            .handle(ControlRequest::ApplyPipeline {
+                spec: spec("a", "P1", AgentKind::Greedy),
+                create_only: true,
+            })
+            .unwrap_err();
+        assert_eq!(err.status, 409);
+        // PUT updates in place → 200
+        let (code, _) = l
+            .handle(ControlRequest::ApplyPipeline {
+                spec: spec("a", "P2", AgentKind::Random),
+                create_only: false,
+            })
+            .unwrap();
+        assert_eq!(code, 200);
+        // unknown catalog name → 400
+        let err = l
+            .handle(ControlRequest::ApplyPipeline {
+                spec: spec("b", "nope", AgentKind::Greedy),
+                create_only: true,
+            })
+            .unwrap_err();
+        assert_eq!(err.status, 400);
+        // get / list / cluster
+        let (code, body) = l.handle(ControlRequest::GetPipeline("a".into())).unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(body.req_str("pipeline").unwrap(), "P2");
+        let err = l.handle(ControlRequest::GetPipeline("zz".into())).unwrap_err();
+        assert_eq!(err.status, 404);
+        let (_, body) = l.handle(ControlRequest::ListPipelines).unwrap();
+        assert_eq!(body.get("pipelines").unwrap().as_arr().unwrap().len(), 1);
+        let (_, body) = l.handle(ControlRequest::GetCluster).unwrap();
+        assert!(body.req_f64("capacity").unwrap() > 0.0);
+        // swap agent
+        let (code, body) = l
+            .handle(ControlRequest::SwapAgent {
+                pipeline: "a".into(),
+                agent: AgentKind::Ipa,
+                seed: 2,
+            })
+            .unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(body.req_str("agent").unwrap(), "ipa");
+        // delete
+        let (code, _) = l.handle(ControlRequest::DeletePipeline("a".into())).unwrap();
+        assert_eq!(code, 200);
+        let err = l.handle(ControlRequest::DeletePipeline("a".into())).unwrap_err();
+        assert_eq!(err.status, 404);
+    }
+
+    #[test]
+    fn run_stops_on_shutdown_command() {
+        let (mut l, tx) = leader();
+        let (rtx, rrx) = channel();
+        tx.send(ControlMsg { req: ControlRequest::Shutdown, reply: rtx }).unwrap();
+        l.run(); // must return promptly without any tenants
+        assert!(rrx.recv().unwrap().is_ok());
+    }
+
+    #[test]
+    fn run_stops_at_max_secs() {
+        let (mut l, _tx) = leader();
+        l.max_secs = Some(30.0);
+        l.deploy(&spec("a", "P1", AgentKind::Greedy)).unwrap();
+        l.run();
+        assert!(l.env.now + 1e-9 >= 30.0);
+        assert!(l.env.status("a").unwrap().decisions >= 2);
+    }
+}

@@ -1,14 +1,25 @@
-//! Serving layer: the leader process's HTTP face — Prometheus-format
-//! `/metrics`, JSON `/state`, and `/healthz` — mirroring the paper's
-//! Prometheus/Grafana monitoring story. The decision loop itself stays on
-//! the main thread (the PJRT runtime is single-threaded by design); the
-//! server shares state through `ControlPlane`.
+//! Serving layer: the leader process's HTTP face. Classic observability —
+//! Prometheus-format `/metrics`, JSON `/state`, `/series`, `/healthz` —
+//! mirroring the paper's Prometheus/Grafana monitoring story, plus the
+//! versioned v1 control-plane API (api.rs) backed by the single-threaded
+//! leader loop (leader.rs). The decision loop stays on the main thread (the
+//! PJRT runtime is single-threaded by design); HTTP workers reach it only
+//! through `ControlMsg` channels and the shared `ControlPlane` state.
 
+pub mod api;
 pub mod http;
+pub mod leader;
 
 use std::sync::{Arc, Mutex};
 
-pub use http::{http_get, http_post, HttpServer, Request, Response, Router};
+pub use api::{
+    task_config_json, v1_router, ApiError, ControlMsg, ControlReply, ControlRequest, DeploySpec,
+};
+pub use http::{
+    http_delete, http_get, http_post, http_put, http_request, HttpServer, Request, Response,
+    Router, MAX_BODY_BYTES,
+};
+pub use leader::{status_json, Leader, TenantFactory};
 
 use crate::telemetry::{MetricsRegistry, TimeSeriesStore};
 use crate::util::json::Json;
@@ -44,8 +55,9 @@ impl ControlPlane {
         self.state.lock().unwrap().to_pretty()
     }
 
-    /// Build the router and start serving.
-    pub fn serve(self: &Arc<Self>, addr: &str) -> std::io::Result<HttpServer> {
+    /// The classic observability routes (/metrics /state /series /healthz);
+    /// `v1_router` layers the control-plane API on top of this.
+    pub fn base_router(self: &Arc<Self>) -> Router {
         let mut router = Router::new();
         let cp = self.clone();
         router.get("/metrics", move |_| Response::ok(cp.metrics.expose()));
@@ -74,7 +86,12 @@ impl ControlPlane {
                     .to_string(),
             )
         });
-        HttpServer::start(addr, router, 4)
+        router
+    }
+
+    /// Build the observability router and start serving.
+    pub fn serve(self: &Arc<Self>, addr: &str) -> std::io::Result<HttpServer> {
+        HttpServer::start(addr, self.base_router(), 4)
     }
 }
 

@@ -22,7 +22,8 @@ pub enum LoadSource {
 }
 
 impl LoadSource {
-    fn next_rate(&mut self) -> f64 {
+    /// Arrival rate for the next second (consumed by `Env` and `MultiEnv`).
+    pub fn next_rate(&mut self) -> f64 {
         match self {
             LoadSource::Gen(g) => g.next_rate(),
             LoadSource::Replay { rates, idx } => {
@@ -42,7 +43,9 @@ pub struct Observation<'a> {
     pub load_now: f64,
     /// predicted max load over the next horizon (req/s)
     pub load_pred: f64,
-    /// W_max (Eq. 4)
+    /// W_max available to *this* pipeline (Eq. 4): the full cluster capacity
+    /// minus cores held by other tenants sharing the cluster. Equal to the
+    /// whole W_max when the pipeline runs alone.
     pub capacity: f64,
     pub cores_free: f64,
     pub current: Vec<TaskConfig>,
@@ -50,6 +53,11 @@ pub struct Observation<'a> {
     /// pipeline metrics under the current config at load_now
     pub metrics: PipelineMetrics,
     pub adapt_interval_secs: f64,
+    /// cores allocated by other pipelines sharing the cluster (0.0 when the
+    /// pipeline runs alone)
+    pub cores_other: f64,
+    /// number of pipelines deployed on the cluster (≥ 1)
+    pub tenants: usize,
 }
 
 /// Boolean masks for the factored action heads (invalid variants of shorter
@@ -290,6 +298,8 @@ impl Env {
             ready,
             metrics,
             adapt_interval_secs: self.adapt_interval_secs as f64,
+            cores_other: 0.0,
+            tenants: 1,
         }
     }
 

@@ -1,12 +1,15 @@
 //! Discrete-time simulation of the edge serving system: the MDP environment
-//! (state/action/reward of §IV-B) and the cycle runner used by every
-//! experiment.
+//! (state/action/reward of §IV-B), the cycle runner used by every
+//! experiment, and the multi-pipeline shared-cluster environment behind the
+//! v1 control-plane API.
 
 pub mod engine;
 pub mod env;
+pub mod multi;
 
 pub use engine::{run_cycle, CycleResult};
 pub use env::{
     build_masks, build_state, decode_action, encode_action, ActionMasks, Env, LoadSource,
     Observation, StepResult,
 };
+pub use multi::{MultiEnv, Tenant, TenantStatus};

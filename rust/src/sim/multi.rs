@@ -1,0 +1,413 @@
+//! Multi-pipeline environment: several *named* pipelines, each with its own
+//! workload source, agent and adaptation interval, competing for the shared
+//! cluster through the `DeploymentStore` — the serving model InferLine
+//! (Crankshaw et al.) and IPA (Ghafouri et al.) treat as the core problem,
+//! generalizing the paper's single-pipeline MDP loop.
+//!
+//! Time advances in 1 s ticks for everyone; each tenant decides on its own
+//! interval. Observations carry cross-pipeline context: the capacity a
+//! tenant plans against is W_max minus the cores other tenants hold, so the
+//! existing agents (greedy / IPA / OPD) respect shared capacity unchanged.
+
+use std::collections::BTreeMap;
+
+use crate::agents::Agent;
+use crate::cluster::{ApplyOutcome, ClusterTopology, DeploymentStore};
+use crate::nn::spec::PRED_WINDOW;
+use crate::pipeline::{pipeline_metrics, PipelineSpec, QosWeights, TaskConfig};
+use crate::sim::env::{LoadSource, Observation};
+use crate::workload::predictor::LoadPredictor;
+use crate::workload::LoadHistory;
+
+/// One deployed pipeline and everything it carries through the shared loop.
+pub struct Tenant {
+    pub name: String,
+    pub spec: PipelineSpec,
+    pub agent: Box<dyn Agent>,
+    pub weights: QosWeights,
+    pub adapt_interval_secs: usize,
+    source: LoadSource,
+    predictor: Box<dyn LoadPredictor>,
+    history: LoadHistory,
+    last_rate: f64,
+    /// simulation time of the next adaptation decision
+    next_decision: f64,
+    pub generation: u64,
+    pub decisions: usize,
+    pub clamped: usize,
+    pub restarts: usize,
+    qos_sum: f64,
+    cost_sum: f64,
+    secs: usize,
+    pub last_qos: f64,
+    pub last_cost: f64,
+    /// most recent predictor output (req/s over the horizon)
+    pub last_pred: f64,
+    /// wall-clock seconds the most recent agent.decide() took
+    pub last_decision_secs: f64,
+}
+
+impl Tenant {
+    pub fn new(
+        name: impl Into<String>,
+        spec: PipelineSpec,
+        agent: Box<dyn Agent>,
+        weights: QosWeights,
+        source: LoadSource,
+        predictor: Box<dyn LoadPredictor>,
+        adapt_interval_secs: usize,
+    ) -> Self {
+        Self {
+            name: name.into(),
+            spec,
+            agent,
+            weights,
+            adapt_interval_secs: adapt_interval_secs.max(1),
+            source,
+            predictor,
+            history: LoadHistory::new(PRED_WINDOW * 4),
+            last_rate: 0.0,
+            next_decision: 0.0,
+            generation: 0,
+            decisions: 0,
+            clamped: 0,
+            restarts: 0,
+            qos_sum: 0.0,
+            cost_sum: 0.0,
+            secs: 0,
+            last_qos: 0.0,
+            last_cost: 0.0,
+            last_pred: 0.0,
+            last_decision_secs: 0.0,
+        }
+    }
+
+    pub fn avg_qos(&self) -> f64 {
+        if self.secs == 0 { 0.0 } else { self.qos_sum / self.secs as f64 }
+    }
+
+    pub fn avg_cost(&self) -> f64 {
+        if self.secs == 0 { 0.0 } else { self.cost_sum / self.secs as f64 }
+    }
+}
+
+/// Point-in-time public view of one tenant (what the v1 API serves).
+#[derive(Clone, Debug)]
+pub struct TenantStatus {
+    pub name: String,
+    /// catalog pipeline name (spec.name)
+    pub pipeline: String,
+    pub agent: String,
+    pub generation: u64,
+    pub adapt_interval_secs: usize,
+    pub config: Vec<TaskConfig>,
+    pub ready: Vec<usize>,
+    /// cores this tenant currently holds on the shared cluster
+    pub cores: f64,
+    pub load_now: f64,
+    /// most recent predicted max load over the horizon (req/s)
+    pub load_pred: f64,
+    pub avg_qos: f64,
+    pub avg_cost: f64,
+    pub last_qos: f64,
+    pub last_cost: f64,
+    pub decisions: usize,
+    pub clamped: usize,
+    pub restarts: usize,
+    /// wall-clock seconds of the most recent agent decision
+    pub last_decision_secs: f64,
+}
+
+/// The shared-cluster, multi-pipeline environment.
+pub struct MultiEnv {
+    pub store: DeploymentStore,
+    pub now: f64,
+    tenants: BTreeMap<String, Tenant>,
+}
+
+impl MultiEnv {
+    pub fn new(topo: ClusterTopology, startup_secs: f64) -> Self {
+        Self { store: DeploymentStore::new(topo, startup_secs), now: 0.0, tenants: BTreeMap::new() }
+    }
+
+    pub fn n_tenants(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.tenants.contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.tenants.keys().cloned().collect()
+    }
+
+    /// Deploy (create or replace) a pipeline. Applies `initial` — the
+    /// cheapest config when None — immediately; the tenant's agent takes
+    /// over from its next adaptation boundary. Replacing an existing tenant
+    /// of the same name keeps the deployment's generation counter but resets
+    /// the serving statistics.
+    pub fn deploy(
+        &mut self,
+        mut tenant: Tenant,
+        initial: Option<Vec<TaskConfig>>,
+    ) -> Result<ApplyOutcome, String> {
+        let cfg = initial.unwrap_or_else(|| tenant.spec.default_config());
+        let out = self.store.apply(&tenant.name, &tenant.spec, &cfg, self.now)?;
+        tenant.generation = out.generation;
+        if out.clamped {
+            tenant.clamped += 1;
+        }
+        tenant.restarts += out.restarts;
+        // seed the load history so the first observation is meaningful
+        let r = tenant.source.next_rate();
+        tenant.history.push(r);
+        tenant.last_rate = r;
+        tenant.next_decision = self.now + tenant.adapt_interval_secs as f64;
+        self.tenants.insert(tenant.name.clone(), tenant);
+        Ok(out)
+    }
+
+    /// Remove a pipeline, releasing its cluster share immediately.
+    pub fn remove(&mut self, name: &str) -> bool {
+        let had = self.tenants.remove(name).is_some();
+        self.store.delete(name);
+        had
+    }
+
+    /// Hot-swap the decision agent of a running pipeline.
+    pub fn set_agent(&mut self, name: &str, agent: Box<dyn Agent>) -> Result<(), String> {
+        match self.tenants.get_mut(name) {
+            Some(t) => {
+                t.agent = agent;
+                Ok(())
+            }
+            None => Err(format!("no pipeline named '{name}'")),
+        }
+    }
+
+    /// Run one tenant's adaptation decision against the shared cluster.
+    fn decide(&mut self, name: &str) {
+        let n_tenants = self.tenants.len();
+        let t = match self.tenants.get_mut(name) {
+            Some(t) => t,
+            None => return,
+        };
+        let spec = t.spec.clone();
+        let window = t.history.window(PRED_WINDOW);
+        let load_pred = t.predictor.predict_max(&window);
+        t.last_pred = load_pred;
+        let current = self
+            .store
+            .get(name)
+            .map(|d| d.config.clone())
+            .unwrap_or_else(|| spec.default_config());
+        let ready = self.store.ready_replicas(name, spec.n_tasks(), self.now);
+        let metrics = pipeline_metrics(&spec, &current, &ready, t.last_rate);
+        let cores_other = self.store.cores_used_by_others(name);
+        let obs = Observation {
+            spec: &spec,
+            load_now: t.last_rate,
+            load_pred,
+            capacity: (self.store.topo.capacity() - cores_other).max(0.0),
+            cores_free: self.store.topo.free(),
+            current,
+            ready,
+            metrics,
+            adapt_interval_secs: t.adapt_interval_secs as f64,
+            cores_other,
+            tenants: n_tenants,
+        };
+        let t0 = std::time::Instant::now();
+        let action = t.agent.decide(&obs);
+        t.last_decision_secs = t0.elapsed().as_secs_f64();
+        match self.store.apply(name, &spec, &action, self.now) {
+            Ok(out) => {
+                t.generation = out.generation;
+                t.decisions += 1;
+                if out.clamped {
+                    t.clamped += 1;
+                }
+                t.restarts += out.restarts;
+            }
+            // infeasible even after clamping (the other tenants hold the
+            // cluster): keep the previous deployment and try again next round
+            Err(_) => {}
+        }
+        t.next_decision = self.now + t.adapt_interval_secs as f64;
+    }
+
+    /// Advance the shared clock by one second: run every adaptation decision
+    /// that is due, then serve one second of load for every tenant.
+    pub fn tick(&mut self) {
+        let due: Vec<String> = self
+            .tenants
+            .iter()
+            .filter(|(_, t)| self.now + 1e-9 >= t.next_decision)
+            .map(|(n, _)| n.clone())
+            .collect();
+        for name in due {
+            self.decide(&name);
+        }
+        self.now += 1.0;
+        for (name, t) in self.tenants.iter_mut() {
+            let rate = t.source.next_rate();
+            t.history.push(rate);
+            t.last_rate = rate;
+            let (config, ready) = match self.store.get(name) {
+                Some(d) => (
+                    d.config.clone(),
+                    self.store.ready_replicas(name, t.spec.n_tasks(), self.now),
+                ),
+                None => (t.spec.default_config(), vec![0; t.spec.n_tasks()]),
+            };
+            let m = pipeline_metrics(&t.spec, &config, &ready, rate);
+            let q = t.weights.qos(&m);
+            t.last_qos = q;
+            t.last_cost = m.cost;
+            t.qos_sum += q;
+            t.cost_sum += m.cost;
+            t.secs += 1;
+        }
+    }
+
+    pub fn run_for(&mut self, secs: usize) {
+        for _ in 0..secs {
+            self.tick();
+        }
+    }
+
+    pub fn status(&self, name: &str) -> Option<TenantStatus> {
+        let t = self.tenants.get(name)?;
+        let d = self.store.get(name);
+        Some(TenantStatus {
+            name: t.name.clone(),
+            pipeline: t.spec.name.clone(),
+            agent: t.agent.name().to_string(),
+            generation: t.generation,
+            adapt_interval_secs: t.adapt_interval_secs,
+            config: d.map(|d| d.config.clone()).unwrap_or_default(),
+            ready: self.store.ready_replicas(name, t.spec.n_tasks(), self.now),
+            cores: d.map(|d| d.allocated_cores()).unwrap_or(0.0),
+            load_now: t.last_rate,
+            load_pred: t.last_pred,
+            avg_qos: t.avg_qos(),
+            avg_cost: t.avg_cost(),
+            last_qos: t.last_qos,
+            last_cost: t.last_cost,
+            decisions: t.decisions,
+            clamped: t.clamped,
+            restarts: t.restarts,
+            last_decision_secs: t.last_decision_secs,
+        })
+    }
+
+    pub fn statuses(&self) -> Vec<TenantStatus> {
+        self.tenants.keys().filter_map(|n| self.status(n)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agents::{GreedyAgent, RandomAgent};
+    use crate::pipeline::catalog;
+    use crate::workload::predictor::MovingMaxPredictor;
+    use crate::workload::{WorkloadGen, WorkloadKind};
+
+    fn tenant(name: &str, pipeline: &str, kind: WorkloadKind, seed: u64) -> Tenant {
+        Tenant::new(
+            name,
+            catalog::by_name(pipeline).unwrap().spec,
+            Box::new(GreedyAgent::new()),
+            QosWeights::default(),
+            LoadSource::Gen(WorkloadGen::new(kind, seed)),
+            Box::new(MovingMaxPredictor::default()),
+            10,
+        )
+    }
+
+    #[test]
+    fn two_pipelines_share_the_cluster() {
+        let mut env = MultiEnv::new(ClusterTopology::paper_testbed(), 3.0);
+        env.deploy(tenant("vid", "video-analytics", WorkloadKind::SteadyHigh, 7), None)
+            .unwrap();
+        env.deploy(tenant("iot", "iot-anomaly", WorkloadKind::SteadyLow, 3), None).unwrap();
+        assert_eq!(env.n_tenants(), 2);
+        env.run_for(60);
+        assert_eq!(env.now, 60.0);
+        // shared-capacity accounting holds at every scale
+        let total = env.store.allocated_cores();
+        assert!(total <= env.store.topo.capacity() + 1e-6);
+        let svid = env.status("vid").unwrap();
+        let siot = env.status("iot").unwrap();
+        assert!((svid.cores + siot.cores - total).abs() < 1e-6);
+        // both agents have been deciding on their own intervals
+        assert!(svid.decisions >= 5, "vid decided {} times", svid.decisions);
+        assert!(siot.decisions >= 5);
+        assert!(svid.avg_cost > 0.0 && siot.avg_cost > 0.0);
+        // the heavy tenant provisions more than the light one
+        assert!(
+            svid.cores > siot.cores,
+            "steady-high ({}) should hold more cores than steady-low ({})",
+            svid.cores,
+            siot.cores
+        );
+    }
+
+    #[test]
+    fn remove_frees_shared_capacity() {
+        let mut env = MultiEnv::new(ClusterTopology::paper_testbed(), 3.0);
+        env.deploy(tenant("a", "video-analytics", WorkloadKind::SteadyHigh, 1), None).unwrap();
+        env.deploy(tenant("b", "iot-anomaly", WorkloadKind::SteadyHigh, 2), None).unwrap();
+        env.run_for(30);
+        let free_before = env.store.topo.free();
+        assert!(env.remove("a"));
+        assert!(env.store.topo.free() > free_before);
+        assert!(!env.contains("a"));
+        assert!(env.status("a").is_none());
+        assert!(!env.remove("a"), "double remove is a no-op");
+        // the survivor keeps serving
+        env.run_for(10);
+        assert!(env.status("b").unwrap().decisions > 0);
+    }
+
+    #[test]
+    fn agent_hot_swap_takes_effect() {
+        let mut env = MultiEnv::new(ClusterTopology::paper_testbed(), 3.0);
+        env.deploy(tenant("a", "P1", WorkloadKind::SteadyLow, 1), None).unwrap();
+        assert_eq!(env.status("a").unwrap().agent, "greedy");
+        env.set_agent("a", Box::new(RandomAgent::new(5))).unwrap();
+        assert_eq!(env.status("a").unwrap().agent, "random");
+        assert!(env.set_agent("nope", Box::new(RandomAgent::new(5))).is_err());
+        env.run_for(25);
+        assert!(env.status("a").unwrap().decisions >= 2);
+    }
+
+    #[test]
+    fn generations_climb_with_each_decision_apply() {
+        let mut env = MultiEnv::new(ClusterTopology::paper_testbed(), 3.0);
+        env.deploy(tenant("a", "P1", WorkloadKind::Fluctuating, 9), None).unwrap();
+        assert_eq!(env.status("a").unwrap().generation, 1);
+        env.run_for(31);
+        // decisions at t=10, 20, 30 → three more applies
+        assert_eq!(env.status("a").unwrap().generation, 4);
+        assert_eq!(env.status("a").unwrap().decisions, 3);
+    }
+
+    #[test]
+    fn replacing_a_tenant_resets_stats_but_not_generation() {
+        let mut env = MultiEnv::new(ClusterTopology::paper_testbed(), 3.0);
+        env.deploy(tenant("a", "video-analytics", WorkloadKind::SteadyHigh, 1), None).unwrap();
+        env.run_for(20);
+        let before = env.status("a").unwrap();
+        assert!(before.decisions > 0);
+        let out = env
+            .deploy(tenant("a", "video-analytics", WorkloadKind::SteadyLow, 2), None)
+            .unwrap();
+        assert!(out.generation > before.generation);
+        let after = env.status("a").unwrap();
+        assert_eq!(after.decisions, 0, "stats reset on replace");
+        assert_eq!(env.n_tenants(), 1);
+    }
+}

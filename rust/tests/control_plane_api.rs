@@ -1,0 +1,164 @@
+//! End-to-end v1 control-plane test: boot the leader with an empty cluster,
+//! then — entirely over real HTTP, with no restarts — apply two distinct
+//! pipelines, watch them share capacity, hot-swap one pipeline's agent,
+//! inspect the cluster accounting, delete a pipeline, and shut the leader
+//! down. The leader runs on the test thread (it is deliberately !Send); the
+//! HTTP client drives it from a spawned thread.
+
+use std::sync::Arc;
+
+use opd::cluster::ClusterTopology;
+use opd::serve::{
+    http_delete, http_get, http_post, http_put, v1_router, ControlPlane, HttpServer, Leader,
+    TenantFactory,
+};
+use opd::util::json::Json;
+
+#[test]
+fn v1_control_plane_end_to_end() {
+    let cp = Arc::new(ControlPlane::new());
+    let (mut leader, tx) = Leader::new(
+        cp.clone(),
+        ClusterTopology::paper_testbed(),
+        1.0,
+        TenantFactory::native(),
+    );
+    // no sim-time bound: the client ends the run via POST /v1/shutdown
+    let router = v1_router(&cp, tx);
+    let server = HttpServer::start("127.0.0.1:0", router, 2).unwrap();
+    let addr = server.addr;
+
+    let client = std::thread::spawn(move || {
+        // 1. the leader starts empty
+        let (code, body) = http_get(&addr, "/v1/pipelines").unwrap();
+        assert_eq!(code, 200, "{body}");
+        let j = Json::parse(&body).unwrap();
+        assert!(j.get("pipelines").unwrap().as_arr().unwrap().is_empty());
+
+        // 2. create two distinct pipelines via POST
+        let (code, body) = http_post(
+            &addr,
+            "/v1/pipelines",
+            r#"{"name":"vid","pipeline":"video-analytics","workload":"steady-high","agent":"greedy","seed":7}"#,
+        )
+        .unwrap();
+        assert_eq!(code, 201, "{body}");
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.req_str("agent").unwrap(), "greedy");
+        assert_eq!(j.req_str("pipeline").unwrap(), "video-analytics");
+        assert!(j.get("generation").unwrap().as_i64().unwrap() >= 1);
+
+        let (code, body) = http_post(
+            &addr,
+            "/v1/pipelines",
+            r#"{"name":"iot","pipeline":"iot-anomaly","workload":"steady-low","agent":"random","seed":3}"#,
+        )
+        .unwrap();
+        assert_eq!(code, 201, "{body}");
+
+        // duplicate POST → 409; unknown catalog entry → 400; bad JSON → 400
+        let (code, _) =
+            http_post(&addr, "/v1/pipelines", r#"{"name":"vid","pipeline":"video-analytics"}"#)
+                .unwrap();
+        assert_eq!(code, 409);
+        let (code, _) =
+            http_post(&addr, "/v1/pipelines", r#"{"name":"x","pipeline":"nope"}"#).unwrap();
+        assert_eq!(code, 400);
+        let (code, _) = http_post(&addr, "/v1/pipelines", "not json").unwrap();
+        assert_eq!(code, 400);
+
+        // 3. both show up in the list
+        let (code, body) = http_get(&addr, "/v1/pipelines").unwrap();
+        assert_eq!(code, 200);
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("pipelines").unwrap().as_arr().unwrap().len(), 2);
+
+        // let the shared serving loop run both pipelines for a while
+        std::thread::sleep(std::time::Duration::from_millis(400));
+
+        // 4. hot-swap vid's agent greedy → ipa through the API
+        let (code, body) =
+            http_post(&addr, "/v1/pipelines/vid/agent", r#"{"agent":"ipa"}"#).unwrap();
+        assert_eq!(code, 200, "{body}");
+        assert_eq!(Json::parse(&body).unwrap().req_str("agent").unwrap(), "ipa");
+        // swapping an unknown pipeline → 404; unknown agent → 400
+        let (code, _) =
+            http_post(&addr, "/v1/pipelines/zzz/agent", r#"{"agent":"ipa"}"#).unwrap();
+        assert_eq!(code, 404);
+        let (code, _) =
+            http_post(&addr, "/v1/pipelines/vid/agent", r#"{"agent":"zzz"}"#).unwrap();
+        assert_eq!(code, 400);
+
+        // 5. shared-capacity accounting in /v1/cluster
+        let (code, body) = http_get(&addr, "/v1/cluster").unwrap();
+        assert_eq!(code, 200);
+        let cl = Json::parse(&body).unwrap();
+        let cap = cl.req_f64("capacity").unwrap();
+        let used = cl.req_f64("used").unwrap();
+        assert!(used <= cap + 1e-6, "used {used} over capacity {cap}");
+        let pipes = cl.get("pipelines").unwrap().as_arr().unwrap();
+        assert_eq!(pipes.len(), 2);
+        let sum: f64 = pipes.iter().map(|p| p.req_f64("cores").unwrap()).sum();
+        assert!(
+            (sum - used).abs() < 1e-6,
+            "tenant cores {sum} must equal cluster used {used}"
+        );
+        assert!(
+            pipes.iter().all(|p| p.req_f64("cores").unwrap() > 0.0),
+            "every tenant holds a share: {body}"
+        );
+
+        // 6. per-pipeline status reflects the live serving loop
+        let (code, body) = http_get(&addr, "/v1/pipelines/vid").unwrap();
+        assert_eq!(code, 200);
+        let s = Json::parse(&body).unwrap();
+        assert!(s.req_f64("avg_cost").unwrap() > 0.0, "{body}");
+        assert!(s.req_f64("load_now").unwrap() > 0.0);
+        assert!(s.get("generation").unwrap().as_i64().unwrap() >= 1);
+        assert!(!s.get("config").unwrap().as_arr().unwrap().is_empty());
+
+        // 7. declarative PUT updates in place (same server, no restart)
+        let (code, body) = http_put(
+            &addr,
+            "/v1/pipelines/vid",
+            r#"{"pipeline":"video-analytics","workload":"fluctuating","agent":"greedy"}"#,
+        )
+        .unwrap();
+        assert_eq!(code, 200, "{body}");
+        assert_eq!(Json::parse(&body).unwrap().req_str("agent").unwrap(), "greedy");
+
+        // 8. delete iot; it is gone and its capacity is released
+        let (code, _) = http_delete(&addr, "/v1/pipelines/iot").unwrap();
+        assert_eq!(code, 200);
+        let (code, _) = http_get(&addr, "/v1/pipelines/iot").unwrap();
+        assert_eq!(code, 404);
+        let (code, _) = http_delete(&addr, "/v1/pipelines/iot").unwrap();
+        assert_eq!(code, 404, "double delete");
+        let (code, body) = http_get(&addr, "/v1/cluster").unwrap();
+        assert_eq!(code, 200);
+        let cl = Json::parse(&body).unwrap();
+        assert_eq!(cl.get("pipelines").unwrap().as_arr().unwrap().len(), 1);
+
+        // 9. wrong method on a known path → 405 (not 404)
+        let (code, _) = http_put(&addr, "/v1/pipelines", "{}").unwrap();
+        assert_eq!(code, 405);
+
+        // 10. the classic observability endpoints see the multi-tenant state
+        let (code, body) = http_get(&addr, "/metrics").unwrap();
+        assert_eq!(code, 200);
+        assert!(body.contains("opd_pipelines"), "{body}");
+        let (code, body) = http_get(&addr, "/state").unwrap();
+        assert_eq!(code, 200);
+        assert!(body.contains("\"pipelines\""));
+
+        // 11. stop the leader over the API
+        let (code, _) = http_post(&addr, "/v1/shutdown", "").unwrap();
+        assert_eq!(code, 200);
+    });
+
+    leader.run(); // returns once the client POSTs /v1/shutdown
+    client.join().unwrap();
+    assert_eq!(leader.env.n_tenants(), 1, "vid survives, iot deleted");
+    assert!(leader.env.now > 0.0, "the shared loop actually served traffic");
+    server.shutdown();
+}
