@@ -1,7 +1,9 @@
 //! §Perf — decision-path microbenchmarks (the L3 optimization target of
-//! DESIGN.md §7): state assembly, policy forward (AOT HLO vs native mirror),
-//! masked sampling, the full decide() path, predictor, IPA solver per
-//! preset, and raw simulator throughput.
+//! DESIGN.md §7): state assembly, policy forward (AOT HLO vs native mirror
+//! vs batched Workspace), a B = 1/4/16/64 batch sweep against B sequential
+//! forwards, the allocation-free single-decision check, masked sampling,
+//! the full decide() path, predictor, IPA solver per preset, and raw
+//! simulator throughput. Results land in BENCH_hotpath.json.
 //!
 //! Run: cargo bench --bench perf_hotpath
 
@@ -10,10 +12,13 @@ use std::rc::Rc;
 use opd::agents::{Agent, IpaAgent, OpdAgent};
 use opd::cluster::ClusterTopology;
 use opd::nn::policy::policy_fwd_native;
+use opd::nn::spec::{LOGITS_DIM, POLICY_PARAM_COUNT, STATE_DIM};
+use opd::nn::workspace::Workspace;
 use opd::pipeline::catalog::{self, Preset};
 use opd::pipeline::QosWeights;
 use opd::runtime::OpdRuntime;
 use opd::sim::{build_masks, build_state, Env};
+use opd::util::json::Json;
 use opd::util::timer::Bench;
 use opd::workload::predictor::{LoadPredictor, LstmPredictor, MovingMaxPredictor};
 use opd::workload::WorkloadKind;
@@ -70,10 +75,82 @@ fn main() {
         });
         println!("{}", r.row());
     }
-    let r = bench.run("policy_fwd native mirror", || {
+    let r_mirror = bench.run("policy_fwd native mirror (allocs per call)", || {
         std::hint::black_box(policy_fwd_native(&params, &state));
     });
-    println!("{}", r.row());
+    println!("{}", r_mirror.row());
+
+    // ---- batched, allocation-free forward (DESIGN.md §7) -----------------
+    let mut ws = Workspace::new();
+    let r_ws1 = bench.run("policy_fwd Workspace B=1 (alloc-free)", || {
+        std::hint::black_box(ws.policy_fwd_into(&params, &state));
+    });
+    println!("{}", r_ws1.row());
+    println!(
+        "  → allocating mirror is {:+.1}% slower than the Workspace forward",
+        (r_mirror.mean_ns - r_ws1.mean_ns) / r_ws1.mean_ns * 100.0
+    );
+
+    // allocation counter: after warm-up, steady-state forwards must not grow
+    // any workspace buffer
+    let warm_growth = {
+        let g0 = ws.grow_events();
+        for _ in 0..1_000 {
+            std::hint::black_box(ws.policy_fwd_into(&params, &state));
+        }
+        let grew = ws.grow_events() - g0;
+        assert_eq!(grew, 0, "single-decision path allocated after warm-up");
+        println!("  → scratch reuse verified: 0 buffer growths over 1000 forwards");
+        grew
+    };
+
+    // batch sweep: one batched forward vs B sequential single-state forwards
+    println!("\n--- batched forward sweep (B tenants per tick) ---");
+    let mut sweep_rows: Vec<Json> = Vec::new();
+    for b in [1usize, 4, 16, 64] {
+        // B distinct states (perturbed copies, so no branch is trivially warm)
+        let mut states = Vec::with_capacity(b * STATE_DIM);
+        for i in 0..b {
+            for (j, x) in state.iter().enumerate() {
+                states.push(x + ((i * 31 + j) % 17) as f32 * 1e-3);
+            }
+        }
+        let r_seq = bench.run(&format!("native ×{b} sequential"), || {
+            for i in 0..b {
+                std::hint::black_box(policy_fwd_native(
+                    &params,
+                    &states[i * STATE_DIM..(i + 1) * STATE_DIM],
+                ));
+            }
+        });
+        println!("{}", r_seq.row());
+        let mut wsb = Workspace::new();
+        let r_batch = bench.run(&format!("policy_fwd_batch B={b}"), || {
+            std::hint::black_box(wsb.policy_fwd_batch(&params, &states, b).1[0]);
+        });
+        println!("{}", r_batch.row());
+        let speedup = r_seq.mean_ns / r_batch.mean_ns;
+        println!("  → B={b}: batched is {speedup:.2}× the sequential loop");
+        sweep_rows.push(
+            Json::obj()
+                .set("batch", b)
+                .set("sequential_mean_ns", r_seq.mean_ns)
+                .set("batched_mean_ns", r_batch.mean_ns)
+                .set("speedup", speedup),
+        );
+    }
+    let bench_json = Json::obj()
+        .set("param_count", POLICY_PARAM_COUNT)
+        .set("state_dim", STATE_DIM)
+        .set("logits_dim", LOGITS_DIM)
+        .set("single_mirror_mean_ns", r_mirror.mean_ns)
+        .set("single_workspace_mean_ns", r_ws1.mean_ns)
+        .set("workspace_grow_events_after_warmup", warm_growth as f64)
+        .set("batch_sweep", Json::Arr(sweep_rows));
+    match std::fs::write("BENCH_hotpath.json", bench_json.to_pretty()) {
+        Ok(()) => println!("  → wrote BENCH_hotpath.json"),
+        Err(e) => println!("  → could not write BENCH_hotpath.json: {e}"),
+    }
 
     // ---- full decide() path ----------------------------------------------
     let mut opd_agent = match &rt {

@@ -19,9 +19,37 @@ use crate::sim::env::Observation;
 
 /// A configuration-selection agent. `decide` returns the Eq. 6 action: one
 /// (variant, replicas, batch) triple per pipeline task.
+///
+/// Agents whose policy is a native NN forward over a flat parameter vector
+/// additionally opt into the **batched decision path** (DESIGN.md §7): the
+/// multi-tenant tick groups such agents by parameter fingerprint and
+/// evaluates all of a group's observations in one `policy_fwd_batch` pass,
+/// then hands each agent its row via `batch_decide`.
 pub trait Agent {
     fn name(&self) -> &'static str;
     fn decide(&mut self, obs: &Observation<'_>) -> Vec<TaskConfig>;
+
+    /// Batched-evaluation support: the flat native parameter vector plus its
+    /// stable fingerprint (`nn::params_fingerprint`). `None` (the default)
+    /// keeps the agent on the per-tenant sequential path.
+    fn batch_params(&self) -> Option<(&[f32], u64)> {
+        None
+    }
+
+    /// Consume one row of a batched forward: `state` is the Eq. 5 row the
+    /// caller evaluated, `logits`/`value` its outputs. Implementations
+    /// sample/argmax exactly as `decide` would. The default falls back to a
+    /// full `decide` so the method is always safe to call.
+    fn batch_decide(
+        &mut self,
+        obs: &Observation<'_>,
+        state: &[f32],
+        logits: &[f32],
+        value: f32,
+    ) -> Vec<TaskConfig> {
+        let _ = (state, logits, value);
+        self.decide(obs)
+    }
 }
 
 /// Construct a baseline agent by kind (OPD needs runtime wiring; see

@@ -3,19 +3,27 @@
 //! (Pallas kernels inside) on the PJRT runtime. Sampling / masking / logp
 //! bookkeeping happens rust-side so rollouts are reproducible and the
 //! trainer can consume the trajectory.
+//!
+//! The decision path is allocation-free after warm-up (DESIGN.md §7): the
+//! state vector, action masks and action indices live in the reused
+//! `DecisionRecord`, the forward runs through a [`Workspace`], and head
+//! sampling uses stack scratch. The only per-decision heap allocation left
+//! is the `Vec<TaskConfig>` the `Agent` trait returns.
 
 use std::rc::Rc;
 
 use crate::agents::Agent;
-use crate::nn::math::{argmax_masked, sample_masked};
+use crate::nn::math::{argmax_masked_scratch, sample_masked_scratch};
 use crate::nn::policy::policy_fwd_native;
 use crate::nn::spec::*;
+use crate::nn::workspace::{params_fingerprint, Workspace};
 use crate::pipeline::TaskConfig;
 use crate::runtime::OpdRuntime;
-use crate::sim::env::{build_masks, build_state, decode_action, Observation};
+use crate::sim::env::{build_masks_into, build_state_into, decode_action, Observation};
 use crate::util::prng::Pcg32;
 
-/// Trajectory record of the last decision (consumed by rl::trainer).
+/// Trajectory record of the last decision (consumed by rl::trainer). The
+/// buffers are reused across decisions — `decide` overwrites them in place.
 #[derive(Clone, Debug, Default)]
 pub struct DecisionRecord {
     pub state: Vec<f32>,
@@ -36,13 +44,48 @@ enum Backend {
     Native,
 }
 
+/// Select per-task head indices from `logits` under masks, writing the
+/// ACT_DIM indices into `idx`; returns the total log-prob. Shared by the
+/// sequential decide path and the batched multi-tenant path — both must
+/// consume the RNG identically so batching does not change rollouts.
+fn select_heads(
+    logits: &[f32],
+    head_mask: &[bool],
+    task_mask: &[bool],
+    greedy: bool,
+    rng: &mut Pcg32,
+    idx: &mut [usize],
+) -> f32 {
+    debug_assert_eq!(idx.len(), ACT_DIM);
+    let mut scratch = [0.0f32; MAX_HEAD_DIM];
+    let mut logp = 0.0f32;
+    for (t, k, off, d) in head_layout() {
+        if !task_mask[t] {
+            continue;
+        }
+        let lg = &logits[off..off + d];
+        let mk = &head_mask[off..off + d];
+        let (i, lp) = if greedy {
+            argmax_masked_scratch(lg, mk, &mut scratch[..d])
+        } else {
+            sample_masked_scratch(lg, mk, rng, &mut scratch[..d])
+        };
+        idx[t * 3 + k] = i;
+        logp += lp;
+    }
+    logp
+}
+
 pub struct OpdAgent {
     backend: Backend,
     pub params: Vec<f32>,
+    /// fingerprint of `params` — groups agents for the batched tick path
+    params_fp: u64,
     rng: Pcg32,
     /// argmax instead of sampling (evaluation mode)
     pub greedy: bool,
     pub last: DecisionRecord,
+    ws: Workspace,
 }
 
 impl OpdAgent {
@@ -50,29 +93,36 @@ impl OpdAgent {
     /// (or trained parameters loaded separately via `set_params`).
     pub fn from_runtime(rt: Rc<OpdRuntime>, seed: u64) -> Self {
         let params = rt.policy_init.clone();
+        let params_fp = params_fingerprint(&params);
         Self {
             backend: Backend::Hlo(rt, std::cell::OnceCell::new()),
             params,
+            params_fp,
             rng: Pcg32::stream(seed, 0x4f5044), // "OPD"
             greedy: false,
             last: DecisionRecord::default(),
+            ws: Workspace::new(),
         }
     }
 
     /// Native fallback (no PJRT): same layout, pure-rust forward.
     pub fn native(params: Vec<f32>, seed: u64) -> Self {
         assert_eq!(params.len(), POLICY_PARAM_COUNT);
+        let params_fp = params_fingerprint(&params);
         Self {
             backend: Backend::Native,
             params,
+            params_fp,
             rng: Pcg32::stream(seed, 0x4f5044),
             greedy: false,
             last: DecisionRecord::default(),
+            ws: Workspace::new(),
         }
     }
 
     pub fn set_params(&mut self, params: Vec<f32>) {
         assert_eq!(params.len(), POLICY_PARAM_COUNT);
+        self.params_fp = params_fingerprint(&params);
         self.params = params;
         // invalidate the pinned device buffer
         if let Backend::Hlo(_, pinned) = &mut self.backend {
@@ -80,7 +130,15 @@ impl OpdAgent {
         }
     }
 
-    /// Evaluate the policy network (HLO or native).
+    /// Workspace (re)allocation count — the perf bench's proof hook that the
+    /// decision path stops allocating after warm-up.
+    pub fn workspace_grow_events(&self) -> u64 {
+        self.ws.grow_events()
+    }
+
+    /// Evaluate the policy network (HLO or native), allocating reference
+    /// path — the trainer's expert scoring and the cross-check tests use
+    /// this; `decide` itself goes through the workspace.
     pub fn forward(&self, state: &[f32]) -> (Vec<f32>, f32) {
         match &self.backend {
             Backend::Hlo(rt, pinned) => {
@@ -96,8 +154,29 @@ impl OpdAgent {
         }
     }
 
+    /// Run the forward for `self.last.state`, leaving the logits in the
+    /// workspace; returns the value estimate. Native goes through the
+    /// batched kernels (batch = 1); HLO results are copied into the
+    /// workspace so sampling reads from one place.
+    fn forward_scratch(&mut self) -> f32 {
+        match &self.backend {
+            Backend::Hlo(rt, pinned) => {
+                let buf = pinned.get_or_init(|| rt.pin_params(&self.params).ok());
+                if let Some(b) = buf {
+                    if let Ok((logits, value)) = rt.policy_forward_pinned(b, &self.last.state) {
+                        self.ws.set_logits(&logits);
+                        return value;
+                    }
+                }
+                self.ws.policy_fwd_into(&self.params, &self.last.state)
+            }
+            Backend::Native => self.ws.policy_fwd_into(&self.params, &self.last.state),
+        }
+    }
+
     /// Select per-task head indices from logits under masks.
-    /// Returns (ACT_DIM indices, total logp).
+    /// Returns (ACT_DIM indices, total logp). Allocating wrapper kept for
+    /// API compatibility; the decision path uses the scratch internals.
     pub fn select(
         &mut self,
         logits: &[f32],
@@ -105,26 +184,7 @@ impl OpdAgent {
         task_mask: &[bool],
     ) -> (Vec<usize>, f32) {
         let mut idx = vec![0usize; ACT_DIM];
-        let mut logp = 0.0f32;
-        for t in 0..MAX_TASKS {
-            if !task_mask[t] {
-                continue;
-            }
-            let base = t * HEAD_DIM;
-            let mut off = 0usize;
-            for (k, d) in HEAD_DIMS.iter().enumerate() {
-                let lg = &logits[base + off..base + off + d];
-                let mk = &head_mask[base + off..base + off + d];
-                let (i, lp) = if self.greedy {
-                    argmax_masked(lg, mk)
-                } else {
-                    sample_masked(lg, mk, &mut self.rng)
-                };
-                idx[t * 3 + k] = i;
-                logp += lp;
-                off += d;
-            }
-        }
+        let logp = select_heads(logits, head_mask, task_mask, self.greedy, &mut self.rng, &mut idx);
         (idx, logp)
     }
 }
@@ -135,19 +195,57 @@ impl Agent for OpdAgent {
     }
 
     fn decide(&mut self, obs: &Observation<'_>) -> Vec<TaskConfig> {
-        let state = build_state(obs);
-        let masks = build_masks(obs.spec);
-        let (logits, value) = self.forward(&state);
-        let (idx, logp) = self.select(&logits, &masks.head, &masks.task);
-        self.last = DecisionRecord {
-            state,
-            action_idx: idx.clone(),
-            logp,
-            value,
-            head_mask: masks.head,
-            task_mask: masks.task,
-        };
-        decode_action(obs.spec, &idx)
+        build_state_into(obs, &mut self.last.state);
+        build_masks_into(obs.spec, &mut self.last.head_mask, &mut self.last.task_mask);
+        let value = self.forward_scratch();
+        self.last.action_idx.clear();
+        self.last.action_idx.resize(ACT_DIM, 0);
+        let logp = select_heads(
+            self.ws.logits(),
+            &self.last.head_mask,
+            &self.last.task_mask,
+            self.greedy,
+            &mut self.rng,
+            &mut self.last.action_idx,
+        );
+        self.last.logp = logp;
+        self.last.value = value;
+        decode_action(obs.spec, &self.last.action_idx)
+    }
+
+    fn batch_params(&self) -> Option<(&[f32], u64)> {
+        match self.backend {
+            // the batched pass is the native mirror; HLO-backed agents stay
+            // on their pinned-buffer per-decision path (device round-trips
+            // don't batch across tenants without a batched HLO artifact)
+            Backend::Native => Some((&self.params, self.params_fp)),
+            Backend::Hlo(..) => None,
+        }
+    }
+
+    fn batch_decide(
+        &mut self,
+        obs: &Observation<'_>,
+        state: &[f32],
+        logits: &[f32],
+        value: f32,
+    ) -> Vec<TaskConfig> {
+        self.last.state.clear();
+        self.last.state.extend_from_slice(state);
+        build_masks_into(obs.spec, &mut self.last.head_mask, &mut self.last.task_mask);
+        self.last.action_idx.clear();
+        self.last.action_idx.resize(ACT_DIM, 0);
+        let logp = select_heads(
+            logits,
+            &self.last.head_mask,
+            &self.last.task_mask,
+            self.greedy,
+            &mut self.rng,
+            &mut self.last.action_idx,
+        );
+        self.last.logp = logp;
+        self.last.value = value;
+        decode_action(obs.spec, &self.last.action_idx)
     }
 }
 
@@ -156,7 +254,7 @@ mod tests {
     use super::*;
     use crate::cluster::ClusterTopology;
     use crate::pipeline::{catalog, QosWeights};
-    use crate::sim::env::Env;
+    use crate::sim::env::{build_state, Env};
     use crate::workload::predictor::MovingMaxPredictor;
     use crate::workload::WorkloadKind;
 
@@ -272,5 +370,58 @@ mod tests {
             }
         }
         assert!((want - rec.logp).abs() < 1e-4, "{want} vs {}", rec.logp);
+    }
+
+    #[test]
+    fn decide_path_stops_allocating_after_warmup() {
+        let mut e = env();
+        let mut a = OpdAgent::native(test_params(6), 4);
+        let action = {
+            let obs = e.observe();
+            a.decide(&obs)
+        };
+        e.step(&action);
+        let warm = a.workspace_grow_events();
+        for _ in 0..5 {
+            let action = {
+                let obs = e.observe();
+                a.decide(&obs)
+            };
+            e.step(&action);
+        }
+        assert_eq!(a.workspace_grow_events(), warm, "decide() must reuse scratch");
+    }
+
+    #[test]
+    fn batch_decide_matches_sequential_decide() {
+        // same seed, same observation: consuming a precomputed forward row
+        // must reproduce decide() exactly (same rng draws, same record)
+        let mut e = env();
+        let obs = e.observe();
+        let state = build_state(&obs);
+        let params = test_params(7);
+
+        let mut seq = OpdAgent::native(params.clone(), 21);
+        let want = seq.decide(&obs);
+
+        let mut bat = OpdAgent::native(params.clone(), 21);
+        let (params_ref, fp) = bat.batch_params().expect("native agent is batchable");
+        assert_eq!(fp, params_fingerprint(&params));
+        let _ = params_ref;
+        let mut ws = Workspace::new();
+        let value = ws.policy_fwd_into(&params, &state);
+        let got = bat.batch_decide(&obs, &state, ws.logits(), value);
+
+        assert_eq!(got, want);
+        assert_eq!(bat.last.action_idx, seq.last.action_idx);
+        assert!((bat.last.logp - seq.last.logp).abs() < 1e-6);
+        assert_eq!(bat.last.value, seq.last.value);
+    }
+
+    #[test]
+    fn baseline_agents_do_not_batch() {
+        use crate::agents::GreedyAgent;
+        let g = GreedyAgent::new();
+        assert!(Agent::batch_params(&g).is_none());
     }
 }

@@ -384,6 +384,14 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     cp.metrics.describe("opd_cost_cores", "per-pipeline cost in CPU cores (Eq. 2)");
     cp.metrics.describe("opd_decisions_total", "configuration decisions applied");
     cp.metrics.describe("opd_decision_seconds", "wall-clock seconds per agent decision");
+    cp.metrics.describe(
+        "opd_batched_decisions_total",
+        "decisions evaluated through the batched native forward (DESIGN.md \u{a7}7)",
+    );
+    cp.metrics.describe(
+        "opd_batched_forwards_total",
+        "batched policy forwards executed by the leader tick",
+    );
     cp.metrics.describe("opd_pipelines", "pipelines deployed on the shared cluster");
     cp.metrics.describe("opd_cluster_used_cores", "cores allocated across all pipelines");
 

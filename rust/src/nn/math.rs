@@ -7,9 +7,12 @@ use crate::util::prng::Pcg32;
 
 pub const NEG_INF: f32 = -1.0e9;
 
-/// Numerically-stable masked log-softmax. `mask[i] == false` → excluded.
-pub fn log_softmax_masked(logits: &[f32], mask: &[bool]) -> Vec<f32> {
+/// Numerically-stable masked log-softmax, written into `out` (hot path:
+/// no allocation; `out` is caller-owned scratch of the same length).
+/// `mask[i] == false` → excluded.
+pub fn log_softmax_masked_into(logits: &[f32], mask: &[bool], out: &mut [f32]) {
     assert_eq!(logits.len(), mask.len());
+    assert_eq!(logits.len(), out.len());
     let mx = logits
         .iter()
         .zip(mask)
@@ -17,8 +20,9 @@ pub fn log_softmax_masked(logits: &[f32], mask: &[bool]) -> Vec<f32> {
         .map(|(x, _)| *x)
         .fold(f32::NEG_INFINITY, f32::max);
     if mx == f32::NEG_INFINITY {
-        // fully-masked head: return NEG_INF everywhere (caller guards)
-        return vec![NEG_INF; logits.len()];
+        // fully-masked head: NEG_INF everywhere (sampling/argmax guard on it)
+        out.fill(NEG_INF);
+        return;
     }
     let mut denom = 0.0f32;
     for (x, m) in logits.iter().zip(mask) {
@@ -27,11 +31,16 @@ pub fn log_softmax_masked(logits: &[f32], mask: &[bool]) -> Vec<f32> {
         }
     }
     let log_denom = denom.ln();
-    logits
-        .iter()
-        .zip(mask)
-        .map(|(x, m)| if *m { x - mx - log_denom } else { NEG_INF })
-        .collect()
+    for ((o, x), m) in out.iter_mut().zip(logits).zip(mask) {
+        *o = if *m { x - mx - log_denom } else { NEG_INF };
+    }
+}
+
+/// Allocating convenience wrapper around [`log_softmax_masked_into`].
+pub fn log_softmax_masked(logits: &[f32], mask: &[bool]) -> Vec<f32> {
+    let mut out = vec![0.0f32; logits.len()];
+    log_softmax_masked_into(logits, mask, &mut out);
+    out
 }
 
 /// Masked softmax probabilities (sum to 1 over the valid entries).
@@ -42,22 +51,54 @@ pub fn softmax_masked(logits: &[f32], mask: &[bool]) -> Vec<f32> {
         .collect()
 }
 
-/// Sample an index from masked logits; returns (index, log-prob).
-pub fn sample_masked(logits: &[f32], mask: &[bool], rng: &mut Pcg32) -> (usize, f32) {
-    let lp = log_softmax_masked(logits, mask);
-    let probs: Vec<f64> = lp
-        .iter()
-        .map(|l| if *l <= NEG_INF / 2.0 { 0.0 } else { (*l as f64).exp() })
-        .collect();
-    let idx = rng
-        .categorical(&probs)
-        .unwrap_or_else(|| mask.iter().position(|m| *m).unwrap_or(0));
-    (idx, lp[idx])
+/// Sample an index from masked logits using caller-owned scratch (no
+/// allocation); returns (index, log-prob).
+///
+/// A fully-masked head has no valid category to sample: the pick is the
+/// deterministic fallback (index 0) and the returned log-prob is 0.0 — the
+/// log-prob of a *certain* event — rather than NEG_INF, which would poison
+/// PPO importance ratios if the record ever reached the trainer.
+pub fn sample_masked_scratch(
+    logits: &[f32],
+    mask: &[bool],
+    rng: &mut Pcg32,
+    scratch: &mut [f32],
+) -> (usize, f32) {
+    if !mask.iter().any(|m| *m) {
+        return (0, 0.0);
+    }
+    log_softmax_masked_into(logits, mask, scratch);
+    // inverse-CDF walk over the (unit-sum) masked softmax
+    let mut x = rng.uniform();
+    let mut last_valid = 0usize;
+    for (i, (lp, m)) in scratch.iter().zip(mask).enumerate() {
+        if !*m {
+            continue;
+        }
+        last_valid = i;
+        x -= (*lp as f64).exp();
+        if x <= 0.0 {
+            return (i, *lp);
+        }
+    }
+    // floating-point slop: fall back to the last valid index
+    (last_valid, scratch[last_valid])
 }
 
-/// Greedy (argmax) choice from masked logits; returns (index, log-prob).
-pub fn argmax_masked(logits: &[f32], mask: &[bool]) -> (usize, f32) {
-    let lp = log_softmax_masked(logits, mask);
+/// Allocating convenience wrapper around [`sample_masked_scratch`].
+pub fn sample_masked(logits: &[f32], mask: &[bool], rng: &mut Pcg32) -> (usize, f32) {
+    let mut scratch = vec![0.0f32; logits.len()];
+    sample_masked_scratch(logits, mask, rng, &mut scratch)
+}
+
+/// Greedy (argmax) choice from masked logits using caller-owned scratch;
+/// returns (index, log-prob). Fully-masked heads take the same guarded
+/// (0, 0.0) fallback as [`sample_masked_scratch`].
+pub fn argmax_masked_scratch(logits: &[f32], mask: &[bool], scratch: &mut [f32]) -> (usize, f32) {
+    if !mask.iter().any(|m| *m) {
+        return (0, 0.0);
+    }
+    log_softmax_masked_into(logits, mask, scratch);
     let mut best = 0usize;
     let mut best_v = f32::NEG_INFINITY;
     for (i, (l, m)) in logits.iter().zip(mask).enumerate() {
@@ -66,7 +107,13 @@ pub fn argmax_masked(logits: &[f32], mask: &[bool]) -> (usize, f32) {
             best = i;
         }
     }
-    (best, lp[best])
+    (best, scratch[best])
+}
+
+/// Allocating convenience wrapper around [`argmax_masked_scratch`].
+pub fn argmax_masked(logits: &[f32], mask: &[bool]) -> (usize, f32) {
+    let mut scratch = vec![0.0f32; logits.len()];
+    argmax_masked_scratch(logits, mask, &mut scratch)
 }
 
 /// Entropy (nats) of the masked categorical.
@@ -81,12 +128,15 @@ pub fn entropy_masked(logits: &[f32], mask: &[bool]) -> f32 {
     h
 }
 
-/// y = x @ w + b where x is (i,), w is (i, o) row-major, b is (o,).
-pub fn dense(x: &[f32], w: &[f32], b: &[f32], o: usize, relu: bool) -> Vec<f32> {
+/// y = x @ w + b written into caller-owned `y` (len o); x is (i,), w is
+/// (i, o) row-major, b is (o,). The accumulation order is identical to the
+/// batched variant so single and batched forwards agree bitwise.
+pub fn dense_into(x: &[f32], w: &[f32], b: &[f32], o: usize, relu: bool, y: &mut [f32]) {
     let i = x.len();
     assert_eq!(w.len(), i * o, "dense: weight shape mismatch");
     assert_eq!(b.len(), o);
-    let mut y = b.to_vec();
+    assert_eq!(y.len(), o);
+    y.copy_from_slice(b);
     for (row, &xv) in x.iter().enumerate() {
         if xv == 0.0 {
             continue;
@@ -97,13 +147,64 @@ pub fn dense(x: &[f32], w: &[f32], b: &[f32], o: usize, relu: bool) -> Vec<f32> 
         }
     }
     if relu {
-        for v in &mut y {
+        for v in y.iter_mut() {
             if *v < 0.0 {
                 *v = 0.0;
             }
         }
     }
+}
+
+/// Allocating convenience wrapper around [`dense_into`].
+pub fn dense(x: &[f32], w: &[f32], b: &[f32], o: usize, relu: bool) -> Vec<f32> {
+    let mut y = vec![0.0f32; o];
+    dense_into(x, w, b, o, relu, &mut y);
     y
+}
+
+/// Batched Y = X @ W + b: `xs` is (batch, i) row-major, `out` is (batch, o)
+/// row-major. The weight matrix is walked ONCE per layer with all batch rows
+/// updated per weight row — for the 128k-float policy parameter vector
+/// (~500 KiB, larger than L2 on most edge CPUs) this is what makes one
+/// batched forward beat B sequential forwards: each weight row is hot in L1
+/// while every batch row consumes it.
+pub fn dense_batch_into(
+    xs: &[f32],
+    batch: usize,
+    i: usize,
+    w: &[f32],
+    b: &[f32],
+    o: usize,
+    relu: bool,
+    out: &mut [f32],
+) {
+    assert_eq!(xs.len(), batch * i, "dense_batch: input shape mismatch");
+    assert_eq!(w.len(), i * o, "dense_batch: weight shape mismatch");
+    assert_eq!(b.len(), o);
+    assert_eq!(out.len(), batch * o);
+    for bi in 0..batch {
+        out[bi * o..(bi + 1) * o].copy_from_slice(b);
+    }
+    for row in 0..i {
+        let wrow = &w[row * o..(row + 1) * o];
+        for bi in 0..batch {
+            let xv = xs[bi * i + row];
+            if xv == 0.0 {
+                continue;
+            }
+            let dst = &mut out[bi * o..(bi + 1) * o];
+            for (yj, wj) in dst.iter_mut().zip(wrow) {
+                *yj += xv * wj;
+            }
+        }
+    }
+    if relu {
+        for v in out.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
 }
 
 pub fn sigmoid(x: f32) -> f32 {
@@ -208,7 +309,52 @@ mod tests {
         let lp = log_softmax_masked(&[1.0, 2.0], &[false, false]);
         assert!(lp.iter().all(|l| *l <= NEG_INF / 2.0));
         let mut rng = Pcg32::new(0);
-        let (i, _) = sample_masked(&[1.0, 2.0], &[false, false], &mut rng);
+        let (i, logp) = sample_masked(&[1.0, 2.0], &[false, false], &mut rng);
         assert_eq!(i, 0); // deterministic fallback
+        // the fallback is a *certain* pick: its log-prob must be the guarded
+        // 0.0, not NEG_INF — a −1e9 old_logp would blow up exp(new−old) in
+        // the PPO importance ratio if such a record ever reached rl/ppo.rs
+        assert_eq!(logp, 0.0, "guarded log-prob for the deterministic fallback");
+        let (i, logp) = argmax_masked(&[1.0, 2.0], &[false, false]);
+        assert_eq!((i, logp), (0, 0.0), "argmax takes the same guarded fallback");
+    }
+
+    #[test]
+    fn into_variants_match_allocating_apis() {
+        let mut rng = Pcg32::new(77);
+        let logits: Vec<f32> = (0..8).map(|_| rng.normal() as f32).collect();
+        let mask = [true, false, true, true, false, true, true, true];
+        let mut scratch = [0.0f32; 8];
+        log_softmax_masked_into(&logits, &mask, &mut scratch);
+        assert_eq!(scratch.to_vec(), log_softmax_masked(&logits, &mask));
+        // sampling: same rng state → identical picks through both paths
+        let mut a = Pcg32::new(5);
+        let mut b = Pcg32::new(5);
+        for _ in 0..200 {
+            let got = sample_masked_scratch(&logits, &mask, &mut a, &mut scratch);
+            let want = sample_masked(&logits, &mask, &mut b);
+            assert_eq!(got, want);
+        }
+        assert_eq!(
+            argmax_masked_scratch(&logits, &mask, &mut scratch),
+            argmax_masked(&logits, &mask)
+        );
+    }
+
+    #[test]
+    fn dense_batch_matches_single_rows() {
+        let mut rng = Pcg32::new(9);
+        let (batch, i, o) = (5usize, 7usize, 4usize);
+        let xs: Vec<f32> = (0..batch * i).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..i * o).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..o).map(|_| rng.normal() as f32).collect();
+        for relu in [false, true] {
+            let mut out = vec![0.0f32; batch * o];
+            dense_batch_into(&xs, batch, i, &w, &b, o, relu, &mut out);
+            for bi in 0..batch {
+                let single = dense(&xs[bi * i..(bi + 1) * i], &w, &b, o, relu);
+                assert_eq!(&out[bi * o..(bi + 1) * o], single.as_slice(), "row {bi}");
+            }
+        }
     }
 }

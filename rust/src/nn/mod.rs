@@ -5,5 +5,7 @@
 pub mod math;
 pub mod policy;
 pub mod spec;
+pub mod workspace;
 
 pub use spec::Manifest;
+pub use workspace::{params_fingerprint, Workspace};

@@ -122,9 +122,31 @@ pub const PREDICTOR_LAYOUT: PredictorLayout = {
     PredictorLayout { wx, wh, b, dense_w, dense_b, total: dense_b + 1 }
 };
 
-/// Native LSTM predictor forward: raw req/s window (PRED_WINDOW,) → predicted
-/// max load of the next horizon (raw req/s). Mirrors model.predictor_fwd.
-pub fn predictor_fwd_native(params: &[f32], window: &[f32]) -> f32 {
+/// Reusable LSTM cell-state buffers: the predictor runs every adaptation
+/// decision of every tenant, so its h/c/gate vectors are scratch the caller
+/// keeps across ticks instead of three fresh `Vec`s per prediction
+/// (DESIGN.md §7).
+#[derive(Default)]
+pub struct LstmScratch {
+    h: Vec<f32>,
+    c: Vec<f32>,
+    gates: Vec<f32>,
+}
+
+impl LstmScratch {
+    fn reset(&mut self, hd: usize) {
+        self.h.clear();
+        self.h.resize(hd, 0.0);
+        self.c.clear();
+        self.c.resize(hd, 0.0);
+        self.gates.clear();
+        self.gates.resize(4 * hd, 0.0);
+    }
+}
+
+/// Native LSTM predictor forward with caller-owned scratch (no per-call
+/// allocations once the scratch is warm). Mirrors model.predictor_fwd.
+pub fn predictor_fwd_scratch(params: &[f32], window: &[f32], s: &mut LstmScratch) -> f32 {
     assert_eq!(params.len(), PREDICTOR_PARAM_COUNT);
     assert_eq!(window.len(), PRED_WINDOW);
     let l = &PREDICTOR_LAYOUT;
@@ -133,9 +155,8 @@ pub fn predictor_fwd_native(params: &[f32], window: &[f32]) -> f32 {
     let wh = &params[l.wh..l.wh + hd * 4 * hd]; // (H, 4H) row-major
     let bias = &params[l.b..l.b + 4 * hd];
 
-    let mut h = vec![0.0f32; hd];
-    let mut c = vec![0.0f32; hd];
-    let mut gates = vec![0.0f32; 4 * hd];
+    s.reset(hd);
+    let LstmScratch { h, c, gates } = s;
     for &x_raw in window {
         let x = x_raw / LOAD_SCALE as f32;
         // gates = x*wx + h@wh + b
@@ -167,6 +188,14 @@ pub fn predictor_fwd_native(params: &[f32], window: &[f32]) -> f32 {
         out += hv * wv;
     }
     out * LOAD_SCALE as f32
+}
+
+/// Native LSTM predictor forward: raw req/s window (PRED_WINDOW,) → predicted
+/// max load of the next horizon (raw req/s). Allocating convenience wrapper
+/// around [`predictor_fwd_scratch`] for tests and one-off callers.
+pub fn predictor_fwd_native(params: &[f32], window: &[f32]) -> f32 {
+    let mut scratch = LstmScratch::default();
+    predictor_fwd_scratch(params, window, &mut scratch)
 }
 
 #[cfg(test)]

@@ -20,6 +20,35 @@ pub const STATE_DIM: usize = NODE_FEATS + MAX_TASKS * TASK_FEATS; // 86
 
 pub const HEAD_DIMS: [usize; 3] = [MAX_VARIANTS, F_MAX, N_BATCH];
 pub const HEAD_DIM: usize = MAX_VARIANTS + F_MAX + N_BATCH; // 18
+
+/// Largest single action head — sizes the stack scratch the samplers use.
+pub const MAX_HEAD_DIM: usize = {
+    let mut m = HEAD_DIMS[0];
+    if HEAD_DIMS[1] > m {
+        m = HEAD_DIMS[1];
+    }
+    if HEAD_DIMS[2] > m {
+        m = HEAD_DIMS[2];
+    }
+    m
+};
+
+/// Walk the factored action heads in sampling order: yields
+/// `(task, head_k, logits_offset, head_dim)` for every (task, head) pair,
+/// where `logits_offset` is absolute within the LOGITS_DIM vector and
+/// `head_k` indexes HEAD_DIMS (variant / replica / batch). The single
+/// source of truth for the head layout — samplers, expert scoring and the
+/// minibatch evaluator all iterate through this.
+pub fn head_layout() -> impl Iterator<Item = (usize, usize, usize, usize)> {
+    (0..MAX_TASKS).flat_map(|t| {
+        let mut off = t * HEAD_DIM;
+        HEAD_DIMS.into_iter().enumerate().map(move |(k, d)| {
+            let o = off;
+            off += d;
+            (t, k, o, d)
+        })
+    })
+}
 pub const LOGITS_DIM: usize = MAX_TASKS * HEAD_DIM; // 144
 pub const ACT_DIM: usize = MAX_TASKS * 3; // 24
 
@@ -188,5 +217,23 @@ mod tests {
     #[test]
     fn parse_rejects_missing_fields() {
         assert!(Manifest::parse("{}").is_err());
+    }
+
+    #[test]
+    fn head_layout_covers_every_logit_once() {
+        let mut seen = vec![false; LOGITS_DIM];
+        let mut count = 0usize;
+        for (t, k, off, d) in head_layout() {
+            assert!(t < MAX_TASKS && k < 3);
+            assert_eq!(d, HEAD_DIMS[k]);
+            assert!(d <= MAX_HEAD_DIM);
+            for j in off..off + d {
+                assert!(!seen[j], "logit {j} visited twice");
+                seen[j] = true;
+            }
+            count += 1;
+        }
+        assert_eq!(count, MAX_TASKS * 3);
+        assert!(seen.iter().all(|s| *s), "every logit belongs to a head");
     }
 }

@@ -1,0 +1,256 @@
+//! Reusable scratch buffers for the decision hot path (DESIGN.md §7).
+//!
+//! `policy_fwd_native` is the readable reference mirror: it allocates a
+//! handful of `Vec`s per call, which is fine for tests but shows up hard on
+//! the per-decision profile once a leader ticks many tenants per second.
+//! [`Workspace`] owns every intermediate buffer the forward pass needs and
+//! is reused across decisions — after warm-up, a forward performs **zero**
+//! heap allocations (`grow_events()` is the proof hook the perf bench
+//! asserts on).
+//!
+//! The same buffers back [`Workspace::policy_fwd_batch`]: B states evaluated
+//! in ONE pass over the flat parameter vector. The policy parameters are
+//! ~500 KiB — bigger than L2 on typical edge CPUs — so B sequential forwards
+//! stream the whole vector from memory B times, while the batched pass
+//! streams it once and keeps each weight row hot in L1 for all B rows
+//! (`math::dense_batch_into`). Accumulation order per output element is
+//! identical to the single-state path, so batched and sequential results
+//! agree bitwise (pinned by `rust/tests/batch_hotpath.rs`).
+
+use crate::nn::math::dense_batch_into;
+use crate::nn::policy::POLICY_LAYOUT;
+use crate::nn::spec::*;
+
+/// Stable 64-bit fingerprint of a flat parameter vector (FNV-1a over the
+/// f32 bit patterns). Used to group agents that share one parameter vector
+/// into a single batched forward without comparing 128k floats per tick.
+pub fn params_fingerprint(params: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for p in params {
+        h ^= p.to_bits() as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h ^ params.len() as u64
+}
+
+fn ensure(buf: &mut Vec<f32>, len: usize, grow_events: &mut u64) {
+    if buf.capacity() < len {
+        *grow_events += 1;
+    }
+    buf.clear();
+    buf.resize(len, 0.0);
+}
+
+/// Scratch-buffer arena for policy forwards (single and batched).
+#[derive(Default)]
+pub struct Workspace {
+    /// trunk activations, (batch, HIDDEN)
+    h: Vec<f32>,
+    /// residual-block intermediates, (batch, HIDDEN)
+    t1: Vec<f32>,
+    t2: Vec<f32>,
+    /// head outputs of the most recent forward, (batch, LOGITS_DIM)
+    logits: Vec<f32>,
+    /// value outputs of the most recent forward, (batch,)
+    values: Vec<f32>,
+    /// number of times any buffer had to (re)allocate — stays flat once the
+    /// workspace has seen its steady-state batch size
+    grow_events: u64,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// How many buffer (re)allocations have happened over this workspace's
+    /// lifetime. After warm-up at a fixed batch size this must not move —
+    /// the perf bench asserts on it.
+    pub fn grow_events(&self) -> u64 {
+        self.grow_events
+    }
+
+    /// Logits of the most recent forward, (batch × LOGITS_DIM) row-major.
+    pub fn logits(&self) -> &[f32] {
+        &self.logits
+    }
+
+    /// Values of the most recent forward, one per batch row.
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    /// Install externally computed logits (the HLO path) so the sampling
+    /// code has one place to read from regardless of backend.
+    pub fn set_logits(&mut self, logits: &[f32]) {
+        ensure(&mut self.logits, logits.len(), &mut self.grow_events);
+        self.logits.copy_from_slice(logits);
+    }
+
+    /// Batched native policy forward: `states` is (batch, STATE_DIM)
+    /// row-major; returns (logits (batch × LOGITS_DIM), values (batch,))
+    /// backed by the workspace buffers. One pass over the parameter vector
+    /// evaluates every row.
+    pub fn policy_fwd_batch(
+        &mut self,
+        params: &[f32],
+        states: &[f32],
+        batch: usize,
+    ) -> (&[f32], &[f32]) {
+        assert!(batch > 0, "policy_fwd_batch: empty batch");
+        assert_eq!(params.len(), POLICY_PARAM_COUNT, "bad param vector length");
+        assert_eq!(states.len(), batch * STATE_DIM, "bad state matrix shape");
+        let l = &POLICY_LAYOUT;
+        let p = |a: usize, n: usize| &params[a..a + n];
+        ensure(&mut self.h, batch * HIDDEN, &mut self.grow_events);
+        ensure(&mut self.t1, batch * HIDDEN, &mut self.grow_events);
+        ensure(&mut self.t2, batch * HIDDEN, &mut self.grow_events);
+        ensure(&mut self.logits, batch * LOGITS_DIM, &mut self.grow_events);
+        ensure(&mut self.values, batch, &mut self.grow_events);
+
+        dense_batch_into(
+            states,
+            batch,
+            STATE_DIM,
+            p(l.fc_in_w, STATE_DIM * HIDDEN),
+            p(l.fc_in_b, HIDDEN),
+            HIDDEN,
+            true,
+            &mut self.h,
+        );
+        for (w1, b1, w2, b2) in l.res {
+            dense_batch_into(
+                &self.h,
+                batch,
+                HIDDEN,
+                p(w1, HIDDEN * HIDDEN),
+                p(b1, HIDDEN),
+                HIDDEN,
+                true,
+                &mut self.t1,
+            );
+            dense_batch_into(
+                &self.t1,
+                batch,
+                HIDDEN,
+                p(w2, HIDDEN * HIDDEN),
+                p(b2, HIDDEN),
+                HIDDEN,
+                false,
+                &mut self.t2,
+            );
+            for (hv, ov) in self.h.iter_mut().zip(&self.t2) {
+                *hv += ov; // residual add: y = x + f(x)
+            }
+        }
+        dense_batch_into(
+            &self.h,
+            batch,
+            HIDDEN,
+            p(l.head_w, HIDDEN * LOGITS_DIM),
+            p(l.head_b, LOGITS_DIM),
+            LOGITS_DIM,
+            false,
+            &mut self.logits,
+        );
+        dense_batch_into(
+            &self.h,
+            batch,
+            HIDDEN,
+            p(l.value_w, HIDDEN),
+            p(l.value_b, 1),
+            1,
+            false,
+            &mut self.values,
+        );
+        (&self.logits, &self.values)
+    }
+
+    /// Single-state forward through the batched kernels (batch = 1): the
+    /// logits stay in the workspace ([`Workspace::logits`]), the value is
+    /// returned. Zero allocations after warm-up.
+    pub fn policy_fwd_into(&mut self, params: &[f32], state: &[f32]) -> f32 {
+        let (_, values) = self.policy_fwd_batch(params, state, 1);
+        values[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::policy::policy_fwd_native;
+    use crate::util::prng::Pcg32;
+
+    fn random_params(seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::new(seed);
+        (0..POLICY_PARAM_COUNT).map(|_| (rng.normal() * 0.05) as f32).collect()
+    }
+
+    fn random_states(seed: u64, batch: usize) -> Vec<f32> {
+        let mut rng = Pcg32::new(seed);
+        (0..batch * STATE_DIM).map(|_| (rng.normal() * 0.5) as f32).collect()
+    }
+
+    #[test]
+    fn batch_forward_matches_reference_mirror() {
+        let params = random_params(1);
+        for batch in [1usize, 2, 3, 8] {
+            let states = random_states(100 + batch as u64, batch);
+            let mut ws = Workspace::new();
+            let (logits, values) = ws.policy_fwd_batch(&params, &states, batch);
+            for bi in 0..batch {
+                let (l, v) = policy_fwd_native(&params, &states[bi * STATE_DIM..][..STATE_DIM]);
+                assert_eq!(
+                    &logits[bi * LOGITS_DIM..(bi + 1) * LOGITS_DIM],
+                    l.as_slice(),
+                    "batch {batch} row {bi}"
+                );
+                assert_eq!(values[bi], v);
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_stops_allocating_after_warmup() {
+        let params = random_params(2);
+        let states = random_states(3, 16);
+        let mut ws = Workspace::new();
+        let _ = ws.policy_fwd_batch(&params, &states, 16);
+        let warm = ws.grow_events();
+        for _ in 0..20 {
+            let _ = ws.policy_fwd_batch(&params, &states, 16);
+        }
+        assert_eq!(ws.grow_events(), warm, "steady-state forwards must not allocate");
+        // a smaller batch fits in the warm buffers too
+        let _ = ws.policy_fwd_batch(&params, &states[..STATE_DIM], 1);
+        assert_eq!(ws.grow_events(), warm, "shrinking batch reuses capacity");
+    }
+
+    #[test]
+    fn single_forward_leaves_logits_in_workspace() {
+        let params = random_params(4);
+        let states = random_states(5, 1);
+        let mut ws = Workspace::new();
+        let v = ws.policy_fwd_into(&params, &states);
+        let (l, v_ref) = policy_fwd_native(&params, &states);
+        assert_eq!(v, v_ref);
+        assert_eq!(ws.logits(), l.as_slice());
+    }
+
+    #[test]
+    fn set_logits_roundtrip() {
+        let mut ws = Workspace::new();
+        let ext: Vec<f32> = (0..LOGITS_DIM).map(|i| i as f32).collect();
+        ws.set_logits(&ext);
+        assert_eq!(ws.logits(), ext.as_slice());
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_and_is_stable() {
+        let a = random_params(7);
+        let mut b = a.clone();
+        assert_eq!(params_fingerprint(&a), params_fingerprint(&b));
+        b[12_345] += 1.0e-3;
+        assert_ne!(params_fingerprint(&a), params_fingerprint(&b));
+    }
+}

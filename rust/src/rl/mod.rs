@@ -9,5 +9,5 @@ pub mod trainer;
 
 pub use buffer::{Minibatch, RolloutBuffer, Transition};
 pub use gae::gae;
-pub use ppo::{PpoLearner, UpdateMetrics};
+pub use ppo::{eval_minibatch_native, PpoLearner, UpdateMetrics};
 pub use trainer::{logp_of_action, EpisodeStats, Trainer, TrainerConfig, TrainingHistory};

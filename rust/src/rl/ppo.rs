@@ -6,9 +6,51 @@ use std::rc::Rc;
 
 use anyhow::{anyhow, Result};
 
+use crate::nn::math::log_softmax_masked_into;
 use crate::nn::spec::*;
+use crate::nn::workspace::Workspace;
 use crate::rl::buffer::Minibatch;
 use crate::runtime::{OpdRuntime, TensorView};
+
+/// Native cross-check of one minibatch: evaluate all TRAIN_BATCH rows in a
+/// single `policy_fwd_batch` pass (DESIGN.md §7) and return, per row, the
+/// log-prob of the recorded action under `params` plus the value estimate.
+/// This is the rust-side mirror of what the AOT train step computes before
+/// the clipped-ratio loss — the diagnostic for validating an HLO train-step
+/// artifact against the native mirror. (The trainer's expert scoring batches
+/// the same way but over whole episodes; see
+/// `rl::trainer::Trainer::score_expert_episode`.)
+pub fn eval_minibatch_native(
+    params: &[f32],
+    mb: &Minibatch,
+    ws: &mut Workspace,
+) -> (Vec<f32>, Vec<f32>) {
+    let batch = TRAIN_BATCH;
+    let (logits, values) = ws.policy_fwd_batch(params, &mb.states, batch);
+    let mut logps = Vec::with_capacity(batch);
+    let mut scratch = [0.0f32; MAX_HEAD_DIM];
+    let mut mask = [false; MAX_HEAD_DIM];
+    for r in 0..batch {
+        let row = &logits[r * LOGITS_DIM..(r + 1) * LOGITS_DIM];
+        let hm = &mb.head_mask[r * LOGITS_DIM..(r + 1) * LOGITS_DIM];
+        let tm = &mb.task_mask[r * MAX_TASKS..(r + 1) * MAX_TASKS];
+        let acts = &mb.actions[r * ACT_DIM..(r + 1) * ACT_DIM];
+        let mut lp_sum = 0.0f32;
+        for (t, k, off, d) in head_layout() {
+            if tm[t] < 0.5 {
+                continue;
+            }
+            for (j, m) in mask.iter_mut().enumerate().take(d) {
+                *m = hm[off + j] > 0.5;
+            }
+            log_softmax_masked_into(&row[off..off + d], &mask[..d], &mut scratch[..d]);
+            let a = (acts[t * 3 + k] as usize).min(d - 1);
+            lp_sum += scratch[a];
+        }
+        logps.push(lp_sum);
+    }
+    (logps, values.to_vec())
+}
 
 /// Metrics of one update (order fixed by model.ppo_train_step).
 #[derive(Clone, Copy, Debug, Default)]
@@ -100,6 +142,9 @@ mod tests {
     // PJRT-backed learner tests live in rust/tests/train_integration.rs
     // (they need `make artifacts`). Pure logic below.
     use super::*;
+    use crate::nn::policy::policy_fwd_native;
+    use crate::rl::trainer::logp_of_action;
+    use crate::util::prng::Pcg32;
 
     #[test]
     fn metrics_parse() {
@@ -107,5 +152,71 @@ mod tests {
         assert!((m.pi_loss - 0.1).abs() < 1e-7);
         assert!((m.grad_norm - 0.6).abs() < 1e-7);
         assert!(UpdateMetrics::from_vec(&[0.0; 5]).is_err());
+    }
+
+    fn synthetic_minibatch(rng: &mut Pcg32) -> Minibatch {
+        let mut mb = Minibatch {
+            states: Vec::new(),
+            actions: Vec::new(),
+            old_logp: Vec::new(),
+            adv: Vec::new(),
+            ret: Vec::new(),
+            head_mask: Vec::new(),
+            task_mask: Vec::new(),
+        };
+        for r in 0..TRAIN_BATCH {
+            for _ in 0..STATE_DIM {
+                mb.states.push((rng.normal() * 0.4) as f32);
+            }
+            for _ in 0..MAX_TASKS {
+                mb.actions.push(rng.below(MAX_VARIANTS as u32) as f32);
+                mb.actions.push(rng.below(F_MAX as u32) as f32);
+                mb.actions.push(rng.below(N_BATCH as u32) as f32);
+            }
+            mb.old_logp.push(-3.0);
+            mb.adv.push(rng.normal() as f32);
+            mb.ret.push(rng.normal() as f32);
+            for _ in 0..LOGITS_DIM {
+                mb.head_mask.push(1.0);
+            }
+            for t in 0..MAX_TASKS {
+                // alternate rows mask out the tail tasks, like real specs do
+                let active = t < 4 || r % 2 == 0;
+                mb.task_mask.push(if active { 1.0 } else { 0.0 });
+            }
+        }
+        mb
+    }
+
+    #[test]
+    fn native_minibatch_eval_matches_per_state_reference() {
+        let mut rng = Pcg32::new(17);
+        let params: Vec<f32> =
+            (0..POLICY_PARAM_COUNT).map(|_| (rng.normal() * 0.03) as f32).collect();
+        let mb = synthetic_minibatch(&mut rng);
+        let mut ws = Workspace::new();
+        let (logps, values) = eval_minibatch_native(&params, &mb, &mut ws);
+        assert_eq!(logps.len(), TRAIN_BATCH);
+        assert_eq!(values.len(), TRAIN_BATCH);
+        for r in 0..TRAIN_BATCH {
+            let state = &mb.states[r * STATE_DIM..(r + 1) * STATE_DIM];
+            let (logits, value) = policy_fwd_native(&params, state);
+            let head_mask: Vec<bool> = mb.head_mask
+                [r * LOGITS_DIM..(r + 1) * LOGITS_DIM]
+                .iter()
+                .map(|m| *m > 0.5)
+                .collect();
+            let task_mask: Vec<bool> = mb.task_mask[r * MAX_TASKS..(r + 1) * MAX_TASKS]
+                .iter()
+                .map(|m| *m > 0.5)
+                .collect();
+            let idx: Vec<usize> = mb.actions[r * ACT_DIM..(r + 1) * ACT_DIM]
+                .iter()
+                .map(|a| *a as usize)
+                .collect();
+            let want = logp_of_action(&logits, &head_mask, &task_mask, &idx);
+            assert!((logps[r] - want).abs() < 1e-4, "row {r}: {} vs {want}", logps[r]);
+            assert!((values[r] - value).abs() < 1e-6, "row {r} value");
+        }
     }
 }

@@ -8,8 +8,9 @@ use std::rc::Rc;
 use anyhow::Result;
 
 use crate::agents::{Agent, IpaAgent, OpdAgent};
-use crate::nn::math::log_softmax_masked;
+use crate::nn::math::log_softmax_masked_into;
 use crate::nn::spec::*;
+use crate::nn::workspace::Workspace;
 use crate::rl::buffer::{RolloutBuffer, Transition};
 use crate::rl::ppo::{PpoLearner, UpdateMetrics};
 use crate::runtime::{write_params, OpdRuntime};
@@ -18,28 +19,26 @@ use crate::util::json::Json;
 use crate::util::prng::Pcg32;
 
 /// log π(a|s) of an arbitrary action-index vector under given logits/masks
-/// (used to score expert actions under the current policy).
+/// (used to score expert actions under the current policy). Allocation-free:
+/// walks `head_layout()` with stack scratch.
 pub fn logp_of_action(
     logits: &[f32],
     head_mask: &[bool],
     task_mask: &[bool],
     idx: &[usize],
 ) -> f32 {
+    let mut scratch = [0.0f32; MAX_HEAD_DIM];
     let mut logp = 0.0f32;
-    for t in 0..MAX_TASKS {
+    for (t, k, off, d) in head_layout() {
         if !task_mask[t] {
             continue;
         }
-        let base = t * HEAD_DIM;
-        let mut off = 0usize;
-        for (k, d) in HEAD_DIMS.iter().enumerate() {
-            let lp = log_softmax_masked(
-                &logits[base + off..base + off + d],
-                &head_mask[base + off..base + off + d],
-            );
-            logp += lp[idx[t * 3 + k].min(d - 1)];
-            off += d;
-        }
+        log_softmax_masked_into(
+            &logits[off..off + d],
+            &head_mask[off..off + d],
+            &mut scratch[..d],
+        );
+        logp += scratch[idx[t * 3 + k].min(d - 1)];
     }
     logp
 }
@@ -130,6 +129,8 @@ pub struct Trainer<F: FnMut(u64) -> Env> {
     env_factory: F,
     rng: Pcg32,
     pub history: TrainingHistory,
+    /// scratch for the batched expert-episode scoring (DESIGN.md §7)
+    ws: Workspace,
 }
 
 impl<F: FnMut(u64) -> Env> Trainer<F> {
@@ -144,7 +145,33 @@ impl<F: FnMut(u64) -> Env> Trainer<F> {
             env_factory,
             rng: Pcg32::stream(cfg.seed, 0x545249), // "TRI"
             history: TrainingHistory::default(),
+            ws: Workspace::new(),
         }
+    }
+
+    /// Score every expert transition of the finished episode — plus the
+    /// terminal bootstrap state — under the current policy in ONE batched
+    /// native forward (Algorithm 2 needs log π(a_expert | s) and V(s) for
+    /// the replay memory; the expert's actions don't depend on the policy
+    /// outputs, so scoring defers to episode end and batches instead of
+    /// running one forward per step). Returns V(s_T) so the GAE bootstrap
+    /// shares the episode's numeric source: the native mirror and the HLO
+    /// forward differ by float rounding, and mixing them inside one GAE pass
+    /// would put a systematic epsilon on the terminal delta.
+    fn score_expert_episode(&mut self, buf: &mut RolloutBuffer, final_state: &[f32]) -> f32 {
+        let batch = buf.len() + 1;
+        let mut states = Vec::with_capacity(batch * STATE_DIM);
+        for tr in &buf.transitions {
+            states.extend_from_slice(&tr.state);
+        }
+        states.extend_from_slice(final_state);
+        let (logits, values) = self.ws.policy_fwd_batch(&self.agent.params, &states, batch);
+        for (i, tr) in buf.transitions.iter_mut().enumerate() {
+            let row = &logits[i * LOGITS_DIM..(i + 1) * LOGITS_DIM];
+            tr.logp = logp_of_action(row, &tr.head_mask, &tr.task_mask, &tr.action_idx);
+            tr.value = values[i];
+        }
+        values[batch - 1]
     }
 
     /// Run one episode, filling `buf`. Returns (mean reward, bootstrap value).
@@ -158,20 +185,19 @@ impl<F: FnMut(u64) -> Env> Trainer<F> {
             let (action, transition_proto) = {
                 let obs = env.observe();
                 if expert_episode {
-                    // expert action, scored under the current policy
+                    // expert action; logp/value under the current policy are
+                    // filled by the batched scoring pass after the episode
                     let action = self.expert.decide(&obs);
                     let state = build_state(&obs);
                     let masks = build_masks(obs.spec);
-                    let (logits, value) = self.agent.forward(&state);
                     let idx = encode_action(obs.spec, &action);
-                    let logp = logp_of_action(&logits, &masks.head, &masks.task, &idx);
                     (
                         action,
                         Transition {
                             state,
                             action_idx: idx,
-                            logp,
-                            value,
+                            logp: 0.0,
+                            value: 0.0,
                             reward: 0.0,
                             head_mask: masks.head,
                             task_mask: masks.task,
@@ -201,11 +227,16 @@ impl<F: FnMut(u64) -> Env> Trainer<F> {
             n += 1.0;
             buf.push(tr);
         }
-        // bootstrap value of the final state
+        // bootstrap value of the final state; expert episodes batch it into
+        // the same scoring forward so logp/V/bootstrap share one source
         let bootstrap = {
             let obs = env.observe();
             let state = build_state(&obs);
-            self.agent.forward(&state).1 as f64
+            if expert_episode {
+                self.score_expert_episode(buf, &state) as f64
+            } else {
+                self.agent.forward(&state).1 as f64
+            }
         };
         (reward_sum / n.max(1.0), bootstrap)
     }

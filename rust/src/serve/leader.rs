@@ -83,6 +83,8 @@ pub struct Leader {
     pub max_secs: Option<f64>,
     /// per-tenant decision counts already published (for counter deltas)
     published_decisions: std::collections::BTreeMap<String, usize>,
+    /// batched-decision totals already published (for counter deltas)
+    published_batched: (usize, usize),
 }
 
 impl Leader {
@@ -104,6 +106,7 @@ impl Leader {
                 realtime: false,
                 max_secs: None,
                 published_decisions: std::collections::BTreeMap::new(),
+                published_batched: (0, 0),
             },
             tx,
         )
@@ -284,6 +287,24 @@ impl Leader {
         m.set_gauge("opd_pipelines", &[], statuses.len() as f64);
         m.set_gauge("opd_cluster_used_cores", &[], self.env.store.topo.used());
         m.set_gauge("opd_cluster_free_cores", &[], self.env.store.topo.free());
+        // batched decision path (DESIGN.md §7): how many decisions were
+        // evaluated through a shared batched forward, and in how many groups
+        let (seen_dec, seen_grp) = self.published_batched;
+        if self.env.batched_decisions > seen_dec {
+            m.inc(
+                "opd_batched_decisions_total",
+                &[],
+                (self.env.batched_decisions - seen_dec) as f64,
+            );
+        }
+        if self.env.batched_groups > seen_grp {
+            m.inc(
+                "opd_batched_forwards_total",
+                &[],
+                (self.env.batched_groups - seen_grp) as f64,
+            );
+        }
+        self.published_batched = (self.env.batched_decisions, self.env.batched_groups);
         self.cp.publish_state(
             Json::obj()
                 .set("t", self.env.now)

@@ -74,6 +74,21 @@ pub struct ActionMasks {
 /// Build the Eq. 5 state vector (STATE_DIM = 86 f32, normalized).
 pub fn build_state(obs: &Observation<'_>) -> Vec<f32> {
     let mut s = Vec::with_capacity(STATE_DIM);
+    build_state_append(obs, &mut s);
+    s
+}
+
+/// Build the state vector into a reused buffer (cleared first) — the
+/// allocation-free single-decision path (DESIGN.md §7).
+pub fn build_state_into(obs: &Observation<'_>, s: &mut Vec<f32>) {
+    s.clear();
+    build_state_append(obs, s);
+}
+
+/// Append one STATE_DIM state row to `s` — the batched path stacks the due
+/// tenants' rows into one (B, STATE_DIM) matrix with this.
+pub fn build_state_append(obs: &Observation<'_>, s: &mut Vec<f32>) {
+    let start = s.len();
     let cap = obs.capacity.max(1.0);
     // node features u_t, p_t, m_t ... (6)
     s.push((obs.load_now / LOAD_SCALE) as f32);
@@ -107,14 +122,23 @@ pub fn build_state(obs: &Observation<'_>) -> Vec<f32> {
             s.extend_from_slice(&[0.0; TASK_FEATS]);
         }
     }
-    debug_assert_eq!(s.len(), STATE_DIM);
-    s
+    debug_assert_eq!(s.len() - start, STATE_DIM);
 }
 
 /// Build action masks for a pipeline spec.
 pub fn build_masks(spec: &PipelineSpec) -> ActionMasks {
-    let mut head = vec![false; LOGITS_DIM];
-    let mut task = vec![false; MAX_TASKS];
+    let mut masks = ActionMasks { head: Vec::new(), task: Vec::new() };
+    build_masks_into(spec, &mut masks.head, &mut masks.task);
+    masks
+}
+
+/// Build action masks into reused buffers (cleared first) — the
+/// allocation-free single-decision path.
+pub fn build_masks_into(spec: &PipelineSpec, head: &mut Vec<bool>, task: &mut Vec<bool>) {
+    head.clear();
+    head.resize(LOGITS_DIM, false);
+    task.clear();
+    task.resize(MAX_TASKS, false);
     for t in 0..spec.n_tasks().min(MAX_TASKS) {
         task[t] = true;
         let base = t * HEAD_DIM;
@@ -129,7 +153,6 @@ pub fn build_masks(spec: &PipelineSpec) -> ActionMasks {
             head[base + MAX_VARIANTS + F_MAX + b] = true;
         }
     }
-    ActionMasks { head, task }
 }
 
 /// Encode a pipeline configuration as the 24 factored action indices

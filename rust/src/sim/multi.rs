@@ -13,9 +13,10 @@ use std::collections::BTreeMap;
 
 use crate::agents::Agent;
 use crate::cluster::{ApplyOutcome, ClusterTopology, DeploymentStore};
-use crate::nn::spec::PRED_WINDOW;
-use crate::pipeline::{pipeline_metrics, PipelineSpec, QosWeights, TaskConfig};
-use crate::sim::env::{LoadSource, Observation};
+use crate::nn::spec::{LOGITS_DIM, PRED_WINDOW, STATE_DIM};
+use crate::nn::workspace::Workspace;
+use crate::pipeline::{pipeline_metrics, PipelineMetrics, PipelineSpec, QosWeights, TaskConfig};
+use crate::sim::env::{build_state_append, LoadSource, Observation};
 use crate::workload::predictor::LoadPredictor;
 use crate::workload::LoadHistory;
 
@@ -118,16 +119,50 @@ pub struct TenantStatus {
     pub last_decision_secs: f64,
 }
 
+/// Per-tenant observation ingredients captured before a batched forward
+/// (the tick-start snapshot every grouped tenant plans against).
+struct GroupPrep {
+    name: String,
+    spec: PipelineSpec,
+    load_now: f64,
+    load_pred: f64,
+    capacity: f64,
+    cores_free: f64,
+    cores_other: f64,
+    adapt_interval_secs: f64,
+    current: Vec<TaskConfig>,
+    ready: Vec<usize>,
+    metrics: PipelineMetrics,
+}
+
 /// The shared-cluster, multi-pipeline environment.
 pub struct MultiEnv {
     pub store: DeploymentStore,
     pub now: f64,
     tenants: BTreeMap<String, Tenant>,
+    /// evaluate all due batch-capable tenants of a tick in one native
+    /// forward (DESIGN.md §7); turn off to force the sequential path
+    pub batching: bool,
+    /// cumulative count of decisions that went through a batched forward
+    pub batched_decisions: usize,
+    /// cumulative count of batched forwards executed
+    pub batched_groups: usize,
+    ws: Workspace,
+    batch_states: Vec<f32>,
 }
 
 impl MultiEnv {
     pub fn new(topo: ClusterTopology, startup_secs: f64) -> Self {
-        Self { store: DeploymentStore::new(topo, startup_secs), now: 0.0, tenants: BTreeMap::new() }
+        Self {
+            store: DeploymentStore::new(topo, startup_secs),
+            now: 0.0,
+            tenants: BTreeMap::new(),
+            batching: true,
+            batched_decisions: 0,
+            batched_groups: 0,
+            ws: Workspace::new(),
+            batch_states: Vec::new(),
+        }
     }
 
     pub fn n_tenants(&self) -> usize {
@@ -237,8 +272,137 @@ impl MultiEnv {
         t.next_decision = self.now + t.adapt_interval_secs as f64;
     }
 
+    /// Run one batched forward for a fingerprint group of ≥1 due tenants:
+    /// build every member's observation against the tick-start snapshot,
+    /// stack the Eq. 5 state rows, evaluate them in ONE pass over the shared
+    /// parameter vector, then sample/apply per tenant (each with its own RNG
+    /// stream). Unlike the sequential path — where tenant k observes the
+    /// applies of tenants 1..k−1 within the same tick — grouped tenants plan
+    /// against the snapshot; the store still clamps each apply against what
+    /// is actually allocated, so shared-capacity invariants are unchanged.
+    fn decide_group(&mut self, names: &[String]) {
+        let n_tenants = self.tenants.len();
+        self.batch_states.clear();
+        let mut preps: Vec<GroupPrep> = Vec::with_capacity(names.len());
+        for name in names {
+            let t = match self.tenants.get_mut(name) {
+                Some(t) => t,
+                None => continue,
+            };
+            let spec = t.spec.clone();
+            let window = t.history.window(PRED_WINDOW);
+            let load_pred = t.predictor.predict_max(&window);
+            t.last_pred = load_pred;
+            let load_now = t.last_rate;
+            let adapt_interval_secs = t.adapt_interval_secs as f64;
+            let current = self
+                .store
+                .get(name)
+                .map(|d| d.config.clone())
+                .unwrap_or_else(|| spec.default_config());
+            let ready = self.store.ready_replicas(name, spec.n_tasks(), self.now);
+            let metrics = pipeline_metrics(&spec, &current, &ready, load_now);
+            let cores_other = self.store.cores_used_by_others(name);
+            let capacity = (self.store.topo.capacity() - cores_other).max(0.0);
+            let cores_free = self.store.topo.free();
+            let obs = Observation {
+                spec: &spec,
+                load_now,
+                load_pred,
+                capacity,
+                cores_free,
+                current,
+                ready,
+                metrics,
+                adapt_interval_secs,
+                cores_other,
+                tenants: n_tenants,
+            };
+            build_state_append(&obs, &mut self.batch_states);
+            let Observation { current, ready, metrics, .. } = obs;
+            preps.push(GroupPrep {
+                name: name.clone(),
+                spec,
+                load_now,
+                load_pred,
+                capacity,
+                cores_free,
+                cores_other,
+                adapt_interval_secs,
+                current,
+                ready,
+                metrics,
+            });
+        }
+        let batch = preps.len();
+        if batch == 0 {
+            return;
+        }
+        let fwd_secs = {
+            let leader = self.tenants.get(&preps[0].name).expect("group member exists");
+            let (params, _) = leader
+                .agent
+                .batch_params()
+                .expect("grouped agents advertise batch support");
+            let t0 = std::time::Instant::now();
+            let _ = self.ws.policy_fwd_batch(params, &self.batch_states, batch);
+            t0.elapsed().as_secs_f64()
+        };
+        self.batched_groups += 1;
+        self.batched_decisions += batch;
+        let fwd_share = fwd_secs / batch as f64;
+        for (i, p) in preps.iter_mut().enumerate() {
+            let current = std::mem::take(&mut p.current);
+            let ready = std::mem::take(&mut p.ready);
+            let metrics = std::mem::take(&mut p.metrics);
+            let obs = Observation {
+                spec: &p.spec,
+                load_now: p.load_now,
+                load_pred: p.load_pred,
+                capacity: p.capacity,
+                cores_free: p.cores_free,
+                current,
+                ready,
+                metrics,
+                adapt_interval_secs: p.adapt_interval_secs,
+                cores_other: p.cores_other,
+                tenants: n_tenants,
+            };
+            let state = &self.batch_states[i * STATE_DIM..(i + 1) * STATE_DIM];
+            let logits = &self.ws.logits()[i * LOGITS_DIM..(i + 1) * LOGITS_DIM];
+            let value = self.ws.values()[i];
+            let t0 = std::time::Instant::now();
+            let action = {
+                let t = self.tenants.get_mut(&p.name).expect("group member exists");
+                t.agent.batch_decide(&obs, state, logits, value)
+            };
+            let decide_secs = fwd_share + t0.elapsed().as_secs_f64();
+            let outcome = self.store.apply(&p.name, &p.spec, &action, self.now);
+            let t = self.tenants.get_mut(&p.name).expect("group member exists");
+            t.last_decision_secs = decide_secs;
+            match outcome {
+                Ok(out) => {
+                    t.generation = out.generation;
+                    t.decisions += 1;
+                    if out.clamped {
+                        t.clamped += 1;
+                    }
+                    t.restarts += out.restarts;
+                }
+                // infeasible even after clamping: keep the previous
+                // deployment and try again next round (same as decide())
+                Err(_) => {}
+            }
+            t.next_decision = self.now + t.adapt_interval_secs as f64;
+        }
+    }
+
     /// Advance the shared clock by one second: run every adaptation decision
     /// that is due, then serve one second of load for every tenant.
+    ///
+    /// With batching on, due tenants whose agents share one native parameter
+    /// vector (same `batch_params` fingerprint) are decided through a single
+    /// batched forward; everyone else takes the sequential path first.
     pub fn tick(&mut self) {
         let due: Vec<String> = self
             .tenants
@@ -246,8 +410,29 @@ impl MultiEnv {
             .filter(|(_, t)| self.now + 1e-9 >= t.next_decision)
             .map(|(n, _)| n.clone())
             .collect();
-        for name in due {
-            self.decide(&name);
+        if self.batching {
+            let mut groups: BTreeMap<u64, Vec<String>> = BTreeMap::new();
+            for name in due {
+                let fp = self
+                    .tenants
+                    .get(&name)
+                    .and_then(|t| t.agent.batch_params().map(|(_, fp)| fp));
+                match fp {
+                    Some(fp) => groups.entry(fp).or_default().push(name),
+                    None => self.decide(&name),
+                }
+            }
+            for (_, members) in groups {
+                if members.len() >= 2 {
+                    self.decide_group(&members);
+                } else {
+                    self.decide(&members[0]);
+                }
+            }
+        } else {
+            for name in due {
+                self.decide(&name);
+            }
         }
         self.now += 1.0;
         for (name, t) in self.tenants.iter_mut() {
@@ -393,6 +578,93 @@ mod tests {
         // decisions at t=10, 20, 30 → three more applies
         assert_eq!(env.status("a").unwrap().generation, 4);
         assert_eq!(env.status("a").unwrap().decisions, 3);
+    }
+
+    fn shared_params(seed: u64) -> Vec<f32> {
+        use crate::nn::spec::POLICY_PARAM_COUNT;
+        use crate::util::prng::Pcg32;
+        let mut rng = Pcg32::new(seed);
+        (0..POLICY_PARAM_COUNT).map(|_| (rng.normal() * 0.02) as f32).collect()
+    }
+
+    fn opd_tenant(name: &str, pipeline: &str, params: Vec<f32>, seed: u64) -> Tenant {
+        use crate::agents::OpdAgent;
+        Tenant::new(
+            name,
+            catalog::by_name(pipeline).unwrap().spec,
+            Box::new(OpdAgent::native(params, seed)),
+            QosWeights::default(),
+            LoadSource::Gen(WorkloadGen::new(WorkloadKind::Fluctuating, seed)),
+            Box::new(MovingMaxPredictor::default()),
+            10,
+        )
+    }
+
+    #[test]
+    fn same_policy_tenants_decide_in_one_batched_forward() {
+        let params = shared_params(11);
+        let mut env = MultiEnv::new(ClusterTopology::paper_testbed(), 3.0);
+        env.deploy(opd_tenant("a", "P1", params.clone(), 1), None).unwrap();
+        env.deploy(opd_tenant("b", "P1", params.clone(), 2), None).unwrap();
+        env.deploy(opd_tenant("c", "iot-anomaly", params.clone(), 3), None).unwrap();
+        // all three share an adaptation interval and deploy time → their
+        // decisions align at t = 10 and t = 20
+        env.run_for(25);
+        assert_eq!(env.batched_groups, 2, "one batched forward per aligned round");
+        assert_eq!(env.batched_decisions, 6, "3 tenants × 2 rounds through the batch");
+        for name in ["a", "b", "c"] {
+            let s = env.status(name).unwrap();
+            assert_eq!(s.decisions, 2, "{name} decided each round");
+            assert!(s.last_decision_secs >= 0.0);
+        }
+        // shared-capacity invariants hold under batched applies too
+        assert!(env.store.allocated_cores() <= env.store.topo.capacity() + 1e-6);
+    }
+
+    #[test]
+    fn mixed_agent_fleet_splits_batchable_from_sequential() {
+        let params = shared_params(13);
+        let mut env = MultiEnv::new(ClusterTopology::paper_testbed(), 3.0);
+        env.deploy(opd_tenant("opd1", "P1", params.clone(), 1), None).unwrap();
+        env.deploy(opd_tenant("opd2", "P1", params.clone(), 2), None).unwrap();
+        env.deploy(tenant("grd", "P1", WorkloadKind::SteadyLow, 3), None).unwrap();
+        env.run_for(15);
+        assert_eq!(env.batched_decisions, 2, "only the OPD pair batches");
+        assert_eq!(env.status("grd").unwrap().decisions, 1, "greedy still decides");
+        // different parameter vectors do NOT group: deployed at t=15, the
+        // odd tenant decides alone at t=25/35 while the pair batches at
+        // t=20/30 — so only 4 more decisions go through the batch
+        env.deploy(opd_tenant("other", "P1", shared_params(99), 4), None).unwrap();
+        env.run_for(20);
+        assert_eq!(env.batched_decisions, 6, "the odd-params tenant stays sequential");
+        assert_eq!(env.status("other").unwrap().decisions, 1);
+    }
+
+    #[test]
+    fn batched_ticks_are_deterministic() {
+        let run = || {
+            let params = shared_params(17);
+            let mut env = MultiEnv::new(ClusterTopology::paper_testbed(), 3.0);
+            env.deploy(opd_tenant("x", "P1", params.clone(), 5), None).unwrap();
+            env.deploy(opd_tenant("y", "iot-anomaly", params, 6), None).unwrap();
+            env.run_for(60);
+            let sx = env.status("x").unwrap();
+            let sy = env.status("y").unwrap();
+            (sx.avg_qos, sx.avg_cost, sx.decisions, sy.avg_qos, sy.avg_cost, sy.decisions)
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn batching_can_be_disabled() {
+        let params = shared_params(19);
+        let mut env = MultiEnv::new(ClusterTopology::paper_testbed(), 3.0);
+        env.batching = false;
+        env.deploy(opd_tenant("a", "P1", params.clone(), 1), None).unwrap();
+        env.deploy(opd_tenant("b", "P1", params, 2), None).unwrap();
+        env.run_for(25);
+        assert_eq!(env.batched_decisions, 0);
+        assert_eq!(env.status("a").unwrap().decisions, 2, "sequential path still decides");
     }
 
     #[test]

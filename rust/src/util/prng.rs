@@ -88,10 +88,38 @@ impl Pcg32 {
         }
     }
 
-    /// Integer in [lo, hi] inclusive.
+    /// Unbiased integer in [0, n) via Lemire's method, 64-bit path.
+    pub fn below_u64(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below_u64(0)");
+        loop {
+            let x = self.next_u64() as u128;
+            let m = x * n as u128;
+            let l = m as u64;
+            if l >= n || l >= (u64::MAX - n + 1) % n {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Integer in [lo, hi] inclusive. Spans wider than `u32` take the
+    /// widened 64-bit path instead of silently truncating the span
+    /// (`(hi - lo + 1) as u32` used to wrap for e.g. `int_range(0, 1 << 40)`).
     pub fn int_range(&mut self, lo: i64, hi: i64) -> i64 {
         assert!(lo <= hi);
-        lo + self.below((hi - lo + 1) as u32) as i64
+        // exact span-minus-one in u64 (two's complement difference)
+        let span = hi.wrapping_sub(lo) as u64;
+        if span == u64::MAX {
+            // the full i64 domain: every u64 bit pattern is a valid draw
+            return self.next_u64() as i64;
+        }
+        let n = span + 1;
+        debug_assert!(n > 0);
+        let draw = if n <= u32::MAX as u64 {
+            self.below(n as u32) as u64
+        } else {
+            self.below_u64(n)
+        };
+        lo.wrapping_add(draw as i64)
     }
 
     /// Standard normal via Box–Muller (cached pair).
@@ -297,6 +325,51 @@ mod tests {
             seen_hi |= x == 2;
         }
         assert!(seen_lo && seen_hi);
+    }
+
+    #[test]
+    fn int_range_wide_spans_do_not_truncate() {
+        // regression: the old `(hi - lo + 1) as u32` cast wrapped for spans
+        // wider than u32::MAX, silently clamping draws into a tiny prefix
+        let mut rng = Pcg32::new(23);
+        let hi = 1i64 << 40;
+        let mut seen_beyond_u32 = false;
+        for _ in 0..128 {
+            let x = rng.int_range(0, hi);
+            assert!((0..=hi).contains(&x));
+            seen_beyond_u32 |= x > u32::MAX as i64;
+        }
+        assert!(seen_beyond_u32, "wide range must reach beyond 32 bits");
+    }
+
+    #[test]
+    fn int_range_full_i64_domain_is_safe() {
+        let mut rng = Pcg32::new(29);
+        let mut any_neg = false;
+        let mut any_pos = false;
+        for _ in 0..128 {
+            let x = rng.int_range(i64::MIN, i64::MAX);
+            any_neg |= x < 0;
+            any_pos |= x > 0;
+        }
+        assert!(any_neg && any_pos, "full-domain draws must cover both signs");
+    }
+
+    #[test]
+    fn below_u64_bounds_and_small_n_agreement() {
+        let mut rng = Pcg32::new(31);
+        let n = (1u64 << 40) + 12345;
+        for _ in 0..256 {
+            assert!(rng.below_u64(n) < n);
+        }
+        // small n: still unbiased-ish
+        let mut counts = [0u32; 4];
+        for _ in 0..20_000 {
+            counts[rng.below_u64(4) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 5_000.0).abs() < 400.0, "counts={counts:?}");
+        }
     }
 
     #[test]

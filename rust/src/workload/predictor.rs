@@ -5,7 +5,7 @@
 
 use std::rc::Rc;
 
-use crate::nn::policy::predictor_fwd_native;
+use crate::nn::policy::{predictor_fwd_scratch, LstmScratch};
 use crate::nn::spec::{PRED_HORIZON, PRED_WINDOW};
 use crate::runtime::OpdRuntime;
 
@@ -56,25 +56,43 @@ impl LoadPredictor for MovingMaxPredictor {
 }
 
 /// The paper's LSTM predictor, with trained weights from the AOT step.
+/// The PRED_WINDOW input buffer and the LSTM cell-state scratch are owned
+/// by the predictor and reused across ticks (DESIGN.md §7): a leader with
+/// many tenants runs one of these per tenant per adaptation decision, so
+/// the old fresh-`Vec`-per-call layout was measurable churn.
 pub struct LstmPredictor {
     weights: Vec<f32>,
     runtime: Option<Rc<OpdRuntime>>,
+    /// left-padded f32 window, reused across predictions
+    window_buf: Vec<f32>,
+    scratch: LstmScratch,
 }
 
 impl LstmPredictor {
     /// HLO-backed (Pallas LSTM cell kernel inside the lowered graph).
     pub fn hlo(runtime: Rc<OpdRuntime>) -> Self {
-        Self { weights: runtime.predictor_weights.clone(), runtime: Some(runtime) }
+        Self {
+            weights: runtime.predictor_weights.clone(),
+            runtime: Some(runtime),
+            window_buf: vec![0.0; PRED_WINDOW],
+            scratch: LstmScratch::default(),
+        }
     }
 
     /// Pure-rust mirror (no PJRT needed).
     pub fn native(weights: Vec<f32>) -> Self {
-        Self { weights, runtime: None }
+        Self {
+            weights,
+            runtime: None,
+            window_buf: vec![0.0; PRED_WINDOW],
+            scratch: LstmScratch::default(),
+        }
     }
 
-    fn window_f32(window: &[f64]) -> Vec<f32> {
-        // left-pad / truncate to exactly PRED_WINDOW
-        let mut w = vec![0.0f32; PRED_WINDOW];
+    /// Left-pad / truncate `window` into the reused PRED_WINDOW buffer.
+    fn fill_window(&mut self, window: &[f64]) {
+        let w = &mut self.window_buf;
+        debug_assert_eq!(w.len(), PRED_WINDOW);
         let n = window.len().min(PRED_WINDOW);
         let pad = PRED_WINDOW - n;
         let first = window.first().copied().unwrap_or(0.0) as f32;
@@ -84,7 +102,6 @@ impl LstmPredictor {
         for (i, &x) in window[window.len() - n..].iter().enumerate() {
             w[pad + i] = x as f32;
         }
-        w
     }
 }
 
@@ -94,12 +111,12 @@ impl LoadPredictor for LstmPredictor {
     }
 
     fn predict_max(&mut self, window: &[f64]) -> f64 {
-        let w = Self::window_f32(window);
+        self.fill_window(window);
         let pred = match &self.runtime {
-            Some(rt) => rt.predict_load(&w).unwrap_or_else(|_| {
-                predictor_fwd_native(&self.weights, &w)
+            Some(rt) => rt.predict_load(&self.window_buf).unwrap_or_else(|_| {
+                predictor_fwd_scratch(&self.weights, &self.window_buf, &mut self.scratch)
             }),
-            None => predictor_fwd_native(&self.weights, &w),
+            None => predictor_fwd_scratch(&self.weights, &self.window_buf, &mut self.scratch),
         };
         (pred as f64).max(0.0)
     }

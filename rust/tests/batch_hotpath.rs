@@ -1,0 +1,171 @@
+//! Property tests over the batched, allocation-free decision hot path
+//! (DESIGN.md §7): `policy_fwd_batch` over B states must be elementwise
+//! equal to B independent `policy_fwd_native` calls, batched sampling must
+//! be deterministic and batch-size-invariant, and the scratch buffers must
+//! stop allocating after warm-up.
+
+use opd::nn::math::{sample_masked, sample_masked_scratch};
+use opd::nn::policy::policy_fwd_native;
+use opd::nn::spec::*;
+use opd::nn::workspace::Workspace;
+use opd::util::prng::Pcg32;
+
+fn random_params(seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed);
+    (0..POLICY_PARAM_COUNT).map(|_| (rng.normal() * 0.04) as f32).collect()
+}
+
+fn random_states(seed: u64, batch: usize) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed);
+    (0..batch * STATE_DIM).map(|_| (rng.normal() * 0.5) as f32).collect()
+}
+
+/// A plausible mask layout: all replica/batch heads valid, a variant prefix
+/// per task, tail tasks inactive.
+fn masks(active_tasks: usize, variants: usize) -> (Vec<bool>, Vec<bool>) {
+    let mut head = vec![false; LOGITS_DIM];
+    let mut task = vec![false; MAX_TASKS];
+    for t in 0..active_tasks {
+        task[t] = true;
+        let base = t * HEAD_DIM;
+        for v in 0..variants {
+            head[base + v] = true;
+        }
+        for f in 0..F_MAX {
+            head[base + MAX_VARIANTS + f] = true;
+        }
+        for b in 0..N_BATCH {
+            head[base + MAX_VARIANTS + F_MAX + b] = true;
+        }
+    }
+    (head, task)
+}
+
+/// PROPERTY: the batched forward equals B independent native forwards
+/// (elementwise ≤ 1e-6; the shared accumulation order makes them bitwise
+/// equal in practice).
+#[test]
+fn prop_policy_fwd_batch_matches_independent_forwards() {
+    let params = random_params(42);
+    let mut ws = Workspace::new();
+    for batch in [1usize, 2, 4, 7, 16, 33] {
+        let states = random_states(1000 + batch as u64, batch);
+        let (logits, values) = ws.policy_fwd_batch(&params, &states, batch);
+        assert_eq!(logits.len(), batch * LOGITS_DIM);
+        assert_eq!(values.len(), batch);
+        for bi in 0..batch {
+            let state = &states[bi * STATE_DIM..(bi + 1) * STATE_DIM];
+            let (want_logits, want_value) = policy_fwd_native(&params, state);
+            for (j, (a, b)) in logits[bi * LOGITS_DIM..(bi + 1) * LOGITS_DIM]
+                .iter()
+                .zip(&want_logits)
+                .enumerate()
+            {
+                assert!(
+                    (a - b).abs() <= 1e-6,
+                    "batch {batch} row {bi} logit {j}: {a} vs {b}"
+                );
+            }
+            assert!(
+                (values[bi] - want_value).abs() <= 1e-6,
+                "batch {batch} row {bi} value: {} vs {want_value}",
+                values[bi]
+            );
+        }
+    }
+}
+
+/// PROPERTY: with a fixed per-row seed, sampling from batched logits gives
+/// the same picks no matter which batch size produced the logits — batching
+/// is a pure evaluation-layout change, not a policy change.
+#[test]
+fn prop_batched_sampling_deterministic_across_batch_sizes() {
+    let params = random_params(7);
+    let n_rows = 16usize;
+    let states = random_states(2024, n_rows);
+    let (head_mask, task_mask) = masks(4, 3);
+
+    // reference picks: each row evaluated alone
+    let mut reference: Vec<Vec<(usize, f32)>> = Vec::new();
+    for r in 0..n_rows {
+        let (logits, _) = policy_fwd_native(&params, &states[r * STATE_DIM..][..STATE_DIM]);
+        let mut rng = Pcg32::new(5000 + r as u64);
+        let mut picks = Vec::new();
+        for t in 0..MAX_TASKS {
+            if !task_mask[t] {
+                continue;
+            }
+            let base = t * HEAD_DIM;
+            let mut off = 0;
+            for d in HEAD_DIMS {
+                picks.push(sample_masked(
+                    &logits[base + off..base + off + d],
+                    &head_mask[base + off..base + off + d],
+                    &mut rng,
+                ));
+                off += d;
+            }
+        }
+        reference.push(picks);
+    }
+
+    // the same rows evaluated through different batch shapes
+    for batch in [1usize, 4, 16] {
+        let mut ws = Workspace::new();
+        let mut scratch = [0.0f32; MAX_HEAD_DIM];
+        for chunk_start in (0..n_rows).step_by(batch) {
+            let b = batch.min(n_rows - chunk_start);
+            let chunk = &states[chunk_start * STATE_DIM..(chunk_start + b) * STATE_DIM];
+            let (logits, _) = ws.policy_fwd_batch(&params, chunk, b);
+            for bi in 0..b {
+                let r = chunk_start + bi;
+                let row = &logits[bi * LOGITS_DIM..(bi + 1) * LOGITS_DIM];
+                let mut rng = Pcg32::new(5000 + r as u64);
+                let mut k = 0usize;
+                for t in 0..MAX_TASKS {
+                    if !task_mask[t] {
+                        continue;
+                    }
+                    let base = t * HEAD_DIM;
+                    let mut off = 0;
+                    for d in HEAD_DIMS {
+                        let got = sample_masked_scratch(
+                            &row[base + off..base + off + d],
+                            &head_mask[base + off..base + off + d],
+                            &mut rng,
+                            &mut scratch[..d],
+                        );
+                        assert_eq!(
+                            got, reference[r][k],
+                            "batch {batch} row {r} head {k} diverged"
+                        );
+                        off += d;
+                        k += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// PROPERTY: the workspace allocates only while growing to its steady-state
+/// batch size; repeated forwards at or below that size never allocate.
+#[test]
+fn prop_workspace_allocation_free_after_warmup() {
+    let params = random_params(3);
+    let mut ws = Workspace::new();
+    let states = random_states(9, 64);
+    let _ = ws.policy_fwd_batch(&params, &states, 64);
+    let warm = ws.grow_events();
+    assert!(warm > 0, "first forward must have grown the buffers");
+    for batch in [64usize, 16, 4, 1, 64] {
+        for _ in 0..5 {
+            let _ = ws.policy_fwd_batch(&params, &states[..batch * STATE_DIM], batch);
+        }
+    }
+    assert_eq!(
+        ws.grow_events(),
+        warm,
+        "forwards at ≤ warm batch size must not allocate"
+    );
+}

@@ -1,0 +1,174 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access to crates.io, so this vendored
+//! shim implements the exact subset of anyhow's API the `opd` crate uses:
+//! `Error`, `Result<T>`, the `anyhow!` macro, and the `Context` extension
+//! trait for `Result`. Semantics mirror the real crate where it matters:
+//!
+//! * `Display` prints the outermost message only; the alternate form (`{:#}`)
+//!   prints the full context chain joined by `": "`.
+//! * `Error` deliberately does NOT implement `std::error::Error`, so the
+//!   blanket `From<E: std::error::Error>` conversion (what makes `?` work on
+//!   io/parse errors) cannot overlap with an identity conversion.
+
+use std::fmt;
+
+/// `anyhow::Result<T>` — `std::result::Result` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A string-chained error: `frames[0]` is the outermost context, the last
+/// frame is the root cause.
+pub struct Error {
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a single displayable message.
+    pub fn msg(message: impl fmt::Display) -> Error {
+        Error { frames: vec![message.to_string()] }
+    }
+
+    /// Root-cause message (the innermost frame).
+    pub fn root_cause(&self) -> &str {
+        self.frames.last().map(String::as_str).unwrap_or("")
+    }
+
+    /// Wrap with an outer context frame (used by the `Context` trait).
+    pub fn context(mut self, ctx: impl fmt::Display) -> Error {
+        self.frames.insert(0, ctx.to_string());
+        self
+    }
+
+    /// Number of frames (outermost context first).
+    pub fn chain_len(&self) -> usize {
+        self.frames.len()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.frames.join(": "))
+        } else {
+            write!(f, "{}", self.frames.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.frames.first().map(String::as_str).unwrap_or(""))?;
+        if self.frames.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for frame in &self.frames[1..] {
+                write!(f, "\n    {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// `?`-conversion from any std error; the source chain is flattened into
+/// context frames so `{:#}` shows the full causal story.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut frames = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            frames.push(s.to_string());
+            src = s.source();
+        }
+        Error { frames }
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to `Result`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, ctx: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(ctx))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+/// `anyhow!`: a formatted message, a bare displayable value, or fmt + args.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn macro_forms() {
+        let n = 3;
+        let a: Error = anyhow!("plain");
+        let b: Error = anyhow!("count {n}");
+        let c: Error = anyhow!("count {}, {}", n, "x");
+        let d: Error = anyhow!(String::from("owned"));
+        assert_eq!(a.to_string(), "plain");
+        assert_eq!(b.to_string(), "count 3");
+        assert_eq!(c.to_string(), "count 3, x");
+        assert_eq!(d.to_string(), "owned");
+    }
+
+    #[test]
+    fn context_chain_and_alternate_display() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: gone");
+        let e = Result::<(), Error>::Err(e)
+            .map_err(|e| e.context("loading runtime"))
+            .unwrap_err();
+        assert_eq!(format!("{e:#}"), "loading runtime: reading manifest: gone");
+        assert_eq!(e.root_cause(), "gone");
+    }
+
+    #[test]
+    fn with_context_is_lazy_on_ok() {
+        let r: Result<u32, std::io::Error> = Ok(7);
+        let out = r
+            .with_context(|| -> String { panic!("must not evaluate") })
+            .unwrap();
+        assert_eq!(out, 7);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<u32> {
+            let _ = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(1)
+        }
+        let e = inner().unwrap_err();
+        assert!(e.chain_len() >= 1);
+        assert!(!format!("{e:?}").is_empty());
+    }
+}
