@@ -1,14 +1,16 @@
 //! Fig. 7 — "Training Loss, Value Loss, and Reward of the OPD algorithm":
 //! both losses fall and stabilize while episode reward converges upward.
 //!
-//! Runs Algorithm-2 training (PPO + expert guidance through the AOT HLO
-//! train step) and prints the three series.
+//! Runs Algorithm-2 training (PPO + expert guidance) and prints the three
+//! series. With artifacts, updates go through the AOT HLO train step; on a
+//! plain CPU the native fused train step (DESIGN.md §8) runs the same loop
+//! end-to-end — no PJRT required.
 //!
-//! Run: cargo bench --bench fig7_convergence   (requires `make artifacts`)
+//! Run: cargo bench --bench fig7_convergence
 
 use std::rc::Rc;
 
-use opd::cli::make_predictor;
+use opd::cli::{make_predictor, native_init_params};
 use opd::cluster::ClusterTopology;
 use opd::pipeline::{catalog, QosWeights};
 use opd::rl::{Trainer, TrainerConfig};
@@ -20,10 +22,10 @@ use opd::workload::WorkloadKind;
 fn main() {
     println!("=== Fig. 7: OPD training convergence ===\n");
     let rt = match OpdRuntime::load(None).map(Rc::new) {
-        Ok(rt) => rt,
+        Ok(rt) => Some(rt),
         Err(e) => {
-            println!("requires artifacts: {e:#}\nrun `make artifacts` first");
-            return;
+            println!("no artifacts ({e:#}) — using the native fused train step\n");
+            None
         }
     };
     let episodes: usize = std::env::var("OPD_FIG7_EPISODES")
@@ -32,19 +34,23 @@ fn main() {
         .unwrap_or(60);
     let tcfg = TrainerConfig { episodes, expert_freq: 4, seed: 42, ..Default::default() };
     let rt2 = rt.clone();
-    let mut trainer = Trainer::new(rt, tcfg, move |seed| {
+    let env_factory = move |seed| {
         Env::from_workload(
             catalog::video_analytics().spec,
             ClusterTopology::paper_testbed(),
             QosWeights::default(),
             WorkloadKind::Fluctuating,
             seed,
-            make_predictor(&Some(rt2.clone())),
+            make_predictor(&rt2),
             10,
             400,
             3.0,
         )
-    });
+    };
+    let mut trainer = match rt {
+        Some(rt) => Trainer::new(rt, tcfg, env_factory),
+        None => Trainer::native(native_init_params(None, 42), tcfg, env_factory),
+    };
     let t0 = std::time::Instant::now();
     trainer.train().expect("training failed");
     let wall = t0.elapsed().as_secs_f64();

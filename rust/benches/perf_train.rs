@@ -1,0 +1,87 @@
+//! §Perf — native fused PPO train step microbenchmarks (DESIGN.md §8):
+//! the grad pass (activation-stashing forward + loss head + sharded
+//! analytic backward) and the full `update_native` step (grad + global
+//! clip + Adam), swept over minibatch sizes × backward shard counts
+//! {1, 2, 4, N_cores}. Asserts the step is allocation-free after warm-up
+//! (workspace `grow_events` flat) and writes BENCH_train.json with
+//! steps/sec, grad-pass ns and the alloc counter per configuration.
+//!
+//! Run: cargo bench --bench perf_train   (no artifacts needed — this is
+//! the pure-CPU path `opd train` uses when PJRT is absent)
+
+use opd::nn::spec::*;
+use opd::nn::workspace::Workspace;
+use opd::rl::{ppo_loss_grad_native, Minibatch, PpoLearner, StepScratch};
+use opd::util::json::Json;
+use opd::util::prng::Pcg32;
+use opd::util::timer::Bench;
+
+fn main() {
+    println!("=== §Perf: native fused PPO train step (DESIGN.md §8) ===\n");
+    let mut rng = Pcg32::new(42);
+    let params: Vec<f32> =
+        (0..POLICY_PARAM_COUNT).map(|_| (rng.normal() * 0.03) as f32).collect();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut shard_counts = vec![1usize, 2, 4];
+    if !shard_counts.contains(&cores) {
+        shard_counts.push(cores);
+    }
+    let row_counts = [16usize, 32, TRAIN_BATCH];
+    let bench = Bench::default();
+    let mut results = Vec::new();
+
+    for &rows in &row_counts {
+        // the synthetic default old_logp is the near-uniform-policy logp,
+        // keeping the importance ratio inside the clip so the full
+        // pi-gradient path is exercised
+        let mb = Minibatch::synthetic(&mut rng, rows);
+        for &shards in &shard_counts {
+            // grad pass only: forward + loss head + sharded backward
+            let mut ws = Workspace::new();
+            let mut scratch = StepScratch::default();
+            let r_grad =
+                bench.run(&format!("grad pass       rows={rows:2} shards={shards:2}"), || {
+                    let (m, g) =
+                        ppo_loss_grad_native(&params, &mb, &mut ws, &mut scratch, shards);
+                    std::hint::black_box((m.total_loss, g[0]));
+                });
+            println!("{}", r_grad.row());
+
+            // full fused step: grad + global-norm clip + Adam
+            let mut learner = PpoLearner::native(params.clone());
+            learner.threads = shards;
+            let _ = learner.update_native(&mb); // warm the arena
+            let warm = learner.grow_events();
+            let r_step =
+                bench.run(&format!("update_native   rows={rows:2} shards={shards:2}"), || {
+                    std::hint::black_box(learner.update_native(&mb));
+                });
+            println!("{}", r_step.row());
+            assert_eq!(
+                learner.grow_events(),
+                warm,
+                "steady-state train step must not allocate"
+            );
+
+            let steps_per_sec = 1e9 / r_step.mean_ns;
+            results.push(
+                Json::obj()
+                    .set("rows", rows)
+                    .set("shards", shards)
+                    .set("steps_per_sec", steps_per_sec)
+                    .set("step_ns", r_step.mean_ns)
+                    .set("grad_pass_ns", r_grad.mean_ns)
+                    .set("grow_events", warm as i64),
+            );
+        }
+        println!();
+    }
+
+    let out = Json::obj()
+        .set("bench", "perf_train")
+        .set("cores", cores as i64)
+        .set("train_batch", TRAIN_BATCH)
+        .set("results", Json::Arr(results));
+    std::fs::write("BENCH_train.json", out.to_pretty()).expect("write BENCH_train.json");
+    println!("wrote BENCH_train.json ({} configurations)", row_counts.len() * shard_counts.len());
+}

@@ -42,8 +42,14 @@ COMMANDS
   simulate   --pipeline P --workload W --agent A [--seed N] [--cycle S]
              [--interval S] [--params ckpt.bin] [--native] [--out out.json]
   compare    --pipeline P --workload W [--seed N] [--cycle S] [--params ckpt.bin]
-  train      [--episodes N] [--expert-freq F] [--cycle S] [--pipeline P]
-             [--workload W] [--out ckpt.bin] [--history hist.json]
+  train      [--episodes N] [--expert-freq F] [--epochs E] [--minibatches M]
+             [--cycle S] [--pipeline P] [--workload W] [--threads T]
+             [--resume ckpt.bin] [--native] [--out ckpt.bin]
+             [--history hist.json]
+             uses the AOT train step when artifacts exist, else the native
+             fused train step (pure CPU — no PJRT required); --threads
+             shards the backward pass, --resume continues a checkpoint
+             (optimizer state from ckpt.bin.adam)
   predict    [--workload W] [--secs N] [--seed N] [--native]
   serve      --addr HOST:PORT [--pipeline P] [--workload W] [--agent A]
              [--name NAME] [--cycle S] [--interval S] [--realtime] [--empty]
@@ -114,6 +120,21 @@ pub fn make_predictor(rt: &Option<Rc<OpdRuntime>>) -> Box<dyn LoadPredictor> {
     }
 }
 
+/// Deterministic initial policy parameters for the native (no-PJRT) path:
+/// the artifact init blob when readable, else a seeded small random init.
+/// Shared by `make_agent` and the native training path of `cmd_train`.
+pub fn native_init_params(artifacts_dir: Option<&str>, seed: u64) -> Vec<f32> {
+    let dir = crate::runtime::resolve_dir(artifacts_dir);
+    read_params(&dir.join("policy_init.bin"), crate::nn::spec::POLICY_PARAM_COUNT).unwrap_or_else(
+        |_| {
+            let mut rng = crate::util::prng::Pcg32::new(seed);
+            (0..crate::nn::spec::POLICY_PARAM_COUNT)
+                .map(|_| (rng.normal() * 0.02) as f32)
+                .collect()
+        },
+    )
+}
+
 /// Build an agent; OPD wires the runtime + optional checkpoint.
 pub fn make_agent(
     kind: AgentKind,
@@ -127,22 +148,7 @@ pub fn make_agent(
     }
     let mut agent = match rt {
         Some(rt) => OpdAgent::from_runtime(rt.clone(), seed),
-        None => {
-            // native fallback: prefer artifact init params if present
-            let dir = crate::runtime::resolve_dir(None);
-            let params = read_params(
-                &dir.join("policy_init.bin"),
-                crate::nn::spec::POLICY_PARAM_COUNT,
-            )
-            .unwrap_or_else(|_| {
-                // deterministic small random init
-                let mut rng = crate::util::prng::Pcg32::new(seed);
-                (0..crate::nn::spec::POLICY_PARAM_COUNT)
-                    .map(|_| (rng.normal() * 0.02) as f32)
-                    .collect()
-            });
-            OpdAgent::native(params, seed)
-        }
+        None => OpdAgent::native(native_init_params(None, seed), seed),
     };
     if let Some(path) = params_path {
         let params =
@@ -281,30 +287,56 @@ pub fn cmd_train(args: &Args) -> Result<()> {
     }
     let episodes = args.usize_flag("episodes", 60).map_err(|e| anyhow!(e))?;
     let expert_freq = args.usize_flag("expert-freq", 4).map_err(|e| anyhow!(e))?;
+    let epochs = args.usize_flag("epochs", 4).map_err(|e| anyhow!(e))?;
+    let minibatches = args.usize_flag("minibatches", 2).map_err(|e| anyhow!(e))?;
+    let threads = args.usize_flag("threads", 0).map_err(|e| anyhow!(e))?; // 0 = auto
+    let native = args.switch("native");
+    let resume = args.str_flag("resume");
     let out = args.str_flag("out").unwrap_or_else(|| "opd_checkpoint.bin".into());
     let history_path = args.str_flag("history");
     check_unknown(args)?;
-    let rt = load_runtime(&cfg, false)
-        .ok_or_else(|| anyhow!("training requires the PJRT runtime (run `make artifacts`)"))?;
+    // AOT train step when the PJRT runtime loads; otherwise (or with
+    // --native) the native fused train step runs the whole loop on plain CPU
+    let rt = load_runtime(&cfg, native);
     let tcfg = crate::rl::TrainerConfig {
         episodes,
         expert_freq,
+        epochs,
+        minibatches,
         seed: cfg.seed,
         ..Default::default()
     };
     let cfg2 = cfg.clone();
     let rt2 = rt.clone();
-    let mut trainer = crate::rl::Trainer::new(rt, tcfg, move |seed| {
+    let env_factory = move |seed| {
         let mut c = cfg2.clone();
         c.seed = seed;
-        make_env(&c, &Some(rt2.clone())).expect("env")
-    });
+        make_env(&c, &rt2).expect("env")
+    };
+    let mut trainer = match rt {
+        Some(rt) => crate::rl::Trainer::new(rt, tcfg, env_factory),
+        None => {
+            crate::log_info!("no PJRT runtime — training through the native fused train step");
+            let init = native_init_params(cfg.artifacts_dir.as_deref(), cfg.seed);
+            crate::rl::Trainer::native(init, tcfg, env_factory)
+        }
+    };
+    if threads > 0 {
+        trainer.learner.threads = threads;
+    }
+    if let Some(ckpt) = resume {
+        trainer.learner.load_checkpoint(&ckpt)?;
+        println!("resumed from {ckpt} (optimizer step {})", trainer.learner.step);
+    }
     trainer.train()?;
     trainer.save_checkpoint(&out)?;
-    println!("checkpoint written to {out}");
+    println!("checkpoint written to {out} (+ {out}.adam optimizer state)");
     if let Some(h) = history_path {
         trainer.history.save(&h)?;
         println!("training history written to {h}");
+    }
+    if trainer.history.diverged_updates > 0 {
+        println!("skipped {} diverged minibatch update(s)", trainer.history.diverged_updates);
     }
     let last10: Vec<f64> = trainer
         .history

@@ -168,6 +168,7 @@ pub fn dense(x: &[f32], w: &[f32], b: &[f32], o: usize, relu: bool) -> Vec<f32> 
 /// (~500 KiB, larger than L2 on most edge CPUs) this is what makes one
 /// batched forward beat B sequential forwards: each weight row is hot in L1
 /// while every batch row consumes it.
+#[allow(clippy::too_many_arguments)]
 pub fn dense_batch_into(
     xs: &[f32],
     batch: usize,
@@ -204,6 +205,154 @@ pub fn dense_batch_into(
                 *v = 0.0;
             }
         }
+    }
+}
+
+/// Batched dense backward (DESIGN.md §8): given the layer input `xs`
+/// (batch, i), the weight matrix `w` (i, o) row-major and the upstream
+/// gradient `dy` (batch, o), accumulate the parameter gradients
+///
+///   gw[i,j] += Σ_b xs[b,i] · dy[b,j]      (weight grad, `+=` — the caller
+///   gb[j]   += Σ_b dy[b,j]                 owns zeroing its accumulator)
+///
+/// and, when `dx` is given, overwrite the input gradient
+///
+///   dx[b,i] = Σ_j w[i,j] · dy[b,j].
+///
+/// Like [`dense_batch_into`], each weight row (and its gradient row) is
+/// walked ONCE with every batch row consuming it while it is hot in L1 —
+/// the same single-pass-over-the-parameter-vector discipline, because the
+/// backward streams `w` AND `gw` (~1 MiB combined for the policy trunk).
+///
+/// Determinism contract: for a fixed (i, j) the `gw` accumulation chain
+/// runs over batch rows in ascending order, `dx[b,i]` accumulates over j
+/// ascending, and `gb[j]` over batch rows ascending — bit-stable for a
+/// fixed batch slice regardless of how the caller shards batches across
+/// threads (each shard calls this on its own rows and accumulator).
+#[allow(clippy::too_many_arguments)]
+pub fn dense_bwd_batch_into(
+    xs: &[f32],
+    batch: usize,
+    i: usize,
+    w: &[f32],
+    o: usize,
+    dy: &[f32],
+    gw: &mut [f32],
+    gb: &mut [f32],
+    mut dx: Option<&mut [f32]>,
+) {
+    assert_eq!(xs.len(), batch * i, "dense_bwd: input shape mismatch");
+    assert_eq!(w.len(), i * o, "dense_bwd: weight shape mismatch");
+    assert_eq!(dy.len(), batch * o, "dense_bwd: upstream grad shape mismatch");
+    assert_eq!(gw.len(), i * o);
+    assert_eq!(gb.len(), o);
+    if let Some(dx) = &dx {
+        assert_eq!(dx.len(), batch * i);
+    }
+    for bi in 0..batch {
+        let dyrow = &dy[bi * o..(bi + 1) * o];
+        for (gbj, dyj) in gb.iter_mut().zip(dyrow) {
+            *gbj += *dyj;
+        }
+    }
+    for row in 0..i {
+        let wrow = &w[row * o..(row + 1) * o];
+        let gwrow = &mut gw[row * o..(row + 1) * o];
+        for bi in 0..batch {
+            let xv = xs[bi * i + row];
+            let dyrow = &dy[bi * o..(bi + 1) * o];
+            match &mut dx {
+                Some(dx) => {
+                    let mut acc = 0.0f32;
+                    if xv == 0.0 {
+                        // relu'd inputs are frequently exactly 0: skip the
+                        // gw update (adds exact zeros) but dx still needs
+                        // the w·dy dot product
+                        for (wj, dyj) in wrow.iter().zip(dyrow) {
+                            acc += *wj * *dyj;
+                        }
+                    } else {
+                        for ((gwj, wj), dyj) in gwrow.iter_mut().zip(wrow).zip(dyrow) {
+                            *gwj += xv * *dyj;
+                            acc += *wj * *dyj;
+                        }
+                    }
+                    dx[bi * i + row] = acc;
+                }
+                None => {
+                    if xv != 0.0 {
+                        for (gwj, dyj) in gwrow.iter_mut().zip(dyrow) {
+                            *gwj += xv * *dyj;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// ReLU backward through the *post-activation* values: zero `dy` wherever
+/// the forward output was clamped (y ≤ 0 ⇒ grad 0, matching JAX's relu
+/// gradient-at-zero convention in the AOT graph).
+pub fn relu_bwd_into(y: &[f32], dy: &mut [f32]) {
+    assert_eq!(y.len(), dy.len());
+    for (d, yv) in dy.iter_mut().zip(y) {
+        if *yv <= 0.0 {
+            *d = 0.0;
+        }
+    }
+}
+
+/// tanh backward through the *post-activation* values: dy *= 1 − y².
+/// (The policy trunk is all-ReLU; this is the gradient piece a native LSTM
+/// predictor train step needs — kept next to its forward in `policy.rs`.)
+pub fn tanh_bwd_into(y: &[f32], dy: &mut [f32]) {
+    assert_eq!(y.len(), dy.len());
+    for (d, yv) in dy.iter_mut().zip(y) {
+        *d *= 1.0 - *yv * *yv;
+    }
+}
+
+/// Gradient of `c_logp · log π(a) + c_ent · H` w.r.t. one head's logits,
+/// given that head's masked log-softmax `ls` (from
+/// [`log_softmax_masked_into`]). The masked-softmax calculus:
+///
+///   ∂ log π(a) / ∂l_j = 1[j = a] − p_j
+///   ∂ H        / ∂l_j = −p_j (ls_j + H)
+///
+/// with p_j = exp(ls_j) for valid entries and 0 for masked ones (masked
+/// logits are shifted by −1e9 in the AOT graph, so their gradient is an
+/// exact 0 here, not a rounding accident). A fully-masked head took the
+/// guarded (0, 0.0) sampling fallback — no logit influenced that pick, so
+/// its gradient is all zeros.
+pub fn masked_head_grad_into(
+    ls: &[f32],
+    mask: &[bool],
+    action: usize,
+    c_logp: f32,
+    c_ent: f32,
+    out: &mut [f32],
+) {
+    assert_eq!(ls.len(), mask.len());
+    assert_eq!(ls.len(), out.len());
+    if !mask.iter().any(|m| *m) {
+        out.fill(0.0);
+        return;
+    }
+    let mut h = 0.0f32; // head entropy from the log-probs
+    for (l, m) in ls.iter().zip(mask) {
+        if *m && *l > NEG_INF / 2.0 {
+            h -= l.exp() * l;
+        }
+    }
+    for (j, ((o, l), m)) in out.iter_mut().zip(ls).zip(mask).enumerate() {
+        if !*m {
+            *o = 0.0;
+            continue;
+        }
+        let p = l.exp();
+        let onehot = if j == action { 1.0 } else { 0.0 };
+        *o = c_logp * (onehot - p) + c_ent * (-p * (*l + h));
     }
 }
 
@@ -339,6 +488,118 @@ mod tests {
             argmax_masked_scratch(&logits, &mask, &mut scratch),
             argmax_masked(&logits, &mask)
         );
+    }
+
+    #[test]
+    fn dense_bwd_matches_finite_difference() {
+        // scalar loss L = Σ dy ⊙ (x @ w + b): its exact gradients are
+        // gw = xᵀ dy, gb = Σ_b dy, dx = dy wᵀ — check the kernel against
+        // central finite differences of the forward
+        let mut rng = Pcg32::new(11);
+        let (batch, i, o) = (3usize, 5usize, 4usize);
+        let xs: Vec<f32> = (0..batch * i).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..i * o).map(|_| rng.normal() as f32).collect();
+        let b = vec![0.0f32; o];
+        let dy: Vec<f32> = (0..batch * o).map(|_| rng.normal() as f32).collect();
+        let loss = |w: &[f32], xs: &[f32]| -> f64 {
+            let mut out = vec![0.0f32; batch * o];
+            dense_batch_into(xs, batch, i, w, &b, o, false, &mut out);
+            out.iter().zip(&dy).map(|(y, d)| (*y * *d) as f64).sum()
+        };
+        let mut gw = vec![0.0f32; i * o];
+        let mut gb = vec![0.0f32; o];
+        let mut dx = vec![0.0f32; batch * i];
+        dense_bwd_batch_into(&xs, batch, i, &w, o, &dy, &mut gw, &mut gb, Some(&mut dx));
+        let eps = 1e-3f32;
+        for k in 0..i * o {
+            let mut wp = w.clone();
+            wp[k] += eps;
+            let mut wm = w.clone();
+            wm[k] -= eps;
+            let fd = (loss(&wp, &xs) - loss(&wm, &xs)) / (2.0 * eps as f64);
+            assert!((fd - gw[k] as f64).abs() < 1e-3, "gw[{k}]: fd {fd} vs {}", gw[k]);
+        }
+        for k in 0..batch * i {
+            let mut xp = xs.clone();
+            xp[k] += eps;
+            let mut xm = xs.clone();
+            xm[k] -= eps;
+            let fd = (loss(&w, &xp) - loss(&w, &xm)) / (2.0 * eps as f64);
+            assert!((fd - dx[k] as f64).abs() < 1e-3, "dx[{k}]: fd {fd} vs {}", dx[k]);
+        }
+        for (j, g) in gb.iter().enumerate() {
+            let want: f32 = (0..batch).map(|bi| dy[bi * o + j]).sum();
+            assert!((g - want).abs() < 1e-6, "gb[{j}]");
+        }
+    }
+
+    #[test]
+    fn dense_bwd_accumulates_into_existing_grads() {
+        // gw/gb use `+=`: calling twice must double the gradient
+        let xs = [1.0f32, 2.0];
+        let w = [0.5f32, -0.5];
+        let dy = [2.0f32, 3.0];
+        let mut gw = vec![0.0f32; 2];
+        let mut gb = vec![0.0f32; 1];
+        dense_bwd_batch_into(&xs, 2, 1, &w, 1, &dy, &mut gw, &mut gb, None);
+        let first = (gw.clone(), gb.clone());
+        dense_bwd_batch_into(&xs, 2, 1, &w, 1, &dy, &mut gw, &mut gb, None);
+        assert_eq!(gw[0], 2.0 * first.0[0]);
+        assert_eq!(gb[0], 2.0 * first.1[0]);
+    }
+
+    #[test]
+    fn relu_and_tanh_backward() {
+        let y = [0.5f32, 0.0, 2.0, 0.0];
+        let mut dy = [1.0f32, 1.0, 1.0, -1.0];
+        relu_bwd_into(&y, &mut dy);
+        assert_eq!(dy, [1.0, 0.0, 1.0, 0.0]);
+        let yt = [0.0f32, 0.5, -0.5];
+        let mut dt = [2.0f32, 2.0, 2.0];
+        tanh_bwd_into(&yt, &mut dt);
+        assert_eq!(dt, [2.0, 1.5, 1.5]);
+    }
+
+    #[test]
+    fn masked_head_grad_matches_finite_difference() {
+        let mut rng = Pcg32::new(23);
+        let logits: Vec<f32> = (0..6).map(|_| rng.normal() as f32).collect();
+        let mask = [true, true, false, true, true, true];
+        let action = 3usize;
+        let (c_logp, c_ent) = (0.7f32, -0.2f32);
+        let f = |lg: &[f32]| -> f64 {
+            // c_logp·logp(a) + c_ent·H, the quantity the kernel differentiates
+            let ls = log_softmax_masked(lg, &mask);
+            let mut h = 0.0f64;
+            for (l, m) in ls.iter().zip(&mask) {
+                if *m {
+                    h -= (*l as f64).exp() * *l as f64;
+                }
+            }
+            c_logp as f64 * ls[action] as f64 + c_ent as f64 * h
+        };
+        let mut ls = vec![0.0f32; 6];
+        log_softmax_masked_into(&logits, &mask, &mut ls);
+        let mut grad = vec![0.0f32; 6];
+        masked_head_grad_into(&ls, &mask, action, c_logp, c_ent, &mut grad);
+        let eps = 1e-3f32;
+        for k in 0..6 {
+            let mut lp = logits.clone();
+            lp[k] += eps;
+            let mut lm = logits.clone();
+            lm[k] -= eps;
+            let fd = (f(&lp) - f(&lm)) / (2.0 * eps as f64);
+            assert!((fd - grad[k] as f64).abs() < 1e-3, "grad[{k}]: fd {fd} vs {}", grad[k]);
+        }
+        assert_eq!(grad[2], 0.0, "masked logit gets an exact-zero gradient");
+    }
+
+    #[test]
+    fn masked_head_grad_fully_masked_is_zero() {
+        let ls = [NEG_INF, NEG_INF];
+        let mut grad = [9.0f32, 9.0];
+        masked_head_grad_into(&ls, &[false, false], 0, 1.0, 1.0, &mut grad);
+        assert_eq!(grad, [0.0, 0.0]);
     }
 
     #[test]

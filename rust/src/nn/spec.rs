@@ -63,6 +63,30 @@ pub const TRAIN_BATCH: usize = 64;
 /// Load scale baked into the predictor graph (model.py::LOAD_SCALE).
 pub const LOAD_SCALE: f64 = 200.0;
 
+// ---------------------------------------------------------------------------
+// PPO / Adam hyper-parameters — mirrors python/compile/params.py. The AOT
+// train step bakes these into the HLO graph; the native fused train step
+// (rl/ppo.rs::update_native) reads them here so both paths optimize the
+// same objective.
+// ---------------------------------------------------------------------------
+
+pub const ADAM_LR: f32 = 3e-4;
+pub const ADAM_B1: f32 = 0.9;
+pub const ADAM_B2: f32 = 0.999;
+pub const ADAM_EPS: f32 = 1e-8;
+/// PPO clip epsilon (Eq. 12).
+pub const CLIP_EPS: f32 = 0.2;
+/// Value-loss coefficient c1 (Eq. 11).
+pub const VF_COEF: f32 = 0.5;
+/// Entropy-bonus coefficient c2 (Eq. 11).
+pub const ENT_COEF: f32 = 0.03;
+/// Global gradient-norm clip applied before Adam.
+pub const MAX_GRAD_NORM: f32 = 0.5;
+/// log-ratio clamp of model.py::_ppo_loss: |log π − log π_old| is clamped
+/// to ±4 so exp() cannot explode when the policy has drifted far from the
+/// rollout policy (e.g. expert actions under a peaked policy).
+pub const LOG_RATIO_CLAMP: f32 = 4.0;
+
 /// Closed-form policy parameter count (must equal python's).
 pub const POLICY_PARAM_COUNT: usize = STATE_DIM * HIDDEN
     + HIDDEN

@@ -17,7 +17,7 @@
 //! identical to the single-state path, so batched and sequential results
 //! agree bitwise (pinned by `rust/tests/batch_hotpath.rs`).
 
-use crate::nn::math::dense_batch_into;
+use crate::nn::math::{dense_batch_into, dense_bwd_batch_into, relu_bwd_into};
 use crate::nn::policy::POLICY_LAYOUT;
 use crate::nn::spec::*;
 
@@ -41,6 +41,38 @@ fn ensure(buf: &mut Vec<f32>, len: usize, grow_events: &mut u64) {
     buf.resize(len, 0.0);
 }
 
+/// Rows per backward shard (DESIGN.md §8). The chunk structure is fixed by
+/// this constant — NOT by the worker-thread count — so the per-chunk
+/// gradient accumulators and their tree reduction perform bit-identical
+/// arithmetic whether 1 or N threads process the chunks. TRAIN_BATCH = 64
+/// splits into 8 chunks, enough parallelism for typical edge CPUs.
+pub const BWD_CHUNK_ROWS: usize = 8;
+
+/// Per-worker backward scratch: upstream activation gradients for one chunk
+/// (≤ BWD_CHUNK_ROWS rows × HIDDEN each).
+#[derive(Default)]
+struct BwdScratch {
+    dh: Vec<f32>,
+    dt: Vec<f32>,
+    da: Vec<f32>,
+}
+
+/// Read-only view every backward worker shares (all slices borrow the
+/// caller's params/states and the workspace's stashed activations).
+#[derive(Clone, Copy)]
+struct BwdCtx<'a> {
+    params: &'a [f32],
+    states: &'a [f32],
+    batch: usize,
+    /// trunk activations of `policy_fwd_train`: (N_RES + 1) slabs of
+    /// (batch, HIDDEN) — slab 0 after fc_in+relu, slab r+1 after block r
+    hs: &'a [f32],
+    /// per-block post-relu intermediates: N_RES slabs of (batch, HIDDEN)
+    t1s: &'a [f32],
+    d_logits: &'a [f32],
+    d_values: &'a [f32],
+}
+
 /// Scratch-buffer arena for policy forwards (single and batched).
 #[derive(Default)]
 pub struct Workspace {
@@ -53,6 +85,17 @@ pub struct Workspace {
     logits: Vec<f32>,
     /// value outputs of the most recent forward, (batch,)
     values: Vec<f32>,
+    /// activation stash of the most recent `policy_fwd_train`
+    hs: Vec<f32>,
+    t1s: Vec<f32>,
+    /// batch size of the most recent `policy_fwd_train` (backward pairing)
+    train_batch: usize,
+    /// per-chunk gradient accumulators (each POLICY_PARAM_COUNT)
+    grad_chunks: Vec<Vec<f32>>,
+    /// tree-reduced gradient of the most recent backward
+    grad: Vec<f32>,
+    /// per-worker backward scratch
+    bwd: Vec<BwdScratch>,
     /// number of times any buffer had to (re)allocate — stays flat once the
     /// workspace has seen its steady-state batch size
     grow_events: u64,
@@ -173,6 +216,321 @@ impl Workspace {
         let (_, values) = self.policy_fwd_batch(params, state, 1);
         values[0]
     }
+
+    /// Batched forward that additionally stashes every activation the
+    /// backward pass needs (trunk slabs + per-block relu intermediates).
+    /// Identical arithmetic to [`Workspace::policy_fwd_batch`] — each output
+    /// element's accumulation chain is the same — so the two paths agree
+    /// bitwise; only the buffer bookkeeping differs. Allocation-free after
+    /// warm-up at a fixed batch size.
+    pub fn policy_fwd_train(
+        &mut self,
+        params: &[f32],
+        states: &[f32],
+        batch: usize,
+    ) -> (&[f32], &[f32]) {
+        assert!(batch > 0, "policy_fwd_train: empty batch");
+        assert_eq!(params.len(), POLICY_PARAM_COUNT, "bad param vector length");
+        assert_eq!(states.len(), batch * STATE_DIM, "bad state matrix shape");
+        let l = &POLICY_LAYOUT;
+        let p = |a: usize, n: usize| &params[a..a + n];
+        let bh = batch * HIDDEN;
+        ensure(&mut self.hs, (N_RES + 1) * bh, &mut self.grow_events);
+        ensure(&mut self.t1s, N_RES * bh, &mut self.grow_events);
+        ensure(&mut self.t2, bh, &mut self.grow_events);
+        ensure(&mut self.logits, batch * LOGITS_DIM, &mut self.grow_events);
+        ensure(&mut self.values, batch, &mut self.grow_events);
+        self.train_batch = batch;
+
+        dense_batch_into(
+            states,
+            batch,
+            STATE_DIM,
+            p(l.fc_in_w, STATE_DIM * HIDDEN),
+            p(l.fc_in_b, HIDDEN),
+            HIDDEN,
+            true,
+            &mut self.hs[..bh],
+        );
+        for (r, (w1, b1, w2, b2)) in l.res.into_iter().enumerate() {
+            let (done, rest) = self.hs.split_at_mut((r + 1) * bh);
+            let h_in = &done[r * bh..];
+            let t1 = &mut self.t1s[r * bh..(r + 1) * bh];
+            dense_batch_into(
+                h_in,
+                batch,
+                HIDDEN,
+                p(w1, HIDDEN * HIDDEN),
+                p(b1, HIDDEN),
+                HIDDEN,
+                true,
+                t1,
+            );
+            dense_batch_into(
+                t1,
+                batch,
+                HIDDEN,
+                p(w2, HIDDEN * HIDDEN),
+                p(b2, HIDDEN),
+                HIDDEN,
+                false,
+                &mut self.t2,
+            );
+            // residual add into the NEXT slab: same per-element arithmetic
+            // as the in-place `h += t2` of policy_fwd_batch
+            let h_out = &mut rest[..bh];
+            for ((ho, hi), ov) in h_out.iter_mut().zip(h_in).zip(&self.t2) {
+                *ho = *hi + *ov;
+            }
+        }
+        let h_last = &self.hs[N_RES * bh..];
+        dense_batch_into(
+            h_last,
+            batch,
+            HIDDEN,
+            p(l.head_w, HIDDEN * LOGITS_DIM),
+            p(l.head_b, LOGITS_DIM),
+            LOGITS_DIM,
+            false,
+            &mut self.logits,
+        );
+        dense_batch_into(
+            h_last,
+            batch,
+            HIDDEN,
+            p(l.value_w, HIDDEN),
+            p(l.value_b, 1),
+            1,
+            false,
+            &mut self.values,
+        );
+        (&self.logits, &self.values)
+    }
+
+    /// Batched analytic backward through the policy network (DESIGN.md §8):
+    /// given ∂L/∂logits (batch × LOGITS_DIM) and ∂L/∂value (batch,) from
+    /// the loss head, produce ∂L/∂params (POLICY_PARAM_COUNT) for the
+    /// states of the preceding [`Workspace::policy_fwd_train`] call.
+    ///
+    /// The batch is sharded into fixed [`BWD_CHUNK_ROWS`]-row chunks, each
+    /// accumulating into its own parameter-sized gradient buffer; up to
+    /// `threads` `std::thread` workers process chunks (contiguous blocks per
+    /// worker), then the chunk accumulators are combined by a fixed pairwise
+    /// tree — ((c0+c1)+(c2+c3))+…. Because the chunk structure and the
+    /// reduction order depend only on the batch size, the result is bitwise
+    /// identical for ANY thread count (pinned by shard-invariance tests).
+    /// Allocation-free after warm-up; `grow_events()` counts (re)allocations.
+    pub fn policy_bwd_batch(
+        &mut self,
+        params: &[f32],
+        states: &[f32],
+        batch: usize,
+        d_logits: &[f32],
+        d_values: &[f32],
+        threads: usize,
+    ) -> &[f32] {
+        assert_eq!(
+            self.train_batch, batch,
+            "policy_bwd_batch requires a matching policy_fwd_train first"
+        );
+        assert_eq!(params.len(), POLICY_PARAM_COUNT, "bad param vector length");
+        assert_eq!(states.len(), batch * STATE_DIM, "bad state matrix shape");
+        assert_eq!(d_logits.len(), batch * LOGITS_DIM, "bad d_logits shape");
+        assert_eq!(d_values.len(), batch, "bad d_values shape");
+        let n_chunks = batch.div_ceil(BWD_CHUNK_ROWS);
+        let threads = threads.max(1).min(n_chunks);
+
+        if self.grad_chunks.len() < n_chunks {
+            self.grad_chunks.resize_with(n_chunks, Vec::new);
+        }
+        for c in self.grad_chunks.iter_mut().take(n_chunks) {
+            ensure(c, POLICY_PARAM_COUNT, &mut self.grow_events);
+        }
+        if self.bwd.len() < threads {
+            self.bwd.resize_with(threads, BwdScratch::default);
+        }
+        for s in self.bwd.iter_mut().take(threads) {
+            ensure(&mut s.dh, BWD_CHUNK_ROWS * HIDDEN, &mut self.grow_events);
+            ensure(&mut s.dt, BWD_CHUNK_ROWS * HIDDEN, &mut self.grow_events);
+            ensure(&mut s.da, BWD_CHUNK_ROWS * HIDDEN, &mut self.grow_events);
+        }
+        ensure(&mut self.grad, POLICY_PARAM_COUNT, &mut self.grow_events);
+
+        let Workspace { hs, t1s, grad_chunks, grad, bwd, .. } = self;
+        let ctx = BwdCtx {
+            params,
+            states,
+            batch,
+            hs: &hs[..(N_RES + 1) * batch * HIDDEN],
+            t1s: &t1s[..N_RES * batch * HIDDEN],
+            d_logits,
+            d_values,
+        };
+        let chunks = &mut grad_chunks[..n_chunks];
+        let chunk_range = |ci: usize| {
+            (ci * BWD_CHUNK_ROWS, ((ci + 1) * BWD_CHUNK_ROWS).min(batch))
+        };
+        if threads == 1 {
+            let s = &mut bwd[0];
+            for (ci, g) in chunks.iter_mut().enumerate() {
+                let (lo, hi) = chunk_range(ci);
+                backward_chunk(&ctx, lo, hi, g, s);
+            }
+        } else {
+            // contiguous chunk blocks per worker: which thread computes a
+            // chunk never changes WHAT it computes, only when
+            let per = n_chunks.div_ceil(threads);
+            std::thread::scope(|sc| {
+                let mut rem_chunks: &mut [Vec<f32>] = &mut *chunks;
+                let mut rem_scratch: &mut [BwdScratch] = &mut bwd[..threads];
+                let mut base = 0usize;
+                let ctx = &ctx;
+                while !rem_chunks.is_empty() {
+                    let take = per.min(rem_chunks.len());
+                    let (block, rest) = rem_chunks.split_at_mut(take);
+                    rem_chunks = rest;
+                    let (s0, s_rest) = rem_scratch.split_at_mut(1);
+                    rem_scratch = s_rest;
+                    let b0 = base;
+                    base += take;
+                    sc.spawn(move || {
+                        let s = &mut s0[0];
+                        for (k, g) in block.iter_mut().enumerate() {
+                            let (lo, hi) = chunk_range(b0 + k);
+                            backward_chunk(ctx, lo, hi, g, s);
+                        }
+                    });
+                }
+            });
+        }
+
+        // fixed pairwise tree reduction over the chunk accumulators:
+        // stride-1 pairs first, then stride 2, 4, … — order is a function of
+        // n_chunks alone, never of the thread count
+        let mut stride = 1usize;
+        while stride < n_chunks {
+            let mut i = 0usize;
+            while i + stride < n_chunks {
+                let (a, b) = chunks.split_at_mut(i + stride);
+                let dst = &mut a[i];
+                let src = &b[0];
+                for (d, s) in dst.iter_mut().zip(src) {
+                    *d += *s;
+                }
+                i += 2 * stride;
+            }
+            stride *= 2;
+        }
+        grad.copy_from_slice(&chunks[0]);
+        grad
+    }
+}
+
+/// Analytic backward of one chunk of rows [lo, hi): head + value layers,
+/// residual blocks in reverse, input layer — accumulating parameter
+/// gradients into `g` (this chunk's own accumulator, zeroed by the caller).
+/// Accumulation order within the chunk is fixed (rows ascending inside each
+/// kernel, layers in reverse-topological order), making the chunk's
+/// contribution bit-stable regardless of scheduling.
+fn backward_chunk(ctx: &BwdCtx<'_>, lo: usize, hi: usize, g: &mut [f32], s: &mut BwdScratch) {
+    let l = &POLICY_LAYOUT;
+    let n = hi - lo;
+    let bh = ctx.batch * HIDDEN;
+    let slab = |r: usize| &ctx.hs[r * bh + lo * HIDDEN..r * bh + hi * HIDDEN];
+    let t1_slab = |r: usize| &ctx.t1s[r * bh + lo * HIDDEN..r * bh + hi * HIDDEN];
+    let dl = &ctx.d_logits[lo * LOGITS_DIM..hi * LOGITS_DIM];
+    let dv = &ctx.d_values[lo..hi];
+    let BwdScratch { dh, dt, da } = s;
+    let dh = &mut dh[..n * HIDDEN];
+    let dt = &mut dt[..n * HIDDEN];
+    let da = &mut da[..n * HIDDEN];
+
+    // head layer: dh = dl @ head_wᵀ (overwrites dh)
+    let h_last = slab(N_RES);
+    {
+        let (gw, gb) = g[l.head_w..l.head_b + LOGITS_DIM].split_at_mut(HIDDEN * LOGITS_DIM);
+        dense_bwd_batch_into(
+            h_last,
+            n,
+            HIDDEN,
+            &ctx.params[l.head_w..l.head_w + HIDDEN * LOGITS_DIM],
+            LOGITS_DIM,
+            dl,
+            gw,
+            gb,
+            Some(&mut *dh),
+        );
+    }
+    // value head (o = 1, done inline): accumulates into dh
+    {
+        let (gvw, gvb) = g[l.value_w..l.value_b + 1].split_at_mut(HIDDEN);
+        let wv = &ctx.params[l.value_w..l.value_w + HIDDEN];
+        for (bi, d) in dv.iter().enumerate() {
+            gvb[0] += *d;
+            let hrow = &h_last[bi * HIDDEN..(bi + 1) * HIDDEN];
+            let dhrow = &mut dh[bi * HIDDEN..(bi + 1) * HIDDEN];
+            for ((gv, hv), (dhv, wvv)) in
+                gvw.iter_mut().zip(hrow).zip(dhrow.iter_mut().zip(wv))
+            {
+                *gv += *hv * *d;
+                *dhv += *wvv * *d;
+            }
+        }
+    }
+    // residual blocks in reverse: h_out = h_in + W2ᵀ relu(W1ᵀ h_in + b1) + b2
+    for r in (0..N_RES).rev() {
+        let (w1, b1, w2, _b2) = l.res[r];
+        let t1 = t1_slab(r);
+        let h_in = slab(r);
+        {
+            let (gw2, gb2) = g[w2..w2 + HIDDEN * HIDDEN + HIDDEN].split_at_mut(HIDDEN * HIDDEN);
+            dense_bwd_batch_into(
+                t1,
+                n,
+                HIDDEN,
+                &ctx.params[w2..w2 + HIDDEN * HIDDEN],
+                HIDDEN,
+                dh,
+                gw2,
+                gb2,
+                Some(&mut *dt),
+            );
+        }
+        relu_bwd_into(t1, dt);
+        {
+            let (gw1, gb1) = g[w1..b1 + HIDDEN].split_at_mut(HIDDEN * HIDDEN);
+            dense_bwd_batch_into(
+                h_in,
+                n,
+                HIDDEN,
+                &ctx.params[w1..w1 + HIDDEN * HIDDEN],
+                HIDDEN,
+                dt,
+                gw1,
+                gb1,
+                Some(&mut *da),
+            );
+        }
+        // skip connection: ∂/∂h_in = ∂/∂h_out (identity path) + W1 path
+        for (dhv, dav) in dh.iter_mut().zip(da.iter()) {
+            *dhv += *dav;
+        }
+    }
+    // input layer: relu grad through slab 0, then fc_in weight grads
+    relu_bwd_into(slab(0), dh);
+    let x = &ctx.states[lo * STATE_DIM..hi * STATE_DIM];
+    let (gwi, gbi) = g[l.fc_in_w..l.fc_in_b + HIDDEN].split_at_mut(STATE_DIM * HIDDEN);
+    dense_bwd_batch_into(
+        x,
+        n,
+        STATE_DIM,
+        &ctx.params[l.fc_in_w..l.fc_in_w + STATE_DIM * HIDDEN],
+        HIDDEN,
+        dh,
+        gwi,
+        gbi,
+        None,
+    );
 }
 
 #[cfg(test)]
@@ -243,6 +601,159 @@ mod tests {
         let ext: Vec<f32> = (0..LOGITS_DIM).map(|i| i as f32).collect();
         ws.set_logits(&ext);
         assert_eq!(ws.logits(), ext.as_slice());
+    }
+
+    #[test]
+    fn train_forward_matches_inference_forward_bitwise() {
+        let params = random_params(11);
+        for batch in [1usize, 3, 8, 17] {
+            let states = random_states(200 + batch as u64, batch);
+            let mut a = Workspace::new();
+            let mut b = Workspace::new();
+            let (l_inf, v_inf) = a.policy_fwd_batch(&params, &states, batch);
+            let (l_trn, v_trn) = b.policy_fwd_train(&params, &states, batch);
+            assert_eq!(l_inf, l_trn, "batch {batch} logits");
+            assert_eq!(v_inf, v_trn, "batch {batch} values");
+        }
+    }
+
+    /// Linear loss L = Σ c_l ⊙ logits + Σ c_v ⊙ values: `policy_bwd_batch`
+    /// with d_logits = c_l / d_values = c_v is exactly ∇L, checked against
+    /// central finite differences on sampled parameters from every layer.
+    #[test]
+    fn backward_matches_finite_difference() {
+        let params = random_params(31);
+        let batch = 3usize;
+        let states = random_states(32, batch);
+        let mut rng = Pcg32::new(33);
+        let d_logits: Vec<f32> =
+            (0..batch * LOGITS_DIM).map(|_| rng.normal() as f32).collect();
+        let d_values: Vec<f32> = (0..batch).map(|_| rng.normal() as f32).collect();
+        let loss = |p: &[f32]| -> f64 {
+            let mut ws = Workspace::new();
+            let (l, v) = ws.policy_fwd_batch(p, &states, batch);
+            let mut acc = 0.0f64;
+            for (x, c) in l.iter().zip(&d_logits) {
+                acc += *x as f64 * *c as f64;
+            }
+            for (x, c) in v.iter().zip(&d_values) {
+                acc += *x as f64 * *c as f64;
+            }
+            acc
+        };
+        let mut ws = Workspace::new();
+        let _ = ws.policy_fwd_train(&params, &states, batch);
+        let grad =
+            ws.policy_bwd_batch(&params, &states, batch, &d_logits, &d_values, 1).to_vec();
+
+        // sample parameters from every region of the layout
+        let l = &POLICY_LAYOUT;
+        let mut idxs = vec![l.fc_in_b, l.fc_in_b + 7, l.head_b, l.head_b + 9, l.value_b];
+        let mut pick = Pcg32::new(34);
+        for (base, len) in [
+            (l.fc_in_w, STATE_DIM * HIDDEN),
+            (l.res[0].0, HIDDEN * HIDDEN),
+            (l.res[1].2, HIDDEN * HIDDEN),
+            (l.res[2].0, HIDDEN * HIDDEN),
+            (l.head_w, HIDDEN * LOGITS_DIM),
+            (l.value_w, HIDDEN),
+        ] {
+            for _ in 0..8 {
+                idxs.push(base + pick.below(len as u32) as usize);
+            }
+        }
+        let mut loose_misses = 0usize;
+        for &k in &idxs {
+            let eps = 5e-3f32;
+            let mut pp = params.clone();
+            pp[k] += eps;
+            let mut pm = params.clone();
+            pm[k] -= eps;
+            let span = (pp[k] - pm[k]) as f64; // actual f32 step, kills quantization
+            let fd = (loss(&pp) - loss(&pm)) / span;
+            let g = grad[k] as f64;
+            let scale = g.abs().max(fd.abs()).max(0.5);
+            let err = (fd - g).abs();
+            // ~1e-3 relative in the common case; a couple of coordinates may
+            // sit near a ReLU kink inside the FD interval, so tolerate rare
+            // slightly-larger errors but never gross ones
+            if err > 2e-3 * scale {
+                loose_misses += 1;
+                assert!(err < 5e-2 * scale, "param {k}: fd {fd} vs analytic {g}");
+            }
+        }
+        assert!(
+            loose_misses <= 2,
+            "{loose_misses}/{} sampled params off beyond 2e-3 relative",
+            idxs.len()
+        );
+    }
+
+    #[test]
+    fn backward_is_shard_count_invariant_bitwise() {
+        let params = random_params(41);
+        let batch = 24usize; // 3 chunks of BWD_CHUNK_ROWS = 8
+        let states = random_states(42, batch);
+        let mut rng = Pcg32::new(43);
+        let d_logits: Vec<f32> =
+            (0..batch * LOGITS_DIM).map(|_| rng.normal() as f32).collect();
+        let d_values: Vec<f32> = (0..batch).map(|_| rng.normal() as f32).collect();
+        let mut reference: Option<Vec<u32>> = None;
+        for threads in [1usize, 2, 3, 8] {
+            let mut ws = Workspace::new();
+            let _ = ws.policy_fwd_train(&params, &states, batch);
+            let grad =
+                ws.policy_bwd_batch(&params, &states, batch, &d_logits, &d_values, threads);
+            let bits: Vec<u32> = grad.iter().map(|g| g.to_bits()).collect();
+            match &reference {
+                None => reference = Some(bits),
+                Some(want) => {
+                    assert_eq!(&bits, want, "threads = {threads} changed the gradient bits")
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn backward_stops_allocating_after_warmup() {
+        let params = random_params(51);
+        let batch = 16usize;
+        let states = random_states(52, batch);
+        let d_logits = vec![0.01f32; batch * LOGITS_DIM];
+        let d_values = vec![0.01f32; batch];
+        let mut ws = Workspace::new();
+        let _ = ws.policy_fwd_train(&params, &states, batch);
+        let _ = ws.policy_bwd_batch(&params, &states, batch, &d_logits, &d_values, 2);
+        let warm = ws.grow_events();
+        for _ in 0..5 {
+            let _ = ws.policy_fwd_train(&params, &states, batch);
+            let _ = ws.policy_bwd_batch(&params, &states, batch, &d_logits, &d_values, 2);
+        }
+        assert_eq!(ws.grow_events(), warm, "steady-state train step must not allocate");
+        // a smaller (partial-minibatch) batch fits in the warm buffers
+        let _ = ws.policy_fwd_train(&params, &states[..7 * STATE_DIM], 7);
+        let _ = ws.policy_bwd_batch(
+            &params,
+            &states[..7 * STATE_DIM],
+            7,
+            &d_logits[..7 * LOGITS_DIM],
+            &d_values[..7],
+            2,
+        );
+        assert_eq!(ws.grow_events(), warm, "shrinking batch reuses capacity");
+    }
+
+    #[test]
+    #[should_panic(expected = "matching policy_fwd_train")]
+    fn backward_requires_matching_forward() {
+        let params = random_params(61);
+        let states = random_states(62, 4);
+        let mut ws = Workspace::new();
+        let _ = ws.policy_fwd_train(&params, &states, 4);
+        // batch mismatch: the stashed activations are for 4 rows, not 2
+        let d_logits = vec![0.0f32; 2 * LOGITS_DIM];
+        let d_values = vec![0.0f32; 2];
+        let _ = ws.policy_bwd_batch(&params, &states[..2 * STATE_DIM], 2, &d_logits, &d_values, 1);
     }
 
     #[test]

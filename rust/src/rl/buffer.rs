@@ -31,6 +31,67 @@ pub struct Minibatch {
     pub task_mask: Vec<f32>, // TRAIN_BATCH × MAX_TASKS
 }
 
+impl Minibatch {
+    /// Synthetic minibatch for tests, benches and train-step diagnostics:
+    /// random states, uniformly sampled actions, full head masks, and the
+    /// alternating task-mask shape real specs produce (tail tasks masked on
+    /// odd rows). `old_logp` is the near-uniform-policy log-prob per row,
+    /// keeping importance ratios sane out of the box; callers that need a
+    /// specific rollout policy overwrite it.
+    pub fn synthetic(rng: &mut Pcg32, rows: usize) -> Minibatch {
+        let mut mb = Minibatch {
+            states: Vec::new(),
+            actions: Vec::new(),
+            old_logp: Vec::new(),
+            adv: Vec::new(),
+            ret: Vec::new(),
+            head_mask: Vec::new(),
+            task_mask: Vec::new(),
+        };
+        let uni: f32 =
+            (MAX_VARIANTS as f32).ln() + (F_MAX as f32).ln() + (N_BATCH as f32).ln();
+        for r in 0..rows {
+            for _ in 0..STATE_DIM {
+                mb.states.push((rng.normal() * 0.4) as f32);
+            }
+            for _ in 0..MAX_TASKS {
+                mb.actions.push(rng.below(MAX_VARIANTS as u32) as f32);
+                mb.actions.push(rng.below(F_MAX as u32) as f32);
+                mb.actions.push(rng.below(N_BATCH as u32) as f32);
+            }
+            mb.adv.push(rng.normal() as f32);
+            mb.ret.push(rng.normal() as f32);
+            for _ in 0..LOGITS_DIM {
+                mb.head_mask.push(1.0);
+            }
+            let mut active_tasks = 0usize;
+            for t in 0..MAX_TASKS {
+                let active = t < 4 || r % 2 == 0;
+                active_tasks += active as usize;
+                mb.task_mask.push(if active { 1.0 } else { 0.0 });
+            }
+            mb.old_logp.push(-(active_tasks as f32) * uni);
+        }
+        mb
+    }
+
+    /// Number of rows, derived from the state matrix. The AOT train step is
+    /// compiled for exactly TRAIN_BATCH rows, but the native fused step
+    /// handles partial final minibatches — consumers must use this instead
+    /// of assuming TRAIN_BATCH.
+    pub fn rows(&self) -> usize {
+        debug_assert_eq!(self.states.len() % STATE_DIM, 0);
+        let rows = self.states.len() / STATE_DIM;
+        debug_assert_eq!(self.actions.len(), rows * ACT_DIM);
+        debug_assert_eq!(self.old_logp.len(), rows);
+        debug_assert_eq!(self.adv.len(), rows);
+        debug_assert_eq!(self.ret.len(), rows);
+        debug_assert_eq!(self.head_mask.len(), rows * LOGITS_DIM);
+        debug_assert_eq!(self.task_mask.len(), rows * MAX_TASKS);
+        rows
+    }
+}
+
 #[derive(Default)]
 pub struct RolloutBuffer {
     pub transitions: Vec<Transition>,
@@ -155,6 +216,28 @@ mod tests {
             assert!(mb.actions.iter().all(|a| a.fract() == 0.0));
             assert!(mb.head_mask.iter().all(|m| *m == 0.0 || *m == 1.0));
         }
+    }
+
+    #[test]
+    fn minibatch_rows_derived_from_states() {
+        let mut b = RolloutBuffer::new();
+        for i in 0..4 {
+            b.push(fake_transition(i));
+        }
+        let (adv, ret) = b.advantages(0.0, 0.99, 0.95);
+        let mut rng = Pcg32::new(1);
+        let mb = &b.minibatches(&adv, &ret, 1, &mut rng)[0];
+        assert_eq!(mb.rows(), TRAIN_BATCH);
+        // partial minibatch: truncate to 5 rows and re-derive
+        let mut partial = mb.clone();
+        partial.states.truncate(5 * STATE_DIM);
+        partial.actions.truncate(5 * ACT_DIM);
+        partial.old_logp.truncate(5);
+        partial.adv.truncate(5);
+        partial.ret.truncate(5);
+        partial.head_mask.truncate(5 * LOGITS_DIM);
+        partial.task_mask.truncate(5 * MAX_TASKS);
+        assert_eq!(partial.rows(), 5);
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Reinforcement-learning machinery for the OPD algorithm: GAE, rollout
-//! buffer / replay memory, the PPO learner (AOT train step), and the
-//! Algorithm-2 trainer with expert guidance.
+//! buffer / replay memory, the PPO learner (AOT train step with a native
+//! fused fallback — DESIGN.md §8), and the Algorithm-2 trainer with expert
+//! guidance.
 
 pub mod buffer;
 pub mod gae;
@@ -9,5 +10,8 @@ pub mod trainer;
 
 pub use buffer::{Minibatch, RolloutBuffer, Transition};
 pub use gae::gae;
-pub use ppo::{eval_minibatch_native, PpoLearner, UpdateMetrics};
+pub use ppo::{
+    eval_minibatch_native, ppo_loss_grad_native, ppo_loss_native, PpoLearner, StepScratch,
+    UpdateMetrics,
+};
 pub use trainer::{logp_of_action, EpisodeStats, Trainer, TrainerConfig, TrainingHistory};

@@ -1,31 +1,47 @@
-//! PPO learner: owns the flat parameter vector + Adam state and applies the
-//! AOT-compiled train step (Eq. 9–12 → grads → clip → Adam, all inside ONE
-//! HLO program — rust never differentiates anything).
+//! PPO learner: owns the flat parameter vector + Adam state and applies one
+//! minibatch update per call (Eq. 9–12 → grads → global-norm clip → Adam).
+//!
+//! Two interchangeable execution paths behind the same [`UpdateMetrics`]
+//! contract (DESIGN.md §8):
+//!
+//! * **AOT** — the compiled `policy_train` HLO program (loss, autodiff,
+//!   clip and Adam all inside ONE graph). Preferred when artifacts exist.
+//! * **Native** — [`PpoLearner::update_native`]: an analytic, batched
+//!   backward pass through the policy ([`Workspace::policy_bwd_batch`],
+//!   minibatch rows sharded across `std::thread` workers with a
+//!   deterministic tree reduction) plus a fused clipped-ratio loss +
+//!   entropy bonus + value loss + grad-clip + Adam step in pure rust.
+//!   This is what makes `opd train` run at full speed on a plain CPU,
+//!   without PJRT artifacts.
+//!
+//! A minibatch whose loss or gradient comes out non-finite is *skipped* —
+//! parameters, Adam moments and `step` stay untouched and the returned
+//! metrics carry `diverged = true` — instead of aborting the training run.
 
+use std::path::Path;
 use std::rc::Rc;
 
 use anyhow::{anyhow, Result};
 
-use crate::nn::math::log_softmax_masked_into;
+use crate::nn::math::{log_softmax_masked_into, masked_head_grad_into};
 use crate::nn::spec::*;
 use crate::nn::workspace::Workspace;
 use crate::rl::buffer::Minibatch;
-use crate::runtime::{OpdRuntime, TensorView};
+use crate::runtime::{read_params, write_params, OpdRuntime, TensorView};
 
-/// Native cross-check of one minibatch: evaluate all TRAIN_BATCH rows in a
-/// single `policy_fwd_batch` pass (DESIGN.md §7) and return, per row, the
+/// Native cross-check of one minibatch: evaluate all rows in a single
+/// `policy_fwd_batch` pass (DESIGN.md §7) and return, per row, the
 /// log-prob of the recorded action under `params` plus the value estimate.
 /// This is the rust-side mirror of what the AOT train step computes before
 /// the clipped-ratio loss — the diagnostic for validating an HLO train-step
-/// artifact against the native mirror. (The trainer's expert scoring batches
-/// the same way but over whole episodes; see
-/// `rl::trainer::Trainer::score_expert_episode`.)
+/// artifact against the native mirror. Handles partial minibatches (rows
+/// derived from the state matrix, not assumed TRAIN_BATCH).
 pub fn eval_minibatch_native(
     params: &[f32],
     mb: &Minibatch,
     ws: &mut Workspace,
 ) -> (Vec<f32>, Vec<f32>) {
-    let batch = TRAIN_BATCH;
+    let batch = mb.rows();
     let (logits, values) = ws.policy_fwd_batch(params, &mb.states, batch);
     let mut logps = Vec::with_capacity(batch);
     let mut scratch = [0.0f32; MAX_HEAD_DIM];
@@ -61,6 +77,9 @@ pub struct UpdateMetrics {
     pub approx_kl: f64,
     pub total_loss: f64,
     pub grad_norm: f64,
+    /// The minibatch produced a non-finite loss/gradient: the update was
+    /// skipped and parameters/Adam state are untouched.
+    pub diverged: bool,
 }
 
 impl UpdateMetrics {
@@ -75,34 +94,333 @@ impl UpdateMetrics {
             approx_kl: v[3] as f64,
             total_loss: v[4] as f64,
             grad_norm: v[5] as f64,
+            diverged: false,
         })
     }
 }
 
+/// Loss-head scratch of the native train step, reused across minibatches
+/// (the network-side scratch lives in the [`Workspace`]).
+#[derive(Default)]
+pub struct StepScratch {
+    /// ∂L/∂logits, (rows, LOGITS_DIM)
+    d_logits: Vec<f32>,
+    /// ∂L/∂value, (rows,)
+    d_values: Vec<f32>,
+    /// masked log-softmax of every head, (rows, LOGITS_DIM) — computed in
+    /// pass 1, reused by the gradient pass (heads of inactive tasks and
+    /// fully-masked heads are never read back)
+    ls: Vec<f32>,
+    /// per-row log π(a|s) under the current policy
+    logps: Vec<f32>,
+    /// per-row factored-categorical entropy
+    ents: Vec<f32>,
+    /// per-row normalized advantages
+    adv_n: Vec<f32>,
+    /// per-row ∂L/∂logp (the clipped-surrogate subgradient)
+    coeffs: Vec<f32>,
+    /// (re)allocation counter, same contract as `Workspace::grow_events`
+    grow_events: u64,
+}
+
+impl StepScratch {
+    /// Loss-head (re)allocations — folded into [`PpoLearner::grow_events`]
+    /// so the allocation-free proof hook covers these buffers too.
+    pub fn grow_events(&self) -> u64 {
+        self.grow_events
+    }
+}
+
+fn fill(v: &mut Vec<f32>, len: usize, grow_events: &mut u64) {
+    if v.capacity() < len {
+        *grow_events += 1;
+    }
+    v.clear();
+    v.resize(len, 0.0);
+}
+
+/// Eq. 9–12 loss head over one minibatch: per-row log-probs and entropies
+/// under the current policy (from the logits of the preceding forward),
+/// minibatch advantage normalization, the clipped-ratio surrogate, value
+/// loss and entropy bonus — plus the exact gradients of the total loss
+/// w.r.t. every logit and value, written into `s.d_logits` / `s.d_values`
+/// for the network backward. Mirrors python/compile/model.py::_ppo_loss
+/// term by term. Accumulation order: scalar metrics accumulate in f64 over
+/// rows in ascending order; everything per-row is f32 like the HLO graph.
+fn loss_and_logit_grads(
+    mb: &Minibatch,
+    logits: &[f32],
+    values: &[f32],
+    rows: usize,
+    s: &mut StepScratch,
+) -> UpdateMetrics {
+    let b = rows as f32;
+    fill(&mut s.d_logits, rows * LOGITS_DIM, &mut s.grow_events);
+    fill(&mut s.d_values, rows, &mut s.grow_events);
+    fill(&mut s.ls, rows * LOGITS_DIM, &mut s.grow_events);
+    fill(&mut s.logps, rows, &mut s.grow_events);
+    fill(&mut s.ents, rows, &mut s.grow_events);
+    fill(&mut s.adv_n, rows, &mut s.grow_events);
+    fill(&mut s.coeffs, rows, &mut s.grow_events);
+
+    // advantage normalization within the minibatch (population std, like
+    // jnp.std in the graph); advantages are inputs, so no gradient flows
+    // through the normalization
+    let mut mean = 0.0f32;
+    for a in &mb.adv {
+        mean += *a;
+    }
+    mean /= b;
+    let mut var = 0.0f32;
+    for a in &mb.adv {
+        let d = *a - mean;
+        var += d * d;
+    }
+    let std = (var / b).sqrt();
+    for (o, a) in s.adv_n.iter_mut().zip(&mb.adv) {
+        *o = (*a - mean) / (std + 1e-8);
+    }
+
+    // pass 1: masked log-softmax of every active head (stashed in `s.ls`
+    // for the gradient pass), log π(a|s) and entropy per row. A
+    // fully-masked head took the guarded (index 0, logp 0.0) sampling
+    // fallback — it contributes nothing here and gets a zero gradient
+    // below (its `ls` slot is never read back).
+    let mut head_mask = [false; MAX_HEAD_DIM];
+    for r in 0..rows {
+        let row = &logits[r * LOGITS_DIM..(r + 1) * LOGITS_DIM];
+        let hm = &mb.head_mask[r * LOGITS_DIM..(r + 1) * LOGITS_DIM];
+        let tm = &mb.task_mask[r * MAX_TASKS..(r + 1) * MAX_TASKS];
+        let acts = &mb.actions[r * ACT_DIM..(r + 1) * ACT_DIM];
+        let lsrow = &mut s.ls[r * LOGITS_DIM..(r + 1) * LOGITS_DIM];
+        let mut lp = 0.0f32;
+        let mut ent = 0.0f32;
+        for (t, k, off, d) in head_layout() {
+            if tm[t] < 0.5 {
+                continue;
+            }
+            for (j, m) in head_mask.iter_mut().enumerate().take(d) {
+                *m = hm[off + j] > 0.5;
+            }
+            if !head_mask[..d].iter().any(|m| *m) {
+                continue;
+            }
+            log_softmax_masked_into(&row[off..off + d], &head_mask[..d], &mut lsrow[off..off + d]);
+            let a = (acts[t * 3 + k] as usize).min(d - 1);
+            lp += lsrow[off + a];
+            for (l, m) in lsrow[off..off + d].iter().zip(&head_mask[..d]) {
+                if *m {
+                    ent -= l.exp() * *l;
+                }
+            }
+        }
+        s.logps[r] = lp;
+        s.ents[r] = ent;
+    }
+
+    // metrics + the per-row ∂L/∂logp and ∂L/∂value coefficients
+    let mut pi_acc = 0.0f64;
+    let mut v_acc = 0.0f64;
+    let mut ent_acc = 0.0f64;
+    let mut kl_acc = 0.0f64;
+    for r in 0..rows {
+        let lr_raw = s.logps[r] - mb.old_logp[r];
+        let lr = lr_raw.clamp(-LOG_RATIO_CLAMP, LOG_RATIO_CLAMP);
+        let ratio = lr.exp();
+        let clipped = ratio.clamp(1.0 - CLIP_EPS, 1.0 + CLIP_EPS);
+        let a = s.adv_n[r];
+        let (u, c) = (ratio * a, clipped * a);
+        pi_acc += u.min(c) as f64;
+        kl_acc += (mb.old_logp[r] - s.logps[r]) as f64;
+        let verr = values[r] - mb.ret[r];
+        v_acc += (verr * verr) as f64;
+        ent_acc += s.ents[r] as f64;
+        // clipped-surrogate subgradient: zero when the log-ratio clamp or
+        // the clip branch is active; ties take the unclipped branch (whose
+        // derivative equals the clip passthrough inside the bounds)
+        let active = lr_raw.abs() < LOG_RATIO_CLAMP && u <= c;
+        s.coeffs[r] = if active { -(a * ratio) / b } else { 0.0 };
+        s.d_values[r] = VF_COEF * 2.0 / b * verr;
+    }
+    let pi_loss = -(pi_acc / rows as f64);
+    let v_loss = v_acc / rows as f64;
+    let entropy = ent_acc / rows as f64;
+    let approx_kl = kl_acc / rows as f64;
+    let total = pi_loss + VF_COEF as f64 * v_loss - ENT_COEF as f64 * entropy;
+
+    // pass 2: per-logit gradients from the stashed log-softmaxes, head by
+    // head (inactive tasks keep the zero fill — no gradient reaches their
+    // logits, like task_mask zeroes their loss contribution in the graph)
+    let c_ent = -(ENT_COEF / b);
+    for r in 0..rows {
+        let hm = &mb.head_mask[r * LOGITS_DIM..(r + 1) * LOGITS_DIM];
+        let tm = &mb.task_mask[r * MAX_TASKS..(r + 1) * MAX_TASKS];
+        let acts = &mb.actions[r * ACT_DIM..(r + 1) * ACT_DIM];
+        let lsrow = &s.ls[r * LOGITS_DIM..(r + 1) * LOGITS_DIM];
+        let drow = &mut s.d_logits[r * LOGITS_DIM..(r + 1) * LOGITS_DIM];
+        let coeff = s.coeffs[r];
+        for (t, k, off, d) in head_layout() {
+            if tm[t] < 0.5 {
+                continue;
+            }
+            for (j, m) in head_mask.iter_mut().enumerate().take(d) {
+                *m = hm[off + j] > 0.5;
+            }
+            let a = (acts[t * 3 + k] as usize).min(d - 1);
+            // fully-masked heads are guarded inside masked_head_grad_into
+            // (zeros out, stashed ls never read)
+            masked_head_grad_into(
+                &lsrow[off..off + d],
+                &head_mask[..d],
+                a,
+                coeff,
+                c_ent,
+                &mut drow[off..off + d],
+            );
+        }
+    }
+
+    UpdateMetrics {
+        pi_loss,
+        v_loss,
+        entropy,
+        approx_kl,
+        total_loss: total,
+        grad_norm: 0.0, // the caller computes it from the reduced gradient
+        diverged: false,
+    }
+}
+
+/// Fused native loss + gradient of one minibatch: one activation-stashing
+/// forward, the loss head, then the sharded batched backward. Returns the
+/// metrics (grad_norm still 0) and the gradient slice living in `ws`.
+/// Bit-stable for a fixed minibatch regardless of `threads` (DESIGN.md §8).
+pub fn ppo_loss_grad_native<'w>(
+    params: &[f32],
+    mb: &Minibatch,
+    ws: &'w mut Workspace,
+    scratch: &mut StepScratch,
+    threads: usize,
+) -> (UpdateMetrics, &'w [f32]) {
+    let rows = mb.rows();
+    assert!(rows > 0, "empty minibatch");
+    let metrics = {
+        let (logits, values) = ws.policy_fwd_train(params, &mb.states, rows);
+        loss_and_logit_grads(mb, logits, values, rows, scratch)
+    };
+    let grad = ws.policy_bwd_batch(
+        params,
+        &mb.states,
+        rows,
+        &scratch.d_logits,
+        &scratch.d_values,
+        threads,
+    );
+    (metrics, grad)
+}
+
+/// Loss metrics only (no backward) — the forward + loss head at the current
+/// parameters. Used by finite-difference gradient checks.
+pub fn ppo_loss_native(
+    params: &[f32],
+    mb: &Minibatch,
+    ws: &mut Workspace,
+    scratch: &mut StepScratch,
+) -> UpdateMetrics {
+    let rows = mb.rows();
+    assert!(rows > 0, "empty minibatch");
+    let (logits, values) = ws.policy_fwd_train(params, &mb.states, rows);
+    loss_and_logit_grads(mb, logits, values, rows, scratch)
+}
+
 pub struct PpoLearner {
-    rt: Rc<OpdRuntime>,
+    rt: Option<Rc<OpdRuntime>>,
     pub params: Vec<f32>,
     adam_m: Vec<f32>,
     adam_v: Vec<f32>,
     pub step: u64,
+    /// worker threads for the sharded native backward (clamped to the chunk
+    /// count inside `policy_bwd_batch`; the gradient is bitwise identical
+    /// for any value). Defaults to `available_parallelism`.
+    pub threads: usize,
+    /// set after the first failed AOT program load so the fallback decision
+    /// is made once, not per minibatch
+    aot_unavailable: bool,
+    ws: Workspace,
+    scratch: StepScratch,
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 impl PpoLearner {
     pub fn new(rt: Rc<OpdRuntime>) -> Self {
         let params = rt.policy_init.clone();
-        let n = params.len();
-        Self { rt, params, adam_m: vec![0.0; n], adam_v: vec![0.0; n], step: 0 }
+        Self::build(Some(rt), params)
     }
 
     pub fn with_params(rt: Rc<OpdRuntime>, params: Vec<f32>) -> Self {
-        assert_eq!(params.len(), POLICY_PARAM_COUNT);
-        let n = params.len();
-        Self { rt, params, adam_m: vec![0.0; n], adam_v: vec![0.0; n], step: 0 }
+        Self::build(Some(rt), params)
     }
 
-    /// One minibatch update through the AOT train step.
+    /// Learner without a PJRT runtime: every update goes through the native
+    /// fused train step.
+    pub fn native(params: Vec<f32>) -> Self {
+        Self::build(None, params)
+    }
+
+    fn build(rt: Option<Rc<OpdRuntime>>, params: Vec<f32>) -> Self {
+        assert_eq!(params.len(), POLICY_PARAM_COUNT);
+        let n = params.len();
+        Self {
+            rt,
+            params,
+            adam_m: vec![0.0; n],
+            adam_v: vec![0.0; n],
+            step: 0,
+            threads: default_threads(),
+            aot_unavailable: false,
+            ws: Workspace::new(),
+            scratch: StepScratch::default(),
+        }
+    }
+
+    /// Total (re)allocation count across the network workspace AND the
+    /// loss-head scratch — proof hook that the native train step stops
+    /// allocating after warm-up (asserted by `perf_train`).
+    pub fn grow_events(&self) -> u64 {
+        self.ws.grow_events() + self.scratch.grow_events()
+    }
+
+    /// One minibatch update: through the AOT train step when the program is
+    /// available, the native fused step otherwise (decided once, on the
+    /// first update). `Err` means a real runtime failure; a diverged
+    /// minibatch returns `Ok` with `diverged = true` and no state change.
     pub fn update(&mut self, mb: &Minibatch) -> Result<UpdateMetrics> {
-        let program = self.rt.policy_train()?;
+        if mb.rows() == TRAIN_BATCH && !self.aot_unavailable {
+            if let Some(rt) = self.rt.clone() {
+                match rt.policy_train() {
+                    Ok(_) => return self.update_aot(&rt, mb),
+                    Err(e) => {
+                        crate::log_warn!(
+                            "AOT train step unavailable ({e:#}); \
+                             falling back to the native fused train step"
+                        );
+                        self.aot_unavailable = true;
+                    }
+                }
+            } else {
+                self.aot_unavailable = true;
+            }
+        }
+        Ok(self.update_native(mb))
+    }
+
+    /// One minibatch update through the AOT train step (fixed TRAIN_BATCH
+    /// shapes — partial minibatches never reach this path).
+    fn update_aot(&mut self, rt: &OpdRuntime, mb: &Minibatch) -> Result<UpdateMetrics> {
+        let program = rt.policy_train()?;
         let step_in = [self.step as f32];
         let d_states = [TRAIN_BATCH, STATE_DIM];
         let d_actions = [TRAIN_BATCH, ACT_DIM];
@@ -121,13 +439,16 @@ impl PpoLearner {
             TensorView::mat(&mb.head_mask, &d_head),
             TensorView::mat(&mb.task_mask, &d_task),
         ];
-        let mut outs = program.run(&self.rt.engine, &inputs)?;
+        let mut outs = program.run(&rt.engine, &inputs)?;
         if outs.len() != 4 {
             return Err(anyhow!("train step returned {} outputs, want 4", outs.len()));
         }
-        let metrics = UpdateMetrics::from_vec(&outs.pop().unwrap())?;
-        if !metrics.total_loss.is_finite() {
-            return Err(anyhow!("non-finite loss — diverged update rejected"));
+        let mut metrics = UpdateMetrics::from_vec(&outs.pop().unwrap())?;
+        if !metrics.total_loss.is_finite() || !metrics.grad_norm.is_finite() {
+            // diverged minibatch (a NaN gradient can coexist with a finite
+            // loss): drop the outputs, keep params/Adam as-is
+            metrics.diverged = true;
+            return Ok(metrics);
         }
         self.adam_v = outs.pop().unwrap();
         self.adam_m = outs.pop().unwrap();
@@ -135,12 +456,87 @@ impl PpoLearner {
         self.step += 1;
         Ok(metrics)
     }
+
+    /// One minibatch update through the native fused train step: forward +
+    /// loss head + sharded analytic backward + global-norm clip + Adam, all
+    /// in pure rust. Allocation-free after warm-up. The parameter/moment
+    /// update is a single fused element-wise pass; the gradient norm
+    /// accumulates in f64 over parameters in ascending index order.
+    pub fn update_native(&mut self, mb: &Minibatch) -> UpdateMetrics {
+        let threads = self.threads.max(1);
+        let (mut metrics, grad) =
+            ppo_loss_grad_native(&self.params, mb, &mut self.ws, &mut self.scratch, threads);
+        let mut sq = 0.0f64;
+        for g in grad {
+            sq += *g as f64 * *g as f64;
+        }
+        let gnorm = sq.sqrt();
+        metrics.grad_norm = gnorm;
+        if !metrics.total_loss.is_finite() || !gnorm.is_finite() {
+            metrics.diverged = true;
+            return metrics;
+        }
+        let scale = (MAX_GRAD_NORM as f64 / (gnorm + 1e-8)).min(1.0) as f32;
+        let t = (self.step + 1) as f64;
+        let bc1 = (1.0 - (ADAM_B1 as f64).powf(t)) as f32;
+        let bc2 = (1.0 - (ADAM_B2 as f64).powf(t)) as f32;
+        for (((p, m), v), g) in self
+            .params
+            .iter_mut()
+            .zip(self.adam_m.iter_mut())
+            .zip(self.adam_v.iter_mut())
+            .zip(grad)
+        {
+            let g = *g * scale;
+            *m = ADAM_B1 * *m + (1.0 - ADAM_B1) * g;
+            *v = ADAM_B2 * *v + (1.0 - ADAM_B2) * g * g;
+            *p -= ADAM_LR * (*m / bc1) / ((*v / bc2).sqrt() + ADAM_EPS);
+        }
+        self.step += 1;
+        metrics
+    }
+
+    /// Checkpoint = the params blob at `path` (the format `--params` loads)
+    /// plus an optimizer sidecar at `<path>.adam` holding
+    /// `[adam_m (n), adam_v (n), step (1)]` as one flat f32 blob, so
+    /// resumed training continues with a warm optimizer instead of a cold
+    /// Adam restart. (`step` as f32 is exact below 2^24 updates.)
+    pub fn save_checkpoint(&self, path: &str) -> Result<()> {
+        write_params(Path::new(path), &self.params)?;
+        let n = self.params.len();
+        let mut side = Vec::with_capacity(2 * n + 1);
+        side.extend_from_slice(&self.adam_m);
+        side.extend_from_slice(&self.adam_v);
+        side.push(self.step as f32);
+        write_params(Path::new(&format!("{path}.adam")), &side)
+    }
+
+    /// Load a checkpoint written by [`PpoLearner::save_checkpoint`]. A
+    /// params-only blob (no `.adam` sidecar) loads with a cold optimizer.
+    pub fn load_checkpoint(&mut self, path: &str) -> Result<()> {
+        self.params = read_params(Path::new(path), POLICY_PARAM_COUNT)?;
+        let n = POLICY_PARAM_COUNT;
+        let side_path = format!("{path}.adam");
+        if Path::new(&side_path).exists() {
+            let side = read_params(Path::new(&side_path), 2 * n + 1)?;
+            self.adam_m = side[..n].to_vec();
+            self.adam_v = side[n..2 * n].to_vec();
+            self.step = side[2 * n] as u64;
+        } else {
+            crate::log_warn!("{side_path} missing — resuming with a cold optimizer state");
+            self.adam_m = vec![0.0; n];
+            self.adam_v = vec![0.0; n];
+            self.step = 0;
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
 mod tests {
     // PJRT-backed learner tests live in rust/tests/train_integration.rs
-    // (they need `make artifacts`). Pure logic below.
+    // (they need `make artifacts`); native-train-step integration tests in
+    // rust/tests/train_native.rs. Pure logic below.
     use super::*;
     use crate::nn::policy::policy_fwd_native;
     use crate::rl::trainer::logp_of_action;
@@ -151,41 +547,8 @@ mod tests {
         let m = UpdateMetrics::from_vec(&[0.1, 0.2, 0.3, 0.4, 0.5, 0.6]).unwrap();
         assert!((m.pi_loss - 0.1).abs() < 1e-7);
         assert!((m.grad_norm - 0.6).abs() < 1e-7);
+        assert!(!m.diverged);
         assert!(UpdateMetrics::from_vec(&[0.0; 5]).is_err());
-    }
-
-    fn synthetic_minibatch(rng: &mut Pcg32) -> Minibatch {
-        let mut mb = Minibatch {
-            states: Vec::new(),
-            actions: Vec::new(),
-            old_logp: Vec::new(),
-            adv: Vec::new(),
-            ret: Vec::new(),
-            head_mask: Vec::new(),
-            task_mask: Vec::new(),
-        };
-        for r in 0..TRAIN_BATCH {
-            for _ in 0..STATE_DIM {
-                mb.states.push((rng.normal() * 0.4) as f32);
-            }
-            for _ in 0..MAX_TASKS {
-                mb.actions.push(rng.below(MAX_VARIANTS as u32) as f32);
-                mb.actions.push(rng.below(F_MAX as u32) as f32);
-                mb.actions.push(rng.below(N_BATCH as u32) as f32);
-            }
-            mb.old_logp.push(-3.0);
-            mb.adv.push(rng.normal() as f32);
-            mb.ret.push(rng.normal() as f32);
-            for _ in 0..LOGITS_DIM {
-                mb.head_mask.push(1.0);
-            }
-            for t in 0..MAX_TASKS {
-                // alternate rows mask out the tail tasks, like real specs do
-                let active = t < 4 || r % 2 == 0;
-                mb.task_mask.push(if active { 1.0 } else { 0.0 });
-            }
-        }
-        mb
     }
 
     #[test]
@@ -193,12 +556,14 @@ mod tests {
         let mut rng = Pcg32::new(17);
         let params: Vec<f32> =
             (0..POLICY_PARAM_COUNT).map(|_| (rng.normal() * 0.03) as f32).collect();
-        let mb = synthetic_minibatch(&mut rng);
+        // deliberately a PARTIAL minibatch: rows must come from the data
+        let rows = TRAIN_BATCH - 9;
+        let mb = Minibatch::synthetic(&mut rng, rows);
         let mut ws = Workspace::new();
         let (logps, values) = eval_minibatch_native(&params, &mb, &mut ws);
-        assert_eq!(logps.len(), TRAIN_BATCH);
-        assert_eq!(values.len(), TRAIN_BATCH);
-        for r in 0..TRAIN_BATCH {
+        assert_eq!(logps.len(), rows);
+        assert_eq!(values.len(), rows);
+        for r in 0..rows {
             let state = &mb.states[r * STATE_DIM..(r + 1) * STATE_DIM];
             let (logits, value) = policy_fwd_native(&params, state);
             let head_mask: Vec<bool> = mb.head_mask
@@ -218,5 +583,72 @@ mod tests {
             assert!((logps[r] - want).abs() < 1e-4, "row {r}: {} vs {want}", logps[r]);
             assert!((values[r] - value).abs() < 1e-6, "row {r} value");
         }
+    }
+
+    #[test]
+    fn loss_head_matches_eval_logps() {
+        // the logps the loss head computes must agree with the standalone
+        // minibatch evaluator (one numeric source for log π)
+        let mut rng = Pcg32::new(29);
+        let params: Vec<f32> =
+            (0..POLICY_PARAM_COUNT).map(|_| (rng.normal() * 0.03) as f32).collect();
+        let mb = Minibatch::synthetic(&mut rng, 12);
+        let mut ws = Workspace::new();
+        let (want_logps, _) = eval_minibatch_native(&params, &mb, &mut ws);
+        let mut scratch = StepScratch::default();
+        let _ = ppo_loss_native(&params, &mb, &mut ws, &mut scratch);
+        assert_eq!(scratch.logps, want_logps);
+    }
+
+    #[test]
+    fn uniform_policy_entropy_and_kl() {
+        // zero params → uniform heads: entropy = Σ_active ln|head|, and with
+        // old_logp at its synthetic default (the uniform-policy logp),
+        // approx_kl = 0 and ratio = 1
+        let params = vec![0.0f32; POLICY_PARAM_COUNT];
+        let mut rng = Pcg32::new(5);
+        let rows = 6usize;
+        let mb = Minibatch::synthetic(&mut rng, rows);
+        let uni: f32 =
+            (MAX_VARIANTS as f32).ln() + (F_MAX as f32).ln() + (N_BATCH as f32).ln();
+        let mut ws = Workspace::new();
+        let mut scratch = StepScratch::default();
+        let m = ppo_loss_native(&params, &mb, &mut ws, &mut scratch);
+        assert!(m.approx_kl.abs() < 1e-4, "kl {}", m.approx_kl);
+        // rows alternate 8 and 4 active tasks → mean entropy in between
+        assert!(m.entropy > 4.0 * uni as f64 && m.entropy < 8.0 * uni as f64);
+        assert!(m.total_loss.is_finite());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_with_optimizer_state() {
+        let mut rng = Pcg32::new(71);
+        let params: Vec<f32> =
+            (0..POLICY_PARAM_COUNT).map(|_| (rng.normal() * 0.02) as f32).collect();
+        let mut learner = PpoLearner::native(params);
+        let mb = Minibatch::synthetic(&mut rng, TRAIN_BATCH);
+        for _ in 0..3 {
+            let m = learner.update(&mb).unwrap();
+            assert!(!m.diverged);
+        }
+        let path = std::env::temp_dir().join("opd_ckpt_adam_test.bin");
+        let path = path.to_str().unwrap().to_string();
+        learner.save_checkpoint(&path).unwrap();
+
+        let mut resumed = PpoLearner::native(vec![0.0; POLICY_PARAM_COUNT]);
+        resumed.load_checkpoint(&path).unwrap();
+        assert_eq!(resumed.params, learner.params);
+        assert_eq!(resumed.adam_m, learner.adam_m);
+        assert_eq!(resumed.adam_v, learner.adam_v);
+        assert_eq!(resumed.step, 3);
+
+        // both continue identically: the optimizer state survived
+        let a = learner.update(&mb).unwrap();
+        let b = resumed.update(&mb).unwrap();
+        assert_eq!(learner.params, resumed.params);
+        assert!((a.total_loss - b.total_loss).abs() < 1e-12);
+
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(format!("{path}.adam"));
     }
 }

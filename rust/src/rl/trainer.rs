@@ -13,7 +13,7 @@ use crate::nn::spec::*;
 use crate::nn::workspace::Workspace;
 use crate::rl::buffer::{RolloutBuffer, Transition};
 use crate::rl::ppo::{PpoLearner, UpdateMetrics};
-use crate::runtime::{write_params, OpdRuntime};
+use crate::runtime::OpdRuntime;
 use crate::sim::env::{build_masks, build_state, encode_action, Env};
 use crate::util::json::Json;
 use crate::util::prng::Pcg32;
@@ -53,11 +53,16 @@ pub struct EpisodeStats {
     pub v_loss: f64,
     pub entropy: f64,
     pub approx_kl: f64,
+    /// minibatch updates skipped this episode because the loss/gradient
+    /// came out non-finite (params and Adam state untouched)
+    pub diverged: usize,
 }
 
 #[derive(Clone, Debug, Default)]
 pub struct TrainingHistory {
     pub episodes: Vec<EpisodeStats>,
+    /// total diverged minibatch updates skipped over the whole run
+    pub diverged_updates: usize,
 }
 
 impl TrainingHistory {
@@ -74,6 +79,7 @@ impl TrainingHistory {
                         .set("v_loss", e.v_loss)
                         .set("entropy", e.entropy)
                         .set("approx_kl", e.approx_kl)
+                        .set("diverged", e.diverged)
                 })
                 .collect(),
         )
@@ -137,6 +143,19 @@ impl<F: FnMut(u64) -> Env> Trainer<F> {
     pub fn new(rt: Rc<OpdRuntime>, cfg: TrainerConfig, env_factory: F) -> Self {
         let learner = PpoLearner::new(rt.clone());
         let agent = OpdAgent::from_runtime(rt, cfg.seed);
+        Self::assemble(learner, agent, cfg, env_factory)
+    }
+
+    /// Trainer without a PJRT runtime: rollouts run through the native
+    /// policy mirror and every update goes through the native fused train
+    /// step — `opd train` end-to-end on a plain CPU (DESIGN.md §8).
+    pub fn native(init_params: Vec<f32>, cfg: TrainerConfig, env_factory: F) -> Self {
+        let learner = PpoLearner::native(init_params.clone());
+        let agent = OpdAgent::native(init_params, cfg.seed);
+        Self::assemble(learner, agent, cfg, env_factory)
+    }
+
+    fn assemble(learner: PpoLearner, agent: OpdAgent, cfg: TrainerConfig, env_factory: F) -> Self {
         Self {
             cfg,
             learner,
@@ -251,9 +270,20 @@ impl<F: FnMut(u64) -> Env> Trainer<F> {
             let (adv, ret) = buf.advantages(bootstrap, self.cfg.gamma, self.cfg.gae_lambda);
 
             let mut last = UpdateMetrics::default();
+            let mut diverged = 0usize;
             'epochs: for _ in 0..self.cfg.epochs {
                 for mb in buf.minibatches(&adv, &ret, self.cfg.minibatches, &mut self.rng) {
-                    last = self.learner.update(&mb)?;
+                    let m = self.learner.update(&mb)?;
+                    if m.diverged {
+                        // non-finite loss/gradient: the learner skipped the
+                        // update (params + Adam untouched) — count it and
+                        // move on to the next minibatch instead of aborting
+                        // the whole training run
+                        diverged += 1;
+                        self.history.diverged_updates += 1;
+                        continue;
+                    }
+                    last = m;
                     // KL early stop (standard PPO guard): once the policy has
                     // moved this far from the rollout policy, further epochs
                     // on the same data destabilize training
@@ -270,6 +300,7 @@ impl<F: FnMut(u64) -> Env> Trainer<F> {
                 v_loss: last.v_loss,
                 entropy: last.entropy,
                 approx_kl: last.approx_kl,
+                diverged,
             });
             crate::log_info!(
                 "episode {episode:3} {} reward {mean_reward:8.3} piL {:7.4} vL {:8.4} H {:6.3} KL {:7.4}",
@@ -279,13 +310,20 @@ impl<F: FnMut(u64) -> Env> Trainer<F> {
                 last.entropy,
                 last.approx_kl,
             );
+            if diverged > 0 {
+                crate::log_warn!(
+                    "episode {episode:3} skipped {diverged} diverged minibatch update(s)"
+                );
+            }
         }
         Ok(&self.history)
     }
 
-    /// Save the trained parameters as a checkpoint blob.
+    /// Save the trained parameters as a checkpoint blob plus the optimizer
+    /// sidecar (`<path>.adam`), so a `--resume` continues with warm Adam
+    /// moments instead of a cold restart.
     pub fn save_checkpoint(&self, path: &str) -> Result<()> {
-        write_params(std::path::Path::new(path), &self.learner.params)
+        self.learner.save_checkpoint(path)
     }
 }
 

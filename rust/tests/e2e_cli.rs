@@ -2,7 +2,7 @@
 //! (Args → command functions), including file outputs.
 
 use opd::cli::args::Args;
-use opd::cli::{cmd_compare, cmd_info, cmd_predict, cmd_simulate};
+use opd::cli::{cmd_compare, cmd_info, cmd_predict, cmd_simulate, cmd_train};
 use opd::util::json::Json;
 
 fn argv(s: &str) -> Args {
@@ -52,6 +52,43 @@ fn compare_writes_four_results() {
     let agents: Vec<&str> = arr.iter().map(|x| x.req_str("agent").unwrap()).collect();
     assert_eq!(agents, vec!["random", "greedy", "ipa", "opd"]);
     let _ = std::fs::remove_file(&out);
+}
+
+#[test]
+fn train_native_writes_checkpoint_and_history_then_resumes() {
+    let out = tmp("opd_e2e_train.bin");
+    let hist = tmp("opd_e2e_train_hist.json");
+    // the native fused train step: no PJRT artifacts anywhere in this test
+    let args = argv(&format!(
+        "train --pipeline P1 --workload steady-low --seed 7 --episodes 2 --cycle 100 \
+         --epochs 1 --minibatches 1 --native --out {out} --history {hist}"
+    ));
+    cmd_train(&args).unwrap();
+    let params = opd::runtime::read_params(
+        std::path::Path::new(&out),
+        opd::nn::spec::POLICY_PARAM_COUNT,
+    )
+    .unwrap();
+    assert!(params.iter().all(|p| p.is_finite()));
+    assert!(
+        std::path::Path::new(&format!("{out}.adam")).exists(),
+        "checkpoint must include the optimizer sidecar"
+    );
+    let j = Json::parse(&std::fs::read_to_string(&hist).unwrap()).unwrap();
+    let eps = j.as_arr().unwrap();
+    assert_eq!(eps.len(), 2);
+    assert!(eps[0].get("diverged").is_some(), "history records skipped updates");
+
+    // resume from the checkpoint: one more episode, warm optimizer
+    let args = argv(&format!(
+        "train --pipeline P1 --workload steady-low --seed 8 --episodes 1 --cycle 100 \
+         --epochs 1 --minibatches 1 --native --resume {out} --out {out}"
+    ));
+    cmd_train(&args).unwrap();
+
+    let _ = std::fs::remove_file(&out);
+    let _ = std::fs::remove_file(format!("{out}.adam"));
+    let _ = std::fs::remove_file(&hist);
 }
 
 #[test]
