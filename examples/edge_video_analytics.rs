@@ -7,7 +7,7 @@
 
 use std::rc::Rc;
 
-use opd::cli::{make_agent, make_predictor};
+use opd::cli::{make_agent, make_env_predictor};
 use opd::cluster::ClusterTopology;
 use opd::config::AgentKind;
 use opd::pipeline::{catalog, QosWeights};
@@ -45,7 +45,7 @@ fn main() {
             ClusterTopology::paper_testbed(),
             QosWeights::default(),
             &trace,
-            make_predictor(&rt),
+            make_env_predictor(&rt),
             10,
             3.0,
         );

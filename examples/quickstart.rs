@@ -22,12 +22,15 @@ fn main() {
     let pipeline = catalog::video_analytics();
     println!("pipeline: {} ({})", pipeline.spec.name, pipeline.description);
 
-    // 2. runtime (AOT HLO) with graceful native fallback
-    let (mut agent, predictor): (OpdAgent, Box<dyn LoadPredictor>) =
+    // 2. runtime (AOT HLO) with graceful native fallback. Env predictors
+    // are `Send` (DESIGN.md §9), so the LSTM runs through its native mirror
+    // on the artifact weights.
+    let (mut agent, predictor): (OpdAgent, Box<dyn LoadPredictor + Send>) =
         match OpdRuntime::load(None).map(Rc::new) {
             Ok(rt) => {
                 println!("PJRT runtime: {} (AOT HLO decision path)", rt.engine.platform());
-                (OpdAgent::from_runtime(rt.clone(), 42), Box::new(LstmPredictor::hlo(rt)))
+                let weights = rt.predictor_weights.clone();
+                (OpdAgent::from_runtime(rt, 42), Box::new(LstmPredictor::native(weights)))
             }
             Err(e) => {
                 println!("runtime unavailable ({e:#}); using native mirrors");

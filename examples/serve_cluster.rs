@@ -53,7 +53,7 @@ fn main() {
         QosWeights::default(),
         WorkloadKind::Fluctuating,
         42,
-        Box::new(LstmPredictor::hlo(rt.clone())),
+        Box::new(LstmPredictor::native(rt.predictor_weights.clone())),
         10,
         1200,
         3.0,

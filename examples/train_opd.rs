@@ -7,7 +7,7 @@
 
 use std::rc::Rc;
 
-use opd::cli::{make_agent, make_predictor};
+use opd::cli::{make_agent, make_env_predictor};
 use opd::cluster::ClusterTopology;
 use opd::config::AgentKind;
 use opd::pipeline::{catalog, QosWeights};
@@ -31,7 +31,15 @@ fn main() {
     };
 
     // --- train (Algorithm 2) -------------------------------------------
-    let tcfg = TrainerConfig { episodes, expert_freq: 4, seed: 42, ..Default::default() };
+    // reuse_envs off: this factory derives the workload KIND from the seed,
+    // so an in-place Env::reset(seed) could not reproduce it (DESIGN.md §9)
+    let tcfg = TrainerConfig {
+        episodes,
+        expert_freq: 4,
+        seed: 42,
+        reuse_envs: false,
+        ..Default::default()
+    };
     println!("training OPD: {episodes} episodes (expert every {}th), 400 s episodes", tcfg.expert_freq);
     let rt2 = rt.clone();
     let mut trainer = Trainer::new(rt.clone(), tcfg, move |seed| {
@@ -48,7 +56,7 @@ fn main() {
             QosWeights::default(),
             kind,
             seed,
-            make_predictor(&Some(rt2.clone())),
+            make_env_predictor(&Some(rt2.clone())),
             10,
             400,
             3.0,
@@ -73,7 +81,7 @@ fn main() {
             ClusterTopology::paper_testbed(),
             QosWeights::default(),
             &trace,
-            make_predictor(&Some(rt.clone())),
+            make_env_predictor(&Some(rt.clone())),
             10,
             3.0,
         );

@@ -14,7 +14,7 @@
 use std::rc::Rc;
 
 use opd::agents::{Agent, AutoscaleAgent, GreedyAgent, IpaAgent};
-use opd::cli::make_predictor;
+use opd::cli::make_env_predictor;
 use opd::cluster::ClusterTopology;
 use opd::pipeline::{catalog, QosWeights};
 use opd::rl::{Trainer, TrainerConfig};
@@ -28,7 +28,7 @@ use opd::workload::{Trace, WorkloadGen, WorkloadKind};
 
 const SEED: u64 = 42;
 
-fn env_with(trace: &Trace, predictor: Box<dyn LoadPredictor>) -> Env {
+fn env_with(trace: &Trace, predictor: Box<dyn LoadPredictor + Send>) -> Env {
     Env::from_trace(
         catalog::video_analytics().spec,
         ClusterTopology::paper_testbed(),
@@ -58,7 +58,7 @@ fn ablation_expert(rt: &Rc<OpdRuntime>) {
                 QosWeights::default(),
                 WorkloadKind::Fluctuating,
                 seed,
-                make_predictor(&Some(rt2.clone())),
+                make_env_predictor(&Some(rt2.clone())),
                 10,
                 400,
                 3.0,
@@ -93,7 +93,7 @@ fn ablation_predictor(rt: &Option<Rc<OpdRuntime>>) {
         WorkloadGen::new(WorkloadKind::Fluctuating, SEED).trace(601),
     );
     println!("{:<12} {:>12} {:>12} {:>12} {:>12}", "predictor", "greedy QoS", "greedy cost", "IPA QoS", "IPA cost");
-    let mk: Vec<(&str, Box<dyn Fn() -> Box<dyn LoadPredictor>>)> = vec![
+    let mk: Vec<(&str, Box<dyn Fn() -> Box<dyn LoadPredictor + Send>>)> = vec![
         ("last-value", Box::new(|| Box::new(LastValuePredictor))),
         ("moving-max", Box::new(|| Box::new(MovingMaxPredictor::default()))),
     ];
@@ -102,7 +102,7 @@ fn ablation_predictor(rt: &Option<Rc<OpdRuntime>>) {
         let rt = rt.clone();
         rows.push((
             "lstm",
-            Box::new(move || Box::new(LstmPredictor::hlo(rt.clone()))),
+            Box::new(move || Box::new(LstmPredictor::native(rt.predictor_weights.clone()))),
         ));
     }
     for (name, mkp) in rows {

@@ -3,7 +3,7 @@
 
 use std::rc::Rc;
 
-use opd::cli::{make_agent, make_predictor};
+use opd::cli::{make_agent, make_env_predictor};
 use opd::cluster::ClusterTopology;
 use opd::config::AgentKind;
 use opd::pipeline::{catalog, QosWeights};
@@ -25,7 +25,15 @@ pub fn ensure_checkpoint(rt: &Rc<OpdRuntime>) -> String {
         }
     }
     eprintln!("[bench] no checkpoint found — training OPD (40 episodes, fixed seed)...");
-    let tcfg = TrainerConfig { episodes: 120, expert_freq: 4, seed: BENCH_SEED, ..Default::default() };
+    // reuse_envs off: this factory derives the workload KIND from the seed,
+    // so an in-place Env::reset(seed) could not reproduce it (DESIGN.md §9)
+    let tcfg = TrainerConfig {
+        episodes: 120,
+        expert_freq: 4,
+        seed: BENCH_SEED,
+        reuse_envs: false,
+        ..Default::default()
+    };
     let rt2 = rt.clone();
     let mut trainer = Trainer::new(rt.clone(), tcfg, move |seed| {
         // train across all three load regimes (matches examples/train_opd.rs)
@@ -40,7 +48,7 @@ pub fn ensure_checkpoint(rt: &Rc<OpdRuntime>) -> String {
             QosWeights::default(),
             kind,
             seed,
-            make_predictor(&Some(rt2.clone())),
+            make_env_predictor(&Some(rt2.clone())),
             10,
             400,
             3.0,
@@ -73,7 +81,7 @@ pub fn compare_on_workload(
                 ClusterTopology::paper_testbed(),
                 QosWeights::default(),
                 &trace,
-                make_predictor(rt),
+                make_env_predictor(rt),
                 10,
                 3.0,
             );

@@ -14,7 +14,7 @@ use opd::runtime::OpdRuntime;
 use opd::util::stats;
 use opd::util::timer::Bench;
 use opd::workload::predictor::{
-    LastValuePredictor, LoadPredictor, LstmPredictor, MovingMaxPredictor,
+    HloLstmPredictor, LastValuePredictor, LoadPredictor, LstmPredictor, MovingMaxPredictor,
 };
 use opd::workload::{WorkloadGen, WorkloadKind};
 
@@ -68,7 +68,7 @@ fn main() {
     ];
     match &rt {
         Some(rt) => {
-            predictors.push(Box::new(LstmPredictor::hlo(rt.clone())));
+            predictors.push(Box::new(HloLstmPredictor::new(rt.clone())));
             println!("predictor weights: artifacts (offline SMAPE {:.2}%)\n",
                 rt.manifest.predictor_smape * 100.0);
         }
@@ -121,7 +121,7 @@ fn main() {
     let bench = Bench::default();
     let window: Vec<f64> = trace[..PRED_WINDOW].to_vec();
     if let Some(rt) = &rt {
-        let mut lstm = LstmPredictor::hlo(rt.clone());
+        let mut lstm = HloLstmPredictor::new(rt.clone());
         let r = bench.run("lstm (AOT HLO via PJRT)", || {
             std::hint::black_box(lstm.predict_max(&window));
         });

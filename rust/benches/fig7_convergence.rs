@@ -10,7 +10,7 @@
 
 use std::rc::Rc;
 
-use opd::cli::{make_predictor, native_init_params};
+use opd::cli::{make_env_predictor, native_init_params};
 use opd::cluster::ClusterTopology;
 use opd::pipeline::{catalog, QosWeights};
 use opd::rl::{Trainer, TrainerConfig};
@@ -41,7 +41,7 @@ fn main() {
             QosWeights::default(),
             WorkloadKind::Fluctuating,
             seed,
-            make_predictor(&rt2),
+            make_env_predictor(&rt2),
             10,
             400,
             3.0,

@@ -20,7 +20,7 @@ use opd::runtime::OpdRuntime;
 use opd::sim::{build_masks, build_state, Env};
 use opd::util::json::Json;
 use opd::util::timer::Bench;
-use opd::workload::predictor::{LoadPredictor, LstmPredictor, MovingMaxPredictor};
+use opd::workload::predictor::{HloLstmPredictor, LoadPredictor, LstmPredictor, MovingMaxPredictor};
 use opd::workload::WorkloadKind;
 
 fn mk_env() -> Env {
@@ -38,9 +38,14 @@ fn mk_env() -> Env {
 }
 
 fn main() {
-    println!("=== §Perf: decision-path microbenchmarks ===\n");
+    let quick = std::env::args().any(|a| a == "--quick");
+    println!(
+        "=== §Perf: decision-path microbenchmarks{} ===\n",
+        if quick { " [quick]" } else { "" }
+    );
     let rt = OpdRuntime::load(None).map(Rc::new).ok();
-    let bench = Bench::default();
+    // --quick (CI): shorter measurement budget per case, same sweep shape
+    let bench = if quick { Bench::quick() } else { Bench::default() };
 
     // ---- state assembly -------------------------------------------------
     let mut env = mk_env();
@@ -166,7 +171,7 @@ fn main() {
     // ---- predictor --------------------------------------------------------
     let window: Vec<f64> = (0..120).map(|i| 60.0 + (i as f64).sin() * 30.0).collect();
     if let Some(rt) = &rt {
-        let mut p = LstmPredictor::hlo(rt.clone());
+        let mut p = HloLstmPredictor::new(rt.clone());
         let r = bench.run("predictor AOT HLO (120-step LSTM)", || {
             std::hint::black_box(p.predict_max(&window));
         });

@@ -1,0 +1,131 @@
+//! §Perf — vectorized parallel rollout engine throughput (DESIGN.md §9):
+//! episodes/sec and steps/sec swept over K ∈ {1, 2, 4, 8} lanes ×
+//! {1, N_cores} env-stepping worker threads. K=1/threads=1 is the
+//! sequential baseline; one batched forward per scheduler step is what the
+//! lanes buy (one pass over the ~500 KiB parameter vector serves every
+//! in-flight episode). Asserts the engine is allocation-free after warm-up
+//! (`grow_events()` flat) and writes BENCH_rollout.json.
+//!
+//! Run: cargo bench --bench perf_rollout [-- --quick]
+//! (no artifacts needed — this is the pure-CPU path `opd train` uses)
+
+use std::time::Instant;
+
+use opd::cluster::ClusterTopology;
+use opd::nn::spec::POLICY_PARAM_COUNT;
+use opd::pipeline::{catalog, QosWeights};
+use opd::rl::{EpisodeSpec, RolloutEngine};
+use opd::sim::Env;
+use opd::util::json::Json;
+use opd::util::prng::Pcg32;
+use opd::workload::predictor::MovingMaxPredictor;
+use opd::workload::WorkloadKind;
+
+const CYCLE_SECS: usize = 300; // 30 decisions per episode at a 10 s interval
+
+fn factory(seed: u64) -> Env {
+    Env::from_workload(
+        catalog::by_name("P1").unwrap().spec,
+        ClusterTopology::paper_testbed(),
+        QosWeights::default(),
+        WorkloadKind::Fluctuating,
+        seed,
+        Box::new(MovingMaxPredictor::default()),
+        10,
+        CYCLE_SECS,
+        3.0,
+    )
+}
+
+fn wave(n: usize, base_seed: u64) -> Vec<EpisodeSpec> {
+    (1..=n)
+        .map(|episode| EpisodeSpec {
+            episode,
+            seed: base_seed + episode as u64,
+            // Algorithm 2's expert interleaving (every 4th episode), so the
+            // bench exercises the real trainer mix incl. batched scoring
+            expert: episode % 4 == 0,
+        })
+        .collect()
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    println!(
+        "=== §Perf: vectorized rollout engine (DESIGN.md §9){} ===\n",
+        if quick { " [quick]" } else { "" }
+    );
+    let mut rng = Pcg32::new(42);
+    let params: Vec<f32> =
+        (0..POLICY_PARAM_COUNT).map(|_| (rng.normal() * 0.02) as f32).collect();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let episodes = if quick { 8 } else { 16 };
+    let reps = if quick { 1 } else { 3 };
+    let mut thread_counts = vec![1usize];
+    if cores > 1 {
+        thread_counts.push(cores.min(8));
+    }
+
+    let mut results = Vec::new();
+    let mut by_key = std::collections::BTreeMap::new();
+    for &lanes in &[1usize, 2, 4, 8] {
+        for &threads in &thread_counts {
+            let mut eng = RolloutEngine::new(lanes, threads);
+            // warm-up wave: builds lane envs, grows every pool once
+            eng.collect_wave(&params, &wave(episodes, 1000), &mut factory);
+            let warm = eng.grow_events();
+            let mut best_secs = f64::INFINITY;
+            let mut steps_total = 0usize;
+            for rep in 0..reps {
+                let w = wave(episodes, 2000 + 71 * rep as u64);
+                let t0 = Instant::now();
+                eng.collect_wave(&params, &w, &mut factory);
+                let secs = t0.elapsed().as_secs_f64();
+                best_secs = best_secs.min(secs);
+                steps_total = eng.results().iter().map(|r| r.steps).sum();
+            }
+            assert_eq!(
+                eng.grow_events(),
+                warm,
+                "K={lanes} threads={threads}: warm engine must not allocate"
+            );
+            let eps_per_sec = episodes as f64 / best_secs;
+            let steps_per_sec = steps_total as f64 / best_secs;
+            println!(
+                "K={lanes}  threads={threads:2}   {:8.2} episodes/s   {:9.1} steps/s   ({:.3} s / {episodes} episodes)",
+                eps_per_sec, steps_per_sec, best_secs
+            );
+            by_key.insert((lanes, threads), eps_per_sec);
+            results.push(
+                Json::obj()
+                    .set("lanes", lanes)
+                    .set("threads", threads)
+                    .set("secs", best_secs)
+                    .set("episodes", episodes)
+                    .set("episodes_per_sec", eps_per_sec)
+                    .set("steps_per_sec", steps_per_sec)
+                    .set("grow_events", warm as i64),
+            );
+        }
+        println!();
+    }
+
+    // the acceptance ratio: K=8 vs K=1 at the widest thread count
+    let t_best = *thread_counts.last().unwrap();
+    let speedup = by_key[&(8, t_best)] / by_key[&(1, 1)];
+    println!("→ K=8 (threads={t_best}) vs sequential K=1: {speedup:.2}× episodes/sec");
+    if cores >= 4 && speedup < 2.0 {
+        println!("  (below the 2× target — see BENCH_rollout.json for the full sweep)");
+    }
+
+    let out = Json::obj()
+        .set("bench", "perf_rollout")
+        .set("cores", cores as i64)
+        .set("quick", quick)
+        .set("cycle_secs", CYCLE_SECS)
+        .set("steps_per_episode", CYCLE_SECS / 10)
+        .set("speedup_k8_vs_k1", speedup)
+        .set("results", Json::Arr(results));
+    std::fs::write("BENCH_rollout.json", out.to_pretty()).expect("write BENCH_rollout.json");
+    println!("wrote BENCH_rollout.json");
+}

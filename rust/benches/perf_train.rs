@@ -17,7 +17,11 @@ use opd::util::prng::Pcg32;
 use opd::util::timer::Bench;
 
 fn main() {
-    println!("=== §Perf: native fused PPO train step (DESIGN.md §8) ===\n");
+    let quick = std::env::args().any(|a| a == "--quick");
+    println!(
+        "=== §Perf: native fused PPO train step (DESIGN.md §8){} ===\n",
+        if quick { " [quick]" } else { "" }
+    );
     let mut rng = Pcg32::new(42);
     let params: Vec<f32> =
         (0..POLICY_PARAM_COUNT).map(|_| (rng.normal() * 0.03) as f32).collect();
@@ -27,7 +31,8 @@ fn main() {
         shard_counts.push(cores);
     }
     let row_counts = [16usize, 32, TRAIN_BATCH];
-    let bench = Bench::default();
+    // --quick (CI): shorter measurement budget per case, same sweep shape
+    let bench = if quick { Bench::quick() } else { Bench::default() };
     let mut results = Vec::new();
 
     for &rows in &row_counts {

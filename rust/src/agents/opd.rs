@@ -13,10 +13,9 @@
 use std::rc::Rc;
 
 use crate::agents::Agent;
-use crate::nn::math::{argmax_masked_scratch, sample_masked_scratch};
 use crate::nn::policy::policy_fwd_native;
 use crate::nn::spec::*;
-use crate::nn::workspace::{params_fingerprint, Workspace};
+use crate::nn::workspace::{params_fingerprint, select_heads, Workspace};
 use crate::pipeline::TaskConfig;
 use crate::runtime::OpdRuntime;
 use crate::sim::env::{build_masks_into, build_state_into, decode_action, Observation};
@@ -42,38 +41,6 @@ enum Backend {
     Hlo(Rc<OpdRuntime>, std::cell::OnceCell<Option<xla::PjRtBuffer>>),
     /// pure-rust mirror (tests / no-artifacts fallback)
     Native,
-}
-
-/// Select per-task head indices from `logits` under masks, writing the
-/// ACT_DIM indices into `idx`; returns the total log-prob. Shared by the
-/// sequential decide path and the batched multi-tenant path — both must
-/// consume the RNG identically so batching does not change rollouts.
-fn select_heads(
-    logits: &[f32],
-    head_mask: &[bool],
-    task_mask: &[bool],
-    greedy: bool,
-    rng: &mut Pcg32,
-    idx: &mut [usize],
-) -> f32 {
-    debug_assert_eq!(idx.len(), ACT_DIM);
-    let mut scratch = [0.0f32; MAX_HEAD_DIM];
-    let mut logp = 0.0f32;
-    for (t, k, off, d) in head_layout() {
-        if !task_mask[t] {
-            continue;
-        }
-        let lg = &logits[off..off + d];
-        let mk = &head_mask[off..off + d];
-        let (i, lp) = if greedy {
-            argmax_masked_scratch(lg, mk, &mut scratch[..d])
-        } else {
-            sample_masked_scratch(lg, mk, rng, &mut scratch[..d])
-        };
-        idx[t * 3 + k] = i;
-        logp += lp;
-    }
-    logp
 }
 
 pub struct OpdAgent {

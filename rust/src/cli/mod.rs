@@ -28,7 +28,7 @@ use crate::sim::{run_cycle, CycleResult, Env};
 use crate::util::json::Json;
 use crate::util::stats;
 use crate::workload::predictor::{
-    LastValuePredictor, LoadPredictor, LstmPredictor, MovingMaxPredictor,
+    HloLstmPredictor, LastValuePredictor, LoadPredictor, LstmPredictor, MovingMaxPredictor,
 };
 use crate::workload::{Trace, WorkloadGen, WorkloadKind};
 use args::Args;
@@ -44,12 +44,15 @@ COMMANDS
   compare    --pipeline P --workload W [--seed N] [--cycle S] [--params ckpt.bin]
   train      [--episodes N] [--expert-freq F] [--epochs E] [--minibatches M]
              [--cycle S] [--pipeline P] [--workload W] [--threads T]
-             [--resume ckpt.bin] [--native] [--out ckpt.bin]
-             [--history hist.json]
+             [--envs K] [--sync-every W] [--resume ckpt.bin] [--native]
+             [--out ckpt.bin] [--history hist.json]
              uses the AOT train step when artifacts exist, else the native
              fused train step (pure CPU — no PJRT required); --threads
-             shards the backward pass, --resume continues a checkpoint
-             (optimizer state from ckpt.bin.adam)
+             shards the backward pass AND the rollout env stepping,
+             --envs K collects K episodes concurrently through the
+             vectorized rollout engine (--sync-every, default K, sets how
+             many episodes share one parameter snapshot), --resume
+             continues a checkpoint (optimizer state from ckpt.bin.adam)
   predict    [--workload W] [--secs N] [--seed N] [--native]
   serve      --addr HOST:PORT [--pipeline P] [--workload W] [--agent A]
              [--name NAME] [--cycle S] [--interval S] [--realtime] [--empty]
@@ -112,10 +115,23 @@ fn load_runtime(cfg: &ExperimentConfig, native: bool) -> Option<Rc<OpdRuntime>> 
     }
 }
 
-/// Predictor choice: LSTM when we have weights, else moving-max baseline.
+/// Predictor choice for leader-thread tenants: the HLO LSTM when a runtime
+/// exists, else the moving-max baseline.
 pub fn make_predictor(rt: &Option<Rc<OpdRuntime>>) -> Box<dyn LoadPredictor> {
     match rt {
-        Some(rt) => Box::new(LstmPredictor::hlo(rt.clone())),
+        Some(rt) => Box::new(HloLstmPredictor::new(rt.clone())),
+        None => Box::new(MovingMaxPredictor::default()),
+    }
+}
+
+/// Predictor choice for `Env` (single-pipeline sims, training rollouts):
+/// `Send`, so the vectorized rollout engine can shard environments across
+/// worker threads. Uses the native LSTM mirror on the artifact weights —
+/// for the 2.7k-parameter predictor the host mirror also skips a per-tick
+/// PJRT round trip, so nothing is lost over the HLO path.
+pub fn make_env_predictor(rt: &Option<Rc<OpdRuntime>>) -> Box<dyn LoadPredictor + Send> {
+    match rt {
+        Some(rt) => Box::new(LstmPredictor::native(rt.predictor_weights.clone())),
         None => Box::new(MovingMaxPredictor::default()),
     }
 }
@@ -167,7 +183,7 @@ pub fn make_env(cfg: &ExperimentConfig, rt: &Option<Rc<OpdRuntime>>) -> Result<E
         cfg.weights,
         cfg.workload,
         cfg.seed,
-        make_predictor(rt),
+        make_env_predictor(rt),
         cfg.adapt_interval_secs,
         cfg.cycle_secs,
         cfg.startup_secs,
@@ -263,7 +279,7 @@ pub fn cmd_compare(args: &Args) -> Result<()> {
             cfg.topology(),
             cfg.weights,
             &trace,
-            make_predictor(&rt),
+            make_env_predictor(&rt),
             cfg.adapt_interval_secs,
             cfg.startup_secs,
         );
@@ -290,6 +306,11 @@ pub fn cmd_train(args: &Args) -> Result<()> {
     let epochs = args.usize_flag("epochs", 4).map_err(|e| anyhow!(e))?;
     let minibatches = args.usize_flag("minibatches", 2).map_err(|e| anyhow!(e))?;
     let threads = args.usize_flag("threads", 0).map_err(|e| anyhow!(e))?; // 0 = auto
+    // K concurrent rollout lanes; the sync width defaults to K so asking
+    // for 8 envs actually overlaps 8 episodes per parameter snapshot
+    // (sync-every > 1 changes the update schedule — see DESIGN.md §9)
+    let envs = args.usize_flag("envs", 1).map_err(|e| anyhow!(e))?.max(1);
+    let sync_every = args.usize_flag("sync-every", envs).map_err(|e| anyhow!(e))?.max(1);
     let native = args.switch("native");
     let resume = args.str_flag("resume");
     let out = args.str_flag("out").unwrap_or_else(|| "opd_checkpoint.bin".into());
@@ -304,6 +325,9 @@ pub fn cmd_train(args: &Args) -> Result<()> {
         epochs,
         minibatches,
         seed: cfg.seed,
+        envs,
+        rollout_threads: threads,
+        sync_every,
         ..Default::default()
     };
     let cfg2 = cfg.clone();
@@ -365,7 +389,7 @@ pub fn cmd_predict(args: &Args) -> Result<()> {
         Box::new(MovingMaxPredictor::default()),
     ];
     match &rt {
-        Some(rt) => predictors.push(Box::new(LstmPredictor::hlo(rt.clone()))),
+        Some(rt) => predictors.push(Box::new(HloLstmPredictor::new(rt.clone()))),
         None => {
             let dir = crate::runtime::resolve_dir(cfg.artifacts_dir.as_deref());
             if let Ok(w) = read_params(
@@ -423,6 +447,14 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     cp.metrics.describe(
         "opd_batched_forwards_total",
         "batched policy forwards executed by the leader tick",
+    );
+    cp.metrics.describe(
+        "opd_batched_predictions_total",
+        "load predictions served by a batched LSTM pass (DESIGN.md \u{a7}9)",
+    );
+    cp.metrics.describe(
+        "opd_batched_predictor_passes_total",
+        "batched LSTM predictor passes executed by the leader tick",
     );
     cp.metrics.describe("opd_pipelines", "pipelines deployed on the shared cluster");
     cp.metrics.describe("opd_cluster_used_cores", "cores allocated across all pipelines");

@@ -41,6 +41,14 @@ impl ClusterApi {
         self.store
     }
 
+    /// Tear down the single deployment, releasing every allocated core —
+    /// equivalent to a freshly constructed `ClusterApi` on the same
+    /// topology (the in-place `Env::reset` path; generation counters and
+    /// container state live on the deployment and go with it).
+    pub fn reset(&mut self) {
+        self.store.delete(DEFAULT_DEPLOYMENT);
+    }
+
     pub fn current_config(&self) -> &[TaskConfig] {
         self.store.get(DEFAULT_DEPLOYMENT).map(|d| d.config.as_slice()).unwrap_or(&[])
     }
@@ -126,6 +134,21 @@ mod tests {
         assert!(spec.total_cores(&out.applied) <= api.topo.capacity() + 1e-9);
         // every stage keeps at least one replica
         assert!(out.applied.iter().all(|c| c.replicas >= 1));
+    }
+
+    #[test]
+    fn reset_releases_everything_and_restarts_generations() {
+        let (spec, mut api) = setup();
+        let out = api.apply(&spec, &spec.default_config(), 0.0).unwrap();
+        assert_eq!(out.generation, 1);
+        assert!(api.topo.used() > 0.0);
+        api.reset();
+        assert_eq!(api.topo.used(), 0.0, "reset must free every core");
+        assert!(api.current_config().is_empty());
+        assert!(api.containers().is_empty());
+        // behaves like a fresh api: first apply is generation 1 again
+        let out2 = api.apply(&spec, &spec.default_config(), 0.0).unwrap();
+        assert_eq!(out2.generation, 1);
     }
 
     #[test]

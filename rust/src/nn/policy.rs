@@ -198,6 +198,110 @@ pub fn predictor_fwd_native(params: &[f32], window: &[f32]) -> f32 {
     predictor_fwd_scratch(params, window, &mut scratch)
 }
 
+/// Reusable buffers for the *batched* LSTM forward: per-lane h/c state, the
+/// (batch, 4H) gate matrix and the prediction output row. Same
+/// `grow_events()` contract as `nn::workspace::Workspace` — flat after
+/// warm-up at a fixed batch size.
+#[derive(Default)]
+pub struct LstmBatchScratch {
+    h: Vec<f32>,
+    c: Vec<f32>,
+    gates: Vec<f32>,
+    out: Vec<f32>,
+    grow_events: u64,
+}
+
+impl LstmBatchScratch {
+    pub fn grow_events(&self) -> u64 {
+        self.grow_events
+    }
+
+    fn reset(&mut self, batch: usize, hd: usize) {
+        use crate::nn::workspace::ensure;
+        let g = &mut self.grow_events;
+        ensure(&mut self.h, batch * hd, g);
+        ensure(&mut self.c, batch * hd, g);
+        ensure(&mut self.gates, batch * 4 * hd, g);
+        ensure(&mut self.out, batch, g);
+    }
+}
+
+/// Batched native LSTM forward: `windows` is (batch, PRED_WINDOW) row-major
+/// raw req/s (left-padded like [`predictor_fwd_scratch`]'s input), one row
+/// per tenant sharing the SAME weight vector. Each timestep walks the
+/// recurrent weight matrix `wh` ONCE with every lane consuming each row
+/// while it is hot in L1 — the §7 single-pass discipline applied to the
+/// predictor, so a leader tick's predictor cost stops scaling with a full
+/// weight sweep per tenant. Per-lane accumulation order (gate init, `wh`
+/// rows ascending, cell update) is identical to the single-window path, so
+/// each row of the result is bitwise equal to `predictor_fwd_scratch` on
+/// that window alone.
+pub fn predictor_fwd_batch_scratch<'a>(
+    params: &[f32],
+    windows: &[f32],
+    batch: usize,
+    s: &'a mut LstmBatchScratch,
+) -> &'a [f32] {
+    assert_eq!(params.len(), PREDICTOR_PARAM_COUNT);
+    assert!(batch > 0, "predictor_fwd_batch: empty batch");
+    assert_eq!(windows.len(), batch * PRED_WINDOW, "bad window matrix shape");
+    let l = &PREDICTOR_LAYOUT;
+    let hd = LSTM_HIDDEN;
+    let wx = &params[l.wx..l.wx + 4 * hd];
+    let wh = &params[l.wh..l.wh + hd * 4 * hd];
+    let bias = &params[l.b..l.b + 4 * hd];
+
+    s.reset(batch, hd);
+    let LstmBatchScratch { h, c, gates, out, .. } = s;
+    for t in 0..PRED_WINDOW {
+        // gates[b] = x_b*wx + b (per lane, identical to the single path)
+        for b in 0..batch {
+            let x = windows[b * PRED_WINDOW + t] / LOAD_SCALE as f32;
+            let grow = &mut gates[b * 4 * hd..(b + 1) * 4 * hd];
+            for (g, (wv, bv)) in grow.iter_mut().zip(wx.iter().zip(bias)) {
+                *g = x * wv + bv;
+            }
+        }
+        // gates += h @ wh: one pass over wh rows, all lanes per row
+        for row in 0..hd {
+            let wrow = &wh[row * 4 * hd..(row + 1) * 4 * hd];
+            for b in 0..batch {
+                let hv = h[b * hd + row];
+                if hv == 0.0 {
+                    continue;
+                }
+                let grow = &mut gates[b * 4 * hd..(b + 1) * 4 * hd];
+                for (g, wv) in grow.iter_mut().zip(wrow) {
+                    *g += hv * wv;
+                }
+            }
+        }
+        for b in 0..batch {
+            let grow = &gates[b * 4 * hd..(b + 1) * 4 * hd];
+            let hrow = &mut h[b * hd..(b + 1) * hd];
+            let crow = &mut c[b * hd..(b + 1) * hd];
+            for j in 0..hd {
+                let i_g = sigmoid(grow[j]);
+                let f_g = sigmoid(grow[hd + j]);
+                let g_g = grow[2 * hd + j].tanh();
+                let o_g = sigmoid(grow[3 * hd + j]);
+                crow[j] = f_g * crow[j] + i_g * g_g;
+                hrow[j] = o_g * crow[j].tanh();
+            }
+        }
+    }
+    let dw = &params[l.dense_w..l.dense_w + hd];
+    let db = params[l.dense_b];
+    for b in 0..batch {
+        let mut acc = db;
+        for (hv, wv) in h[b * hd..(b + 1) * hd].iter().zip(dw) {
+            acc += hv * wv;
+        }
+        out[b] = acc * LOAD_SCALE as f32;
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -272,5 +376,44 @@ mod tests {
     #[should_panic]
     fn wrong_param_length_panics() {
         policy_fwd_native(&[0.0; 10], &[0.0; STATE_DIM]);
+    }
+
+    #[test]
+    fn batched_predictor_matches_single_bitwise() {
+        let params: Vec<f32> =
+            (0..PREDICTOR_PARAM_COUNT).map(|i| ((i % 17) as f32 - 8.0) * 0.013).collect();
+        for batch in [1usize, 2, 5] {
+            let mut windows = Vec::with_capacity(batch * PRED_WINDOW);
+            for b in 0..batch {
+                for i in 0..PRED_WINDOW {
+                    windows.push(40.0 + (b as f32 + 1.0) * (i as f32 * 0.11).sin() * 15.0);
+                }
+            }
+            let mut s = LstmBatchScratch::default();
+            let preds = predictor_fwd_batch_scratch(&params, &windows, batch, &mut s).to_vec();
+            for b in 0..batch {
+                let want = predictor_fwd_native(
+                    &params,
+                    &windows[b * PRED_WINDOW..(b + 1) * PRED_WINDOW],
+                );
+                assert_eq!(preds[b].to_bits(), want.to_bits(), "batch {batch} lane {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_predictor_scratch_stops_allocating_after_warmup() {
+        let params = vec![0.02f32; PREDICTOR_PARAM_COUNT];
+        let windows = vec![55.0f32; 3 * PRED_WINDOW];
+        let mut s = LstmBatchScratch::default();
+        let _ = predictor_fwd_batch_scratch(&params, &windows, 3, &mut s);
+        let warm = s.grow_events();
+        for _ in 0..5 {
+            let _ = predictor_fwd_batch_scratch(&params, &windows, 3, &mut s);
+        }
+        assert_eq!(s.grow_events(), warm, "steady-state batched predictor must not allocate");
+        // a smaller group fits in the warm buffers
+        let _ = predictor_fwd_batch_scratch(&params, &windows[..PRED_WINDOW], 1, &mut s);
+        assert_eq!(s.grow_events(), warm);
     }
 }

@@ -17,9 +17,13 @@
 //! identical to the single-state path, so batched and sequential results
 //! agree bitwise (pinned by `rust/tests/batch_hotpath.rs`).
 
-use crate::nn::math::{dense_batch_into, dense_bwd_batch_into, relu_bwd_into};
+use crate::nn::math::{
+    argmax_masked_scratch, dense_batch_into, dense_bwd_batch_into, relu_bwd_into,
+    sample_masked_scratch,
+};
 use crate::nn::policy::POLICY_LAYOUT;
 use crate::nn::spec::*;
+use crate::util::prng::Pcg32;
 
 /// Stable 64-bit fingerprint of a flat parameter vector (FNV-1a over the
 /// f32 bit patterns). Used to group agents that share one parameter vector
@@ -33,12 +37,51 @@ pub fn params_fingerprint(params: &[f32]) -> u64 {
     h ^ params.len() as u64
 }
 
-fn ensure(buf: &mut Vec<f32>, len: usize, grow_events: &mut u64) {
+/// Grow-counting buffer (re)size: bump `grow_events` when `buf` must
+/// reallocate, then clear + zero-fill to `len`. Shared by every scratch
+/// arena that advertises the `grow_events()` alloc-free proof hook (this
+/// workspace, `nn::policy::LstmBatchScratch`), so the counting policy
+/// cannot silently diverge between them.
+pub(crate) fn ensure(buf: &mut Vec<f32>, len: usize, grow_events: &mut u64) {
     if buf.capacity() < len {
         *grow_events += 1;
     }
     buf.clear();
     buf.resize(len, 0.0);
+}
+
+/// Select per-task head indices from one LOGITS_DIM row under masks,
+/// writing the ACT_DIM indices into `idx`; returns the total log-prob.
+/// Allocation-free (stack scratch sized by MAX_HEAD_DIM). Shared by the
+/// sequential decide path, the batched multi-tenant path and the rollout
+/// engine — all consumers must draw from the RNG identically so batching
+/// never changes a trajectory.
+pub fn select_heads(
+    logits: &[f32],
+    head_mask: &[bool],
+    task_mask: &[bool],
+    greedy: bool,
+    rng: &mut Pcg32,
+    idx: &mut [usize],
+) -> f32 {
+    debug_assert_eq!(idx.len(), ACT_DIM);
+    let mut scratch = [0.0f32; MAX_HEAD_DIM];
+    let mut logp = 0.0f32;
+    for (t, k, off, d) in head_layout() {
+        if !task_mask[t] {
+            continue;
+        }
+        let lg = &logits[off..off + d];
+        let mk = &head_mask[off..off + d];
+        let (i, lp) = if greedy {
+            argmax_masked_scratch(lg, mk, &mut scratch[..d])
+        } else {
+            sample_masked_scratch(lg, mk, rng, &mut scratch[..d])
+        };
+        idx[t * 3 + k] = i;
+        logp += lp;
+    }
+    logp
 }
 
 /// Rows per backward shard (DESIGN.md §8). The chunk structure is fixed by
@@ -121,6 +164,34 @@ impl Workspace {
     /// Values of the most recent forward, one per batch row.
     pub fn values(&self) -> &[f32] {
         &self.values
+    }
+
+    /// Logit row `i` of the most recent batched forward — the ragged-batch
+    /// consumer API: callers that stacked a partially-filled lane set read
+    /// their rows back by position.
+    pub fn logits_row(&self, i: usize) -> &[f32] {
+        &self.logits[i * LOGITS_DIM..(i + 1) * LOGITS_DIM]
+    }
+
+    /// Value of batch row `i` of the most recent batched forward.
+    pub fn value_at(&self, i: usize) -> f32 {
+        self.values[i]
+    }
+
+    /// Sample the factored action heads of batch row `i` of the most recent
+    /// forward under the given masks (one RNG draw per active head, exactly
+    /// like the sequential decide path), writing ACT_DIM indices into `idx`;
+    /// returns the total log-prob. Allocation-free.
+    pub fn sample_row(
+        &self,
+        i: usize,
+        head_mask: &[bool],
+        task_mask: &[bool],
+        greedy: bool,
+        rng: &mut Pcg32,
+        idx: &mut [usize],
+    ) -> f32 {
+        select_heads(self.logits_row(i), head_mask, task_mask, greedy, rng, idx)
     }
 
     /// Install externally computed logits (the HLO path) so the sampling

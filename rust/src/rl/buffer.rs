@@ -7,7 +7,7 @@ use crate::rl::gae::gae;
 use crate::util::prng::Pcg32;
 
 /// One decision's worth of training data.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct Transition {
     pub state: Vec<f32>,       // STATE_DIM
     pub action_idx: Vec<usize>, // ACT_DIM
@@ -95,6 +95,13 @@ impl Minibatch {
 #[derive(Default)]
 pub struct RolloutBuffer {
     pub transitions: Vec<Transition>,
+    /// retired Transition shells kept for reuse (`recycle` / `push_slot`):
+    /// their inner Vecs keep their capacity, so a warm rollout lane fills
+    /// episodes without allocating (DESIGN.md §9)
+    spare: Vec<Transition>,
+    /// number of Transition shells that had to be freshly allocated — flat
+    /// once the lane has seen its steady-state episode length
+    grow_events: u64,
 }
 
 impl RolloutBuffer {
@@ -106,6 +113,31 @@ impl RolloutBuffer {
         debug_assert_eq!(t.state.len(), STATE_DIM);
         debug_assert_eq!(t.action_idx.len(), ACT_DIM);
         self.transitions.push(t);
+    }
+
+    /// Append a transition slot reusing a retired shell when one exists
+    /// (the caller overwrites every field; the inner Vec capacities are the
+    /// point of the reuse). New-shell allocations bump `grow_events`.
+    pub fn push_slot(&mut self) -> &mut Transition {
+        let t = self.spare.pop().unwrap_or_else(|| {
+            self.grow_events += 1;
+            Transition::default()
+        });
+        self.transitions.push(t);
+        self.transitions.last_mut().expect("just pushed")
+    }
+
+    /// Empty the buffer, retiring the transition shells into the spare pool
+    /// instead of dropping their allocations.
+    pub fn recycle(&mut self) {
+        self.spare.append(&mut self.transitions);
+    }
+
+    /// How many transition shells this buffer had to allocate (see
+    /// [`RolloutBuffer::push_slot`]); the rollout engine's alloc-free proof
+    /// hook sums this over its lanes.
+    pub fn grow_events(&self) -> u64 {
+        self.grow_events
     }
 
     pub fn len(&self) -> usize {
@@ -246,6 +278,29 @@ mod tests {
         b.push(fake_transition(0));
         b.clear();
         assert!(b.is_empty());
+    }
+
+    #[test]
+    fn recycle_reuses_transition_shells() {
+        let mut b = RolloutBuffer::new();
+        for _ in 0..5 {
+            let t = b.push_slot();
+            t.state.clear();
+            t.state.resize(STATE_DIM, 0.5);
+            t.action_idx.clear();
+            t.action_idx.resize(ACT_DIM, 0);
+        }
+        assert_eq!(b.len(), 5);
+        assert_eq!(b.grow_events(), 5, "cold buffer allocates every shell");
+        b.recycle();
+        assert!(b.is_empty());
+        for _ in 0..5 {
+            let _ = b.push_slot();
+        }
+        assert_eq!(b.grow_events(), 5, "warm refill must reuse retired shells");
+        // one past the warm depth allocates exactly one more
+        let _ = b.push_slot();
+        assert_eq!(b.grow_events(), 6);
     }
 
     #[test]

@@ -1,11 +1,12 @@
 //! Reinforcement-learning machinery for the OPD algorithm: GAE, rollout
 //! buffer / replay memory, the PPO learner (AOT train step with a native
-//! fused fallback — DESIGN.md §8), and the Algorithm-2 trainer with expert
-//! guidance.
+//! fused fallback — DESIGN.md §8), the vectorized parallel rollout engine
+//! (DESIGN.md §9), and the Algorithm-2 trainer with expert guidance.
 
 pub mod buffer;
 pub mod gae;
 pub mod ppo;
+pub mod rollout;
 pub mod trainer;
 
 pub use buffer::{Minibatch, RolloutBuffer, Transition};
@@ -14,4 +15,5 @@ pub use ppo::{
     eval_minibatch_native, ppo_loss_grad_native, ppo_loss_native, PpoLearner, StepScratch,
     UpdateMetrics,
 };
+pub use rollout::{EpisodeResult, EpisodeSpec, RolloutEngine};
 pub use trainer::{logp_of_action, EpisodeStats, Trainer, TrainerConfig, TrainingHistory};

@@ -1,0 +1,573 @@
+//! Vectorized parallel rollout engine (DESIGN.md §9).
+//!
+//! `Trainer::rollout` used to run episodes strictly sequentially: one fresh
+//! `Env` per episode and one full ~500 KiB parameter sweep per single-state
+//! `policy_fwd` call. This engine collects K episodes concurrently as
+//! **lanes**: each scheduler iteration advances every in-flight lane by one
+//! adaptation step, gathers the lanes that need a policy evaluation and
+//! serves them with ONE `Workspace::policy_fwd_batch` call (one pass over
+//! the parameter vector for the whole lane set — the §7 L1-reuse
+//! discipline), then samples each lane's action from its own per-episode
+//! PCG stream. Environment stepping — the simulator, the predictor, the
+//! expert's IPA solve — is sharded across `std::thread` workers; the
+//! forward and the sampling stay on the leader. Lanes refill from the
+//! episode queue as they finish, so expert episodes (scored at episode
+//! end, already batched) interleave with policy episodes exactly like the
+//! sequential Algorithm 2 schedule.
+//!
+//! **Determinism contract** (extends §7/§8, pinned by
+//! `rust/tests/rollout_vectorized.rs`): for fixed seeds the collected
+//! trajectories are bitwise identical for ANY lane count and ANY worker
+//! thread count, because
+//!  * every episode's env is seeded `cfg.seed + episode` exactly as before
+//!    (`Env::reset(seed)` ≡ fresh construction),
+//!  * every episode samples from its own action stream
+//!    `Pcg32::stream(episode_seed, ACTION_STREAM)` — no draw order is
+//!    shared across episodes,
+//!  * `policy_fwd_batch` rows are bitwise independent of the other rows in
+//!    the batch (per-element accumulation chains fixed — §7), so which
+//!    lanes happen to share a forward is unobservable,
+//!  * the expert's switching hysteresis is reset per episode, and
+//!  * results land in fixed per-episode buffer slots (episode order), not
+//!    in completion order.
+
+use crate::agents::{Agent, IpaAgent};
+use crate::nn::spec::*;
+use crate::nn::workspace::Workspace;
+use crate::pipeline::TaskConfig;
+use crate::rl::buffer::RolloutBuffer;
+use crate::rl::trainer::logp_of_action;
+use crate::sim::env::{
+    build_masks_into, build_state_into, decode_action_into, encode_action_into, Env,
+};
+use crate::util::prng::Pcg32;
+
+/// Sub-stream tag of the per-episode action-sampling RNG.
+const ACTION_STREAM: u64 = 0x524f4c4c; // "ROLL"
+
+/// One entry of the episode queue a wave collects.
+#[derive(Clone, Copy, Debug)]
+pub struct EpisodeSpec {
+    /// 1-based episode number (drives logging and the expert schedule)
+    pub episode: usize,
+    /// environment + action-stream seed (`cfg.seed + episode`)
+    pub seed: u64,
+    /// expert-driven episode (Algorithm 2's every-f-th schedule)
+    pub expert: bool,
+}
+
+/// Per-episode metadata of a collected wave; the transitions live in the
+/// engine's per-slot [`RolloutBuffer`]s ([`RolloutEngine::buffer`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EpisodeResult {
+    pub episode: usize,
+    pub expert: bool,
+    pub mean_reward: f64,
+    /// V(s_T) bootstrap for GAE (same numeric source as the trajectory)
+    pub bootstrap: f64,
+    pub steps: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    /// no episode assigned (queue exhausted)
+    Idle,
+    /// episode assigned, needs its first observation
+    NeedObserve,
+    /// state/masks staged, waiting for the leader's batched forward
+    NeedForward,
+    /// action staged, worker steps the env next
+    ReadyToStep,
+    /// env done, final state staged, waiting for leader finalization
+    Finished,
+}
+
+/// One in-flight episode: env + buffers + the per-episode RNG stream.
+struct Lane {
+    env: Option<Env>,
+    buf: RolloutBuffer,
+    rng: Pcg32,
+    expert_agent: IpaAgent,
+    phase: Phase,
+    episode: usize,
+    /// index into the wave (fixed result/buffer slot)
+    slot: usize,
+    expert: bool,
+    /// staged observation (state row + masks) and staged decision
+    state: Vec<f32>,
+    head_mask: Vec<bool>,
+    task_mask: Vec<bool>,
+    staged_idx: Vec<usize>,
+    staged_logp: f32,
+    staged_value: f32,
+    action: Vec<TaskConfig>,
+    reward_sum: f64,
+    steps: usize,
+    bootstrap: f64,
+}
+
+impl Lane {
+    fn new() -> Self {
+        Self {
+            env: None,
+            buf: RolloutBuffer::new(),
+            rng: Pcg32::new(0),
+            expert_agent: IpaAgent::new(),
+            phase: Phase::Idle,
+            episode: 0,
+            slot: 0,
+            expert: false,
+            state: Vec::with_capacity(STATE_DIM),
+            head_mask: Vec::with_capacity(LOGITS_DIM),
+            task_mask: Vec::with_capacity(MAX_TASKS),
+            staged_idx: vec![0; ACT_DIM],
+            staged_logp: 0.0,
+            staged_value: 0.0,
+            action: Vec::new(),
+            reward_sum: 0.0,
+            steps: 0,
+            bootstrap: 0.0,
+        }
+    }
+
+    /// (Re)bind this lane to an episode: reset (or lazily build) the env,
+    /// restart the action stream and the expert's hysteresis. `reuse_env`
+    /// requires a seed-uniform factory (see [`RolloutEngine::reuse_envs`]).
+    fn assign<F: FnMut(u64) -> Env>(
+        &mut self,
+        spec: &EpisodeSpec,
+        slot: usize,
+        factory: &mut F,
+        reuse_env: bool,
+    ) {
+        match &mut self.env {
+            Some(env) if reuse_env => env.reset(spec.seed),
+            _ => self.env = Some(factory(spec.seed)),
+        }
+        self.rng = Pcg32::stream(spec.seed, ACTION_STREAM);
+        self.expert_agent = IpaAgent::new();
+        self.phase = Phase::NeedObserve;
+        self.episode = spec.episode;
+        self.slot = slot;
+        self.expert = spec.expert;
+        self.staged_idx.clear();
+        self.staged_idx.resize(ACT_DIM, 0);
+        self.staged_logp = 0.0;
+        self.staged_value = 0.0;
+        self.reward_sum = 0.0;
+        self.steps = 0;
+        self.bootstrap = 0.0;
+    }
+}
+
+/// Worker-side advance: one adaptation step (when an action is staged) plus
+/// the next observation. Touches only this lane — which worker runs it, and
+/// in which order relative to other lanes, cannot change the result.
+fn advance_lane(lane: &mut Lane) {
+    if lane.phase == Phase::ReadyToStep {
+        let r = lane.env.as_mut().expect("active lane has an env").step_lite(&lane.action);
+        let tr = lane.buf.push_slot();
+        tr.state.clear();
+        tr.state.extend_from_slice(&lane.state);
+        tr.action_idx.clear();
+        tr.action_idx.extend_from_slice(&lane.staged_idx);
+        tr.logp = lane.staged_logp;
+        tr.value = lane.staged_value;
+        tr.reward = r.reward;
+        tr.head_mask.clear();
+        tr.head_mask.extend_from_slice(&lane.head_mask);
+        tr.task_mask.clear();
+        tr.task_mask.extend_from_slice(&lane.task_mask);
+        lane.reward_sum += r.reward;
+        lane.steps += 1;
+        if r.done {
+            // stage the terminal state for the bootstrap / expert scoring
+            let obs = lane.env.as_mut().expect("active lane has an env").observe();
+            build_state_into(&obs, &mut lane.state);
+            lane.phase = Phase::Finished;
+            return;
+        }
+        lane.phase = Phase::NeedObserve;
+    }
+    if lane.phase == Phase::NeedObserve {
+        let obs = lane.env.as_mut().expect("active lane has an env").observe();
+        build_state_into(&obs, &mut lane.state);
+        build_masks_into(obs.spec, &mut lane.head_mask, &mut lane.task_mask);
+        if lane.expert {
+            // expert action now (the IPA solve runs on the worker); its
+            // logp/value under the current policy are filled by the batched
+            // scoring pass at episode end
+            let cfgs = lane.expert_agent.decide(&obs);
+            encode_action_into(obs.spec, &cfgs, &mut lane.staged_idx);
+            lane.action = cfgs;
+            lane.staged_logp = 0.0;
+            lane.staged_value = 0.0;
+            lane.phase = Phase::ReadyToStep;
+        } else {
+            lane.phase = Phase::NeedForward;
+        }
+    }
+}
+
+/// The engine. Owns the lanes, the shared [`Workspace`], the per-slot
+/// episode buffers and every piece of batching scratch; all of it is reused
+/// across waves (`grow_events()` is the proof hook).
+pub struct RolloutEngine {
+    /// K — maximum concurrently in-flight episodes
+    pub lanes_target: usize,
+    /// env-stepping worker threads (0 = one per lane, capped by the host)
+    pub threads: usize,
+    /// refill lanes via in-place `Env::reset(seed)` instead of a fresh
+    /// `env_factory(seed)` rebuild (the allocation-free path). Requires a
+    /// **seed-uniform** factory: same spec / topology / workload kind /
+    /// intervals for every seed, only the seed varying. A factory that
+    /// derives e.g. the workload kind from the seed must turn this off —
+    /// the engine cannot observe such dependence through a reset.
+    pub reuse_envs: bool,
+    lanes: Vec<Lane>,
+    ws: Workspace,
+    /// per-wave-slot episode buffers (episode order, fixed assignment)
+    bufs: Vec<RolloutBuffer>,
+    results: Vec<EpisodeResult>,
+    /// stacked state rows of one scheduler iteration
+    batch_states: Vec<f32>,
+    /// (lane index, is_bootstrap_row) per stacked row
+    batch_rows: Vec<(usize, bool)>,
+    /// stacked states of one expert episode's scoring pass
+    score_states: Vec<f32>,
+    grow_events: u64,
+}
+
+impl RolloutEngine {
+    pub fn new(lanes: usize, threads: usize) -> Self {
+        Self {
+            lanes_target: lanes.max(1),
+            threads,
+            reuse_envs: true,
+            lanes: Vec::new(),
+            ws: Workspace::new(),
+            bufs: Vec::new(),
+            results: Vec::new(),
+            batch_states: Vec::new(),
+            batch_rows: Vec::new(),
+            score_states: Vec::new(),
+            grow_events: 0,
+        }
+    }
+
+    /// Total (re)allocation count across the engine's own machinery: the
+    /// shared workspace, the lane/transition pools and the batching scratch.
+    /// Flat after the first wave at a steady episode shape — the
+    /// alloc-free-rollout proof hook (`perf_rollout` and the determinism
+    /// tests assert on it). Environment-internal transients (observation
+    /// assembly, the cluster store's apply) are outside this counter; see
+    /// DESIGN.md §9.
+    pub fn grow_events(&self) -> u64 {
+        self.grow_events
+            + self.ws.grow_events()
+            + self.bufs.iter().map(|b| b.grow_events()).sum::<u64>()
+            + self.lanes.iter().map(|l| l.buf.grow_events()).sum::<u64>()
+    }
+
+    /// Per-episode metadata of the most recent wave, in episode order.
+    pub fn results(&self) -> &[EpisodeResult] {
+        &self.results
+    }
+
+    /// Transitions of wave slot `i` (matching `results()[i]`).
+    pub fn buffer(&self, i: usize) -> &RolloutBuffer {
+        &self.bufs[i]
+    }
+
+    /// Collect every episode of `wave` under frozen `params`, K lanes at a
+    /// time. Returns when all episodes are finalized; read them back via
+    /// [`RolloutEngine::results`] / [`RolloutEngine::buffer`].
+    pub fn collect_wave<F: FnMut(u64) -> Env>(
+        &mut self,
+        params: &[f32],
+        wave: &[EpisodeSpec],
+        factory: &mut F,
+    ) {
+        assert!(!wave.is_empty(), "collect_wave: empty wave");
+        if self.bufs.len() < wave.len() {
+            self.grow_events += 1;
+            self.bufs.resize_with(wave.len(), RolloutBuffer::new);
+        }
+        for b in self.bufs.iter_mut().take(wave.len()) {
+            b.recycle();
+        }
+        if self.results.capacity() < wave.len() {
+            self.grow_events += 1;
+        }
+        self.results.clear();
+        self.results.resize(wave.len(), EpisodeResult::default());
+
+        let lanes_n = self.lanes_target.min(wave.len());
+        while self.lanes.len() < lanes_n {
+            self.grow_events += 1;
+            self.lanes.push(Lane::new());
+        }
+        if self.batch_states.capacity() < lanes_n * STATE_DIM {
+            self.grow_events += 1;
+            self.batch_states.reserve(lanes_n * STATE_DIM - self.batch_states.len());
+        }
+        if self.batch_rows.capacity() < lanes_n {
+            self.grow_events += 1;
+            self.batch_rows.reserve(lanes_n - self.batch_rows.len());
+        }
+        let threads = if self.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.threads
+        }
+        .clamp(1, lanes_n);
+
+        let reuse_envs = self.reuse_envs;
+        let mut next = 0usize;
+        for lane in self.lanes.iter_mut().take(lanes_n) {
+            if next < wave.len() {
+                lane.assign(&wave[next], next, factory, reuse_envs);
+                next += 1;
+            } else {
+                lane.phase = Phase::Idle;
+            }
+        }
+        // lanes beyond the wave's needs sit out this wave entirely
+        for lane in self.lanes.iter_mut().skip(lanes_n) {
+            lane.phase = Phase::Idle;
+        }
+
+        loop {
+            let Self {
+                lanes,
+                ws,
+                bufs,
+                results,
+                batch_states,
+                batch_rows,
+                score_states,
+                grow_events,
+                ..
+            } = self;
+            let lanes = &mut lanes[..lanes_n];
+            if lanes.iter().all(|l| l.phase == Phase::Idle) {
+                break;
+            }
+
+            // ---- worker phase: step + observe, sharded across threads ----
+            if threads == 1 {
+                for lane in lanes.iter_mut() {
+                    if lane.phase != Phase::Idle {
+                        advance_lane(lane);
+                    }
+                }
+            } else {
+                // one spawn per worker per scheduler iteration: ~tens of µs
+                // of spawn/join overhead, second-order next to the batched
+                // forward this buys (a persistent per-wave worker pool with
+                // lane-ownership ping-pong is the ROADMAP follow-up)
+                let per = lanes.len().div_ceil(threads);
+                std::thread::scope(|sc| {
+                    for chunk in lanes.chunks_mut(per) {
+                        sc.spawn(move || {
+                            for lane in chunk {
+                                if lane.phase != Phase::Idle {
+                                    advance_lane(lane);
+                                }
+                            }
+                        });
+                    }
+                });
+            }
+
+            // ---- leader phase 1: one ragged batched forward ----
+            // rows: in-flight policy lanes wanting an action + finished
+            // policy lanes' terminal states (their GAE bootstrap)
+            batch_states.clear();
+            batch_rows.clear();
+            for (li, lane) in lanes.iter().enumerate() {
+                match lane.phase {
+                    Phase::NeedForward => {
+                        batch_states.extend_from_slice(&lane.state);
+                        batch_rows.push((li, false));
+                    }
+                    Phase::Finished if !lane.expert => {
+                        batch_states.extend_from_slice(&lane.state);
+                        batch_rows.push((li, true));
+                    }
+                    _ => {}
+                }
+            }
+            if !batch_rows.is_empty() {
+                let _ = ws.policy_fwd_batch(params, batch_states, batch_rows.len());
+                for (row, &(li, is_bootstrap)) in batch_rows.iter().enumerate() {
+                    let lane = &mut lanes[li];
+                    if is_bootstrap {
+                        lane.bootstrap = ws.value_at(row) as f64;
+                    } else {
+                        lane.staged_logp = ws.sample_row(
+                            row,
+                            &lane.head_mask,
+                            &lane.task_mask,
+                            false,
+                            &mut lane.rng,
+                            &mut lane.staged_idx,
+                        );
+                        lane.staged_value = ws.value_at(row);
+                        let env = lane.env.as_ref().expect("active lane has an env");
+                        decode_action_into(&env.spec, &lane.staged_idx, &mut lane.action);
+                        lane.phase = Phase::ReadyToStep;
+                    }
+                }
+            }
+
+            // ---- leader phase 2: finalize finished episodes, refill ----
+            for lane in lanes.iter_mut() {
+                if lane.phase != Phase::Finished {
+                    continue;
+                }
+                if lane.expert {
+                    // count scoring-scratch growth (a longer expert episode
+                    // than any seen before) so grow_events() keeps its
+                    // "covers every engine buffer" promise
+                    if score_states.capacity() < (lane.buf.len() + 1) * STATE_DIM {
+                        *grow_events += 1;
+                    }
+                    lane.bootstrap =
+                        score_expert_episode(ws, params, &mut lane.buf, &lane.state, score_states)
+                            as f64;
+                }
+                results[lane.slot] = EpisodeResult {
+                    episode: lane.episode,
+                    expert: lane.expert,
+                    mean_reward: lane.reward_sum / (lane.steps as f64).max(1.0),
+                    bootstrap: lane.bootstrap,
+                    steps: lane.steps,
+                };
+                std::mem::swap(&mut lane.buf, &mut bufs[lane.slot]);
+                if next < wave.len() {
+                    lane.assign(&wave[next], next, factory, reuse_envs);
+                    next += 1;
+                } else {
+                    lane.phase = Phase::Idle;
+                }
+            }
+        }
+    }
+}
+
+/// Score every expert transition of a finished episode — plus the terminal
+/// bootstrap state — under the current policy in ONE batched forward
+/// (Algorithm 2 needs log π(a_expert | s) and V(s) for the replay memory;
+/// the expert's actions don't depend on the policy outputs, so scoring
+/// defers to episode end and batches instead of running one forward per
+/// step). Returns V(s_T) so the GAE bootstrap shares the episode's numeric
+/// source.
+fn score_expert_episode(
+    ws: &mut Workspace,
+    params: &[f32],
+    buf: &mut RolloutBuffer,
+    final_state: &[f32],
+    score_states: &mut Vec<f32>,
+) -> f32 {
+    let batch = buf.len() + 1;
+    score_states.clear();
+    for tr in &buf.transitions {
+        score_states.extend_from_slice(&tr.state);
+    }
+    score_states.extend_from_slice(final_state);
+    let (logits, values) = ws.policy_fwd_batch(params, score_states, batch);
+    for (i, tr) in buf.transitions.iter_mut().enumerate() {
+        let row = &logits[i * LOGITS_DIM..(i + 1) * LOGITS_DIM];
+        tr.logp = logp_of_action(row, &tr.head_mask, &tr.task_mask, &tr.action_idx);
+        tr.value = values[i];
+    }
+    values[batch - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterTopology;
+    use crate::pipeline::{catalog, QosWeights};
+    use crate::workload::predictor::MovingMaxPredictor;
+    use crate::workload::WorkloadKind;
+
+    fn factory(seed: u64) -> Env {
+        Env::from_workload(
+            catalog::by_name("P1").unwrap().spec,
+            ClusterTopology::paper_testbed(),
+            QosWeights::default(),
+            WorkloadKind::Fluctuating,
+            seed,
+            Box::new(MovingMaxPredictor::default()),
+            10,
+            100,
+            3.0,
+        )
+    }
+
+    fn small_params(seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::new(seed);
+        (0..POLICY_PARAM_COUNT).map(|_| (rng.normal() * 0.02) as f32).collect()
+    }
+
+    fn wave(n: usize, base_seed: u64, expert_freq: usize) -> Vec<EpisodeSpec> {
+        (1..=n)
+            .map(|episode| EpisodeSpec {
+                episode,
+                seed: base_seed + episode as u64,
+                expert: expert_freq > 0 && episode % expert_freq == 0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn collects_every_episode_with_full_trajectories() {
+        let params = small_params(1);
+        let mut eng = RolloutEngine::new(3, 1);
+        let w = wave(5, 42, 2);
+        eng.collect_wave(&params, &w, &mut factory);
+        assert_eq!(eng.results().len(), 5);
+        for (i, r) in eng.results().iter().enumerate() {
+            assert_eq!(r.episode, i + 1, "results in episode order");
+            assert_eq!(r.expert, (i + 1) % 2 == 0);
+            assert_eq!(r.steps, 10, "100 s cycle / 10 s interval");
+            assert_eq!(eng.buffer(i).len(), 10);
+            assert!(r.mean_reward.is_finite() && r.bootstrap.is_finite());
+            for tr in &eng.buffer(i).transitions {
+                assert_eq!(tr.state.len(), STATE_DIM);
+                assert_eq!(tr.action_idx.len(), ACT_DIM);
+                assert!(tr.value.is_finite());
+            }
+            if !r.expert {
+                // sampled actions must carry their (negative) log-probs
+                assert!(eng.buffer(i).transitions.iter().all(|t| t.logp < 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn more_lanes_than_episodes_is_fine() {
+        let params = small_params(2);
+        let mut eng = RolloutEngine::new(8, 2);
+        let w = wave(2, 7, 0);
+        eng.collect_wave(&params, &w, &mut factory);
+        assert_eq!(eng.results().len(), 2);
+        assert!(eng.results().iter().all(|r| r.steps == 10));
+    }
+
+    #[test]
+    fn engine_reuse_across_waves_is_allocation_free() {
+        let params = small_params(3);
+        let mut eng = RolloutEngine::new(2, 2);
+        let w = wave(4, 11, 2);
+        eng.collect_wave(&params, &w, &mut factory);
+        let warm = eng.grow_events();
+        for round in 0..3 {
+            let w = wave(4, 100 + round, 2);
+            eng.collect_wave(&params, &w, &mut factory);
+            assert_eq!(eng.grow_events(), warm, "wave {round} must reuse warm buffers");
+        }
+    }
+}

@@ -2,19 +2,26 @@
 //! expert-guided episodes (every f-th episode the IPA solver drives the
 //! actions; its decisions enter the replay memory with their log-probs under
 //! the *current* policy, bootstrapping the sparse early training signal).
+//!
+//! Rollout collection goes through the vectorized engine (rl/rollout.rs,
+//! DESIGN.md §9): episodes are gathered in **waves** of `sync_every`
+//! episodes under frozen parameters, each wave running up to `envs` lanes
+//! concurrently with env stepping sharded across `rollout_threads`
+//! workers. The PPO updates then consume the wave's episodes strictly in
+//! episode order, so for a fixed `sync_every` the `TrainingHistory` is
+//! bitwise identical for ANY `envs` / thread count. `sync_every = 1` (the
+//! default) is the paper's per-episode schedule.
 
 use std::rc::Rc;
 
 use anyhow::Result;
 
-use crate::agents::{Agent, IpaAgent, OpdAgent};
 use crate::nn::math::log_softmax_masked_into;
 use crate::nn::spec::*;
-use crate::nn::workspace::Workspace;
-use crate::rl::buffer::{RolloutBuffer, Transition};
 use crate::rl::ppo::{PpoLearner, UpdateMetrics};
+use crate::rl::rollout::{EpisodeSpec, RolloutEngine};
 use crate::runtime::OpdRuntime;
-use crate::sim::env::{build_masks, build_state, encode_action, Env};
+use crate::sim::env::Env;
 use crate::util::json::Json;
 use crate::util::prng::Pcg32;
 
@@ -104,6 +111,21 @@ pub struct TrainerConfig {
     /// minibatches per epoch (each TRAIN_BATCH rows, resampled)
     pub minibatches: usize,
     pub seed: u64,
+    /// K — concurrent rollout lanes (DESIGN.md §9). Execution-only: for a
+    /// fixed `sync_every` the results are bitwise identical for any value.
+    pub envs: usize,
+    /// env-stepping worker threads (0 = auto). Execution-only, like `envs`.
+    pub rollout_threads: usize,
+    /// refill lane envs via in-place `Env::reset(seed)` (allocation-free).
+    /// Requires a seed-uniform `env_factory`; factories that derive e.g.
+    /// the workload kind from the seed must set this to false.
+    pub reuse_envs: bool,
+    /// episodes collected per parameter sync (the wave). Values > 1 let
+    /// `envs` lanes genuinely overlap, trading per-episode update freshness
+    /// for sampling throughput — this DOES change the training math
+    /// (vectorized-PPO style), unlike `envs`/`rollout_threads`. 0 is
+    /// treated as 1 (the paper's per-episode schedule).
+    pub sync_every: usize,
 }
 
 impl Default for TrainerConfig {
@@ -121,202 +143,144 @@ impl Default for TrainerConfig {
             epochs: 4,
             minibatches: 2,
             seed: 42,
+            envs: 1,
+            rollout_threads: 0,
+            reuse_envs: true,
+            sync_every: 1,
         }
     }
 }
 
-/// Algorithm 2. `env_factory(episode_seed)` builds a fresh environment per
-/// episode ("Reset the environment and obtain the initial state s0").
+/// Algorithm 2. `env_factory(episode_seed)` builds a lane's environment
+/// ("Reset the environment and obtain the initial state s0"); the engine
+/// builds one env per lane and thereafter re-seeds it in place
+/// (`Env::reset`) on every episode refill.
 pub struct Trainer<F: FnMut(u64) -> Env> {
     pub cfg: TrainerConfig,
     pub learner: PpoLearner,
-    pub agent: OpdAgent,
-    expert: IpaAgent,
+    pub engine: RolloutEngine,
     env_factory: F,
     rng: Pcg32,
     pub history: TrainingHistory,
-    /// scratch for the batched expert-episode scoring (DESIGN.md §7)
-    ws: Workspace,
+    /// episode queue scratch, reused across waves
+    wave: Vec<EpisodeSpec>,
 }
 
 impl<F: FnMut(u64) -> Env> Trainer<F> {
     pub fn new(rt: Rc<OpdRuntime>, cfg: TrainerConfig, env_factory: F) -> Self {
-        let learner = PpoLearner::new(rt.clone());
-        let agent = OpdAgent::from_runtime(rt, cfg.seed);
-        Self::assemble(learner, agent, cfg, env_factory)
+        let learner = PpoLearner::new(rt);
+        Self::assemble(learner, cfg, env_factory)
     }
 
     /// Trainer without a PJRT runtime: rollouts run through the native
     /// policy mirror and every update goes through the native fused train
     /// step — `opd train` end-to-end on a plain CPU (DESIGN.md §8).
     pub fn native(init_params: Vec<f32>, cfg: TrainerConfig, env_factory: F) -> Self {
-        let learner = PpoLearner::native(init_params.clone());
-        let agent = OpdAgent::native(init_params, cfg.seed);
-        Self::assemble(learner, agent, cfg, env_factory)
+        let learner = PpoLearner::native(init_params);
+        Self::assemble(learner, cfg, env_factory)
     }
 
-    fn assemble(learner: PpoLearner, agent: OpdAgent, cfg: TrainerConfig, env_factory: F) -> Self {
+    fn assemble(learner: PpoLearner, cfg: TrainerConfig, env_factory: F) -> Self {
+        let mut engine = RolloutEngine::new(cfg.envs.max(1), cfg.rollout_threads);
+        engine.reuse_envs = cfg.reuse_envs;
         Self {
             cfg,
             learner,
-            agent,
-            expert: IpaAgent::new(),
+            engine,
             env_factory,
             rng: Pcg32::stream(cfg.seed, 0x545249), // "TRI"
             history: TrainingHistory::default(),
-            ws: Workspace::new(),
+            wave: Vec::new(),
         }
     }
 
-    /// Score every expert transition of the finished episode — plus the
-    /// terminal bootstrap state — under the current policy in ONE batched
-    /// native forward (Algorithm 2 needs log π(a_expert | s) and V(s) for
-    /// the replay memory; the expert's actions don't depend on the policy
-    /// outputs, so scoring defers to episode end and batches instead of
-    /// running one forward per step). Returns V(s_T) so the GAE bootstrap
-    /// shares the episode's numeric source: the native mirror and the HLO
-    /// forward differ by float rounding, and mixing them inside one GAE pass
-    /// would put a systematic epsilon on the terminal delta.
-    fn score_expert_episode(&mut self, buf: &mut RolloutBuffer, final_state: &[f32]) -> f32 {
-        let batch = buf.len() + 1;
-        let mut states = Vec::with_capacity(batch * STATE_DIM);
-        for tr in &buf.transitions {
-            states.extend_from_slice(&tr.state);
-        }
-        states.extend_from_slice(final_state);
-        let (logits, values) = self.ws.policy_fwd_batch(&self.agent.params, &states, batch);
-        for (i, tr) in buf.transitions.iter_mut().enumerate() {
-            let row = &logits[i * LOGITS_DIM..(i + 1) * LOGITS_DIM];
-            tr.logp = logp_of_action(row, &tr.head_mask, &tr.task_mask, &tr.action_idx);
-            tr.value = values[i];
-        }
-        values[batch - 1]
-    }
-
-    /// Run one episode, filling `buf`. Returns (mean reward, bootstrap value).
-    fn rollout(&mut self, episode: usize, expert_episode: bool, buf: &mut RolloutBuffer) -> (f64, f64) {
-        let mut env = (self.env_factory)(self.cfg.seed + episode as u64);
-        self.agent.set_params(self.learner.params.clone());
-        self.agent.greedy = false;
-        let mut reward_sum = 0.0f64;
-        let mut n = 0.0f64;
-        while !env.done() {
-            let (action, transition_proto) = {
-                let obs = env.observe();
-                if expert_episode {
-                    // expert action; logp/value under the current policy are
-                    // filled by the batched scoring pass after the episode
-                    let action = self.expert.decide(&obs);
-                    let state = build_state(&obs);
-                    let masks = build_masks(obs.spec);
-                    let idx = encode_action(obs.spec, &action);
-                    (
-                        action,
-                        Transition {
-                            state,
-                            action_idx: idx,
-                            logp: 0.0,
-                            value: 0.0,
-                            reward: 0.0,
-                            head_mask: masks.head,
-                            task_mask: masks.task,
-                        },
-                    )
-                } else {
-                    let action = self.agent.decide(&obs);
-                    let rec = self.agent.last.clone();
-                    (
-                        action,
-                        Transition {
-                            state: rec.state,
-                            action_idx: rec.action_idx,
-                            logp: rec.logp,
-                            value: rec.value,
-                            reward: 0.0,
-                            head_mask: rec.head_mask,
-                            task_mask: rec.task_mask,
-                        },
-                    )
-                }
-            };
-            let step = env.step(&action);
-            let mut tr = transition_proto;
-            tr.reward = step.reward;
-            reward_sum += step.reward;
-            n += 1.0;
-            buf.push(tr);
-        }
-        // bootstrap value of the final state; expert episodes batch it into
-        // the same scoring forward so logp/V/bootstrap share one source
-        let bootstrap = {
-            let obs = env.observe();
-            let state = build_state(&obs);
-            if expert_episode {
-                self.score_expert_episode(buf, &state) as f64
-            } else {
-                self.agent.forward(&state).1 as f64
-            }
-        };
-        (reward_sum / n.max(1.0), bootstrap)
-    }
-
-    /// Run the full training loop.
+    /// Run the full training loop: waves of `sync_every` episodes collected
+    /// under frozen parameters by the vectorized engine, then PPO updates
+    /// consumed strictly in episode order (so the schedule — and therefore
+    /// the history — does not depend on `envs` or thread count).
     pub fn train(&mut self) -> Result<&TrainingHistory> {
-        for episode in 1..=self.cfg.episodes {
-            let expert_episode =
-                self.cfg.expert_freq > 0 && episode % self.cfg.expert_freq == 0;
-            let mut buf = RolloutBuffer::new();
-            let (mean_reward, bootstrap) = self.rollout(episode, expert_episode, &mut buf);
-            let (adv, ret) = buf.advantages(bootstrap, self.cfg.gamma, self.cfg.gae_lambda);
-
-            let mut last = UpdateMetrics::default();
-            let mut diverged = 0usize;
-            'epochs: for _ in 0..self.cfg.epochs {
-                for mb in buf.minibatches(&adv, &ret, self.cfg.minibatches, &mut self.rng) {
-                    let m = self.learner.update(&mb)?;
-                    if m.diverged {
-                        // non-finite loss/gradient: the learner skipped the
-                        // update (params + Adam untouched) — count it and
-                        // move on to the next minibatch instead of aborting
-                        // the whole training run
-                        diverged += 1;
-                        self.history.diverged_updates += 1;
-                        continue;
-                    }
-                    last = m;
-                    // KL early stop (standard PPO guard): once the policy has
-                    // moved this far from the rollout policy, further epochs
-                    // on the same data destabilize training
-                    if last.approx_kl.abs() > 1.0 {
-                        break 'epochs;
-                    }
-                }
+        let sync = self.cfg.sync_every.max(1);
+        let mut episode = 1usize;
+        while episode <= self.cfg.episodes {
+            let wave_len = sync.min(self.cfg.episodes - episode + 1);
+            self.wave.clear();
+            for e in episode..episode + wave_len {
+                self.wave.push(EpisodeSpec {
+                    episode: e,
+                    seed: self.cfg.seed + e as u64,
+                    expert: self.cfg.expert_freq > 0 && e % self.cfg.expert_freq == 0,
+                });
             }
-            self.history.episodes.push(EpisodeStats {
-                episode,
-                expert: expert_episode,
-                mean_reward,
-                pi_loss: last.pi_loss,
-                v_loss: last.v_loss,
-                entropy: last.entropy,
-                approx_kl: last.approx_kl,
-                diverged,
-            });
-            crate::log_info!(
-                "episode {episode:3} {} reward {mean_reward:8.3} piL {:7.4} vL {:8.4} H {:6.3} KL {:7.4}",
-                if expert_episode { "[expert]" } else { "        " },
-                last.pi_loss,
-                last.v_loss,
-                last.entropy,
-                last.approx_kl,
-            );
-            if diverged > 0 {
-                crate::log_warn!(
-                    "episode {episode:3} skipped {diverged} diverged minibatch update(s)"
-                );
+            self.engine.collect_wave(&self.learner.params, &self.wave, &mut self.env_factory);
+            for slot in 0..wave_len {
+                self.consume_episode(slot)?;
             }
+            episode += wave_len;
         }
         Ok(&self.history)
+    }
+
+    /// Apply one collected episode's PPO updates and log its stats.
+    fn consume_episode(&mut self, slot: usize) -> Result<()> {
+        let r = self.engine.results()[slot];
+        let (adv, ret) =
+            self.engine.buffer(slot).advantages(r.bootstrap, self.cfg.gamma, self.cfg.gae_lambda);
+
+        let mut last = UpdateMetrics::default();
+        let mut diverged = 0usize;
+        'epochs: for _ in 0..self.cfg.epochs {
+            let mbs = self.engine.buffer(slot).minibatches(
+                &adv,
+                &ret,
+                self.cfg.minibatches,
+                &mut self.rng,
+            );
+            for mb in mbs {
+                let m = self.learner.update(&mb)?;
+                if m.diverged {
+                    // non-finite loss/gradient: the learner skipped the
+                    // update (params + Adam untouched) — count it and
+                    // move on to the next minibatch instead of aborting
+                    // the whole training run
+                    diverged += 1;
+                    self.history.diverged_updates += 1;
+                    continue;
+                }
+                last = m;
+                // KL early stop (standard PPO guard): once the policy has
+                // moved this far from the rollout policy, further epochs
+                // on the same data destabilize training
+                if last.approx_kl.abs() > 1.0 {
+                    break 'epochs;
+                }
+            }
+        }
+        let episode = r.episode;
+        let mean_reward = r.mean_reward;
+        self.history.episodes.push(EpisodeStats {
+            episode,
+            expert: r.expert,
+            mean_reward,
+            pi_loss: last.pi_loss,
+            v_loss: last.v_loss,
+            entropy: last.entropy,
+            approx_kl: last.approx_kl,
+            diverged,
+        });
+        crate::log_info!(
+            "episode {episode:3} {} reward {mean_reward:8.3} piL {:7.4} vL {:8.4} H {:6.3} KL {:7.4}",
+            if r.expert { "[expert]" } else { "        " },
+            last.pi_loss,
+            last.v_loss,
+            last.entropy,
+            last.approx_kl,
+        );
+        if diverged > 0 {
+            crate::log_warn!(
+                "episode {episode:3} skipped {diverged} diverged minibatch update(s)"
+            );
+        }
+        Ok(())
     }
 
     /// Save the trained parameters as a checkpoint blob plus the optimizer

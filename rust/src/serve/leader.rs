@@ -85,6 +85,11 @@ pub struct Leader {
     published_decisions: std::collections::BTreeMap<String, usize>,
     /// batched-decision totals already published (for counter deltas)
     published_batched: (usize, usize),
+    /// batched-prediction totals already published (for counter deltas)
+    published_batched_pred: (usize, usize),
+    /// publish-tick scratch, reused every second (telemetry hot loop)
+    status_scratch: Vec<TenantStatus>,
+    key_buf: String,
 }
 
 impl Leader {
@@ -107,6 +112,9 @@ impl Leader {
                 max_secs: None,
                 published_decisions: std::collections::BTreeMap::new(),
                 published_batched: (0, 0),
+                published_batched_pred: (0, 0),
+                status_scratch: Vec::new(),
+                key_buf: String::new(),
             },
             tx,
         )
@@ -250,21 +258,31 @@ impl Leader {
     }
 
     /// Publish the tick's metrics/state to the observability endpoints.
+    /// Runs every simulated second, so the per-tenant series keys and the
+    /// status snapshot go through reused buffers instead of fresh
+    /// allocations (the telemetry hot-loop cleanup — DESIGN.md §9).
     fn publish(&mut self) {
-        let statuses = self.env.statuses();
+        use std::fmt::Write as _;
+        self.env.statuses_into(&mut self.status_scratch);
+        let statuses = std::mem::take(&mut self.status_scratch);
         let m = &self.cp.metrics;
         let mut total_load = 0.0;
         let mut total_pred = 0.0;
         let mut qos_sum = 0.0;
         let mut cost_sum = 0.0;
+        let mut record_keyed = |key_buf: &mut String, prefix: &str, name: &str, v: f64| {
+            key_buf.clear();
+            let _ = write!(key_buf, "{prefix}:{name}");
+            self.cp.series.record(key_buf, v);
+        };
         for s in &statuses {
             m.set_gauge("opd_qos", &[("pipeline", s.name.as_str())], s.last_qos);
             m.set_gauge("opd_cost_cores", &[("pipeline", s.name.as_str())], s.last_cost);
             m.set_gauge("opd_load", &[("pipeline", s.name.as_str())], s.load_now);
-            self.cp.series.record(&format!("load:{}", s.name), s.load_now);
-            self.cp.series.record(&format!("load_pred:{}", s.name), s.load_pred);
-            self.cp.series.record(&format!("qos:{}", s.name), s.last_qos);
-            self.cp.series.record(&format!("cost:{}", s.name), s.last_cost);
+            record_keyed(&mut self.key_buf, "load", &s.name, s.load_now);
+            record_keyed(&mut self.key_buf, "load_pred", &s.name, s.load_pred);
+            record_keyed(&mut self.key_buf, "qos", &s.name, s.last_qos);
+            record_keyed(&mut self.key_buf, "cost", &s.name, s.last_cost);
             total_load += s.load_now;
             total_pred += s.load_pred;
             qos_sum += s.last_qos;
@@ -305,12 +323,33 @@ impl Leader {
             );
         }
         self.published_batched = (self.env.batched_decisions, self.env.batched_groups);
+        // batched predictor path (DESIGN.md §9): load predictions served by
+        // a shared batched LSTM pass, and how many passes ran
+        let (seen_pred, seen_pred_grp) = self.published_batched_pred;
+        if self.env.batched_predictions > seen_pred {
+            m.inc(
+                "opd_batched_predictions_total",
+                &[],
+                (self.env.batched_predictions - seen_pred) as f64,
+            );
+        }
+        if self.env.batched_predictor_groups > seen_pred_grp {
+            m.inc(
+                "opd_batched_predictor_passes_total",
+                &[],
+                (self.env.batched_predictor_groups - seen_pred_grp) as f64,
+            );
+        }
+        self.published_batched_pred =
+            (self.env.batched_predictions, self.env.batched_predictor_groups);
         self.cp.publish_state(
             Json::obj()
                 .set("t", self.env.now)
                 .set("pipelines", Json::Arr(statuses.iter().map(status_json).collect()))
                 .set("cluster", self.cluster_json()),
         );
+        // hand the snapshot buffer back for the next tick
+        self.status_scratch = statuses;
     }
 
     /// Main loop. Returns when a shutdown command arrives, every command

@@ -33,6 +33,16 @@ impl LoadSource {
             }
         }
     }
+
+    /// Re-seed in place: a generator restarts its stream from `seed`
+    /// (keeping the workload kind), a replay rewinds to the beginning.
+    /// Equivalent to rebuilding the source fresh — the `Env::reset` path.
+    pub fn reset(&mut self, seed: u64) {
+        match self {
+            LoadSource::Gen(g) => *g = WorkloadGen::new(g.kind, seed),
+            LoadSource::Replay { idx, .. } => *idx = 0,
+        }
+    }
 }
 
 /// Everything an agent may look at when deciding (the paper's monitoring +
@@ -158,24 +168,39 @@ pub fn build_masks_into(spec: &PipelineSpec, head: &mut Vec<bool>, task: &mut Ve
 /// Encode a pipeline configuration as the 24 factored action indices
 /// (task-major: [z, f−1, b_idx] per task, zero-padded).
 pub fn encode_action(spec: &PipelineSpec, cfgs: &[TaskConfig]) -> Vec<usize> {
-    let mut a = vec![0usize; ACT_DIM];
+    let mut a = Vec::new();
+    encode_action_into(spec, cfgs, &mut a);
+    a
+}
+
+/// [`encode_action`] into a reused buffer (cleared first) — the
+/// allocation-free rollout path.
+pub fn encode_action_into(spec: &PipelineSpec, cfgs: &[TaskConfig], a: &mut Vec<usize>) {
+    a.clear();
+    a.resize(ACT_DIM, 0);
     for (t, cfg) in cfgs.iter().enumerate().take(spec.n_tasks()) {
         a[t * 3] = cfg.variant;
         a[t * 3 + 1] = cfg.replicas - 1;
         a[t * 3 + 2] = cfg.batch_idx;
     }
-    a
 }
 
 /// Decode factored action indices back into task configs.
 pub fn decode_action(spec: &PipelineSpec, idx: &[usize]) -> Vec<TaskConfig> {
-    (0..spec.n_tasks())
-        .map(|t| TaskConfig {
-            variant: idx[t * 3].min(spec.tasks[t].n_variants() - 1),
-            replicas: idx[t * 3 + 1] + 1,
-            batch_idx: idx[t * 3 + 2].min(N_BATCH - 1),
-        })
-        .collect()
+    let mut out = Vec::new();
+    decode_action_into(spec, idx, &mut out);
+    out
+}
+
+/// [`decode_action`] into a reused buffer (cleared first) — the
+/// allocation-free rollout path.
+pub fn decode_action_into(spec: &PipelineSpec, idx: &[usize], out: &mut Vec<TaskConfig>) {
+    out.clear();
+    out.extend((0..spec.n_tasks()).map(|t| TaskConfig {
+        variant: idx[t * 3].min(spec.tasks[t].n_variants() - 1),
+        replicas: idx[t * 3 + 1] + 1,
+        batch_idx: idx[t * 3 + 2].min(N_BATCH - 1),
+    }));
 }
 
 /// Result of one adaptation step.
@@ -197,7 +222,23 @@ pub struct StepResult {
     pub done: bool,
 }
 
-/// The environment.
+/// Lightweight result of [`Env::step_lite`]: the interval aggregates
+/// without the per-second series or the applied-config vector — what the
+/// rollout engine consumes (it only needs the reward signal).
+#[derive(Clone, Copy, Debug)]
+pub struct LiteStep {
+    /// Eq. 7 reward aggregated over the interval
+    pub reward: f64,
+    /// interval-average QoS (Eq. 3) and cost (Eq. 2)
+    pub qos: f64,
+    pub cost: f64,
+    pub clamped: bool,
+    pub restarts: usize,
+    pub done: bool,
+}
+
+/// The environment. `Send` (the predictor slot is `+ Send`), so the
+/// vectorized rollout engine can shard environments across worker threads.
 pub struct Env {
     pub spec: PipelineSpec,
     pub api: ClusterApi,
@@ -206,9 +247,11 @@ pub struct Env {
     pub now: f64,
     pub history: LoadHistory,
     source: LoadSource,
-    predictor: Box<dyn LoadPredictor>,
+    predictor: Box<dyn LoadPredictor + Send>,
     cycle_secs: usize,
     last_rate: f64,
+    /// reused predictor-window scratch (one per env, overwritten per tick)
+    win_buf: Vec<f64>,
 }
 
 impl Env {
@@ -217,7 +260,7 @@ impl Env {
         topo: ClusterTopology,
         weights: QosWeights,
         source: LoadSource,
-        predictor: Box<dyn LoadPredictor>,
+        predictor: Box<dyn LoadPredictor + Send>,
         adapt_interval_secs: usize,
         cycle_secs: usize,
         startup_secs: f64,
@@ -233,6 +276,7 @@ impl Env {
             predictor,
             cycle_secs,
             last_rate: 0.0,
+            win_buf: Vec::with_capacity(PRED_WINDOW),
         };
         env.bootstrap();
         env
@@ -245,7 +289,7 @@ impl Env {
         weights: QosWeights,
         kind: WorkloadKind,
         seed: u64,
-        predictor: Box<dyn LoadPredictor>,
+        predictor: Box<dyn LoadPredictor + Send>,
         adapt_interval_secs: usize,
         cycle_secs: usize,
         startup_secs: f64,
@@ -267,7 +311,7 @@ impl Env {
         topo: ClusterTopology,
         weights: QosWeights,
         trace: &Trace,
-        predictor: Box<dyn LoadPredictor>,
+        predictor: Box<dyn LoadPredictor + Send>,
         adapt_interval_secs: usize,
         startup_secs: f64,
     ) -> Self {
@@ -296,6 +340,24 @@ impl Env {
         self.last_rate = r;
     }
 
+    /// In-place re-initialization to episode start — behaviourally identical
+    /// to rebuilding the env through its constructor with the same spec /
+    /// topology / workload kind and the new `seed`, but reusing every
+    /// allocation (cluster store maps, load-history ring, predictor window
+    /// and cell-state scratch). This is what makes the rollout engine's
+    /// per-episode refill allocation-free after warm-up; callers that need
+    /// a *different* spec or topology still go through the factory.
+    pub fn reset(&mut self, seed: u64) {
+        self.api.reset();
+        self.history.clear();
+        self.source.reset(seed);
+        self.now = 0.0;
+        self.last_rate = 0.0;
+        // predictors carry no cross-prediction state (window and LSTM
+        // scratch are fully overwritten per call), so nothing to reset there
+        self.bootstrap();
+    }
+
     pub fn elapsed(&self) -> f64 {
         self.now
     }
@@ -306,8 +368,8 @@ impl Env {
 
     /// Current observation (state of the MDP).
     pub fn observe(&mut self) -> Observation<'_> {
-        let window = self.history.window(PRED_WINDOW);
-        let load_pred = self.predictor.predict_max(&window);
+        self.history.window_into(PRED_WINDOW, &mut self.win_buf);
+        let load_pred = self.predictor.predict_max(&self.win_buf);
         let current = self.api.current_config().to_vec();
         let ready = self.api.ready_replicas(self.spec.n_tasks(), self.now);
         let metrics = pipeline_metrics(&self.spec, &current, &ready, self.last_rate);
@@ -326,6 +388,35 @@ impl Env {
         }
     }
 
+    /// Shared interval core of [`Env::step`] / [`Env::step_lite`]: advance
+    /// `adapt_interval_secs` one-second ticks under `applied`, calling
+    /// `record(qos, cost, rate)` per tick. Returns (reward_acc, qos_acc,
+    /// cost_acc) — accumulated in tick order, so the means derived from the
+    /// accumulators are bit-identical to means over the recorded series.
+    fn run_interval(
+        &mut self,
+        applied: &[TaskConfig],
+        mut record: impl FnMut(f64, f64, f64),
+    ) -> (f64, f64, f64) {
+        let mut reward_acc = 0.0;
+        let mut qos_acc = 0.0;
+        let mut cost_acc = 0.0;
+        for _ in 0..self.adapt_interval_secs {
+            self.now += 1.0;
+            let rate = self.source.next_rate();
+            self.history.push(rate);
+            self.last_rate = rate;
+            let ready = self.api.ready_replicas(self.spec.n_tasks(), self.now);
+            let m = pipeline_metrics(&self.spec, applied, &ready, rate);
+            let q = self.weights.qos(&m);
+            qos_acc += q;
+            cost_acc += m.cost;
+            reward_acc += self.weights.reward(&m);
+            record(q, m.cost, rate);
+        }
+        (reward_acc, qos_acc, cost_acc)
+    }
+
     /// Apply `action` and advance one adaptation interval.
     pub fn step(&mut self, action: &[TaskConfig]) -> StepResult {
         let out = self
@@ -335,30 +426,41 @@ impl Env {
         let mut qos_series = Vec::with_capacity(self.adapt_interval_secs);
         let mut cost_series = Vec::with_capacity(self.adapt_interval_secs);
         let mut load_series = Vec::with_capacity(self.adapt_interval_secs);
-        let mut reward_acc = 0.0;
-        let mut max_batch = 0usize;
-        for _ in 0..self.adapt_interval_secs {
-            self.now += 1.0;
-            let rate = self.source.next_rate();
-            self.history.push(rate);
-            self.last_rate = rate;
-            let ready = self.api.ready_replicas(self.spec.n_tasks(), self.now);
-            let m = pipeline_metrics(&self.spec, &out.applied, &ready, rate);
-            qos_series.push(self.weights.qos(&m));
-            cost_series.push(m.cost);
-            load_series.push(rate);
-            reward_acc += self.weights.reward(&m);
-            max_batch = max_batch.max(m.max_batch);
-        }
+        let (reward_acc, qos_acc, cost_acc) = self.run_interval(&out.applied, |q, c, r| {
+            qos_series.push(q);
+            cost_series.push(c);
+            load_series.push(r);
+        });
         let n = self.adapt_interval_secs as f64;
         StepResult {
             reward: reward_acc / n,
-            qos: crate::util::stats::mean(&qos_series),
-            cost: crate::util::stats::mean(&cost_series),
+            qos: qos_acc / n,
+            cost: cost_acc / n,
             qos_series,
             cost_series,
             load_series,
             applied: out.applied,
+            clamped: out.clamped,
+            restarts: out.restarts,
+            done: self.done(),
+        }
+    }
+
+    /// [`Env::step`] without materializing the per-second series (those
+    /// exist for the Fig. 4 plots) or cloning out the applied configs —
+    /// the rollout engine's hot path performs zero extra heap work here
+    /// beyond what the cluster store does internally.
+    pub fn step_lite(&mut self, action: &[TaskConfig]) -> LiteStep {
+        let out = self
+            .api
+            .apply(&self.spec, action, self.now)
+            .expect("validated action must apply");
+        let (reward_acc, qos_acc, cost_acc) = self.run_interval(&out.applied, |_, _, _| {});
+        let n = self.adapt_interval_secs as f64;
+        LiteStep {
+            reward: reward_acc / n,
+            qos: qos_acc / n,
+            cost: cost_acc / n,
             clamped: out.clamped,
             restarts: out.restarts,
             done: self.done(),
@@ -480,6 +582,114 @@ mod tests {
             q_prov > q_min,
             "provisioned {q_prov} should beat minimal {q_min} at high load"
         );
+    }
+
+    #[test]
+    fn step_lite_matches_step_bitwise() {
+        let mut full = env(WorkloadKind::Fluctuating);
+        let mut lite = env(WorkloadKind::Fluctuating);
+        let action = full.spec.default_config();
+        for _ in 0..5 {
+            let a = full.step(&action);
+            let b = lite.step_lite(&action);
+            assert_eq!(a.reward.to_bits(), b.reward.to_bits());
+            assert_eq!(a.qos.to_bits(), b.qos.to_bits());
+            assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+            assert_eq!(a.clamped, b.clamped);
+            assert_eq!(a.restarts, b.restarts);
+            assert_eq!(a.done, b.done);
+        }
+        assert_eq!(full.elapsed(), lite.elapsed());
+    }
+
+    #[test]
+    fn reset_is_equivalent_to_a_fresh_env() {
+        // run a reset env and a factory-fresh env through identical actions:
+        // every observable (rewards, state vectors, predictions) must match
+        let mut reused = env(WorkloadKind::Fluctuating);
+        let action = reused.spec.default_config();
+        for _ in 0..4 {
+            reused.step(&action); // dirty the env: history, cluster, clock
+        }
+        reused.reset(99);
+        let mut fresh = Env::from_workload(
+            catalog::video_analytics().spec,
+            ClusterTopology::paper_testbed(),
+            QosWeights::default(),
+            WorkloadKind::Fluctuating,
+            99,
+            Box::new(MovingMaxPredictor::default()),
+            10,
+            120,
+            3.0,
+        );
+        assert_eq!(reused.elapsed(), 0.0);
+        assert!(!reused.done());
+        for _ in 0..6 {
+            let sa = {
+                let o = reused.observe();
+                assert_eq!(o.tenants, 1);
+                build_state(&o)
+            };
+            let sb = {
+                let o = fresh.observe();
+                build_state(&o)
+            };
+            let bits = |s: &[f32]| s.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&sa), bits(&sb), "reset env must observe like a fresh env");
+            let ra = reused.step(&action);
+            let rb = fresh.step(&action);
+            assert_eq!(ra.reward.to_bits(), rb.reward.to_bits());
+            assert_eq!(ra.load_series, rb.load_series);
+        }
+    }
+
+    #[test]
+    fn reset_rewinds_a_replay_source() {
+        let trace = Trace::new("t", (0..50).map(|i| 10.0 + i as f64).collect());
+        let spec = catalog::preset(catalog::Preset::P1).spec;
+        let mut e = Env::from_trace(
+            spec,
+            ClusterTopology::paper_testbed(),
+            QosWeights::default(),
+            &trace,
+            Box::new(MovingMaxPredictor::default()),
+            10,
+            3.0,
+        );
+        let a = e.spec.default_config();
+        let first = e.step(&a).load_series.clone();
+        e.step(&a);
+        e.reset(0);
+        assert_eq!(e.step(&a).load_series, first, "reset replay starts over");
+    }
+
+    #[test]
+    fn action_into_variants_match_allocating_codecs() {
+        let spec = catalog::video_analytics().spec;
+        let cfgs = vec![
+            TaskConfig::new(1, 3, 2),
+            TaskConfig::new(0, 1, 0),
+            TaskConfig::new(3, 8, 5),
+            TaskConfig::new(2, 4, 1),
+        ];
+        let mut idx = Vec::new();
+        encode_action_into(&spec, &cfgs, &mut idx);
+        assert_eq!(idx, encode_action(&spec, &cfgs));
+        let mut back = Vec::new();
+        decode_action_into(&spec, &idx, &mut back);
+        assert_eq!(back, decode_action(&spec, &idx));
+        assert_eq!(back, cfgs);
+        // reuse: same buffers again, no shape drift
+        encode_action_into(&spec, &cfgs, &mut idx);
+        decode_action_into(&spec, &idx, &mut back);
+        assert_eq!(back, cfgs);
+    }
+
+    #[test]
+    fn env_is_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<Env>();
     }
 
     #[test]

@@ -10,6 +10,7 @@ pub mod multi;
 pub use engine::{run_cycle, CycleResult};
 pub use env::{
     build_masks, build_masks_into, build_state, build_state_append, build_state_into,
-    decode_action, encode_action, ActionMasks, Env, LoadSource, Observation, StepResult,
+    decode_action, decode_action_into, encode_action, encode_action_into, ActionMasks, Env,
+    LiteStep, LoadSource, Observation, StepResult,
 };
 pub use multi::{MultiEnv, Tenant, TenantStatus};

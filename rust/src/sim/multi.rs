@@ -13,6 +13,7 @@ use std::collections::BTreeMap;
 
 use crate::agents::Agent;
 use crate::cluster::{ApplyOutcome, ClusterTopology, DeploymentStore};
+use crate::nn::policy::{predictor_fwd_batch_scratch, LstmBatchScratch};
 use crate::nn::spec::{LOGITS_DIM, PRED_WINDOW, STATE_DIM};
 use crate::nn::workspace::Workspace;
 use crate::pipeline::{pipeline_metrics, PipelineMetrics, PipelineSpec, QosWeights, TaskConfig};
@@ -147,8 +148,22 @@ pub struct MultiEnv {
     pub batched_decisions: usize,
     /// cumulative count of batched forwards executed
     pub batched_groups: usize,
+    /// cumulative count of load predictions served by a batched LSTM pass
+    /// (DESIGN.md §9 — one sweep over the weights for the whole group)
+    pub batched_predictions: usize,
+    /// cumulative count of batched LSTM passes executed
+    pub batched_predictor_groups: usize,
     ws: Workspace,
     batch_states: Vec<f32>,
+    /// reused predictor-window scratch (raw f64 window of one tenant)
+    win_scratch: Vec<f64>,
+    /// stacked (B, PRED_WINDOW) f32 windows of one predictor group
+    pred_windows: Vec<f32>,
+    /// copy of the group's shared predictor weights (borrow decoupling)
+    pred_weights: Vec<f32>,
+    /// member indices (into the group's name list) served by the batch
+    pred_group: Vec<usize>,
+    lstm_batch: LstmBatchScratch,
 }
 
 impl MultiEnv {
@@ -160,8 +175,15 @@ impl MultiEnv {
             batching: true,
             batched_decisions: 0,
             batched_groups: 0,
+            batched_predictions: 0,
+            batched_predictor_groups: 0,
             ws: Workspace::new(),
             batch_states: Vec::new(),
+            win_scratch: Vec::new(),
+            pred_windows: Vec::new(),
+            pred_weights: Vec::new(),
+            pred_group: Vec::new(),
+            lstm_batch: LstmBatchScratch::default(),
         }
     }
 
@@ -229,8 +251,8 @@ impl MultiEnv {
             None => return,
         };
         let spec = t.spec.clone();
-        let window = t.history.window(PRED_WINDOW);
-        let load_pred = t.predictor.predict_max(&window);
+        t.history.window_into(PRED_WINDOW, &mut self.win_scratch);
+        let load_pred = t.predictor.predict_max(&self.win_scratch);
         t.last_pred = load_pred;
         let current = self
             .store
@@ -272,6 +294,81 @@ impl MultiEnv {
         t.next_decision = self.now + t.adapt_interval_secs as f64;
     }
 
+    /// Compute every group member's load prediction, setting `last_pred`.
+    /// Members whose predictors advertise the SAME native weight vector
+    /// (fingerprint match — in practice the whole group, since one factory
+    /// builds them) are evaluated in ONE batched LSTM pass: each timestep
+    /// sweeps the recurrent weights once for all members instead of once
+    /// per member, so the leader's per-tick predictor cost stops scaling
+    /// with a full weight sweep per tenant. Everyone else (naive baselines,
+    /// HLO-backed predictors, odd-weights members) predicts sequentially.
+    /// Row-bitwise equal to the sequential path, so batching never changes
+    /// a decision.
+    fn predict_group(&mut self, names: &[String]) {
+        self.pred_windows.clear();
+        self.pred_group.clear();
+        let mut group_fp: Option<u64> = None;
+        for (i, name) in names.iter().enumerate() {
+            let t = match self.tenants.get_mut(name) {
+                Some(t) => t,
+                None => continue,
+            };
+            t.history.window_into(PRED_WINDOW, &mut self.win_scratch);
+            let joins = matches!(
+                t.predictor.batch_params(),
+                Some((_, fp)) if group_fp.is_none() || group_fp == Some(fp)
+            );
+            if joins {
+                let (_, fp) = t.predictor.batch_params().expect("checked above");
+                group_fp = Some(fp);
+                let w = t
+                    .predictor
+                    .batch_window(&self.win_scratch)
+                    .expect("batch_params implies batch_window");
+                self.pred_windows.extend_from_slice(w);
+                self.pred_group.push(i);
+            } else {
+                t.last_pred = t.predictor.predict_max(&self.win_scratch);
+            }
+        }
+        match self.pred_group.len() {
+            0 => {}
+            1 => {
+                // a lone batchable member gains nothing from the kernel —
+                // predict sequentially like everyone else
+                let t = self
+                    .tenants
+                    .get_mut(&names[self.pred_group[0]])
+                    .expect("group member exists");
+                t.history.window_into(PRED_WINDOW, &mut self.win_scratch);
+                t.last_pred = t.predictor.predict_max(&self.win_scratch);
+            }
+            batch => {
+                // decouple the weights borrow from the tenant map: copy the
+                // shared vector into the reused buffer (2.7k floats)
+                {
+                    let t = self
+                        .tenants
+                        .get(&names[self.pred_group[0]])
+                        .expect("group member exists");
+                    let (w, _) = t.predictor.batch_params().expect("batched member");
+                    self.pred_weights.clear();
+                    self.pred_weights.extend_from_slice(w);
+                }
+                let Self { tenants, pred_windows, pred_weights, pred_group, lstm_batch, .. } =
+                    self;
+                let preds =
+                    predictor_fwd_batch_scratch(pred_weights, pred_windows, batch, lstm_batch);
+                for (j, &i) in pred_group.iter().enumerate() {
+                    let t = tenants.get_mut(&names[i]).expect("group member exists");
+                    t.last_pred = (preds[j] as f64).max(0.0);
+                }
+                self.batched_predictions += batch;
+                self.batched_predictor_groups += 1;
+            }
+        }
+    }
+
     /// Run one batched forward for a fingerprint group of ≥1 due tenants:
     /// build every member's observation against the tick-start snapshot,
     /// stack the Eq. 5 state rows, evaluate them in ONE pass over the shared
@@ -282,6 +379,7 @@ impl MultiEnv {
     /// is actually allocated, so shared-capacity invariants are unchanged.
     fn decide_group(&mut self, names: &[String]) {
         let n_tenants = self.tenants.len();
+        self.predict_group(names);
         self.batch_states.clear();
         let mut preps: Vec<GroupPrep> = Vec::with_capacity(names.len());
         for name in names {
@@ -290,9 +388,9 @@ impl MultiEnv {
                 None => continue,
             };
             let spec = t.spec.clone();
-            let window = t.history.window(PRED_WINDOW);
-            let load_pred = t.predictor.predict_max(&window);
-            t.last_pred = load_pred;
+            // load_pred was computed by predict_group (batched when the
+            // members share predictor weights)
+            let load_pred = t.last_pred;
             let load_now = t.last_rate;
             let adapt_interval_secs = t.adapt_interval_secs as f64;
             let current = self
@@ -488,7 +586,17 @@ impl MultiEnv {
     }
 
     pub fn statuses(&self) -> Vec<TenantStatus> {
-        self.tenants.keys().filter_map(|n| self.status(n)).collect()
+        let mut out = Vec::new();
+        self.statuses_into(&mut out);
+        out
+    }
+
+    /// [`MultiEnv::statuses`] into a caller-owned buffer (cleared first) —
+    /// the leader publishes every tick, so reusing the outer vec spares a
+    /// per-second allocation ramp.
+    pub fn statuses_into(&self, out: &mut Vec<TenantStatus>) {
+        out.clear();
+        out.extend(self.tenants.keys().filter_map(|n| self.status(n)));
     }
 }
 
@@ -638,6 +746,79 @@ mod tests {
         env.run_for(20);
         assert_eq!(env.batched_decisions, 6, "the odd-params tenant stays sequential");
         assert_eq!(env.status("other").unwrap().decisions, 1);
+    }
+
+    fn shared_pred_weights(seed: u64) -> Vec<f32> {
+        use crate::nn::spec::PREDICTOR_PARAM_COUNT;
+        use crate::util::prng::Pcg32;
+        let mut rng = Pcg32::new(seed);
+        (0..PREDICTOR_PARAM_COUNT).map(|_| (rng.normal() * 0.05) as f32).collect()
+    }
+
+    fn opd_lstm_tenant(
+        name: &str,
+        pipeline: &str,
+        params: Vec<f32>,
+        pred_weights: Vec<f32>,
+        seed: u64,
+    ) -> Tenant {
+        use crate::agents::OpdAgent;
+        use crate::workload::predictor::LstmPredictor;
+        Tenant::new(
+            name,
+            catalog::by_name(pipeline).unwrap().spec,
+            Box::new(OpdAgent::native(params, seed)),
+            QosWeights::default(),
+            LoadSource::Gen(WorkloadGen::new(WorkloadKind::Fluctuating, seed)),
+            Box::new(LstmPredictor::native(pred_weights)),
+            10,
+        )
+    }
+
+    #[test]
+    fn grouped_tenants_share_one_batched_predictor_pass() {
+        let params = shared_params(23);
+        let pw = shared_pred_weights(24);
+        let mut env = MultiEnv::new(ClusterTopology::paper_testbed(), 3.0);
+        env.deploy(opd_lstm_tenant("a", "P1", params.clone(), pw.clone(), 1), None).unwrap();
+        env.deploy(opd_lstm_tenant("b", "P1", params.clone(), pw.clone(), 2), None).unwrap();
+        env.deploy(opd_lstm_tenant("c", "iot-anomaly", params.clone(), pw.clone(), 3), None)
+            .unwrap();
+        env.run_for(25); // decision rounds at t = 10 and t = 20
+        assert_eq!(env.batched_predictor_groups, 2, "one LSTM pass per aligned round");
+        assert_eq!(env.batched_predictions, 6, "3 tenants × 2 rounds through the batch");
+        assert_eq!(env.batched_decisions, 6, "decision batching is unchanged");
+        for name in ["a", "b", "c"] {
+            let s = env.status(name).unwrap();
+            assert!(s.load_pred.is_finite() && s.load_pred >= 0.0);
+            assert_eq!(s.decisions, 2);
+        }
+    }
+
+    #[test]
+    fn odd_predictor_weights_fall_back_to_sequential_prediction() {
+        let params = shared_params(29);
+        let mut env = MultiEnv::new(ClusterTopology::paper_testbed(), 3.0);
+        env.deploy(
+            opd_lstm_tenant("a", "P1", params.clone(), shared_pred_weights(30), 1),
+            None,
+        )
+        .unwrap();
+        // same agent params (one decision group) but different LSTM weights
+        // and a non-batchable baseline predictor: no predictor batch forms
+        env.deploy(
+            opd_lstm_tenant("b", "P1", params.clone(), shared_pred_weights(31), 2),
+            None,
+        )
+        .unwrap();
+        env.deploy(opd_tenant("c", "P1", params.clone(), 3), None).unwrap();
+        env.run_for(15);
+        assert_eq!(env.batched_decisions, 3, "agent batching still groups all three");
+        assert_eq!(env.batched_predictor_groups, 0);
+        assert_eq!(env.batched_predictions, 0);
+        for name in ["a", "b", "c"] {
+            assert_eq!(env.status(name).unwrap().decisions, 1);
+        }
     }
 
     #[test]

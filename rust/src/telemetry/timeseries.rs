@@ -32,9 +32,19 @@ impl TimeSeriesStore {
     /// Last `n` values (left-padded; see LoadHistory::window). Empty vec when
     /// the series does not exist.
     pub fn window(&self, name: &str, n: usize) -> Vec<f64> {
-        match self.series.lock().unwrap().get(name) {
-            Some(h) => h.window(n),
-            None => Vec::new(),
+        let mut out = Vec::new();
+        self.window_into(name, n, &mut out);
+        out
+    }
+
+    /// [`TimeSeriesStore::window`] into a caller-owned buffer (cleared
+    /// first) — the leader publish tick reads series every second, so the
+    /// fresh-`Vec`-per-call variant is hot-loop churn. The buffer is left
+    /// empty when the series does not exist.
+    pub fn window_into(&self, name: &str, n: usize, out: &mut Vec<f64>) {
+        out.clear();
+        if let Some(h) = self.series.lock().unwrap().get(name) {
+            h.window_into(n, out);
         }
     }
 
@@ -43,7 +53,17 @@ impl TimeSeriesStore {
     }
 
     pub fn names(&self) -> Vec<String> {
-        self.series.lock().unwrap().keys().cloned().collect()
+        let mut out = Vec::new();
+        self.for_each_name(|n| out.push(n.to_string()));
+        out
+    }
+
+    /// Visit every series name without cloning the key set — the borrow
+    /// variant of [`TimeSeriesStore::names`] for per-tick consumers.
+    pub fn for_each_name(&self, mut f: impl FnMut(&str)) {
+        for name in self.series.lock().unwrap().keys() {
+            f(name);
+        }
     }
 }
 
@@ -88,5 +108,22 @@ mod tests {
         assert_eq!(ts.latest("a"), Some(1.0));
         assert_eq!(ts.latest("b"), Some(2.0));
         assert_eq!(ts.names(), vec!["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn window_into_and_for_each_name_match_allocating_variants() {
+        let ts = TimeSeriesStore::new(10);
+        for i in 0..4 {
+            ts.record("load", i as f64);
+        }
+        ts.record("qos", 1.0);
+        let mut buf = Vec::new();
+        ts.window_into("load", 3, &mut buf);
+        assert_eq!(buf, ts.window("load", 3));
+        ts.window_into("missing", 3, &mut buf);
+        assert!(buf.is_empty());
+        let mut seen = Vec::new();
+        ts.for_each_name(|n| seen.push(n.to_string()));
+        assert_eq!(seen, ts.names());
     }
 }

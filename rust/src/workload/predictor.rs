@@ -1,19 +1,43 @@
 //! Workload predictors (paper §IV-A): the LSTM (2-minute window → max load
 //! of the next 20 s) plus the naive baselines Fig. 3 is implicitly compared
-//! against. The LSTM runs either through the AOT HLO program (decision path)
-//! or the pure-rust mirror (fallback / cross-check).
+//! against. The native LSTM mirror is `Send` (it powers the rollout
+//! engine's thread-sharded environments); the PJRT-backed variant is a
+//! separate, leader-thread-confined type ([`HloLstmPredictor`]).
 
 use std::rc::Rc;
 
 use crate::nn::policy::{predictor_fwd_scratch, LstmScratch};
 use crate::nn::spec::{PRED_HORIZON, PRED_WINDOW};
+use crate::nn::workspace::params_fingerprint;
 use crate::runtime::OpdRuntime;
 
 /// A load predictor consumes the recent per-second history (raw req/s,
 /// oldest first) and predicts the maximum load over the next horizon.
+///
+/// Predictors whose forward is a native pass over a flat weight vector
+/// additionally opt into the **batched predictor path** (DESIGN.md §9): the
+/// multi-tenant tick groups such predictors by weight fingerprint and
+/// evaluates every member's window in one `predictor_fwd_batch_scratch`
+/// pass (one sweep over the recurrent weights serves all tenants).
 pub trait LoadPredictor {
     fn name(&self) -> &'static str;
     fn predict_max(&mut self, window: &[f64]) -> f64;
+
+    /// Batched-evaluation support: the flat native weight vector plus its
+    /// stable fingerprint. `None` (the default) keeps the predictor on the
+    /// per-tenant sequential path.
+    fn batch_params(&self) -> Option<(&[f32], u64)> {
+        None
+    }
+
+    /// Stage `window` into the predictor's internal PRED_WINDOW buffer
+    /// (left-padded like the sequential path) and return it, so the caller
+    /// can stack group members into one (B, PRED_WINDOW) matrix. `None`
+    /// (the default) means the predictor does not batch.
+    fn batch_window(&mut self, window: &[f64]) -> Option<&[f32]> {
+        let _ = window;
+        None
+    }
 }
 
 /// Baseline: tomorrow looks like right now.
@@ -55,35 +79,27 @@ impl LoadPredictor for MovingMaxPredictor {
     }
 }
 
-/// The paper's LSTM predictor, with trained weights from the AOT step.
-/// The PRED_WINDOW input buffer and the LSTM cell-state scratch are owned
-/// by the predictor and reused across ticks (DESIGN.md §7): a leader with
-/// many tenants runs one of these per tenant per adaptation decision, so
-/// the old fresh-`Vec`-per-call layout was measurable churn.
+/// The paper's LSTM predictor running through the pure-rust mirror. The
+/// PRED_WINDOW input buffer and the LSTM cell-state scratch are owned by
+/// the predictor and reused across ticks (DESIGN.md §7); the weight
+/// fingerprint is computed once so the multi-tenant tick can group
+/// same-weights predictors without comparing 2.7k floats.
 pub struct LstmPredictor {
     weights: Vec<f32>,
-    runtime: Option<Rc<OpdRuntime>>,
+    fp: u64,
     /// left-padded f32 window, reused across predictions
     window_buf: Vec<f32>,
     scratch: LstmScratch,
 }
 
 impl LstmPredictor {
-    /// HLO-backed (Pallas LSTM cell kernel inside the lowered graph).
-    pub fn hlo(runtime: Rc<OpdRuntime>) -> Self {
-        Self {
-            weights: runtime.predictor_weights.clone(),
-            runtime: Some(runtime),
-            window_buf: vec![0.0; PRED_WINDOW],
-            scratch: LstmScratch::default(),
-        }
-    }
-
-    /// Pure-rust mirror (no PJRT needed).
+    /// Pure-rust mirror (no PJRT needed). `Send` — safe inside the rollout
+    /// engine's thread-sharded environments.
     pub fn native(weights: Vec<f32>) -> Self {
+        let fp = params_fingerprint(&weights);
         Self {
             weights,
-            runtime: None,
+            fp,
             window_buf: vec![0.0; PRED_WINDOW],
             scratch: LstmScratch::default(),
         }
@@ -91,17 +107,22 @@ impl LstmPredictor {
 
     /// Left-pad / truncate `window` into the reused PRED_WINDOW buffer.
     fn fill_window(&mut self, window: &[f64]) {
-        let w = &mut self.window_buf;
-        debug_assert_eq!(w.len(), PRED_WINDOW);
-        let n = window.len().min(PRED_WINDOW);
-        let pad = PRED_WINDOW - n;
-        let first = window.first().copied().unwrap_or(0.0) as f32;
-        for slot in w.iter_mut().take(pad) {
-            *slot = first;
-        }
-        for (i, &x) in window[window.len() - n..].iter().enumerate() {
-            w[pad + i] = x as f32;
-        }
+        fill_window_buf(&mut self.window_buf, window);
+    }
+}
+
+/// Left-pad / truncate `window` into a PRED_WINDOW f32 buffer (shared by
+/// the native and HLO predictor types).
+fn fill_window_buf(w: &mut [f32], window: &[f64]) {
+    debug_assert_eq!(w.len(), PRED_WINDOW);
+    let n = window.len().min(PRED_WINDOW);
+    let pad = PRED_WINDOW - n;
+    let first = window.first().copied().unwrap_or(0.0) as f32;
+    for slot in w.iter_mut().take(pad) {
+        *slot = first;
+    }
+    for (i, &x) in window[window.len() - n..].iter().enumerate() {
+        w[pad + i] = x as f32;
     }
 }
 
@@ -112,12 +133,52 @@ impl LoadPredictor for LstmPredictor {
 
     fn predict_max(&mut self, window: &[f64]) -> f64 {
         self.fill_window(window);
-        let pred = match &self.runtime {
-            Some(rt) => rt.predict_load(&self.window_buf).unwrap_or_else(|_| {
-                predictor_fwd_scratch(&self.weights, &self.window_buf, &mut self.scratch)
-            }),
-            None => predictor_fwd_scratch(&self.weights, &self.window_buf, &mut self.scratch),
-        };
+        let pred = predictor_fwd_scratch(&self.weights, &self.window_buf, &mut self.scratch);
+        (pred as f64).max(0.0)
+    }
+
+    fn batch_params(&self) -> Option<(&[f32], u64)> {
+        Some((&self.weights, self.fp))
+    }
+
+    fn batch_window(&mut self, window: &[f64]) -> Option<&[f32]> {
+        self.fill_window(window);
+        Some(&self.window_buf)
+    }
+}
+
+/// The LSTM predictor through the AOT HLO program (Pallas LSTM cell kernel
+/// inside the lowered graph), falling back to the native mirror when the
+/// device call fails. Holds an `Rc<OpdRuntime>`, so it is leader-thread
+/// confined and does not participate in the batched predictor path.
+pub struct HloLstmPredictor {
+    runtime: Rc<OpdRuntime>,
+    weights: Vec<f32>,
+    window_buf: Vec<f32>,
+    scratch: LstmScratch,
+}
+
+impl HloLstmPredictor {
+    pub fn new(runtime: Rc<OpdRuntime>) -> Self {
+        Self {
+            weights: runtime.predictor_weights.clone(),
+            runtime,
+            window_buf: vec![0.0; PRED_WINDOW],
+            scratch: LstmScratch::default(),
+        }
+    }
+}
+
+impl LoadPredictor for HloLstmPredictor {
+    fn name(&self) -> &'static str {
+        "lstm"
+    }
+
+    fn predict_max(&mut self, window: &[f64]) -> f64 {
+        fill_window_buf(&mut self.window_buf, window);
+        let pred = self.runtime.predict_load(&self.window_buf).unwrap_or_else(|_| {
+            predictor_fwd_scratch(&self.weights, &self.window_buf, &mut self.scratch)
+        });
         (pred as f64).max(0.0)
     }
 }
@@ -156,5 +217,41 @@ mod tests {
         let weights = vec![-0.5f32; crate::nn::spec::PREDICTOR_PARAM_COUNT];
         let mut p = LstmPredictor::native(weights);
         assert!(p.predict_max(&[100.0; PRED_WINDOW]) >= 0.0);
+    }
+
+    #[test]
+    fn lstm_is_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<LstmPredictor>();
+        assert_send::<MovingMaxPredictor>();
+        assert_send::<LastValuePredictor>();
+    }
+
+    #[test]
+    fn lstm_advertises_batch_support_with_stable_fingerprint() {
+        let weights = vec![0.03f32; crate::nn::spec::PREDICTOR_PARAM_COUNT];
+        let a = LstmPredictor::native(weights.clone());
+        let b = LstmPredictor::native(weights.clone());
+        let (wa, fa) = a.batch_params().unwrap();
+        let (_, fb) = b.batch_params().unwrap();
+        assert_eq!(fa, fb, "same weights → same fingerprint");
+        assert_eq!(wa.len(), weights.len());
+        let mut other = weights;
+        other[100] += 0.5;
+        let c = LstmPredictor::native(other);
+        assert_ne!(c.batch_params().unwrap().1, fa);
+        let mut m = MovingMaxPredictor::default();
+        assert!(LoadPredictor::batch_params(&m).is_none());
+        assert!(m.batch_window(&[1.0]).is_none());
+    }
+
+    #[test]
+    fn batch_window_stages_the_padded_window() {
+        let weights = vec![0.02f32; crate::nn::spec::PREDICTOR_PARAM_COUNT];
+        let mut p = LstmPredictor::native(weights);
+        let staged = p.batch_window(&[5.0, 6.0]).unwrap().to_vec();
+        assert_eq!(staged.len(), PRED_WINDOW);
+        assert_eq!(staged[0], 5.0);
+        assert_eq!(staged[PRED_WINDOW - 1], 6.0);
     }
 }

@@ -43,16 +43,30 @@ impl LoadHistory {
     /// Last `n` seconds, oldest first, left-padded with the earliest value
     /// when fewer than `n` samples exist (cold-start behaviour).
     pub fn window(&self, n: usize) -> Vec<f64> {
+        let mut out = Vec::with_capacity(n);
+        self.window_into(n, &mut out);
+        out
+    }
+
+    /// [`LoadHistory::window`] into a caller-owned buffer (cleared first) —
+    /// the hot-loop variant: predictors run every adaptation decision of
+    /// every tenant, so a fresh `Vec` per window is measurable churn.
+    pub fn window_into(&self, n: usize, out: &mut Vec<f64>) {
+        out.clear();
         let have = self.buf.len();
         let pad_val = self.buf.front().copied().unwrap_or(0.0);
-        let mut out = Vec::with_capacity(n);
         if have < n {
             out.resize(n - have, pad_val);
             out.extend(self.buf.iter().copied());
         } else {
             out.extend(self.buf.iter().skip(have - n).copied());
         }
-        out
+    }
+
+    /// Drop every sample, keeping the ring-buffer allocation (the in-place
+    /// `Env::reset` path).
+    pub fn clear(&mut self) {
+        self.buf.clear();
     }
 }
 
@@ -127,6 +141,35 @@ mod tests {
         assert_eq!(h.window(3), vec![0.0, 0.0, 0.0]);
         assert_eq!(h.latest(), None);
         assert!(h.is_empty());
+    }
+
+    #[test]
+    fn window_into_matches_window_and_reuses_capacity() {
+        let mut h = LoadHistory::new(5);
+        for x in [1.0, 2.0, 3.0] {
+            h.push(x);
+        }
+        let mut buf = Vec::new();
+        h.window_into(4, &mut buf);
+        assert_eq!(buf, h.window(4));
+        let cap = buf.capacity();
+        h.push(4.0);
+        h.window_into(4, &mut buf);
+        assert_eq!(buf, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(buf.capacity(), cap, "reused buffer must not reallocate");
+    }
+
+    #[test]
+    fn clear_keeps_capacity_and_resets_samples() {
+        let mut h = LoadHistory::new(8);
+        for x in 0..6 {
+            h.push(x as f64);
+        }
+        h.clear();
+        assert!(h.is_empty());
+        assert_eq!(h.latest(), None);
+        h.push(9.0);
+        assert_eq!(h.window(2), vec![9.0, 9.0]);
     }
 
     #[test]

@@ -1,0 +1,171 @@
+//! Determinism contract of the vectorized parallel rollout engine
+//! (DESIGN.md §9): for fixed seeds, trajectories and training history are
+//! bitwise identical for ANY lane count (`envs`) and ANY worker thread
+//! count — concurrency is an execution detail, never a semantics knob —
+//! and the engine's own machinery is allocation-free after warm-up.
+
+use opd::cluster::ClusterTopology;
+use opd::nn::spec::*;
+use opd::pipeline::{catalog, QosWeights};
+use opd::rl::{EpisodeSpec, RolloutEngine, Trainer, TrainerConfig, TrainingHistory};
+use opd::sim::Env;
+use opd::util::prng::Pcg32;
+use opd::workload::predictor::MovingMaxPredictor;
+use opd::workload::WorkloadKind;
+
+fn factory(seed: u64) -> Env {
+    Env::from_workload(
+        catalog::by_name("P1").unwrap().spec,
+        ClusterTopology::paper_testbed(),
+        QosWeights::default(),
+        WorkloadKind::Fluctuating,
+        seed,
+        Box::new(MovingMaxPredictor::default()),
+        10,
+        120,
+        3.0,
+    )
+}
+
+fn small_params(seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed);
+    (0..POLICY_PARAM_COUNT).map(|_| (rng.normal() * 0.02) as f32).collect()
+}
+
+fn wave(n: usize, base_seed: u64, expert_freq: usize) -> Vec<EpisodeSpec> {
+    (1..=n)
+        .map(|episode| EpisodeSpec {
+            episode,
+            seed: base_seed + episode as u64,
+            expert: expert_freq > 0 && episode % expert_freq == 0,
+        })
+        .collect()
+}
+
+/// Full bitwise fingerprint of a collected wave: every transition field of
+/// every episode plus the per-episode metadata.
+fn fingerprint(eng: &RolloutEngine) -> Vec<u64> {
+    let mut out = Vec::new();
+    for (i, r) in eng.results().iter().enumerate() {
+        out.push(r.episode as u64);
+        out.push(r.expert as u64);
+        out.push(r.mean_reward.to_bits());
+        out.push(r.bootstrap.to_bits());
+        out.push(r.steps as u64);
+        for tr in &eng.buffer(i).transitions {
+            for x in &tr.state {
+                out.push(x.to_bits() as u64);
+            }
+            for a in &tr.action_idx {
+                out.push(*a as u64);
+            }
+            out.push(tr.logp.to_bits() as u64);
+            out.push(tr.value.to_bits() as u64);
+            out.push(tr.reward.to_bits());
+            out.push(tr.head_mask.iter().fold(0u64, |acc, m| (acc << 1) | *m as u64));
+            out.push(tr.task_mask.iter().fold(0u64, |acc, m| (acc << 1) | *m as u64));
+        }
+    }
+    out
+}
+
+#[test]
+fn trajectories_are_bitwise_invariant_over_lanes_and_threads() {
+    let params = small_params(7);
+    let w = wave(8, 42, 2); // expert episodes interleaved every 2nd
+    let mut reference: Option<Vec<u64>> = None;
+    for (lanes, threads) in [(1usize, 1usize), (3, 2), (8, 4), (8, 1)] {
+        let mut eng = RolloutEngine::new(lanes, threads);
+        eng.collect_wave(&params, &w, &mut factory);
+        let fp = fingerprint(&eng);
+        match &reference {
+            None => reference = Some(fp),
+            Some(want) => assert_eq!(
+                &fp, want,
+                "K={lanes} threads={threads} changed a trajectory bit"
+            ),
+        }
+    }
+}
+
+fn history_bits(h: &TrainingHistory) -> Vec<u64> {
+    let mut out = vec![h.diverged_updates as u64];
+    for e in &h.episodes {
+        out.push(e.episode as u64);
+        out.push(e.expert as u64);
+        out.push(e.mean_reward.to_bits());
+        out.push(e.pi_loss.to_bits());
+        out.push(e.v_loss.to_bits());
+        out.push(e.entropy.to_bits());
+        out.push(e.approx_kl.to_bits());
+        out.push(e.diverged as u64);
+    }
+    out
+}
+
+fn train_with(envs: usize, threads: usize, sync_every: usize) -> (Vec<u64>, Vec<u32>) {
+    let tcfg = TrainerConfig {
+        episodes: 6,
+        expert_freq: 3,
+        epochs: 1,
+        minibatches: 1,
+        seed: 11,
+        envs,
+        rollout_threads: threads,
+        sync_every,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::native(small_params(12), tcfg, factory);
+    let history = trainer.train().unwrap().clone();
+    let params: Vec<u32> = trainer.learner.params.iter().map(|p| p.to_bits()).collect();
+    (history_bits(&history), params)
+}
+
+#[test]
+fn training_history_and_params_are_lane_and_thread_invariant() {
+    // fixed sync width → the update schedule is pinned; lanes/threads are
+    // pure execution. K=1 IS the sequential path.
+    let (h1, p1) = train_with(1, 1, 3);
+    let (h3, p3) = train_with(3, 2, 3);
+    let (h8, p8) = train_with(8, 4, 3);
+    assert_eq!(h1, h3, "K=3 changed the training history");
+    assert_eq!(h1, h8, "K=8 changed the training history");
+    assert_eq!(p1, p3, "K=3 changed the learned parameters");
+    assert_eq!(p1, p8, "K=8 changed the learned parameters");
+}
+
+#[test]
+fn idle_lanes_do_not_change_per_episode_sync() {
+    // sync_every = 1 (the paper's per-episode schedule): extra lanes sit
+    // idle and the result is identical to the single-lane trainer
+    let (h1, p1) = train_with(1, 1, 1);
+    let (h4, p4) = train_with(4, 4, 1);
+    assert_eq!(h1, h4);
+    assert_eq!(p1, p4);
+}
+
+#[test]
+fn sync_width_is_a_semantics_knob_unlike_lanes() {
+    // sanity check of the contract's boundary: widening the sync window
+    // (stale-params rollouts) is ALLOWED to change results — it is the one
+    // knob that does
+    let (h1, _) = train_with(1, 1, 1);
+    let (h3, _) = train_with(1, 1, 3);
+    assert_ne!(h1, h3, "sync_every should alter the update schedule");
+}
+
+#[test]
+fn engine_is_allocation_free_after_warmup_with_threads() {
+    let params = small_params(21);
+    let mut eng = RolloutEngine::new(4, 4);
+    eng.collect_wave(&params, &wave(6, 50, 2), &mut factory);
+    let warm = eng.grow_events();
+    for round in 0..3 {
+        eng.collect_wave(&params, &wave(6, 200 + 10 * round, 2), &mut factory);
+        assert_eq!(
+            eng.grow_events(),
+            warm,
+            "wave {round}: warm engine must not allocate"
+        );
+    }
+}

@@ -116,7 +116,9 @@ fn opd_agent_over_hlo_produces_valid_configs() {
         QosWeights::default(),
         WorkloadKind::Fluctuating,
         3,
-        Box::new(LstmPredictor::hlo(rt.clone())),
+        // Env predictors are `Send` (DESIGN.md §9): the native mirror on
+        // the artifact weights, matching what `opd` itself wires into Env
+        Box::new(LstmPredictor::native(rt.predictor_weights.clone())),
         10,
         60,
         3.0,
