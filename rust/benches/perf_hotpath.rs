@@ -187,12 +187,18 @@ fn main() {
     println!();
     for preset in Preset::all() {
         let spec = catalog::preset(preset).spec;
-        let agent = IpaAgent::new();
+        let mut agent = IpaAgent::new();
         let (s, v) = preset.dims();
+        // cycle the demand past the solver's memo capacity so this row
+        // measures warm-started branch-and-bound solves, not cache hits
+        // (perf_ipa carries the full cold/warm/memo breakdown)
+        let mut d = 0u64;
         let r = bench.run(
             &format!("IPA solve {} ({s}×{v})", preset.name()),
             || {
-                std::hint::black_box(agent.solve(&spec, 80.0, 30.0));
+                d += 1;
+                let demand = 40.0 + (d % 97) as f64;
+                std::hint::black_box(agent.solve(&spec, demand, 30.0));
             },
         );
         println!("{}", r.row());

@@ -1,0 +1,170 @@
+//! §Perf — incremental branch-and-bound IPA solver (DESIGN.md §10, the
+//! Fig. 6 decision-time cost driver): per-preset solve-time sweep of the
+//! exhaustive reference vs the pruned solver (cold, warm-started, and
+//! memo-hit), an equality audit (pruned results must be bitwise identical
+//! to exhaustive), pruning-power counters, and the alloc-flat assertion
+//! (`IpaSolver::grow_events` stays put once warm). Writes BENCH_ipa.json.
+//!
+//! Run: cargo bench --bench perf_ipa [-- --quick]
+
+use std::time::Instant;
+
+use opd::agents::IpaSolver;
+use opd::pipeline::catalog::{self, Preset};
+use opd::pipeline::QosWeights;
+use opd::util::json::Json;
+
+const BUDGET: f64 = 30.0; // the paper testbed's W_max
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+fn demands(n: usize) -> Vec<f64> {
+    (0..n).map(|i| 10.0 + 140.0 * i as f64 / (n - 1).max(1) as f64).collect()
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    println!(
+        "=== §Perf: branch-and-bound IPA solver (DESIGN.md §10){} ===\n",
+        if quick { " [quick]" } else { "" }
+    );
+    let grid = demands(if quick { 5 } else { 12 });
+    let mut rows: Vec<Json> = Vec::new();
+    let mut speedups: Vec<(Preset, f64, f64)> = Vec::new();
+    println!(
+        "{:<4} {:>8} {:>14} {:>14} {:>14} {:>14} {:>9} {:>9}",
+        "pipe", "combos", "exhaustive", "pruned cold", "pruned warm", "memo hit", "×cold", "×warm"
+    );
+
+    for preset in Preset::all() {
+        let spec = catalog::preset(preset).spec;
+        let (s, v) = preset.dims();
+        let combos = (v as u64).pow(s as u32);
+        // P4's exhaustive reference is seconds per solve; audit one point in
+        // full mode and skip it entirely in --quick (pruned rows still run)
+        let exhaustive_grid: &[f64] = match (preset, quick) {
+            (Preset::P4, true) => &[],
+            (Preset::P4, false) => &grid[..1],
+            _ => &grid,
+        };
+
+        // -- exhaustive reference + equality audit ------------------------
+        let mut slow = IpaSolver::new(QosWeights::default());
+        let mut reference = Vec::new();
+        let mut t_slow = Vec::new();
+        for &d in exhaustive_grid {
+            let t0 = Instant::now();
+            let out = slow.solve_exhaustive(&spec, d, BUDGET);
+            t_slow.push(t0.elapsed().as_secs_f64() * 1e9);
+            reference.push(out);
+        }
+        let slow_leaves = slow.stats().leaves;
+
+        // -- pruned, cold: a fresh solver per solve (no memo, no warm) ----
+        // timed through solve_scratch(), the allocation-free entry point
+        // the expert decide path actually uses (solve() clones the result)
+        let mut t_cold = Vec::new();
+        let mut cold_leaves = 0u64;
+        for (i, &d) in grid.iter().enumerate() {
+            let mut cold = IpaSolver::new(QosWeights::default());
+            let t0 = Instant::now();
+            let score = cold.solve_scratch(&spec, d, BUDGET);
+            t_cold.push(t0.elapsed().as_secs_f64() * 1e9);
+            cold_leaves += cold.stats().leaves;
+            if let Some(want) = reference.get(i) {
+                assert_eq!(cold.best_config(), &want.0[..], "{preset:?} d={d}: configs");
+                assert_eq!(score.to_bits(), want.1.to_bits(), "{preset:?} d={d}: score");
+            }
+        }
+
+        // -- pruned, warm: one solver over a drifting-demand sequence -----
+        let mut warm = IpaSolver::new(QosWeights::default());
+        warm.solve_scratch(&spec, grid[0], BUDGET); // seed the warm start
+        let mut t_warm = Vec::new();
+        for &d in &grid {
+            let t0 = Instant::now();
+            warm.solve_scratch(&spec, d + 0.5, BUDGET); // off-grid → no memo hit
+            t_warm.push(t0.elapsed().as_secs_f64() * 1e9);
+        }
+        assert!(warm.stats().warm_bounds > 0, "{preset:?}: warm starts must engage");
+
+        // -- memoized: the steady-load interval (exact-key hit) -----------
+        let mut t_memo = Vec::new();
+        for _ in 0..grid.len() {
+            let t0 = Instant::now();
+            warm.solve_scratch(&spec, grid[0] + 0.5, BUDGET);
+            t_memo.push(t0.elapsed().as_secs_f64() * 1e9);
+        }
+
+        // -1 marks "not measured" (P4 exhaustive is skipped in --quick);
+        // NaN would not survive the JSON writer
+        let med_slow = if t_slow.is_empty() { -1.0 } else { median(t_slow) };
+        let (med_cold, med_warm, med_memo) = (median(t_cold), median(t_warm), median(t_memo));
+        let (x_cold, x_warm) = if med_slow > 0.0 {
+            (med_slow / med_cold, med_slow / med_warm)
+        } else {
+            (-1.0, -1.0)
+        };
+        println!(
+            "{:<4} {:>8} {:>12.2}µs {:>12.2}µs {:>12.2}µs {:>12.2}µs {:>8.1}× {:>8.1}×",
+            preset.name(),
+            combos,
+            med_slow / 1e3,
+            med_cold / 1e3,
+            med_warm / 1e3,
+            med_memo / 1e3,
+            x_cold,
+            x_warm
+        );
+        speedups.push((preset, x_cold, x_warm));
+        rows.push(
+            Json::obj()
+                .set("preset", preset.name())
+                .set("combos", combos as i64)
+                .set("exhaustive_median_ns", med_slow)
+                .set("pruned_cold_median_ns", med_cold)
+                .set("pruned_warm_median_ns", med_warm)
+                .set("memo_hit_median_ns", med_memo)
+                .set("speedup_cold", x_cold)
+                .set("speedup_warm", x_warm)
+                .set("leaves_exhaustive", slow_leaves as i64)
+                .set("leaves_pruned_cold_total", cold_leaves as i64)
+                .set("equality_points", reference.len()),
+        );
+    }
+
+    // -- alloc discipline: a warm solver never touches the heap ------------
+    let spec = catalog::preset(Preset::P2).spec;
+    let mut solver = IpaSolver::new(QosWeights::default());
+    for i in 0..48 {
+        // > memo capacity, so both rings cycle into steady-state reuse
+        solver.solve_scratch(&spec, 20.0 + i as f64, BUDGET);
+    }
+    let warm_growth = solver.grow_events();
+    for i in 0..48 {
+        solver.solve_scratch(&spec, 90.0 + i as f64, BUDGET);
+    }
+    assert_eq!(solver.grow_events(), warm_growth, "warm solver must not allocate");
+    println!("\n→ alloc-flat verified: 0 scratch/cache growths over 48 warm solves");
+
+    for (preset, x_cold, x_warm) in &speedups {
+        if matches!(preset, Preset::P2 | Preset::P3) && *x_cold < 5.0 {
+            println!(
+                "  ({} cold speedup {x_cold:.1}× below the 5× target; warm {x_warm:.1}×)",
+                preset.name()
+            );
+        }
+    }
+
+    let out = Json::obj()
+        .set("bench", "perf_ipa")
+        .set("quick", quick)
+        .set("budget", BUDGET)
+        .set("grid_points", grid.len())
+        .set("results", Json::Arr(rows));
+    std::fs::write("BENCH_ipa.json", out.to_pretty()).expect("write BENCH_ipa.json");
+    println!("wrote BENCH_ipa.json");
+}

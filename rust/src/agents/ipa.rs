@@ -9,22 +9,800 @@
 //! allocates replicas/batches under the W_max budget by marginal-gain
 //! ascent. It maximizes pure QoS (Eq. 3) — no cost term — which is why IPA
 //! lands at the top of the QoS *and* the cost charts (Fig. 4/5).
+//!
+//! Since PR 5 the enumeration is an incremental branch-and-bound
+//! ([`IpaSolver`], DESIGN.md §10): scratch-based scoring (no allocation in
+//! the ascent inner loop), prefix-cached incremental re-scoring (a
+//! single-stage move re-evaluates stages t..N only), subtree pruning by an
+//! admissible QoS upper bound + a min-core feasibility bound, exact-key
+//! memoization and a warm-start pruning bound from the previous interval.
+//! The optimizations are *engineering only*: the pruned solver returns
+//! configurations **bitwise identical** to the retained exhaustive
+//! reference ([`IpaSolver::solve_exhaustive`]) — pinned by property tests
+//! in `rust/tests/ipa_solver.rs` and measured by `benches/perf_ipa.rs`.
 
 use crate::agents::Agent;
+use crate::pipeline::perf::{stage_metrics, BATCH_TIMEOUT_MS};
 use crate::pipeline::{
-    pipeline_metrics, PipelineSpec, QosWeights, TaskConfig, BATCH_CHOICES, F_MAX,
+    PipelineMetrics, PipelineSpec, QosWeights, TaskConfig, BATCH_CHOICES, F_MAX,
 };
 use crate::sim::env::Observation;
 
-pub struct IpaAgent {
+/// Slack added to the admissible QoS upper bound before pruning: absorbs
+/// f64 summation-order drift between the bound's sums and the scorer's
+/// stage-ordered sums (≤ a few ULPs on O(10) quantities; the margin is ~9
+/// orders larger), so a subtree whose best leaf ties the incumbent exactly
+/// is never cut — pruning stays invisible to the result.
+const UB_SLACK: f64 = 1e-6;
+
+/// Same idea for the min-core feasibility bound: only subtrees whose
+/// lightest completion overshoots the budget by more than the drift margin
+/// are cut; every surviving leaf still runs the exact `total_cores` gate.
+const CORES_SLACK: f64 = 1e-6;
+
+/// Entries per memo ring (solve memo and allocate memo). Small enough to
+/// scan linearly, large enough that steady/oscillating load patterns hit.
+const MEMO_CAP: usize = 32;
+
+/// Variant assignments pack into a u64 key at ≤ 8 stages (the catalog max);
+/// longer pipelines simply skip the allocate memo.
+const MAX_PACKED_STAGES: usize = 8;
+
+#[inline]
+fn fnv(h: u64, x: u64) -> u64 {
+    (h ^ x).wrapping_mul(0x100000001b3)
+}
+
+/// Identity of everything a solve result depends on besides (demand,
+/// budget): the full variant catalog and the QoS weights. A fingerprint
+/// change invalidates the memo rings and the warm-start state.
+fn solver_fingerprint(spec: &PipelineSpec, w: &QosWeights) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    h = fnv(h, spec.tasks.len() as u64);
+    for t in &spec.tasks {
+        h = fnv(h, t.variants.len() as u64);
+        for v in &t.variants {
+            h = fnv(h, v.accuracy.to_bits());
+            h = fnv(h, v.cores.to_bits());
+            h = fnv(h, v.base_latency_ms.to_bits());
+            h = fnv(h, v.per_item_ms.to_bits());
+        }
+    }
+    for x in [
+        w.alpha,
+        w.beta,
+        w.gamma,
+        w.delta,
+        w.lambda,
+        w.beta_cost,
+        w.gamma_batch,
+        w.throughput_scale,
+        w.latency_scale_ms,
+        w.excess_scale,
+        w.cost_scale,
+    ] {
+        h = fnv(h, x.to_bits());
+    }
+    h
+}
+
+/// Pack a variant assignment into a u64 memo key (leading 1 disambiguates
+/// lengths; at exactly 8 stages the marker bit shifts out, which is
+/// harmless — the memo is cleared on any spec change, so all live keys
+/// share one length). `None` when the pipeline is too long or a variant
+/// index too large to pack — the memo is skipped, results are unaffected.
+fn pack_variants<I: Iterator<Item = usize>>(n: usize, vs: I) -> Option<u64> {
+    if n > MAX_PACKED_STAGES {
+        return None;
+    }
+    let mut k = 1u64;
+    for v in vs {
+        if v > 0xfe {
+            return None;
+        }
+        k = (k << 8) | (v as u64 + 1);
+    }
+    Some(k)
+}
+
+/// Chain state *before* a stage: everything `pipeline_metrics` has
+/// accumulated over stages 0..t, in its exact accumulation order — so
+/// re-scoring from stage t onward is bitwise identical to a full re-walk.
+#[derive(Clone, Copy, Debug, Default)]
+struct StagePrefix {
+    /// load entering the stage (served throughput of the chain so far)
+    arrival: f64,
+    /// Σ accuracy of stages < t
+    acc: f64,
+    /// Σ latency of stages < t (ms)
+    lat: f64,
+    /// min capacity over stages < t (∞ at t = 0)
+    min_cap: f64,
+    /// Σ configured cores of stages < t (the `total_cores` prefix)
+    cores: f64,
+}
+
+struct SolveMemo {
+    demand: u64,
+    budget: u64,
+    score: f64,
+    cfgs: Vec<TaskConfig>,
+}
+
+struct AllocMemo {
+    variants: u64,
+    demand: u64,
+    budget: u64,
+    /// `None` records an infeasible assignment (cannot deploy at f = 1)
+    score: Option<f64>,
+    cfgs: Vec<TaskConfig>,
+}
+
+/// Cumulative work counters (read by `perf_ipa` to report pruning power).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SolverStats {
+    pub solves: u64,
+    /// allocations run by the enumeration (exhaustive: every combo)
+    pub leaves: u64,
+    /// subtrees cut by the admissible QoS upper bound
+    pub pruned_bound: u64,
+    /// subtrees cut by the min-core feasibility bound
+    pub pruned_cores: u64,
+    pub solve_memo_hits: u64,
+    pub alloc_memo_hits: u64,
+    /// solves seeded with a previous-interval warm-start bound
+    pub warm_bounds: u64,
+}
+
+/// Allocation-free, incrementally-scored, branch-and-bound IPA solver
+/// (DESIGN.md §10). Owns every piece of scratch the search needs, so a
+/// warm solver performs zero heap allocation per solve ([`grow_events`]
+/// is the proof hook); results are bitwise identical to
+/// [`solve_exhaustive`](IpaSolver::solve_exhaustive).
+pub struct IpaSolver {
     pub weights: QosWeights,
+    /// run every solve as the plain exhaustive odometer — no pruning, no
+    /// memoization, no warm start. The reference path the property tests
+    /// and `perf_ipa` compare the fast path against.
+    pub exhaustive: bool,
+    // ---- reusable scratch ----
+    cfgs: Vec<TaskConfig>,
+    best_cfgs: Vec<TaskConfig>,
+    combo: Vec<usize>,
+    prefix: Vec<StagePrefix>,
+    // per-solve bound ingredients: prefix sums over the *unfixed* stages
+    // 0..j of a DFS node (the odometer's fastest digit is stage 0, so the
+    // search fixes stages from the tail down)
+    acc_ub_pre: Vec<f64>,
+    lat_lb_pre: Vec<f64>,
+    min_cores_pre: Vec<f64>,
+    tput_ub: f64,
+    fill_lb: f64,
+    prune_ub: bool,
+    have_best: bool,
+    best_score: f64,
+    // ---- exact-key memoization + warm start ----
+    spec_fp: Option<u64>,
+    solve_memo: Vec<SolveMemo>,
+    solve_next: usize,
+    alloc_memo: Vec<AllocMemo>,
+    alloc_next: usize,
+    warm_variants: Vec<usize>,
+    has_warm: bool,
+    /// per-solve stash of the warm combo's allocation, so the DFS leaf for
+    /// that combo reuses it instead of re-running the ascent
+    warm_cfgs: Vec<TaskConfig>,
+    warm_score: f64,
+    warm_valid: bool,
+    stats: SolverStats,
+    grow_events: u64,
+}
+
+impl IpaSolver {
+    pub fn new(weights: QosWeights) -> Self {
+        Self {
+            weights,
+            exhaustive: false,
+            cfgs: Vec::new(),
+            best_cfgs: Vec::new(),
+            combo: Vec::new(),
+            prefix: Vec::new(),
+            acc_ub_pre: Vec::new(),
+            lat_lb_pre: Vec::new(),
+            min_cores_pre: Vec::new(),
+            tput_ub: 0.0,
+            fill_lb: 0.0,
+            prune_ub: false,
+            have_best: false,
+            best_score: f64::NEG_INFINITY,
+            spec_fp: None,
+            solve_memo: Vec::with_capacity(MEMO_CAP),
+            solve_next: 0,
+            alloc_memo: Vec::with_capacity(MEMO_CAP),
+            alloc_next: 0,
+            warm_variants: Vec::new(),
+            has_warm: false,
+            warm_cfgs: Vec::new(),
+            warm_score: f64::NEG_INFINITY,
+            warm_valid: false,
+            stats: SolverStats::default(),
+            grow_events: 0,
+        }
+    }
+
+    /// Winning configuration of the most recent solve.
+    pub fn best_config(&self) -> &[TaskConfig] {
+        &self.best_cfgs
+    }
+
+    pub fn stats(&self) -> SolverStats {
+        self.stats
+    }
+
+    /// Scratch/cache (re)allocation count — flat after warm-up at a steady
+    /// pipeline shape (asserted by `perf_ipa` and the solver tests).
+    pub fn grow_events(&self) -> u64 {
+        self.grow_events
+    }
+
+    fn ensure_cap<T>(v: &mut Vec<T>, cap: usize, grow: &mut u64) {
+        if v.capacity() < cap {
+            *grow += 1;
+            let len = v.len();
+            v.reserve(cap - len);
+        }
+    }
+
+    /// Size the scratch for `spec` and invalidate memo/warm state if the
+    /// catalog or the QoS weights changed since the previous call.
+    fn prepare(&mut self, spec: &PipelineSpec) {
+        let n = spec.n_tasks();
+        Self::ensure_cap(&mut self.cfgs, n, &mut self.grow_events);
+        Self::ensure_cap(&mut self.best_cfgs, n, &mut self.grow_events);
+        Self::ensure_cap(&mut self.combo, n, &mut self.grow_events);
+        Self::ensure_cap(&mut self.prefix, n + 1, &mut self.grow_events);
+        Self::ensure_cap(&mut self.acc_ub_pre, n + 1, &mut self.grow_events);
+        Self::ensure_cap(&mut self.lat_lb_pre, n + 1, &mut self.grow_events);
+        Self::ensure_cap(&mut self.min_cores_pre, n + 1, &mut self.grow_events);
+        Self::ensure_cap(&mut self.warm_variants, n, &mut self.grow_events);
+        Self::ensure_cap(&mut self.warm_cfgs, n, &mut self.grow_events);
+        let fp = solver_fingerprint(spec, &self.weights);
+        if self.spec_fp != Some(fp) {
+            self.spec_fp = Some(fp);
+            self.solve_memo.clear();
+            self.solve_next = 0;
+            self.alloc_memo.clear();
+            self.alloc_next = 0;
+            self.has_warm = false;
+        }
+    }
+
+    /// Stage `variants` into the working config at (f = 1, b = 1).
+    fn stage_variants(&mut self, variants: &[usize]) {
+        self.cfgs.clear();
+        self.cfgs
+            .extend(variants.iter().map(|&v| TaskConfig { variant: v, replicas: 1, batch_idx: 0 }));
+    }
+
+    /// Stage the current odometer combo into the working config.
+    fn stage_combo(&mut self, n: usize) {
+        let Self { cfgs, combo, .. } = self;
+        cfgs.clear();
+        cfgs.extend(
+            combo[..n].iter().map(|&v| TaskConfig { variant: v, replicas: 1, batch_idx: 0 }),
+        );
+    }
+
+    /// Eq. 3 QoS from the four chain aggregates (exactly `QosWeights::qos`
+    /// over a `PipelineMetrics` holding them; `Vec::new()` is heap-free).
+    fn qos_scalar(&self, acc: f64, throughput: f64, lat: f64, excess: f64) -> f64 {
+        let m = PipelineMetrics {
+            stages: Vec::new(),
+            accuracy: acc,
+            cost: 0.0,
+            throughput,
+            latency_ms: lat,
+            excess,
+            max_batch: 0,
+        };
+        self.weights.qos(&m)
+    }
+
+    /// Recompute `prefix[from + 1 ..= N]` for the current working config.
+    fn rebuild_prefix(&mut self, spec: &PipelineSpec, from: usize) {
+        for t in from..spec.tasks.len() {
+            let p = self.prefix[t];
+            let cfg = self.cfgs[t];
+            let s = stage_metrics(&spec.tasks[t], &cfg, cfg.replicas, p.arrival);
+            self.prefix[t + 1] = StagePrefix {
+                arrival: s.served,
+                acc: p.acc + s.accuracy,
+                lat: p.lat + s.latency_ms,
+                min_cap: p.min_cap.min(s.capacity),
+                cores: p.cores + cfg.cores(&spec.tasks[t]),
+            };
+        }
+    }
+
+    /// Full-pipeline QoS of the working config with stages `from..N`
+    /// re-evaluated from the cached prefix — the same f64 accumulation
+    /// sequence as scoring the whole pipeline, so bitwise identical to it.
+    fn score_suffix(&self, spec: &PipelineSpec, demand: f64, from: usize) -> f64 {
+        let p = self.prefix[from];
+        let mut arrival = p.arrival;
+        let mut acc = p.acc;
+        let mut lat = p.lat;
+        let mut min_cap = p.min_cap;
+        for t in from..spec.tasks.len() {
+            let cfg = self.cfgs[t];
+            let s = stage_metrics(&spec.tasks[t], &cfg, cfg.replicas, arrival);
+            acc += s.accuracy;
+            lat += s.latency_ms;
+            min_cap = min_cap.min(s.capacity);
+            arrival = s.served;
+        }
+        self.qos_scalar(acc, arrival, lat, demand - min_cap)
+    }
+
+    /// Marginal-QoS ascent over replicas and batch sizes for the variant
+    /// assignment staged in `self.cfgs` (at f = 1, b = 1). Returns the
+    /// final score, leaving the final configuration in `self.cfgs`; `None`
+    /// when the assignment cannot deploy at f = 1 under `budget`. Bitwise
+    /// identical to the PR-0 `allocate` (same candidate order, the same
+    /// comparison constants, the same f64 accumulation sequences) — only
+    /// the evaluation is incremental and allocation-free: a single-stage
+    /// candidate move re-scores stages t..N from the prefix cache instead
+    /// of walking the whole pipeline.
+    fn allocate_scratch(&mut self, spec: &PipelineSpec, demand: f64, budget: f64) -> Option<f64> {
+        let n = spec.tasks.len();
+        // cheap feasibility gate first (same fold order as `total_cores`)
+        let mut total = 0.0;
+        for (task, cfg) in spec.tasks.iter().zip(&self.cfgs) {
+            total += cfg.cores(task);
+        }
+        if total > budget + 1e-9 {
+            return None; // this variant combo can't even deploy at f=1
+        }
+        self.prefix.clear();
+        self.prefix.resize(n + 1, StagePrefix::default());
+        self.prefix[0] = StagePrefix {
+            arrival: demand,
+            acc: 0.0,
+            lat: 0.0,
+            min_cap: f64::INFINITY,
+            cores: 0.0,
+        };
+        self.rebuild_prefix(spec, 0);
+        let end = self.prefix[n];
+        let mut best_score = self.qos_scalar(end.acc, end.arrival, end.lat, demand - end.min_cap);
+        for _iter in 0..256 {
+            // moves: (stage, replica_delta, batch_delta); batch moves are
+            // free in cores but trade latency against capacity, so the
+            // ascent finds low-latency configurations instead of pinning
+            // max batch
+            let mut best_move: Option<((usize, i32, i32), f64)> = None;
+            for t in 0..n {
+                let total = self.prefix[n].cores;
+                let can_add = self.cfgs[t].replicas < F_MAX && {
+                    let extra = spec.tasks[t].variants[self.cfgs[t].variant].cores;
+                    total + extra <= budget + 1e-9
+                };
+                // candidate order is semantic (ties resolve to the first
+                // strictly-better move, like the PR-0 solver): batch up,
+                // batch down, then +1 replica when the budget allows it
+                const MOVES: [(i32, i32); 3] = [(0, 1), (0, -1), (1, 0)];
+                let n_cand = if can_add { 3 } else { 2 };
+                for &(df, db) in MOVES.iter().take(n_cand) {
+                    let nb = self.cfgs[t].batch_idx as i32 + db;
+                    if nb < 0 || nb >= BATCH_CHOICES.len() as i32 {
+                        continue;
+                    }
+                    let saved = self.cfgs[t];
+                    self.cfgs[t].replicas = (saved.replicas as i32 + df) as usize;
+                    self.cfgs[t].batch_idx = nb as usize;
+                    let s = self.score_suffix(spec, demand, t);
+                    self.cfgs[t] = saved;
+                    if s > best_score + 1e-9
+                        && best_move.map(|(_, bs)| s > bs).unwrap_or(true)
+                    {
+                        best_move = Some(((t, df, db), s));
+                    }
+                }
+            }
+            match best_move {
+                Some(((t, df, db), s)) => {
+                    self.cfgs[t].replicas = (self.cfgs[t].replicas as i32 + df) as usize;
+                    self.cfgs[t].batch_idx = (self.cfgs[t].batch_idx as i32 + db) as usize;
+                    self.rebuild_prefix(spec, t);
+                    best_score = s;
+                }
+                None => break,
+            }
+        }
+        Some(best_score)
+    }
+
+    /// Replica/batch allocation for a fixed variant assignment (the
+    /// hysteresis re-allocation path), memoized on exact
+    /// (variants, demand, budget) keys. `None` when the assignment cannot
+    /// deploy at f = 1 under `budget`.
+    pub fn allocate(
+        &mut self,
+        spec: &PipelineSpec,
+        variants: &[usize],
+        demand: f64,
+        budget: f64,
+    ) -> Option<(&[TaskConfig], f64)> {
+        self.prepare(spec);
+        self.allocate_inner(spec, variants, demand, budget)
+    }
+
+    // the manual Some/None matches stay: `score.map(|s| (&self.cfgs[..], s))`
+    // would capture a borrow of self inside the closure and fail to borrow-ck
+    #[allow(clippy::manual_map)]
+    fn allocate_inner(
+        &mut self,
+        spec: &PipelineSpec,
+        variants: &[usize],
+        demand: f64,
+        budget: f64,
+    ) -> Option<(&[TaskConfig], f64)> {
+        let key = if self.exhaustive {
+            None
+        } else {
+            pack_variants(variants.len(), variants.iter().copied())
+        };
+        let (dk, bk) = (demand.to_bits(), budget.to_bits());
+        if let Some(k) = key {
+            let hit = self
+                .alloc_memo
+                .iter()
+                .position(|e| e.variants == k && e.demand == dk && e.budget == bk);
+            if let Some(i) = hit {
+                self.stats.alloc_memo_hits += 1;
+                let score = {
+                    let Self { alloc_memo, cfgs, .. } = &mut *self;
+                    let e = &alloc_memo[i];
+                    if e.score.is_some() {
+                        cfgs.clear();
+                        cfgs.extend_from_slice(&e.cfgs);
+                    }
+                    e.score
+                };
+                return match score {
+                    Some(s) => Some((&self.cfgs[..], s)),
+                    None => None,
+                };
+            }
+        }
+        self.stage_variants(variants);
+        let score = self.allocate_scratch(spec, demand, budget);
+        if let Some(k) = key {
+            self.alloc_memo_insert(k, dk, bk, score);
+        }
+        match score {
+            Some(s) => Some((&self.cfgs[..], s)),
+            None => None,
+        }
+    }
+
+    fn alloc_memo_insert(&mut self, variants: u64, demand: u64, budget: u64, score: Option<f64>) {
+        let src_len = if score.is_some() { self.cfgs.len() } else { 0 };
+        if self.alloc_memo.len() < MEMO_CAP {
+            self.grow_events += 1; // fresh entry owns a new config vec
+            let mut cfgs = Vec::with_capacity(src_len);
+            if score.is_some() {
+                cfgs.extend_from_slice(&self.cfgs);
+            }
+            self.alloc_memo.push(AllocMemo { variants, demand, budget, score, cfgs });
+        } else {
+            let i = self.alloc_next % MEMO_CAP;
+            self.alloc_next = (self.alloc_next + 1) % MEMO_CAP;
+            if self.alloc_memo[i].cfgs.capacity() < src_len {
+                self.grow_events += 1;
+            }
+            let Self { alloc_memo, cfgs, .. } = &mut *self;
+            let e = &mut alloc_memo[i];
+            e.variants = variants;
+            e.demand = demand;
+            e.budget = budget;
+            e.score = score;
+            e.cfgs.clear();
+            if score.is_some() {
+                e.cfgs.extend_from_slice(cfgs);
+            }
+        }
+    }
+
+    fn solve_memo_insert(&mut self, demand: u64, budget: u64, score: f64) {
+        if self.solve_memo.len() < MEMO_CAP {
+            self.grow_events += 1; // fresh entry owns a new config vec
+            let cfgs = self.best_cfgs.clone();
+            self.solve_memo.push(SolveMemo { demand, budget, score, cfgs });
+        } else {
+            let i = self.solve_next % MEMO_CAP;
+            self.solve_next = (self.solve_next + 1) % MEMO_CAP;
+            if self.solve_memo[i].cfgs.capacity() < self.best_cfgs.len() {
+                self.grow_events += 1;
+            }
+            let Self { solve_memo, best_cfgs, .. } = &mut *self;
+            let e = &mut solve_memo[i];
+            e.demand = demand;
+            e.budget = budget;
+            e.score = score;
+            e.cfgs.clear();
+            e.cfgs.extend_from_slice(best_cfgs);
+        }
+    }
+
+    /// Remember the winner's variants as the next solve's warm start.
+    fn remember_warm(&mut self) {
+        let Self { warm_variants, best_cfgs, .. } = self;
+        warm_variants.clear();
+        warm_variants.extend(best_cfgs.iter().map(|c| c.variant));
+        self.has_warm = true;
+    }
+
+    /// Reference solver: the PR-0 exhaustive odometer over |Z|^N variant
+    /// combinations, each allocated by marginal-QoS ascent. Retained (and
+    /// public) as the ground truth `solve` must match bitwise.
+    pub fn solve_exhaustive(
+        &mut self,
+        spec: &PipelineSpec,
+        demand: f64,
+        budget: f64,
+    ) -> (Vec<TaskConfig>, f64) {
+        let score = self.solve_exhaustive_scratch(spec, demand, budget);
+        (self.best_cfgs.clone(), score)
+    }
+
+    fn solve_exhaustive_scratch(&mut self, spec: &PipelineSpec, demand: f64, budget: f64) -> f64 {
+        self.prepare(spec);
+        self.stats.solves += 1;
+        let n = spec.n_tasks();
+        self.combo.clear();
+        self.combo.resize(n, 0);
+        self.have_best = false;
+        self.best_score = f64::NEG_INFINITY;
+        loop {
+            self.stage_combo(n);
+            self.stats.leaves += 1;
+            if let Some(score) = self.allocate_scratch(spec, demand, budget) {
+                if !self.have_best || score > self.best_score {
+                    self.have_best = true;
+                    self.best_score = score;
+                    let Self { best_cfgs, cfgs, .. } = &mut *self;
+                    best_cfgs.clear();
+                    best_cfgs.extend_from_slice(cfgs);
+                }
+            }
+            // odometer over variant indices
+            let mut i = 0;
+            loop {
+                if i == n {
+                    assert!(self.have_best, "at least the all-lightest combo fits");
+                    return self.best_score;
+                }
+                self.combo[i] += 1;
+                if self.combo[i] < spec.tasks[i].n_variants() {
+                    break;
+                }
+                self.combo[i] = 0;
+                i += 1;
+            }
+        }
+    }
+
+    /// Fast solver — identical result to [`solve_exhaustive`]
+    /// (property-test pinned), via (a) exact-key memoization of whole
+    /// solves, (b) a warm-start pruning bound from the previous solve's
+    /// winner, and (c) branch-and-bound over the variant odometer.
+    pub fn solve(
+        &mut self,
+        spec: &PipelineSpec,
+        demand: f64,
+        budget: f64,
+    ) -> (Vec<TaskConfig>, f64) {
+        let score = self.solve_scratch(spec, demand, budget);
+        (self.best_cfgs.clone(), score)
+    }
+
+    /// [`solve`] without cloning the result out — read it via
+    /// [`best_config`](IpaSolver::best_config). Allocation-free when warm.
+    pub fn solve_scratch(&mut self, spec: &PipelineSpec, demand: f64, budget: f64) -> f64 {
+        if self.exhaustive {
+            return self.solve_exhaustive_scratch(spec, demand, budget);
+        }
+        self.prepare(spec);
+        self.stats.solves += 1;
+        let n = spec.n_tasks();
+        // exact-key memo: same spec/weights/demand/budget ⇒ same result,
+        // so a steady-load interval's re-solve is a ring scan
+        let (dk, bk) = (demand.to_bits(), budget.to_bits());
+        if let Some(i) =
+            self.solve_memo.iter().position(|e| e.demand == dk && e.budget == bk)
+        {
+            self.stats.solve_memo_hits += 1;
+            let score = {
+                let Self { solve_memo, best_cfgs, .. } = &mut *self;
+                let e = &solve_memo[i];
+                best_cfgs.clear();
+                best_cfgs.extend_from_slice(&e.cfgs);
+                e.score
+            };
+            self.remember_warm();
+            return score;
+        }
+        // warm start: allocate the previous winner's variants first and use
+        // its score as the initial pruning bound. Bound ONLY — the
+        // incumbent stays empty, so exact score ties still resolve to the
+        // earliest combo in odometer order, like the exhaustive reference.
+        let mut warm_bound = f64::NEG_INFINITY;
+        self.warm_valid = false;
+        if self.has_warm && self.warm_variants.len() == n {
+            let wv = std::mem::take(&mut self.warm_variants);
+            if let Some((_, score)) = self.allocate_inner(spec, &wv, demand, budget) {
+                warm_bound = score;
+                self.stats.warm_bounds += 1;
+                // stash the allocation so the DFS leaf for this combo can
+                // reuse it instead of re-running the (deterministic) ascent
+                self.warm_score = score;
+                self.warm_valid = true;
+                let Self { warm_cfgs, cfgs, .. } = &mut *self;
+                warm_cfgs.clear();
+                warm_cfgs.extend_from_slice(cfgs);
+            }
+            self.warm_variants = wv;
+        }
+        self.prepare_bounds(spec, demand);
+        self.have_best = false;
+        self.best_score = f64::NEG_INFINITY;
+        self.combo.clear();
+        self.combo.resize(n, 0);
+        self.search(spec, n, 0.0, 0.0, 0.0, demand, budget, warm_bound);
+        assert!(self.have_best, "at least the all-lightest combo fits");
+        let score = self.best_score;
+        self.remember_warm();
+        self.solve_memo_insert(dk, bk, score);
+        score
+    }
+
+    /// Per-solve ingredients of the admissible QoS upper bound. Per stage:
+    /// the best possible accuracy contribution (max over variants of α·v),
+    /// a latency lower bound (batch-fill floor at b = 1 / arrival = demand
+    /// plus the fastest variant's b = 1 service time; congestion wait
+    /// ≥ 0), and the lightest variant's f = 1 core cost — each with prefix
+    /// sums over stages 0..j. Throughput is bounded by demand (served ≤
+    /// arrival ≤ demand along the chain) and the excess penalty by 0 (both
+    /// Eq. 3 branches are ≤ 0 for γ, δ ≥ 0). Non-standard weight signs or
+    /// scales disable UB pruning entirely (`prune_ub`) — correctness never
+    /// depends on the bound being tight, only on it being admissible.
+    fn prepare_bounds(&mut self, spec: &PipelineSpec, demand: f64) {
+        let w = self.weights;
+        self.prune_ub = w.latency_scale_ms > 0.0
+            && w.throughput_scale > 0.0
+            && w.excess_scale > 0.0
+            && w.gamma >= 0.0
+            && w.delta >= 0.0
+            && demand >= 0.0;
+        self.fill_lb =
+            if demand > 0.0 { (1000.0 / demand / 2.0).min(BATCH_TIMEOUT_MS) } else { 0.0 };
+        self.tput_ub = if w.beta >= 0.0 { w.beta * demand / w.throughput_scale } else { 0.0 };
+        self.acc_ub_pre.clear();
+        self.lat_lb_pre.clear();
+        self.min_cores_pre.clear();
+        self.acc_ub_pre.push(0.0);
+        self.lat_lb_pre.push(0.0);
+        self.min_cores_pre.push(0.0);
+        for task in &spec.tasks {
+            let mut acc = f64::NEG_INFINITY;
+            let mut lat = f64::INFINITY;
+            let mut cores = f64::INFINITY;
+            for v in &task.variants {
+                acc = acc.max(w.alpha * v.accuracy);
+                lat = lat.min(v.base_latency_ms + v.per_item_ms);
+                cores = cores.min(v.cores);
+            }
+            self.acc_ub_pre.push(self.acc_ub_pre.last().unwrap() + acc);
+            self.lat_lb_pre.push(self.lat_lb_pre.last().unwrap() + (self.fill_lb + lat));
+            self.min_cores_pre.push(self.min_cores_pre.last().unwrap() + cores);
+        }
+    }
+
+    /// DFS over the variant odometer, fixing stages from the last down so
+    /// leaves appear in exactly the exhaustive odometer order (stage 0 is
+    /// the fastest digit). `j` = number of still-unfixed stages; the
+    /// `tail_*` arguments carry the fixed stages' exact-variant bound
+    /// ingredients. A subtree is cut when (a) even its lightest completion
+    /// cannot deploy at f = 1, or (b) its admissible QoS upper bound cannot
+    /// beat the pruning bound (incumbent/warm score) — both with slack, so
+    /// no combo the exhaustive enumeration would accept is ever skipped.
+    #[allow(clippy::too_many_arguments)]
+    fn search(
+        &mut self,
+        spec: &PipelineSpec,
+        j: usize,
+        tail_acc: f64,
+        tail_lat: f64,
+        tail_cores: f64,
+        demand: f64,
+        budget: f64,
+        warm_bound: f64,
+    ) {
+        if self.min_cores_pre[j] + tail_cores > budget + 1e-9 + CORES_SLACK {
+            self.stats.pruned_cores += 1;
+            return;
+        }
+        if self.prune_ub {
+            let bound =
+                if self.have_best { self.best_score.max(warm_bound) } else { warm_bound };
+            if bound > f64::NEG_INFINITY {
+                let ub = self.acc_ub_pre[j] + tail_acc + self.tput_ub
+                    - (self.lat_lb_pre[j] + tail_lat) / self.weights.latency_scale_ms;
+                if ub + UB_SLACK <= bound {
+                    self.stats.pruned_bound += 1;
+                    return;
+                }
+            }
+        }
+        if j == 0 {
+            self.stats.leaves += 1;
+            // the warm-start combo was already allocated this solve — reuse
+            // the stashed result (the ascent is deterministic, so this is
+            // bitwise identical to re-running it)
+            if self.warm_valid && self.combo[..spec.n_tasks()] == self.warm_variants[..] {
+                let score = self.warm_score;
+                if !self.have_best || score > self.best_score {
+                    self.have_best = true;
+                    self.best_score = score;
+                    let Self { best_cfgs, warm_cfgs, .. } = &mut *self;
+                    best_cfgs.clear();
+                    best_cfgs.extend_from_slice(warm_cfgs);
+                }
+                return;
+            }
+            self.stage_combo(spec.n_tasks());
+            if let Some(score) = self.allocate_scratch(spec, demand, budget) {
+                if !self.have_best || score > self.best_score {
+                    self.have_best = true;
+                    self.best_score = score;
+                    let Self { best_cfgs, cfgs, .. } = &mut *self;
+                    best_cfgs.clear();
+                    best_cfgs.extend_from_slice(cfgs);
+                }
+            }
+            return;
+        }
+        let t = j - 1;
+        for v in 0..spec.tasks[t].n_variants() {
+            self.combo[t] = v;
+            let prof = &spec.tasks[t].variants[v];
+            self.search(
+                spec,
+                t,
+                tail_acc + self.weights.alpha * prof.accuracy,
+                tail_lat + self.fill_lb + prof.base_latency_ms + prof.per_item_ms,
+                tail_cores + prof.cores,
+                demand,
+                budget,
+                warm_bound,
+            );
+        }
+    }
+}
+
+pub struct IpaAgent {
+    /// the branch-and-bound solver with its scratch and memo caches
+    /// (DESIGN.md §10); `solver.exhaustive` selects the reference path
+    pub solver: IpaSolver,
     /// switching hysteresis: keep the previous variant assignment unless the
     /// newly-solved one improves the score by this relative margin. This is
     /// the paper's "enhanced" IPA — naive per-interval re-solving restarts
     /// whole stages on every load wiggle (container reload), which in the
     /// real system costs far more QoS than the marginal re-optimization wins.
     pub switch_margin: f64,
-    last_variants: Option<Vec<usize>>,
+    last_variants: Vec<usize>,
+    has_last: bool,
 }
 
 impl Default for IpaAgent {
@@ -35,107 +813,75 @@ impl Default for IpaAgent {
 
 impl IpaAgent {
     pub fn new() -> Self {
-        Self { weights: QosWeights::default(), switch_margin: 0.05, last_variants: None }
+        Self {
+            solver: IpaSolver::new(QosWeights::default()),
+            switch_margin: 0.05,
+            last_variants: Vec::new(),
+            has_last: false,
+        }
     }
 
     /// IPA without hysteresis (used by the ablation bench).
     pub fn naive() -> Self {
-        Self { weights: QosWeights::default(), switch_margin: 0.0, last_variants: None }
+        Self { switch_margin: 0.0, ..Self::new() }
     }
 
-    /// QoS of a fully-ready deployment of `cfgs` at `demand`.
-    fn score(&self, spec: &PipelineSpec, cfgs: &[TaskConfig], demand: f64) -> f64 {
-        let ready: Vec<usize> = cfgs.iter().map(|c| c.replicas).collect();
-        let m = pipeline_metrics(spec, cfgs, &ready, demand);
-        self.weights.qos(&m)
+    /// Reference agent: identical decisions via the exhaustive solver (no
+    /// pruning/memoization/warm start) — the equivalence-test baseline.
+    pub fn exhaustive() -> Self {
+        let mut a = Self::new();
+        a.solver.exhaustive = true;
+        a
     }
 
-    /// For a fixed variant assignment, allocate replicas AND batch sizes
-    /// under the core budget by marginal-QoS ascent. Moves per iteration:
-    /// +1 replica (if budget allows), batch step up, batch step down — batch
-    /// moves are free in cores but trade latency against capacity, so the
-    /// ascent finds low-latency configurations instead of pinning max batch.
-    fn allocate(
-        &self,
-        spec: &PipelineSpec,
-        variants: &[usize],
-        demand: f64,
-        budget: f64,
-    ) -> Option<(Vec<TaskConfig>, f64)> {
-        let mut cfgs: Vec<TaskConfig> = variants
-            .iter()
-            .map(|&v| TaskConfig { variant: v, replicas: 1, batch_idx: 0 })
-            .collect();
-        if spec.total_cores(&cfgs) > budget + 1e-9 {
-            return None; // this variant combo can't even deploy at f=1
-        }
-        let mut best_score = self.score(spec, &cfgs, demand);
-        for _iter in 0..256 {
-            // moves: (stage, replica_delta, batch_delta)
-            let mut best_move: Option<((usize, i32, i32), f64)> = None;
-            for t in 0..cfgs.len() {
-                let mut candidates: Vec<(i32, i32)> = vec![(0, 1), (0, -1)];
-                if cfgs[t].replicas < F_MAX {
-                    let extra = spec.tasks[t].variants[cfgs[t].variant].cores;
-                    if spec.total_cores(&cfgs) + extra <= budget + 1e-9 {
-                        candidates.push((1, 0));
-                    }
-                }
-                for (df, db) in candidates {
-                    let nb = cfgs[t].batch_idx as i32 + db;
-                    if nb < 0 || nb >= BATCH_CHOICES.len() as i32 {
-                        continue;
-                    }
-                    let saved = cfgs[t];
-                    cfgs[t].replicas = (cfgs[t].replicas as i32 + df) as usize;
-                    cfgs[t].batch_idx = nb as usize;
-                    let s = self.score(spec, &cfgs, demand);
-                    cfgs[t] = saved;
-                    if s > best_score + 1e-9
-                        && best_move.map(|(_, bs)| s > bs).unwrap_or(true)
-                    {
-                        best_move = Some(((t, df, db), s));
-                    }
-                }
-            }
-            match best_move {
-                Some(((t, df, db), s)) => {
-                    cfgs[t].replicas = (cfgs[t].replicas as i32 + df) as usize;
-                    cfgs[t].batch_idx = (cfgs[t].batch_idx as i32 + db) as usize;
-                    best_score = s;
-                }
-                None => break,
-            }
-        }
-        Some((cfgs, best_score))
+    /// Reset per-episode decision state (the switching hysteresis and the
+    /// warm-start seed). Solver scratch and the exact-key memo caches
+    /// survive — they are pure functions of (spec, weights, demand,
+    /// budget), so cross-episode reuse cannot change any decision.
+    pub fn reset_episode(&mut self) {
+        self.last_variants.clear();
+        self.has_last = false;
+        self.solver.has_warm = false;
     }
 
     /// Solve for the best configuration (exported for the Fig. 6 bench).
-    pub fn solve(&self, spec: &PipelineSpec, demand: f64, budget: f64) -> Vec<TaskConfig> {
-        let n = spec.n_tasks();
-        let mut combo = vec![0usize; n];
-        let mut best: Option<(Vec<TaskConfig>, f64)> = None;
-        loop {
-            if let Some((cfgs, score)) = self.allocate(spec, &combo, demand, budget) {
-                if best.as_ref().map(|(_, b)| score > *b).unwrap_or(true) {
-                    best = Some((cfgs, score));
+    pub fn solve(&mut self, spec: &PipelineSpec, demand: f64, budget: f64) -> Vec<TaskConfig> {
+        self.solver.solve(spec, demand, budget).0
+    }
+
+    /// [`Agent::decide`] into a caller-owned buffer — the rollout engine's
+    /// expert lanes reuse one action vec per lane, so a warm expert
+    /// decision performs no heap allocation at all.
+    pub fn decide_into(&mut self, obs: &Observation<'_>, out: &mut Vec<TaskConfig>) {
+        let demand = obs.load_now.max(obs.load_pred).max(1.0);
+        let new_score = self.solver.solve_scratch(obs.spec, demand, obs.capacity);
+        out.clear();
+        out.extend_from_slice(self.solver.best_config());
+        // hysteresis: re-solving may flip variants for marginal wins, but a
+        // variant switch restarts the stage; keep the old assignment (with
+        // freshly-allocated replicas/batches) unless the win is material.
+        // `new_score` comes straight from the solve — the pre-PR-5 code
+        // re-scored the solved config from scratch here.
+        if self.switch_margin > 0.0 && self.has_last {
+            let changed = self.last_variants.len() != out.len()
+                || self.last_variants.iter().zip(out.iter()).any(|(p, c)| *p != c.variant);
+            if changed {
+                let Self { solver, last_variants, switch_margin, .. } = self;
+                if let Some((kept, kept_score)) =
+                    solver.allocate(obs.spec, last_variants, demand, obs.capacity)
+                {
+                    if new_score < kept_score + *switch_margin * kept_score.abs().max(1.0) {
+                        out.clear();
+                        out.extend_from_slice(kept);
+                        // previous variant assignment stays in force
+                        return;
+                    }
                 }
-            }
-            // odometer over variant indices
-            let mut i = 0;
-            loop {
-                if i == n {
-                    let (cfgs, _) = best.expect("at least the all-lightest combo fits");
-                    return cfgs;
-                }
-                combo[i] += 1;
-                if combo[i] < spec.tasks[i].n_variants() {
-                    break;
-                }
-                combo[i] = 0;
-                i += 1;
             }
         }
+        self.has_last = true;
+        self.last_variants.clear();
+        self.last_variants.extend(out.iter().map(|c| c.variant));
     }
 }
 
@@ -145,30 +891,9 @@ impl Agent for IpaAgent {
     }
 
     fn decide(&mut self, obs: &Observation<'_>) -> Vec<TaskConfig> {
-        let demand = obs.load_now.max(obs.load_pred).max(1.0);
-        let solved = self.solve(obs.spec, demand, obs.capacity);
-        // hysteresis: re-solving may flip variants for marginal wins, but a
-        // variant switch restarts the stage; keep the old assignment (with
-        // freshly-allocated replicas/batches) unless the win is material
-        if self.switch_margin > 0.0 {
-            if let Some(prev) = &self.last_variants {
-                let new_variants: Vec<usize> = solved.iter().map(|c| c.variant).collect();
-                if *prev != new_variants {
-                    if let Some((kept, kept_score)) =
-                        self.allocate(obs.spec, prev, demand, obs.capacity)
-                    {
-                        let new_score = self.score(obs.spec, &solved, demand);
-                        if new_score < kept_score + self.switch_margin * kept_score.abs().max(1.0)
-                        {
-                            self.last_variants = Some(prev.clone());
-                            return kept;
-                        }
-                    }
-                }
-            }
-        }
-        self.last_variants = Some(solved.iter().map(|c| c.variant).collect());
-        solved
+        let mut out = Vec::with_capacity(obs.spec.n_tasks());
+        self.decide_into(obs, &mut out);
+        out
     }
 }
 
@@ -176,11 +901,12 @@ impl Agent for IpaAgent {
 mod tests {
     use super::*;
     use crate::pipeline::catalog::{self, Preset};
+    use crate::pipeline::pipeline_metrics;
 
     #[test]
     fn solution_is_valid_and_within_budget() {
         let spec = catalog::preset(Preset::P2).spec;
-        let agent = IpaAgent::new();
+        let mut agent = IpaAgent::new();
         let cfgs = agent.solve(&spec, 50.0, 30.0);
         spec.validate_config(&cfgs).unwrap();
         assert!(spec.total_cores(&cfgs) <= 30.0 + 1e-9);
@@ -191,7 +917,7 @@ mod tests {
         // ample budget, low demand → QoS is dominated by accuracy → IPA
         // should pick upper-tier variants on at least some stages
         let spec = catalog::preset(Preset::P2).spec;
-        let agent = IpaAgent::new();
+        let mut agent = IpaAgent::new();
         let cfgs = agent.solve(&spec, 10.0, 200.0);
         let upgraded = cfgs.iter().filter(|c| c.variant > 0).count();
         assert!(upgraded >= spec.n_tasks() / 2, "IPA should buy accuracy: {cfgs:?}");
@@ -200,7 +926,7 @@ mod tests {
     #[test]
     fn scales_capacity_to_demand() {
         let spec = catalog::preset(Preset::P1).spec;
-        let agent = IpaAgent::new();
+        let mut agent = IpaAgent::new();
         let lo = agent.solve(&spec, 10.0, 30.0);
         let hi = agent.solve(&spec, 120.0, 30.0);
         // IPA scales deployed *capacity* with demand (it may do so by
@@ -224,7 +950,7 @@ mod tests {
     #[test]
     fn tight_budget_falls_back_to_light_variants() {
         let spec = catalog::preset(Preset::P2).spec;
-        let agent = IpaAgent::new();
+        let mut agent = IpaAgent::new();
         let cfgs = agent.solve(&spec, 30.0, 6.0); // very tight
         assert!(spec.total_cores(&cfgs) <= 6.0 + 1e-9);
     }
@@ -232,8 +958,63 @@ mod tests {
     #[test]
     fn deterministic() {
         let spec = catalog::preset(Preset::P2).spec;
-        let agent = IpaAgent::new();
-        assert_eq!(agent.solve(&spec, 50.0, 30.0), agent.solve(&spec, 50.0, 30.0));
+        let mut agent = IpaAgent::new();
+        // the second solve is a memo hit — must return the same configs
+        let first = agent.solve(&spec, 50.0, 30.0);
+        let second = agent.solve(&spec, 50.0, 30.0);
+        assert_eq!(first, second);
+        assert!(agent.solver.stats().solve_memo_hits >= 1);
+    }
+
+    #[test]
+    fn pruned_solver_matches_exhaustive_on_small_presets() {
+        // the broad preset × demand × budget sweep lives in
+        // rust/tests/ipa_solver.rs; this is the in-crate smoke version
+        for preset in [Preset::P1, Preset::P2] {
+            let spec = catalog::preset(preset).spec;
+            let mut fast = IpaSolver::new(QosWeights::default());
+            let mut slow = IpaSolver::new(QosWeights::default());
+            slow.exhaustive = true;
+            for demand in [10.0, 80.0] {
+                for budget in [8.0, 30.0] {
+                    let (a, sa) = fast.solve(&spec, demand, budget);
+                    let (b, sb) = slow.solve_exhaustive(&spec, demand, budget);
+                    assert_eq!(a, b, "{preset:?} demand={demand} budget={budget}");
+                    assert_eq!(sa.to_bits(), sb.to_bits());
+                }
+            }
+            assert!(
+                fast.stats().leaves <= slow.stats().leaves,
+                "{preset:?}: pruning must never add work ({} vs {})",
+                fast.stats().leaves,
+                slow.stats().leaves
+            );
+            if preset == Preset::P2 {
+                // on a non-trivial tree the bounds must actually bite
+                assert!(
+                    fast.stats().leaves < slow.stats().leaves,
+                    "P2: pruning should cut the enumeration ({} vs {})",
+                    fast.stats().leaves,
+                    slow.stats().leaves
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn warm_solver_is_allocation_free() {
+        let spec = catalog::preset(Preset::P2).spec;
+        let mut solver = IpaSolver::new(QosWeights::default());
+        // warm-up: fill scratch AND cycle both memo rings past capacity
+        for i in 0..40 {
+            solver.solve_scratch(&spec, 20.0 + i as f64, 30.0);
+        }
+        let warm = solver.grow_events();
+        for i in 0..40 {
+            solver.solve_scratch(&spec, 120.0 + i as f64, 30.0);
+            let _ = solver.allocate(&spec, &[0, 1, 0, 1], 60.0 + i as f64, 30.0);
+        }
+        assert_eq!(solver.grow_events(), warm, "warm solver must not allocate");
     }
 
     #[test]

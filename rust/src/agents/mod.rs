@@ -9,7 +9,7 @@ pub mod random;
 
 pub use autoscale::AutoscaleAgent;
 pub use greedy::GreedyAgent;
-pub use ipa::IpaAgent;
+pub use ipa::{IpaAgent, IpaSolver, SolverStats};
 pub use opd::OpdAgent;
 pub use random::RandomAgent;
 

@@ -80,6 +80,12 @@ impl ClusterApi {
         self.store.ready_replicas(DEFAULT_DEPLOYMENT, n_stages, now)
     }
 
+    /// [`ClusterApi::ready_replicas`] into a reused buffer (cleared first)
+    /// — the allocation-free observation path (`Env::observe`).
+    pub fn ready_replicas_into(&self, n_stages: usize, now: f64, out: &mut Vec<usize>) {
+        self.store.ready_replicas_into(DEFAULT_DEPLOYMENT, n_stages, now, out)
+    }
+
     /// Cores currently allocated (the billed cost basis).
     pub fn allocated_cores(&self) -> f64 {
         self.store.allocated_cores()

@@ -310,15 +310,29 @@ impl DeploymentStore {
 
     /// Ready replica count per stage for one deployment at time `now`.
     pub fn ready_replicas(&self, name: &str, n_stages: usize, now: f64) -> Vec<usize> {
-        let mut ready = vec![0usize; n_stages];
+        let mut ready = Vec::new();
+        self.ready_replicas_into(name, n_stages, now, &mut ready);
+        ready
+    }
+
+    /// [`DeploymentStore::ready_replicas`] into a reused buffer (cleared
+    /// first) — the allocation-free observation path.
+    pub fn ready_replicas_into(
+        &self,
+        name: &str,
+        n_stages: usize,
+        now: f64,
+        out: &mut Vec<usize>,
+    ) {
+        out.clear();
+        out.resize(n_stages, 0);
         if let Some(d) = self.deployments.get(name) {
             for c in &d.containers {
                 if c.ready_at <= now && c.stage < n_stages {
-                    ready[c.stage] += 1;
+                    out[c.stage] += 1;
                 }
             }
         }
-        ready
     }
 
     /// Cores currently allocated across all tenants (the billed cost basis).

@@ -7,7 +7,7 @@ pub mod perf;
 pub mod task;
 pub mod variant;
 
-pub use perf::{pipeline_metrics, PipelineMetrics, QosWeights, StageMetrics};
+pub use perf::{pipeline_metrics, pipeline_metrics_into, PipelineMetrics, QosWeights, StageMetrics};
 pub use task::{TaskConfig, TaskSpec, BATCH_CHOICES, F_MAX};
 pub use variant::VariantProfile;
 

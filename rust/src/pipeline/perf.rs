@@ -117,9 +117,30 @@ pub fn pipeline_metrics(
     ready: &[usize],
     demand: f64,
 ) -> PipelineMetrics {
+    let mut m = PipelineMetrics::default();
+    pipeline_metrics_into(spec, cfgs, ready, demand, &mut m);
+    m
+}
+
+/// [`pipeline_metrics`] into a reused `PipelineMetrics` (stage vector
+/// capacity and all scalar fields are overwritten) — the allocation-free
+/// hot path for callers that score pipelines per tick or per solver step
+/// (`Env::observe`, the IPA solver). Accumulation order is identical to
+/// [`pipeline_metrics`], so results are bitwise equal.
+pub fn pipeline_metrics_into(
+    spec: &PipelineSpec,
+    cfgs: &[TaskConfig],
+    ready: &[usize],
+    demand: f64,
+    m: &mut PipelineMetrics,
+) {
     assert_eq!(spec.tasks.len(), cfgs.len());
     assert_eq!(spec.tasks.len(), ready.len());
-    let mut m = PipelineMetrics::default();
+    m.stages.clear();
+    m.accuracy = 0.0;
+    m.cost = 0.0;
+    m.latency_ms = 0.0;
+    m.max_batch = 0;
     let mut arrival = demand;
     let mut min_capacity = f64::INFINITY;
     for ((task, cfg), &r) in spec.tasks.iter().zip(cfgs).zip(ready) {
@@ -136,7 +157,6 @@ pub fn pipeline_metrics(
     // E (Eq. 3): demand minus bottleneck capacity. Positive = unmet demand,
     // negative = spare capacity.
     m.excess = demand - min_capacity;
-    m
 }
 
 /// QoS weighting parameters (Eq. 3, Eq. 4, Eq. 7). The raw T/L/E terms live
@@ -214,6 +234,31 @@ mod tests {
     use crate::pipeline::variant::VariantProfile;
     use crate::pipeline::PipelineSpec;
     use crate::pipeline::task::TaskSpec;
+
+    #[test]
+    fn metrics_into_matches_allocating_path_bitwise() {
+        let spec = catalog::preset(catalog::Preset::P3).spec;
+        let mut scratch = PipelineMetrics::default();
+        for demand in [0.0, 7.5, 80.0, 400.0] {
+            let cfgs: Vec<TaskConfig> =
+                (0..spec.n_tasks()).map(|t| TaskConfig::new(t % 2, 1 + t % 3, t % 4)).collect();
+            let ready: Vec<usize> = cfgs.iter().map(|c| c.replicas.saturating_sub(1)).collect();
+            let want = pipeline_metrics(&spec, &cfgs, &ready, demand);
+            pipeline_metrics_into(&spec, &cfgs, &ready, demand, &mut scratch);
+            assert_eq!(want.accuracy.to_bits(), scratch.accuracy.to_bits());
+            assert_eq!(want.cost.to_bits(), scratch.cost.to_bits());
+            assert_eq!(want.throughput.to_bits(), scratch.throughput.to_bits());
+            assert_eq!(want.latency_ms.to_bits(), scratch.latency_ms.to_bits());
+            assert_eq!(want.excess.to_bits(), scratch.excess.to_bits());
+            assert_eq!(want.max_batch, scratch.max_batch);
+            assert_eq!(want.stages.len(), scratch.stages.len());
+            for (a, b) in want.stages.iter().zip(&scratch.stages) {
+                assert_eq!(a.latency_ms.to_bits(), b.latency_ms.to_bits());
+                assert_eq!(a.served.to_bits(), b.served.to_bits());
+                assert_eq!(a.capacity.to_bits(), b.capacity.to_bits());
+            }
+        }
+    }
 
     fn one_stage() -> PipelineSpec {
         PipelineSpec::new(

@@ -9,11 +9,13 @@
 //! the parameter vector for the whole lane set — the §7 L1-reuse
 //! discipline), then samples each lane's action from its own per-episode
 //! PCG stream. Environment stepping — the simulator, the predictor, the
-//! expert's IPA solve — is sharded across `std::thread` workers; the
-//! forward and the sampling stay on the leader. Lanes refill from the
-//! episode queue as they finish, so expert episodes (scored at episode
-//! end, already batched) interleave with policy episodes exactly like the
-//! sequential Algorithm 2 schedule.
+//! expert's IPA solve — is sharded across a **persistent worker pool**:
+//! long-lived threads fed by channel ping-pong of owned lane chunks (the
+//! per-iteration `std::thread::scope` spawns this replaced cost ~tens of
+//! µs each); the forward and the sampling stay on the leader. Lanes refill
+//! from the episode queue as they finish, so expert episodes (scored at
+//! episode end, already batched) interleave with policy episodes exactly
+//! like the sequential Algorithm 2 schedule.
 //!
 //! **Determinism contract** (extends §7/§8, pinned by
 //! `rust/tests/rollout_vectorized.rs`): for fixed seeds the collected
@@ -31,7 +33,9 @@
 //!  * results land in fixed per-episode buffer slots (episode order), not
 //!    in completion order.
 
-use crate::agents::{Agent, IpaAgent};
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use crate::agents::IpaAgent;
 use crate::nn::spec::*;
 use crate::nn::workspace::Workspace;
 use crate::pipeline::TaskConfig;
@@ -131,7 +135,8 @@ impl Lane {
     }
 
     /// (Re)bind this lane to an episode: reset (or lazily build) the env,
-    /// restart the action stream and the expert's hysteresis. `reuse_env`
+    /// restart the action stream and the expert's hysteresis (the solver's
+    /// scratch and pure memo caches survive — DESIGN.md §10). `reuse_env`
     /// requires a seed-uniform factory (see [`RolloutEngine::reuse_envs`]).
     fn assign<F: FnMut(u64) -> Env>(
         &mut self,
@@ -139,13 +144,15 @@ impl Lane {
         slot: usize,
         factory: &mut F,
         reuse_env: bool,
+        expert_exhaustive: bool,
     ) {
         match &mut self.env {
             Some(env) if reuse_env => env.reset(spec.seed),
             _ => self.env = Some(factory(spec.seed)),
         }
         self.rng = Pcg32::stream(spec.seed, ACTION_STREAM);
-        self.expert_agent = IpaAgent::new();
+        self.expert_agent.reset_episode();
+        self.expert_agent.solver.exhaustive = expert_exhaustive;
         self.phase = Phase::NeedObserve;
         self.episode = spec.episode;
         self.slot = slot;
@@ -194,12 +201,12 @@ fn advance_lane(lane: &mut Lane) {
         build_state_into(&obs, &mut lane.state);
         build_masks_into(obs.spec, &mut lane.head_mask, &mut lane.task_mask);
         if lane.expert {
-            // expert action now (the IPA solve runs on the worker); its
-            // logp/value under the current policy are filled by the batched
-            // scoring pass at episode end
-            let cfgs = lane.expert_agent.decide(&obs);
-            encode_action_into(obs.spec, &cfgs, &mut lane.staged_idx);
-            lane.action = cfgs;
+            // expert action now (the IPA solve runs on the worker, straight
+            // into the lane's reused action vec); its logp/value under the
+            // current policy are filled by the batched scoring pass at
+            // episode end
+            lane.expert_agent.decide_into(&obs, &mut lane.action);
+            encode_action_into(obs.spec, &lane.action, &mut lane.staged_idx);
             lane.staged_logp = 0.0;
             lane.staged_value = 0.0;
             lane.phase = Phase::ReadyToStep;
@@ -209,9 +216,76 @@ fn advance_lane(lane: &mut Lane) {
     }
 }
 
-/// The engine. Owns the lanes, the shared [`Workspace`], the per-slot
-/// episode buffers and every piece of batching scratch; all of it is reused
-/// across waves (`grow_events()` is the proof hook).
+/// One chunk of lanes shipped to a worker and back (ownership ping-pong).
+struct Job {
+    /// offset of the chunk's first lane in the engine's lane vector
+    start: usize,
+    /// a worker panic is carried back (payload intact) instead of wedging
+    /// the leader; the leader re-raises it via `resume_unwind`, so failures
+    /// diagnose identically to the single-threaded path
+    panic: Option<Box<dyn std::any::Any + Send>>,
+    lanes: Vec<Lane>,
+}
+
+/// Persistent env-stepping worker pool (DESIGN.md §9): long-lived threads
+/// fed by channel ping-pong of owned lane chunks, replacing the former
+/// per-scheduler-iteration `std::thread::scope` spawns (~tens of µs of
+/// spawn/join overhead each). Which worker advances which lanes is
+/// unobservable — lanes are independent and land back in their original
+/// slots — so the pool preserves the engine's bitwise determinism contract
+/// for any pool size.
+struct WorkerPool {
+    job_txs: Vec<Sender<Job>>,
+    done_rx: Receiver<Job>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    fn new(workers: usize) -> Self {
+        let (done_tx, done_rx) = channel::<Job>();
+        let mut job_txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let (tx, rx) = channel::<Job>();
+            let done = done_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                while let Ok(mut job) = rx.recv() {
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        for lane in job.lanes.iter_mut() {
+                            if lane.phase != Phase::Idle {
+                                advance_lane(lane);
+                            }
+                        }
+                    }));
+                    job.panic = result.err();
+                    if done.send(job).is_err() {
+                        break; // leader gone
+                    }
+                }
+            }));
+            job_txs.push(tx);
+        }
+        Self { job_txs, done_rx, handles }
+    }
+
+    fn size(&self) -> usize {
+        self.job_txs.len()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.job_txs.clear(); // closing the job channels stops the workers
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The engine. Owns the lanes, the shared [`Workspace`], the persistent
+/// worker pool, the per-slot episode buffers and every piece of batching
+/// scratch; all of it is reused across waves (`grow_events()` is the proof
+/// hook).
 pub struct RolloutEngine {
     /// K — maximum concurrently in-flight episodes
     pub lanes_target: usize,
@@ -224,7 +298,16 @@ pub struct RolloutEngine {
     /// derives e.g. the workload kind from the seed must turn this off —
     /// the engine cannot observe such dependence through a reset.
     pub reuse_envs: bool,
+    /// run expert lanes through the exhaustive reference IPA solver instead
+    /// of the branch-and-bound fast path — the equivalence tests pin that
+    /// flipping this changes nothing (DESIGN.md §10).
+    pub expert_exhaustive: bool,
     lanes: Vec<Lane>,
+    pool: Option<WorkerPool>,
+    /// recycled chunk vectors for the lane ping-pong
+    chunk_shells: Vec<Vec<Lane>>,
+    /// reassembly scratch for returned jobs (sorted by chunk offset)
+    returned: Vec<Job>,
     ws: Workspace,
     /// per-wave-slot episode buffers (episode order, fixed assignment)
     bufs: Vec<RolloutBuffer>,
@@ -244,7 +327,11 @@ impl RolloutEngine {
             lanes_target: lanes.max(1),
             threads,
             reuse_envs: true,
+            expert_exhaustive: false,
             lanes: Vec::new(),
+            pool: None,
+            chunk_shells: Vec::new(),
+            returned: Vec::new(),
             ws: Workspace::new(),
             bufs: Vec::new(),
             results: Vec::new(),
@@ -256,12 +343,15 @@ impl RolloutEngine {
     }
 
     /// Total (re)allocation count across the engine's own machinery: the
-    /// shared workspace, the lane/transition pools and the batching scratch.
-    /// Flat after the first wave at a steady episode shape — the
-    /// alloc-free-rollout proof hook (`perf_rollout` and the determinism
-    /// tests assert on it). Environment-internal transients (observation
-    /// assembly, the cluster store's apply) are outside this counter; see
-    /// DESIGN.md §9.
+    /// shared workspace, the lane/transition pools, the batching scratch
+    /// and the worker-pool chunk shells. Flat after the first wave at a
+    /// steady episode shape — the alloc-free-rollout proof hook
+    /// (`perf_rollout` and the determinism tests assert on it). Channel
+    /// node allocations inside `std::sync::mpsc`, environment-internal
+    /// transients (the cluster store's apply) and the expert solver's memo
+    /// rings are outside this counter — the solver carries its own
+    /// `IpaSolver::grow_events`, asserted flat by `perf_ipa`; see
+    /// DESIGN.md §9/§10.
     pub fn grow_events(&self) -> u64 {
         self.grow_events
             + self.ws.grow_events()
@@ -321,12 +411,16 @@ impl RolloutEngine {
             self.threads
         }
         .clamp(1, lanes_n);
+        if threads > 1 {
+            self.ensure_pool(threads);
+        }
 
         let reuse_envs = self.reuse_envs;
+        let expert_exhaustive = self.expert_exhaustive;
         let mut next = 0usize;
         for lane in self.lanes.iter_mut().take(lanes_n) {
             if next < wave.len() {
-                lane.assign(&wave[next], next, factory, reuse_envs);
+                lane.assign(&wave[next], next, factory, reuse_envs, expert_exhaustive);
                 next += 1;
             } else {
                 lane.phase = Phase::Idle;
@@ -338,6 +432,21 @@ impl RolloutEngine {
         }
 
         loop {
+            if self.lanes[..lanes_n].iter().all(|l| l.phase == Phase::Idle) {
+                break;
+            }
+
+            // ---- worker phase: step + observe, sharded over the pool ----
+            if threads == 1 {
+                for lane in self.lanes[..lanes_n].iter_mut() {
+                    if lane.phase != Phase::Idle {
+                        advance_lane(lane);
+                    }
+                }
+            } else {
+                self.run_worker_phase(threads, lanes_n);
+            }
+
             let Self {
                 lanes,
                 ws,
@@ -350,35 +459,6 @@ impl RolloutEngine {
                 ..
             } = self;
             let lanes = &mut lanes[..lanes_n];
-            if lanes.iter().all(|l| l.phase == Phase::Idle) {
-                break;
-            }
-
-            // ---- worker phase: step + observe, sharded across threads ----
-            if threads == 1 {
-                for lane in lanes.iter_mut() {
-                    if lane.phase != Phase::Idle {
-                        advance_lane(lane);
-                    }
-                }
-            } else {
-                // one spawn per worker per scheduler iteration: ~tens of µs
-                // of spawn/join overhead, second-order next to the batched
-                // forward this buys (a persistent per-wave worker pool with
-                // lane-ownership ping-pong is the ROADMAP follow-up)
-                let per = lanes.len().div_ceil(threads);
-                std::thread::scope(|sc| {
-                    for chunk in lanes.chunks_mut(per) {
-                        sc.spawn(move || {
-                            for lane in chunk {
-                                if lane.phase != Phase::Idle {
-                                    advance_lane(lane);
-                                }
-                            }
-                        });
-                    }
-                });
-            }
 
             // ---- leader phase 1: one ragged batched forward ----
             // rows: in-flight policy lanes wanting an action + finished
@@ -446,12 +526,74 @@ impl RolloutEngine {
                 };
                 std::mem::swap(&mut lane.buf, &mut bufs[lane.slot]);
                 if next < wave.len() {
-                    lane.assign(&wave[next], next, factory, reuse_envs);
+                    lane.assign(&wave[next], next, factory, reuse_envs, expert_exhaustive);
                     next += 1;
                 } else {
                     lane.phase = Phase::Idle;
                 }
             }
+        }
+    }
+
+    /// (Re)build the persistent worker pool when the resolved thread count
+    /// changes; a pool survives across waves, so steady training pays the
+    /// thread/channel setup exactly once.
+    fn ensure_pool(&mut self, threads: usize) {
+        if self.pool.as_ref().map(WorkerPool::size) == Some(threads) {
+            return;
+        }
+        self.grow_events += 1; // counted one-off: threads, channels, scratch
+        self.pool = Some(WorkerPool::new(threads));
+        if self.chunk_shells.capacity() < threads {
+            let len = self.chunk_shells.len();
+            self.chunk_shells.reserve(threads - len);
+        }
+        if self.returned.capacity() < threads {
+            let len = self.returned.len();
+            self.returned.reserve(threads - len);
+        }
+    }
+
+    /// Ship every lane to the persistent workers in contiguous chunks and
+    /// splice the advanced lanes back into their slots. Chunk sizing is
+    /// driven by the wave's ACTIVE lane count so a tail wave stays balanced
+    /// across workers; stale idle lanes beyond it ride along with the last
+    /// chunk (workers skip `Idle` in O(1)). Chunks drain tail-first so each
+    /// `drain(start..)` is O(chunk) with no element shifting; reassembly
+    /// sorts the (≤ threads) returned jobs by chunk offset, so lane order —
+    /// and therefore every buffer/result slot — is exactly what the
+    /// sequential path produces.
+    fn run_worker_phase(&mut self, threads: usize, lanes_n: usize) {
+        let per = lanes_n.div_ceil(threads);
+        let n_chunks = lanes_n.div_ceil(per);
+        let mut sent = 0usize;
+        for chunk in (0..n_chunks).rev() {
+            let start = chunk * per;
+            let mut shell = self.chunk_shells.pop().unwrap_or_default();
+            if shell.capacity() < self.lanes.len() - start {
+                self.grow_events += 1;
+            }
+            shell.extend(self.lanes.drain(start..));
+            let pool = self.pool.as_ref().expect("pool built before the wave");
+            pool.job_txs[chunk % pool.size()]
+                .send(Job { start, panic: None, lanes: shell })
+                .expect("rollout worker alive");
+            sent += 1;
+        }
+        debug_assert!(self.lanes.is_empty());
+        self.returned.clear();
+        for _ in 0..sent {
+            let pool = self.pool.as_ref().expect("pool built before the wave");
+            let mut job = pool.done_rx.recv().expect("rollout worker alive");
+            if let Some(payload) = job.panic.take() {
+                std::panic::resume_unwind(payload);
+            }
+            self.returned.push(job);
+        }
+        self.returned.sort_unstable_by_key(|j| j.start);
+        for mut job in self.returned.drain(..) {
+            self.lanes.append(&mut job.lanes);
+            self.chunk_shells.push(job.lanes);
         }
     }
 }
@@ -555,6 +697,62 @@ mod tests {
         eng.collect_wave(&params, &w, &mut factory);
         assert_eq!(eng.results().len(), 2);
         assert!(eng.results().iter().all(|r| r.steps == 10));
+    }
+
+    fn result_bits(eng: &RolloutEngine) -> Vec<u64> {
+        eng.results()
+            .iter()
+            .flat_map(|r| {
+                [
+                    r.episode as u64,
+                    r.expert as u64,
+                    r.mean_reward.to_bits(),
+                    r.bootstrap.to_bits(),
+                    r.steps as u64,
+                ]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn persistent_pool_survives_waves_and_resizing() {
+        let params = small_params(9);
+        let w = wave(4, 60, 2);
+        let mut eng = RolloutEngine::new(4, 3);
+        eng.collect_wave(&params, &w, &mut factory);
+        let want = result_bits(&eng);
+        // same engine, next wave: the pool is reused, results identical
+        eng.collect_wave(&params, &w, &mut factory);
+        assert_eq!(want, result_bits(&eng));
+        // a resized thread count rebuilds the pool without changing results
+        eng.threads = 2;
+        eng.collect_wave(&params, &w, &mut factory);
+        assert_eq!(want, result_bits(&eng));
+        // and the single-thread (poolless) path agrees bitwise
+        let mut seq = RolloutEngine::new(4, 1);
+        seq.collect_wave(&params, &w, &mut factory);
+        assert_eq!(want, result_bits(&seq));
+    }
+
+    #[test]
+    fn exhaustive_expert_solver_changes_nothing() {
+        let params = small_params(10);
+        let w = wave(4, 77, 2); // episodes 2 and 4 are expert-driven
+        let mut fast = RolloutEngine::new(2, 2);
+        fast.collect_wave(&params, &w, &mut factory);
+        let mut slow = RolloutEngine::new(2, 2);
+        slow.expert_exhaustive = true;
+        slow.collect_wave(&params, &w, &mut factory);
+        assert_eq!(result_bits(&fast), result_bits(&slow));
+        for i in 0..w.len() {
+            let (a, b) = (fast.buffer(i), slow.buffer(i));
+            assert_eq!(a.len(), b.len());
+            for (ta, tb) in a.transitions.iter().zip(&b.transitions) {
+                assert_eq!(ta.action_idx, tb.action_idx, "episode {i}");
+                assert_eq!(ta.reward.to_bits(), tb.reward.to_bits());
+                assert_eq!(ta.logp.to_bits(), tb.logp.to_bits());
+            }
+        }
     }
 
     #[test]

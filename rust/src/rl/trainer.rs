@@ -6,8 +6,10 @@
 //! Rollout collection goes through the vectorized engine (rl/rollout.rs,
 //! DESIGN.md §9): episodes are gathered in **waves** of `sync_every`
 //! episodes under frozen parameters, each wave running up to `envs` lanes
-//! concurrently with env stepping sharded across `rollout_threads`
-//! workers. The PPO updates then consume the wave's episodes strictly in
+//! concurrently with env stepping sharded across the engine's persistent
+//! pool of `rollout_threads` workers (expert lanes carry their own
+//! `IpaSolver` scratch — DESIGN.md §10). The PPO updates then consume the
+//! wave's episodes strictly in
 //! episode order, so for a fixed `sync_every` the `TrainingHistory` is
 //! bitwise identical for ANY `envs` / thread count. `sync_every = 1` (the
 //! default) is the paper's per-episode schedule.

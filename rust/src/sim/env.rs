@@ -10,7 +10,7 @@
 use crate::cluster::{ClusterApi, ClusterTopology};
 use crate::nn::spec::*;
 use crate::pipeline::{
-    pipeline_metrics, PipelineMetrics, PipelineSpec, QosWeights, TaskConfig,
+    pipeline_metrics_into, PipelineMetrics, PipelineSpec, QosWeights, TaskConfig,
 };
 use crate::workload::predictor::LoadPredictor;
 use crate::workload::{LoadHistory, Trace, WorkloadGen, WorkloadKind};
@@ -46,7 +46,10 @@ impl LoadSource {
 }
 
 /// Everything an agent may look at when deciding (the paper's monitoring +
-/// Kubernetes-API view).
+/// Kubernetes-API view). Borrowed, not owned: `Env::observe` (and the
+/// multi-tenant tick) assemble the config/readiness/metrics views into
+/// reused owner-side buffers, so building an observation performs no heap
+/// allocation after warm-up (DESIGN.md §9/§10 allocation discipline).
 pub struct Observation<'a> {
     pub spec: &'a PipelineSpec,
     /// most recent per-second arrival rate (req/s)
@@ -58,10 +61,10 @@ pub struct Observation<'a> {
     /// whole W_max when the pipeline runs alone.
     pub capacity: f64,
     pub cores_free: f64,
-    pub current: Vec<TaskConfig>,
-    pub ready: Vec<usize>,
+    pub current: &'a [TaskConfig],
+    pub ready: &'a [usize],
     /// pipeline metrics under the current config at load_now
-    pub metrics: PipelineMetrics,
+    pub metrics: &'a PipelineMetrics,
     pub adapt_interval_secs: f64,
     /// cores allocated by other pipelines sharing the cluster (0.0 when the
     /// pipeline runs alone)
@@ -252,6 +255,14 @@ pub struct Env {
     last_rate: f64,
     /// reused predictor-window scratch (one per env, overwritten per tick)
     win_buf: Vec<f64>,
+    /// reused observation/tick scratch (fully overwritten per use by both
+    /// `observe` and the `run_interval` tick loop): current config
+    /// snapshot, per-stage readiness, pipeline metrics. These make the
+    /// whole rollout loop — observation assembly AND per-second scoring —
+    /// allocation-free after warm-up.
+    obs_current: Vec<TaskConfig>,
+    obs_ready: Vec<usize>,
+    obs_metrics: PipelineMetrics,
 }
 
 impl Env {
@@ -277,6 +288,9 @@ impl Env {
             cycle_secs,
             last_rate: 0.0,
             win_buf: Vec::with_capacity(PRED_WINDOW),
+            obs_current: Vec::new(),
+            obs_ready: Vec::new(),
+            obs_metrics: PipelineMetrics::default(),
         };
         env.bootstrap();
         env
@@ -366,22 +380,31 @@ impl Env {
         self.now >= self.cycle_secs as f64
     }
 
-    /// Current observation (state of the MDP).
+    /// Current observation (state of the MDP). Assembled into the env-owned
+    /// scratch buffers — no heap allocation after the first call.
     pub fn observe(&mut self) -> Observation<'_> {
         self.history.window_into(PRED_WINDOW, &mut self.win_buf);
         let load_pred = self.predictor.predict_max(&self.win_buf);
-        let current = self.api.current_config().to_vec();
-        let ready = self.api.ready_replicas(self.spec.n_tasks(), self.now);
-        let metrics = pipeline_metrics(&self.spec, &current, &ready, self.last_rate);
+        self.obs_current.clear();
+        self.obs_current.extend_from_slice(self.api.current_config());
+        self.api
+            .ready_replicas_into(self.spec.n_tasks(), self.now, &mut self.obs_ready);
+        pipeline_metrics_into(
+            &self.spec,
+            &self.obs_current,
+            &self.obs_ready,
+            self.last_rate,
+            &mut self.obs_metrics,
+        );
         Observation {
             spec: &self.spec,
             load_now: self.last_rate,
             load_pred,
             capacity: self.api.topo.capacity(),
             cores_free: self.api.topo.free(),
-            current,
-            ready,
-            metrics,
+            current: &self.obs_current,
+            ready: &self.obs_ready,
+            metrics: &self.obs_metrics,
             adapt_interval_secs: self.adapt_interval_secs as f64,
             cores_other: 0.0,
             tenants: 1,
@@ -406,13 +429,17 @@ impl Env {
             let rate = self.source.next_rate();
             self.history.push(rate);
             self.last_rate = rate;
-            let ready = self.api.ready_replicas(self.spec.n_tasks(), self.now);
-            let m = pipeline_metrics(&self.spec, applied, &ready, rate);
-            let q = self.weights.qos(&m);
+            let now = self.now;
+            // score the tick through the reused observation scratch (both
+            // buffers are fully overwritten by every user)
+            let Self { api, spec, weights, obs_ready, obs_metrics, .. } = &mut *self;
+            api.ready_replicas_into(spec.n_tasks(), now, obs_ready);
+            pipeline_metrics_into(spec, applied, obs_ready, rate, obs_metrics);
+            let q = weights.qos(obs_metrics);
             qos_acc += q;
-            cost_acc += m.cost;
-            reward_acc += self.weights.reward(&m);
-            record(q, m.cost, rate);
+            cost_acc += obs_metrics.cost;
+            reward_acc += weights.reward(obs_metrics);
+            record(q, obs_metrics.cost, rate);
         }
         (reward_acc, qos_acc, cost_acc)
     }

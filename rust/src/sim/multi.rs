@@ -268,9 +268,9 @@ impl MultiEnv {
             load_pred,
             capacity: (self.store.topo.capacity() - cores_other).max(0.0),
             cores_free: self.store.topo.free(),
-            current,
-            ready,
-            metrics,
+            current: &current,
+            ready: &ready,
+            metrics: &metrics,
             adapt_interval_secs: t.adapt_interval_secs as f64,
             cores_other,
             tenants: n_tenants,
@@ -409,15 +409,15 @@ impl MultiEnv {
                 load_pred,
                 capacity,
                 cores_free,
-                current,
-                ready,
-                metrics,
+                current: &current,
+                ready: &ready,
+                metrics: &metrics,
                 adapt_interval_secs,
                 cores_other,
                 tenants: n_tenants,
             };
             build_state_append(&obs, &mut self.batch_states);
-            let Observation { current, ready, metrics, .. } = obs;
+            drop(obs);
             preps.push(GroupPrep {
                 name: name.clone(),
                 spec,
@@ -449,19 +449,16 @@ impl MultiEnv {
         self.batched_groups += 1;
         self.batched_decisions += batch;
         let fwd_share = fwd_secs / batch as f64;
-        for (i, p) in preps.iter_mut().enumerate() {
-            let current = std::mem::take(&mut p.current);
-            let ready = std::mem::take(&mut p.ready);
-            let metrics = std::mem::take(&mut p.metrics);
+        for (i, p) in preps.iter().enumerate() {
             let obs = Observation {
                 spec: &p.spec,
                 load_now: p.load_now,
                 load_pred: p.load_pred,
                 capacity: p.capacity,
                 cores_free: p.cores_free,
-                current,
-                ready,
-                metrics,
+                current: &p.current,
+                ready: &p.ready,
+                metrics: &p.metrics,
                 adapt_interval_secs: p.adapt_interval_secs,
                 cores_other: p.cores_other,
                 tenants: n_tenants,

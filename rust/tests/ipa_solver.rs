@@ -1,0 +1,240 @@
+//! Determinism contract of the branch-and-bound IPA solver (DESIGN.md §10):
+//! the pruned/memoized/warm-started fast path must return configurations
+//! **bitwise identical** to the retained exhaustive reference on every
+//! catalog preset across a demand × budget grid, the hysteresis allocation
+//! memo must be invisible, and the trainer's expert episodes must be
+//! bitwise unchanged by the solver swap.
+
+use opd::agents::{Agent, IpaAgent, IpaSolver};
+use opd::cluster::ClusterTopology;
+use opd::pipeline::catalog::{self, Preset};
+use opd::pipeline::{QosWeights, TaskConfig};
+use opd::rl::{Trainer, TrainerConfig, TrainingHistory};
+use opd::sim::Env;
+use opd::workload::predictor::MovingMaxPredictor;
+use opd::workload::WorkloadKind;
+
+const DEMANDS: [f64; 4] = [5.0, 40.0, 80.0, 150.0];
+const BUDGETS: [f64; 3] = [6.0, 16.0, 30.0];
+
+fn assert_same(
+    tag: &str,
+    (a, sa): (Vec<TaskConfig>, f64),
+    (b, sb): (Vec<TaskConfig>, f64),
+) {
+    assert_eq!(a, b, "{tag}: configurations diverged");
+    assert_eq!(sa.to_bits(), sb.to_bits(), "{tag}: scores diverged");
+}
+
+/// Fast path ≡ exhaustive reference, with a FRESH solver per point (no
+/// memo/warm carry-over) and with ONE solver reused across the whole grid
+/// (memo + warm start active) — both must match exactly.
+#[test]
+fn pruned_matches_exhaustive_across_presets_and_grids() {
+    for preset in [Preset::P1, Preset::P2, Preset::P3] {
+        let spec = catalog::preset(preset).spec;
+        let mut reused = IpaSolver::new(QosWeights::default());
+        for demand in DEMANDS {
+            for budget in BUDGETS {
+                // P3's exhaustive reference walks 4^6 combos per point —
+                // audit a 2×2 subgrid there to keep debug-mode test time
+                // sane (perf_ipa sweeps the rest in release mode)
+                if preset == Preset::P3 && (!(40.0..=80.0).contains(&demand) || budget < 16.0)
+                {
+                    continue;
+                }
+                let tag = format!("{preset:?} demand={demand} budget={budget}");
+                let mut reference = IpaSolver::new(QosWeights::default());
+                let want = reference.solve_exhaustive(&spec, demand, budget);
+                let mut fresh = IpaSolver::new(QosWeights::default());
+                assert_same(&tag, fresh.solve(&spec, demand, budget), want.clone());
+                assert_same(&tag, reused.solve(&spec, demand, budget), want);
+            }
+        }
+        assert!(
+            reused.stats().pruned_bound + reused.stats().pruned_cores > 0,
+            "{preset:?}: the grid should exercise both pruning rules"
+        );
+    }
+}
+
+/// P4 (8 stages × 4 variants = 65 536 combos) is the Fig. 6 worst case;
+/// one exhaustive point keeps the test-suite runtime sane — `perf_ipa`
+/// audits more P4 points in release mode.
+#[test]
+fn pruned_matches_exhaustive_on_p4_spot_check() {
+    let spec = catalog::preset(Preset::P4).spec;
+    let mut fast = IpaSolver::new(QosWeights::default());
+    let mut slow = IpaSolver::new(QosWeights::default());
+    let want = slow.solve_exhaustive(&spec, 80.0, 16.0);
+    assert_same("P4 demand=80 budget=16", fast.solve(&spec, 80.0, 16.0), want);
+    assert!(
+        fast.stats().leaves < slow.stats().leaves / 2,
+        "P4 should prune hard: {} vs {} leaves",
+        fast.stats().leaves,
+        slow.stats().leaves
+    );
+}
+
+/// The hysteresis path: a memoized re-allocation of the previous variants
+/// must equal a fresh ascent, feasible or not.
+#[test]
+fn allocate_memo_is_invisible() {
+    let spec = catalog::preset(Preset::P2).spec;
+    let mut memo = IpaSolver::new(QosWeights::default());
+    let mut fresh = IpaSolver::new(QosWeights::default());
+    fresh.exhaustive = true; // exhaustive mode never consults the memo
+    let variants: Vec<Vec<usize>> =
+        vec![vec![0, 0, 0, 0], vec![1, 2, 0, 1], vec![2, 2, 2, 2], vec![0, 2, 1, 0]];
+    for demand in DEMANDS {
+        for budget in [4.0, 16.0, 30.0] {
+            for vs in &variants {
+                // twice through the memoized solver: miss then hit
+                for round in 0..2 {
+                    let got = memo
+                        .allocate(&spec, vs, demand, budget)
+                        .map(|(c, s)| (c.to_vec(), s));
+                    let want = fresh
+                        .allocate(&spec, vs, demand, budget)
+                        .map(|(c, s)| (c.to_vec(), s));
+                    match (got, want) {
+                        (None, None) => {}
+                        (Some((gc, gs)), Some((wc, ws))) => {
+                            assert_eq!(gc, wc, "round {round} {vs:?}");
+                            assert_eq!(gs.to_bits(), ws.to_bits());
+                        }
+                        (g, w) => panic!("feasibility diverged: {g:?} vs {w:?}"),
+                    }
+                }
+            }
+        }
+    }
+    assert!(memo.stats().alloc_memo_hits > 0, "second rounds must hit the memo");
+}
+
+/// Warm-start is a pruning bound only: a drifting-demand solve sequence on
+/// one solver (warm + memo active) must track the exhaustive reference at
+/// every step.
+#[test]
+fn warm_started_sequence_tracks_exhaustive() {
+    let spec = catalog::preset(Preset::P2).spec;
+    let mut fast = IpaSolver::new(QosWeights::default());
+    let mut slow = IpaSolver::new(QosWeights::default());
+    let mut demand = 20.0;
+    for step in 0..30 {
+        // steady stretches (memo hits) interleaved with drifts (warm starts)
+        if step % 3 == 0 {
+            demand = 20.0 + (step as f64) * 4.7;
+        }
+        let tag = format!("step {step} demand={demand}");
+        let want = slow.solve_exhaustive(&spec, demand, 30.0);
+        assert_same(&tag, fast.solve(&spec, demand, 30.0), want);
+    }
+    let st = fast.stats();
+    assert!(st.warm_bounds > 0, "drifting demand must exercise warm starts");
+    assert!(st.solve_memo_hits > 0, "steady stretches must hit the solve memo");
+}
+
+fn decide_env(seed: u64) -> Env {
+    Env::from_workload(
+        catalog::video_analytics().spec,
+        ClusterTopology::paper_testbed(),
+        QosWeights::default(),
+        WorkloadKind::Fluctuating,
+        seed,
+        Box::new(MovingMaxPredictor::default()),
+        10,
+        200,
+        3.0,
+    )
+}
+
+/// Full agent equivalence: `IpaAgent` (fast solver + hysteresis + the
+/// reused-score bugfix) decides identically to the exhaustive reference
+/// agent over a whole workload cycle.
+#[test]
+fn agent_decisions_are_solver_invariant() {
+    let mut fast_env = decide_env(31);
+    let mut slow_env = decide_env(31);
+    let mut fast = IpaAgent::new();
+    let mut slow = IpaAgent::exhaustive();
+    while !fast_env.done() {
+        let a = {
+            let obs = fast_env.observe();
+            fast.decide(&obs)
+        };
+        let b = {
+            let obs = slow_env.observe();
+            slow.decide(&obs)
+        };
+        assert_eq!(a, b, "t={}", fast_env.elapsed());
+        let ra = fast_env.step(&a);
+        let rb = slow_env.step(&b);
+        assert_eq!(ra.reward.to_bits(), rb.reward.to_bits());
+    }
+}
+
+fn history_bits(h: &TrainingHistory) -> Vec<u64> {
+    let mut out = vec![h.diverged_updates as u64];
+    for e in &h.episodes {
+        out.push(e.episode as u64);
+        out.push(e.expert as u64);
+        out.push(e.mean_reward.to_bits());
+        out.push(e.pi_loss.to_bits());
+        out.push(e.v_loss.to_bits());
+        out.push(e.entropy.to_bits());
+        out.push(e.approx_kl.to_bits());
+        out.push(e.diverged as u64);
+    }
+    out
+}
+
+fn train_factory(seed: u64) -> Env {
+    Env::from_workload(
+        catalog::by_name("P1").unwrap().spec,
+        ClusterTopology::paper_testbed(),
+        QosWeights::default(),
+        WorkloadKind::Fluctuating,
+        seed,
+        Box::new(MovingMaxPredictor::default()),
+        10,
+        100,
+        3.0,
+    )
+}
+
+fn small_params(seed: u64) -> Vec<f32> {
+    use opd::nn::spec::POLICY_PARAM_COUNT;
+    use opd::util::prng::Pcg32;
+    let mut rng = Pcg32::new(seed);
+    (0..POLICY_PARAM_COUNT).map(|_| (rng.normal() * 0.02) as f32).collect()
+}
+
+/// End-to-end expert-episode pin: training history AND learned parameters
+/// are bitwise unchanged when the expert lanes run the exhaustive solver —
+/// i.e. the branch-and-bound solver is invisible to Algorithm 2.
+#[test]
+fn trainer_output_is_bitwise_unchanged_by_the_fast_solver() {
+    let run = |exhaustive: bool| {
+        let tcfg = TrainerConfig {
+            episodes: 4,
+            expert_freq: 2, // episodes 2 and 4 are expert-driven
+            epochs: 1,
+            minibatches: 1,
+            seed: 17,
+            envs: 2,
+            rollout_threads: 2,
+            sync_every: 2,
+            ..Default::default()
+        };
+        let mut trainer = Trainer::native(small_params(5), tcfg, train_factory);
+        trainer.engine.expert_exhaustive = exhaustive;
+        let history = trainer.train().unwrap().clone();
+        let params: Vec<u32> = trainer.learner.params.iter().map(|p| p.to_bits()).collect();
+        (history_bits(&history), params)
+    };
+    let (h_fast, p_fast) = run(false);
+    let (h_slow, p_slow) = run(true);
+    assert_eq!(h_fast, h_slow, "training history changed");
+    assert_eq!(p_fast, p_slow, "learned parameters changed");
+}
