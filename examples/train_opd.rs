@@ -3,7 +3,11 @@
 //!
 //! Requires `make artifacts` (training runs through the AOT HLO train step).
 //!
-//! Run: cargo run --release --example train_opd [-- episodes]
+//! Run: cargo run --release --example train_opd [-- episodes [envs [sync_every]]]
+//!
+//! `envs` sets K concurrent rollout lanes (execution-only; default 1) and
+//! `sync_every` how many episodes share one parameter snapshot (default =
+//! envs; widths > 1 trade update freshness for sampling throughput).
 
 use std::rc::Rc;
 
@@ -18,10 +22,10 @@ use opd::workload::{Trace, WorkloadGen, WorkloadKind};
 
 fn main() {
     opd::util::logging::init();
-    let episodes: usize = std::env::args()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(40);
+    let arg = |n: usize| std::env::args().nth(n).and_then(|s| s.parse::<usize>().ok());
+    let episodes = arg(1).unwrap_or(40);
+    let envs = arg(2).unwrap_or(1).max(1);
+    let sync_every = arg(3).unwrap_or(envs);
     let rt = match OpdRuntime::load(None).map(Rc::new) {
         Ok(rt) => rt,
         Err(e) => {
@@ -38,9 +42,15 @@ fn main() {
         expert_freq: 4,
         seed: 42,
         reuse_envs: false,
+        envs,
+        sync_every,
         ..Default::default()
     };
-    println!("training OPD: {episodes} episodes (expert every {}th), 400 s episodes", tcfg.expert_freq);
+    println!(
+        "training OPD: {episodes} episodes (expert every {}th), 400 s episodes, \
+         {envs} rollout lane(s), sync every {sync_every}",
+        tcfg.expert_freq
+    );
     let rt2 = rt.clone();
     let mut trainer = Trainer::new(rt.clone(), tcfg, move |seed| {
         // alternate the training distribution across all three load regimes

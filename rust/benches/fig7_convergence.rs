@@ -6,6 +6,12 @@
 //! plain CPU the native fused train step (DESIGN.md §8) runs the same loop
 //! end-to-end — no PJRT required.
 //!
+//! Env knobs: OPD_FIG7_EPISODES (default 60), OPD_FIG7_ENVS (rollout lanes
+//! K, default 1), OPD_FIG7_SYNC (episodes per parameter sync, default =
+//! envs). OPD_FIG7_SWEEP=1 runs the sync-width ablation instead: K=8 lanes,
+//! sync ∈ {1, 2, 4, 8}, reporting convergence (last-quartile reward) vs
+//! throughput per width.
+//!
 //! Run: cargo bench --bench fig7_convergence
 
 use std::rc::Rc;
@@ -13,26 +19,32 @@ use std::rc::Rc;
 use opd::cli::{make_env_predictor, native_init_params};
 use opd::cluster::ClusterTopology;
 use opd::pipeline::{catalog, QosWeights};
-use opd::rl::{Trainer, TrainerConfig};
+use opd::rl::{Trainer, TrainerConfig, TrainingHistory};
 use opd::runtime::OpdRuntime;
 use opd::sim::Env;
 use opd::util::stats;
 use opd::workload::WorkloadKind;
 
-fn main() {
-    println!("=== Fig. 7: OPD training convergence ===\n");
-    let rt = match OpdRuntime::load(None).map(Rc::new) {
-        Ok(rt) => Some(rt),
-        Err(e) => {
-            println!("no artifacts ({e:#}) — using the native fused train step\n");
-            None
-        }
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// One full training run at the given rollout schedule; returns the history
+/// and the wall-clock seconds.
+fn train_once(
+    rt: &Option<Rc<OpdRuntime>>,
+    episodes: usize,
+    envs: usize,
+    sync_every: usize,
+) -> (TrainingHistory, f64) {
+    let tcfg = TrainerConfig {
+        episodes,
+        expert_freq: 4,
+        seed: 42,
+        envs,
+        sync_every,
+        ..Default::default()
     };
-    let episodes: usize = std::env::var("OPD_FIG7_EPISODES")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(60);
-    let tcfg = TrainerConfig { episodes, expert_freq: 4, seed: 42, ..Default::default() };
     let rt2 = rt.clone();
     let env_factory = move |seed| {
         Env::from_workload(
@@ -47,19 +59,66 @@ fn main() {
             3.0,
         )
     };
-    let mut trainer = match rt {
+    let mut trainer = match rt.clone() {
         Some(rt) => Trainer::new(rt, tcfg, env_factory),
         None => Trainer::native(native_init_params(None, 42), tcfg, env_factory),
     };
     let t0 = std::time::Instant::now();
     trainer.train().expect("training failed");
-    let wall = t0.elapsed().as_secs_f64();
+    (trainer.history, t0.elapsed().as_secs_f64())
+}
+
+/// Convergence-vs-throughput ablation: how wide can the parameter sync get
+/// (episodes sharing one snapshot) before the off-policy drift costs more
+/// reward than the sampling throughput buys?
+fn sweep(rt: &Option<Rc<OpdRuntime>>, episodes: usize) {
+    println!("=== Fig. 7 ablation: sync width vs convergence (K=8 lanes) ===\n");
+    println!(
+        "{:>10} {:>10} {:>16} {:>14} {:>12}",
+        "sync_every", "wall s", "last-qtr reward", "value loss", "episodes/s"
+    );
+    for &sync in &[1usize, 2, 4, 8] {
+        let (history, wall) = train_once(rt, episodes, 8, sync);
+        let eps = &history.episodes;
+        let k = (eps.len() / 4).max(1);
+        let late_r: Vec<f64> = eps[eps.len() - k..].iter().map(|e| e.mean_reward).collect();
+        let late_v: Vec<f64> = eps[eps.len() - k..].iter().map(|e| e.v_loss).collect();
+        println!(
+            "{:>10} {:>10.1} {:>16.3} {:>14.3} {:>12.2}",
+            sync,
+            wall,
+            stats::mean(&late_r),
+            stats::mean(&late_v),
+            eps.len() as f64 / wall
+        );
+    }
+    println!("\nwider sync = more lane overlap (throughput) but staler behavior policies;");
+    println!("the paper's per-episode schedule is sync_every=1.");
+}
+
+fn main() {
+    let rt = match OpdRuntime::load(None).map(Rc::new) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            println!("no artifacts ({e:#}) — using the native fused train step\n");
+            None
+        }
+    };
+    let episodes = env_usize("OPD_FIG7_EPISODES", 60);
+    if std::env::var("OPD_FIG7_SWEEP").is_ok_and(|v| v == "1") {
+        sweep(&rt, episodes);
+        return;
+    }
+    let envs = env_usize("OPD_FIG7_ENVS", 1).max(1);
+    let sync_every = env_usize("OPD_FIG7_SYNC", envs);
+    println!("=== Fig. 7: OPD training convergence (envs={envs} sync_every={sync_every}) ===\n");
+    let (history, wall) = train_once(&rt, episodes, envs, sync_every);
 
     println!(
         "{:>4} {:>7} {:>12} {:>12} {:>10} {:>10}",
         "ep", "expert", "train loss", "value loss", "entropy", "reward"
     );
-    for e in &trainer.history.episodes {
+    for e in &history.episodes {
         println!(
             "{:>4} {:>7} {:>12.4} {:>12.4} {:>10.3} {:>10.3}",
             e.episode,
@@ -71,7 +130,7 @@ fn main() {
         );
     }
 
-    let eps = &trainer.history.episodes;
+    let eps = &history.episodes;
     let k = (eps.len() / 4).max(1);
     let early_r: Vec<f64> = eps[..k].iter().map(|e| e.mean_reward).collect();
     let late_r: Vec<f64> = eps[eps.len() - k..].iter().map(|e| e.mean_reward).collect();

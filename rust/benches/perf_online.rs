@@ -1,0 +1,318 @@
+//! §Perf — online learning subsystem (DESIGN.md §11), three stories:
+//!
+//! 1. **Ingest**: transitions/sec the background trainer absorbs end-to-end
+//!    (channel → windowed GAE → native fused PPO updates), plus per-update
+//!    wall latency.
+//! 2. **Decide-path tax**: per-tick leader latency (p50/p99) with the online
+//!    hook attached and the trainer chewing off-clock, vs learning off. The
+//!    tick only clones decision records and sends on a channel, so the p99
+//!    should be unchanged within noise. Also asserts the leader-side
+//!    observation scratch stays allocation-free after warm-up.
+//! 3. **Drift recovery**: a replayed workload shifts low → high mid-run; with
+//!    --learn the fleet's QoS recovers via background updates + tick-boundary
+//!    hot swaps, without a redeploy.
+//!
+//! Writes BENCH_online.json. Run: cargo bench --bench perf_online [-- --quick]
+//! (pure CPU — no artifacts needed)
+
+use std::time::Instant;
+
+use opd::agents::OpdAgent;
+use opd::cluster::ClusterTopology;
+use opd::nn::spec::{ACT_DIM, LOGITS_DIM, MAX_TASKS, POLICY_PARAM_COUNT, STATE_DIM};
+use opd::pipeline::{catalog, QosWeights};
+use opd::rl::{OnlineConfig, OnlineTrainer, Transition};
+use opd::sim::env::LoadSource;
+use opd::sim::{MultiEnv, Tenant};
+use opd::util::json::Json;
+use opd::util::prng::Pcg32;
+use opd::util::stats;
+use opd::workload::predictor::MovingMaxPredictor;
+use opd::workload::{WorkloadGen, WorkloadKind};
+
+fn init_params(seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed);
+    (0..POLICY_PARAM_COUNT).map(|_| (rng.normal() * 0.02) as f32).collect()
+}
+
+fn synth_transition(rng: &mut Pcg32) -> Transition {
+    Transition {
+        state: (0..STATE_DIM).map(|_| (rng.normal() * 0.4) as f32).collect(),
+        action_idx: (0..ACT_DIM).map(|_| rng.below(2) as usize).collect(),
+        logp: -8.0,
+        value: rng.normal() as f32,
+        reward: rng.normal(),
+        head_mask: vec![true; LOGITS_DIM],
+        task_mask: vec![true; MAX_TASKS],
+    }
+}
+
+/// An OPD tenant on a replayed (or generated) load source; sampling, not
+/// greedy, so the transition stream carries exploration — the serve --learn
+/// configuration.
+fn opd_tenant(name: &str, pipeline: &str, params: Vec<f32>, seed: u64, source: LoadSource) -> Tenant {
+    let mut agent = OpdAgent::native(params, seed);
+    agent.greedy = false;
+    Tenant::new(
+        name,
+        catalog::by_name(pipeline).unwrap().spec,
+        Box::new(agent),
+        QosWeights::default(),
+        source,
+        Box::new(MovingMaxPredictor::default()),
+        2,
+    )
+}
+
+fn fleet(params: &[f32], n: usize, interval_seed: u64) -> MultiEnv {
+    let mut env = MultiEnv::new(ClusterTopology::paper_testbed(), 3.0);
+    for i in 0..n {
+        let pipeline = if i % 2 == 0 { "P1" } else { "iot-anomaly" };
+        env.deploy(
+            opd_tenant(
+                &format!("t{i}"),
+                pipeline,
+                params.to_vec(),
+                interval_seed + i as u64,
+                LoadSource::Gen(WorkloadGen::new(WorkloadKind::Fluctuating, interval_seed + i as u64)),
+            ),
+            None,
+        )
+        .unwrap();
+    }
+    env
+}
+
+/// 1. raw ingest throughput: feed N synthetic transitions and wait for the
+/// trainer to finish every queued window.
+fn bench_ingest(quick: bool) -> Json {
+    let n = if quick { 512 } else { 4096 };
+    let handle = OnlineTrainer::spawn(
+        init_params(1),
+        OnlineConfig { window: 64, min_batch: 16, ..Default::default() },
+    );
+    let shared = handle.shared.clone();
+    let hook = handle.hook();
+    let mut rng = Pcg32::new(7);
+    let t0 = Instant::now();
+    for _ in 0..n {
+        hook.tx.send(synth_transition(&mut rng)).unwrap();
+    }
+    drop(hook);
+    let stats_o = handle.finish();
+    let secs = t0.elapsed().as_secs_f64();
+    let mut lat = Vec::new();
+    shared.drain_latencies(&mut lat);
+    let tps = n as f64 / secs;
+    let lat_p50 = if lat.is_empty() { 0.0 } else { stats::percentile(&lat, 50.0) };
+    let lat_p99 = if lat.is_empty() { 0.0 } else { stats::percentile(&lat, 99.0) };
+    println!(
+        "ingest: {n} transitions in {secs:.2}s → {tps:8.0} tr/s   {} updates   update p50 {:.1} ms  p99 {:.1} ms",
+        stats_o.updates,
+        lat_p50 * 1e3,
+        lat_p99 * 1e3
+    );
+    assert_eq!(stats_o.transitions as usize, n);
+    assert!(stats_o.updates >= 1);
+    Json::obj()
+        .set("transitions", n)
+        .set("secs", secs)
+        .set("transitions_per_sec", tps)
+        .set("updates", stats_o.updates as i64)
+        .set("diverged", stats_o.diverged as i64)
+        .set("update_p50_secs", lat_p50)
+        .set("update_p99_secs", lat_p99)
+}
+
+/// Per-tick wall times over `ticks` seconds of an 8-tenant fleet.
+fn tick_times(env: &mut MultiEnv, ticks: usize, pace: Option<std::time::Duration>) -> Vec<f64> {
+    let mut out = Vec::with_capacity(ticks);
+    for _ in 0..ticks {
+        let t0 = Instant::now();
+        env.tick();
+        out.push(t0.elapsed().as_secs_f64());
+        if let Some(d) = pace {
+            std::thread::sleep(d);
+        }
+    }
+    out
+}
+
+/// 2. decide-path p50/p99 with learning on vs off.
+fn bench_decide_path(quick: bool) -> Json {
+    let ticks = if quick { 150 } else { 600 };
+    let params = init_params(2);
+
+    // learning OFF
+    let mut env_off = fleet(&params, 8, 100);
+    env_off.run_for(20); // warm-up: scratch pools grow once
+    let warm = env_off.obs_grow_events();
+    let off = tick_times(&mut env_off, ticks, None);
+    assert_eq!(env_off.obs_grow_events(), warm, "warm leader tick must not grow scratch");
+
+    // learning ON — real trainer chewing windows off the leader's clock
+    let handle = OnlineTrainer::spawn(
+        params.clone(),
+        OnlineConfig { window: 32, min_batch: 16, epochs: 1, minibatches: 1, ..Default::default() },
+    );
+    let mut env_on = fleet(&params, 8, 100);
+    env_on.set_online(handle.hook());
+    env_on.run_for(20);
+    let on = tick_times(&mut env_on, ticks, None);
+    let transitions = env_on.online_transitions;
+    let swaps = env_on.param_swaps;
+    drop(env_on.take_online());
+    let stats_o = handle.finish();
+
+    let (off_p50, off_p99) = (stats::percentile(&off, 50.0), stats::percentile(&off, 99.0));
+    let (on_p50, on_p99) = (stats::percentile(&on, 50.0), stats::percentile(&on, 99.0));
+    println!(
+        "decide path ({ticks} ticks, 8 tenants): off p50 {:7.1} µs  p99 {:7.1} µs   on p50 {:7.1} µs  p99 {:7.1} µs  ({} transitions, {} updates, {} swaps)",
+        off_p50 * 1e6,
+        off_p99 * 1e6,
+        on_p50 * 1e6,
+        on_p99 * 1e6,
+        transitions,
+        stats_o.updates,
+        swaps
+    );
+    assert!(transitions > 0, "learn-on run must stream transitions");
+    Json::obj()
+        .set("ticks", ticks)
+        .set("off_p50_secs", off_p50)
+        .set("off_p99_secs", off_p99)
+        .set("on_p50_secs", on_p50)
+        .set("on_p99_secs", on_p99)
+        .set("p99_ratio_on_vs_off", if off_p99 > 0.0 { on_p99 / off_p99 } else { 0.0 })
+        .set("transitions", transitions)
+        .set("updates", stats_o.updates as i64)
+        .set("param_swaps", swaps)
+}
+
+/// Mean of the fleet's per-second QoS over `range` of the recorded series.
+fn window_mean(series: &[f64], range: std::ops::Range<usize>) -> f64 {
+    let lo = range.start.min(series.len());
+    let hi = range.end.min(series.len());
+    if lo >= hi {
+        return 0.0;
+    }
+    stats::mean(&series[lo..hi])
+}
+
+/// 3. drift scenario: the replayed load shifts low → high at `shift`; the
+/// learn-on fleet recovers QoS through background updates + hot swaps.
+fn bench_drift(quick: bool) -> Json {
+    let (shift, total) = if quick { (180usize, 360usize) } else { (300, 720) };
+    // one shared replay: ~20 req/s, then ~120 req/s after the shift
+    let low = WorkloadGen::new(WorkloadKind::SteadyLow, 5).trace(shift);
+    let high = WorkloadGen::new(WorkloadKind::SteadyHigh, 6).trace(total - shift + 64);
+    let mut rates = low;
+    rates.extend_from_slice(&high);
+    let params = init_params(3);
+
+    let run = |learn: bool| -> (Vec<f64>, u64, usize, u64) {
+        let mut env = MultiEnv::new(ClusterTopology::paper_testbed(), 3.0);
+        for i in 0..4u64 {
+            let pipeline = if i % 2 == 0 { "P1" } else { "iot-anomaly" };
+            env.deploy(
+                opd_tenant(
+                    &format!("d{i}"),
+                    pipeline,
+                    params.clone(),
+                    10 + i,
+                    LoadSource::Replay { rates: rates.clone(), idx: 0 },
+                ),
+                None,
+            )
+            .unwrap();
+        }
+        let handle = learn.then(|| {
+            let h = OnlineTrainer::spawn(
+                params.clone(),
+                OnlineConfig {
+                    window: 16,
+                    min_batch: 8,
+                    epochs: 1,
+                    minibatches: 1,
+                    ..Default::default()
+                },
+            );
+            env.set_online(h.hook());
+            h
+        });
+        let mut qos = Vec::with_capacity(total);
+        // pace the sim (~2 ms/tick) so the off-clock trainer lands updates
+        // mid-run, like a wall-clock deployment; the control is unpaced
+        let pace = learn.then(|| std::time::Duration::from_millis(2));
+        for _ in 0..total {
+            env.tick();
+            let mean_qos: f64 = ["d0", "d1", "d2", "d3"]
+                .iter()
+                .map(|n| env.status(n).unwrap().last_qos)
+                .sum::<f64>()
+                / 4.0;
+            qos.push(mean_qos);
+            if let Some(d) = pace {
+                std::thread::sleep(d);
+            }
+        }
+        let generation = env.policy_generation;
+        let swaps = env.param_swaps;
+        let updates = match handle {
+            Some(h) => {
+                drop(env.take_online());
+                h.finish().updates
+            }
+            None => 0,
+        };
+        (qos, updates, swaps, generation)
+    };
+
+    let (qos_on, updates, swaps, generation) = run(true);
+    let (qos_off, _, _, _) = run(false);
+
+    let pre = window_mean(&qos_on, shift.saturating_sub(60)..shift);
+    let dip = window_mean(&qos_on, shift..shift + 60);
+    let recovered = window_mean(&qos_on, total - 60..total);
+    let recovered_off = window_mean(&qos_off, total - 60..total);
+    println!(
+        "drift (shift @ {shift}s / {total}s): pre {pre:.3}  dip {dip:.3}  recovered {recovered:.3}  (no-learn control {recovered_off:.3})"
+    );
+    println!(
+        "  learn-on: {updates} online updates, {swaps} fleet swaps, policy generation {generation}"
+    );
+    assert!(updates >= 1, "the drift run must produce online updates");
+    assert!(generation >= 1, "the fleet must adopt at least one generation");
+    if recovered + 1e-9 < pre * 0.9 {
+        println!("  (recovered QoS below 90% of pre-shift — see BENCH_online.json)");
+    }
+    Json::obj()
+        .set("shift_secs", shift)
+        .set("total_secs", total)
+        .set("qos_pre_shift", pre)
+        .set("qos_dip", dip)
+        .set("qos_recovered", recovered)
+        .set("qos_recovered_no_learn", recovered_off)
+        .set("online_updates", updates as i64)
+        .set("param_swaps", swaps)
+        .set("policy_generation", generation as i64)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    println!(
+        "=== §Perf: online learning subsystem (DESIGN.md §11){} ===\n",
+        if quick { " [quick]" } else { "" }
+    );
+    let ingest = bench_ingest(quick);
+    let decide = bench_decide_path(quick);
+    let drift = bench_drift(quick);
+    let out = Json::obj()
+        .set("bench", "perf_online")
+        .set("quick", quick)
+        .set("ingest", ingest)
+        .set("decide_path", decide)
+        .set("drift", drift);
+    std::fs::write("BENCH_online.json", out.to_pretty()).expect("write BENCH_online.json");
+    println!("\nwrote BENCH_online.json");
+}

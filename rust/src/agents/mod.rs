@@ -10,7 +10,7 @@ pub mod random;
 pub use autoscale::AutoscaleAgent;
 pub use greedy::GreedyAgent;
 pub use ipa::{IpaAgent, IpaSolver, SolverStats};
-pub use opd::OpdAgent;
+pub use opd::{DecisionRecord, OpdAgent};
 pub use random::RandomAgent;
 
 use crate::config::AgentKind;
@@ -49,6 +49,22 @@ pub trait Agent {
     ) -> Vec<TaskConfig> {
         let _ = (state, logits, value);
         self.decide(obs)
+    }
+
+    /// Online-learning support (DESIGN.md §11): the trajectory record of the
+    /// most recent decision, for policies that keep one. `None` (the
+    /// default) excludes the agent from the live transition stream.
+    fn decision_record(&self) -> Option<&DecisionRecord> {
+        None
+    }
+
+    /// Online-learning support: adopt a parameter vector published by the
+    /// background trainer. Returns false (the default) for agents without
+    /// native policy parameters; implementations must re-fingerprint so the
+    /// batched tick path regroups on the new vector.
+    fn set_policy_params(&mut self, params: &[f32]) -> bool {
+        let _ = params;
+        false
     }
 }
 

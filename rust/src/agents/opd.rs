@@ -97,6 +97,20 @@ impl OpdAgent {
         }
     }
 
+    /// [`OpdAgent::set_params`] from a borrowed slice, reusing the existing
+    /// parameter allocation — the online hot-swap path runs this for every
+    /// tenant at a tick boundary, so it must not reallocate 129k floats per
+    /// tenant per update.
+    pub fn set_params_from(&mut self, params: &[f32]) {
+        assert_eq!(params.len(), POLICY_PARAM_COUNT);
+        self.params.clear();
+        self.params.extend_from_slice(params);
+        self.params_fp = params_fingerprint(&self.params);
+        if let Backend::Hlo(_, pinned) = &mut self.backend {
+            *pinned = std::cell::OnceCell::new();
+        }
+    }
+
     /// Workspace (re)allocation count — the perf bench's proof hook that the
     /// decision path stops allocating after warm-up.
     pub fn workspace_grow_events(&self) -> u64 {
@@ -213,6 +227,16 @@ impl Agent for OpdAgent {
         self.last.logp = logp;
         self.last.value = value;
         decode_action(obs.spec, &self.last.action_idx)
+    }
+
+    fn decision_record(&self) -> Option<&DecisionRecord> {
+        // empty state ⇒ the agent has not decided yet — nothing to stream
+        if self.last.state.is_empty() { None } else { Some(&self.last) }
+    }
+
+    fn set_policy_params(&mut self, params: &[f32]) -> bool {
+        self.set_params_from(params);
+        true
     }
 }
 
@@ -390,5 +414,34 @@ mod tests {
         use crate::agents::GreedyAgent;
         let g = GreedyAgent::new();
         assert!(Agent::batch_params(&g).is_none());
+    }
+
+    #[test]
+    fn decision_record_appears_after_the_first_decide() {
+        let mut e = env();
+        let mut a = OpdAgent::native(test_params(8), 5);
+        assert!(Agent::decision_record(&a).is_none(), "no decision yet");
+        let obs = e.observe();
+        let _ = a.decide(&obs);
+        let rec = Agent::decision_record(&a).expect("populated by decide");
+        assert_eq!(rec.state.len(), STATE_DIM);
+        assert_eq!(rec.action_idx.len(), ACT_DIM);
+    }
+
+    #[test]
+    fn set_policy_params_refingerprints_without_reallocating() {
+        let mut a = OpdAgent::native(test_params(9), 6);
+        let (_, fp_before) = Agent::batch_params(&a).unwrap();
+        let cap_before = a.params.capacity();
+        let next = test_params(10);
+        assert!(Agent::set_policy_params(&mut a, &next));
+        let (params, fp_after) = Agent::batch_params(&a).unwrap();
+        assert_ne!(fp_before, fp_after, "new vector ⇒ new batching fingerprint");
+        assert_eq!(params, &next[..]);
+        assert_eq!(a.params.capacity(), cap_before, "same-size swap reuses the vec");
+        // baseline agents decline the swap
+        use crate::agents::GreedyAgent;
+        let mut g = GreedyAgent::new();
+        assert!(!Agent::set_policy_params(&mut g, &next));
     }
 }

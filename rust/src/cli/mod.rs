@@ -56,8 +56,15 @@ COMMANDS
   predict    [--workload W] [--secs N] [--seed N] [--native]
   serve      --addr HOST:PORT [--pipeline P] [--workload W] [--agent A]
              [--name NAME] [--cycle S] [--interval S] [--realtime] [--empty]
+             [--learn] [--learn-window N] [--learn-min-batch M]
+             [--learn-checkpoint PATH]
              boots the multi-pipeline leader; --empty starts with no pipeline
-             (terminate via POST /v1/shutdown). v1 REST API:
+             (terminate via POST /v1/shutdown). --learn streams live
+             transitions to a background PPO trainer and hot-swaps updated
+             policies into the fleet at tick boundaries (window N transitions
+             per update round, default 64; min-batch M to flush a remainder
+             at shutdown, default 16; --learn-checkpoint persists the learned
+             params + .adam sidecar). v1 REST API:
                GET/POST   /v1/pipelines          list / create
                GET/PUT/DELETE /v1/pipelines/{name}  status / apply / remove
                POST       /v1/pipelines/{name}/agent  hot-swap agent
@@ -432,6 +439,10 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let empty = args.switch("empty");
     let params_path = args.str_flag("params");
     let name = args.str_flag("name").unwrap_or_else(|| cfg.pipeline.clone());
+    let learn = args.switch("learn");
+    let learn_window = args.usize_flag("learn-window", 64).map_err(|e| anyhow!(e))?;
+    let learn_min_batch = args.usize_flag("learn-min-batch", 16).map_err(|e| anyhow!(e))?;
+    let learn_checkpoint = args.str_flag("learn-checkpoint");
     check_unknown(args)?;
     let rt = load_runtime(&cfg, native);
 
@@ -458,21 +469,73 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     );
     cp.metrics.describe("opd_pipelines", "pipelines deployed on the shared cluster");
     cp.metrics.describe("opd_cluster_used_cores", "cores allocated across all pipelines");
+    if learn {
+        cp.metrics.describe(
+            "opd_online_updates_total",
+            "PPO updates applied by the background online trainer (DESIGN.md \u{a7}11)",
+        );
+        cp.metrics.describe(
+            "opd_online_transitions_total",
+            "live transitions streamed from decide ticks to the online trainer",
+        );
+        cp.metrics.describe(
+            "opd_policy_generation",
+            "online policy generation the fleet currently runs",
+        );
+        cp.metrics
+            .describe("opd_online_update_seconds", "wall-clock seconds per online PPO update");
+    }
 
     // agents/predictors for API-applied pipelines reuse the CLI wiring (HLO
     // runtime when available, native fallback otherwise)
     let rt_agent = rt.clone();
     let params_agent = params_path.clone();
     let rt_pred = rt.clone();
+    // while learning, OPD agents keep sampling (greedy = false) so the live
+    // transition stream carries exploration; pure serving stays greedy
+    let greedy = !learn;
     let factory = TenantFactory {
         make_agent: Box::new(move |kind, seed| {
-            make_agent(kind, seed, &rt_agent, params_agent.as_deref(), true)
+            make_agent(kind, seed, &rt_agent, params_agent.as_deref(), greedy)
                 .map_err(|e| format!("{e:#}"))
         }),
         make_predictor: Box::new(move || make_predictor(&rt_pred)),
     };
     let (mut leader, tx) = Leader::new(cp.clone(), cfg.topology(), cfg.startup_secs, factory);
     leader.weights = cfg.weights;
+    // --learn: boot the background online trainer (DESIGN.md §11). It shares
+    // the fleet's initial policy so the first published generation is a
+    // refinement, not a reset.
+    let online = if learn {
+        let init = match &params_path {
+            Some(p) => read_params(
+                std::path::Path::new(p),
+                crate::nn::spec::POLICY_PARAM_COUNT,
+            )?,
+            None => match &rt {
+                Some(rt) => rt.policy_init.clone(),
+                None => native_init_params(cfg.artifacts_dir.as_deref(), cfg.seed),
+            },
+        };
+        let ocfg = crate::rl::OnlineConfig {
+            window: learn_window.max(1),
+            min_batch: learn_min_batch.max(1),
+            seed: cfg.seed,
+            checkpoint: learn_checkpoint.clone(),
+            ..Default::default()
+        };
+        let handle = crate::rl::OnlineTrainer::spawn(init, ocfg);
+        leader.enable_online(&handle);
+        println!(
+            "online learning on: window={} min_batch={} checkpoint={}",
+            learn_window.max(1),
+            learn_min_batch.max(1),
+            learn_checkpoint.as_deref().unwrap_or("-")
+        );
+        Some(handle)
+    } else {
+        None
+    };
     // --empty boots a long-running control plane (stop via POST /v1/shutdown)
     // and therefore paces to wall-clock so the loop doesn't spin a core with
     // a racing sim clock; otherwise the leader serves one --cycle worth of
@@ -505,6 +568,17 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         leader.env.now,
         leader.env.n_tenants()
     );
+    if let Some(handle) = online {
+        // drop the env's sender clone first so the trainer sees the channel
+        // close, flushes any ≥ min_batch remainder, and exits
+        drop(leader.env.take_online());
+        let applied = leader.env.policy_generation;
+        let stats = handle.finish();
+        println!(
+            "online learning: updates={} transitions={} generation={} applied_generation={} diverged={}",
+            stats.updates, stats.transitions, stats.final_generation, applied, stats.diverged
+        );
+    }
     server.shutdown();
     Ok(())
 }

@@ -105,6 +105,17 @@ impl DeploymentStore {
         self.deployments.keys().cloned().collect()
     }
 
+    /// Bump a deployment's generation without touching its config — records
+    /// non-config control-plane changes (an agent hot-swap, an online policy
+    /// update) in the same monotone version stream clients watch for
+    /// staleness. Returns the new generation.
+    pub fn bump_generation(&mut self, name: &str) -> Option<u64> {
+        self.deployments.get_mut(name).map(|d| {
+            d.generation += 1;
+            d.generation
+        })
+    }
+
     pub fn deployments(&self) -> impl Iterator<Item = &Deployment> {
         self.deployments.values()
     }

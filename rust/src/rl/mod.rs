@@ -1,16 +1,21 @@
 //! Reinforcement-learning machinery for the OPD algorithm: GAE, rollout
 //! buffer / replay memory, the PPO learner (AOT train step with a native
 //! fused fallback — DESIGN.md §8), the vectorized parallel rollout engine
-//! (DESIGN.md §9), and the Algorithm-2 trainer with expert guidance.
+//! (DESIGN.md §9), the Algorithm-2 trainer with expert guidance, and the
+//! online learning subsystem behind `opd serve --learn` (DESIGN.md §11).
 
 pub mod buffer;
 pub mod gae;
+pub mod online;
 pub mod ppo;
 pub mod rollout;
 pub mod trainer;
 
 pub use buffer::{Minibatch, RolloutBuffer, Transition};
 pub use gae::gae;
+pub use online::{
+    OnlineConfig, OnlineHandle, OnlineHook, OnlineStats, OnlineTrainer, SharedPolicy,
+};
 pub use ppo::{
     eval_minibatch_native, ppo_loss_grad_native, ppo_loss_native, PpoLearner, StepScratch,
     UpdateMetrics,

@@ -1,0 +1,440 @@
+//! Online learning subsystem (DESIGN.md §11): the serving leader streams
+//! live per-tenant `(obs, action, reward)` transitions into a background
+//! trainer thread, which consumes filled windows through the native fused
+//! PPO step (DESIGN.md §8) and publishes updated parameter vectors back.
+//! The leader adopts a published vector only at a tick boundary — see
+//! `MultiEnv::tick` — so a batched decide group never mixes parameter
+//! fingerprints mid-flight.
+//!
+//! Threading: `PpoLearner` can hold a PJRT runtime handle (`Rc`, !Send), so
+//! the trainer thread constructs its own `PpoLearner::native` from the
+//! initial parameter vector — only plain `Transition` data and the
+//! `SharedPolicy` cell ever cross the thread boundary. Updates therefore
+//! always run through the native fused step, off the leader's clock.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::rl::buffer::{RolloutBuffer, Transition};
+use crate::rl::ppo::PpoLearner;
+use crate::util::prng::Pcg32;
+
+/// Tuning knobs of the background trainer (CLI: `opd serve --learn*`).
+#[derive(Clone, Debug)]
+pub struct OnlineConfig {
+    /// transitions accumulated before an update window runs
+    pub window: usize,
+    /// minimum transitions worth a final flush update at shutdown
+    pub min_batch: usize,
+    /// PPO epochs per window (kept small: update latency bounds how stale
+    /// the published vector is by the time the leader adopts it)
+    pub epochs: usize,
+    /// minibatches sampled per epoch
+    pub minibatches: usize,
+    pub gamma: f64,
+    pub gae_lambda: f64,
+    pub seed: u64,
+    /// gradient worker threads (0 = the learner's auto default)
+    pub threads: usize,
+    /// checkpoint path; written every `checkpoint_every` updates and once at
+    /// shutdown, with the `.adam` optimizer sidecar (DESIGN.md §8)
+    pub checkpoint: Option<String>,
+    pub checkpoint_every: u64,
+}
+
+impl Default for OnlineConfig {
+    fn default() -> Self {
+        Self {
+            window: 64,
+            min_batch: 16,
+            epochs: 2,
+            minibatches: 2,
+            gamma: 0.9,
+            gae_lambda: 0.9,
+            seed: 42,
+            threads: 0,
+            checkpoint: None,
+            checkpoint_every: 8,
+        }
+    }
+}
+
+/// What the trainer thread reports when it exits.
+#[derive(Clone, Debug, Default)]
+pub struct OnlineStats {
+    pub updates: u64,
+    pub transitions: u64,
+    /// minibatch updates skipped by the divergence guard
+    pub diverged: u64,
+    /// generation of the last published parameter vector
+    pub final_generation: u64,
+}
+
+/// The cell both sides share: the trainer publishes `(generation, params)`
+/// here; the leader adopts the newest vector at its next tick boundary.
+/// Counters ride along so telemetry needs no extra channel.
+pub struct SharedPolicy {
+    published: Mutex<(u64, Option<Arc<Vec<f32>>>)>,
+    updates: AtomicU64,
+    transitions: AtomicU64,
+    /// update wall-clock latencies not yet drained by the leader's publish
+    latencies: Mutex<Vec<f64>>,
+}
+
+impl Default for SharedPolicy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SharedPolicy {
+    pub fn new() -> Self {
+        Self {
+            published: Mutex::new((0, None)),
+            updates: AtomicU64::new(0),
+            transitions: AtomicU64::new(0),
+            latencies: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Publish a new parameter vector; returns its generation number.
+    pub fn publish(&self, params: Vec<f32>) -> u64 {
+        let mut g = self.published.lock().unwrap();
+        g.0 += 1;
+        g.1 = Some(Arc::new(params));
+        g.0
+    }
+
+    /// The newest published vector, if any.
+    pub fn current(&self) -> Option<(u64, Arc<Vec<f32>>)> {
+        let g = self.published.lock().unwrap();
+        g.1.as_ref().map(|p| (g.0, p.clone()))
+    }
+
+    /// The newest published vector strictly newer than `than` (what the
+    /// leader polls at each tick boundary).
+    pub fn take_newer(&self, than: u64) -> Option<(u64, Arc<Vec<f32>>)> {
+        let g = self.published.lock().unwrap();
+        if g.0 > than { g.1.as_ref().map(|p| (g.0, p.clone())) } else { None }
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.published.lock().unwrap().0
+    }
+
+    pub fn updates(&self) -> u64 {
+        self.updates.load(Ordering::Relaxed)
+    }
+
+    /// Transitions consumed by the trainer thread so far.
+    pub fn transitions(&self) -> u64 {
+        self.transitions.load(Ordering::Relaxed)
+    }
+
+    fn push_latency(&self, secs: f64) {
+        self.latencies.lock().unwrap().push(secs);
+    }
+
+    /// Move the pending update latencies into `out` (cleared first).
+    pub fn drain_latencies(&self, out: &mut Vec<f64>) {
+        out.clear();
+        out.append(&mut self.latencies.lock().unwrap());
+    }
+}
+
+/// The leader-side attachment: a transition sender plus the shared policy
+/// cell (see `MultiEnv::set_online`).
+pub struct OnlineHook {
+    pub tx: Sender<Transition>,
+    pub shared: Arc<SharedPolicy>,
+}
+
+/// Owner's handle to a spawned online trainer.
+pub struct OnlineHandle {
+    tx: Sender<Transition>,
+    pub shared: Arc<SharedPolicy>,
+    join: JoinHandle<OnlineStats>,
+}
+
+impl OnlineHandle {
+    /// A leader-side attachment (clone of the sender + shared cell).
+    pub fn hook(&self) -> OnlineHook {
+        OnlineHook { tx: self.tx.clone(), shared: self.shared.clone() }
+    }
+
+    /// Stop the trainer and collect its stats: drops this handle's sender,
+    /// waits for the thread to drain the queue, run the final flush update
+    /// (when ≥ `min_batch` transitions remain) and write the checkpoint.
+    /// Every `hook()` clone must be dropped first (`MultiEnv::take_online`),
+    /// otherwise the channel never disconnects and this blocks forever.
+    pub fn finish(self) -> OnlineStats {
+        let OnlineHandle { tx, join, .. } = self;
+        drop(tx);
+        join.join().unwrap_or_else(|_| {
+            crate::log_warn!("online trainer thread panicked; stats lost");
+            OnlineStats::default()
+        })
+    }
+}
+
+/// Spawns the background PPO trainer thread.
+pub struct OnlineTrainer;
+
+impl OnlineTrainer {
+    pub fn spawn(init_params: Vec<f32>, cfg: OnlineConfig) -> OnlineHandle {
+        let (tx, rx) = channel::<Transition>();
+        let shared = Arc::new(SharedPolicy::new());
+        let sh = shared.clone();
+        let join = std::thread::Builder::new()
+            .name("opd-online-trainer".into())
+            .spawn(move || trainer_loop(rx, sh, init_params, cfg))
+            .expect("spawn online trainer thread");
+        OnlineHandle { tx, shared, join }
+    }
+}
+
+fn trainer_loop(
+    rx: Receiver<Transition>,
+    shared: Arc<SharedPolicy>,
+    init_params: Vec<f32>,
+    cfg: OnlineConfig,
+) -> OnlineStats {
+    // the learner lives entirely on this thread (it is !Send when it holds
+    // a PJRT handle; the native constructor keeps everything plain CPU)
+    let mut learner = PpoLearner::native(init_params);
+    if cfg.threads > 0 {
+        learner.threads = cfg.threads;
+    }
+    let mut buf = RolloutBuffer::new();
+    let mut rng = Pcg32::stream(cfg.seed, 0x4f4e4c); // "ONL"
+    let mut stats = OnlineStats::default();
+    let window = cfg.window.max(1);
+    // recv() blocks until the leader sends or every sender is dropped —
+    // the disconnect doubles as the shutdown signal (queued transitions are
+    // all delivered before recv reports the hang-up)
+    while let Ok(t) = rx.recv() {
+        buf.push(t);
+        shared.transitions.fetch_add(1, Ordering::Relaxed);
+        stats.transitions += 1;
+        if buf.len() >= window {
+            run_window(&mut learner, &mut buf, &mut rng, &cfg, &shared, &mut stats);
+        }
+    }
+    // shutdown flush: a partial window is still worth one update when it
+    // clears the noise floor
+    if buf.len() >= cfg.min_batch.max(1) {
+        run_window(&mut learner, &mut buf, &mut rng, &cfg, &shared, &mut stats);
+    }
+    if let Some(path) = &cfg.checkpoint {
+        if let Err(e) = learner.save_checkpoint(path) {
+            crate::log_warn!("online checkpoint write failed: {e:#}");
+        }
+    }
+    stats.final_generation = shared.generation();
+    stats
+}
+
+/// One update window: GAE over the buffered stream, epochs × minibatches of
+/// the native fused step (divergence-skip + KL early-stop, exactly the
+/// offline trainer's guards), then publish the new vector.
+fn run_window(
+    learner: &mut PpoLearner,
+    buf: &mut RolloutBuffer,
+    rng: &mut Pcg32,
+    cfg: &OnlineConfig,
+    shared: &SharedPolicy,
+    stats: &mut OnlineStats,
+) {
+    let t0 = Instant::now();
+    // bootstrap from the newest value estimate: the stream continues past
+    // the window, so the tail is not terminal
+    let bootstrap = buf.transitions.last().map(|t| t.value as f64).unwrap_or(0.0);
+    let (adv, ret) = buf.advantages(bootstrap, cfg.gamma, cfg.gae_lambda);
+    'epochs: for _ in 0..cfg.epochs.max(1) {
+        for mb in buf.minibatches(&adv, &ret, cfg.minibatches.max(1), rng) {
+            let m = learner.update_native(&mb);
+            if m.diverged {
+                stats.diverged += 1;
+                continue;
+            }
+            if m.approx_kl.abs() > 1.0 {
+                break 'epochs;
+            }
+        }
+    }
+    // transitions arrive owned from the leader, so dropping them here (not
+    // recycle()) keeps the spare pool from growing without bound
+    buf.clear();
+    shared.publish(learner.params.clone());
+    shared.updates.fetch_add(1, Ordering::Relaxed);
+    stats.updates += 1;
+    shared.push_latency(t0.elapsed().as_secs_f64());
+    if let Some(path) = &cfg.checkpoint {
+        if stats.updates % cfg.checkpoint_every.max(1) == 0 {
+            if let Err(e) = learner.save_checkpoint(path) {
+                crate::log_warn!("online checkpoint write failed: {e:#}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::spec::{ACT_DIM, LOGITS_DIM, MAX_TASKS, POLICY_PARAM_COUNT, STATE_DIM};
+
+    fn init_params(seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::new(seed);
+        (0..POLICY_PARAM_COUNT).map(|_| (rng.normal() * 0.02) as f32).collect()
+    }
+
+    fn transition(rng: &mut Pcg32) -> Transition {
+        Transition {
+            state: (0..STATE_DIM).map(|_| (rng.normal() * 0.4) as f32).collect(),
+            action_idx: (0..ACT_DIM).map(|_| rng.below(2) as usize).collect(),
+            logp: -8.0,
+            value: rng.normal() as f32,
+            reward: rng.normal(),
+            head_mask: vec![true; LOGITS_DIM],
+            task_mask: vec![true; MAX_TASKS],
+        }
+    }
+
+    #[test]
+    fn windows_trigger_updates_and_publishes() {
+        let cfg = OnlineConfig {
+            window: 8,
+            min_batch: 4,
+            epochs: 1,
+            minibatches: 1,
+            ..Default::default()
+        };
+        let init = init_params(1);
+        let handle = OnlineTrainer::spawn(init.clone(), cfg);
+        let hook = handle.hook();
+        let mut rng = Pcg32::new(7);
+        for _ in 0..16 {
+            hook.tx.send(transition(&mut rng)).unwrap();
+        }
+        drop(hook);
+        let stats = handle.finish();
+        assert_eq!(stats.transitions, 16);
+        assert_eq!(stats.updates, 2, "two full windows of 8");
+        assert_eq!(stats.final_generation, 2);
+    }
+
+    #[test]
+    fn published_params_differ_from_init() {
+        let cfg =
+            OnlineConfig { window: 8, epochs: 1, minibatches: 1, ..Default::default() };
+        let init = init_params(2);
+        let handle = OnlineTrainer::spawn(init.clone(), cfg);
+        let mut rng = Pcg32::new(9);
+        for _ in 0..8 {
+            handle.tx.send(transition(&mut rng)).unwrap();
+        }
+        let shared = handle.shared.clone();
+        let stats = handle.finish();
+        assert!(stats.updates >= 1);
+        let (gen, params) = shared.current().expect("published after an update");
+        assert_eq!(gen, stats.final_generation);
+        assert_eq!(params.len(), POLICY_PARAM_COUNT);
+        assert!(
+            params.iter().zip(&init).any(|(a, b)| a != b),
+            "an update must move the parameters"
+        );
+    }
+
+    #[test]
+    fn shutdown_flush_updates_once_above_min_batch() {
+        let cfg = OnlineConfig {
+            window: 64,
+            min_batch: 4,
+            epochs: 1,
+            minibatches: 1,
+            ..Default::default()
+        };
+        let handle = OnlineTrainer::spawn(init_params(3), cfg);
+        let mut rng = Pcg32::new(11);
+        for _ in 0..5 {
+            handle.tx.send(transition(&mut rng)).unwrap();
+        }
+        let stats = handle.finish();
+        assert_eq!(stats.updates, 1, "5 ≥ min_batch → one flush update");
+    }
+
+    #[test]
+    fn below_min_batch_never_updates() {
+        let cfg = OnlineConfig { window: 64, min_batch: 4, ..Default::default() };
+        let handle = OnlineTrainer::spawn(init_params(4), cfg);
+        let mut rng = Pcg32::new(13);
+        for _ in 0..3 {
+            handle.tx.send(transition(&mut rng)).unwrap();
+        }
+        let shared = handle.shared.clone();
+        let stats = handle.finish();
+        assert_eq!(stats.updates, 0);
+        assert_eq!(stats.final_generation, 0);
+        assert!(shared.current().is_none(), "nothing published without an update");
+    }
+
+    #[test]
+    fn take_newer_only_returns_fresh_generations() {
+        let shared = SharedPolicy::new();
+        assert!(shared.take_newer(0).is_none(), "nothing published yet");
+        let g1 = shared.publish(vec![1.0; 4]);
+        assert_eq!(g1, 1);
+        let (gen, p) = shared.take_newer(0).expect("newer than 0");
+        assert_eq!(gen, 1);
+        assert_eq!(p.len(), 4);
+        assert!(shared.take_newer(1).is_none(), "already adopted");
+        let g2 = shared.publish(vec![2.0; 4]);
+        assert_eq!(g2, 2);
+        assert!(shared.take_newer(1).is_some());
+    }
+
+    #[test]
+    fn checkpoint_written_at_shutdown() {
+        let dir = std::env::temp_dir().join("opd_online_ckpt_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("online.bin");
+        let path_s = path.to_string_lossy().to_string();
+        let cfg = OnlineConfig {
+            window: 8,
+            min_batch: 4,
+            epochs: 1,
+            minibatches: 1,
+            checkpoint: Some(path_s.clone()),
+            ..Default::default()
+        };
+        let handle = OnlineTrainer::spawn(init_params(5), cfg);
+        let mut rng = Pcg32::new(17);
+        for _ in 0..8 {
+            handle.tx.send(transition(&mut rng)).unwrap();
+        }
+        let stats = handle.finish();
+        assert!(stats.updates >= 1);
+        assert!(path.exists(), "checkpoint file written at shutdown");
+        assert!(
+            std::path::Path::new(&format!("{path_s}.adam")).exists(),
+            "Adam sidecar rides along"
+        );
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(format!("{path_s}.adam"));
+    }
+
+    #[test]
+    fn latencies_drain_once() {
+        let shared = SharedPolicy::new();
+        shared.push_latency(0.01);
+        shared.push_latency(0.02);
+        let mut out = Vec::new();
+        shared.drain_latencies(&mut out);
+        assert_eq!(out.len(), 2);
+        shared.drain_latencies(&mut out);
+        assert!(out.is_empty(), "drained latencies do not reappear");
+    }
+}

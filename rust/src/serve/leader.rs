@@ -12,6 +12,7 @@ use crate::agents::Agent;
 use crate::cluster::ClusterTopology;
 use crate::config::AgentKind;
 use crate::pipeline::{catalog, QosWeights};
+use crate::rl::online::{OnlineHandle, SharedPolicy};
 use crate::serve::api::{task_config_json, ApiError, ControlMsg, ControlRequest, DeploySpec};
 use crate::serve::ControlPlane;
 use crate::sim::env::LoadSource;
@@ -87,6 +88,13 @@ pub struct Leader {
     published_batched: (usize, usize),
     /// batched-prediction totals already published (for counter deltas)
     published_batched_pred: (usize, usize),
+    /// online learning (DESIGN.md §11): the trainer's shared policy cell,
+    /// polled for update/transition counter deltas each publish tick
+    online: Option<Arc<SharedPolicy>>,
+    /// (updates, transitions) totals already published (for counter deltas)
+    published_online: (u64, u64),
+    /// update-latency drain scratch, reused every publish tick
+    latency_scratch: Vec<f64>,
     /// publish-tick scratch, reused every second (telemetry hot loop)
     status_scratch: Vec<TenantStatus>,
     key_buf: String,
@@ -113,11 +121,24 @@ impl Leader {
                 published_decisions: std::collections::BTreeMap::new(),
                 published_batched: (0, 0),
                 published_batched_pred: (0, 0),
+                online: None,
+                published_online: (0, 0),
+                latency_scratch: Vec::new(),
                 status_scratch: Vec::new(),
                 key_buf: String::new(),
             },
             tx,
         )
+    }
+
+    /// Attach a running online trainer (`opd serve --learn` — DESIGN.md
+    /// §11): the env streams transitions to it and adopts its published
+    /// policy generations at tick boundaries; `publish` exports the
+    /// trainer's counters. Call `env.take_online()` before
+    /// `OnlineHandle::finish()` so the trainer sees the channel close.
+    pub fn enable_online(&mut self, handle: &OnlineHandle) {
+        self.env.set_online(handle.hook());
+        self.online = Some(handle.shared.clone());
     }
 
     /// Deploy a pipeline directly (the CLI bootstrap path, before `run`).
@@ -179,6 +200,7 @@ impl Leader {
             .set("capacity", topo.capacity())
             .set("used", topo.used())
             .set("free", topo.free())
+            .set("policy_generation", self.env.policy_generation as i64)
             .set(
                 "nodes",
                 Json::Arr(
@@ -342,6 +364,25 @@ impl Leader {
         }
         self.published_batched_pred =
             (self.env.batched_predictions, self.env.batched_predictor_groups);
+        // online learning (DESIGN.md §11): trainer progress + fleet adoption
+        if let Some(shared) = &self.online {
+            let (seen_upd, seen_tr) = self.published_online;
+            let updates = shared.updates();
+            let transitions = self.env.online_transitions as u64;
+            if updates > seen_upd {
+                m.inc("opd_online_updates_total", &[], (updates - seen_upd) as f64);
+            }
+            if transitions > seen_tr {
+                m.inc("opd_online_transitions_total", &[], (transitions - seen_tr) as f64);
+            }
+            self.published_online = (updates, transitions);
+            m.set_gauge("opd_policy_generation", &[], self.env.policy_generation as f64);
+            shared.drain_latencies(&mut self.latency_scratch);
+            for &secs in &self.latency_scratch {
+                m.observe("opd_online_update_seconds", &[], secs);
+                self.cp.series.record("online_update_secs", secs);
+            }
+        }
         self.cp.publish_state(
             Json::obj()
                 .set("t", self.env.now)
@@ -484,7 +525,9 @@ mod tests {
         assert_eq!(body.get("pipelines").unwrap().as_arr().unwrap().len(), 1);
         let (_, body) = l.handle(ControlRequest::GetCluster).unwrap();
         assert!(body.req_f64("capacity").unwrap() > 0.0);
-        // swap agent
+        // swap agent: bumps the deployment generation (API-visible)
+        let (_, body) = l.handle(ControlRequest::GetPipeline("a".into())).unwrap();
+        let gen_before = body.req_f64("generation").unwrap() as u64;
         let (code, body) = l
             .handle(ControlRequest::SwapAgent {
                 pipeline: "a".into(),
@@ -494,6 +537,9 @@ mod tests {
             .unwrap();
         assert_eq!(code, 200);
         assert_eq!(body.req_str("agent").unwrap(), "ipa");
+        assert_eq!(body.req_f64("generation").unwrap() as u64, gen_before + 1);
+        let (_, body) = l.handle(ControlRequest::GetPipeline("a".into())).unwrap();
+        assert_eq!(body.req_f64("generation").unwrap() as u64, gen_before + 1);
         // delete
         let (code, _) = l.handle(ControlRequest::DeletePipeline("a".into())).unwrap();
         assert_eq!(code, 200);

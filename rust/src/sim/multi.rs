@@ -16,7 +16,11 @@ use crate::cluster::{ApplyOutcome, ClusterTopology, DeploymentStore};
 use crate::nn::policy::{predictor_fwd_batch_scratch, LstmBatchScratch};
 use crate::nn::spec::{LOGITS_DIM, PRED_WINDOW, STATE_DIM};
 use crate::nn::workspace::Workspace;
-use crate::pipeline::{pipeline_metrics, PipelineMetrics, PipelineSpec, QosWeights, TaskConfig};
+use crate::pipeline::{
+    pipeline_metrics_into, PipelineMetrics, PipelineSpec, QosWeights, TaskConfig,
+};
+use crate::rl::online::OnlineHook;
+use crate::rl::Transition;
 use crate::sim::env::{build_state_append, LoadSource, Observation};
 use crate::workload::predictor::LoadPredictor;
 use crate::workload::LoadHistory;
@@ -47,6 +51,12 @@ pub struct Tenant {
     pub last_pred: f64,
     /// wall-clock seconds the most recent agent.decide() took
     pub last_decision_secs: f64,
+    /// online learning (DESIGN.md §11): the half-open transition of the most
+    /// recent decision, waiting for its adaptation interval's reward
+    pending: Option<Transition>,
+    /// Eq. 7 reward accumulated for `pending` since its decision
+    reward_acc: f64,
+    reward_secs: usize,
 }
 
 impl Tenant {
@@ -81,6 +91,9 @@ impl Tenant {
             last_cost: 0.0,
             last_pred: 0.0,
             last_decision_secs: 0.0,
+            pending: None,
+            reward_acc: 0.0,
+            reward_secs: 0,
         }
     }
 
@@ -121,10 +134,14 @@ pub struct TenantStatus {
 }
 
 /// Per-tenant observation ingredients captured before a batched forward
-/// (the tick-start snapshot every grouped tenant plans against).
+/// (the tick-start snapshot every grouped tenant plans against). Shells are
+/// pooled on the env and refilled in place, so a warm group prep phase does
+/// not allocate (the Env obs-scratch pattern ported leader-side).
+#[derive(Default)]
 struct GroupPrep {
-    name: String,
-    spec: PipelineSpec,
+    /// index into the caller's group name list (the tenant map outlives the
+    /// prep, so no name/spec clones are held here)
+    idx: usize,
     load_now: f64,
     load_pred: f64,
     capacity: f64,
@@ -153,6 +170,15 @@ pub struct MultiEnv {
     pub batched_predictions: usize,
     /// cumulative count of batched LSTM passes executed
     pub batched_predictor_groups: usize,
+    /// online learning attachment (serve --learn): transition sender +
+    /// shared published-policy cell (DESIGN.md §11)
+    online: Option<OnlineHook>,
+    /// generation of the published online policy the fleet currently runs
+    pub policy_generation: u64,
+    /// cumulative transitions streamed to the online trainer
+    pub online_transitions: usize,
+    /// cumulative fleet-wide parameter adoptions at tick boundaries
+    pub param_swaps: usize,
     ws: Workspace,
     batch_states: Vec<f32>,
     /// reused predictor-window scratch (raw f64 window of one tenant)
@@ -164,6 +190,17 @@ pub struct MultiEnv {
     /// member indices (into the group's name list) served by the batch
     pred_group: Vec<usize>,
     lstm_batch: LstmBatchScratch,
+    /// pooled GroupPrep shells for the batched decide path
+    preps: Vec<GroupPrep>,
+    /// sequential-decide / serving-loop observation scratch (the Env
+    /// obs-scratch pattern — DESIGN.md §7): current config, ready replicas
+    /// and metrics are assembled into these reused buffers
+    obs_current: Vec<TaskConfig>,
+    obs_ready: Vec<usize>,
+    obs_metrics: PipelineMetrics,
+    /// leader-side observation scratch growth counter — flat after warm-up
+    /// (new GroupPrep shells + capacity growth of the obs buffers)
+    obs_grow_events: u64,
 }
 
 impl MultiEnv {
@@ -177,6 +214,10 @@ impl MultiEnv {
             batched_groups: 0,
             batched_predictions: 0,
             batched_predictor_groups: 0,
+            online: None,
+            policy_generation: 0,
+            online_transitions: 0,
+            param_swaps: 0,
             ws: Workspace::new(),
             batch_states: Vec::new(),
             win_scratch: Vec::new(),
@@ -184,6 +225,11 @@ impl MultiEnv {
             pred_weights: Vec::new(),
             pred_group: Vec::new(),
             lstm_batch: LstmBatchScratch::default(),
+            preps: Vec::new(),
+            obs_current: Vec::new(),
+            obs_ready: Vec::new(),
+            obs_metrics: PipelineMetrics::default(),
+            obs_grow_events: 0,
         }
     }
 
@@ -221,6 +267,15 @@ impl MultiEnv {
         tenant.history.push(r);
         tenant.last_rate = r;
         tenant.next_decision = self.now + tenant.adapt_interval_secs as f64;
+        // a freshly deployed tenant joins on the fleet's adopted online
+        // policy so the next batched round groups cleanly (DESIGN.md §11)
+        if let Some(hook) = &self.online {
+            if let Some((gen, params)) = hook.shared.current() {
+                if gen <= self.policy_generation {
+                    tenant.agent.set_policy_params(&params);
+                }
+            }
+        }
         self.tenants.insert(tenant.name.clone(), tenant);
         Ok(out)
     }
@@ -232,45 +287,136 @@ impl MultiEnv {
         had
     }
 
-    /// Hot-swap the decision agent of a running pipeline.
-    pub fn set_agent(&mut self, name: &str, agent: Box<dyn Agent>) -> Result<(), String> {
+    /// Hot-swap the decision agent of a running pipeline. The swap bumps the
+    /// deployment generation so API observers see it, and — because it is
+    /// only ever invoked between ticks — a new agent can never join a
+    /// batched decide group mid-flight with a mismatched fingerprint: groups
+    /// are formed fresh from `batch_params` at the top of every tick.
+    pub fn set_agent(&mut self, name: &str, mut agent: Box<dyn Agent>) -> Result<(), String> {
+        // an incoming native agent starts on the fleet's adopted online
+        // policy (never a NEWER one — tick-boundary adoption stays uniform)
+        if let Some(hook) = &self.online {
+            if let Some((gen, params)) = hook.shared.current() {
+                if gen <= self.policy_generation {
+                    agent.set_policy_params(&params);
+                }
+            }
+        }
         match self.tenants.get_mut(name) {
             Some(t) => {
                 t.agent = agent;
+                // the old agent's open transition died with it
+                t.pending = None;
+                t.reward_acc = 0.0;
+                t.reward_secs = 0;
+                if let Some(g) = self.store.bump_generation(name) {
+                    t.generation = g;
+                }
                 Ok(())
             }
             None => Err(format!("no pipeline named '{name}'")),
         }
     }
 
+    /// Attach the online learning hook (`opd serve --learn` — DESIGN.md
+    /// §11): decisions stream transitions to the trainer and published
+    /// parameter generations are adopted at tick boundaries.
+    pub fn set_online(&mut self, hook: OnlineHook) {
+        self.online = Some(hook);
+    }
+
+    /// Detach the online hook, dropping this env's clone of the transition
+    /// sender — required before `OnlineHandle::finish()` can observe the
+    /// channel disconnect and flush.
+    pub fn take_online(&mut self) -> Option<OnlineHook> {
+        self.online.take()
+    }
+
+    pub fn online_enabled(&self) -> bool {
+        self.online.is_some()
+    }
+
+    /// The batch-path parameter fingerprint of a tenant's agent (`None` for
+    /// agents without native parameters).
+    pub fn agent_fingerprint(&self, name: &str) -> Option<u64> {
+        self.tenants.get(name)?.agent.batch_params().map(|(_, fp)| fp)
+    }
+
+    /// Cumulative growth events of the leader-side observation scratch;
+    /// flat after warm-up when the decide/tick paths are allocation-free.
+    pub fn obs_grow_events(&self) -> u64 {
+        self.obs_grow_events
+    }
+
+    /// Tick-boundary adoption (DESIGN.md §11): if the background trainer has
+    /// published a generation newer than the one the fleet runs, every
+    /// native-policy agent swaps to it and re-fingerprints BEFORE decision
+    /// groups form, so a batched group never mixes parameter vectors. Store
+    /// generations are bumped so the adoption is visible through the v1 API.
+    fn apply_published_params(&mut self) {
+        let Some(hook) = &self.online else { return };
+        let Some((gen, params)) = hook.shared.take_newer(self.policy_generation) else {
+            return;
+        };
+        self.policy_generation = gen;
+        let mut adopted = false;
+        let Self { tenants, store, .. } = self;
+        for t in tenants.values_mut() {
+            if t.agent.set_policy_params(&params) {
+                adopted = true;
+                if let Some(g) = store.bump_generation(&t.name) {
+                    t.generation = g;
+                }
+            }
+        }
+        if adopted {
+            self.param_swaps += 1;
+        }
+    }
+
     /// Run one tenant's adaptation decision against the shared cluster.
+    /// Observation ingredients are assembled into the env's reused scratch
+    /// buffers (the Env obs-scratch pattern — allocation-free after warm-up).
     fn decide(&mut self, name: &str) {
         let n_tenants = self.tenants.len();
-        let t = match self.tenants.get_mut(name) {
+        let now = self.now;
+        let Self {
+            tenants,
+            store,
+            win_scratch,
+            obs_current,
+            obs_ready,
+            obs_metrics,
+            online,
+            online_transitions,
+            obs_grow_events,
+            ..
+        } = self;
+        let t = match tenants.get_mut(name) {
             Some(t) => t,
             None => return,
         };
-        let spec = t.spec.clone();
-        t.history.window_into(PRED_WINDOW, &mut self.win_scratch);
-        let load_pred = t.predictor.predict_max(&self.win_scratch);
+        t.history.window_into(PRED_WINDOW, win_scratch);
+        let load_pred = t.predictor.predict_max(win_scratch);
         t.last_pred = load_pred;
-        let current = self
-            .store
-            .get(name)
-            .map(|d| d.config.clone())
-            .unwrap_or_else(|| spec.default_config());
-        let ready = self.store.ready_replicas(name, spec.n_tasks(), self.now);
-        let metrics = pipeline_metrics(&spec, &current, &ready, t.last_rate);
-        let cores_other = self.store.cores_used_by_others(name);
+        let caps = (obs_current.capacity(), obs_ready.capacity());
+        obs_current.clear();
+        match store.get(name) {
+            Some(d) => obs_current.extend_from_slice(&d.config),
+            None => obs_current.extend(t.spec.default_config()),
+        }
+        store.ready_replicas_into(name, t.spec.n_tasks(), now, obs_ready);
+        pipeline_metrics_into(&t.spec, obs_current, obs_ready, t.last_rate, obs_metrics);
+        let cores_other = store.cores_used_by_others(name);
         let obs = Observation {
-            spec: &spec,
+            spec: &t.spec,
             load_now: t.last_rate,
             load_pred,
-            capacity: (self.store.topo.capacity() - cores_other).max(0.0),
-            cores_free: self.store.topo.free(),
-            current: &current,
-            ready: &ready,
-            metrics: &metrics,
+            capacity: (store.topo.capacity() - cores_other).max(0.0),
+            cores_free: store.topo.free(),
+            current: obs_current,
+            ready: obs_ready,
+            metrics: obs_metrics,
             adapt_interval_secs: t.adapt_interval_secs as f64,
             cores_other,
             tenants: n_tenants,
@@ -278,7 +424,8 @@ impl MultiEnv {
         let t0 = std::time::Instant::now();
         let action = t.agent.decide(&obs);
         t.last_decision_secs = t0.elapsed().as_secs_f64();
-        match self.store.apply(name, &spec, &action, self.now) {
+        drop(obs);
+        match store.apply(name, &t.spec, &action, now) {
             Ok(out) => {
                 t.generation = out.generation;
                 t.decisions += 1;
@@ -291,7 +438,11 @@ impl MultiEnv {
             // cluster): keep the previous deployment and try again next round
             Err(_) => {}
         }
-        t.next_decision = self.now + t.adapt_interval_secs as f64;
+        t.next_decision = now + t.adapt_interval_secs as f64;
+        if obs_current.capacity() != caps.0 || obs_ready.capacity() != caps.1 {
+            *obs_grow_events += 1;
+        }
+        harvest_online(online, online_transitions, t);
     }
 
     /// Compute every group member's load prediction, setting `last_pred`.
@@ -381,63 +532,66 @@ impl MultiEnv {
         let n_tenants = self.tenants.len();
         self.predict_group(names);
         self.batch_states.clear();
-        let mut preps: Vec<GroupPrep> = Vec::with_capacity(names.len());
-        for name in names {
-            let t = match self.tenants.get_mut(name) {
-                Some(t) => t,
-                None => continue,
-            };
-            let spec = t.spec.clone();
-            // load_pred was computed by predict_group (batched when the
-            // members share predictor weights)
-            let load_pred = t.last_pred;
-            let load_now = t.last_rate;
-            let adapt_interval_secs = t.adapt_interval_secs as f64;
-            let current = self
-                .store
-                .get(name)
-                .map(|d| d.config.clone())
-                .unwrap_or_else(|| spec.default_config());
-            let ready = self.store.ready_replicas(name, spec.n_tasks(), self.now);
-            let metrics = pipeline_metrics(&spec, &current, &ready, load_now);
-            let cores_other = self.store.cores_used_by_others(name);
-            let capacity = (self.store.topo.capacity() - cores_other).max(0.0);
-            let cores_free = self.store.topo.free();
-            let obs = Observation {
-                spec: &spec,
-                load_now,
-                load_pred,
-                capacity,
-                cores_free,
-                current: &current,
-                ready: &ready,
-                metrics: &metrics,
-                adapt_interval_secs,
-                cores_other,
-                tenants: n_tenants,
-            };
-            build_state_append(&obs, &mut self.batch_states);
-            drop(obs);
-            preps.push(GroupPrep {
-                name: name.clone(),
-                spec,
-                load_now,
-                load_pred,
-                capacity,
-                cores_free,
-                cores_other,
-                adapt_interval_secs,
-                current,
-                ready,
-                metrics,
-            });
+        let now = self.now;
+        let mut batch = 0usize;
+        {
+            let Self { tenants, store, preps, batch_states, obs_grow_events, .. } = self;
+            for (i, name) in names.iter().enumerate() {
+                let t = match tenants.get_mut(name) {
+                    Some(t) => t,
+                    None => continue,
+                };
+                // refill a pooled prep shell in place (no name/spec clones,
+                // no per-member buffer allocations once warm)
+                if batch == preps.len() {
+                    preps.push(GroupPrep::default());
+                    *obs_grow_events += 1;
+                }
+                let p = &mut preps[batch];
+                p.idx = i;
+                // load_pred was computed by predict_group (batched when the
+                // members share predictor weights)
+                p.load_pred = t.last_pred;
+                p.load_now = t.last_rate;
+                p.adapt_interval_secs = t.adapt_interval_secs as f64;
+                let caps = (p.current.capacity(), p.ready.capacity());
+                p.current.clear();
+                match store.get(name) {
+                    Some(d) => p.current.extend_from_slice(&d.config),
+                    None => p.current.extend(t.spec.default_config()),
+                }
+                store.ready_replicas_into(name, t.spec.n_tasks(), now, &mut p.ready);
+                pipeline_metrics_into(&t.spec, &p.current, &p.ready, p.load_now, &mut p.metrics);
+                p.cores_other = store.cores_used_by_others(name);
+                p.capacity = (store.topo.capacity() - p.cores_other).max(0.0);
+                p.cores_free = store.topo.free();
+                let obs = Observation {
+                    spec: &t.spec,
+                    load_now: p.load_now,
+                    load_pred: p.load_pred,
+                    capacity: p.capacity,
+                    cores_free: p.cores_free,
+                    current: &p.current,
+                    ready: &p.ready,
+                    metrics: &p.metrics,
+                    adapt_interval_secs: p.adapt_interval_secs,
+                    cores_other: p.cores_other,
+                    tenants: n_tenants,
+                };
+                build_state_append(&obs, batch_states);
+                drop(obs);
+                if p.current.capacity() != caps.0 || p.ready.capacity() != caps.1 {
+                    *obs_grow_events += 1;
+                }
+                batch += 1;
+            }
         }
-        let batch = preps.len();
         if batch == 0 {
             return;
         }
         let fwd_secs = {
-            let leader = self.tenants.get(&preps[0].name).expect("group member exists");
+            let leader =
+                self.tenants.get(&names[self.preps[0].idx]).expect("group member exists");
             let (params, _) = leader
                 .agent
                 .batch_params()
@@ -449,9 +603,16 @@ impl MultiEnv {
         self.batched_groups += 1;
         self.batched_decisions += batch;
         let fwd_share = fwd_secs / batch as f64;
-        for (i, p) in preps.iter().enumerate() {
+        let Self { tenants, store, preps, batch_states, ws, online, online_transitions, .. } =
+            self;
+        for (row, p) in preps[..batch].iter().enumerate() {
+            let name = &names[p.idx];
+            let t = match tenants.get_mut(name) {
+                Some(t) => t,
+                None => continue,
+            };
             let obs = Observation {
-                spec: &p.spec,
+                spec: &t.spec,
                 load_now: p.load_now,
                 load_pred: p.load_pred,
                 capacity: p.capacity,
@@ -463,17 +624,14 @@ impl MultiEnv {
                 cores_other: p.cores_other,
                 tenants: n_tenants,
             };
-            let state = &self.batch_states[i * STATE_DIM..(i + 1) * STATE_DIM];
-            let logits = &self.ws.logits()[i * LOGITS_DIM..(i + 1) * LOGITS_DIM];
-            let value = self.ws.values()[i];
+            let state = &batch_states[row * STATE_DIM..(row + 1) * STATE_DIM];
+            let logits = &ws.logits()[row * LOGITS_DIM..(row + 1) * LOGITS_DIM];
+            let value = ws.values()[row];
             let t0 = std::time::Instant::now();
-            let action = {
-                let t = self.tenants.get_mut(&p.name).expect("group member exists");
-                t.agent.batch_decide(&obs, state, logits, value)
-            };
+            let action = t.agent.batch_decide(&obs, state, logits, value);
             let decide_secs = fwd_share + t0.elapsed().as_secs_f64();
-            let outcome = self.store.apply(&p.name, &p.spec, &action, self.now);
-            let t = self.tenants.get_mut(&p.name).expect("group member exists");
+            drop(obs);
+            let outcome = store.apply(name, &t.spec, &action, now);
             t.last_decision_secs = decide_secs;
             match outcome {
                 Ok(out) => {
@@ -488,17 +646,22 @@ impl MultiEnv {
                 // deployment and try again next round (same as decide())
                 Err(_) => {}
             }
-            t.next_decision = self.now + t.adapt_interval_secs as f64;
+            t.next_decision = now + t.adapt_interval_secs as f64;
+            harvest_online(online, online_transitions, t);
         }
     }
 
-    /// Advance the shared clock by one second: run every adaptation decision
-    /// that is due, then serve one second of load for every tenant.
+    /// Advance the shared clock by one second: adopt any newly published
+    /// online policy, run every adaptation decision that is due, then serve
+    /// one second of load for every tenant.
     ///
     /// With batching on, due tenants whose agents share one native parameter
     /// vector (same `batch_params` fingerprint) are decided through a single
     /// batched forward; everyone else takes the sequential path first.
     pub fn tick(&mut self) {
+        // adoption happens BEFORE groups form, so a batched group never
+        // mixes parameter fingerprints (DESIGN.md §11)
+        self.apply_published_params();
         let due: Vec<String> = self
             .tenants
             .iter()
@@ -530,24 +693,42 @@ impl MultiEnv {
             }
         }
         self.now += 1.0;
-        for (name, t) in self.tenants.iter_mut() {
+        let now = self.now;
+        let Self { tenants, store, obs_current, obs_ready, obs_metrics, obs_grow_events, .. } =
+            self;
+        for (name, t) in tenants.iter_mut() {
             let rate = t.source.next_rate();
             t.history.push(rate);
             t.last_rate = rate;
-            let (config, ready) = match self.store.get(name) {
-                Some(d) => (
-                    d.config.clone(),
-                    self.store.ready_replicas(name, t.spec.n_tasks(), self.now),
-                ),
-                None => (t.spec.default_config(), vec![0; t.spec.n_tasks()]),
-            };
-            let m = pipeline_metrics(&t.spec, &config, &ready, rate);
-            let q = t.weights.qos(&m);
+            let caps = (obs_current.capacity(), obs_ready.capacity());
+            obs_current.clear();
+            match store.get(name) {
+                Some(d) => {
+                    obs_current.extend_from_slice(&d.config);
+                    store.ready_replicas_into(name, t.spec.n_tasks(), now, obs_ready);
+                }
+                None => {
+                    obs_current.extend(t.spec.default_config());
+                    obs_ready.clear();
+                    obs_ready.resize(t.spec.n_tasks(), 0);
+                }
+            }
+            pipeline_metrics_into(&t.spec, obs_current, obs_ready, rate, obs_metrics);
+            let q = t.weights.qos(obs_metrics);
             t.last_qos = q;
-            t.last_cost = m.cost;
+            t.last_cost = obs_metrics.cost;
             t.qos_sum += q;
-            t.cost_sum += m.cost;
+            t.cost_sum += obs_metrics.cost;
             t.secs += 1;
+            // accrue the Eq. 7 reward for the open online transition: its
+            // final reward is the interval average, mirroring Env::run_interval
+            if t.pending.is_some() {
+                t.reward_acc += t.weights.reward(obs_metrics);
+                t.reward_secs += 1;
+            }
+            if obs_current.capacity() != caps.0 || obs_ready.capacity() != caps.1 {
+                *obs_grow_events += 1;
+            }
         }
     }
 
@@ -594,6 +775,37 @@ impl MultiEnv {
     pub fn statuses_into(&self, out: &mut Vec<TenantStatus>) {
         out.clear();
         out.extend(self.tenants.keys().filter_map(|n| self.status(n)));
+    }
+}
+
+/// Online-learning transition bookkeeping, run right after each decision
+/// (DESIGN.md §11): close the tenant's half-open transition with the Eq. 7
+/// interval-average reward the serving loop accrued, stream it to the
+/// trainer, then open a new half-transition from the agent's latest decision
+/// record. Agents without a record (baselines) never stream.
+fn harvest_online(online: &Option<OnlineHook>, emitted: &mut usize, t: &mut Tenant) {
+    let Some(hook) = online else { return };
+    if let Some(mut prev) = t.pending.take() {
+        if t.reward_secs > 0 {
+            prev.reward = t.reward_acc / t.reward_secs as f64;
+            // a disconnected trainer (shutdown race) just drops the sample
+            if hook.tx.send(prev).is_ok() {
+                *emitted += 1;
+            }
+        }
+    }
+    t.reward_acc = 0.0;
+    t.reward_secs = 0;
+    if let Some(rec) = t.agent.decision_record() {
+        t.pending = Some(Transition {
+            state: rec.state.clone(),
+            action_idx: rec.action_idx.clone(),
+            logp: rec.logp,
+            value: rec.value,
+            reward: 0.0,
+            head_mask: rec.head_mask.clone(),
+            task_mask: rec.task_mask.clone(),
+        });
     }
 }
 
@@ -667,8 +879,11 @@ mod tests {
         let mut env = MultiEnv::new(ClusterTopology::paper_testbed(), 3.0);
         env.deploy(tenant("a", "P1", WorkloadKind::SteadyLow, 1), None).unwrap();
         assert_eq!(env.status("a").unwrap().agent, "greedy");
+        assert_eq!(env.status("a").unwrap().generation, 1);
         env.set_agent("a", Box::new(RandomAgent::new(5))).unwrap();
         assert_eq!(env.status("a").unwrap().agent, "random");
+        // the swap itself bumps the deployment generation (API-visible)
+        assert_eq!(env.status("a").unwrap().generation, 2);
         assert!(env.set_agent("nope", Box::new(RandomAgent::new(5))).is_err());
         env.run_for(25);
         assert!(env.status("a").unwrap().decisions >= 2);
@@ -843,6 +1058,94 @@ mod tests {
         env.run_for(25);
         assert_eq!(env.batched_decisions, 0);
         assert_eq!(env.status("a").unwrap().decisions, 2, "sequential path still decides");
+    }
+
+    fn online_attach(env: &mut MultiEnv) -> (std::sync::Arc<crate::rl::SharedPolicy>, std::sync::mpsc::Receiver<crate::rl::Transition>) {
+        use crate::rl::online::{OnlineHook, SharedPolicy};
+        let (tx, rx) = std::sync::mpsc::channel();
+        let shared = std::sync::Arc::new(SharedPolicy::new());
+        env.set_online(OnlineHook { tx, shared: shared.clone() });
+        (shared, rx)
+    }
+
+    #[test]
+    fn published_params_apply_only_at_tick_boundaries() {
+        use crate::nn::params_fingerprint;
+        let p1 = shared_params(41);
+        let p2 = shared_params(43);
+        let mut env = MultiEnv::new(ClusterTopology::paper_testbed(), 3.0);
+        let (shared, _rx) = online_attach(&mut env);
+        env.deploy(opd_tenant("a", "P1", p1.clone(), 1), None).unwrap();
+        env.deploy(opd_tenant("b", "P1", p1.clone(), 2), None).unwrap();
+        env.deploy(opd_tenant("c", "iot-anomaly", p1.clone(), 3), None).unwrap();
+        env.run_for(9); // now = 9, next decisions due at t = 10
+        let gen_before = env.status("a").unwrap().generation;
+        let gen = shared.publish(p2.clone());
+        // published mid-interval: the fleet keeps its fingerprint until the
+        // next tick boundary
+        for n in ["a", "b", "c"] {
+            assert_eq!(env.agent_fingerprint(n), Some(params_fingerprint(&p1)), "{n}");
+        }
+        assert_eq!(env.param_swaps, 0);
+        env.tick(); // adoption happens at the top of this tick (now 9 → 10)
+        for n in ["a", "b", "c"] {
+            assert_eq!(env.agent_fingerprint(n), Some(params_fingerprint(&p2)), "{n}");
+        }
+        assert_eq!(env.policy_generation, gen);
+        assert_eq!(env.param_swaps, 1);
+        assert!(
+            env.status("a").unwrap().generation > gen_before,
+            "adoption is API-visible via a generation bump"
+        );
+        // the t=10 decision round runs on the NEW params as one uniform
+        // batched group — adoption never splits a group mid-tick
+        let groups_before = env.batched_groups;
+        env.tick();
+        assert_eq!(env.batched_groups, groups_before + 1);
+        assert_eq!(env.batched_decisions, 3);
+    }
+
+    #[test]
+    fn transitions_stream_with_interval_average_rewards() {
+        use crate::nn::spec::{ACT_DIM, STATE_DIM};
+        let params = shared_params(47);
+        let mut env = MultiEnv::new(ClusterTopology::paper_testbed(), 3.0);
+        let (shared, rx) = online_attach(&mut env);
+        env.deploy(opd_tenant("a", "P1", params.clone(), 1), None).unwrap();
+        env.deploy(opd_tenant("b", "iot-anomaly", params.clone(), 2), None).unwrap();
+        env.deploy(tenant("g", "P1", WorkloadKind::SteadyLow, 3), None).unwrap();
+        // decisions at t=10 open half-transitions for the two OPD tenants
+        // (greedy has no decision record); the t=20 round closes them with
+        // the 10 s interval-average reward
+        env.run_for(21);
+        assert_eq!(env.online_transitions, 2);
+        drop(env.take_online().expect("hook was attached"));
+        let got: Vec<_> = rx.try_iter().collect();
+        assert_eq!(got.len(), 2, "one closed transition per OPD tenant");
+        for tr in &got {
+            assert_eq!(tr.state.len(), STATE_DIM);
+            assert_eq!(tr.action_idx.len(), ACT_DIM);
+            assert!(tr.logp.is_finite());
+            assert!(tr.value.is_finite());
+            assert!(tr.reward.is_finite());
+        }
+        assert_eq!(shared.transitions(), 0, "counted by the trainer, not the env");
+    }
+
+    #[test]
+    fn leader_side_observation_assembly_is_allocation_free_after_warmup() {
+        let params = shared_params(53);
+        let mut env = MultiEnv::new(ClusterTopology::paper_testbed(), 3.0);
+        // mixed fleet: a+b exercise the batched prep path, the greedy tenant
+        // the sequential one; video-analytics widens the scratch to the
+        // fleet's max task count during warm-up
+        env.deploy(opd_tenant("a", "P1", params.clone(), 1), None).unwrap();
+        env.deploy(opd_tenant("b", "P1", params.clone(), 2), None).unwrap();
+        env.deploy(tenant("g", "video-analytics", WorkloadKind::SteadyLow, 3), None).unwrap();
+        env.run_for(30);
+        let warm = env.obs_grow_events();
+        env.run_for(40);
+        assert_eq!(env.obs_grow_events(), warm, "no scratch growth once warm");
     }
 
     #[test]

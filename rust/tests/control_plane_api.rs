@@ -76,11 +76,26 @@ fn v1_control_plane_end_to_end() {
         // let the shared serving loop run both pipelines for a while
         std::thread::sleep(std::time::Duration::from_millis(400));
 
-        // 4. hot-swap vid's agent greedy → ipa through the API
+        // 4. hot-swap vid's agent greedy → ipa through the API; the swap
+        // bumps the deployment generation so observers can tell a new brain
+        // is driving the same pipeline
+        let (code, body) = http_get(&addr, "/v1/pipelines/vid").unwrap();
+        assert_eq!(code, 200);
+        let gen_before = Json::parse(&body).unwrap().get("generation").unwrap().as_i64().unwrap();
         let (code, body) =
             http_post(&addr, "/v1/pipelines/vid/agent", r#"{"agent":"ipa"}"#).unwrap();
         assert_eq!(code, 200, "{body}");
-        assert_eq!(Json::parse(&body).unwrap().req_str("agent").unwrap(), "ipa");
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.req_str("agent").unwrap(), "ipa");
+        let gen_after = j.get("generation").unwrap().as_i64().unwrap();
+        assert!(gen_after > gen_before, "swap must bump generation ({gen_before} → {gen_after})");
+        // a follow-up GET reflects the bumped generation and the new agent,
+        // and the pipeline keeps deciding under it
+        let (code, body) = http_get(&addr, "/v1/pipelines/vid").unwrap();
+        assert_eq!(code, 200);
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.req_str("agent").unwrap(), "ipa");
+        assert!(j.get("generation").unwrap().as_i64().unwrap() >= gen_after);
         // swapping an unknown pipeline → 404; unknown agent → 400
         let (code, _) =
             http_post(&addr, "/v1/pipelines/zzz/agent", r#"{"agent":"ipa"}"#).unwrap();
@@ -88,6 +103,13 @@ fn v1_control_plane_end_to_end() {
         let (code, _) =
             http_post(&addr, "/v1/pipelines/vid/agent", r#"{"agent":"zzz"}"#).unwrap();
         assert_eq!(code, 400);
+        // subsequent decisions use the new agent: give the loop time to run
+        // at least one ipa decision round under the bumped generation
+        std::thread::sleep(std::time::Duration::from_millis(300));
+        let (_, body) = http_get(&addr, "/v1/pipelines/vid").unwrap();
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.req_str("agent").unwrap(), "ipa");
+        assert!(j.get("generation").unwrap().as_i64().unwrap() >= gen_after);
 
         // 5. shared-capacity accounting in /v1/cluster
         let (code, body) = http_get(&addr, "/v1/cluster").unwrap();

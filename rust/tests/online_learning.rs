@@ -1,0 +1,132 @@
+//! End-to-end online learning (DESIGN.md §11): boot the leader with a fleet
+//! of OPD tenants and a background PPO trainer attached, serve simulated
+//! traffic, and prove the full loop closes — live transitions stream to the
+//! trainer, it publishes updated parameter generations, the fleet adopts
+//! them at a tick boundary (bumping API-visible generations), and the
+//! counters surface on /metrics. The leader runs on the test thread (it is
+//! deliberately !Send); the HTTP client drives /metrics from a spawned
+//! thread, exactly like production.
+
+use std::sync::Arc;
+
+use opd::agents::{baseline, Agent, OpdAgent};
+use opd::cluster::ClusterTopology;
+use opd::config::AgentKind;
+use opd::nn::params_fingerprint;
+use opd::rl::{OnlineConfig, OnlineTrainer};
+use opd::serve::{http_get, v1_router, ControlPlane, DeploySpec, HttpServer, Leader, TenantFactory};
+use opd::workload::predictor::MovingMaxPredictor;
+use opd::workload::WorkloadKind;
+
+/// An OPD-capable factory without PJRT: native policy agents sharing one
+/// init vector (sampling, not greedy — the transition stream needs
+/// exploration), baselines as usual.
+fn opd_factory(init: Vec<f32>) -> TenantFactory {
+    TenantFactory {
+        make_agent: Box::new(move |kind, seed| match kind {
+            AgentKind::Opd => {
+                let mut a = OpdAgent::native(init.clone(), seed);
+                a.greedy = false;
+                Ok(Box::new(a) as Box<dyn Agent>)
+            }
+            other => baseline(other, seed).ok_or_else(|| "unreachable".to_string()),
+        }),
+        make_predictor: Box::new(|| Box::new(MovingMaxPredictor::default())),
+    }
+}
+
+fn deploy_spec(name: &str, pipeline: &str, seed: u64) -> DeploySpec {
+    DeploySpec {
+        name: name.into(),
+        pipeline: pipeline.into(),
+        workload: WorkloadKind::Fluctuating,
+        agent: AgentKind::Opd,
+        adapt_interval_secs: 5,
+        seed,
+        initial: None,
+    }
+}
+
+#[test]
+fn serve_learn_closes_the_loop() {
+    let init: Vec<f32> = {
+        let mut rng = opd::util::prng::Pcg32::new(42);
+        (0..opd::nn::spec::POLICY_PARAM_COUNT).map(|_| (rng.normal() * 0.02) as f32).collect()
+    };
+    let init_fp = params_fingerprint(&init);
+
+    let cp = Arc::new(ControlPlane::new());
+    let (mut leader, tx) =
+        Leader::new(cp.clone(), ClusterTopology::paper_testbed(), 1.0, opd_factory(init.clone()));
+    let handle = OnlineTrainer::spawn(
+        init,
+        OnlineConfig { window: 16, min_batch: 8, epochs: 1, minibatches: 1, ..Default::default() },
+    );
+    leader.enable_online(&handle);
+    leader.deploy(&deploy_spec("a", "P1", 1)).unwrap();
+    leader.deploy(&deploy_spec("b", "P1", 2)).unwrap();
+    leader.deploy(&deploy_spec("c", "iot-anomaly", 3)).unwrap();
+    let server = HttpServer::start("127.0.0.1:0", v1_router(&cp, tx), 2).unwrap();
+    let addr = server.addr;
+
+    // phase 1: serve 120 s of simulated traffic — with interval 5 the three
+    // tenants emit 3 transitions per round, far beyond one 16-wide window
+    leader.max_secs = Some(120.0);
+    leader.run();
+    assert!(leader.env.online_transitions >= 16, "{}", leader.env.online_transitions);
+
+    // the trainer runs off the leader's clock: wait (generously) for it to
+    // chew through the queued windows and publish at least one generation
+    let t0 = std::time::Instant::now();
+    while handle.shared.generation() == 0 {
+        assert!(t0.elapsed().as_secs() < 60, "trainer never published an update");
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+
+    // phase 2: keep serving — the first tick adopts the published params and
+    // the publish loop exports the online counters
+    leader.max_secs = Some(140.0);
+    leader.run();
+    assert!(leader.env.policy_generation >= 1, "fleet never adopted a generation");
+    assert!(leader.env.param_swaps >= 1);
+
+    // the fleet now runs ONE shared post-update fingerprint (≠ the init)
+    let fps: Vec<u64> =
+        ["a", "b", "c"].iter().map(|n| leader.env.agent_fingerprint(n).unwrap()).collect();
+    assert!(fps.iter().all(|&fp| fp == fps[0]), "fleet split: {fps:?}");
+    assert_ne!(fps[0], init_fp, "adopted params must differ from the init");
+    // adoption is API-visible: generation = 1 (deploy) + successful decide
+    // applies + adoption bumps, so it must exceed deploy + decisions alone
+    for n in ["a", "b", "c"] {
+        let s = leader.env.status(n).unwrap();
+        assert!(
+            s.generation >= s.decisions as u64 + 2,
+            "{n}: generation {} decisions {}",
+            s.generation,
+            s.decisions
+        );
+    }
+
+    // the telemetry face saw it all
+    let client = std::thread::spawn(move || {
+        let (code, body) = http_get(&addr, "/metrics").unwrap();
+        assert_eq!(code, 200);
+        assert!(body.contains("opd_online_updates_total"), "{body}");
+        assert!(body.contains("opd_online_transitions_total"), "{body}");
+        let gen_line = body
+            .lines()
+            .find(|l| l.starts_with("opd_policy_generation"))
+            .expect("generation gauge exported");
+        let v: f64 = gen_line.split_whitespace().last().unwrap().parse().unwrap();
+        assert!(v >= 1.0, "{gen_line}");
+    });
+    client.join().unwrap();
+
+    // shutdown handshake: drop the env's sender, then join the trainer
+    drop(leader.env.take_online().expect("hook attached"));
+    let stats = handle.finish();
+    assert!(stats.updates >= 1, "at least one online PPO update");
+    assert!(stats.transitions as usize >= 16);
+    assert!(stats.final_generation >= leader.env.policy_generation);
+    server.shutdown();
+}
