@@ -22,7 +22,8 @@ use crate::config::{AgentKind, ExperimentConfig};
 use crate::pipeline::catalog;
 use crate::runtime::{read_params, OpdRuntime};
 use crate::serve::{
-    http_delete, http_post, http_put, v1_router, DeploySpec, HttpServer, Leader, TenantFactory,
+    http_delete, http_post, http_put, v1_router, DeploySpec, HttpClient, HttpServer, Leader,
+    TenantFactory,
 };
 use crate::sim::{run_cycle, CycleResult, Env};
 use crate::util::json::Json;
@@ -71,8 +72,11 @@ COMMANDS
                GET        /v1/cluster            shared-capacity accounting
                POST       /v1/shutdown           stop the leader
   apply      --addr HOST:PORT --name NAME (--pipeline P [--workload W]
-             [--agent A] [--interval S] [--seed N] | --delete | --set-agent A)
-             PUTs a declarative pipeline spec to a running leader
+             [--agent A] [--interval S] [--seed N] [--count N] | --delete
+             [--count N] | --set-agent A)
+             PUTs a declarative pipeline spec to a running leader; --count N
+             applies (or deletes) NAME-0..NAME-{N-1} over one keep-alive
+             connection — the cluster-scale bulk path (DESIGN.md \u{a7}12)
   info       [--artifacts DIR]
 
 COMMON FLAGS
@@ -597,12 +601,58 @@ pub fn cmd_apply(args: &Args) -> Result<()> {
     let agent = args.str_flag("agent");
     let interval = args.usize_flag("interval", 10).map_err(|e| anyhow!(e))?;
     let seed = args.u64_flag("seed", 42).map_err(|e| anyhow!(e))?;
+    let count = args.usize_flag("count", 1).map_err(|e| anyhow!(e))?;
     check_unknown(args)?;
     let addr = addr_s
         .to_socket_addrs()
         .map_err(|e| anyhow!("cannot resolve --addr '{addr_s}': {e}"))?
         .next()
         .ok_or_else(|| anyhow!("--addr '{addr_s}' resolved to nothing"))?;
+
+    // --count N: the cluster-scale bulk path — NAME-0..NAME-{N-1} applied
+    // (or deleted) over a single keep-alive connection (DESIGN.md §12)
+    if count > 1 {
+        if set_agent.is_some() {
+            return Err(anyhow!("--count does not combine with --set-agent"));
+        }
+        let mut client = HttpClient::connect(&addr)
+            .map_err(|e| anyhow!("cannot connect to {addr}: {e}"))?;
+        let t0 = std::time::Instant::now();
+        if delete {
+            for i in 0..count {
+                let (code, body) = client.delete(&format!("/v1/pipelines/{name}-{i}"))?;
+                if code >= 400 {
+                    return Err(anyhow!("delete of {name}-{i} failed with HTTP {code}: {body}"));
+                }
+            }
+            println!("deleted {count} pipelines in {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+        } else {
+            let pipeline =
+                pipeline.ok_or_else(|| anyhow!("apply --count requires --pipeline"))?;
+            for i in 0..count {
+                let mut j = Json::obj()
+                    .set("pipeline", pipeline.as_str())
+                    .set("adapt_interval_secs", interval)
+                    .set("seed", (seed + i as u64) as i64);
+                if let Some(w) = &workload {
+                    j = j.set("workload", w.as_str());
+                }
+                if let Some(a) = &agent {
+                    j = j.set("agent", a.as_str());
+                }
+                let (code, body) =
+                    client.put(&format!("/v1/pipelines/{name}-{i}"), &j.to_string())?;
+                if code >= 400 {
+                    return Err(anyhow!("apply of {name}-{i} failed with HTTP {code}: {body}"));
+                }
+            }
+            println!(
+                "applied {count} pipelines over one keep-alive connection in {:.1} ms",
+                t0.elapsed().as_secs_f64() * 1e3
+            );
+        }
+        return Ok(());
+    }
 
     let (code, body) = if delete {
         http_delete(&addr, &format!("/v1/pipelines/{name}"))?

@@ -37,6 +37,14 @@ impl Node {
         }
     }
 
+    /// Record usage for a placement that was already validated elsewhere
+    /// (`place_onto` / the deployment store's usage index). Unlike `alloc`,
+    /// never refuses — the caller owns feasibility, and a refusal here would
+    /// silently desynchronize the index from the container set.
+    pub fn alloc_unchecked(&mut self, cores: f64) {
+        self.cores_used += cores;
+    }
+
     pub fn free(&mut self, cores: f64) {
         self.cores_used = (self.cores_used - cores).max(0.0);
     }

@@ -16,6 +16,7 @@
 //!    variant switches restart a stage, scale-ups start cold, scale-downs
 //!    are immediate.
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 
 use crate::cluster::node::ClusterTopology;
@@ -64,29 +65,61 @@ impl Deployment {
     }
 }
 
-fn build_requests(spec: &PipelineSpec, cfgs: &[TaskConfig]) -> Vec<PlacementRequest> {
-    spec.tasks
-        .iter()
-        .zip(cfgs)
-        .enumerate()
-        .map(|(i, (t, c))| PlacementRequest {
-            stage: i,
-            count: c.replicas,
-            cores: t.variants[c.variant].cores,
-        })
-        .collect()
+fn build_requests_into(
+    spec: &PipelineSpec,
+    cfgs: &[TaskConfig],
+    out: &mut Vec<PlacementRequest>,
+) {
+    out.clear();
+    out.extend(spec.tasks.iter().zip(cfgs).enumerate().map(|(i, (t, c))| {
+        PlacementRequest { stage: i, count: c.replicas, cores: t.variants[c.variant].cores }
+    }));
 }
 
+/// Reused per-store buffers for the placement hot path (`fit_config`,
+/// `apply`, `capacity_for` run per decide at fleet scale). `grow_events`
+/// counts capacity growth, extending the leader-side `obs_grow_events`
+/// discipline into the store: flat after warm-up.
+#[derive(Default)]
+struct StoreScratch {
+    free: Vec<f64>,
+    requests: Vec<PlacementRequest>,
+    grow_events: u64,
+}
+
+/// How many incremental index mutations a release build tolerates before an
+/// exact full-rescan resync (sheds accumulated f64 add/sub noise). Debug
+/// builds cross-check and snap after *every* mutation instead.
+const USAGE_RESYNC_EVERY: u32 = 1024;
+
 /// Cluster state + multi-tenant deployment controller.
+///
+/// **Usage index invariant** (DESIGN.md §12): `topo.nodes[i].cores_used` and
+/// `total_used` always equal the full rescan over every deployment's
+/// containers, up to f64 add/sub noise strictly below the 1e-9 placement
+/// epsilon. `apply`/`delete` maintain them incrementally (O(own containers),
+/// not O(fleet)); debug builds assert and snap to the rescan after every
+/// mutation, release builds resync every `USAGE_RESYNC_EVERY` mutations.
 pub struct DeploymentStore {
     pub topo: ClusterTopology,
     pub startup_secs: f64,
     deployments: BTreeMap<String, Deployment>,
+    /// Σ cores over all containers — incremental twin of `topo.used()`.
+    total_used: f64,
+    ops_since_resync: u32,
+    scratch: RefCell<StoreScratch>,
 }
 
 impl DeploymentStore {
     pub fn new(topo: ClusterTopology, startup_secs: f64) -> Self {
-        Self { topo, startup_secs, deployments: BTreeMap::new() }
+        Self {
+            topo,
+            startup_secs,
+            deployments: BTreeMap::new(),
+            total_used: 0.0,
+            ops_since_resync: 0,
+            scratch: RefCell::new(StoreScratch::default()),
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -105,6 +138,27 @@ impl DeploymentStore {
         self.deployments.keys().cloned().collect()
     }
 
+    /// [`DeploymentStore::names`] into a reused buffer: existing `String`s
+    /// are cleared and refilled in place, so a steady-state fleet costs zero
+    /// allocations per call (the hot publish path at thousands of tenants).
+    pub fn names_into(&self, out: &mut Vec<String>) {
+        for (i, k) in self.deployments.keys().enumerate() {
+            match out.get_mut(i) {
+                Some(slot) => {
+                    slot.clear();
+                    slot.push_str(k);
+                }
+                None => out.push(k.clone()),
+            }
+        }
+        out.truncate(self.deployments.len());
+    }
+
+    /// Borrowing name iterator (sorted) — no clones at all.
+    pub fn names_iter(&self) -> impl Iterator<Item = &str> {
+        self.deployments.keys().map(String::as_str)
+    }
+
     /// Bump a deployment's generation without touching its config — records
     /// non-config control-plane changes (an agent hot-swap, an online policy
     /// update) in the same monotone version stream clients watch for
@@ -121,41 +175,50 @@ impl DeploymentStore {
     }
 
     /// Per-node cores still available to deployment `name`: node capacity
-    /// minus every *other* tenant's running containers.
-    fn free_excluding(&self, name: &str) -> Vec<f64> {
-        let mut free: Vec<f64> =
-            self.topo.nodes.iter().map(|n| n.cores_total).collect();
-        for d in self.deployments.values() {
-            if d.name == name {
-                continue;
-            }
+    /// minus every *other* tenant's running containers. Served from the
+    /// incremental usage index — O(nodes + own containers), not O(fleet):
+    /// `free[i] = cores_total − cores_used + own`, clamped at 0 like the
+    /// full-scan formulation it replaces.
+    fn free_excluding_into(&self, name: &str, free: &mut Vec<f64>) {
+        free.clear();
+        free.extend(self.topo.nodes.iter().map(|n| n.cores_total - n.cores_used));
+        if let Some(d) = self.deployments.get(name) {
             for c in &d.containers {
                 if c.node < free.len() {
-                    free[c.node] -= c.cores;
+                    free[c.node] += c.cores;
                 }
             }
         }
-        for f in &mut free {
+        for f in free.iter_mut() {
             if *f < 0.0 {
                 *f = 0.0;
             }
         }
-        free
     }
 
     /// Total cores available to deployment `name` (W_max minus other
     /// tenants' allocations) — the budget its agent should plan against.
     pub fn capacity_for(&self, name: &str) -> f64 {
-        self.free_excluding(name).iter().sum()
+        let mut scratch = self.scratch.borrow_mut();
+        let cap = scratch.free.capacity();
+        self.free_excluding_into(name, &mut scratch.free);
+        if scratch.free.capacity() > cap {
+            scratch.grow_events += 1;
+        }
+        scratch.free.iter().sum()
     }
 
-    /// Cores held by all deployments *except* `name`.
+    /// Cores held by all deployments *except* `name` — the usage-index total
+    /// minus the tenant's own share, O(own containers).
     pub fn cores_used_by_others(&self, name: &str) -> f64 {
-        self.deployments
-            .values()
-            .filter(|d| d.name != name)
-            .map(|d| d.allocated_cores())
-            .sum()
+        let own = self.deployments.get(name).map(|d| d.allocated_cores()).unwrap_or(0.0);
+        (self.total_used - own).max(0.0)
+    }
+
+    /// Scratch-buffer capacity growth since construction (flat after warm-up
+    /// on a steady-state fleet; see `MultiEnv::obs_grow_events`).
+    pub fn scratch_grow_events(&self) -> u64 {
+        self.scratch.borrow().grow_events
     }
 
     /// Shrink `cfgs` until it both respects the tenant's shared budget and
@@ -170,15 +233,18 @@ impl DeploymentStore {
         spec: &PipelineSpec,
         cfgs: &[TaskConfig],
     ) -> (Vec<TaskConfig>, bool) {
-        let free = self.free_excluding(name);
+        let mut scratch = self.scratch.borrow_mut();
+        let caps = (scratch.free.capacity(), scratch.requests.capacity());
+        self.free_excluding_into(name, &mut scratch.free);
+        let StoreScratch { free, requests, grow_events } = &mut *scratch;
         let budget: f64 = free.iter().sum();
         let mut cfgs = cfgs.to_vec();
         let mut clamped = false;
-        loop {
-            let requests = build_requests(spec, &cfgs);
+        let fitted = loop {
+            build_requests_into(spec, &cfgs, requests);
             let fits_total = spec.total_cores(&cfgs) <= budget + 1e-9;
-            if fits_total && place_onto(&free, &requests).is_ok() {
-                return (cfgs, clamped);
+            if fits_total && place_onto(free, requests).is_ok() {
+                break (cfgs, clamped);
             }
             // shed from the most expensive stage that still has >1 replica
             let victim = cfgs
@@ -215,11 +281,15 @@ impl DeploymentStore {
                             cfgs[i].variant -= 1;
                             clamped = true;
                         }
-                        None => return (cfgs, true),
+                        None => break (cfgs, true),
                     }
                 }
             }
+        };
+        if free.capacity() > caps.0 || requests.capacity() > caps.1 {
+            *grow_events += 1;
         }
+        fitted
     }
 
     /// Apply a (possibly infeasible) configuration for deployment `name` at
@@ -235,11 +305,15 @@ impl DeploymentStore {
     ) -> Result<ApplyOutcome, String> {
         spec.validate_config(cfgs)?;
         let (applied, clamped) = self.fit_config(name, spec, cfgs);
-        let free = self.free_excluding(name);
-        let requests = build_requests(spec, &applied);
-        let bindings = place_onto(&free, &requests).map_err(|s| {
-            format!("pipeline '{name}': placement failed for stage {s} after clamping")
-        })?;
+        let bindings = {
+            let mut scratch = self.scratch.borrow_mut();
+            self.free_excluding_into(name, &mut scratch.free);
+            let StoreScratch { free, requests, .. } = &mut *scratch;
+            build_requests_into(spec, &applied, requests);
+            place_onto(free, requests).map_err(|s| {
+                format!("pipeline '{name}': placement failed for stage {s} after clamping")
+            })?
+        };
 
         // Diff against this deployment's running replicas, stage by stage.
         // A different pipeline (PUT replacing the spec) restarts everything —
@@ -286,6 +360,19 @@ impl DeploymentStore {
             }
         }
 
+        // Usage index: out with the tenant's old replica set, in with the
+        // new — O(own containers), where the old full `rebuild_usage` was
+        // O(every container in the fleet) per apply.
+        if let Some(prev) = self.deployments.get(name) {
+            for c in &prev.containers {
+                self.topo.nodes[c.node].free(c.cores);
+                self.total_used = (self.total_used - c.cores).max(0.0);
+            }
+        }
+        for c in &new_containers {
+            self.topo.nodes[c.node].alloc_unchecked(c.cores);
+            self.total_used += c.cores;
+        }
         self.deployments.insert(
             name.to_string(),
             Deployment {
@@ -296,27 +383,79 @@ impl DeploymentStore {
                 containers: new_containers,
             },
         );
-        self.rebuild_usage();
+        self.note_mutation();
         Ok(ApplyOutcome { applied, clamped, restarts, generation })
     }
 
     /// Remove a deployment, releasing its cores immediately.
     pub fn delete(&mut self, name: &str) -> Option<Deployment> {
         let d = self.deployments.remove(name);
-        if d.is_some() {
-            self.rebuild_usage();
+        if let Some(d) = &d {
+            for c in &d.containers {
+                self.topo.nodes[c.node].free(c.cores);
+                self.total_used = (self.total_used - c.cores).max(0.0);
+            }
+            self.note_mutation();
         }
         d
     }
 
-    /// Rebuild node usage from the full container set of every tenant.
-    fn rebuild_usage(&mut self) {
-        self.topo.reset();
+    /// Bookkeeping after an index mutation: debug builds cross-check the
+    /// incremental index against the full rescan and snap to it (so tests see
+    /// exact rescan semantics); release builds resync periodically to shed
+    /// f64 add/sub noise long before it can approach the 1e-9 epsilon.
+    fn note_mutation(&mut self) {
+        self.ops_since_resync += 1;
+        #[cfg(debug_assertions)]
+        self.debug_check_and_snap();
+        if self.ops_since_resync >= USAGE_RESYNC_EVERY {
+            self.rebuild_usage();
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    fn debug_check_and_snap(&mut self) {
+        let mut exact = vec![0.0; self.topo.nodes.len()];
         for d in self.deployments.values() {
             for c in &d.containers {
-                self.topo.nodes[c.node].alloc(c.cores);
+                if c.node < exact.len() {
+                    exact[c.node] += c.cores;
+                }
             }
         }
+        let total: f64 = exact.iter().sum();
+        for (n, e) in self.topo.nodes.iter_mut().zip(&exact) {
+            debug_assert!(
+                (n.cores_used - *e).abs() <= 1e-9,
+                "usage index drifted on {}: {} vs rescan {}",
+                n.name,
+                n.cores_used,
+                e
+            );
+            n.cores_used = *e;
+        }
+        debug_assert!(
+            (self.total_used - total).abs() <= 1e-9,
+            "total_used drifted: {} vs rescan {}",
+            self.total_used,
+            total
+        );
+        self.total_used = total;
+    }
+
+    /// Exact resync: rebuild node usage from the full container set of every
+    /// tenant (the cold-path ground truth the incremental index shadows).
+    fn rebuild_usage(&mut self) {
+        self.topo.reset();
+        let mut total = 0.0;
+        for d in self.deployments.values() {
+            for c in &d.containers {
+                self.topo.nodes[c.node].alloc_unchecked(c.cores);
+                total += c.cores;
+            }
+        }
+        self.total_used = total;
+        self.ops_since_resync = 0;
     }
 
     /// Ready replica count per stage for one deployment at time `now`.
@@ -346,9 +485,10 @@ impl DeploymentStore {
         }
     }
 
-    /// Cores currently allocated across all tenants (the billed cost basis).
+    /// Cores currently allocated across all tenants (the billed cost basis)
+    /// — served by the incremental index in O(1).
     pub fn allocated_cores(&self) -> f64 {
-        self.deployments.values().map(|d| d.allocated_cores()).sum()
+        self.total_used
     }
 }
 
@@ -497,6 +637,207 @@ mod tests {
         assert_eq!(out.restarts, 4);
         assert_eq!(store.ready_replicas("x", 4, 10.5), vec![0; 4]);
         assert_eq!(store.ready_replicas("x", 4, 14.0), vec![1; 4]);
+    }
+
+    /// Tentpole cross-check: the incrementally maintained usage index must be
+    /// indistinguishable from the pre-refactor full-scan store. Drives a
+    /// randomized apply/delete sequence and, after every mutation, (a)
+    /// asserts the index equals the full container rescan, and (b) replays
+    /// the old free_excluding + fit loop verbatim and asserts `fit_config`
+    /// returns the identical clamped configuration and placement bindings.
+    #[test]
+    fn usage_index_matches_full_rescan_over_randomized_sequences() {
+        use crate::util::prng::Pcg32;
+
+        // the pre-refactor formulation: start from capacity, subtract every
+        // other tenant's containers, clamp at zero
+        fn naive_free_excluding(store: &DeploymentStore, name: &str) -> Vec<f64> {
+            let mut free: Vec<f64> =
+                store.topo.nodes.iter().map(|n| n.cores_total).collect();
+            for d in store.deployments() {
+                if d.name == name {
+                    continue;
+                }
+                for c in &d.containers {
+                    if c.node < free.len() {
+                        free[c.node] -= c.cores;
+                    }
+                }
+            }
+            for f in &mut free {
+                if *f < 0.0 {
+                    *f = 0.0;
+                }
+            }
+            free
+        }
+
+        // the pre-refactor fit loop, run against the naive free vector
+        fn reference_fit(
+            free: &[f64],
+            spec: &PipelineSpec,
+            cfgs: &[TaskConfig],
+        ) -> (Vec<TaskConfig>, bool) {
+            let budget: f64 = free.iter().sum();
+            let mut cfgs = cfgs.to_vec();
+            let mut clamped = false;
+            let mut requests = Vec::new();
+            loop {
+                build_requests_into(spec, &cfgs, &mut requests);
+                let fits_total = spec.total_cores(&cfgs) <= budget + 1e-9;
+                if fits_total && place_onto(free, &requests).is_ok() {
+                    return (cfgs, clamped);
+                }
+                let victim = cfgs
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, c)| c.replicas > 1)
+                    .max_by(|(i, a), (j, b)| {
+                        let ca = a.cores(&spec.tasks[*i]);
+                        let cb = b.cores(&spec.tasks[*j]);
+                        ca.partial_cmp(&cb).unwrap_or(std::cmp::Ordering::Equal)
+                    })
+                    .map(|(i, _)| i);
+                match victim {
+                    Some(i) => {
+                        cfgs[i].replicas -= 1;
+                        clamped = true;
+                    }
+                    None => {
+                        let heavy = cfgs
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, c)| c.variant > 0)
+                            .max_by(|(i, a), (j, b)| {
+                                let ca = spec.tasks[*i].variants[a.variant].cores;
+                                let cb = spec.tasks[*j].variants[b.variant].cores;
+                                ca.partial_cmp(&cb).unwrap_or(std::cmp::Ordering::Equal)
+                            })
+                            .map(|(i, _)| i);
+                        match heavy {
+                            Some(i) => {
+                                cfgs[i].variant -= 1;
+                                clamped = true;
+                            }
+                            None => return (cfgs, true),
+                        }
+                    }
+                }
+            }
+        }
+
+        let specs = [
+            catalog::preset(catalog::Preset::P1).spec,
+            catalog::preset(catalog::Preset::P2).spec,
+            catalog::video_analytics().spec,
+            catalog::iot_anomaly().spec,
+        ];
+        let mut store = DeploymentStore::new(ClusterTopology::uniform(4, 16.0), 3.0);
+        let mut rng = Pcg32::new(0xC0DE);
+        let mut now = 0.0;
+        for step in 0..400 {
+            let tenant = format!("t{}", rng.below(12));
+            let spec = &specs[rng.below(specs.len() as u32) as usize];
+            if rng.uniform() < 0.65 || store.get(&tenant).is_none() {
+                let cfgs: Vec<TaskConfig> = spec
+                    .tasks
+                    .iter()
+                    .map(|t| {
+                        TaskConfig::new(
+                            rng.below(t.n_variants() as u32) as usize,
+                            1 + rng.below(4) as usize,
+                            rng.below(6) as usize,
+                        )
+                    })
+                    .collect();
+                let _ = store.apply(&tenant, spec, &cfgs, now);
+            } else {
+                store.delete(&tenant);
+            }
+            now += 1.0;
+
+            // (a) index ≡ rescan
+            let mut rescan = vec![0.0; store.topo.nodes.len()];
+            for d in store.deployments() {
+                for c in &d.containers {
+                    rescan[c.node] += c.cores;
+                }
+            }
+            for (n, exact) in store.topo.nodes.iter().zip(&rescan) {
+                assert!(
+                    (n.cores_used - exact).abs() <= 1e-9,
+                    "step {step}: node {} index {} vs rescan {exact}",
+                    n.name,
+                    n.cores_used
+                );
+            }
+            let total: f64 = rescan.iter().sum();
+            assert!((store.allocated_cores() - total).abs() <= 1e-9, "step {step}");
+
+            // (b) identical placement decisions vs the old full-scan path
+            let probe = format!("t{}", rng.below(12));
+            let naive = naive_free_excluding(&store, &probe);
+            assert!(
+                (store.capacity_for(&probe) - naive.iter().sum::<f64>()).abs() <= 1e-9,
+                "step {step}: capacity_for diverged"
+            );
+            let req: Vec<TaskConfig> = spec
+                .tasks
+                .iter()
+                .map(|t| TaskConfig::new(t.n_variants() - 1, 1 + rng.below(6) as usize, 0))
+                .collect();
+            let (got, got_clamped) = store.fit_config(&probe, spec, &req);
+            let (want, want_clamped) = reference_fit(&naive, spec, &req);
+            assert_eq!((got, got_clamped), (want, want_clamped), "step {step}: fit diverged");
+
+            // identical bindings for the fitted config
+            let mut requests = Vec::new();
+            build_requests_into(spec, &want, &mut requests);
+            if let Ok(want_bind) = place_onto(&naive, &requests) {
+                let mut free = Vec::new();
+                store.free_excluding_into(&probe, &mut free);
+                let got_bind = place_onto(&free, &requests).expect("fit said it places");
+                assert_eq!(want_bind.len(), got_bind.len());
+                for (a, b) in want_bind.iter().zip(&got_bind) {
+                    assert_eq!((a.stage, a.node), (b.stage, b.node), "step {step}");
+                    assert_eq!(a.cores.to_bits(), b.cores.to_bits(), "step {step}");
+                }
+            }
+        }
+    }
+
+    /// Store scratch buffers stop growing once the fleet shape is warm.
+    #[test]
+    fn placement_scratch_is_allocation_flat_after_warmup() {
+        let mut store = DeploymentStore::new(ClusterTopology::uniform(8, 32.0), 3.0);
+        let spec = catalog::preset(catalog::Preset::P1).spec;
+        for i in 0..16 {
+            store.apply(&format!("t{i}"), &spec, &spec.default_config(), 0.0).unwrap();
+        }
+        let warm = store.scratch_grow_events();
+        for round in 0..50 {
+            for i in 0..16 {
+                let name = format!("t{i}");
+                store.capacity_for(&name);
+                store.apply(&name, &spec, &spec.default_config(), round as f64).unwrap();
+            }
+        }
+        assert_eq!(store.scratch_grow_events(), warm, "store scratch grew after warm-up");
+    }
+
+    #[test]
+    fn names_into_reuses_buffers() {
+        let mut store = DeploymentStore::new(ClusterTopology::paper_testbed(), 3.0);
+        let spec = catalog::preset(catalog::Preset::P1).spec;
+        store.apply("b", &spec, &spec.default_config(), 0.0).unwrap();
+        store.apply("a", &spec, &spec.default_config(), 0.0).unwrap();
+        let mut buf = vec![String::from("stale-long-entry"), String::new(), String::new()];
+        store.names_into(&mut buf);
+        assert_eq!(buf, vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(store.names_iter().collect::<Vec<_>>(), vec!["a", "b"]);
+        store.delete("a");
+        store.names_into(&mut buf);
+        assert_eq!(buf, vec!["b".to_string()]);
     }
 
     #[test]

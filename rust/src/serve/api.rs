@@ -22,9 +22,9 @@ use std::time::Duration;
 
 use crate::config::AgentKind;
 use crate::pipeline::{TaskConfig, BATCH_CHOICES};
-use crate::serve::http::{Request, Response, Router};
+use crate::serve::http::{Response, Router};
 use crate::serve::ControlPlane;
-use crate::util::json::Json;
+use crate::util::json::{Json, LazyObj};
 use crate::workload::WorkloadKind;
 
 /// Typed API error → HTTP status + `{"error": …}` body.
@@ -53,7 +53,7 @@ impl ApiError {
 }
 
 /// Declarative pipeline deployment spec — the POST/PUT /v1/pipelines body.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct DeploySpec {
     /// deployment name (the key on the shared cluster)
     pub name: String,
@@ -117,6 +117,87 @@ impl DeploySpec {
             None => None,
         };
         Ok(DeploySpec { name, pipeline, workload, agent, adapt_interval_secs, seed, initial })
+    }
+
+    /// Parse a deploy spec straight from a request body. Hot path for
+    /// cluster-scale apply storms (DESIGN.md §12): a lazy top-level field
+    /// scan extracts the spec without building a JSON tree. Anything
+    /// ambiguous — parse failure, escaped or non-string fields, an explicit
+    /// `config` — falls back to the tree parser, so errors and edge-case
+    /// semantics stay byte-identical to [`DeploySpec::from_json`].
+    pub fn from_body(body: &str, path_name: Option<&str>) -> Result<DeploySpec, String> {
+        if let Some(fast) = Self::from_body_fast(body, path_name) {
+            return fast;
+        }
+        let j = Json::parse(body).map_err(|e| format!("invalid JSON body: {e}"))?;
+        Self::from_json(&j, path_name)
+    }
+
+    /// `None` → ambiguous, take the tree path; `Some(r)` → exactly the
+    /// result `from_json` would produce for this body.
+    fn from_body_fast(body: &str, path_name: Option<&str>) -> Option<Result<DeploySpec, String>> {
+        // A raw value that is not a plain unescaped string is either a type
+        // the tree path silently defaults on or an escaped string it
+        // decodes — both need the tree parser to stay identical.
+        fn plain_str<'a>(obj: &LazyObj<'a>, key: &str) -> Option<Option<&'a str>> {
+            match obj.get_raw(key) {
+                None => Some(None),
+                Some(_) => obj.get_str(key).map(Some),
+            }
+        }
+        let obj = LazyObj::parse(body).ok()?;
+        if obj.has("config") {
+            return None; // explicit initial configs take the tree path
+        }
+        let name = match path_name {
+            Some(n) => n.to_string(),
+            None => match plain_str(&obj, "name")? {
+                Some(s) => s.to_string(),
+                None => return Some(Err("missing field 'name'".into())),
+            },
+        };
+        if name.is_empty()
+            || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+        {
+            return Some(Err(format!("invalid pipeline name '{name}' (use [A-Za-z0-9_-]+)")));
+        }
+        let pipeline = match plain_str(&obj, "pipeline")? {
+            Some(s) => s.to_string(),
+            None => return Some(Err("missing field 'pipeline'".into())),
+        };
+        let workload = match plain_str(&obj, "workload")? {
+            Some(w) => match WorkloadKind::from_name(w) {
+                Some(k) => k,
+                None => return Some(Err(format!("unknown workload '{w}'"))),
+            },
+            None => WorkloadKind::Fluctuating,
+        };
+        let agent = match plain_str(&obj, "agent")? {
+            Some(a) => match AgentKind::from_name(a) {
+                Some(k) => k,
+                None => {
+                    return Some(Err(format!(
+                        "unknown agent '{a}' (available: {})",
+                        AgentKind::available().join(", ")
+                    )))
+                }
+            },
+            None => AgentKind::Greedy,
+        };
+        let adapt_interval_secs = obj.get_usize("adapt_interval_secs").unwrap_or(10);
+        if adapt_interval_secs == 0 {
+            return Some(Err("adapt_interval_secs must be >= 1".into()));
+        }
+        let seed = obj.get_i64("seed").map(|v| v as u64).unwrap_or(42);
+        Some(Ok(DeploySpec {
+            name,
+            pipeline,
+            workload,
+            agent,
+            adapt_interval_secs,
+            seed,
+            initial: None,
+        }))
     }
 
     pub fn to_json(&self) -> Json {
@@ -199,8 +280,51 @@ fn call(tx: &Arc<Mutex<Sender<ControlMsg>>>, req: ControlRequest) -> Response {
     }
 }
 
-fn parse_body(req: &Request) -> Result<Json, Response> {
-    Json::parse(&req.body).map_err(|e| error_response(400, &format!("invalid JSON body: {e}")))
+/// Extract the agent hot-swap fields from `{"agent": ..., "seed": ...}`.
+/// Lazy fast path with tree-parser fallback on any ambiguity, mirroring
+/// `DeploySpec::from_body` (DESIGN.md §12).
+fn swap_fields(body: &str) -> Result<(AgentKind, u64), Response> {
+    if let Some(fast) = swap_fields_fast(body) {
+        return fast;
+    }
+    let j = Json::parse(body)
+        .map_err(|e| error_response(400, &format!("invalid JSON body: {e}")))?;
+    let kind = j
+        .get("agent")
+        .and_then(Json::as_str)
+        .ok_or_else(|| error_response(400, "missing field 'agent'"))?;
+    let agent = AgentKind::from_name(kind).ok_or_else(|| {
+        error_response(
+            400,
+            &format!("unknown agent '{kind}' (available: {})", AgentKind::available().join(", ")),
+        )
+    })?;
+    let seed = j.get("seed").and_then(Json::as_i64).map(|v| v as u64).unwrap_or(42);
+    Ok((agent, seed))
+}
+
+/// `None` → ambiguous (bad JSON / escaped or non-string agent), take the
+/// tree path; `Some(r)` → exactly what the tree path would produce.
+fn swap_fields_fast(body: &str) -> Option<Result<(AgentKind, u64), Response>> {
+    let obj = LazyObj::parse(body).ok()?;
+    let kind = match obj.get_raw("agent") {
+        None => return Some(Err(error_response(400, "missing field 'agent'"))),
+        Some(_) => obj.get_str("agent")?,
+    };
+    let agent = match AgentKind::from_name(kind) {
+        Some(a) => a,
+        None => {
+            return Some(Err(error_response(
+                400,
+                &format!(
+                    "unknown agent '{kind}' (available: {})",
+                    AgentKind::available().join(", ")
+                ),
+            )))
+        }
+    };
+    let seed = obj.get_i64("seed").map(|v| v as u64).unwrap_or(42);
+    Some(Ok((agent, seed)))
 }
 
 /// Build the leader's full router: classic observability endpoints plus the
@@ -213,12 +337,9 @@ pub fn v1_router(cp: &Arc<ControlPlane>, tx: Sender<ControlMsg>) -> Router {
     router.get("/v1/pipelines", move |_| call(&t, ControlRequest::ListPipelines));
 
     let t = tx.clone();
-    router.post("/v1/pipelines", move |req| match parse_body(req) {
-        Ok(j) => match DeploySpec::from_json(&j, None) {
-            Ok(spec) => call(&t, ControlRequest::ApplyPipeline { spec, create_only: true }),
-            Err(e) => error_response(400, &e),
-        },
-        Err(resp) => resp,
+    router.post("/v1/pipelines", move |req| match DeploySpec::from_body(&req.body, None) {
+        Ok(spec) => call(&t, ControlRequest::ApplyPipeline { spec, create_only: true }),
+        Err(e) => error_response(400, &e),
     });
 
     let t = tx.clone();
@@ -227,12 +348,11 @@ pub fn v1_router(cp: &Arc<ControlPlane>, tx: Sender<ControlMsg>) -> Router {
     });
 
     let t = tx.clone();
-    router.put("/v1/pipelines/{name}", move |req| match parse_body(req) {
-        Ok(j) => match DeploySpec::from_json(&j, Some(req.param("name"))) {
+    router.put("/v1/pipelines/{name}", move |req| {
+        match DeploySpec::from_body(&req.body, Some(req.param("name"))) {
             Ok(spec) => call(&t, ControlRequest::ApplyPipeline { spec, create_only: false }),
             Err(e) => error_response(400, &e),
-        },
-        Err(resp) => resp,
+        }
     });
 
     let t = tx.clone();
@@ -242,27 +362,10 @@ pub fn v1_router(cp: &Arc<ControlPlane>, tx: Sender<ControlMsg>) -> Router {
 
     let t = tx.clone();
     router.post("/v1/pipelines/{name}/agent", move |req| {
-        let j = match parse_body(req) {
-            Ok(j) => j,
+        let (agent, seed) = match swap_fields(&req.body) {
+            Ok(x) => x,
             Err(resp) => return resp,
         };
-        let kind = match j.get("agent").and_then(Json::as_str) {
-            Some(k) => k,
-            None => return error_response(400, "missing field 'agent'"),
-        };
-        let agent = match AgentKind::from_name(kind) {
-            Some(a) => a,
-            None => {
-                return error_response(
-                    400,
-                    &format!(
-                        "unknown agent '{kind}' (available: {})",
-                        AgentKind::available().join(", ")
-                    ),
-                )
-            }
-        };
-        let seed = j.get("seed").and_then(Json::as_i64).map(|v| v as u64).unwrap_or(42);
         call(
             &t,
             ControlRequest::SwapAgent {
@@ -327,6 +430,71 @@ mod tests {
         let j = Json::parse(r#"{"pipeline":"P1"}"#).unwrap();
         assert!(DeploySpec::from_json(&j, Some("p")).is_ok());
         assert!(DeploySpec::from_json(&j, None).is_err());
+    }
+
+    /// The lazy fast path must be observationally identical to the tree
+    /// path — same specs, same error strings — across representative v1
+    /// bodies (fast-path hits, bail-outs, and errors alike).
+    #[test]
+    fn from_body_matches_the_tree_parser() {
+        let corpus = [
+            r#"{"name":"vid","pipeline":"video-analytics"}"#,
+            r#"{"name":"x","pipeline":"P2","workload":"steady-high","agent":"ipa","adapt_interval_secs":5,"seed":9}"#,
+            // escaped string → bails to the tree path, which decodes it
+            r#"{"name":"a\u0062c","pipeline":"P1"}"#,
+            // duplicate key: last one wins on both paths
+            r#"{"name":"a","name":"b","pipeline":"P1"}"#,
+            // non-string / fractional typed fields → tree-path defaults
+            r#"{"name":"a","pipeline":"P1","agent":7}"#,
+            r#"{"name":"a","pipeline":"P1","seed":1.5}"#,
+            r#"{"name":"a","pipeline":"P1","adapt_interval_secs":-3}"#,
+            // explicit config → always the tree path
+            r#"{"name":"a","pipeline":"P1","config":[{"variant":1,"replicas":2,"batch":4}]}"#,
+            r#"{"name":"a","pipeline":"P1","config":{}}"#,
+            // errors must match byte for byte
+            r#"{"pipeline":"P1"}"#,
+            r#"{"name":"a b","pipeline":"P1"}"#,
+            r#"{"name":"a","pipeline":"P1","workload":"nope"}"#,
+            r#"{"name":"a","pipeline":"P1","agent":"nope"}"#,
+            r#"{"name":"a","pipeline":"P1","adapt_interval_secs":0}"#,
+            r#"{"name":"a""#,
+            r#"[1,2,3]"#,
+            r#"not json"#,
+        ];
+        for body in corpus {
+            for path_name in [None, Some("from-path")] {
+                let tree = Json::parse(body)
+                    .map_err(|e| format!("invalid JSON body: {e}"))
+                    .and_then(|j| DeploySpec::from_json(&j, path_name));
+                let fast = DeploySpec::from_body(body, path_name);
+                assert_eq!(fast, tree, "diverged on {body} (path_name {path_name:?})");
+            }
+        }
+    }
+
+    #[test]
+    fn swap_fields_matches_the_tree_parser() {
+        // (body, expected) — expected None means a 400 on both paths
+        let cases: &[(&str, Option<(AgentKind, u64)>)] = &[
+            (r#"{"agent":"ipa"}"#, Some((AgentKind::Ipa, 42))),
+            (r#"{"agent":"greedy","seed":7}"#, Some((AgentKind::Greedy, 7))),
+            // escaped agent name → bails to the tree path, which decodes it
+            (r#"{"agent":"ip\u0061"}"#, Some((AgentKind::Ipa, 42))),
+            (r#"{"agent":"nope"}"#, None),
+            (r#"{"seed":7}"#, None),
+            (r#"{"agent":5}"#, None),
+            (r#"{"agent":"ipa","seed":1.5}"#, Some((AgentKind::Ipa, 42))),
+            (r#"{"agent":"ipa""#, None),
+        ];
+        for (body, expected) in cases {
+            match swap_fields(body) {
+                Ok(got) => assert_eq!(Some(got), *expected, "{body}"),
+                Err(resp) => {
+                    assert!(expected.is_none(), "{body} unexpectedly rejected: {}", resp.body);
+                    assert_eq!(resp.status, 400, "{body}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,18 +1,42 @@
-//! Minimal HTTP/1.1 server substrate (std::net + a fixed thread pool; no
-//! tokio offline). Enough surface for the leader process: GET/POST/PUT/DELETE
-//! routing with path parameters (`/v1/pipelines/{name}`), request bodies with
-//! a hard size cap, content types, graceful shutdown that joins every thread.
+//! Minimal HTTP/1.1 server substrate (std::net only; no tokio offline).
+//! Enough surface for the leader process: GET/POST/PUT/DELETE routing with
+//! path parameters (`/v1/pipelines/{name}`), request bodies with a hard size
+//! cap, content types, graceful shutdown that joins every thread.
+//!
+//! Cluster-scale shape (DESIGN.md §12): a blocking accept thread deals
+//! connections round-robin onto a fixed worker pool; each worker runs a
+//! readiness loop over its set of **non-blocking keep-alive connections**,
+//! with a per-connection state machine for incremental header+body reads and
+//! partial writes. A worker with zero connections blocks on its channel (an
+//! idle leader burns no CPU — the old accept loop's 5 ms `WouldBlock`
+//! sleep-poll is gone, and shutdown wakes the accept thread with a loopback
+//! connection instead of being polled for).
 
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 /// Largest request body the server accepts; larger declared lengths are
 /// rejected with 413 instead of being silently truncated.
 pub const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// Largest header block (request line + headers) before the connection is
+/// rejected with 400 — bounds buffering for clients that never finish.
+const MAX_HEADER_BYTES: usize = 16 * 1024;
+
+/// Keep-alive connections idle longer than this are closed.
+const IDLE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// After shutdown starts, how long a worker keeps serving connections that
+/// still have a request or response in flight.
+const DRAIN_GRACE: Duration = Duration::from_millis(500);
+
+/// Per-worker connection cap; excess connections get 503 + close.
+const MAX_CONNS_PER_WORKER: usize = 512;
 
 /// Parsed request.
 #[derive(Clone, Debug)]
@@ -26,6 +50,16 @@ pub struct Request {
 }
 
 impl Request {
+    fn empty() -> Request {
+        Request {
+            method: String::new(),
+            path: String::new(),
+            query: String::new(),
+            body: String::new(),
+            params: HashMap::new(),
+        }
+    }
+
     /// Path parameter by name ("" when the route declared none).
     pub fn param(&self, name: &str) -> &str {
         self.params.get(name).map(String::as_str).unwrap_or("")
@@ -92,16 +126,20 @@ impl Response {
         }
     }
 
-    fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
-        let head = format!(
-            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+    /// Serialize into `out` (appended). `close` selects the Connection
+    /// header; responses always carry Content-Length so keep-alive clients
+    /// can frame them.
+    fn encode_into(&self, close: bool, out: &mut Vec<u8>) {
+        let _ = write!(
+            out,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
             self.status,
             self.status_text(),
             self.content_type,
-            self.body.len()
+            self.body.len(),
+            if close { "close" } else { "keep-alive" },
         );
-        stream.write_all(head.as_bytes())?;
-        stream.write_all(self.body.as_bytes())
+        out.extend_from_slice(self.body.as_bytes());
     }
 }
 
@@ -187,43 +225,47 @@ impl Router {
         self.route("DELETE", path, f)
     }
 
-    fn match_pattern(segs: &[Seg], path: &str) -> Option<HashMap<String, String>> {
-        let parts: Vec<&str> = path.trim_start_matches('/').split('/').collect();
-        if parts.len() != segs.len() {
-            return None;
-        }
-        let mut params = HashMap::new();
-        for (seg, part) in segs.iter().zip(&parts) {
+    /// Match `path` against `segs`, filling `params` in place (cleared
+    /// first). Returns false without touching semantics on mismatch.
+    fn match_pattern_into(
+        segs: &[Seg],
+        path: &str,
+        params: &mut HashMap<String, String>,
+    ) -> bool {
+        params.clear();
+        let mut parts = path.trim_start_matches('/').split('/');
+        for seg in segs {
+            let Some(part) = parts.next() else { return false };
             match seg {
                 Seg::Lit(l) => {
                     if l != part {
-                        return None;
+                        return false;
                     }
                 }
                 Seg::Param(p) => {
                     if part.is_empty() {
-                        return None;
+                        return false;
                     }
-                    params.insert(p.clone(), (*part).to_string());
+                    params.insert(p.clone(), part.to_string());
                 }
             }
         }
-        Some(params)
+        parts.next().is_none()
     }
 
-    pub fn dispatch(&self, req: &Request) -> Response {
+    /// Dispatch a request, filling `req.params` in place for pattern routes
+    /// (no request clone on the hot path).
+    pub fn dispatch(&self, req: &mut Request) -> Response {
         if let Some(h) =
             self.exact.get(req.method.as_str()).and_then(|m| m.get(req.path.as_str()))
         {
             return h(req);
         }
         for r in &self.patterns {
-            if r.method == req.method {
-                if let Some(params) = Self::match_pattern(&r.segs, &req.path) {
-                    let mut with = req.clone();
-                    with.params = params;
-                    return (r.handler)(&with);
-                }
+            if r.method == req.method
+                && Self::match_pattern_into(&r.segs, &req.path, &mut req.params)
+            {
+                return (r.handler)(req);
             }
         }
         // the path exists under another method → 405, not 404
@@ -232,7 +274,8 @@ impl Router {
             .iter()
             .any(|(m, routes)| *m != req.method && routes.contains_key(req.path.as_str()))
             || self.patterns.iter().any(|r| {
-                r.method != req.method && Self::match_pattern(&r.segs, &req.path).is_some()
+                r.method != req.method
+                    && Self::match_pattern_into(&r.segs, &req.path, &mut req.params)
             });
         if other_method {
             return Response::method_not_allowed();
@@ -241,56 +284,217 @@ impl Router {
     }
 }
 
-enum ParseError {
-    Io(std::io::Error),
-    /// declared Content-Length above `MAX_BODY_BYTES`
-    TooLarge(usize),
+/// Per-connection state machine: accumulate input, carve complete requests
+/// off the front (pipelining-capable), queue encoded responses, flush with
+/// partial-write tracking. Everything non-blocking; the worker loop drives
+/// `pump` on readiness.
+struct Conn {
+    stream: TcpStream,
+    /// unparsed input bytes
+    buf: Vec<u8>,
+    /// resume offset for the header-terminator scan (avoids rescanning)
+    scan_from: usize,
+    /// encoded, not-yet-flushed response bytes
+    out: Vec<u8>,
+    out_pos: usize,
+    /// close once `out` is flushed (Connection: close, HTTP/1.0, 413, 400)
+    close_after: bool,
+    /// peer shut down its write side
+    eof: bool,
+    last_activity: Instant,
 }
 
-impl From<std::io::Error> for ParseError {
-    fn from(e: std::io::Error) -> Self {
-        ParseError::Io(e)
+impl Conn {
+    fn new(stream: TcpStream) -> std::io::Result<Conn> {
+        stream.set_nonblocking(true)?;
+        let _ = stream.set_nodelay(true);
+        Ok(Conn {
+            stream,
+            buf: Vec::new(),
+            scan_from: 0,
+            out: Vec::new(),
+            out_pos: 0,
+            close_after: false,
+            eof: false,
+            last_activity: Instant::now(),
+        })
+    }
+
+    /// A request or response is mid-flight (used to decide what shutdown
+    /// drain must wait for; idle keep-alive connections are simply closed).
+    fn has_pending(&self) -> bool {
+        !self.buf.is_empty() || self.out_pos < self.out.len()
+    }
+
+    /// One readiness turn: read what's available, serve complete requests,
+    /// flush what fits. Returns false when the connection should be dropped.
+    fn pump(&mut self, router: &Router, req: &mut Request, now: Instant, progress: &mut bool) -> bool {
+        // ---- read ----
+        if !self.close_after {
+            let mut tmp = [0u8; 8192];
+            loop {
+                match self.stream.read(&mut tmp) {
+                    Ok(0) => {
+                        self.eof = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        self.buf.extend_from_slice(&tmp[..n]);
+                        self.last_activity = now;
+                        *progress = true;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => return false,
+                }
+            }
+            // ---- parse + serve as many complete requests as buffered ----
+            while !self.close_after {
+                match self.try_take_request(req) {
+                    TakeOutcome::Ready { close } => {
+                        let resp = router.dispatch(req);
+                        resp.encode_into(close, &mut self.out);
+                        if close {
+                            self.close_after = true;
+                        }
+                        self.last_activity = now;
+                        *progress = true;
+                    }
+                    TakeOutcome::Incomplete => {
+                        if self.eof && !self.buf.is_empty() {
+                            // peer hung up mid-request
+                            Response::bad_request("truncated request\n")
+                                .encode_into(true, &mut self.out);
+                            self.close_after = true;
+                            self.buf.clear();
+                        }
+                        break;
+                    }
+                    TakeOutcome::Reject(resp) => {
+                        resp.encode_into(true, &mut self.out);
+                        self.close_after = true;
+                        self.buf.clear();
+                    }
+                }
+            }
+        }
+        // ---- write ----
+        while self.out_pos < self.out.len() {
+            match self.stream.write(&self.out[self.out_pos..]) {
+                Ok(0) => return false,
+                Ok(n) => {
+                    self.out_pos += n;
+                    self.last_activity = now;
+                    *progress = true;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+        }
+        if self.out_pos >= self.out.len() {
+            self.out.clear();
+            self.out_pos = 0;
+            if self.close_after {
+                return false;
+            }
+        }
+        if self.eof && self.buf.is_empty() && self.out.is_empty() {
+            return false;
+        }
+        now.duration_since(self.last_activity) <= IDLE_TIMEOUT
+    }
+
+    /// Try to carve one complete request off the front of `buf` into `req`
+    /// (fields refilled in place — steady state allocates nothing).
+    fn try_take_request(&mut self, req: &mut Request) -> TakeOutcome {
+        let Some(body_start) = find_header_end(&self.buf, self.scan_from) else {
+            if self.buf.len() > MAX_HEADER_BYTES {
+                return TakeOutcome::Reject(Response::bad_request("header block too large\n"));
+            }
+            self.scan_from = self.buf.len().saturating_sub(3);
+            return TakeOutcome::Incomplete;
+        };
+        let Ok(head) = std::str::from_utf8(&self.buf[..body_start]) else {
+            return TakeOutcome::Reject(Response::bad_request("invalid utf-8 in headers\n"));
+        };
+        let mut lines = head.split('\n').map(|l| l.trim_end_matches('\r'));
+        let request_line = lines.next().unwrap_or("");
+        let mut parts = request_line.split_whitespace();
+        let method = parts.next().unwrap_or("");
+        let target = parts.next().unwrap_or("/");
+        let version = parts.next().unwrap_or("HTTP/1.1");
+        let mut content_length = 0usize;
+        // HTTP/1.0 defaults to close unless keep-alive is asked for
+        let mut close = version == "HTTP/1.0";
+        for line in lines {
+            if let Some((name, value)) = line.split_once(':') {
+                if name.eq_ignore_ascii_case("content-length") {
+                    content_length = value.trim().parse().unwrap_or(0);
+                } else if name.eq_ignore_ascii_case("connection") {
+                    let v = value.trim();
+                    if v.eq_ignore_ascii_case("close") {
+                        close = true;
+                    } else if v.eq_ignore_ascii_case("keep-alive") {
+                        close = false;
+                    }
+                }
+            }
+        }
+        if content_length > MAX_BODY_BYTES {
+            return TakeOutcome::Reject(Response::payload_too_large(content_length));
+        }
+        let total = body_start + content_length;
+        if self.buf.len() < total {
+            return TakeOutcome::Incomplete;
+        }
+        req.method.clear();
+        req.method.push_str(method);
+        let (path, query) = match target.split_once('?') {
+            Some((p, q)) => (p, q),
+            None => (target, ""),
+        };
+        req.path.clear();
+        req.path.push_str(path);
+        req.query.clear();
+        req.query.push_str(query);
+        req.params.clear();
+        req.body.clear();
+        match std::str::from_utf8(&self.buf[body_start..total]) {
+            Ok(s) => req.body.push_str(s),
+            Err(_) => req
+                .body
+                .push_str(&String::from_utf8_lossy(&self.buf[body_start..total])),
+        }
+        self.buf.drain(..total);
+        self.scan_from = 0;
+        TakeOutcome::Ready { close }
     }
 }
 
-fn parse_request(stream: &mut TcpStream) -> Result<Request, ParseError> {
-    let mut reader = BufReader::new(stream.try_clone().map_err(ParseError::Io)?);
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
-    let mut parts = line.split_whitespace();
-    let method = parts.next().unwrap_or("").to_string();
-    let target = parts.next().unwrap_or("/").to_string();
-    let (path, query) = match target.split_once('?') {
-        Some((p, q)) => (p.to_string(), q.to_string()),
-        None => (target, String::new()),
-    };
-    // headers
-    let mut content_length = 0usize;
-    loop {
-        let mut h = String::new();
-        reader.read_line(&mut h)?;
-        let h = h.trim_end();
-        if h.is_empty() {
-            break;
+enum TakeOutcome {
+    Ready { close: bool },
+    Incomplete,
+    Reject(Response),
+}
+
+/// Find the end of the header block (index just past the blank line).
+/// Accepts both CRLF and bare-LF line endings, like the BufReader-based
+/// parser this replaces.
+fn find_header_end(buf: &[u8], from: usize) -> Option<usize> {
+    let mut i = from;
+    while i < buf.len() {
+        if buf[i] == b'\n' {
+            if buf.get(i + 1) == Some(&b'\n') {
+                return Some(i + 2);
+            }
+            if buf.get(i + 1) == Some(&b'\r') && buf.get(i + 2) == Some(&b'\n') {
+                return Some(i + 3);
+            }
         }
-        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
-            content_length = v.trim().parse().unwrap_or(0);
-        }
+        i += 1;
     }
-    if content_length > MAX_BODY_BYTES {
-        return Err(ParseError::TooLarge(content_length));
-    }
-    let mut body = vec![0u8; content_length];
-    if content_length > 0 {
-        reader.read_exact(&mut body)?;
-    }
-    Ok(Request {
-        method,
-        path,
-        query,
-        body: String::from_utf8_lossy(&body).into_owned(),
-        params: HashMap::new(),
-    })
+    None
 }
 
 /// Running server handle.
@@ -307,50 +511,40 @@ impl HttpServer {
     pub fn start(addr: &str, router: Router, workers: usize) -> std::io::Result<HttpServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
-        let (tx, rx) = mpsc::channel::<TcpStream>();
-        let rx = Arc::new(Mutex::new(rx));
         let router = Arc::new(router);
-        // worker pool
-        let mut worker_threads = Vec::with_capacity(workers.max(1));
-        for _ in 0..workers.max(1) {
-            let rx = rx.clone();
+        let n = workers.max(1);
+        let mut txs = Vec::with_capacity(n);
+        let mut worker_threads = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = mpsc::channel::<TcpStream>();
+            txs.push(tx);
             let router = router.clone();
-            worker_threads.push(std::thread::spawn(move || loop {
-                let stream = { rx.lock().unwrap().recv() };
-                match stream {
-                    Ok(mut s) => {
-                        let resp = match parse_request(&mut s) {
-                            Ok(req) => router.dispatch(&req),
-                            Err(ParseError::TooLarge(n)) => Response::payload_too_large(n),
-                            Err(ParseError::Io(e)) => {
-                                Response::bad_request(format!("parse error: {e}\n"))
-                            }
-                        };
-                        let _ = resp.write_to(&mut s);
-                    }
-                    Err(_) => break, // channel closed → shut down
-                }
-            }));
+            worker_threads.push(std::thread::spawn(move || worker_loop(rx, &router)));
         }
+        let stop2 = stop.clone();
         let accept_thread = std::thread::spawn(move || {
-            while !stop2.load(Ordering::Relaxed) {
-                match listener.accept() {
-                    Ok((s, _)) => {
-                        let _ = s.set_nonblocking(false);
-                        if tx.send(s).is_err() {
+            // Blocking accept: zero CPU while idle. `shutdown` wakes this
+            // thread with a loopback connection after setting the stop flag.
+            let mut next = 0usize;
+            for res in listener.incoming() {
+                if stop2.load(Ordering::Relaxed) {
+                    break;
+                }
+                match res {
+                    Ok(s) => {
+                        if txs[next % txs.len()].send(s).is_err() {
                             break;
                         }
+                        next += 1;
                     }
-                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    Err(_) => {
+                        // transient accept failure (EMFILE etc.): back off
+                        std::thread::sleep(Duration::from_millis(1));
                     }
-                    Err(_) => break,
                 }
             }
-            drop(tx);
+            // txs drop here → workers drain in-flight work and exit
         });
         Ok(HttpServer {
             addr: local,
@@ -360,10 +554,13 @@ impl HttpServer {
         })
     }
 
-    /// Stop accepting, then join the accept thread *and* every worker (the
-    /// accept thread dropping the channel sender is what unblocks workers).
+    /// Stop accepting, then join the accept thread *and* every worker.
+    /// Event-driven: the accept thread is woken by a loopback connection,
+    /// the workers by their channel disconnecting; in-flight requests get a
+    /// short drain grace, idle keep-alive connections are closed.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(self.addr); // wake the blocking accept
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
@@ -376,10 +573,174 @@ impl HttpServer {
 impl Drop for HttpServer {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(self.addr);
     }
 }
 
-/// Tiny client helper (tests, CLI health checks and the `opd apply` client).
+/// Worker event loop: block on the intake channel while no connections are
+/// held (idle = no CPU); with live connections, sweep them for readiness and
+/// park briefly (escalating up to 1 ms) when nothing moved.
+fn worker_loop(rx: mpsc::Receiver<TcpStream>, router: &Router) {
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut req = Request::empty();
+    let mut backoff_us: u64 = 0;
+    let mut draining_since: Option<Instant> = None;
+    loop {
+        // intake
+        if conns.is_empty() {
+            if draining_since.is_some() {
+                return;
+            }
+            match rx.recv() {
+                Ok(s) => add_conn(&mut conns, s),
+                Err(_) => return,
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(s) => add_conn(&mut conns, s),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    draining_since.get_or_insert_with(Instant::now);
+                    break;
+                }
+            }
+        }
+        // readiness sweep
+        let mut progress = false;
+        let now = Instant::now();
+        conns.retain_mut(|c| c.pump(router, &mut req, now, &mut progress));
+        if let Some(t0) = draining_since {
+            conns.retain(Conn::has_pending);
+            if conns.is_empty() || t0.elapsed() > DRAIN_GRACE {
+                return;
+            }
+        }
+        if conns.is_empty() {
+            continue;
+        }
+        if progress {
+            backoff_us = 0;
+            continue;
+        }
+        backoff_us = (backoff_us.max(25) * 2).min(1000);
+        if draining_since.is_some() {
+            std::thread::sleep(Duration::from_micros(backoff_us));
+        } else {
+            match rx.recv_timeout(Duration::from_micros(backoff_us)) {
+                Ok(s) => add_conn(&mut conns, s),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    draining_since.get_or_insert_with(Instant::now);
+                }
+            }
+        }
+    }
+}
+
+fn add_conn(conns: &mut Vec<Conn>, stream: TcpStream) {
+    let Ok(mut c) = Conn::new(stream) else { return };
+    if conns.len() >= MAX_CONNS_PER_WORKER {
+        Response::with_status(503, "connection limit reached\n").encode_into(true, &mut c.out);
+        c.close_after = true;
+    }
+    conns.push(c);
+}
+
+/// Keep-alive HTTP/1.1 client: one blocking connection, many requests.
+/// Responses are framed by Content-Length (which this server always sends),
+/// so the connection stays open between calls — the hot-path client for the
+/// bulk apply CLI, the many-tenant e2e test, and perf_serve.
+pub struct HttpClient {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl HttpClient {
+    pub fn connect(addr: &std::net::SocketAddr) -> std::io::Result<HttpClient> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(HttpClient { stream, buf: Vec::new() })
+    }
+
+    /// One request/response exchange on the persistent connection.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> std::io::Result<(u16, String)> {
+        let body = body.unwrap_or("");
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\n\r\n",
+            body.len()
+        );
+        self.stream.write_all(head.as_bytes())?;
+        self.stream.write_all(body.as_bytes())?;
+        // read the response: headers, then exactly Content-Length body bytes
+        let mut tmp = [0u8; 8192];
+        let header_end = loop {
+            if let Some(e) = find_header_end(&self.buf, 0) {
+                break e;
+            }
+            let n = self.stream.read(&mut tmp)?;
+            if n == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "connection closed before response headers",
+                ));
+            }
+            self.buf.extend_from_slice(&tmp[..n]);
+        };
+        let head_text = String::from_utf8_lossy(&self.buf[..header_end]).into_owned();
+        let status: u16 = head_text
+            .split_whitespace()
+            .nth(1)
+            .and_then(|x| x.parse().ok())
+            .unwrap_or(0);
+        let mut content_length = 0usize;
+        for line in head_text.split('\n').map(|l| l.trim_end_matches('\r')) {
+            if let Some((name, value)) = line.split_once(':') {
+                if name.eq_ignore_ascii_case("content-length") {
+                    content_length = value.trim().parse().unwrap_or(0);
+                }
+            }
+        }
+        let total = header_end + content_length;
+        while self.buf.len() < total {
+            let n = self.stream.read(&mut tmp)?;
+            if n == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "connection closed mid-body",
+                ));
+            }
+            self.buf.extend_from_slice(&tmp[..n]);
+        }
+        let resp_body = String::from_utf8_lossy(&self.buf[header_end..total]).into_owned();
+        self.buf.drain(..total);
+        Ok((status, resp_body))
+    }
+
+    pub fn get(&mut self, path: &str) -> std::io::Result<(u16, String)> {
+        self.request("GET", path, None)
+    }
+
+    pub fn post(&mut self, path: &str, body: &str) -> std::io::Result<(u16, String)> {
+        self.request("POST", path, Some(body))
+    }
+
+    pub fn put(&mut self, path: &str, body: &str) -> std::io::Result<(u16, String)> {
+        self.request("PUT", path, Some(body))
+    }
+
+    pub fn delete(&mut self, path: &str) -> std::io::Result<(u16, String)> {
+        self.request("DELETE", path, None)
+    }
+}
+
+/// Tiny one-shot client helper (tests, CLI health checks and the `opd apply`
+/// client): Connection: close, reads to EOF.
 pub fn http_request(
     addr: &std::net::SocketAddr,
     method: &str,
@@ -552,6 +913,77 @@ mod tests {
         assert_eq!((code, body.as_str()), (201, "{\"id\":\"42\"}"));
         let (code, body) = http_delete(&server.addr, "/thing/42").unwrap();
         assert_eq!((code, body.as_str()), (200, "42"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn keep_alive_connection_serves_many_requests() {
+        let mut router = Router::new();
+        router.get("/n/{i}", |req| Response::ok(req.param("i").to_string()));
+        router.post("/echo", |req| Response::ok(req.body.clone()));
+        let server = HttpServer::start("127.0.0.1:0", router, 2).unwrap();
+        let mut client = HttpClient::connect(&server.addr).unwrap();
+        for i in 0..100 {
+            let (code, body) = client.get(&format!("/n/{i}")).unwrap();
+            assert_eq!((code, body.as_str()), (200, format!("{i}").as_str()));
+            let payload = format!("payload-{i}");
+            let (code, body) = client.post("/echo", &payload).unwrap();
+            assert_eq!((code, body), (200, payload));
+        }
+        // the one-shot close-mode client still works alongside
+        let (code, _) = http_get(&server.addr, "/n/7").unwrap();
+        assert_eq!(code, 200);
+        server.shutdown();
+    }
+
+    #[test]
+    fn pipelined_requests_are_served_in_order() {
+        let mut router = Router::new();
+        router.get("/a", |_| Response::ok("first"));
+        router.get("/b", |_| Response::ok("second"));
+        let server = HttpServer::start("127.0.0.1:0", router, 1).unwrap();
+        let mut s = TcpStream::connect(server.addr).unwrap();
+        s.write_all(
+            b"GET /a HTTP/1.1\r\nHost: x\r\n\r\nGET /b HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n",
+        )
+        .unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        let first = buf.find("first").expect("first response present");
+        let second = buf.find("second").expect("second response present");
+        assert!(first < second, "responses out of order: {buf}");
+        assert_eq!(buf.matches("HTTP/1.1 200").count(), 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_returns_with_idle_keepalive_connection_open() {
+        let mut router = Router::new();
+        router.get("/ping", |_| Response::ok("pong"));
+        let server = HttpServer::start("127.0.0.1:0", router, 2).unwrap();
+        let mut client = HttpClient::connect(&server.addr).unwrap();
+        let (code, _) = client.get("/ping").unwrap();
+        assert_eq!(code, 200);
+        // the connection stays open and idle; shutdown must not hang on it
+        let t0 = Instant::now();
+        server.shutdown();
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "shutdown hung on an idle keep-alive connection"
+        );
+    }
+
+    #[test]
+    fn http10_defaults_to_close() {
+        let mut router = Router::new();
+        router.get("/ping", |_| Response::ok("pong"));
+        let server = HttpServer::start("127.0.0.1:0", router, 1).unwrap();
+        let mut s = TcpStream::connect(server.addr).unwrap();
+        s.write_all(b"GET /ping HTTP/1.0\r\nHost: x\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap(); // EOF proves the server closed
+        assert!(buf.contains("HTTP/1.1 200"), "{buf}");
+        assert!(buf.to_ascii_lowercase().contains("connection: close"), "{buf}");
         server.shutdown();
     }
 }

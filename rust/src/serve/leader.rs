@@ -17,7 +17,7 @@ use crate::serve::api::{task_config_json, ApiError, ControlMsg, ControlRequest, 
 use crate::serve::ControlPlane;
 use crate::sim::env::LoadSource;
 use crate::sim::{MultiEnv, Tenant, TenantStatus};
-use crate::util::json::Json;
+use crate::util::json::{write_num, write_str, Json};
 use crate::workload::predictor::{LoadPredictor, MovingMaxPredictor};
 use crate::workload::WorkloadGen;
 
@@ -43,6 +43,12 @@ impl TenantFactory {
         }
     }
 }
+
+/// Per-pipeline gauges and series are emitted only up to this fleet size.
+/// Past it the label cardinality (3 gauges + 4 series per tenant) would
+/// swamp both the scrape payload and the per-tick publish cost, so large
+/// fleets keep the aggregate signals only (DESIGN.md §12).
+pub const PER_TENANT_TELEMETRY_MAX: usize = 256;
 
 /// JSON view of one tenant status (shared by /v1 responses and /state).
 pub fn status_json(s: &TenantStatus) -> Json {
@@ -70,6 +76,64 @@ pub fn status_json(s: &TenantStatus) -> Json {
         )
 }
 
+/// Streamed equivalent of [`status_json`] — identical field set and number
+/// formatting — for the per-tick /state hot path.
+fn write_status(buf: &mut String, s: &TenantStatus) {
+    buf.push_str("{\"name\":");
+    write_str(buf, &s.name);
+    buf.push_str(",\"pipeline\":");
+    write_str(buf, &s.pipeline);
+    buf.push_str(",\"agent\":");
+    write_str(buf, &s.agent);
+    buf.push_str(",\"generation\":");
+    write_num(buf, s.generation as f64);
+    buf.push_str(",\"adapt_interval_secs\":");
+    write_num(buf, s.adapt_interval_secs as f64);
+    buf.push_str(",\"load_now\":");
+    write_num(buf, s.load_now);
+    buf.push_str(",\"cores\":");
+    write_num(buf, s.cores);
+    buf.push_str(",\"avg_qos\":");
+    write_num(buf, s.avg_qos);
+    buf.push_str(",\"avg_cost\":");
+    write_num(buf, s.avg_cost);
+    buf.push_str(",\"last_qos\":");
+    write_num(buf, s.last_qos);
+    buf.push_str(",\"last_cost\":");
+    write_num(buf, s.last_cost);
+    buf.push_str(",\"load_pred\":");
+    write_num(buf, s.load_pred);
+    buf.push_str(",\"decisions\":");
+    write_num(buf, s.decisions as f64);
+    buf.push_str(",\"clamped\":");
+    write_num(buf, s.clamped as f64);
+    buf.push_str(",\"restarts\":");
+    write_num(buf, s.restarts as f64);
+    buf.push_str(",\"last_decision_secs\":");
+    write_num(buf, s.last_decision_secs);
+    buf.push_str(",\"config\":[");
+    for (i, c) in s.config.iter().enumerate() {
+        if i > 0 {
+            buf.push(',');
+        }
+        buf.push_str("{\"variant\":");
+        write_num(buf, c.variant as f64);
+        buf.push_str(",\"replicas\":");
+        write_num(buf, c.replicas as f64);
+        buf.push_str(",\"batch\":");
+        write_num(buf, c.batch() as f64);
+        buf.push('}');
+    }
+    buf.push_str("],\"ready\":[");
+    for (i, r) in s.ready.iter().enumerate() {
+        if i > 0 {
+            buf.push(',');
+        }
+        write_num(buf, *r as f64);
+    }
+    buf.push_str("]}");
+}
+
 /// The leader process state.
 pub struct Leader {
     pub env: MultiEnv,
@@ -82,8 +146,12 @@ pub struct Leader {
     pub realtime: bool,
     /// stop once simulated time reaches this (None → run until shutdown)
     pub max_secs: Option<f64>,
-    /// per-tenant decision counts already published (for counter deltas)
-    published_decisions: std::collections::BTreeMap<String, usize>,
+    /// per-tenant decision counts already published (for counter deltas),
+    /// tagged with the last publish epoch that saw the tenant — stale rows
+    /// are swept only when tenants actually disappeared, replacing the old
+    /// per-tick O(tenants²) retain scan
+    published_decisions: std::collections::BTreeMap<String, (u64, usize)>,
+    publish_epoch: u64,
     /// batched-decision totals already published (for counter deltas)
     published_batched: (usize, usize),
     /// batched-prediction totals already published (for counter deltas)
@@ -98,6 +166,9 @@ pub struct Leader {
     /// publish-tick scratch, reused every second (telemetry hot loop)
     status_scratch: Vec<TenantStatus>,
     key_buf: String,
+    /// reused /state render buffer — the snapshot is streamed as compact
+    /// JSON instead of built as a `Json` tree (DESIGN.md §12)
+    state_buf: String,
 }
 
 impl Leader {
@@ -119,6 +190,7 @@ impl Leader {
                 realtime: false,
                 max_secs: None,
                 published_decisions: std::collections::BTreeMap::new(),
+                publish_epoch: 0,
                 published_batched: (0, 0),
                 published_batched_pred: (0, 0),
                 online: None,
@@ -126,6 +198,7 @@ impl Leader {
                 latency_scratch: Vec::new(),
                 status_scratch: Vec::new(),
                 key_buf: String::new(),
+                state_buf: String::new(),
             },
             tx,
         )
@@ -288,6 +361,9 @@ impl Leader {
         self.env.statuses_into(&mut self.status_scratch);
         let statuses = std::mem::take(&mut self.status_scratch);
         let m = &self.cp.metrics;
+        self.publish_epoch += 1;
+        let epoch = self.publish_epoch;
+        let per_tenant = statuses.len() <= PER_TENANT_TELEMETRY_MAX;
         let mut total_load = 0.0;
         let mut total_pred = 0.0;
         let mut qos_sum = 0.0;
@@ -298,27 +374,43 @@ impl Leader {
             self.cp.series.record(key_buf, v);
         };
         for s in &statuses {
-            m.set_gauge("opd_qos", &[("pipeline", s.name.as_str())], s.last_qos);
-            m.set_gauge("opd_cost_cores", &[("pipeline", s.name.as_str())], s.last_cost);
-            m.set_gauge("opd_load", &[("pipeline", s.name.as_str())], s.load_now);
-            record_keyed(&mut self.key_buf, "load", &s.name, s.load_now);
-            record_keyed(&mut self.key_buf, "load_pred", &s.name, s.load_pred);
-            record_keyed(&mut self.key_buf, "qos", &s.name, s.last_qos);
-            record_keyed(&mut self.key_buf, "cost", &s.name, s.last_cost);
+            if per_tenant {
+                m.set_gauge("opd_qos", &[("pipeline", s.name.as_str())], s.last_qos);
+                m.set_gauge("opd_cost_cores", &[("pipeline", s.name.as_str())], s.last_cost);
+                m.set_gauge("opd_load", &[("pipeline", s.name.as_str())], s.load_now);
+                record_keyed(&mut self.key_buf, "load", &s.name, s.load_now);
+                record_keyed(&mut self.key_buf, "load_pred", &s.name, s.load_pred);
+                record_keyed(&mut self.key_buf, "qos", &s.name, s.last_qos);
+                record_keyed(&mut self.key_buf, "cost", &s.name, s.last_cost);
+            }
             total_load += s.load_now;
             total_pred += s.load_pred;
             qos_sum += s.last_qos;
             cost_sum += s.last_cost;
             // decision counter/timing: publish only the delta since the last
             // tick (a replaced tenant resets its count — just resync then)
-            let seen = self.published_decisions.get(&s.name).copied().unwrap_or(0);
-            if s.decisions > seen {
-                m.inc("opd_decisions_total", &[], (s.decisions - seen) as f64);
-                m.observe("opd_decision_seconds", &[], s.last_decision_secs);
+            match self.published_decisions.get_mut(&s.name) {
+                Some(e) => {
+                    if s.decisions > e.1 {
+                        m.inc("opd_decisions_total", &[], (s.decisions - e.1) as f64);
+                        m.observe("opd_decision_seconds", &[], s.last_decision_secs);
+                    }
+                    *e = (epoch, s.decisions);
+                }
+                None => {
+                    if s.decisions > 0 {
+                        m.inc("opd_decisions_total", &[], s.decisions as f64);
+                        m.observe("opd_decision_seconds", &[], s.last_decision_secs);
+                    }
+                    self.published_decisions.insert(s.name.clone(), (epoch, s.decisions));
+                }
             }
-            self.published_decisions.insert(s.name.clone(), s.decisions);
         }
-        self.published_decisions.retain(|name, _| statuses.iter().any(|s| &s.name == name));
+        // sweep rows whose tenant disappeared — only when one actually did,
+        // so the steady-state tick skips the scan entirely
+        if self.published_decisions.len() > statuses.len() {
+            self.published_decisions.retain(|_, (ep, _)| *ep == epoch);
+        }
         let n = statuses.len().max(1) as f64;
         self.cp.series.record("load", total_load);
         self.cp.series.record("load_pred", total_pred);
@@ -383,14 +475,68 @@ impl Leader {
                 self.cp.series.record("online_update_secs", secs);
             }
         }
-        self.cp.publish_state(
-            Json::obj()
-                .set("t", self.env.now)
-                .set("pipelines", Json::Arr(statuses.iter().map(status_json).collect()))
-                .set("cluster", self.cluster_json()),
-        );
+        self.write_state(&statuses);
         // hand the snapshot buffer back for the next tick
         self.status_scratch = statuses;
+    }
+
+    /// Render the /state snapshot as compact JSON into the reused buffer
+    /// and publish it by reference — a `Json` tree allocates per node,
+    /// which at thousands of tenants dominated the tick (DESIGN.md §12).
+    /// Shape and values mirror `status_json`/`cluster_json` exactly.
+    fn write_state(&mut self, statuses: &[TenantStatus]) {
+        let buf = &mut self.state_buf;
+        buf.clear();
+        buf.push_str("{\"t\":");
+        write_num(buf, self.env.now);
+        buf.push_str(",\"pipelines\":[");
+        for (i, s) in statuses.iter().enumerate() {
+            if i > 0 {
+                buf.push(',');
+            }
+            write_status(buf, s);
+        }
+        buf.push_str("],\"cluster\":{\"now\":");
+        let topo = &self.env.store.topo;
+        write_num(buf, self.env.now);
+        buf.push_str(",\"capacity\":");
+        write_num(buf, topo.capacity());
+        buf.push_str(",\"used\":");
+        write_num(buf, topo.used());
+        buf.push_str(",\"free\":");
+        write_num(buf, topo.free());
+        buf.push_str(",\"policy_generation\":");
+        write_num(buf, self.env.policy_generation as f64);
+        buf.push_str(",\"nodes\":[");
+        for (i, node) in topo.nodes.iter().enumerate() {
+            if i > 0 {
+                buf.push(',');
+            }
+            buf.push_str("{\"name\":");
+            write_str(buf, &node.name);
+            buf.push_str(",\"cores_total\":");
+            write_num(buf, node.cores_total);
+            buf.push_str(",\"cores_used\":");
+            write_num(buf, node.cores_used);
+            buf.push('}');
+        }
+        buf.push_str("],\"pipelines\":[");
+        for (i, s) in statuses.iter().enumerate() {
+            if i > 0 {
+                buf.push(',');
+            }
+            buf.push_str("{\"name\":");
+            write_str(buf, &s.name);
+            buf.push_str(",\"cores\":");
+            write_num(buf, s.cores);
+            buf.push_str(",\"generation\":");
+            write_num(buf, s.generation as f64);
+            buf.push_str(",\"agent\":");
+            write_str(buf, &s.agent);
+            buf.push('}');
+        }
+        buf.push_str("]}}");
+        self.cp.publish_state_str(buf);
     }
 
     /// Main loop. Returns when a shutdown command arrives, every command
@@ -545,6 +691,54 @@ mod tests {
         assert_eq!(code, 200);
         let err = l.handle(ControlRequest::DeletePipeline("a".into())).unwrap_err();
         assert_eq!(err.status, 404);
+    }
+
+    #[test]
+    fn streamed_state_matches_the_tree_renderer() {
+        let (mut l, _tx) = leader();
+        l.deploy(&spec("a", "P1", AgentKind::Greedy)).unwrap();
+        l.deploy(&spec("b", "P2", AgentKind::Random)).unwrap();
+        for _ in 0..12 {
+            l.env.tick();
+        }
+        l.publish();
+        let state = l.cp.state_json();
+        let j = Json::parse(&state).expect("streamed /state is valid JSON");
+        assert_eq!(j.req_f64("t").unwrap(), l.env.now);
+        let pipes = j.get("pipelines").unwrap().as_arr().unwrap();
+        assert_eq!(pipes.len(), 2);
+        // field-identical to the status_json tree view
+        let tree = status_json(&l.env.status("a").unwrap());
+        let streamed = pipes.iter().find(|p| p.req_str("name").unwrap() == "a").unwrap();
+        assert_eq!(streamed.to_string(), tree.to_string());
+        let cluster = j.get("cluster").unwrap();
+        assert_eq!(cluster.req_f64("capacity").unwrap(), 30.0);
+        assert_eq!(cluster.get("pipelines").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(cluster.get("nodes").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn per_tenant_telemetry_gates_above_the_cardinality_cap() {
+        let (mut l, _tx) = Leader::new(
+            Arc::new(ControlPlane::new()),
+            ClusterTopology::uniform(64, 64.0),
+            1.0,
+            TenantFactory::native(),
+        );
+        for i in 0..=PER_TENANT_TELEMETRY_MAX {
+            l.deploy(&spec(&format!("t{i:04}"), "P1", AgentKind::Greedy)).unwrap();
+        }
+        l.env.tick();
+        l.publish();
+        let text = l.cp.metrics.expose();
+        assert!(!text.contains("opd_qos{"), "per-tenant gauges gated past the cap");
+        assert!(text.contains("opd_pipelines"), "aggregate signals stay");
+        // shrink below the cap: per-tenant signals resume
+        assert!(l.env.remove("t0000"));
+        l.env.tick();
+        l.publish();
+        let text = l.cp.metrics.expose();
+        assert!(text.contains("opd_qos{"), "per-tenant gauges resume under the cap");
     }
 
     #[test]

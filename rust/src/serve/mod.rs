@@ -16,8 +16,8 @@ pub use api::{
     task_config_json, v1_router, ApiError, ControlMsg, ControlReply, ControlRequest, DeploySpec,
 };
 pub use http::{
-    http_delete, http_get, http_post, http_put, http_request, HttpServer, Request, Response,
-    Router, MAX_BODY_BYTES,
+    http_delete, http_get, http_post, http_put, http_request, HttpClient, HttpServer, Request,
+    Response, Router, MAX_BODY_BYTES,
 };
 pub use leader::{status_json, Leader, TenantFactory};
 
@@ -28,7 +28,9 @@ use crate::util::json::Json;
 pub struct ControlPlane {
     pub metrics: Arc<MetricsRegistry>,
     pub series: Arc<TimeSeriesStore>,
-    state: Mutex<Json>,
+    /// pre-rendered /state JSON; a String (not a `Json` tree) so the
+    /// leader's per-tick publish reuses the buffer capacity (DESIGN.md §12)
+    state: Mutex<String>,
 }
 
 impl Default for ControlPlane {
@@ -42,17 +44,27 @@ impl ControlPlane {
         Self {
             metrics: Arc::new(MetricsRegistry::new()),
             series: Arc::new(TimeSeriesStore::new(4096)),
-            state: Mutex::new(Json::obj()),
+            state: Mutex::new(String::from("{}")),
         }
     }
 
     /// Publish the coordinator's current view (shown at `/state`).
     pub fn publish_state(&self, state: Json) {
-        *self.state.lock().unwrap() = state;
+        let mut s = self.state.lock().unwrap();
+        s.clear();
+        state.write_compact_into(&mut s);
+    }
+
+    /// Publish a pre-rendered JSON snapshot, reusing the held buffer's
+    /// capacity — the leader's per-tick hot path (DESIGN.md §12).
+    pub fn publish_state_str(&self, state: &str) {
+        let mut s = self.state.lock().unwrap();
+        s.clear();
+        s.push_str(state);
     }
 
     pub fn state_json(&self) -> String {
-        self.state.lock().unwrap().to_pretty()
+        self.state.lock().unwrap().clone()
     }
 
     /// The classic observability routes (/metrics /state /series /healthz);

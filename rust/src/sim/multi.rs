@@ -9,7 +9,9 @@
 //! tenant plans against is W_max minus the cores other tenants hold, so the
 //! existing agents (greedy / IPA / OPD) respect shared capacity unchanged.
 
-use std::collections::BTreeMap;
+use std::cell::Cell;
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
 
 use crate::agents::Agent;
 use crate::cluster::{ApplyOutcome, ClusterTopology, DeploymentStore};
@@ -107,7 +109,9 @@ impl Tenant {
 }
 
 /// Point-in-time public view of one tenant (what the v1 API serves).
-#[derive(Clone, Debug)]
+/// `Default` gives an empty shell callers refill in place via
+/// [`MultiEnv::status_into`], so publish loops reuse buffers across ticks.
+#[derive(Clone, Debug, Default)]
 pub struct TenantStatus {
     pub name: String,
     /// catalog pipeline name (spec.name)
@@ -199,8 +203,31 @@ pub struct MultiEnv {
     obs_ready: Vec<usize>,
     obs_metrics: PipelineMetrics,
     /// leader-side observation scratch growth counter — flat after warm-up
-    /// (new GroupPrep shells + capacity growth of the obs buffers)
-    obs_grow_events: u64,
+    /// (new GroupPrep shells + capacity growth of the obs buffers and the
+    /// due-wheel/status scratch; a Cell so `&self` status fills count too)
+    obs_grow_events: Cell<u64>,
+    /// time-ordered due wheel over adaptation deadlines (DESIGN.md §12):
+    /// a min-heap of (deadline tick, tenant name) consulted at the top of
+    /// every tick, making the due scan O(due · log tenants) instead of
+    /// O(tenants). Entries are lazily invalidated — removals and redeploys
+    /// leave stale pairs behind that are dropped when popped (the live
+    /// entry is the one whose key matches the tenant's current deadline).
+    due_wheel: BinaryHeap<(Reverse<u64>, String)>,
+    /// names popped due this tick; their Strings move back into the wheel
+    /// at the new deadline, so the steady-state tick never clones a name
+    due_scratch: Vec<String>,
+    /// (fingerprint, due-index) pairs of batch-capable due tenants
+    fp_scratch: Vec<(u64, usize)>,
+    /// due-indices of the fingerprint group currently being decided
+    members_scratch: Vec<usize>,
+}
+
+/// Due-wheel bucket of an adaptation deadline: the first whole-second tick
+/// at which the old linear scan (`now + 1e-9 >= next_decision`) would have
+/// fired it. The clock only ever holds whole seconds, so comparing buckets
+/// against `now as u64` is exactly the old predicate.
+fn due_key(next_decision: f64) -> u64 {
+    (next_decision - 1e-9).ceil().max(0.0) as u64
 }
 
 impl MultiEnv {
@@ -229,7 +256,11 @@ impl MultiEnv {
             obs_current: Vec::new(),
             obs_ready: Vec::new(),
             obs_metrics: PipelineMetrics::default(),
-            obs_grow_events: 0,
+            obs_grow_events: Cell::new(0),
+            due_wheel: BinaryHeap::new(),
+            due_scratch: Vec::new(),
+            fp_scratch: Vec::new(),
+            members_scratch: Vec::new(),
         }
     }
 
@@ -276,6 +307,9 @@ impl MultiEnv {
                 }
             }
         }
+        // schedule the first adaptation on the due wheel; a replaced
+        // tenant's old entry is lazily dropped when its bucket pops
+        self.due_wheel.push((Reverse(due_key(tenant.next_decision)), tenant.name.clone()));
         self.tenants.insert(tenant.name.clone(), tenant);
         Ok(out)
     }
@@ -345,7 +379,7 @@ impl MultiEnv {
     /// Cumulative growth events of the leader-side observation scratch;
     /// flat after warm-up when the decide/tick paths are allocation-free.
     pub fn obs_grow_events(&self) -> u64 {
-        self.obs_grow_events
+        self.obs_grow_events.get()
     }
 
     /// Tick-boundary adoption (DESIGN.md §11): if the background trainer has
@@ -440,7 +474,7 @@ impl MultiEnv {
         }
         t.next_decision = now + t.adapt_interval_secs as f64;
         if obs_current.capacity() != caps.0 || obs_ready.capacity() != caps.1 {
-            *obs_grow_events += 1;
+            obs_grow_events.set(obs_grow_events.get() + 1);
         }
         harvest_online(online, online_transitions, t);
     }
@@ -455,11 +489,12 @@ impl MultiEnv {
     /// HLO-backed predictors, odd-weights members) predicts sequentially.
     /// Row-bitwise equal to the sequential path, so batching never changes
     /// a decision.
-    fn predict_group(&mut self, names: &[String]) {
+    fn predict_group(&mut self, names: &[String], members: &[usize]) {
         self.pred_windows.clear();
         self.pred_group.clear();
         let mut group_fp: Option<u64> = None;
-        for (i, name) in names.iter().enumerate() {
+        for &i in members {
+            let name = &names[i];
             let t = match self.tenants.get_mut(name) {
                 Some(t) => t,
                 None => continue,
@@ -528,15 +563,16 @@ impl MultiEnv {
     /// applies of tenants 1..k−1 within the same tick — grouped tenants plan
     /// against the snapshot; the store still clamps each apply against what
     /// is actually allocated, so shared-capacity invariants are unchanged.
-    fn decide_group(&mut self, names: &[String]) {
+    fn decide_group(&mut self, names: &[String], members: &[usize]) {
         let n_tenants = self.tenants.len();
-        self.predict_group(names);
+        self.predict_group(names, members);
         self.batch_states.clear();
         let now = self.now;
         let mut batch = 0usize;
         {
             let Self { tenants, store, preps, batch_states, obs_grow_events, .. } = self;
-            for (i, name) in names.iter().enumerate() {
+            for &i in members {
+                let name = &names[i];
                 let t = match tenants.get_mut(name) {
                     Some(t) => t,
                     None => continue,
@@ -545,7 +581,7 @@ impl MultiEnv {
                 // no per-member buffer allocations once warm)
                 if batch == preps.len() {
                     preps.push(GroupPrep::default());
-                    *obs_grow_events += 1;
+                    obs_grow_events.set(obs_grow_events.get() + 1);
                 }
                 let p = &mut preps[batch];
                 p.idx = i;
@@ -581,7 +617,7 @@ impl MultiEnv {
                 build_state_append(&obs, batch_states);
                 drop(obs);
                 if p.current.capacity() != caps.0 || p.ready.capacity() != caps.1 {
-                    *obs_grow_events += 1;
+                    obs_grow_events.set(obs_grow_events.get() + 1);
                 }
                 batch += 1;
             }
@@ -662,35 +698,87 @@ impl MultiEnv {
         // adoption happens BEFORE groups form, so a batched group never
         // mixes parameter fingerprints (DESIGN.md §11)
         self.apply_published_params();
-        let due: Vec<String> = self
-            .tenants
-            .iter()
-            .filter(|(_, t)| self.now + 1e-9 >= t.next_decision)
-            .map(|(n, _)| n.clone())
-            .collect();
+        let scratch_caps = (
+            self.due_wheel.capacity(),
+            self.due_scratch.capacity(),
+            self.fp_scratch.capacity(),
+            self.members_scratch.capacity(),
+        );
+        // pop every due deadline bucket off the wheel — O(due · log n)
+        // instead of the old O(tenants) linear scan (DESIGN.md §12)
+        let now_key = (self.now + 1e-9).floor() as u64;
+        let mut due = std::mem::take(&mut self.due_scratch);
+        due.clear();
+        while let Some((Reverse(key), _)) = self.due_wheel.peek() {
+            if *key > now_key {
+                break;
+            }
+            let (Reverse(key), name) = self.due_wheel.pop().expect("peeked above");
+            // lazy invalidation: removals and redeploys leave stale entries
+            // behind; the live one matches the tenant's current deadline
+            if self.tenants.get(&name).is_some_and(|t| due_key(t.next_decision) == key) {
+                due.push(name);
+            }
+        }
+        // restore the old scan's tenant-name order (heap pops are
+        // key-ordered) and drop same-tick duplicates from redeploys
+        due.sort_unstable();
+        due.dedup();
         if self.batching {
-            let mut groups: BTreeMap<u64, Vec<String>> = BTreeMap::new();
-            for name in due {
+            let mut pairs = std::mem::take(&mut self.fp_scratch);
+            pairs.clear();
+            for (i, name) in due.iter().enumerate() {
                 let fp = self
                     .tenants
-                    .get(&name)
+                    .get(name)
                     .and_then(|t| t.agent.batch_params().map(|(_, fp)| fp));
                 match fp {
-                    Some(fp) => groups.entry(fp).or_default().push(name),
-                    None => self.decide(&name),
+                    Some(fp) => pairs.push((fp, i)),
+                    None => self.decide(name),
                 }
             }
-            for (_, members) in groups {
+            // runs of equal fingerprint, ascending, members in name order —
+            // exactly the grouping the old per-tick BTreeMap build produced
+            pairs.sort_unstable();
+            let mut members = std::mem::take(&mut self.members_scratch);
+            let mut k = 0;
+            while k < pairs.len() {
+                let fp = pairs[k].0;
+                members.clear();
+                while k < pairs.len() && pairs[k].0 == fp {
+                    members.push(pairs[k].1);
+                    k += 1;
+                }
                 if members.len() >= 2 {
-                    self.decide_group(&members);
+                    self.decide_group(&due, &members);
                 } else {
-                    self.decide(&members[0]);
+                    self.decide(&due[members[0]]);
                 }
             }
+            self.members_scratch = members;
+            self.fp_scratch = pairs;
         } else {
-            for name in due {
-                self.decide(&name);
+            for name in &due {
+                self.decide(name);
             }
+        }
+        // reschedule: each decided tenant's name String moves back onto the
+        // wheel at its new deadline, so steady-state ticks never clone
+        for name in due.drain(..) {
+            if let Some(t) = self.tenants.get(&name) {
+                let key = due_key(t.next_decision);
+                self.due_wheel.push((Reverse(key), name));
+            }
+        }
+        self.due_scratch = due;
+        let caps_now = (
+            self.due_wheel.capacity(),
+            self.due_scratch.capacity(),
+            self.fp_scratch.capacity(),
+            self.members_scratch.capacity(),
+        );
+        if caps_now != scratch_caps {
+            self.obs_grow_events.set(self.obs_grow_events.get() + 1);
         }
         self.now += 1.0;
         let now = self.now;
@@ -727,7 +815,7 @@ impl MultiEnv {
                 t.reward_secs += 1;
             }
             if obs_current.capacity() != caps.0 || obs_ready.capacity() != caps.1 {
-                *obs_grow_events += 1;
+                obs_grow_events.set(obs_grow_events.get() + 1);
             }
         }
     }
@@ -739,28 +827,49 @@ impl MultiEnv {
     }
 
     pub fn status(&self, name: &str) -> Option<TenantStatus> {
-        let t = self.tenants.get(name)?;
+        let mut out = TenantStatus::default();
+        self.status_into(name, &mut out).then_some(out)
+    }
+
+    /// Refill a caller-owned status shell in place (strings and vectors
+    /// keep their capacity), returning false when the tenant is unknown.
+    /// The leader publishes every tenant every tick, so this path must not
+    /// allocate once the shell is warm.
+    pub fn status_into(&self, name: &str, out: &mut TenantStatus) -> bool {
+        let Some(t) = self.tenants.get(name) else { return false };
         let d = self.store.get(name);
-        Some(TenantStatus {
-            name: t.name.clone(),
-            pipeline: t.spec.name.clone(),
-            agent: t.agent.name().to_string(),
-            generation: t.generation,
-            adapt_interval_secs: t.adapt_interval_secs,
-            config: d.map(|d| d.config.clone()).unwrap_or_default(),
-            ready: self.store.ready_replicas(name, t.spec.n_tasks(), self.now),
-            cores: d.map(|d| d.allocated_cores()).unwrap_or(0.0),
-            load_now: t.last_rate,
-            load_pred: t.last_pred,
-            avg_qos: t.avg_qos(),
-            avg_cost: t.avg_cost(),
-            last_qos: t.last_qos,
-            last_cost: t.last_cost,
-            decisions: t.decisions,
-            clamped: t.clamped,
-            restarts: t.restarts,
-            last_decision_secs: t.last_decision_secs,
-        })
+        let caps = (out.name.capacity(), out.pipeline.capacity(), out.agent.capacity());
+        let vec_caps = (out.config.capacity(), out.ready.capacity());
+        out.name.clear();
+        out.name.push_str(&t.name);
+        out.pipeline.clear();
+        out.pipeline.push_str(&t.spec.name);
+        out.agent.clear();
+        out.agent.push_str(t.agent.name());
+        out.generation = t.generation;
+        out.adapt_interval_secs = t.adapt_interval_secs;
+        out.config.clear();
+        if let Some(d) = d {
+            out.config.extend_from_slice(&d.config);
+        }
+        self.store.ready_replicas_into(name, t.spec.n_tasks(), self.now, &mut out.ready);
+        out.cores = d.map(|d| d.allocated_cores()).unwrap_or(0.0);
+        out.load_now = t.last_rate;
+        out.load_pred = t.last_pred;
+        out.avg_qos = t.avg_qos();
+        out.avg_cost = t.avg_cost();
+        out.last_qos = t.last_qos;
+        out.last_cost = t.last_cost;
+        out.decisions = t.decisions;
+        out.clamped = t.clamped;
+        out.restarts = t.restarts;
+        out.last_decision_secs = t.last_decision_secs;
+        if caps != (out.name.capacity(), out.pipeline.capacity(), out.agent.capacity())
+            || vec_caps != (out.config.capacity(), out.ready.capacity())
+        {
+            self.obs_grow_events.set(self.obs_grow_events.get() + 1);
+        }
+        true
     }
 
     pub fn statuses(&self) -> Vec<TenantStatus> {
@@ -769,12 +878,21 @@ impl MultiEnv {
         out
     }
 
-    /// [`MultiEnv::statuses`] into a caller-owned buffer (cleared first) —
-    /// the leader publishes every tick, so reusing the outer vec spares a
-    /// per-second allocation ramp.
+    /// [`MultiEnv::statuses`] into a caller-owned buffer — existing shells
+    /// (and their inner strings/vectors) are refilled in place, so the
+    /// leader's per-tick publish loop stays allocation-flat once warm.
     pub fn statuses_into(&self, out: &mut Vec<TenantStatus>) {
-        out.clear();
-        out.extend(self.tenants.keys().filter_map(|n| self.status(n)));
+        let mut n = 0;
+        for name in self.tenants.keys() {
+            if n == out.len() {
+                out.push(TenantStatus::default());
+                self.obs_grow_events.set(self.obs_grow_events.get() + 1);
+            }
+            if self.status_into(name, &mut out[n]) {
+                n += 1;
+            }
+        }
+        out.truncate(n);
     }
 }
 
@@ -1146,6 +1264,84 @@ mod tests {
         let warm = env.obs_grow_events();
         env.run_for(40);
         assert_eq!(env.obs_grow_events(), warm, "no scratch growth once warm");
+    }
+
+    fn tenant_iv(
+        name: &str,
+        pipeline: &str,
+        kind: WorkloadKind,
+        seed: u64,
+        interval: usize,
+    ) -> Tenant {
+        let mut t = tenant(name, pipeline, kind, seed);
+        t.adapt_interval_secs = interval;
+        t
+    }
+
+    #[test]
+    fn due_wheel_fires_each_tenant_on_its_own_interval() {
+        let mut env = MultiEnv::new(ClusterTopology::paper_testbed(), 1.0);
+        env.deploy(tenant_iv("a", "P1", WorkloadKind::SteadyLow, 1, 1), None).unwrap();
+        env.deploy(tenant_iv("b", "P1", WorkloadKind::SteadyLow, 2, 3), None).unwrap();
+        env.deploy(tenant_iv("c", "P1", WorkloadKind::SteadyLow, 3, 7), None).unwrap();
+        env.run_for(22); // ticks fire at now = 0..=21
+        assert_eq!(env.status("a").unwrap().decisions, 21, "interval 1: due at 1..=21");
+        assert_eq!(env.status("b").unwrap().decisions, 7, "interval 3: due at 3,6,..,21");
+        assert_eq!(env.status("c").unwrap().decisions, 3, "interval 7: due at 7,14,21");
+        // redeploy with a new interval: the stale wheel entry must not
+        // double-fire, and the fresh schedule starts from now
+        env.deploy(tenant_iv("b", "P1", WorkloadKind::SteadyLow, 4, 5), None).unwrap();
+        assert_eq!(env.status("b").unwrap().decisions, 0, "stats reset on replace");
+        env.run_for(11); // now 22 → 33; decisions due at 27 and 32
+        assert_eq!(env.status("b").unwrap().decisions, 2);
+        // removal: stale wheel entries for a dropped tenant are ignored
+        assert!(env.remove("a"));
+        env.run_for(5);
+        assert!(env.status("a").is_none());
+        assert_eq!(env.status("c").unwrap().decisions, 5, "survivor keeps its cadence");
+    }
+
+    #[test]
+    fn due_wheel_and_status_publish_are_allocation_flat_at_scale() {
+        let mut env = MultiEnv::new(ClusterTopology::uniform(16, 64.0), 1.0);
+        for i in 0..48 {
+            let iv = [1, 3, 5, 7][i % 4];
+            let name = format!("t{i:03}");
+            env.deploy(tenant_iv(&name, "P1", WorkloadKind::SteadyLow, i as u64, iv), None)
+                .unwrap();
+        }
+        let mut statuses = Vec::new();
+        for _ in 0..30 {
+            env.tick();
+            env.statuses_into(&mut statuses);
+        }
+        let warm = env.obs_grow_events();
+        for _ in 0..60 {
+            env.tick();
+            env.statuses_into(&mut statuses);
+            assert_eq!(statuses.len(), 48);
+        }
+        assert_eq!(env.obs_grow_events(), warm, "no due-wheel/status growth once warm");
+    }
+
+    #[test]
+    fn status_into_refills_a_dirty_shell() {
+        let mut env = MultiEnv::new(ClusterTopology::paper_testbed(), 3.0);
+        env.deploy(tenant("longer-name", "video-analytics", WorkloadKind::SteadyHigh, 1), None)
+            .unwrap();
+        env.deploy(tenant("b", "iot-anomaly", WorkloadKind::SteadyLow, 2), None).unwrap();
+        env.run_for(15);
+        let mut shell = TenantStatus::default();
+        assert!(env.status_into("longer-name", &mut shell));
+        assert!(env.status_into("b", &mut shell), "refill over a wider status");
+        let fresh = env.status("b").unwrap();
+        assert_eq!(shell.name, fresh.name);
+        assert_eq!(shell.pipeline, fresh.pipeline);
+        assert_eq!(shell.config, fresh.config);
+        assert_eq!(shell.ready, fresh.ready);
+        assert_eq!(shell.decisions, fresh.decisions);
+        assert!((shell.cores - fresh.cores).abs() < 1e-12);
+        assert!(!env.status_into("missing", &mut shell));
     }
 
     #[test]

@@ -162,6 +162,11 @@ impl Json {
         out
     }
 
+    /// Serialize compactly into an existing buffer (no intermediate String).
+    pub fn write_compact_into(&self, out: &mut String) {
+        self.write(out, None, 0);
+    }
+
     fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
         match self {
             Json::Null => out.push_str("null"),
@@ -215,7 +220,9 @@ fn newline(out: &mut String, indent: Option<usize>, depth: usize) {
     }
 }
 
-fn write_num(out: &mut String, x: f64) {
+/// Append one JSON number token to `out` (pub so the serve path can stream
+/// `/state` into a reused buffer without building a `Json` tree first).
+pub fn write_num(out: &mut String, x: f64) {
     if x.is_nan() || x.is_infinite() {
         // JSON has no NaN/Inf; clamp like python's json with allow_nan=False
         out.push_str("null");
@@ -226,7 +233,8 @@ fn write_num(out: &mut String, x: f64) {
     }
 }
 
-fn write_str(out: &mut String, s: &str) {
+/// Append one JSON string token (quoted + escaped) to `out`.
+pub fn write_str(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
         match c {
@@ -283,6 +291,140 @@ impl From<&[f64]> for Json {
     }
 }
 
+// ----- lazy path-scanning extraction ----------------------------------------
+//
+// Hot request paths (POST /v1/pipelines, agent hot-swap, apply specs) need a
+// handful of scalar fields out of each body. Building the full `Json` tree
+// costs a BTreeMap node plus a String per key; the lazy scanner instead
+// validates the document once — the exact grammar `Json::parse` accepts, via
+// the Parser's skip_* twins — and then serves field lookups as borrowed
+// slices of the input. Anything a borrowed slice can't represent faithfully
+// (escaped strings, nested decoding, non-object top level) makes the caller
+// fall back to the full parser, so observable behaviour is identical.
+
+/// Structural validation with the exact acceptance set of `Json::parse`,
+/// without building the tree. Errors carry the same messages and positions.
+pub fn validate_json(text: &str) -> Result<(), JsonError> {
+    let mut p = Parser { b: text.as_bytes(), pos: 0 };
+    p.skip_ws();
+    p.skip_value()?;
+    p.skip_ws();
+    if p.pos != p.b.len() {
+        return Err(p.err("trailing characters"));
+    }
+    Ok(())
+}
+
+/// A validated top-level JSON object whose fields are read lazily as borrowed
+/// slices of the source text. `parse` rejects documents it cannot serve this
+/// way (invalid JSON, non-object top level, escaped keys); callers fall back
+/// to `Json::parse`, which regenerates the canonical error message, so the
+/// rejection never leaks a different error to clients.
+pub struct LazyObj<'a> {
+    text: &'a str,
+    obj_start: usize,
+}
+
+impl<'a> LazyObj<'a> {
+    pub fn parse(text: &'a str) -> Result<LazyObj<'a>, JsonError> {
+        validate_json(text)?;
+        let mut p = Parser { b: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        if p.peek() != Some(b'{') {
+            return Err(p.err("top level is not an object"));
+        }
+        let lz = LazyObj { text, obj_start: p.pos };
+        let mut plain_keys = true;
+        lz.for_each(&mut |key, _| plain_keys &= !key.contains('\\'));
+        if !plain_keys {
+            // raw-byte key comparison in get_raw would miss escaped keys
+            return Err(p.err("escaped object key"));
+        }
+        Ok(lz)
+    }
+
+    /// Walk the top-level fields, passing (raw key, raw value) slices. The
+    /// document is already validated, so scan errors are unreachable and the
+    /// walk bails out silently if one somehow occurs.
+    fn for_each(&self, f: &mut dyn FnMut(&'a str, &'a str)) {
+        let mut p = Parser { b: self.text.as_bytes(), pos: self.obj_start + 1 };
+        p.skip_ws();
+        if p.peek() == Some(b'}') {
+            return;
+        }
+        loop {
+            p.skip_ws();
+            let key_start = p.pos + 1;
+            if p.skip_string().is_err() {
+                return;
+            }
+            let key = &self.text[key_start..p.pos - 1];
+            p.skip_ws();
+            if p.expect(b':').is_err() {
+                return;
+            }
+            p.skip_ws();
+            let val_start = p.pos;
+            if p.skip_value().is_err() {
+                return;
+            }
+            f(key, &self.text[val_start..p.pos]);
+            p.skip_ws();
+            match p.bump() {
+                Some(b',') => continue,
+                _ => return, // validated: this is the closing '}'
+            }
+        }
+    }
+
+    /// Raw text slice of a top-level field's value. The last occurrence of a
+    /// duplicated key wins, matching BTreeMap insertion in the full parser.
+    pub fn get_raw(&self, key: &str) -> Option<&'a str> {
+        let mut found = None;
+        self.for_each(&mut |k, v| {
+            if k == key {
+                found = Some(v);
+            }
+        });
+        found
+    }
+
+    /// Borrowed string value. `None` if absent, not a string, or escaped —
+    /// callers that must distinguish those cases inspect `get_raw` and fall
+    /// back to the full parser.
+    pub fn get_str(&self, key: &str) -> Option<&'a str> {
+        let raw = self.get_raw(key)?;
+        if raw.starts_with('"') && !raw.contains('\\') {
+            Some(&raw[1..raw.len() - 1])
+        } else {
+            None
+        }
+    }
+
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        let raw = self.get_raw(key)?;
+        if raw.starts_with(|c: char| c == '-' || c.is_ascii_digit()) {
+            raw.parse::<f64>().ok()
+        } else {
+            None
+        }
+    }
+
+    /// Mirrors `Json::as_i64` (rejects fractional values).
+    pub fn get_i64(&self, key: &str) -> Option<i64> {
+        self.get_f64(key).filter(|x| x.fract() == 0.0).map(|x| x as i64)
+    }
+
+    /// Mirrors `Json::as_usize` (rejects negative and fractional values).
+    pub fn get_usize(&self, key: &str) -> Option<usize> {
+        self.get_f64(key).filter(|x| *x >= 0.0 && x.fract() == 0.0).map(|x| x as usize)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.get_raw(key).is_some()
+    }
+}
+
 struct Parser<'a> {
     b: &'a [u8],
     pos: usize,
@@ -336,9 +478,14 @@ impl<'a> Parser<'a> {
     }
 
     fn lit(&mut self, word: &str, val: Json) -> Result<Json, JsonError> {
+        self.skip_lit(word)?;
+        Ok(val)
+    }
+
+    fn skip_lit(&mut self, word: &str) -> Result<(), JsonError> {
         if self.b[self.pos..].starts_with(word.as_bytes()) {
             self.pos += word.len();
-            Ok(val)
+            Ok(())
         } else {
             Err(self.err(&format!("expected '{word}'")))
         }
@@ -469,6 +616,10 @@ impl<'a> Parser<'a> {
     }
 
     fn number(&mut self) -> Result<Json, JsonError> {
+        self.number_token().map(Json::Num)
+    }
+
+    fn number_token(&mut self) -> Result<f64, JsonError> {
         let start = self.pos;
         if self.peek() == Some(b'-') {
             self.pos += 1;
@@ -492,9 +643,131 @@ impl<'a> Parser<'a> {
             }
         }
         let text = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
-        text.parse::<f64>()
-            .map(Json::Num)
-            .map_err(|_| self.err("invalid number"))
+        text.parse::<f64>().map_err(|_| self.err("invalid number"))
+    }
+
+    // ----- structural skip-validation (lazy extraction) --------------------
+    //
+    // These mirror `value`/`object`/`array`/`string`/`number` byte for byte —
+    // same acceptance set, same error messages and positions — but build
+    // nothing. `skip_string` must stay in lockstep with `string`; the
+    // differential property tests (below and in tests/control_plane_api.rs)
+    // enforce that.
+
+    fn skip_value(&mut self) -> Result<(), JsonError> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.skip_object(),
+            Some(b'[') => self.skip_array(),
+            Some(b'"') => self.skip_string(),
+            Some(b't') => self.skip_lit("true"),
+            Some(b'f') => self.skip_lit("false"),
+            Some(b'n') => self.skip_lit("null"),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.skip_number(),
+            Some(_) => Err(self.err("unexpected character")),
+            None => Err(self.err("unexpected end of input")),
+        }
+    }
+
+    fn skip_number(&mut self) -> Result<(), JsonError> {
+        self.number_token().map(|_| ())
+    }
+
+    fn skip_object(&mut self) -> Result<(), JsonError> {
+        self.expect(b'{')?;
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(());
+        }
+        loop {
+            self.skip_ws();
+            self.skip_string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_value()?;
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b'}') => return Ok(()),
+                _ => {
+                    self.pos = self.pos.saturating_sub(1);
+                    return Err(self.err("expected ',' or '}'"));
+                }
+            }
+        }
+    }
+
+    fn skip_array(&mut self) -> Result<(), JsonError> {
+        self.expect(b'[')?;
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(());
+        }
+        loop {
+            self.skip_value()?;
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b']') => return Ok(()),
+                _ => {
+                    self.pos = self.pos.saturating_sub(1);
+                    return Err(self.err("expected ',' or ']'"));
+                }
+            }
+        }
+    }
+
+    fn skip_string(&mut self) -> Result<(), JsonError> {
+        self.expect(b'"')?;
+        loop {
+            match self.bump() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => return Ok(()),
+                Some(b'\\') => match self.bump() {
+                    Some(b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't') => {}
+                    Some(b'u') => {
+                        let hi = self.hex4()?;
+                        let cp = if (0xD800..0xDC00).contains(&hi) {
+                            if self.bump() != Some(b'\\') || self.bump() != Some(b'u') {
+                                return Err(self.err("unpaired surrogate"));
+                            }
+                            let lo = self.hex4()?;
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                return Err(self.err("invalid low surrogate"));
+                            }
+                            0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                        } else {
+                            hi
+                        };
+                        if char::from_u32(cp).is_none() {
+                            return Err(self.err("invalid codepoint"));
+                        }
+                    }
+                    _ => return Err(self.err("invalid escape")),
+                },
+                Some(c) if c < 0x20 => return Err(self.err("control char in string")),
+                Some(c) if c >= 0x80 => {
+                    let start = self.pos - 1;
+                    let len = if c >= 0xF0 {
+                        4
+                    } else if c >= 0xE0 {
+                        3
+                    } else {
+                        2
+                    };
+                    if start + len > self.b.len() {
+                        return Err(self.err("truncated utf-8"));
+                    }
+                    if std::str::from_utf8(&self.b[start..start + len]).is_err() {
+                        return Err(self.err("invalid utf-8"));
+                    }
+                    self.pos = start + len;
+                }
+                Some(_) => {}
+            }
+        }
     }
 }
 
@@ -623,5 +896,114 @@ mod tests {
         assert_eq!(Json::Num(-1.0).as_usize(), None);
         assert_eq!(Json::Num(1.5).as_usize(), None);
         assert_eq!(Json::Num(7.0).as_usize(), Some(7));
+    }
+
+    #[test]
+    fn lazy_extracts_scalar_fields() {
+        let body = r#"{ "name": "cam-7", "pipeline": "P2", "adapt_interval_secs": 5,
+                        "seed": 9, "ratio": 2.5, "flag": true, "nested": {"a": [1, 2]} }"#;
+        let lz = LazyObj::parse(body).unwrap();
+        assert_eq!(lz.get_str("name"), Some("cam-7"));
+        assert_eq!(lz.get_str("pipeline"), Some("P2"));
+        assert_eq!(lz.get_usize("adapt_interval_secs"), Some(5));
+        assert_eq!(lz.get_i64("seed"), Some(9));
+        assert_eq!(lz.get_f64("ratio"), Some(2.5));
+        assert_eq!(lz.get_raw("flag"), Some("true"));
+        assert_eq!(lz.get_raw("nested"), Some(r#"{"a": [1, 2]}"#));
+        assert!(lz.has("nested") && !lz.has("missing"));
+        assert_eq!(lz.get_str("missing"), None);
+    }
+
+    #[test]
+    fn lazy_mirrors_full_parser_type_quirks() {
+        let lz = LazyObj::parse(r#"{"n": -1, "f": 1.5, "s": 3, "t": "x"}"#).unwrap();
+        // same filters as Json::as_usize / as_i64
+        assert_eq!(lz.get_usize("n"), None);
+        assert_eq!(lz.get_i64("n"), Some(-1));
+        assert_eq!(lz.get_usize("f"), None);
+        assert_eq!(lz.get_str("s"), None); // wrong type, not an error
+        assert_eq!(lz.get_f64("t"), None);
+    }
+
+    #[test]
+    fn lazy_duplicate_key_last_wins_like_btreemap() {
+        let src = r#"{"a": 1, "a": 2}"#;
+        let lz = LazyObj::parse(src).unwrap();
+        assert_eq!(lz.get_f64("a"), Json::parse(src).unwrap().req_f64("a").ok());
+        assert_eq!(lz.get_raw("a"), Some("2"));
+    }
+
+    #[test]
+    fn lazy_refuses_what_it_cannot_serve_faithfully() {
+        // escaped value: present but unextractable as a borrowed slice
+        let lz = LazyObj::parse(r#"{"name": "a\nb"}"#).unwrap();
+        assert_eq!(lz.get_str("name"), None);
+        assert!(lz.get_raw("name").unwrap().starts_with('"'));
+        // escaped key, non-object top level: rejected at parse time
+        assert!(LazyObj::parse(r#"{"na\u006de": "x"}"#).is_err());
+        assert!(LazyObj::parse("[1, 2]").is_err());
+        assert!(LazyObj::parse("{\"a\":").is_err());
+    }
+
+    /// The skip-validator must accept and reject exactly what the full parser
+    /// does, with identical error messages and byte positions.
+    #[test]
+    fn prop_validate_matches_full_parse() {
+        let corpus_bad = [
+            "",
+            "{",
+            "[1,",
+            "{\"a\"}",
+            "tru",
+            "1.2.3",
+            "\"\\q\"",
+            "[1] x",
+            "{\"a\": 1,}",
+            "{\"a\" 1}",
+            "[01, -]",
+            "\"\\ud800\"",
+            "\"\\ud800\\u0020\"",
+            "nullx",
+            "{\"k\": \u{1}\"v\"}",
+        ];
+        let corpus_good = [
+            "null",
+            "-0.5e-3",
+            "[]",
+            "{}",
+            r#"{"a": [1, 2, {"b": null}], "c": "x \u00e9 😀"}"#,
+            "\"héllo → 世界\"",
+        ];
+        for src in corpus_bad.iter().chain(corpus_good.iter()) {
+            let full = Json::parse(src).map(|_| ()).map_err(|e| e.to_string());
+            let lazy = validate_json(src).map_err(|e| e.to_string());
+            assert_eq!(full, lazy, "divergence on {src:?}");
+        }
+        // random trees (and mutilated prefixes of their serializations)
+        let mut rng = Pcg32::new(77);
+        for _ in 0..200 {
+            let n = rng.below(40) + 1;
+            let mut s = String::new();
+            for _ in 0..n {
+                let c = match rng.below(12) {
+                    0 => '{',
+                    1 => '}',
+                    2 => '[',
+                    3 => ']',
+                    4 => '"',
+                    5 => ',',
+                    6 => ':',
+                    7 => '\\',
+                    8 => ' ',
+                    9 => char::from_u32(0x30 + rng.below(10)).unwrap(),
+                    10 => 'e',
+                    _ => '-',
+                };
+                s.push(c);
+            }
+            let full = Json::parse(&s).map(|_| ()).map_err(|e| e.to_string());
+            let lazy = validate_json(&s).map_err(|e| e.to_string());
+            assert_eq!(full, lazy, "divergence on fuzzed {s:?}");
+        }
     }
 }

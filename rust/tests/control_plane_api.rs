@@ -8,9 +8,10 @@
 use std::sync::Arc;
 
 use opd::cluster::ClusterTopology;
+use opd::serve::leader::PER_TENANT_TELEMETRY_MAX;
 use opd::serve::{
-    http_delete, http_get, http_post, http_put, v1_router, ControlPlane, HttpServer, Leader,
-    TenantFactory,
+    http_delete, http_get, http_post, http_put, v1_router, ControlPlane, DeploySpec, HttpClient,
+    HttpServer, Leader, TenantFactory,
 };
 use opd::util::json::Json;
 
@@ -183,4 +184,160 @@ fn v1_control_plane_end_to_end() {
     assert_eq!(leader.env.n_tenants(), 1, "vid survives, iot deleted");
     assert!(leader.env.now > 0.0, "the shared loop actually served traffic");
     server.shutdown();
+}
+
+/// Cluster-scale e2e (DESIGN.md §12): hundreds of pipelines created,
+/// decided, inspected, and torn down over a *single* keep-alive connection
+/// while the leader keeps ticking. Exercises the due-wheel tick, the
+/// usage-index placement, the lazy JSON routes, the streamed /state
+/// snapshot, and the per-tenant telemetry cardinality gate end to end.
+#[test]
+fn many_tenants_over_one_keepalive_connection() {
+    // past the gate, so the last creations happen with per-tenant telemetry off
+    let n = PER_TENANT_TELEMETRY_MAX + 44;
+    let survivors = PER_TENANT_TELEMETRY_MAX - 6;
+    let cp = Arc::new(ControlPlane::new());
+    let (mut leader, tx) = Leader::new(
+        cp.clone(),
+        ClusterTopology::uniform(128, 64.0),
+        1.0,
+        TenantFactory::native(),
+    );
+    let server = HttpServer::start("127.0.0.1:0", v1_router(&cp, tx), 4).unwrap();
+    let addr = server.addr;
+
+    let client = std::thread::spawn(move || {
+        let mut c = HttpClient::connect(&addr).unwrap();
+        for i in 0..n {
+            let body = format!(
+                r#"{{"name":"t-{i}","pipeline":"{}","agent":"{}","adapt_interval_secs":{},"seed":{i}}}"#,
+                if i % 2 == 0 { "P1" } else { "iot-anomaly" },
+                if i % 3 == 0 { "random" } else { "greedy" },
+                5 + i % 7
+            );
+            let (code, resp) = c.post("/v1/pipelines", &body).unwrap();
+            assert_eq!(code, 201, "create t-{i} failed: {resp}");
+        }
+
+        // every deployment is listed with a live generation
+        let (code, body) = c.get("/v1/pipelines").unwrap();
+        assert_eq!(code, 200);
+        let pipes_json = Json::parse(&body).unwrap();
+        let pipes = pipes_json.get("pipelines").unwrap().as_arr().unwrap();
+        assert_eq!(pipes.len(), n);
+        assert!(pipes.iter().all(|p| p.get("generation").unwrap().as_i64().unwrap() >= 1));
+
+        // let the shared loop decide the fleet for a while
+        std::thread::sleep(std::time::Duration::from_millis(500));
+
+        // cluster accounting stays exact at scale
+        let (code, body) = c.get("/v1/cluster").unwrap();
+        assert_eq!(code, 200);
+        let cl = Json::parse(&body).unwrap();
+        let tenants = cl.get("pipelines").unwrap().as_arr().unwrap();
+        assert_eq!(tenants.len(), n);
+        let used = cl.req_f64("used").unwrap();
+        let sum: f64 = tenants.iter().map(|p| p.req_f64("cores").unwrap()).sum();
+        assert!((sum - used).abs() < 1e-6, "tenant cores {sum} vs cluster used {used}");
+
+        // the streamed /state snapshot agrees with the control-plane listing
+        let (code, body) = c.get("/state").unwrap();
+        assert_eq!(code, 200);
+        let st = Json::parse(&body).unwrap();
+        assert_eq!(st.get("pipelines").unwrap().as_arr().unwrap().len(), n);
+        assert!(st.get("cluster").unwrap().get("now").is_some());
+
+        // telemetry: aggregates always publish; per-tenant gauges are gated
+        // above the cardinality cap, so t-{n-1} (created past the cap) must
+        // not have one yet
+        let (_, text) = c.get("/metrics").unwrap();
+        assert!(text.contains("opd_pipelines"), "aggregate signals stay");
+        let gated = format!("opd_qos{{pipeline=\"t-{}\"}}", n - 1);
+        assert!(
+            !text.contains(&gated),
+            "per-tenant gauges must gate above {PER_TENANT_TELEMETRY_MAX} tenants"
+        );
+
+        // hot-swap one agent over the same connection (lazy JSON route)
+        let (code, body) = c.post("/v1/pipelines/t-1/agent", r#"{"agent":"ipa"}"#).unwrap();
+        assert_eq!(code, 200, "{body}");
+        assert!(Json::parse(&body).unwrap().get("generation").unwrap().as_i64().unwrap() >= 2);
+
+        // shrink below the gate (dropping the oldest tenants, keeping the
+        // ones created while telemetry was gated); per-tenant signals resume
+        for i in 0..(n - survivors) {
+            let (code, _) = c.delete(&format!("/v1/pipelines/t-{i}")).unwrap();
+            assert_eq!(code, 200, "delete t-{i}");
+        }
+        std::thread::sleep(std::time::Duration::from_millis(300));
+        let (_, text) = c.get("/metrics").unwrap();
+        assert!(
+            text.contains(&gated),
+            "per-tenant gauges must resume below the cardinality gate"
+        );
+
+        let (code, _) = c.post("/v1/shutdown", "{}").unwrap();
+        assert_eq!(code, 200);
+    });
+
+    leader.run();
+    client.join().unwrap();
+    assert_eq!(leader.env.n_tenants(), survivors);
+    assert!(leader.env.now > 0.0, "the shared loop actually served the fleet");
+    server.shutdown();
+}
+
+/// Property sweep: the lazy path-scanning body parser must be
+/// observationally identical to the full tree parser — same specs, same
+/// error strings — across a generated v1 request corpus (field-order
+/// permutations, whitespace, escapes, type confusion, truncation).
+#[test]
+fn lazy_and_tree_json_paths_agree_on_a_v1_corpus() {
+    let mut corpus: Vec<String> = Vec::new();
+    let names = ["vid", "a-b_c", "t\\u002d9", "bad name", ""];
+    let pipelines = ["P1", "video-analytics", "nope"];
+    let agents = ["greedy", "ipa", "zzz"];
+    let intervals = ["5", "0", "-2", "3.5", "\"7\""];
+    for (i, name) in names.iter().enumerate() {
+        for (j, pipeline) in pipelines.iter().enumerate() {
+            let agent = agents[(i + j) % agents.len()];
+            let interval = intervals[(i * 2 + j) % intervals.len()];
+            // two field orders, one with whitespace noise
+            corpus.push(format!(
+                r#"{{"name":"{name}","pipeline":"{pipeline}","agent":"{agent}","adapt_interval_secs":{interval},"seed":{i}}}"#
+            ));
+            corpus.push(format!(
+                "{{\n  \"agent\": \"{agent}\",\n  \"pipeline\": \"{pipeline}\",\n  \"name\": \"{name}\"\n}}"
+            ));
+        }
+    }
+    // structural edge cases
+    corpus.extend(
+        [
+            r#"{"name":"x","pipeline":"P1","workload":"steady-low"}"#,
+            r#"{"name":"x","pipeline":"P1","workload":7}"#,
+            r#"{"name":"x","pipeline":"P1","config":[{"variant":1,"replicas":2,"batch":4}]}"#,
+            r#"{"name":"x","pipeline":"P1","config":"oops"}"#,
+            r#"{"name":"x","name":"y","pipeline":"P1"}"#,
+            r#"{"name":42,"pipeline":"P1"}"#,
+            r#"{"pipeline":"P1","seed":-1}"#,
+            r#"{"name":"x","pipeline":["P1"]}"#,
+            r#"{"name":"x","pipeline":"P1""#,
+            r#"[]"#,
+            r#""just a string""#,
+            r#"{}"#,
+            "",
+        ]
+        .iter()
+        .map(|s| s.to_string()),
+    );
+    for body in &corpus {
+        for path_name in [None, Some("route-name")] {
+            let tree = Json::parse(body)
+                .map_err(|e| format!("invalid JSON body: {e}"))
+                .and_then(|j| DeploySpec::from_json(&j, path_name));
+            let lazy = DeploySpec::from_body(body, path_name);
+            assert_eq!(lazy, tree, "lazy/tree divergence on {body:?} (path {path_name:?})");
+        }
+    }
 }
