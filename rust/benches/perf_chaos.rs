@@ -1,0 +1,169 @@
+//! §Perf — fault tolerance (DESIGN.md §13), three stories:
+//!
+//! 1. **Evacuation cost**: wall time of a node-crash fault (evacuate every
+//!    container, mark tenants, keep the usage index consistent) across
+//!    fleet sizes, p50/p99 per crash/recover cycle.
+//! 2. **Repair convergence**: sim-time from a crash to a fully Healthy
+//!    fleet, p50/p99 over many seeded crash/recover cycles — with spare
+//!    capacity the self-healing leader should re-place in ~1 tick.
+//! 3. **QoS under chaos**: the same fleet and seeds run with and without a
+//!    seeded fault plan; reports the average-QoS dip and the fraction of
+//!    tenant-seconds spent degraded.
+//!
+//! Writes BENCH_chaos.json. Run: cargo bench --bench perf_chaos [-- --quick]
+//! (pure CPU — no artifacts needed)
+
+use std::time::Instant;
+
+use opd::agents::baseline;
+use opd::cluster::{ClusterTopology, FaultAction, FaultPlan};
+use opd::config::AgentKind;
+use opd::pipeline::{catalog, QosWeights};
+use opd::sim::{LoadSource, MultiEnv, Tenant};
+use opd::util::json::Json;
+use opd::util::stats;
+use opd::workload::predictor::MovingMaxPredictor;
+use opd::workload::{WorkloadGen, WorkloadKind};
+
+fn fleet(n: usize, nodes: usize, cores: f64) -> MultiEnv {
+    let mut env = MultiEnv::new(ClusterTopology::uniform(nodes, cores), 1.0);
+    for i in 0..n {
+        let pipeline = if i % 2 == 0 { "P1" } else { "iot-anomaly" };
+        env.deploy(
+            Tenant::new(
+                &format!("t{i}"),
+                catalog::by_name(pipeline).unwrap().spec,
+                baseline(AgentKind::Greedy, i as u64).unwrap(),
+                QosWeights::default(),
+                LoadSource::Gen(WorkloadGen::new(WorkloadKind::Fluctuating, 1000 + i as u64)),
+                Box::new(MovingMaxPredictor::default()),
+                5 + i % 4,
+            ),
+            None,
+        )
+        .unwrap();
+    }
+    env
+}
+
+/// 1. wall time of crash + recover fault application at one fleet size.
+fn bench_evacuation(n: usize, cycles: usize) -> Json {
+    let nodes = (n / 4).max(8);
+    let mut env = fleet(n, nodes, 64.0);
+    env.run_for(20); // warm: agents have taken over from the default config
+    let mut crash_times = Vec::with_capacity(cycles);
+    let mut recover_times = Vec::with_capacity(cycles);
+    for c in 0..cycles {
+        let node = c % nodes;
+        let t0 = Instant::now();
+        env.apply_fault(&FaultAction::NodeCrash(node));
+        crash_times.push(t0.elapsed().as_secs_f64());
+        env.run_for(2); // let the repair loop re-place the evacuees
+        let t0 = Instant::now();
+        env.apply_fault(&FaultAction::NodeRecover(node));
+        recover_times.push(t0.elapsed().as_secs_f64());
+        env.run_for(2);
+    }
+    assert!(env.node_failures >= cycles, "every crash must count");
+    let p50 = stats::percentile(&crash_times, 50.0);
+    let p99 = stats::percentile(&crash_times, 99.0);
+    println!(
+        "evacuate ({n:4} tenants / {nodes:3} nodes): crash p50 {:8.1} µs  p99 {:8.1} µs   recover p50 {:8.1} µs   evacuations {}",
+        p50 * 1e6,
+        p99 * 1e6,
+        stats::percentile(&recover_times, 50.0) * 1e6,
+        env.evacuations
+    );
+    Json::obj()
+        .set("tenants", n)
+        .set("nodes", nodes)
+        .set("crash_p50_secs", p50)
+        .set("crash_p99_secs", p99)
+        .set("recover_p50_secs", stats::percentile(&recover_times, 50.0))
+        .set("evacuations", env.evacuations)
+}
+
+/// 2. sim-time from crash to a fully Healthy fleet (spare capacity).
+fn bench_repair_latency(cycles: usize) -> Json {
+    let nodes = 8;
+    let mut env = fleet(12, nodes, 64.0);
+    env.run_for(20);
+    let mut latencies = Vec::with_capacity(cycles);
+    for c in 0..cycles {
+        let node = c % nodes;
+        env.apply_fault(&FaultAction::NodeCrash(node));
+        let t_crash = env.now;
+        let mut ticks = 0;
+        while env.degraded_count() > 0 && ticks < 120 {
+            env.run_for(1);
+            ticks += 1;
+        }
+        assert_eq!(env.degraded_count(), 0, "repair must converge with spare capacity");
+        latencies.push(env.now - t_crash);
+        env.apply_fault(&FaultAction::NodeRecover(node));
+        env.run_for(3);
+    }
+    let p50 = stats::percentile(&latencies, 50.0);
+    let p99 = stats::percentile(&latencies, 99.0);
+    println!(
+        "repair ({cycles} crash cycles): time-to-healthy p50 {p50:5.1} s  p99 {p99:5.1} s   repairs {}",
+        env.repairs
+    );
+    Json::obj()
+        .set("cycles", cycles)
+        .set("time_to_healthy_p50_secs", p50)
+        .set("time_to_healthy_p99_secs", p99)
+        .set("repairs", env.repairs)
+}
+
+/// 3. fleet QoS with vs without a seeded fault plan (identical otherwise).
+fn bench_qos_dip(secs: usize) -> Json {
+    let run = |chaos: bool| {
+        let mut env = fleet(8, 4, 16.0);
+        if chaos {
+            let plan = FaultPlan::seeded(42, 4, secs as f64 * 0.8, secs as f64 / 6.0);
+            env.schedule_plan(&plan, 0.0);
+        }
+        env.run_for(secs);
+        let statuses = env.statuses();
+        let qos: f64 =
+            statuses.iter().map(|s| s.avg_qos).sum::<f64>() / statuses.len() as f64;
+        let degraded: f64 = statuses.iter().map(|s| s.degraded_secs).sum();
+        (qos, degraded / (statuses.len() * secs) as f64, env.node_failures)
+    };
+    let (qos_base, _, _) = run(false);
+    let (qos_chaos, degraded_frac, failures) = run(true);
+    println!(
+        "qos dip ({secs} s, {failures} node failures): healthy {qos_base:.4}  chaos {qos_chaos:.4}  dip {:.4}   degraded tenant-seconds {:.1}%",
+        qos_base - qos_chaos,
+        degraded_frac * 100.0
+    );
+    Json::obj()
+        .set("secs", secs)
+        .set("qos_no_faults", qos_base)
+        .set("qos_under_chaos", qos_chaos)
+        .set("qos_dip", qos_base - qos_chaos)
+        .set("degraded_fraction", degraded_frac)
+        .set("node_failures", failures)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    println!(
+        "=== §Perf: fault tolerance (DESIGN.md §13){} ===\n",
+        if quick { " [quick]" } else { "" }
+    );
+    let sizes: &[usize] = if quick { &[32] } else { &[32, 256, 1024] };
+    let cycles = if quick { 8 } else { 32 };
+    let evac = Json::Arr(sizes.iter().map(|&n| bench_evacuation(n, cycles)).collect());
+    let repair = bench_repair_latency(if quick { 8 } else { 40 });
+    let qos = bench_qos_dip(if quick { 120 } else { 600 });
+    let out = Json::obj()
+        .set("bench", "perf_chaos")
+        .set("quick", quick)
+        .set("evacuation", evac)
+        .set("repair", repair)
+        .set("qos", qos);
+    std::fs::write("BENCH_chaos.json", out.to_pretty()).expect("write BENCH_chaos.json");
+    println!("\nwrote BENCH_chaos.json");
+}

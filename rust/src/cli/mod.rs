@@ -42,6 +42,11 @@ USAGE: opd <command> [flags]
 COMMANDS
   simulate   --pipeline P --workload W --agent A [--seed N] [--cycle S]
              [--interval S] [--params ckpt.bin] [--native] [--out out.json]
+             [--nodes N|C1,C2,..] [--chaos SPEC]
+             --chaos injects a deterministic fault plan (DESIGN.md \u{a7}13):
+             comma-separated kind@secs=target[:arg] events — crash@30=1,
+             recover@90=1, flap@60=0:0.5, kill@45=NAME — or random:SEED
+             [:HORIZON[:MTBF]] for a seeded schedule; replays bit-for-bit
   compare    --pipeline P --workload W [--seed N] [--cycle S] [--params ckpt.bin]
   train      [--episodes N] [--expert-freq F] [--epochs E] [--minibatches M]
              [--cycle S] [--pipeline P] [--workload W] [--threads T]
@@ -57,6 +62,7 @@ COMMANDS
   predict    [--workload W] [--secs N] [--seed N] [--native]
   serve      --addr HOST:PORT [--pipeline P] [--workload W] [--agent A]
              [--name NAME] [--cycle S] [--interval S] [--realtime] [--empty]
+             [--nodes N|C1,C2,..]
              [--learn] [--learn-window N] [--learn-min-batch M]
              [--learn-checkpoint PATH]
              boots the multi-pipeline leader; --empty starts with no pipeline
@@ -70,13 +76,16 @@ COMMANDS
                GET/PUT/DELETE /v1/pipelines/{name}  status / apply / remove
                POST       /v1/pipelines/{name}/agent  hot-swap agent
                GET        /v1/cluster            shared-capacity accounting
+               POST       /v1/chaos              schedule a fault plan
                POST       /v1/shutdown           stop the leader
   apply      --addr HOST:PORT --name NAME (--pipeline P [--workload W]
              [--agent A] [--interval S] [--seed N] [--count N] | --delete
              [--count N] | --set-agent A)
              PUTs a declarative pipeline spec to a running leader; --count N
              applies (or deletes) NAME-0..NAME-{N-1} over one keep-alive
-             connection — the cluster-scale bulk path (DESIGN.md \u{a7}12)
+             connection — the cluster-scale bulk path (DESIGN.md \u{a7}12);
+             bulk runs retry transient connect/IO failures with capped
+             exponential backoff (the verbs are idempotent)
   info       [--artifacts DIR]
 
 COMMON FLAGS
@@ -102,6 +111,22 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
     }
     if let Some(a) = args.str_flag("agent") {
         cfg.agent = AgentKind::from_name(&a).ok_or_else(|| anyhow!("unknown agent {a}"))?;
+    }
+    // --nodes N (uniform) or --nodes 10,10,8 (heterogeneous per-node cores)
+    if let Some(n) = args.str_flag("nodes") {
+        if n.contains(',') {
+            let cores = n
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<f64>()
+                        .map_err(|_| anyhow!("bad core count '{}' in --nodes", s.trim()))
+                })
+                .collect::<Result<Vec<f64>>>()?;
+            cfg.node_cores = Some(cores);
+        } else {
+            cfg.nodes = n.parse().map_err(|_| anyhow!("bad --nodes '{n}'"))?;
+        }
     }
     cfg.seed = args.u64_flag("seed", cfg.seed).map_err(|e| anyhow!(e))?;
     cfg.cycle_secs = args.usize_flag("cycle", cfg.cycle_secs).map_err(|e| anyhow!(e))?;
@@ -249,8 +274,12 @@ pub fn cmd_simulate(args: &Args) -> Result<()> {
     let params_path = args.str_flag("params");
     let out_path = args.str_flag("out");
     let greedy = args.switch("greedy-eval");
+    let chaos = args.str_flag("chaos");
     check_unknown(args)?;
     let rt = load_runtime(&cfg, native);
+    if let Some(spec) = chaos {
+        return run_chaos_sim(&cfg, &rt, &spec, params_path.as_deref(), out_path.as_deref());
+    }
     let mut env = make_env(&cfg, &rt)?;
     let mut agent = make_agent(cfg.agent, cfg.seed, &rt, params_path.as_deref(), greedy)?;
     let res = run_cycle(&mut env, agent.as_mut());
@@ -261,6 +290,72 @@ pub fn cmd_simulate(args: &Args) -> Result<()> {
             .set("cost_series", Json::Arr(res.cost_series.iter().map(|x| Json::Num(*x)).collect()))
             .set("load_series", Json::Arr(res.load_series.iter().map(|x| Json::Num(*x)).collect()));
         std::fs::write(&path, j.to_pretty())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// `opd simulate --chaos <spec>`: run the multi-tenant env with a
+/// deterministic fault plan injected (DESIGN.md §13). The same spec grammar
+/// is accepted by `POST /v1/chaos`, so a serve-path failure run can be
+/// replayed offline bit-for-bit.
+fn run_chaos_sim(
+    cfg: &ExperimentConfig,
+    rt: &Option<Rc<OpdRuntime>>,
+    plan_spec: &str,
+    params_path: Option<&str>,
+    out_path: Option<&str>,
+) -> Result<()> {
+    use crate::cluster::FaultPlan;
+    use crate::sim::{LoadSource, MultiEnv, Tenant};
+
+    let topo = cfg.topology();
+    let plan = FaultPlan::parse(plan_spec, topo.nodes.len()).map_err(|e| anyhow!(e))?;
+    let mut env = MultiEnv::new(topo, cfg.startup_secs);
+    let agent = make_agent(cfg.agent, cfg.seed, rt, params_path, true)?;
+    let tenant = Tenant::new(
+        cfg.pipeline.clone(),
+        cfg.pipeline_spec().map_err(|e| anyhow!(e))?,
+        agent,
+        cfg.weights,
+        LoadSource::Gen(WorkloadGen::new(cfg.workload, cfg.seed)),
+        make_predictor(rt),
+        cfg.adapt_interval_secs,
+    );
+    env.deploy(tenant, None).map_err(|e| anyhow!(e))?;
+    let events = env.schedule_plan(&plan, 0.0);
+    env.run_for(cfg.cycle_secs);
+    let s = env.status(&cfg.pipeline).expect("tenant deployed above");
+    println!(
+        "{:<8}  qos {:8.3}  cost {:7.2}  decisions {:4}  clamped {}  restarts {}",
+        s.agent, s.avg_qos, s.avg_cost, s.decisions, s.clamped, s.restarts
+    );
+    println!(
+        "chaos: events={events} node_failures={} evacuations={} repairs={} \
+         tenant_kills={} degraded_secs={:.0} health={}",
+        env.node_failures,
+        env.evacuations,
+        env.repairs,
+        env.tenant_kills,
+        s.degraded_secs,
+        s.health.as_str()
+    );
+    if let Some(path) = out_path {
+        let j = Json::obj()
+            .set("agent", s.agent.as_str())
+            .set("avg_qos", s.avg_qos)
+            .set("avg_cost", s.avg_cost)
+            .set("decisions", s.decisions)
+            .set("clamped", s.clamped)
+            .set("restarts", s.restarts)
+            .set("chaos_events", events)
+            .set("node_failures", env.node_failures)
+            .set("evacuations", env.evacuations)
+            .set("repairs", env.repairs)
+            .set("tenant_kills", env.tenant_kills)
+            .set("degraded_secs", s.degraded_secs)
+            .set("health", s.health.as_str());
+        std::fs::write(path, j.to_pretty())?;
         println!("wrote {path}");
     }
     Ok(())
@@ -473,6 +568,17 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     );
     cp.metrics.describe("opd_pipelines", "pipelines deployed on the shared cluster");
     cp.metrics.describe("opd_cluster_used_cores", "cores allocated across all pipelines");
+    cp.metrics.describe("opd_nodes_up", "cluster nodes currently Up (DESIGN.md \u{a7}13)");
+    cp.metrics
+        .describe("opd_degraded_tenants", "tenants currently Degraded or Pending repair");
+    cp.metrics.describe("opd_node_failures_total", "node crash faults applied");
+    cp.metrics
+        .describe("opd_evacuations_total", "containers evacuated off failed/shrunk nodes");
+    cp.metrics.describe(
+        "opd_repairs_total",
+        "re-placements that restored a tenant to Healthy after a fault",
+    );
+    cp.metrics.describe("opd_tenant_kills_total", "tenant replica-kill faults applied");
     if learn {
         cp.metrics.describe(
             "opd_online_updates_total",
@@ -610,17 +716,25 @@ pub fn cmd_apply(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("--addr '{addr_s}' resolved to nothing"))?;
 
     // --count N: the cluster-scale bulk path — NAME-0..NAME-{N-1} applied
-    // (or deleted) over a single keep-alive connection (DESIGN.md §12)
+    // (or deleted) over a single keep-alive connection (DESIGN.md §12).
+    // Both verbs are idempotent, so transient connect/IO failures are
+    // retried with capped exponential backoff (DESIGN.md §13).
+    const APPLY_RETRIES: u32 = 5;
     if count > 1 {
         if set_agent.is_some() {
             return Err(anyhow!("--count does not combine with --set-agent"));
         }
-        let mut client = HttpClient::connect(&addr)
+        let mut client = HttpClient::connect_retry(&addr, APPLY_RETRIES)
             .map_err(|e| anyhow!("cannot connect to {addr}: {e}"))?;
         let t0 = std::time::Instant::now();
         if delete {
             for i in 0..count {
-                let (code, body) = client.delete(&format!("/v1/pipelines/{name}-{i}"))?;
+                let (code, body) = client.request_with_retry(
+                    "DELETE",
+                    &format!("/v1/pipelines/{name}-{i}"),
+                    None,
+                    APPLY_RETRIES,
+                )?;
                 if code >= 400 {
                     return Err(anyhow!("delete of {name}-{i} failed with HTTP {code}: {body}"));
                 }
@@ -640,8 +754,12 @@ pub fn cmd_apply(args: &Args) -> Result<()> {
                 if let Some(a) = &agent {
                     j = j.set("agent", a.as_str());
                 }
-                let (code, body) =
-                    client.put(&format!("/v1/pipelines/{name}-{i}"), &j.to_string())?;
+                let (code, body) = client.request_with_retry(
+                    "PUT",
+                    &format!("/v1/pipelines/{name}-{i}"),
+                    Some(&j.to_string()),
+                    APPLY_RETRIES,
+                )?;
                 if code >= 400 {
                     return Err(anyhow!("apply of {name}-{i} failed with HTTP {code}: {body}"));
                 }

@@ -1,0 +1,272 @@
+//! Deterministic chaos schedules (DESIGN.md §13).
+//!
+//! A `FaultPlan` is a time-ordered list of fault events — node crash/recover,
+//! capacity flap, tenant kill — parsed from a compact spec string that both
+//! `opd simulate --chaos <spec>` and `POST /v1/chaos` accept, so a failure
+//! run observed through the serve path can be replayed bit-for-bit in the
+//! simulator. The `random:<seed>` form expands to a Pcg32-generated
+//! crash/recover + flap schedule; same seed, same node count ⇒ identical
+//! events, which is the determinism contract the chaos tests pin.
+
+use crate::util::prng::Pcg32;
+
+/// One injectable fault.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultAction {
+    /// Node goes Down; its containers are evacuated.
+    NodeCrash(usize),
+    /// Node comes back Up at its current capacity.
+    NodeRecover(usize),
+    /// Rescale a node to `factor × cores_base` (1.0 restores it).
+    CapacityFlap { node: usize, factor: f64 },
+    /// Kill every replica of one tenant (the deployment object survives).
+    TenantKill(String),
+}
+
+/// A fault at a point in plan-relative time (seconds).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub at: f64,
+    pub action: FaultAction,
+}
+
+/// A time-sorted fault schedule.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+fn parse_node(s: &str, n_nodes: usize) -> Result<usize, String> {
+    let node: usize =
+        s.parse().map_err(|_| format!("bad node index '{s}' in fault spec"))?;
+    if node >= n_nodes {
+        return Err(format!("node index {node} out of range (cluster has {n_nodes})"));
+    }
+    Ok(node)
+}
+
+impl FaultPlan {
+    /// Parse a chaos spec: comma-separated `<kind>@<secs>=<target>[:<arg>]`
+    /// tokens —
+    ///   `crash@30=1`     node 1 goes down at t=30
+    ///   `recover@90=1`   node 1 comes back at t=90
+    ///   `flap@60=0:0.5`  node 0 halves its capacity at t=60
+    ///   `kill@45=vid`    tenant "vid" loses all replicas at t=45
+    /// — or the seeded form `random:<seed>[:<horizon>[:<mtbf>]]`, which
+    /// expands to a generated crash/recover + flap schedule over `[0,
+    /// horizon)` with mean time between faults `mtbf` (defaults 120/30).
+    /// Forms may be mixed; events are merged and time-sorted.
+    pub fn parse(spec: &str, n_nodes: usize) -> Result<FaultPlan, String> {
+        let mut events = Vec::new();
+        for tok in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            if let Some(rest) = tok.strip_prefix("random:") {
+                let mut parts = rest.split(':');
+                let seed: u64 = parts
+                    .next()
+                    .filter(|s| !s.is_empty())
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| format!("bad seed in '{tok}'"))?;
+                let horizon: f64 = match parts.next() {
+                    Some(s) => s.parse().map_err(|_| format!("bad horizon in '{tok}'"))?,
+                    None => 120.0,
+                };
+                let mtbf: f64 = match parts.next() {
+                    Some(s) => s.parse().map_err(|_| format!("bad mtbf in '{tok}'"))?,
+                    None => 30.0,
+                };
+                if parts.next().is_some() {
+                    return Err(format!("trailing fields in '{tok}'"));
+                }
+                if !(horizon > 0.0 && mtbf > 0.0) {
+                    return Err(format!("horizon and mtbf must be positive in '{tok}'"));
+                }
+                events.extend(Self::seeded(seed, n_nodes, horizon, mtbf).events);
+                continue;
+            }
+            let (kind, rest) = tok
+                .split_once('@')
+                .ok_or_else(|| format!("bad fault token '{tok}' (want kind@secs=target)"))?;
+            let (at_s, target) = rest
+                .split_once('=')
+                .ok_or_else(|| format!("bad fault token '{tok}' (want kind@secs=target)"))?;
+            let at: f64 =
+                at_s.parse().map_err(|_| format!("bad time '{at_s}' in '{tok}'"))?;
+            if !at.is_finite() || at < 0.0 {
+                return Err(format!("fault time must be ≥ 0 in '{tok}'"));
+            }
+            let action = match kind {
+                "crash" => FaultAction::NodeCrash(parse_node(target, n_nodes)?),
+                "recover" => FaultAction::NodeRecover(parse_node(target, n_nodes)?),
+                "flap" => {
+                    let (node, factor) = target.split_once(':').ok_or_else(|| {
+                        format!("bad flap target '{target}' (want node:factor)")
+                    })?;
+                    let factor: f64 = factor
+                        .parse()
+                        .map_err(|_| format!("bad flap factor in '{tok}'"))?;
+                    if !factor.is_finite() || factor <= 0.0 {
+                        return Err(format!("flap factor must be positive in '{tok}'"));
+                    }
+                    FaultAction::CapacityFlap { node: parse_node(node, n_nodes)?, factor }
+                }
+                "kill" => {
+                    if target.is_empty() {
+                        return Err(format!("empty tenant name in '{tok}'"));
+                    }
+                    FaultAction::TenantKill(target.to_string())
+                }
+                _ => return Err(format!("unknown fault kind '{kind}' in '{tok}'")),
+            };
+            events.push(FaultEvent { at, action });
+        }
+        if events.is_empty() {
+            return Err("empty fault plan".to_string());
+        }
+        let mut plan = FaultPlan { events };
+        plan.normalize();
+        Ok(plan)
+    }
+
+    /// Seeded schedule: exponential fault inter-arrivals over `[0, horizon)`;
+    /// each fault is a crash (with a paired recover) or a capacity flap
+    /// (with a paired restore). Every outage ends by `horizon`, so a run that
+    /// settles past the horizon always converges back to a healthy fleet —
+    /// the property the chaos tests lean on. Pure function of
+    /// (seed, n_nodes, horizon, mtbf).
+    pub fn seeded(seed: u64, n_nodes: usize, horizon: f64, mtbf: f64) -> FaultPlan {
+        let mut rng = Pcg32::stream(seed, 0xC4A0_5000);
+        let mut events = Vec::new();
+        let n = n_nodes.max(1) as u32;
+        let mut t = 0.0;
+        loop {
+            t += -mtbf * (1.0 - rng.uniform()).ln();
+            if t >= horizon {
+                break;
+            }
+            let node = rng.below(n) as usize;
+            let outage = (-(mtbf / 3.0) * (1.0 - rng.uniform()).ln()).max(2.0);
+            let back = (t + outage).min(horizon);
+            if rng.uniform() < 0.7 {
+                events.push(FaultEvent { at: t, action: FaultAction::NodeCrash(node) });
+                events
+                    .push(FaultEvent { at: back, action: FaultAction::NodeRecover(node) });
+            } else {
+                let factor = 0.3 + 0.5 * rng.uniform();
+                events.push(FaultEvent {
+                    at: t,
+                    action: FaultAction::CapacityFlap { node, factor },
+                });
+                events.push(FaultEvent {
+                    at: back,
+                    action: FaultAction::CapacityFlap { node, factor: 1.0 },
+                });
+            }
+        }
+        let mut plan = FaultPlan { events };
+        plan.normalize();
+        plan
+    }
+
+    /// Stable time sort — ties keep spec order, so plans replay identically.
+    fn normalize(&mut self) {
+        self.events.sort_by(|a, b| {
+            a.at.partial_cmp(&b.at).unwrap_or(std::cmp::Ordering::Equal)
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_action_kind() {
+        let plan =
+            FaultPlan::parse("crash@30=1, recover@90=1, flap@60=0:0.5, kill@45=vid", 3)
+                .unwrap();
+        assert_eq!(plan.len(), 4);
+        assert_eq!(plan.events[0].at, 30.0);
+        assert_eq!(plan.events[0].action, FaultAction::NodeCrash(1));
+        assert_eq!(plan.events[1].action, FaultAction::TenantKill("vid".into()));
+        assert_eq!(
+            plan.events[2].action,
+            FaultAction::CapacityFlap { node: 0, factor: 0.5 }
+        );
+        assert_eq!(plan.events[3].action, FaultAction::NodeRecover(1));
+        // time-sorted
+        assert!(plan.events.windows(2).all(|w| w[0].at <= w[1].at));
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "",
+            "crash@30",
+            "crash@x=1",
+            "crash@30=9",
+            "crash@-5=0",
+            "flap@60=0",
+            "flap@60=0:-1",
+            "kill@45=",
+            "explode@1=0",
+            "random:x",
+            "random:7:0",
+        ] {
+            assert!(FaultPlan::parse(bad, 3).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn seeded_is_deterministic_and_bounded() {
+        let a = FaultPlan::seeded(7, 3, 120.0, 20.0);
+        let b = FaultPlan::seeded(7, 3, 120.0, 20.0);
+        assert_eq!(a, b);
+        assert!(!a.is_empty(), "mtbf 20 over 120s should generate faults");
+        let c = FaultPlan::seeded(8, 3, 120.0, 20.0);
+        assert_ne!(a, c);
+        for e in &a.events {
+            assert!((0.0..=120.0).contains(&e.at));
+            match &e.action {
+                FaultAction::NodeCrash(n) | FaultAction::NodeRecover(n) => assert!(*n < 3),
+                FaultAction::CapacityFlap { node, factor } => {
+                    assert!(*node < 3 && *factor > 0.0);
+                }
+                FaultAction::TenantKill(_) => panic!("seeded plans never kill tenants"),
+            }
+        }
+    }
+
+    #[test]
+    fn seeded_outages_all_end_by_horizon() {
+        let plan = FaultPlan::seeded(11, 4, 90.0, 15.0);
+        let mut down = [false; 4];
+        let mut flapped = [false; 4];
+        for e in &plan.events {
+            match e.action {
+                FaultAction::NodeCrash(n) => down[n] = true,
+                FaultAction::NodeRecover(n) => down[n] = false,
+                FaultAction::CapacityFlap { node, factor } => flapped[node] = factor != 1.0,
+                FaultAction::TenantKill(_) => {}
+            }
+        }
+        assert!(!down.iter().any(|d| *d), "a node is left down past the horizon");
+        assert!(!flapped.iter().any(|f| *f), "a node is left flapped past the horizon");
+    }
+
+    #[test]
+    fn random_form_parses_and_mixes_with_explicit_tokens() {
+        let plan = FaultPlan::parse("random:7:60:10,kill@5=t0", 3).unwrap();
+        assert!(plan.events.iter().any(|e| e.action == FaultAction::TenantKill("t0".into())));
+        assert!(plan.len() > 1);
+        let again = FaultPlan::parse("random:7:60:10,kill@5=t0", 3).unwrap();
+        assert_eq!(plan, again);
+    }
+}

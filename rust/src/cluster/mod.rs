@@ -4,11 +4,13 @@
 //! paper→build substitution argument).
 
 pub mod api;
+pub mod fault;
 pub mod node;
 pub mod placement;
 pub mod store;
 
 pub use api::{ClusterApi, DEFAULT_DEPLOYMENT};
+pub use fault::{FaultAction, FaultEvent, FaultPlan};
 pub use node::{ClusterTopology, Node};
 pub use placement::{place, place_onto, Binding, PlacementRequest};
-pub use store::{ApplyOutcome, Container, Deployment, DeploymentStore};
+pub use store::{ApplyOutcome, Container, Deployment, DeploymentStore, EvacuationReport};

@@ -2,24 +2,48 @@
 //!
 //! Kubernetes assigns CPU resources by core count (paper §III-B "Cost"); a
 //! node here is a bag of allocatable cores. The default topology mirrors the
-//! paper's testbed: 3 machines × 10-core i9-10900K.
+//! paper's testbed: 3 machines × 10-core i9-10900K. Nodes additionally carry
+//! an Up/Down lifecycle and may flap capacity (DESIGN.md §13): a down node
+//! contributes zero allocatable cores, so W_max (Eq. 4) shrinks while it is
+//! out and placement skips it without any special-casing.
 
 /// One edge node.
 #[derive(Clone, Debug)]
 pub struct Node {
     pub name: String,
+    /// Current allocatable capacity; may differ from `cores_base` while a
+    /// capacity flap is in effect.
     pub cores_total: f64,
     pub cores_used: f64,
+    /// Capacity at construction — the reference point flap factors scale.
+    pub cores_base: f64,
+    /// Lifecycle flag: a down node holds no containers and offers no cores.
+    pub up: bool,
 }
 
 impl Node {
     pub fn new(name: impl Into<String>, cores_total: f64) -> Self {
         assert!(cores_total > 0.0);
-        Self { name: name.into(), cores_total, cores_used: 0.0 }
+        Self {
+            name: name.into(),
+            cores_total,
+            cores_used: 0.0,
+            cores_base: cores_total,
+            up: true,
+        }
+    }
+
+    /// Allocatable capacity as seen by placement: zero while down.
+    pub fn effective_total(&self) -> f64 {
+        if self.up {
+            self.cores_total
+        } else {
+            0.0
+        }
     }
 
     pub fn cores_free(&self) -> f64 {
-        (self.cores_total - self.cores_used).max(0.0)
+        (self.effective_total() - self.cores_used).max(0.0)
     }
 
     pub fn can_fit(&self, cores: f64) -> bool {
@@ -45,7 +69,17 @@ impl Node {
         self.cores_used += cores;
     }
 
+    /// Release `cores`. Over-freeing means the usage index and the container
+    /// set disagree — a bug at the call site, not a condition to mask — so
+    /// debug builds assert before the release-mode clamp.
     pub fn free(&mut self, cores: f64) {
+        debug_assert!(
+            self.cores_used + 1e-6 >= cores,
+            "over-free on {}: used={} freed={}",
+            self.name,
+            self.cores_used,
+            cores
+        );
         self.cores_used = (self.cores_used - cores).max(0.0);
     }
 }
@@ -78,9 +112,22 @@ impl ClusterTopology {
         )
     }
 
-    /// W_max of Eq. 4.
+    /// Heterogeneous topology from an explicit per-node core list
+    /// (the `--nodes 10,10,8` CLI shape).
+    pub fn from_cores(cores: &[f64]) -> Self {
+        Self::new(
+            cores
+                .iter()
+                .enumerate()
+                .map(|(i, c)| Node::new(format!("edge-{i}"), *c))
+                .collect(),
+        )
+    }
+
+    /// W_max of Eq. 4 — the capacity of *up* nodes; shrinks while nodes are
+    /// down so the fit/clamp chain sees the degraded cluster.
     pub fn capacity(&self) -> f64 {
-        self.nodes.iter().map(|n| n.cores_total).sum()
+        self.nodes.iter().map(|n| n.effective_total()).sum()
     }
 
     pub fn used(&self) -> f64 {
@@ -89,6 +136,10 @@ impl ClusterTopology {
 
     pub fn free(&self) -> f64 {
         self.capacity() - self.used()
+    }
+
+    pub fn n_up(&self) -> usize {
+        self.nodes.iter().filter(|n| n.up).count()
     }
 
     pub fn reset(&mut self) {
@@ -122,10 +173,44 @@ mod tests {
     }
 
     #[test]
-    fn free_never_goes_negative() {
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "over-free")]
+    fn over_free_panics_in_debug() {
         let mut n = Node::new("a", 4.0);
+        n.alloc(2.0);
         n.free(10.0);
-        assert_eq!(n.cores_used, 0.0);
+    }
+
+    #[test]
+    fn down_node_offers_no_cores() {
+        let mut n = Node::new("a", 4.0);
+        assert!(n.alloc(1.0));
+        n.up = false;
+        assert_eq!(n.effective_total(), 0.0);
+        assert_eq!(n.cores_free(), 0.0);
+        assert!(!n.can_fit(0.5));
+        n.up = true;
+        assert!((n.cores_free() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn capacity_tracks_up_nodes_only() {
+        let mut t = ClusterTopology::from_cores(&[10.0, 10.0, 8.0]);
+        assert_eq!(t.capacity(), 28.0);
+        t.nodes[2].up = false;
+        assert_eq!(t.capacity(), 20.0);
+        assert_eq!(t.n_up(), 2);
+        t.nodes[2].up = true;
+        assert_eq!(t.capacity(), 28.0);
+    }
+
+    #[test]
+    fn heterogeneous_constructor_names_nodes() {
+        let t = ClusterTopology::from_cores(&[4.0, 2.0]);
+        assert_eq!(t.nodes.len(), 2);
+        assert_eq!(t.nodes[0].name, "edge-0");
+        assert_eq!(t.nodes[1].cores_total, 2.0);
+        assert_eq!(t.nodes[1].cores_base, 2.0);
     }
 
     #[test]

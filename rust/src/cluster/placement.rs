@@ -29,7 +29,7 @@ pub fn place(
     topo: &ClusterTopology,
     requests: &[PlacementRequest],
 ) -> Result<Vec<Binding>, usize> {
-    let free: Vec<f64> = topo.nodes.iter().map(|n| n.cores_total).collect();
+    let free: Vec<f64> = topo.nodes.iter().map(|n| n.effective_total()).collect();
     place_onto(&free, requests)
 }
 

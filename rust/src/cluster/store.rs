@@ -47,6 +47,19 @@ pub struct ApplyOutcome {
     pub generation: u64,
 }
 
+/// What a node failure (or capacity shrink) displaced: which tenants lost
+/// how many replicas. Tenant order is deterministic (BTreeMap name order for
+/// full evacuations, reverse name order for overflow evictions), so seeded
+/// chaos runs replay identically.
+#[derive(Clone, Debug, Default)]
+pub struct EvacuationReport {
+    pub node: usize,
+    /// (tenant name, replicas evacuated)
+    pub tenants: Vec<(String, usize)>,
+    /// total containers displaced
+    pub containers: usize,
+}
+
 /// One named pipeline deployment living on the shared cluster.
 #[derive(Clone, Debug)]
 pub struct Deployment {
@@ -177,11 +190,12 @@ impl DeploymentStore {
     /// Per-node cores still available to deployment `name`: node capacity
     /// minus every *other* tenant's running containers. Served from the
     /// incremental usage index — O(nodes + own containers), not O(fleet):
-    /// `free[i] = cores_total − cores_used + own`, clamped at 0 like the
-    /// full-scan formulation it replaces.
+    /// `free[i] = effective_total − cores_used + own`, clamped at 0 like the
+    /// full-scan formulation it replaces. A down node offers zero cores, so
+    /// placement skips it without special-casing (DESIGN.md §13).
     fn free_excluding_into(&self, name: &str, free: &mut Vec<f64>) {
         free.clear();
-        free.extend(self.topo.nodes.iter().map(|n| n.cores_total - n.cores_used));
+        free.extend(self.topo.nodes.iter().map(|n| n.effective_total() - n.cores_used));
         if let Some(d) = self.deployments.get(name) {
             for c in &d.containers {
                 if c.node < free.len() {
@@ -398,6 +412,139 @@ impl DeploymentStore {
             self.note_mutation();
         }
         d
+    }
+
+    /// Take node `node` down: mark it Down and evacuate every container it
+    /// hosts, releasing their cores from the usage index container-by-
+    /// container (so debug snap-compare still telescopes exactly). Idempotent
+    /// — failing an already-down node returns an empty report. The affected
+    /// deployments keep their spec/config/generation; only their replica
+    /// sets shrink, which is what the repair loop re-places (DESIGN.md §13).
+    pub fn fail_node(&mut self, node: usize) -> Result<EvacuationReport, String> {
+        if node >= self.topo.nodes.len() {
+            return Err(format!("no such node index {node}"));
+        }
+        self.topo.nodes[node].up = false;
+        Ok(self.evacuate_node(node))
+    }
+
+    /// Bring node `node` back Up (capacity returns at its current
+    /// `cores_total`). Returns true when the node actually transitioned
+    /// Down→Up, false when it was already up.
+    pub fn recover_node(&mut self, node: usize) -> Result<bool, String> {
+        if node >= self.topo.nodes.len() {
+            return Err(format!("no such node index {node}"));
+        }
+        let n = &mut self.topo.nodes[node];
+        let was_down = !n.up;
+        n.up = true;
+        Ok(was_down)
+    }
+
+    /// Capacity flap: rescale node `node` to `factor × cores_base`. Shrinking
+    /// an up node below its current usage evicts containers deterministically
+    /// (reverse tenant-name order, last container first) until it fits again.
+    pub fn flap_node_capacity(
+        &mut self,
+        node: usize,
+        factor: f64,
+    ) -> Result<EvacuationReport, String> {
+        if node >= self.topo.nodes.len() {
+            return Err(format!("no such node index {node}"));
+        }
+        if !factor.is_finite() || factor <= 0.0 {
+            return Err(format!("flap factor must be positive, got {factor}"));
+        }
+        let n = &mut self.topo.nodes[node];
+        n.cores_total = (n.cores_base * factor).max(1e-3);
+        Ok(self.evacuate_overflow(node))
+    }
+
+    /// Remove every container of deployment `name` (a pod-kill fault). The
+    /// deployment object, spec, and config survive — the repair loop owns
+    /// bringing the replicas back. Returns the number of containers killed.
+    pub fn kill_replicas(&mut self, name: &str) -> usize {
+        let Some(d) = self.deployments.get_mut(name) else {
+            return 0;
+        };
+        if d.containers.is_empty() {
+            return 0;
+        }
+        let killed = d.containers.len();
+        for c in d.containers.drain(..) {
+            self.topo.nodes[c.node].free(c.cores);
+            self.total_used = (self.total_used - c.cores).max(0.0);
+        }
+        self.note_mutation();
+        killed
+    }
+
+    /// Evacuate every container on `node`, in tenant-name order, releasing
+    /// usage per container so the incremental index stays exact.
+    fn evacuate_node(&mut self, node: usize) -> EvacuationReport {
+        let mut report = EvacuationReport { node, tenants: Vec::new(), containers: 0 };
+        let topo = &mut self.topo;
+        let total_used = &mut self.total_used;
+        for (name, d) in self.deployments.iter_mut() {
+            let mut lost = 0usize;
+            d.containers.retain(|c| {
+                if c.node == node {
+                    topo.nodes[node].free(c.cores);
+                    *total_used = (*total_used - c.cores).max(0.0);
+                    lost += 1;
+                    false
+                } else {
+                    true
+                }
+            });
+            if lost > 0 {
+                report.tenants.push((name.clone(), lost));
+                report.containers += lost;
+            }
+        }
+        if report.containers > 0 {
+            self.note_mutation();
+        }
+        report
+    }
+
+    /// After a capacity shrink: evict containers from `node` until its usage
+    /// fits the new total. Victim order is deterministic — reverse tenant-
+    /// name order, and within a tenant its last-placed container first — so
+    /// seeded chaos runs replay bit-for-bit.
+    fn evacuate_overflow(&mut self, node: usize) -> EvacuationReport {
+        let mut report = EvacuationReport { node, tenants: Vec::new(), containers: 0 };
+        loop {
+            let n = &self.topo.nodes[node];
+            if n.cores_used <= n.cores_total + 1e-9 {
+                break;
+            }
+            let victim = self
+                .deployments
+                .iter()
+                .rev()
+                .find(|(_, d)| d.containers.iter().any(|c| c.node == node))
+                .map(|(k, _)| k.clone());
+            let Some(name) = victim else { break };
+            let d = self.deployments.get_mut(&name).expect("victim exists");
+            let pos = d
+                .containers
+                .iter()
+                .rposition(|c| c.node == node)
+                .expect("victim has a container here");
+            let c = d.containers.remove(pos);
+            self.topo.nodes[node].free(c.cores);
+            self.total_used = (self.total_used - c.cores).max(0.0);
+            match report.tenants.iter_mut().find(|(t, _)| *t == name) {
+                Some((_, k)) => *k += 1,
+                None => report.tenants.push((name, 1)),
+            }
+            report.containers += 1;
+        }
+        if report.containers > 0 {
+            self.note_mutation();
+        }
+        report
     }
 
     /// Bookkeeping after an index mutation: debug builds cross-check the
@@ -653,7 +800,7 @@ mod tests {
         // other tenant's containers, clamp at zero
         fn naive_free_excluding(store: &DeploymentStore, name: &str) -> Vec<f64> {
             let mut free: Vec<f64> =
-                store.topo.nodes.iter().map(|n| n.cores_total).collect();
+                store.topo.nodes.iter().map(|n| n.effective_total()).collect();
             for d in store.deployments() {
                 if d.name == name {
                     continue;
@@ -838,6 +985,174 @@ mod tests {
         store.delete("a");
         store.names_into(&mut buf);
         assert_eq!(buf, vec!["b".to_string()]);
+    }
+
+    #[test]
+    fn fail_node_evacuates_and_reports_affected_tenants() {
+        let mut store = DeploymentStore::new(ClusterTopology::paper_testbed(), 3.0);
+        let vid = catalog::video_analytics().spec;
+        let iot = catalog::iot_anomaly().spec;
+        store.apply("vid", &vid, &maxed(&vid), 0.0).unwrap();
+        store.apply("iot", &iot, &maxed(&iot), 0.0).unwrap();
+        let held_before = store.allocated_cores();
+        assert!(held_before > 0.0);
+        let report = store.fail_node(0).unwrap();
+        assert_eq!(report.node, 0);
+        assert!(report.containers > 0, "a full node failing must displace replicas");
+        assert_eq!(
+            report.containers,
+            report.tenants.iter().map(|(_, k)| k).sum::<usize>()
+        );
+        // no orphaned containers: nothing lives on the down node, and the
+        // usage index matches a full rescan
+        for d in store.deployments() {
+            assert!(d.containers.iter().all(|c| c.node != 0), "{}", d.name);
+        }
+        assert_eq!(store.topo.nodes[0].cores_used, 0.0);
+        assert!(store.allocated_cores() < held_before);
+        // tenants survive with their spec/config/generation intact
+        assert!(store.get("vid").is_some() && store.get("iot").is_some());
+        // idempotent: failing again displaces nothing
+        let again = store.fail_node(0).unwrap();
+        assert_eq!(again.containers, 0);
+        assert!(store.fail_node(99).is_err());
+    }
+
+    #[test]
+    fn down_node_receives_no_placements_until_recovery() {
+        let mut store = DeploymentStore::new(ClusterTopology::uniform(2, 4.0), 3.0);
+        let spec = catalog::preset(catalog::Preset::P1).spec;
+        store.fail_node(0).unwrap();
+        assert_eq!(store.capacity_for("t"), 4.0, "only the up node counts");
+        store.apply("t", &spec, &spec.default_config(), 0.0).unwrap();
+        assert!(store.get("t").unwrap().containers.iter().all(|c| c.node == 1));
+        assert!(store.recover_node(0).unwrap());
+        assert!(!store.recover_node(0).unwrap(), "second recover is a no-op");
+        assert_eq!(store.capacity_for("t"), 8.0);
+    }
+
+    #[test]
+    fn capacity_flap_evicts_deterministically() {
+        let mut store = DeploymentStore::new(ClusterTopology::uniform(1, 10.0), 3.0);
+        let spec = catalog::preset(catalog::Preset::P1).spec;
+        store.apply("a", &spec, &spec.default_config(), 0.0).unwrap();
+        store.apply("b", &spec, &spec.default_config(), 0.0).unwrap();
+        let used = store.topo.nodes[0].cores_used;
+        assert!(used > 2.0);
+        // shrink to a fifth: evictions must come from 'b' (reverse name
+        // order) before touching 'a'
+        let report = store.flap_node_capacity(0, 0.2).unwrap();
+        assert!(report.containers > 0);
+        assert_eq!(report.tenants[0].0, "b", "{report:?}");
+        let n = &store.topo.nodes[0];
+        assert!(n.cores_used <= n.cores_total + 1e-9);
+        assert!(n.up, "a flap is not a failure");
+        // restore: capacity returns, nothing else changes
+        store.flap_node_capacity(0, 1.0).unwrap();
+        assert_eq!(store.topo.nodes[0].cores_total, 10.0);
+        assert!(store.flap_node_capacity(0, 0.0).is_err());
+        assert!(store.flap_node_capacity(9, 1.0).is_err());
+    }
+
+    #[test]
+    fn kill_replicas_keeps_the_deployment_object() {
+        let mut store = DeploymentStore::new(ClusterTopology::paper_testbed(), 3.0);
+        let spec = catalog::preset(catalog::Preset::P1).spec;
+        store.apply("t", &spec, &spec.default_config(), 0.0).unwrap();
+        let n = store.get("t").unwrap().containers.len();
+        assert!(n > 0);
+        assert_eq!(store.kill_replicas("t"), n);
+        let d = store.get("t").unwrap();
+        assert!(d.containers.is_empty());
+        assert_eq!(d.generation, 1, "kill is not an apply");
+        assert_eq!(store.allocated_cores(), 0.0);
+        assert_eq!(store.kill_replicas("t"), 0, "second kill finds nothing");
+        assert_eq!(store.kill_replicas("ghost"), 0);
+        // re-apply restores the replicas (the repair path)
+        let out = store.apply("t", &spec, &spec.default_config(), 5.0).unwrap();
+        assert_eq!(out.generation, 2);
+        assert_eq!(store.get("t").unwrap().containers.len(), n);
+    }
+
+    /// Failure-cycle differential: randomized apply/delete/fail/recover/flap
+    /// sequences keep the incremental usage index equal to the full rescan,
+    /// leave no container on a down node, and never over-commit a node.
+    #[test]
+    fn usage_index_survives_randomized_failure_cycles() {
+        use crate::util::prng::Pcg32;
+
+        let specs = [
+            catalog::preset(catalog::Preset::P1).spec,
+            catalog::preset(catalog::Preset::P2).spec,
+            catalog::iot_anomaly().spec,
+        ];
+        let mut store = DeploymentStore::new(ClusterTopology::from_cores(&[12.0, 8.0, 6.0, 10.0]), 3.0);
+        let mut rng = Pcg32::new(0xFA11);
+        let mut now = 0.0;
+        for step in 0..500 {
+            match rng.below(10) {
+                0 => {
+                    let _ = store.fail_node(rng.below(4) as usize);
+                }
+                1 => {
+                    let _ = store.recover_node(rng.below(4) as usize);
+                }
+                2 => {
+                    let f = 0.25 + 0.75 * rng.uniform() * 2.0;
+                    let _ = store.flap_node_capacity(rng.below(4) as usize, f);
+                }
+                3 => {
+                    store.kill_replicas(&format!("t{}", rng.below(8)));
+                }
+                4 => {
+                    store.delete(&format!("t{}", rng.below(8)));
+                }
+                _ => {
+                    let tenant = format!("t{}", rng.below(8));
+                    let spec = &specs[rng.below(specs.len() as u32) as usize];
+                    let cfgs: Vec<TaskConfig> = spec
+                        .tasks
+                        .iter()
+                        .map(|t| {
+                            TaskConfig::new(
+                                rng.below(t.n_variants() as u32) as usize,
+                                1 + rng.below(3) as usize,
+                                rng.below(6) as usize,
+                            )
+                        })
+                        .collect();
+                    let _ = store.apply(&tenant, spec, &cfgs, now);
+                }
+            }
+            now += 1.0;
+
+            // index ≡ rescan
+            let mut rescan = vec![0.0; store.topo.nodes.len()];
+            for d in store.deployments() {
+                for c in &d.containers {
+                    rescan[c.node] += c.cores;
+                }
+            }
+            for (i, (n, exact)) in store.topo.nodes.iter().zip(&rescan).enumerate() {
+                assert!(
+                    (n.cores_used - exact).abs() <= 1e-9,
+                    "step {step}: node {i} index {} vs rescan {exact}",
+                    n.cores_used
+                );
+                assert!(
+                    n.up || *exact == 0.0,
+                    "step {step}: container stranded on down node {i}"
+                );
+                assert!(
+                    n.cores_used <= n.cores_total + 1e-6,
+                    "step {step}: node {i} over-committed ({} > {})",
+                    n.cores_used,
+                    n.cores_total
+                );
+            }
+            let total: f64 = rescan.iter().sum();
+            assert!((store.allocated_cores() - total).abs() <= 1e-9, "step {step}");
+        }
     }
 
     #[test]

@@ -63,6 +63,9 @@ pub struct ExperimentConfig {
     pub startup_secs: f64,
     pub nodes: usize,
     pub cores_per_node: f64,
+    /// explicit per-node core counts (heterogeneous topology, e.g. the CLI's
+    /// `--nodes 10,10,8`); when set it wins over `nodes`×`cores_per_node`
+    pub node_cores: Option<Vec<f64>>,
     pub weights: QosWeights,
     /// artifacts directory (None → resolve via env / default)
     pub artifacts_dir: Option<String>,
@@ -80,6 +83,7 @@ impl Default for ExperimentConfig {
             startup_secs: 3.0,
             nodes: 3,
             cores_per_node: 10.0,
+            node_cores: None,
             weights: QosWeights::default(),
             artifacts_dir: None,
         }
@@ -100,7 +104,10 @@ impl ExperimentConfig {
     }
 
     pub fn topology(&self) -> ClusterTopology {
-        ClusterTopology::uniform(self.nodes, self.cores_per_node)
+        match &self.node_cores {
+            Some(cores) => ClusterTopology::from_cores(cores),
+            None => ClusterTopology::uniform(self.nodes, self.cores_per_node),
+        }
     }
 
     pub fn validate(&self) -> Result<(), String> {
@@ -111,8 +118,17 @@ impl ExperimentConfig {
         if self.adapt_interval_secs == 0 || self.adapt_interval_secs > self.cycle_secs {
             return Err("adapt_interval_secs must be in 1..=cycle_secs".into());
         }
-        if self.nodes == 0 || self.cores_per_node <= 0.0 {
-            return Err("cluster must have nodes with positive cores".into());
+        match &self.node_cores {
+            Some(cores) => {
+                if cores.is_empty() || cores.iter().any(|c| !c.is_finite() || *c <= 0.0) {
+                    return Err("node_cores must be a non-empty list of positive cores".into());
+                }
+            }
+            None => {
+                if self.nodes == 0 || self.cores_per_node <= 0.0 {
+                    return Err("cluster must have nodes with positive cores".into());
+                }
+            }
         }
         if self.startup_secs < 0.0 {
             return Err("startup_secs must be non-negative".into());
@@ -140,6 +156,15 @@ impl ExperimentConfig {
             .set("startup_secs", self.startup_secs)
             .set("nodes", self.nodes)
             .set("cores_per_node", self.cores_per_node)
+            .set(
+                "node_cores",
+                match &self.node_cores {
+                    Some(cores) => {
+                        Json::Arr(cores.iter().map(|c| Json::Num(*c)).collect())
+                    }
+                    None => Json::Null,
+                },
+            )
             .set(
                 "weights",
                 Json::obj()
@@ -193,6 +218,14 @@ impl ExperimentConfig {
         }
         if let Some(v) = j.get("cores_per_node").and_then(Json::as_f64) {
             c.cores_per_node = v;
+        }
+        if let Some(Json::Arr(items)) = j.get("node_cores") {
+            c.node_cores = Some(
+                items
+                    .iter()
+                    .map(|v| v.as_f64().ok_or("node_cores entries must be numbers"))
+                    .collect::<Result<Vec<f64>, _>>()?,
+            );
         }
         if let Some(w) = j.get("weights") {
             let mut qw = QosWeights::default();
@@ -275,6 +308,30 @@ mod tests {
 
         let mut c = ExperimentConfig::default();
         c.nodes = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn heterogeneous_node_cores_roundtrip_and_win_over_uniform() {
+        let mut c = ExperimentConfig::default();
+        c.node_cores = Some(vec![10.0, 10.0, 8.0]);
+        c.validate().unwrap();
+        let topo = c.topology();
+        assert_eq!(topo.nodes.len(), 3);
+        assert_eq!(topo.capacity(), 28.0);
+        let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.node_cores.as_deref(), Some(&[10.0, 10.0, 8.0][..]));
+        assert_eq!(back.topology().capacity(), 28.0);
+        // a uniform config serializes node_cores as null and stays None
+        let j = ExperimentConfig::default().to_json();
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert!(back.node_cores.is_none());
+        // invalid lists are rejected
+        let mut c = ExperimentConfig::default();
+        c.node_cores = Some(vec![]);
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.node_cores = Some(vec![4.0, -1.0]);
         assert!(c.validate().is_err());
     }
 

@@ -13,6 +13,7 @@
 //!   DELETE /v1/pipelines/{name}        remove, releasing its cluster share
 //!   POST   /v1/pipelines/{name}/agent  hot-swap the decision agent
 //!   GET    /v1/cluster                 nodes + shared-capacity accounting
+//!   POST   /v1/chaos                   schedule a fault-injection plan
 //!   POST   /v1/shutdown                stop the leader loop
 //! plus the classic observability routes (/metrics /state /series /healthz).
 
@@ -251,6 +252,9 @@ pub enum ControlRequest {
     DeletePipeline(String),
     SwapAgent { pipeline: String, agent: AgentKind, seed: u64 },
     GetCluster,
+    /// Schedule a chaos plan (the spec grammar of `FaultPlan::parse`);
+    /// events fire relative to the sim clock at arrival (DESIGN.md §13).
+    Chaos(String),
     Shutdown,
 }
 
@@ -378,6 +382,19 @@ pub fn v1_router(cp: &Arc<ControlPlane>, tx: Sender<ControlMsg>) -> Router {
 
     let t = tx.clone();
     router.get("/v1/cluster", move |_| call(&t, ControlRequest::GetCluster));
+
+    let t = tx.clone();
+    router.post("/v1/chaos", move |req| {
+        // chaos injection is rare — the tree parser is fine here
+        let plan = match Json::parse(&req.body) {
+            Ok(j) => match j.get("plan").and_then(Json::as_str) {
+                Some(p) => p.to_string(),
+                None => return error_response(400, "missing field 'plan'"),
+            },
+            Err(e) => return error_response(400, &format!("invalid JSON body: {e}")),
+        };
+        call(&t, ControlRequest::Chaos(plan))
+    });
 
     let t = tx.clone();
     router.post("/v1/shutdown", move |_| call(&t, ControlRequest::Shutdown));

@@ -654,13 +654,83 @@ fn add_conn(conns: &mut Vec<Conn>, stream: TcpStream) {
 pub struct HttpClient {
     stream: TcpStream,
     buf: Vec<u8>,
+    addr: std::net::SocketAddr,
+}
+
+/// Capped exponential backoff schedule for client retries: 10 ms doubling
+/// to a 500 ms ceiling. Kept short — retries guard against transient
+/// connect/IO hiccups (a leader still binding, a connection shed under an
+/// apply storm), not against a leader that is down.
+fn retry_backoff(delay: &mut Duration) {
+    std::thread::sleep(*delay);
+    *delay = (*delay * 2).min(Duration::from_millis(500));
 }
 
 impl HttpClient {
     pub fn connect(addr: &std::net::SocketAddr) -> std::io::Result<HttpClient> {
         let stream = TcpStream::connect(addr)?;
         let _ = stream.set_nodelay(true);
-        Ok(HttpClient { stream, buf: Vec::new() })
+        Ok(HttpClient { stream, buf: Vec::new(), addr: *addr })
+    }
+
+    /// Connect with up to `attempts` tries, sleeping a capped exponential
+    /// backoff between failures — the bulk-apply client's defence against a
+    /// leader that has not finished binding its socket yet (DESIGN.md §13).
+    pub fn connect_retry(
+        addr: &std::net::SocketAddr,
+        attempts: u32,
+    ) -> std::io::Result<HttpClient> {
+        let attempts = attempts.max(1);
+        let mut delay = Duration::from_millis(10);
+        let mut tries = 0;
+        loop {
+            match Self::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) => {
+                    tries += 1;
+                    if tries >= attempts {
+                        return Err(e);
+                    }
+                    retry_backoff(&mut delay);
+                }
+            }
+        }
+    }
+
+    /// One exchange with transient-failure retry: an IO error (connection
+    /// reset, truncated response) tears down the connection, reconnects and
+    /// retries with capped exponential backoff. Only safe for idempotent
+    /// requests — the bulk `opd apply` path is PUT — since a request that
+    /// errored mid-flight may already have been executed. HTTP-level errors
+    /// come back as statuses and are never retried.
+    pub fn request_with_retry(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+        attempts: u32,
+    ) -> std::io::Result<(u16, String)> {
+        let attempts = attempts.max(1);
+        let mut delay = Duration::from_millis(10);
+        let mut tries = 0;
+        loop {
+            match self.request(method, path, body) {
+                Ok(r) => return Ok(r),
+                Err(e) => {
+                    tries += 1;
+                    if tries >= attempts {
+                        return Err(e);
+                    }
+                    retry_backoff(&mut delay);
+                    // the old stream may be half-open with a poisoned read
+                    // buffer; a reconnect failure leaves it in place so the
+                    // next attempt errors fast and burns a try
+                    if let Ok(fresh) = Self::connect(&self.addr) {
+                        *self = fresh;
+                    }
+                }
+            }
+        }
     }
 
     /// One request/response exchange on the persistent connection.
@@ -971,6 +1041,47 @@ mod tests {
             t0.elapsed() < Duration::from_secs(5),
             "shutdown hung on an idle keep-alive connection"
         );
+    }
+
+    #[test]
+    fn request_with_retry_survives_a_dropped_connection() {
+        let mut router = Router::new();
+        router.get("/ping", |_| Response::ok("pong"));
+        router.put("/thing/{id}", |req| Response::ok(req.param("id").to_string()));
+        let server = HttpServer::start("127.0.0.1:0", router, 2).unwrap();
+        let mut client = HttpClient::connect(&server.addr).unwrap();
+        assert_eq!(client.get("/ping").unwrap().0, 200);
+        // sever the connection under the client: the plain path errors out,
+        // the retrying path reconnects to the still-running server
+        client.stream.shutdown(std::net::Shutdown::Both).unwrap();
+        assert!(client.request("GET", "/ping", None).is_err());
+        let (code, body) = client.request_with_retry("PUT", "/thing/7", Some("{}"), 4).unwrap();
+        assert_eq!((code, body.as_str()), (200, "7"));
+        // and the healed connection keeps serving without retries
+        assert_eq!(client.get("/ping").unwrap().0, 200);
+        server.shutdown();
+    }
+
+    #[test]
+    fn connect_retry_gives_up_after_its_attempts() {
+        // a bound-then-dropped listener port refuses connections quickly
+        let addr = TcpListener::bind("127.0.0.1:0").unwrap().local_addr().unwrap();
+        let t0 = Instant::now();
+        assert!(HttpClient::connect_retry(&addr, 3).is_err());
+        // 2 sleeps of the 10 ms-doubling schedule: ~30 ms, well under a second
+        assert!(t0.elapsed() < Duration::from_secs(2));
+        // attempts are clamped to at least one try
+        assert!(HttpClient::connect_retry(&addr, 0).is_err());
+    }
+
+    #[test]
+    fn connect_retry_succeeds_against_a_live_server() {
+        let mut router = Router::new();
+        router.get("/ping", |_| Response::ok("pong"));
+        let server = HttpServer::start("127.0.0.1:0", router, 1).unwrap();
+        let mut client = HttpClient::connect_retry(&server.addr, 5).unwrap();
+        assert_eq!(client.get("/ping").unwrap().0, 200);
+        server.shutdown();
     }
 
     #[test]

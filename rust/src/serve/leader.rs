@@ -9,7 +9,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::agents::Agent;
-use crate::cluster::ClusterTopology;
+use crate::cluster::{ClusterTopology, FaultPlan};
 use crate::config::AgentKind;
 use crate::pipeline::{catalog, QosWeights};
 use crate::rl::online::{OnlineHandle, SharedPolicy};
@@ -69,6 +69,8 @@ pub fn status_json(s: &TenantStatus) -> Json {
         .set("clamped", s.clamped)
         .set("restarts", s.restarts)
         .set("last_decision_secs", s.last_decision_secs)
+        .set("health", s.health.as_str())
+        .set("degraded_secs", s.degraded_secs)
         .set("config", Json::Arr(s.config.iter().map(task_config_json).collect()))
         .set(
             "ready",
@@ -111,6 +113,10 @@ fn write_status(buf: &mut String, s: &TenantStatus) {
     write_num(buf, s.restarts as f64);
     buf.push_str(",\"last_decision_secs\":");
     write_num(buf, s.last_decision_secs);
+    buf.push_str(",\"health\":");
+    write_str(buf, s.health.as_str());
+    buf.push_str(",\"degraded_secs\":");
+    write_num(buf, s.degraded_secs);
     buf.push_str(",\"config\":[");
     for (i, c) in s.config.iter().enumerate() {
         if i > 0 {
@@ -156,6 +162,9 @@ pub struct Leader {
     published_batched: (usize, usize),
     /// batched-prediction totals already published (for counter deltas)
     published_batched_pred: (usize, usize),
+    /// failure-path totals already published (node failures, evacuations,
+    /// repairs, tenant kills — counter deltas, DESIGN.md §13)
+    published_failures: (usize, usize, usize, usize),
     /// online learning (DESIGN.md §11): the trainer's shared policy cell,
     /// polled for update/transition counter deltas each publish tick
     online: Option<Arc<SharedPolicy>>,
@@ -193,6 +202,7 @@ impl Leader {
                 publish_epoch: 0,
                 published_batched: (0, 0),
                 published_batched_pred: (0, 0),
+                published_failures: (0, 0, 0, 0),
                 online: None,
                 published_online: (0, 0),
                 latency_scratch: Vec::new(),
@@ -284,6 +294,7 @@ impl Leader {
                                 .set("name", n.name.as_str())
                                 .set("cores_total", n.cores_total)
                                 .set("cores_used", n.cores_used)
+                                .set("up", n.up)
                         })
                         .collect(),
                 ),
@@ -340,6 +351,19 @@ impl Leader {
                 Ok((200, status_json(&s)))
             }
             ControlRequest::GetCluster => Ok((200, self.cluster_json())),
+            ControlRequest::Chaos(spec) => {
+                let n_nodes = self.env.store.topo.nodes.len();
+                let plan =
+                    FaultPlan::parse(&spec, n_nodes).map_err(ApiError::bad_request)?;
+                let scheduled = self.env.schedule_plan(&plan, self.env.now);
+                Ok((
+                    200,
+                    Json::obj()
+                        .set("scheduled", scheduled)
+                        .set("pending", self.env.pending_faults())
+                        .set("at", self.env.now),
+                ))
+            }
             ControlRequest::Shutdown => Ok((200, Json::obj().set("shutdown", true))),
         }
     }
@@ -382,6 +406,7 @@ impl Leader {
                 record_keyed(&mut self.key_buf, "load_pred", &s.name, s.load_pred);
                 record_keyed(&mut self.key_buf, "qos", &s.name, s.last_qos);
                 record_keyed(&mut self.key_buf, "cost", &s.name, s.last_cost);
+                record_keyed(&mut self.key_buf, "degraded", &s.name, s.degraded_secs);
             }
             total_load += s.load_now;
             total_pred += s.load_pred;
@@ -419,6 +444,28 @@ impl Leader {
         m.set_gauge("opd_pipelines", &[], statuses.len() as f64);
         m.set_gauge("opd_cluster_used_cores", &[], self.env.store.topo.used());
         m.set_gauge("opd_cluster_free_cores", &[], self.env.store.topo.free());
+        // failure path (DESIGN.md §13): chaos/fault counters + fleet health
+        m.set_gauge("opd_nodes_up", &[], self.env.store.topo.n_up() as f64);
+        m.set_gauge("opd_degraded_tenants", &[], self.env.degraded_count() as f64);
+        let (seen_nf, seen_ev, seen_rp, seen_tk) = self.published_failures;
+        if self.env.node_failures > seen_nf {
+            m.inc("opd_node_failures_total", &[], (self.env.node_failures - seen_nf) as f64);
+        }
+        if self.env.evacuations > seen_ev {
+            m.inc("opd_evacuations_total", &[], (self.env.evacuations - seen_ev) as f64);
+        }
+        if self.env.repairs > seen_rp {
+            m.inc("opd_repairs_total", &[], (self.env.repairs - seen_rp) as f64);
+        }
+        if self.env.tenant_kills > seen_tk {
+            m.inc("opd_tenant_kills_total", &[], (self.env.tenant_kills - seen_tk) as f64);
+        }
+        self.published_failures = (
+            self.env.node_failures,
+            self.env.evacuations,
+            self.env.repairs,
+            self.env.tenant_kills,
+        );
         // batched decision path (DESIGN.md §7): how many decisions were
         // evaluated through a shared batched forward, and in how many groups
         let (seen_dec, seen_grp) = self.published_batched;
@@ -518,6 +565,8 @@ impl Leader {
             write_num(buf, node.cores_total);
             buf.push_str(",\"cores_used\":");
             write_num(buf, node.cores_used);
+            buf.push_str(",\"up\":");
+            buf.push_str(if node.up { "true" } else { "false" });
             buf.push('}');
         }
         buf.push_str("],\"pipelines\":[");
@@ -739,6 +788,39 @@ mod tests {
         l.publish();
         let text = l.cp.metrics.expose();
         assert!(text.contains("opd_qos{"), "per-tenant gauges resume under the cap");
+    }
+
+    #[test]
+    fn chaos_request_schedules_and_the_fleet_self_heals() {
+        let (mut l, _tx) = leader();
+        l.deploy(&spec("a", "P1", AgentKind::Greedy)).unwrap();
+        // malformed plans are a 400, not a leader crash
+        let err = l.handle(ControlRequest::Chaos("explode@1=0".into())).unwrap_err();
+        assert_eq!(err.status, 400);
+        let err = l.handle(ControlRequest::Chaos("crash@1=9".into())).unwrap_err();
+        assert_eq!(err.status, 400, "node index validated against the topology");
+        let (code, body) =
+            l.handle(ControlRequest::Chaos("crash@0=0,recover@3=0".into())).unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(body.req_f64("scheduled").unwrap() as usize, 2);
+        for _ in 0..6 {
+            l.env.tick();
+        }
+        l.publish();
+        assert_eq!(l.env.node_failures, 1);
+        assert_eq!(l.env.degraded_count(), 0, "spare capacity healed the fleet");
+        let text = l.cp.metrics.expose();
+        assert!(text.contains("opd_node_failures_total 1"), "{text}");
+        assert!(text.contains("opd_evacuations_total"));
+        assert!(text.contains("opd_repairs_total 1"));
+        assert!(text.contains("opd_degraded_tenants 0"));
+        assert!(text.contains("opd_nodes_up 3"));
+        // health travels through the /v1 status and cluster views
+        let (_, body) = l.handle(ControlRequest::GetPipeline("a".into())).unwrap();
+        assert_eq!(body.req_str("health").unwrap(), "healthy");
+        let (_, body) = l.handle(ControlRequest::GetCluster).unwrap();
+        let nodes = body.get("nodes").unwrap().as_arr().unwrap();
+        assert!(nodes.iter().all(|n| n.get("up").is_some()));
     }
 
     #[test]

@@ -13,4 +13,4 @@ pub use env::{
     decode_action, decode_action_into, encode_action, encode_action_into, ActionMasks, Env,
     LiteStep, LoadSource, Observation, StepResult,
 };
-pub use multi::{MultiEnv, Tenant, TenantStatus};
+pub use multi::{MultiEnv, Tenant, TenantHealth, TenantStatus};

@@ -14,7 +14,9 @@ use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap};
 
 use crate::agents::Agent;
-use crate::cluster::{ApplyOutcome, ClusterTopology, DeploymentStore};
+use crate::cluster::{
+    ApplyOutcome, ClusterTopology, DeploymentStore, FaultAction, FaultEvent, FaultPlan,
+};
 use crate::nn::policy::{predictor_fwd_batch_scratch, LstmBatchScratch};
 use crate::nn::spec::{LOGITS_DIM, PRED_WINDOW, STATE_DIM};
 use crate::nn::workspace::Workspace;
@@ -24,8 +26,34 @@ use crate::pipeline::{
 use crate::rl::online::OnlineHook;
 use crate::rl::Transition;
 use crate::sim::env::{build_state_append, LoadSource, Observation};
+use crate::util::prng::Pcg32;
 use crate::workload::predictor::LoadPredictor;
 use crate::workload::LoadHistory;
+
+/// Repair-loop health of a tenant (DESIGN.md §13). A node failure never
+/// deletes a tenant — it degrades it, and the self-healing loop walks it
+/// back to `Healthy` when capacity allows.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TenantHealth {
+    /// running its full desired configuration
+    #[default]
+    Healthy,
+    /// lost replicas (or runs a clamped restoration); repair keeps retrying
+    Degraded,
+    /// no feasible placement at all; parked with seeded exponential backoff
+    /// until capacity returns
+    Pending,
+}
+
+impl TenantHealth {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TenantHealth::Healthy => "healthy",
+            TenantHealth::Degraded => "degraded",
+            TenantHealth::Pending => "pending",
+        }
+    }
+}
 
 /// One deployed pipeline and everything it carries through the shared loop.
 pub struct Tenant {
@@ -59,6 +87,17 @@ pub struct Tenant {
     /// Eq. 7 reward accumulated for `pending` since its decision
     reward_acc: f64,
     reward_secs: usize,
+    /// repair state machine (DESIGN.md §13)
+    pub health: TenantHealth,
+    /// the configuration the repair loop restores toward — what the last
+    /// successful apply actually deployed
+    desired: Vec<TaskConfig>,
+    /// simulation time of the next repair attempt (when not Healthy)
+    next_repair: f64,
+    /// consecutive failed repair attempts (drives the exponential backoff)
+    repair_attempts: u32,
+    /// cumulative seconds spent not Healthy
+    pub degraded_secs: f64,
 }
 
 impl Tenant {
@@ -96,6 +135,11 @@ impl Tenant {
             pending: None,
             reward_acc: 0.0,
             reward_secs: 0,
+            health: TenantHealth::Healthy,
+            desired: Vec::new(),
+            next_repair: 0.0,
+            repair_attempts: 0,
+            degraded_secs: 0.0,
         }
     }
 
@@ -135,6 +179,10 @@ pub struct TenantStatus {
     pub restarts: usize,
     /// wall-clock seconds of the most recent agent decision
     pub last_decision_secs: f64,
+    /// repair state (DESIGN.md §13)
+    pub health: TenantHealth,
+    /// cumulative seconds this tenant has spent not Healthy
+    pub degraded_secs: f64,
 }
 
 /// Per-tenant observation ingredients captured before a batched forward
@@ -183,6 +231,20 @@ pub struct MultiEnv {
     pub online_transitions: usize,
     /// cumulative fleet-wide parameter adoptions at tick boundaries
     pub param_swaps: usize,
+    /// failure counters (DESIGN.md §13): Up→Down node transitions,
+    /// containers displaced by evacuations/evictions, tenants walked back to
+    /// Healthy, and tenant pod-kill faults applied
+    pub node_failures: usize,
+    pub evacuations: usize,
+    pub repairs: usize,
+    pub tenant_kills: usize,
+    /// scheduled chaos events not yet due, time-sorted (soonest first)
+    fault_queue: Vec<FaultEvent>,
+    /// seeded jitter for repair backoff — fixed seed, drawn in tenant-name
+    /// order, so failure runs replay bit-for-bit
+    repair_rng: Pcg32,
+    /// reused name buffer for the per-tick repair scan
+    repair_scratch: Vec<String>,
     ws: Workspace,
     batch_states: Vec<f32>,
     /// reused predictor-window scratch (raw f64 window of one tenant)
@@ -245,6 +307,13 @@ impl MultiEnv {
             policy_generation: 0,
             online_transitions: 0,
             param_swaps: 0,
+            node_failures: 0,
+            evacuations: 0,
+            repairs: 0,
+            tenant_kills: 0,
+            fault_queue: Vec::new(),
+            repair_rng: Pcg32::new(0xFA17),
+            repair_scratch: Vec::new(),
             ws: Workspace::new(),
             batch_states: Vec::new(),
             win_scratch: Vec::new(),
@@ -293,6 +362,7 @@ impl MultiEnv {
             tenant.clamped += 1;
         }
         tenant.restarts += out.restarts;
+        tenant.desired = out.applied.clone();
         // seed the load history so the first observation is meaningful
         let r = tenant.source.next_rate();
         tenant.history.push(r);
@@ -408,6 +478,166 @@ impl MultiEnv {
         }
     }
 
+    /// Schedule a chaos plan: every event fires at `base + event.at` on the
+    /// simulation clock. Plans merge — a second call interleaves by time.
+    /// Returns the number of events scheduled.
+    pub fn schedule_plan(&mut self, plan: &FaultPlan, base: f64) -> usize {
+        for e in &plan.events {
+            self.fault_queue.push(FaultEvent { at: base + e.at, action: e.action.clone() });
+        }
+        self.fault_queue.sort_by(|a, b| {
+            a.at.partial_cmp(&b.at).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        plan.events.len()
+    }
+
+    /// Chaos events scheduled but not yet fired.
+    pub fn pending_faults(&self) -> usize {
+        self.fault_queue.len()
+    }
+
+    /// Tenants currently not Healthy.
+    pub fn degraded_count(&self) -> usize {
+        self.tenants.values().filter(|t| t.health != TenantHealth::Healthy).count()
+    }
+
+    /// Inject one fault immediately. Out-of-range node indices and unknown
+    /// tenants are ignored (a chaos plan must not crash the leader).
+    pub fn apply_fault(&mut self, action: &FaultAction) {
+        let now = self.now;
+        match action {
+            FaultAction::NodeCrash(node) => {
+                let was_up =
+                    self.store.topo.nodes.get(*node).map(|n| n.up).unwrap_or(false);
+                let Ok(report) = self.store.fail_node(*node) else { return };
+                if was_up {
+                    self.node_failures += 1;
+                }
+                self.evacuations += report.containers;
+                for (name, _) in &report.tenants {
+                    self.mark_degraded(name, now);
+                }
+            }
+            FaultAction::NodeRecover(node) => {
+                if self.store.recover_node(*node).unwrap_or(false) {
+                    // capacity returned: every parked tenant retries now
+                    self.wake_unhealthy(now);
+                }
+            }
+            FaultAction::CapacityFlap { node, factor } => {
+                let Ok(report) = self.store.flap_node_capacity(*node, *factor) else {
+                    return;
+                };
+                self.evacuations += report.containers;
+                if report.containers > 0 {
+                    for (name, _) in &report.tenants {
+                        self.mark_degraded(name, now);
+                    }
+                } else {
+                    // no evictions — the flap can only have held or grown
+                    // usable capacity, so parked tenants retry now
+                    self.wake_unhealthy(now);
+                }
+            }
+            FaultAction::TenantKill(name) => {
+                if self.store.kill_replicas(name) > 0 {
+                    self.tenant_kills += 1;
+                    self.mark_degraded(name, now);
+                }
+            }
+        }
+    }
+
+    fn mark_degraded(&mut self, name: &str, now: f64) {
+        if let Some(t) = self.tenants.get_mut(name) {
+            if t.health == TenantHealth::Healthy {
+                t.health = TenantHealth::Degraded;
+            }
+            // repair runs in the same tick (faults fire before repairs)
+            t.next_repair = now;
+            t.repair_attempts = 0;
+        }
+    }
+
+    fn wake_unhealthy(&mut self, now: f64) {
+        for t in self.tenants.values_mut() {
+            if t.health != TenantHealth::Healthy {
+                t.next_repair = now;
+                t.repair_attempts = 0;
+            }
+        }
+    }
+
+    /// Fire every scheduled chaos event that is due at the current tick.
+    fn process_faults(&mut self) {
+        let now = self.now;
+        while self.fault_queue.first().is_some_and(|e| e.at <= now + 1e-9) {
+            let e = self.fault_queue.remove(0);
+            self.apply_fault(&e.action);
+        }
+    }
+
+    /// Run every due repair attempt, in tenant-name order (deterministic
+    /// backoff jitter draws). A repair re-applies the tenant's desired
+    /// config: an unclamped success restores Healthy; a clamped one keeps
+    /// it Degraded (partial restoration through the fit_config chain); a
+    /// placement failure parks it Pending. Both failure modes reschedule
+    /// with capped exponential backoff + seeded jitter — the tenant is
+    /// never dropped.
+    fn process_repairs(&mut self) {
+        let now = self.now;
+        let mut names = std::mem::take(&mut self.repair_scratch);
+        let cap = names.capacity();
+        let mut k = 0;
+        for (name, t) in &self.tenants {
+            if t.health != TenantHealth::Healthy && t.next_repair <= now + 1e-9 {
+                match names.get_mut(k) {
+                    Some(slot) => {
+                        slot.clear();
+                        slot.push_str(name);
+                    }
+                    None => names.push(name.clone()),
+                }
+                k += 1;
+            }
+        }
+        for name in names.iter().take(k) {
+            let Self { tenants, store, repair_rng, repairs, .. } = &mut *self;
+            let Some(t) = tenants.get_mut(name) else { continue };
+            match store.apply(name, &t.spec, &t.desired, now) {
+                Ok(out) => {
+                    t.generation = out.generation;
+                    t.restarts += out.restarts;
+                    if out.clamped {
+                        t.clamped += 1;
+                        t.health = TenantHealth::Degraded;
+                        Self::repair_backoff(t, repair_rng, now);
+                    } else {
+                        t.health = TenantHealth::Healthy;
+                        t.repair_attempts = 0;
+                        *repairs += 1;
+                    }
+                }
+                Err(_) => {
+                    t.health = TenantHealth::Pending;
+                    Self::repair_backoff(t, repair_rng, now);
+                }
+            }
+        }
+        if names.capacity() != cap {
+            self.obs_grow_events.set(self.obs_grow_events.get() + 1);
+        }
+        self.repair_scratch = names;
+    }
+
+    /// Capped exponential backoff with seeded jitter: 2·2^attempts seconds
+    /// (capped at 60) scaled by a uniform draw in [0.5, 1.5).
+    fn repair_backoff(t: &mut Tenant, rng: &mut Pcg32, now: f64) {
+        let base = (2.0 * f64::powi(2.0, t.repair_attempts.min(5) as i32)).min(60.0);
+        t.next_repair = now + base * (0.5 + rng.uniform());
+        t.repair_attempts = t.repair_attempts.saturating_add(1);
+    }
+
     /// Run one tenant's adaptation decision against the shared cluster.
     /// Observation ingredients are assembled into the env's reused scratch
     /// buffers (the Env obs-scratch pattern — allocation-free after warm-up).
@@ -424,6 +654,7 @@ impl MultiEnv {
             online,
             online_transitions,
             obs_grow_events,
+            repairs,
             ..
         } = self;
         let t = match tenants.get_mut(name) {
@@ -467,6 +698,14 @@ impl MultiEnv {
                     t.clamped += 1;
                 }
                 t.restarts += out.restarts;
+                // a successful unclamped agent apply is also a repair: the
+                // tenant runs a full desired config again
+                if t.health != TenantHealth::Healthy && !out.clamped {
+                    t.health = TenantHealth::Healthy;
+                    t.repair_attempts = 0;
+                    *repairs += 1;
+                }
+                t.desired = out.applied;
             }
             // infeasible even after clamping (the other tenants hold the
             // cluster): keep the previous deployment and try again next round
@@ -639,8 +878,17 @@ impl MultiEnv {
         self.batched_groups += 1;
         self.batched_decisions += batch;
         let fwd_share = fwd_secs / batch as f64;
-        let Self { tenants, store, preps, batch_states, ws, online, online_transitions, .. } =
-            self;
+        let Self {
+            tenants,
+            store,
+            preps,
+            batch_states,
+            ws,
+            online,
+            online_transitions,
+            repairs,
+            ..
+        } = self;
         for (row, p) in preps[..batch].iter().enumerate() {
             let name = &names[p.idx];
             let t = match tenants.get_mut(name) {
@@ -677,6 +925,12 @@ impl MultiEnv {
                         t.clamped += 1;
                     }
                     t.restarts += out.restarts;
+                    if t.health != TenantHealth::Healthy && !out.clamped {
+                        t.health = TenantHealth::Healthy;
+                        t.repair_attempts = 0;
+                        *repairs += 1;
+                    }
+                    t.desired = out.applied;
                 }
                 // infeasible even after clamping: keep the previous
                 // deployment and try again next round (same as decide())
@@ -698,6 +952,10 @@ impl MultiEnv {
         // adoption happens BEFORE groups form, so a batched group never
         // mixes parameter fingerprints (DESIGN.md §11)
         self.apply_published_params();
+        // chaos fires before repairs, so an evacuated tenant's first repair
+        // attempt runs in the very tick the node died (DESIGN.md §13)
+        self.process_faults();
+        self.process_repairs();
         let scratch_caps = (
             self.due_wheel.capacity(),
             self.due_scratch.capacity(),
@@ -808,6 +1066,9 @@ impl MultiEnv {
             t.qos_sum += q;
             t.cost_sum += obs_metrics.cost;
             t.secs += 1;
+            if t.health != TenantHealth::Healthy {
+                t.degraded_secs += 1.0;
+            }
             // accrue the Eq. 7 reward for the open online transition: its
             // final reward is the interval average, mirroring Env::run_interval
             if t.pending.is_some() {
@@ -864,6 +1125,8 @@ impl MultiEnv {
         out.clamped = t.clamped;
         out.restarts = t.restarts;
         out.last_decision_secs = t.last_decision_secs;
+        out.health = t.health;
+        out.degraded_secs = t.degraded_secs;
         if caps != (out.name.capacity(), out.pipeline.capacity(), out.agent.capacity())
             || vec_caps != (out.config.capacity(), out.ready.capacity())
         {
@@ -1358,5 +1621,119 @@ mod tests {
         let after = env.status("a").unwrap();
         assert_eq!(after.decisions, 0, "stats reset on replace");
         assert_eq!(env.n_tenants(), 1);
+    }
+
+    #[test]
+    fn node_crash_evacuates_and_self_heals_on_spare_capacity() {
+        let mut env = MultiEnv::new(ClusterTopology::paper_testbed(), 3.0);
+        env.deploy(tenant("vid", "video-analytics", WorkloadKind::SteadyHigh, 7), None)
+            .unwrap();
+        env.deploy(tenant("iot", "iot-anomaly", WorkloadKind::SteadyLow, 3), None).unwrap();
+        env.run_for(5);
+        // node 0 fills first under FFD, so crashing it hits real containers
+        let plan = FaultPlan::parse("crash@5=0", 3).unwrap();
+        assert_eq!(env.schedule_plan(&plan, 0.0), 1);
+        env.run_for(5);
+        assert_eq!(env.pending_faults(), 0);
+        assert_eq!(env.node_failures, 1);
+        assert!(env.evacuations > 0, "the crashed node held containers");
+        // two spare 10-core nodes absorb the re-placement in the same tick
+        assert!(env.repairs >= 1, "repair ran in the crash tick");
+        assert_eq!(env.degraded_count(), 0, "fleet healed on spare capacity");
+        for name in ["vid", "iot"] {
+            let s = env.status(name).unwrap();
+            assert_eq!(s.health, TenantHealth::Healthy);
+            assert!(s.ready, "{name} is serving again");
+        }
+        // no container may sit on the downed node
+        for d in env.store.deployments() {
+            assert!(d.containers.iter().all(|c| c.node != 0));
+        }
+    }
+
+    #[test]
+    fn total_outage_parks_tenants_without_dropping_them() {
+        let mut env = MultiEnv::new(ClusterTopology::from_cores(&[2.0, 2.0]), 3.0);
+        env.deploy(tenant("a", "P1", WorkloadKind::SteadyLow, 1), None).unwrap();
+        env.deploy(tenant("b", "P1", WorkloadKind::SteadyLow, 2), None).unwrap();
+        let plan = FaultPlan::parse("crash@0=0,crash@0=1", 2).unwrap();
+        env.schedule_plan(&plan, 0.0);
+        env.run_for(30);
+        // nowhere to go: both parked, neither dropped
+        assert_eq!(env.n_tenants(), 2, "node failure never drops a tenant");
+        assert_eq!(env.degraded_count(), 2);
+        assert_eq!(env.repairs, 0);
+        for name in ["a", "b"] {
+            let s = env.status(name).unwrap();
+            assert_eq!(s.health, TenantHealth::Pending);
+            assert!(s.degraded_secs > 10.0, "{name} accrued time-in-degraded");
+            assert_eq!(s.cores, 0.0, "no capacity anywhere to hold replicas");
+        }
+        // backoff is live: attempts climbed, next attempt is in the future
+        let t = &env.tenants["a"];
+        assert!(t.repair_attempts >= 2, "attempts={}", t.repair_attempts);
+        assert!(t.next_repair > env.now);
+        // capacity returns → parked tenants retry immediately and heal
+        env.apply_fault(&FaultAction::NodeRecover(0));
+        env.apply_fault(&FaultAction::NodeRecover(1));
+        env.run_for(3);
+        assert_eq!(env.degraded_count(), 0, "recovery healed the fleet");
+        assert_eq!(env.repairs, 2);
+        assert!(env.status("a").unwrap().ready);
+    }
+
+    #[test]
+    fn tenant_kill_repairs_on_the_next_tick() {
+        let mut env = MultiEnv::new(ClusterTopology::paper_testbed(), 3.0);
+        env.deploy(tenant("a", "P1", WorkloadKind::SteadyLow, 1), None).unwrap();
+        env.run_for(5);
+        env.apply_fault(&FaultAction::TenantKill("a".into()));
+        assert_eq!(env.tenant_kills, 1);
+        assert_eq!(env.status("a").unwrap().health, TenantHealth::Degraded);
+        assert_eq!(env.status("a").unwrap().cores, 0.0);
+        env.run_for(1);
+        let s = env.status("a").unwrap();
+        assert_eq!(s.health, TenantHealth::Healthy);
+        assert!(s.cores > 0.0, "replicas restored from the desired spec");
+        assert_eq!(env.repairs, 1);
+        // killing an unknown tenant is ignored, not fatal
+        env.apply_fault(&FaultAction::TenantKill("ghost".into()));
+        assert_eq!(env.tenant_kills, 1);
+    }
+
+    fn chaos_fingerprint(env: &MultiEnv) -> Vec<u64> {
+        let mut fp = vec![
+            env.node_failures as u64,
+            env.evacuations as u64,
+            env.repairs as u64,
+            env.tenant_kills as u64,
+            env.store.allocated_cores().to_bits(),
+        ];
+        for name in env.names() {
+            let s = env.status(&name).unwrap();
+            fp.push(s.avg_qos.to_bits());
+            fp.push(s.avg_cost.to_bits());
+            fp.push(s.cores.to_bits());
+            fp.push(s.decisions as u64);
+            fp.push(s.degraded_secs.to_bits());
+        }
+        fp
+    }
+
+    #[test]
+    fn seeded_chaos_runs_replay_bit_for_bit() {
+        let run = |seed: u64| {
+            let mut env = MultiEnv::new(ClusterTopology::paper_testbed(), 3.0);
+            env.deploy(tenant("vid", "video-analytics", WorkloadKind::Fluctuating, 7), None)
+                .unwrap();
+            env.deploy(tenant("iot", "iot-anomaly", WorkloadKind::SteadyLow, 3), None)
+                .unwrap();
+            let plan = FaultPlan::seeded(seed, 3, 40.0, 10.0);
+            env.schedule_plan(&plan, 0.0);
+            env.run_for(60);
+            chaos_fingerprint(&env)
+        };
+        assert_eq!(run(7), run(7), "same seed replays bitwise");
+        assert_ne!(run(7), run(8), "a different seed perturbs the run");
     }
 }

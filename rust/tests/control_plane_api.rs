@@ -174,7 +174,37 @@ fn v1_control_plane_end_to_end() {
         assert_eq!(code, 200);
         assert!(body.contains("\"pipelines\""));
 
-        // 11. stop the leader over the API
+        // 11. chaos over real HTTP (DESIGN.md §13): bad plans are rejected,
+        // a crash/recover pair is scheduled, the failure shows up in the
+        // metrics, and the fleet self-heals back to a fully-up cluster
+        let (code, _) = http_post(&addr, "/v1/chaos", r#"{"plan":"explode@1=0"}"#).unwrap();
+        assert_eq!(code, 400, "unknown fault kind must be rejected");
+        let (code, _) = http_post(&addr, "/v1/chaos", r#"{"nope":1}"#).unwrap();
+        assert_eq!(code, 400, "missing 'plan' field must be rejected");
+        let (code, body) =
+            http_post(&addr, "/v1/chaos", r#"{"plan":"crash@0=2,recover@2=2"}"#).unwrap();
+        assert_eq!(code, 200, "{body}");
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("scheduled").unwrap().as_i64().unwrap(), 2, "{body}");
+        std::thread::sleep(std::time::Duration::from_millis(400));
+        let (_, text) = http_get(&addr, "/metrics").unwrap();
+        assert!(text.contains("opd_node_failures_total"), "crash must be counted:\n{text}");
+        assert!(text.contains("opd_nodes_up 3"), "recovery must bring all nodes back:\n{text}");
+        assert!(text.contains("opd_degraded_tenants 0"), "fleet must self-heal:\n{text}");
+        let (code, body) = http_get(&addr, "/v1/cluster").unwrap();
+        assert_eq!(code, 200);
+        let cl = Json::parse(&body).unwrap();
+        assert!(
+            cl.get("nodes")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .all(|n| n.get("up").unwrap().as_bool().unwrap()),
+            "{body}"
+        );
+
+        // 12. stop the leader over the API
         let (code, _) = http_post(&addr, "/v1/shutdown", "").unwrap();
         assert_eq!(code, 200);
     });
