@@ -1,9 +1,11 @@
 //! §Perf — decision-path microbenchmarks (the L3 optimization target of
-//! DESIGN.md §7): state assembly, policy forward (AOT HLO vs native mirror
-//! vs batched Workspace), a B = 1/4/16/64 batch sweep against B sequential
-//! forwards, the allocation-free single-decision check, masked sampling,
-//! the full decide() path, predictor, IPA solver per preset, and raw
-//! simulator throughput. Results land in BENCH_hotpath.json.
+//! DESIGN.md §7): state assembly, the §14 scalar-vs-SIMD kernel sweep
+//! (dense layer shapes + the 120-step LSTM, reporting ns/call, GFLOP/s and
+//! speedup), policy forward (AOT HLO vs scratch vs batched Workspace), a
+//! B = 1/4/16/64 batch sweep against B sequential forwards, the
+//! allocation-free single-decision check, the full decide() path,
+//! predictor, IPA solver per preset, and raw simulator throughput.
+//! Results land in BENCH_hotpath.json.
 //!
 //! Run: cargo bench --bench perf_hotpath
 
@@ -11,14 +13,16 @@ use std::rc::Rc;
 
 use opd::agents::{Agent, IpaAgent, OpdAgent};
 use opd::cluster::ClusterTopology;
-use opd::nn::policy::policy_fwd_native;
-use opd::nn::spec::{LOGITS_DIM, POLICY_PARAM_COUNT, STATE_DIM};
+use opd::nn::math::{self, dense_batch_into};
+use opd::nn::policy::{self, policy_fwd_scratch, predictor_fwd_scratch, LstmScratch, PolicyScratch};
+use opd::nn::spec::*;
 use opd::nn::workspace::Workspace;
 use opd::pipeline::catalog::{self, Preset};
 use opd::pipeline::QosWeights;
 use opd::runtime::OpdRuntime;
 use opd::sim::{build_masks, build_state, Env};
 use opd::util::json::Json;
+use opd::util::prng::Pcg32;
 use opd::util::timer::Bench;
 use opd::workload::predictor::{HloLstmPredictor, LoadPredictor, LstmPredictor, MovingMaxPredictor};
 use opd::workload::WorkloadKind;
@@ -60,6 +64,84 @@ fn main() {
     });
     println!("{}", r.row());
 
+    // ---- §14 kernel sweep: scalar_reference vs fixed-lane kernels ---------
+    println!("\n--- §14 kernel sweep (pre-§14 scalar kernels vs lane kernels) ---");
+    let mut kernel_rows: Vec<Json> = Vec::new();
+    let mut krng = Pcg32::new(7);
+    let layers =
+        [("fc_in", STATE_DIM, HIDDEN), ("res", HIDDEN, HIDDEN), ("head", HIDDEN, LOGITS_DIM)];
+    for (layer, i, o) in layers {
+        for b in [1usize, 16, 64] {
+            let xs: Vec<f32> = (0..b * i).map(|_| (krng.normal() * 0.5) as f32).collect();
+            let w: Vec<f32> = (0..i * o).map(|_| (krng.normal() * 0.1) as f32).collect();
+            let bias: Vec<f32> = (0..o).map(|_| (krng.normal() * 0.1) as f32).collect();
+            let mut out = vec![0.0f32; b * o];
+            let r_scalar = bench.run(&format!("dense {layer} {i}→{o} B={b:2} scalar"), || {
+                math::scalar_reference::dense_batch_into(&xs, b, i, &w, &bias, o, true, &mut out);
+                std::hint::black_box(out[0]);
+            });
+            println!("{}", r_scalar.row());
+            let r_lane = bench.run(&format!("dense {layer} {i}→{o} B={b:2} §14 lanes"), || {
+                dense_batch_into(&xs, b, i, &w, &bias, o, true, &mut out);
+                std::hint::black_box(out[0]);
+            });
+            println!("{}", r_lane.row());
+            let flops = (2 * b * i * o) as f64;
+            let speedup = r_scalar.mean_ns / r_lane.mean_ns;
+            println!(
+                "  → {layer} B={b}: {:.2} → {:.2} GFLOP/s ({speedup:.2}× vs scalar)",
+                flops / r_scalar.mean_ns,
+                flops / r_lane.mean_ns
+            );
+            kernel_rows.push(
+                Json::obj()
+                    .set("kernel", format!("dense_fwd_{layer}"))
+                    .set("batch", b)
+                    .set("in_dim", i)
+                    .set("out_dim", o)
+                    .set("scalar_mean_ns", r_scalar.mean_ns)
+                    .set("simd_mean_ns", r_lane.mean_ns)
+                    .set("scalar_gflops", flops / r_scalar.mean_ns)
+                    .set("simd_gflops", flops / r_lane.mean_ns)
+                    .set("speedup", speedup),
+            );
+        }
+    }
+    // the 120-step LSTM predictor, scalar vs lanes (one recurrent 25→100
+    // matmul per step dominates)
+    let pparams: Vec<f32> =
+        (0..PREDICTOR_PARAM_COUNT).map(|_| (krng.normal() * 0.3) as f32).collect();
+    let fwindow: Vec<f32> =
+        (0..PRED_WINDOW).map(|t| 60.0 + (t as f32 * 0.3).sin() * 30.0).collect();
+    let mut ls = LstmScratch::default();
+    let r_scalar = bench.run("LSTM predictor 120-step scalar", || {
+        std::hint::black_box(policy::scalar_reference::predictor_fwd(&pparams, &fwindow, &mut ls));
+    });
+    println!("{}", r_scalar.row());
+    let r_lane = bench.run("LSTM predictor 120-step §14 lanes", || {
+        std::hint::black_box(predictor_fwd_scratch(&pparams, &fwindow, &mut ls));
+    });
+    println!("{}", r_lane.row());
+    let lstm_flops = (2 * LSTM_HIDDEN * 4 * LSTM_HIDDEN * PRED_WINDOW) as f64;
+    let lstm_speedup = r_scalar.mean_ns / r_lane.mean_ns;
+    println!(
+        "  → LSTM: {:.2} → {:.2} GFLOP/s ({lstm_speedup:.2}× vs scalar)",
+        lstm_flops / r_scalar.mean_ns,
+        lstm_flops / r_lane.mean_ns
+    );
+    kernel_rows.push(
+        Json::obj()
+            .set("kernel", "lstm_fwd")
+            .set("batch", 1usize)
+            .set("in_dim", LSTM_HIDDEN)
+            .set("out_dim", 4 * LSTM_HIDDEN)
+            .set("scalar_mean_ns", r_scalar.mean_ns)
+            .set("simd_mean_ns", r_lane.mean_ns)
+            .set("scalar_gflops", lstm_flops / r_scalar.mean_ns)
+            .set("simd_gflops", lstm_flops / r_lane.mean_ns)
+            .set("speedup", lstm_speedup),
+    );
+
     // ---- policy forward: HLO vs native -----------------------------------
     let state = {
         let obs = env.observe();
@@ -67,7 +149,7 @@ fn main() {
     };
     let params: Vec<f32> = match &rt {
         Some(rt) => rt.policy_init.clone(),
-        None => vec![0.01; opd::nn::spec::POLICY_PARAM_COUNT],
+        None => vec![0.01; POLICY_PARAM_COUNT],
     };
     if let Some(rt) = &rt {
         let r = bench.run("policy_fwd HLO (params staged per call)", || {
@@ -80,10 +162,22 @@ fn main() {
         });
         println!("{}", r.row());
     }
-    let r_mirror = bench.run("policy_fwd native mirror (allocs per call)", || {
-        std::hint::black_box(policy_fwd_native(&params, &state));
+    println!();
+    let mut ps = PolicyScratch::default();
+    let r_scalar_fwd = bench.run("policy_fwd single-state scalar (pre-§14)", || {
+        let (l, v) = policy::scalar_reference::policy_fwd(&params, &state, &mut ps);
+        std::hint::black_box((l[0], v));
+    });
+    println!("{}", r_scalar_fwd.row());
+    let warm_ps = ps.grow_events();
+    let r_mirror = bench.run("policy_fwd_scratch single-state §14 lanes", || {
+        let (l, v) = policy_fwd_scratch(&params, &state, &mut ps);
+        std::hint::black_box((l[0], v));
     });
     println!("{}", r_mirror.row());
+    assert_eq!(ps.grow_events(), warm_ps, "single-state scratch path allocated after warm-up");
+    let policy_speedup = r_scalar_fwd.mean_ns / r_mirror.mean_ns;
+    println!("  → §14 lanes run the full forward {policy_speedup:.2}× vs scalar");
 
     // ---- batched, allocation-free forward (DESIGN.md §7) -----------------
     let mut ws = Workspace::new();
@@ -92,7 +186,7 @@ fn main() {
     });
     println!("{}", r_ws1.row());
     println!(
-        "  → allocating mirror is {:+.1}% slower than the Workspace forward",
+        "  → single-state scratch is {:+.1}% vs the Workspace B=1 forward",
         (r_mirror.mean_ns - r_ws1.mean_ns) / r_ws1.mean_ns * 100.0
     );
 
@@ -120,12 +214,14 @@ fn main() {
                 states.push(x + ((i * 31 + j) % 17) as f32 * 1e-3);
             }
         }
-        let r_seq = bench.run(&format!("native ×{b} sequential"), || {
+        let r_seq = bench.run(&format!("scratch ×{b} sequential"), || {
             for i in 0..b {
-                std::hint::black_box(policy_fwd_native(
+                let (l, v) = policy_fwd_scratch(
                     &params,
                     &states[i * STATE_DIM..(i + 1) * STATE_DIM],
-                ));
+                    &mut ps,
+                );
+                std::hint::black_box((l[0], v));
             }
         });
         println!("{}", r_seq.row());
@@ -148,9 +244,12 @@ fn main() {
         .set("param_count", POLICY_PARAM_COUNT)
         .set("state_dim", STATE_DIM)
         .set("logits_dim", LOGITS_DIM)
-        .set("single_mirror_mean_ns", r_mirror.mean_ns)
+        .set("single_scalar_mean_ns", r_scalar_fwd.mean_ns)
+        .set("single_scratch_mean_ns", r_mirror.mean_ns)
+        .set("single_forward_speedup", policy_speedup)
         .set("single_workspace_mean_ns", r_ws1.mean_ns)
         .set("workspace_grow_events_after_warmup", warm_growth as f64)
+        .set("kernel_sweep", Json::Arr(kernel_rows))
         .set("batch_sweep", Json::Arr(sweep_rows));
     match std::fs::write("BENCH_hotpath.json", bench_json.to_pretty()) {
         Ok(()) => println!("  → wrote BENCH_hotpath.json"),

@@ -1,14 +1,18 @@
 //! §Perf — native fused PPO train step microbenchmarks (DESIGN.md §8):
-//! the grad pass (activation-stashing forward + loss head + sharded
-//! analytic backward) and the full `update_native` step (grad + global
-//! clip + Adam), swept over minibatch sizes × backward shard counts
-//! {1, 2, 4, N_cores}. Asserts the step is allocation-free after warm-up
-//! (workspace `grow_events` flat) and writes BENCH_train.json with
-//! steps/sec, grad-pass ns and the alloc counter per configuration.
+//! the §14 backward-kernel sweep (pre-§14 scalar `dense_bwd_batch_into`
+//! vs the fixed-lane version at the policy layer shapes, reporting
+//! ns/call, GFLOP/s and speedup), the grad pass (activation-stashing
+//! forward + loss head + sharded analytic backward) and the full
+//! `update_native` step (grad + global clip + Adam), swept over minibatch
+//! sizes × backward shard counts {1, 2, 4, N_cores}. Asserts the step is
+//! allocation-free after warm-up (workspace `grow_events` flat) and
+//! writes BENCH_train.json with steps/sec, grad-pass ns, the kernel rows
+//! and the alloc counter per configuration.
 //!
 //! Run: cargo bench --bench perf_train   (no artifacts needed — this is
 //! the pure-CPU path `opd train` uses when PJRT is absent)
 
+use opd::nn::math::{self, dense_bwd_batch_into};
 use opd::nn::spec::*;
 use opd::nn::workspace::Workspace;
 use opd::rl::{ppo_loss_grad_native, Minibatch, PpoLearner, StepScratch};
@@ -34,6 +38,66 @@ fn main() {
     // --quick (CI): shorter measurement budget per case, same sweep shape
     let bench = if quick { Bench::quick() } else { Bench::default() };
     let mut results = Vec::new();
+
+    // ---- §14 backward-kernel sweep: scalar_reference vs lane kernels ------
+    println!("--- §14 backward kernel sweep (pre-§14 scalar vs lane kernels) ---");
+    let mut kernel_rows: Vec<Json> = Vec::new();
+    let layers =
+        [("fc_in", STATE_DIM, HIDDEN), ("res", HIDDEN, HIDDEN), ("head", HIDDEN, LOGITS_DIM)];
+    for (layer, i, o) in layers {
+        let b = TRAIN_BATCH;
+        let xs: Vec<f32> = (0..b * i).map(|_| (rng.normal() * 0.5) as f32).collect();
+        let w: Vec<f32> = (0..i * o).map(|_| (rng.normal() * 0.1) as f32).collect();
+        let dy: Vec<f32> = (0..b * o).map(|_| (rng.normal() * 0.3) as f32).collect();
+        let mut gw = vec![0.0f32; i * o];
+        let mut gb = vec![0.0f32; o];
+        let mut dx = vec![0.0f32; b * i];
+        let r_scalar = bench.run(&format!("dense_bwd {layer} {i}→{o} B={b} scalar"), || {
+            gw.fill(0.0);
+            gb.fill(0.0);
+            math::scalar_reference::dense_bwd_batch_into(
+                &xs,
+                b,
+                i,
+                &w,
+                o,
+                &dy,
+                &mut gw,
+                &mut gb,
+                Some(&mut dx),
+            );
+            std::hint::black_box((gw[0], gb[0], dx[0]));
+        });
+        println!("{}", r_scalar.row());
+        let r_lane = bench.run(&format!("dense_bwd {layer} {i}→{o} B={b} §14 lanes"), || {
+            gw.fill(0.0);
+            gb.fill(0.0);
+            dense_bwd_batch_into(&xs, b, i, &w, o, &dy, &mut gw, &mut gb, Some(&mut dx));
+            std::hint::black_box((gw[0], gb[0], dx[0]));
+        });
+        println!("{}", r_lane.row());
+        // gw and dx are each a 2·B·i·o GEMM-shaped pass; gb is B·o adds
+        let flops = (4 * b * i * o + b * o) as f64;
+        let speedup = r_scalar.mean_ns / r_lane.mean_ns;
+        println!(
+            "  → {layer}: {:.2} → {:.2} GFLOP/s ({speedup:.2}× vs scalar)",
+            flops / r_scalar.mean_ns,
+            flops / r_lane.mean_ns
+        );
+        kernel_rows.push(
+            Json::obj()
+                .set("kernel", format!("dense_bwd_{layer}"))
+                .set("batch", b)
+                .set("in_dim", i)
+                .set("out_dim", o)
+                .set("scalar_mean_ns", r_scalar.mean_ns)
+                .set("simd_mean_ns", r_lane.mean_ns)
+                .set("scalar_gflops", flops / r_scalar.mean_ns)
+                .set("simd_gflops", flops / r_lane.mean_ns)
+                .set("speedup", speedup),
+        );
+    }
+    println!();
 
     for &rows in &row_counts {
         // the synthetic default old_logp is the near-uniform-policy logp,
@@ -86,6 +150,7 @@ fn main() {
         .set("bench", "perf_train")
         .set("cores", cores as i64)
         .set("train_batch", TRAIN_BATCH)
+        .set("kernel_sweep", Json::Arr(kernel_rows))
         .set("results", Json::Arr(results));
     std::fs::write("BENCH_train.json", out.to_pretty()).expect("write BENCH_train.json");
     println!("wrote BENCH_train.json ({} configurations)", row_counts.len() * shard_counts.len());

@@ -13,7 +13,6 @@
 use std::rc::Rc;
 
 use crate::agents::Agent;
-use crate::nn::policy::policy_fwd_native;
 use crate::nn::spec::*;
 use crate::nn::workspace::{params_fingerprint, select_heads, Workspace};
 use crate::pipeline::TaskConfig;
@@ -117,22 +116,26 @@ impl OpdAgent {
         self.ws.grow_events()
     }
 
-    /// Evaluate the policy network (HLO or native), allocating reference
-    /// path — the trainer's expert scoring and the cross-check tests use
-    /// this; `decide` itself goes through the workspace.
-    pub fn forward(&self, state: &[f32]) -> (Vec<f32>, f32) {
-        match &self.backend {
+    /// Evaluate the policy network (HLO or native) for an arbitrary state,
+    /// leaving the logits in the workspace (allocation-free after warm-up,
+    /// same §14 lane kernels as the batched tick path). The cross-check
+    /// tests use this; `decide` itself goes through `forward_scratch`.
+    pub fn forward(&mut self, state: &[f32]) -> (&[f32], f32) {
+        let value = match &self.backend {
             Backend::Hlo(rt, pinned) => {
                 let buf = pinned.get_or_init(|| rt.pin_params(&self.params).ok());
-                match buf {
-                    Some(b) => rt
-                        .policy_forward_pinned(b, state)
-                        .unwrap_or_else(|_| policy_fwd_native(&self.params, state)),
-                    None => policy_fwd_native(&self.params, state),
+                let hlo = buf.as_ref().and_then(|b| rt.policy_forward_pinned(b, state).ok());
+                match hlo {
+                    Some((logits, value)) => {
+                        self.ws.set_logits(&logits);
+                        value
+                    }
+                    None => self.ws.policy_fwd_into(&self.params, state),
                 }
             }
-            Backend::Native => policy_fwd_native(&self.params, state),
-        }
+            Backend::Native => self.ws.policy_fwd_into(&self.params, state),
+        };
+        (self.ws.logits(), value)
     }
 
     /// Run the forward for `self.last.state`, leaving the logits in the

@@ -2,7 +2,16 @@
 //! sampling, log-probabilities, entropy, argmax — everything the coordinator
 //! does *around* the HLO policy forward (sampling happens rust-side so the
 //! graph stays deterministic and replayable).
+//!
+//! The dense/softmax reduction kernels here run on the fixed-lane SIMD
+//! substrate (`nn::simd`, DESIGN.md §14): every reduction accumulates in 8
+//! interleaved partial sums (term k → lane `k mod 8`) combined by a fixed
+//! pairwise tree, identical on every target, batch size and thread count.
+//! The pre-§14 scalar kernels are retained verbatim in
+//! [`scalar_reference`] as the bench baseline and numeric cross-check.
 
+use crate::nn::simd::{combine8, combine8_max, lane_colsum_acc, lane_dot, lane_matmul,
+    lane_outer_acc, LANES};
 use crate::util::prng::Pcg32;
 
 pub const NEG_INF: f32 = -1.0e9;
@@ -10,33 +19,42 @@ pub const NEG_INF: f32 = -1.0e9;
 /// Numerically-stable masked log-softmax, written into `out` (hot path:
 /// no allocation; `out` is caller-owned scratch of the same length).
 /// `mask[i] == false` → excluded.
+///
+/// §14 chains: the masked max and the exp-sum both accumulate valid term k
+/// into lane `k mod 8` (ascending k) and combine by the pairwise tree.
+/// `exp`/`ln` stay scalar-libm and the max uses scalar `f32::max`, so the
+/// kernel is bit-identical across the compile-time SIMD backends.
 pub fn log_softmax_masked_into(logits: &[f32], mask: &[bool], out: &mut [f32]) {
     assert_eq!(logits.len(), mask.len());
     assert_eq!(logits.len(), out.len());
-    let mx = logits
-        .iter()
-        .zip(mask)
-        .filter(|(_, m)| **m)
-        .map(|(x, _)| *x)
-        .fold(f32::NEG_INFINITY, f32::max);
+    let mut mx8 = [f32::NEG_INFINITY; LANES];
+    for (k, (x, m)) in logits.iter().zip(mask).enumerate() {
+        if *m {
+            let l = &mut mx8[k % LANES];
+            *l = l.max(*x);
+        }
+    }
+    let mx = combine8_max(&mx8);
     if mx == f32::NEG_INFINITY {
         // fully-masked head: NEG_INF everywhere (sampling/argmax guard on it)
         out.fill(NEG_INF);
         return;
     }
-    let mut denom = 0.0f32;
-    for (x, m) in logits.iter().zip(mask) {
+    let mut den8 = [0.0f32; LANES];
+    for (k, (x, m)) in logits.iter().zip(mask).enumerate() {
         if *m {
-            denom += (x - mx).exp();
+            den8[k % LANES] += (x - mx).exp();
         }
     }
-    let log_denom = denom.ln();
+    let log_denom = combine8(&den8).ln();
     for ((o, x), m) in out.iter_mut().zip(logits).zip(mask) {
         *o = if *m { x - mx - log_denom } else { NEG_INF };
     }
 }
 
-/// Allocating convenience wrapper around [`log_softmax_masked_into`].
+/// Allocating convenience wrapper around [`log_softmax_masked_into`]
+/// (unit tests only — hot paths use the `_into`/`_scratch` kernels).
+#[cfg(test)]
 pub fn log_softmax_masked(logits: &[f32], mask: &[bool]) -> Vec<f32> {
     let mut out = vec![0.0f32; logits.len()];
     log_softmax_masked_into(logits, mask, &mut out);
@@ -44,6 +62,7 @@ pub fn log_softmax_masked(logits: &[f32], mask: &[bool]) -> Vec<f32> {
 }
 
 /// Masked softmax probabilities (sum to 1 over the valid entries).
+#[cfg(test)]
 pub fn softmax_masked(logits: &[f32], mask: &[bool]) -> Vec<f32> {
     log_softmax_masked(logits, mask)
         .iter()
@@ -85,7 +104,9 @@ pub fn sample_masked_scratch(
     (last_valid, scratch[last_valid])
 }
 
-/// Allocating convenience wrapper around [`sample_masked_scratch`].
+/// Allocating convenience wrapper around [`sample_masked_scratch`]
+/// (unit tests only).
+#[cfg(test)]
 pub fn sample_masked(logits: &[f32], mask: &[bool], rng: &mut Pcg32) -> (usize, f32) {
     let mut scratch = vec![0.0f32; logits.len()];
     sample_masked_scratch(logits, mask, rng, &mut scratch)
@@ -110,13 +131,16 @@ pub fn argmax_masked_scratch(logits: &[f32], mask: &[bool], scratch: &mut [f32])
     (best, scratch[best])
 }
 
-/// Allocating convenience wrapper around [`argmax_masked_scratch`].
+/// Allocating convenience wrapper around [`argmax_masked_scratch`]
+/// (unit tests only).
+#[cfg(test)]
 pub fn argmax_masked(logits: &[f32], mask: &[bool]) -> (usize, f32) {
     let mut scratch = vec![0.0f32; logits.len()];
     argmax_masked_scratch(logits, mask, &mut scratch)
 }
 
-/// Entropy (nats) of the masked categorical.
+/// Entropy (nats) of the masked categorical (unit tests only).
+#[cfg(test)]
 pub fn entropy_masked(logits: &[f32], mask: &[bool]) -> f32 {
     let lp = log_softmax_masked(logits, mask);
     let mut h = 0.0f32;
@@ -129,23 +153,23 @@ pub fn entropy_masked(logits: &[f32], mask: &[bool]) -> f32 {
 }
 
 /// y = x @ w + b written into caller-owned `y` (len o); x is (i,), w is
-/// (i, o) row-major, b is (o,). The accumulation order is identical to the
-/// batched variant so single and batched forwards agree bitwise.
+/// (i, o) row-major, b is (o,). Runs the §14 lane contract via
+/// [`lane_matmul`]: y is initialized to the bias, each element's reduction
+/// accumulates in 8 interleaved lanes combined by the pairwise tree, and
+/// ONE scalar add lands the combined sum on the bias. The chain is the
+/// batched variant's chain, so single and batched forwards agree bitwise.
+///
+/// Unlike the pre-§14 scalar kernel ([`scalar_reference::dense_into`])
+/// there is no `xv == 0.0` row skip: lane bodies multiply unconditionally
+/// (a zero input contributes an exact ±0.0 term to its lane). Part of the
+/// documented one-time §14 fingerprint break.
 pub fn dense_into(x: &[f32], w: &[f32], b: &[f32], o: usize, relu: bool, y: &mut [f32]) {
     let i = x.len();
     assert_eq!(w.len(), i * o, "dense: weight shape mismatch");
     assert_eq!(b.len(), o);
     assert_eq!(y.len(), o);
     y.copy_from_slice(b);
-    for (row, &xv) in x.iter().enumerate() {
-        if xv == 0.0 {
-            continue;
-        }
-        let wrow = &w[row * o..(row + 1) * o];
-        for (yj, wj) in y.iter_mut().zip(wrow) {
-            *yj += xv * wj;
-        }
-    }
+    lane_matmul(x, 1, i, w, o, y, true);
     if relu {
         for v in y.iter_mut() {
             if *v < 0.0 {
@@ -155,7 +179,8 @@ pub fn dense_into(x: &[f32], w: &[f32], b: &[f32], o: usize, relu: bool, y: &mut
     }
 }
 
-/// Allocating convenience wrapper around [`dense_into`].
+/// Allocating convenience wrapper around [`dense_into`] (unit tests only).
+#[cfg(test)]
 pub fn dense(x: &[f32], w: &[f32], b: &[f32], o: usize, relu: bool) -> Vec<f32> {
     let mut y = vec![0.0f32; o];
     dense_into(x, w, b, o, relu, &mut y);
@@ -163,11 +188,13 @@ pub fn dense(x: &[f32], w: &[f32], b: &[f32], o: usize, relu: bool) -> Vec<f32> 
 }
 
 /// Batched Y = X @ W + b: `xs` is (batch, i) row-major, `out` is (batch, o)
-/// row-major. The weight matrix is walked ONCE per layer with all batch rows
-/// updated per weight row — for the 128k-float policy parameter vector
-/// (~500 KiB, larger than L2 on most edge CPUs) this is what makes one
-/// batched forward beat B sequential forwards: each weight row is hot in L1
-/// while every batch row consumes it.
+/// row-major. [`lane_matmul`] walks the weight matrix in (i × 8) column
+/// panels that stay hot in L1 while every batch row consumes them — for the
+/// 128k-float policy parameter vector (~500 KiB, larger than L2 on most
+/// edge CPUs) `w` is still streamed exactly once per layer, which is what
+/// makes one batched forward beat B sequential forwards. Each row's §14
+/// chain ignores the batch entirely, so row r is bitwise equal to
+/// [`dense_into`] on that row alone.
 #[allow(clippy::too_many_arguments)]
 pub fn dense_batch_into(
     xs: &[f32],
@@ -186,19 +213,7 @@ pub fn dense_batch_into(
     for bi in 0..batch {
         out[bi * o..(bi + 1) * o].copy_from_slice(b);
     }
-    for row in 0..i {
-        let wrow = &w[row * o..(row + 1) * o];
-        for bi in 0..batch {
-            let xv = xs[bi * i + row];
-            if xv == 0.0 {
-                continue;
-            }
-            let dst = &mut out[bi * o..(bi + 1) * o];
-            for (yj, wj) in dst.iter_mut().zip(wrow) {
-                *yj += xv * wj;
-            }
-        }
-    }
+    lane_matmul(xs, batch, i, w, o, out, true);
     if relu {
         for v in out.iter_mut() {
             if *v < 0.0 {
@@ -208,7 +223,7 @@ pub fn dense_batch_into(
     }
 }
 
-/// Batched dense backward (DESIGN.md §8): given the layer input `xs`
+/// Batched dense backward (DESIGN.md §8/§14): given the layer input `xs`
 /// (batch, i), the weight matrix `w` (i, o) row-major and the upstream
 /// gradient `dy` (batch, o), accumulate the parameter gradients
 ///
@@ -219,16 +234,20 @@ pub fn dense_batch_into(
 ///
 ///   dx[b,i] = Σ_j w[i,j] · dy[b,j].
 ///
-/// Like [`dense_batch_into`], each weight row (and its gradient row) is
-/// walked ONCE with every batch row consuming it while it is hot in L1 —
-/// the same single-pass-over-the-parameter-vector discipline, because the
-/// backward streams `w` AND `gw` (~1 MiB combined for the policy trunk).
+/// Every reduction runs the §14 lane contract: `gw`/`gb` interleave batch
+/// rows into lanes (`b mod 8`, [`lane_outer_acc`]/[`lane_colsum_acc`]),
+/// `dx` is a contiguous [`lane_dot`] over j. One scalar add lands each
+/// combined sum on the existing accumulator, so `+=` semantics (and the
+/// call-twice-doubles property) are preserved exactly.
 ///
-/// Determinism contract: for a fixed (i, j) the `gw` accumulation chain
-/// runs over batch rows in ascending order, `dx[b,i]` accumulates over j
-/// ascending, and `gb[j]` over batch rows ascending — bit-stable for a
-/// fixed batch slice regardless of how the caller shards batches across
-/// threads (each shard calls this on its own rows and accumulator).
+/// Determinism contract: each chain covers a fixed batch slice in a fixed
+/// lane order — bit-stable regardless of how the caller shards batches
+/// across threads (each shard calls this on its own rows and accumulator;
+/// the workspace's fixed `BWD_CHUNK_ROWS` chunking does the rest). The
+/// pre-§14 `xv == 0.0` skip is gone: a zero input contributes exact ±0.0
+/// terms to its `gw` lanes, which the lane tree preserves as a ±0.0 sum —
+/// masked logits therefore still receive bitwise-zero parameter gradients
+/// (test-pinned in `train_native.rs`).
 #[allow(clippy::too_many_arguments)]
 pub fn dense_bwd_batch_into(
     xs: &[f32],
@@ -239,53 +258,22 @@ pub fn dense_bwd_batch_into(
     dy: &[f32],
     gw: &mut [f32],
     gb: &mut [f32],
-    mut dx: Option<&mut [f32]>,
+    dx: Option<&mut [f32]>,
 ) {
     assert_eq!(xs.len(), batch * i, "dense_bwd: input shape mismatch");
     assert_eq!(w.len(), i * o, "dense_bwd: weight shape mismatch");
     assert_eq!(dy.len(), batch * o, "dense_bwd: upstream grad shape mismatch");
     assert_eq!(gw.len(), i * o);
     assert_eq!(gb.len(), o);
-    if let Some(dx) = &dx {
+    lane_colsum_acc(dy, batch, o, gb);
+    lane_outer_acc(xs, batch, i, dy, o, gw);
+    if let Some(dx) = dx {
         assert_eq!(dx.len(), batch * i);
-    }
-    for bi in 0..batch {
-        let dyrow = &dy[bi * o..(bi + 1) * o];
-        for (gbj, dyj) in gb.iter_mut().zip(dyrow) {
-            *gbj += *dyj;
-        }
-    }
-    for row in 0..i {
-        let wrow = &w[row * o..(row + 1) * o];
-        let gwrow = &mut gw[row * o..(row + 1) * o];
         for bi in 0..batch {
-            let xv = xs[bi * i + row];
             let dyrow = &dy[bi * o..(bi + 1) * o];
-            match &mut dx {
-                Some(dx) => {
-                    let mut acc = 0.0f32;
-                    if xv == 0.0 {
-                        // relu'd inputs are frequently exactly 0: skip the
-                        // gw update (adds exact zeros) but dx still needs
-                        // the w·dy dot product
-                        for (wj, dyj) in wrow.iter().zip(dyrow) {
-                            acc += *wj * *dyj;
-                        }
-                    } else {
-                        for ((gwj, wj), dyj) in gwrow.iter_mut().zip(wrow).zip(dyrow) {
-                            *gwj += xv * *dyj;
-                            acc += *wj * *dyj;
-                        }
-                    }
-                    dx[bi * i + row] = acc;
-                }
-                None => {
-                    if xv != 0.0 {
-                        for (gwj, dyj) in gwrow.iter_mut().zip(dyrow) {
-                            *gwj += xv * *dyj;
-                        }
-                    }
-                }
+            let dxrow = &mut dx[bi * i..(bi + 1) * i];
+            for (k, dst) in dxrow.iter_mut().enumerate() {
+                *dst = lane_dot(&w[k * o..(k + 1) * o], dyrow);
             }
         }
     }
@@ -358,6 +346,178 @@ pub fn masked_head_grad_into(
 
 pub fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
+}
+
+pub mod scalar_reference {
+    //! The pre-§14 scalar kernels, retained VERBATIM (left-to-right
+    //! accumulation, `xv == 0.0` row skips) for two jobs:
+    //!
+    //!  1. the bench baseline — `perf_hotpath`/`perf_train` report
+    //!     scalar-vs-SIMD speedup rows against these;
+    //!  2. an independent numeric cross-check — the lane kernels must agree
+    //!     with them to within reduction-reordering noise (tolerance tests
+    //!     below), while bit-exactness is pinned against the §14 chain spec
+    //!     in `nn::simd`.
+    //!
+    //! Not a fallback path: nothing in the engine computes with these.
+
+    use super::NEG_INF;
+
+    /// Pre-§14 [`super::log_softmax_masked_into`]: sequential max fold and
+    /// left-to-right exp-sum.
+    pub fn log_softmax_masked_into(logits: &[f32], mask: &[bool], out: &mut [f32]) {
+        assert_eq!(logits.len(), mask.len());
+        assert_eq!(logits.len(), out.len());
+        let mx = logits
+            .iter()
+            .zip(mask)
+            .filter(|(_, m)| **m)
+            .map(|(x, _)| *x)
+            .fold(f32::NEG_INFINITY, f32::max);
+        if mx == f32::NEG_INFINITY {
+            out.fill(NEG_INF);
+            return;
+        }
+        let mut denom = 0.0f32;
+        for (x, m) in logits.iter().zip(mask) {
+            if *m {
+                denom += (x - mx).exp();
+            }
+        }
+        let log_denom = denom.ln();
+        for ((o, x), m) in out.iter_mut().zip(logits).zip(mask) {
+            *o = if *m { x - mx - log_denom } else { NEG_INF };
+        }
+    }
+
+    /// Pre-§14 [`super::dense_into`]: weight-row outer loop with the
+    /// `xv == 0.0` sparsity skip.
+    pub fn dense_into(x: &[f32], w: &[f32], b: &[f32], o: usize, relu: bool, y: &mut [f32]) {
+        let i = x.len();
+        assert_eq!(w.len(), i * o, "dense: weight shape mismatch");
+        assert_eq!(b.len(), o);
+        assert_eq!(y.len(), o);
+        y.copy_from_slice(b);
+        for (row, &xv) in x.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[row * o..(row + 1) * o];
+            for (yj, wj) in y.iter_mut().zip(wrow) {
+                *yj += xv * wj;
+            }
+        }
+        if relu {
+            for v in y.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+
+    /// Pre-§14 [`super::dense_batch_into`]: one pass over weight rows, all
+    /// batch rows per row, left-to-right accumulation.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dense_batch_into(
+        xs: &[f32],
+        batch: usize,
+        i: usize,
+        w: &[f32],
+        b: &[f32],
+        o: usize,
+        relu: bool,
+        out: &mut [f32],
+    ) {
+        assert_eq!(xs.len(), batch * i, "dense_batch: input shape mismatch");
+        assert_eq!(w.len(), i * o, "dense_batch: weight shape mismatch");
+        assert_eq!(b.len(), o);
+        assert_eq!(out.len(), batch * o);
+        for bi in 0..batch {
+            out[bi * o..(bi + 1) * o].copy_from_slice(b);
+        }
+        for row in 0..i {
+            let wrow = &w[row * o..(row + 1) * o];
+            for bi in 0..batch {
+                let xv = xs[bi * i + row];
+                if xv == 0.0 {
+                    continue;
+                }
+                let dst = &mut out[bi * o..(bi + 1) * o];
+                for (yj, wj) in dst.iter_mut().zip(wrow) {
+                    *yj += xv * wj;
+                }
+            }
+        }
+        if relu {
+            for v in out.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+
+    /// Pre-§14 [`super::dense_bwd_batch_into`]: fused gw/dx row walk with
+    /// the `xv == 0.0` gw skip.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dense_bwd_batch_into(
+        xs: &[f32],
+        batch: usize,
+        i: usize,
+        w: &[f32],
+        o: usize,
+        dy: &[f32],
+        gw: &mut [f32],
+        gb: &mut [f32],
+        mut dx: Option<&mut [f32]>,
+    ) {
+        assert_eq!(xs.len(), batch * i, "dense_bwd: input shape mismatch");
+        assert_eq!(w.len(), i * o, "dense_bwd: weight shape mismatch");
+        assert_eq!(dy.len(), batch * o, "dense_bwd: upstream grad shape mismatch");
+        assert_eq!(gw.len(), i * o);
+        assert_eq!(gb.len(), o);
+        if let Some(dx) = &dx {
+            assert_eq!(dx.len(), batch * i);
+        }
+        for bi in 0..batch {
+            let dyrow = &dy[bi * o..(bi + 1) * o];
+            for (gbj, dyj) in gb.iter_mut().zip(dyrow) {
+                *gbj += *dyj;
+            }
+        }
+        for row in 0..i {
+            let wrow = &w[row * o..(row + 1) * o];
+            let gwrow = &mut gw[row * o..(row + 1) * o];
+            for bi in 0..batch {
+                let xv = xs[bi * i + row];
+                let dyrow = &dy[bi * o..(bi + 1) * o];
+                match &mut dx {
+                    Some(dx) => {
+                        let mut acc = 0.0f32;
+                        if xv == 0.0 {
+                            for (wj, dyj) in wrow.iter().zip(dyrow) {
+                                acc += *wj * *dyj;
+                            }
+                        } else {
+                            for ((gwj, wj), dyj) in gwrow.iter_mut().zip(wrow).zip(dyrow) {
+                                *gwj += xv * *dyj;
+                                acc += *wj * *dyj;
+                            }
+                        }
+                        dx[bi * i + row] = acc;
+                    }
+                    None => {
+                        if xv != 0.0 {
+                            for (gwj, dyj) in gwrow.iter_mut().zip(dyrow) {
+                                *gwj += xv * *dyj;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -616,6 +776,107 @@ mod tests {
                 let single = dense(&xs[bi * i..(bi + 1) * i], &w, &b, o, relu);
                 assert_eq!(&out[bi * o..(bi + 1) * o], single.as_slice(), "row {bi}");
             }
+        }
+    }
+
+    #[test]
+    fn lane_kernels_match_scalar_reference_within_tolerance() {
+        // the §14 lane kernels only REORDER each reduction; against the
+        // retained pre-§14 scalar kernels the difference is rounding noise
+        let mut rng = Pcg32::new(41);
+        for &(batch, i, o) in &[(1usize, 7usize, 5usize), (4, 25, 100), (9, 86, 128), (3, 128, 1)]
+        {
+            let xs: Vec<f32> = (0..batch * i).map(|_| rng.normal() as f32).collect();
+            let w: Vec<f32> = (0..i * o).map(|_| rng.normal() as f32 * 0.1).collect();
+            let b: Vec<f32> = (0..o).map(|_| rng.normal() as f32).collect();
+            let mut lane = vec![0.0f32; batch * o];
+            let mut scalar = vec![0.0f32; batch * o];
+            dense_batch_into(&xs, batch, i, &w, &b, o, false, &mut lane);
+            scalar_reference::dense_batch_into(&xs, batch, i, &w, &b, o, false, &mut scalar);
+            for (k, (a, s)) in lane.iter().zip(&scalar).enumerate() {
+                assert!((a - s).abs() < 1e-4, "fwd ({batch},{i},{o})[{k}]: {a} vs {s}");
+            }
+            let dy: Vec<f32> = (0..batch * o).map(|_| rng.normal() as f32).collect();
+            let (mut gw_l, mut gw_s) = (vec![0.0f32; i * o], vec![0.0f32; i * o]);
+            let (mut gb_l, mut gb_s) = (vec![0.0f32; o], vec![0.0f32; o]);
+            let (mut dx_l, mut dx_s) = (vec![0.0f32; batch * i], vec![0.0f32; batch * i]);
+            dense_bwd_batch_into(&xs, batch, i, &w, o, &dy, &mut gw_l, &mut gb_l, Some(&mut dx_l));
+            scalar_reference::dense_bwd_batch_into(
+                &xs,
+                batch,
+                i,
+                &w,
+                o,
+                &dy,
+                &mut gw_s,
+                &mut gb_s,
+                Some(&mut dx_s),
+            );
+            for (a, s) in gw_l.iter().zip(&gw_s).chain(gb_l.iter().zip(&gb_s)) {
+                assert!((a - s).abs() < 1e-3, "bwd grads ({batch},{i},{o}): {a} vs {s}");
+            }
+            for (a, s) in dx_l.iter().zip(&dx_s) {
+                assert!((a - s).abs() < 1e-3, "bwd dx ({batch},{i},{o}): {a} vs {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn log_softmax_matches_scalar_reference_within_tolerance() {
+        let mut rng = Pcg32::new(43);
+        for n in [1usize, 4, 8, 9, 18] {
+            let logits: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 3.0).collect();
+            let mask: Vec<bool> = (0..n).map(|k| k % 3 != 1).collect();
+            let mut lane = vec![0.0f32; n];
+            let mut scalar = vec![0.0f32; n];
+            log_softmax_masked_into(&logits, &mask, &mut lane);
+            scalar_reference::log_softmax_masked_into(&logits, &mask, &mut scalar);
+            for (a, s) in lane.iter().zip(&scalar) {
+                assert!((a - s).abs() < 1e-5, "n={n}: {a} vs {s}");
+            }
+        }
+        // fully-masked guard behaves identically
+        let mut lane = [0.0f32; 3];
+        let mut scalar = [0.0f32; 3];
+        log_softmax_masked_into(&[1.0, 2.0, 3.0], &[false; 3], &mut lane);
+        scalar_reference::log_softmax_masked_into(&[1.0, 2.0, 3.0], &[false; 3], &mut scalar);
+        assert_eq!(lane, scalar);
+        assert!(lane.iter().all(|l| *l <= NEG_INF / 2.0));
+    }
+
+    #[test]
+    fn zero_inputs_leave_exact_zero_weight_grads() {
+        // the §14 kernels dropped the scalar `xv == 0.0` skip; a zero input
+        // row must still produce bitwise-zero gw contributions (its lane
+        // terms are ±0.0 and the pairwise tree of ±0.0 with a +0.0
+        // accumulator is +0.0) — this is what keeps masked-logit parameter
+        // gradients exactly zero end-to-end
+        let (batch, i, o) = (5usize, 6usize, 9usize);
+        let mut rng = Pcg32::new(47);
+        let mut xs: Vec<f32> = (0..batch * i).map(|_| rng.normal() as f32).collect();
+        for b in 0..batch {
+            xs[b * i + 2] = 0.0; // input feature 2 is exactly zero everywhere
+        }
+        let w: Vec<f32> = (0..i * o).map(|_| rng.normal() as f32).collect();
+        let dy: Vec<f32> = (0..batch * o).map(|_| rng.normal() as f32).collect();
+        let mut gw = vec![0.0f32; i * o];
+        let mut gb = vec![0.0f32; o];
+        dense_bwd_batch_into(&xs, batch, i, &w, o, &dy, &mut gw, &mut gb, None);
+        for j in 0..o {
+            assert_eq!(gw[2 * o + j].to_bits(), 0.0f32.to_bits(), "gw[2,{j}]");
+        }
+        // dually: a zero upstream-grad column leaves its gw column and gb
+        // entry at exact +0.0 (masked logits send dy ≡ 0.0 for that column)
+        let mut dy0 = dy.clone();
+        for b in 0..batch {
+            dy0[b * o + 4] = 0.0;
+        }
+        let mut gw0 = vec![0.0f32; i * o];
+        let mut gb0 = vec![0.0f32; o];
+        dense_bwd_batch_into(&xs, batch, i, &w, o, &dy0, &mut gw0, &mut gb0, None);
+        assert_eq!(gb0[4].to_bits(), 0.0f32.to_bits());
+        for k in 0..i {
+            assert_eq!(gw0[k * o + 4].to_bits(), 0.0f32.to_bits(), "gw[{k},4]");
         }
     }
 }

@@ -1,9 +1,11 @@
 //! Neural-network support on the rust side: the cross-language parameter
-//! contract (spec), decision-path math (masked softmax/sampling), and a
-//! pure-rust mirror of the L2 forwards for cross-checking and fallback.
+//! contract (spec), decision-path math (masked softmax/sampling), the
+//! fixed-lane SIMD kernel substrate (DESIGN.md §14), and a pure-rust mirror
+//! of the L2 forwards for cross-checking and fallback.
 
 pub mod math;
 pub mod policy;
+pub mod simd;
 pub mod spec;
 pub mod workspace;
 

@@ -8,8 +8,15 @@
 //!  2. a no-artifacts fallback so unit tests and quick sims run without the
 //!     PJRT runtime;
 //!  3. a perf baseline the bench harness compares the HLO path against.
+//!
+//! All matmul reductions here run the §14 lane contract (`nn::simd`,
+//! DESIGN.md §14): the single-state forward, the batched workspace forward
+//! and the LSTM gate matmuls share one accumulation chain per output
+//! element, so single ≡ batched bitwise on every target. Gate
+//! nonlinearities (sigmoid/tanh) stay scalar-libm.
 
-use crate::nn::math::{dense, sigmoid};
+use crate::nn::math::{dense_into, sigmoid};
+use crate::nn::simd::{lane_dot, lane_matmul};
 use crate::nn::spec::*;
 
 /// Offsets of each tensor inside the flat policy parameter vector, in the
@@ -70,36 +77,79 @@ impl PolicyLayout {
 
 pub const POLICY_LAYOUT: PolicyLayout = PolicyLayout::compute();
 
-/// Native policy forward: state (STATE_DIM,) → (logits (LOGITS_DIM,), value).
-pub fn policy_fwd_native(params: &[f32], state: &[f32]) -> (Vec<f32>, f32) {
+/// Reusable buffers for the single-state native policy forward: trunk
+/// activations, residual temporaries and the logits row. Same
+/// `grow_events()` contract as `nn::workspace::Workspace` — allocation-free
+/// after the first call.
+#[derive(Default)]
+pub struct PolicyScratch {
+    h: Vec<f32>,
+    t1: Vec<f32>,
+    t2: Vec<f32>,
+    logits: Vec<f32>,
+    grow_events: u64,
+}
+
+impl PolicyScratch {
+    pub fn grow_events(&self) -> u64 {
+        self.grow_events
+    }
+
+    fn reset(&mut self) {
+        use crate::nn::workspace::ensure;
+        let g = &mut self.grow_events;
+        ensure(&mut self.h, HIDDEN, g);
+        ensure(&mut self.t1, HIDDEN, g);
+        ensure(&mut self.t2, HIDDEN, g);
+        ensure(&mut self.logits, LOGITS_DIM, g);
+    }
+}
+
+/// Native policy forward into caller-owned scratch: state (STATE_DIM,) →
+/// (&logits (LOGITS_DIM,), value), no allocation once warm. Runs the same
+/// §14 lane kernels layer-by-layer as `Workspace::policy_fwd_batch`, so a
+/// single-state forward is bitwise equal to any batched row carrying the
+/// same state.
+pub fn policy_fwd_scratch<'a>(
+    params: &[f32],
+    state: &[f32],
+    s: &'a mut PolicyScratch,
+) -> (&'a [f32], f32) {
     assert_eq!(params.len(), POLICY_PARAM_COUNT, "bad param vector length");
     assert_eq!(state.len(), STATE_DIM, "bad state length");
     let l = &POLICY_LAYOUT;
     let p = |a: usize, b: usize| &params[a..a + b];
+    s.reset();
+    let PolicyScratch { h, t1, t2, logits, .. } = s;
 
-    let mut h = dense(
-        state,
-        p(l.fc_in_w, STATE_DIM * HIDDEN),
-        p(l.fc_in_b, HIDDEN),
-        HIDDEN,
-        true,
-    );
+    dense_into(state, p(l.fc_in_w, STATE_DIM * HIDDEN), p(l.fc_in_b, HIDDEN), HIDDEN, true, h);
     for (w1, b1, w2, b2) in l.res {
-        let hidden = dense(&h, p(w1, HIDDEN * HIDDEN), p(b1, HIDDEN), HIDDEN, true);
-        let out = dense(&hidden, p(w2, HIDDEN * HIDDEN), p(b2, HIDDEN), HIDDEN, false);
-        for (hi, oi) in h.iter_mut().zip(out) {
-            *hi += oi; // residual add happens on x: y = x + f(x)
+        dense_into(h, p(w1, HIDDEN * HIDDEN), p(b1, HIDDEN), HIDDEN, true, t1);
+        dense_into(t1, p(w2, HIDDEN * HIDDEN), p(b2, HIDDEN), HIDDEN, false, t2);
+        for (hi, oi) in h.iter_mut().zip(t2.iter()) {
+            *hi += *oi; // residual add happens on x: y = x + f(x)
         }
     }
-    let logits = dense(
-        &h,
+    dense_into(
+        h,
         p(l.head_w, HIDDEN * LOGITS_DIM),
         p(l.head_b, LOGITS_DIM),
         LOGITS_DIM,
         false,
+        logits,
     );
-    let value = dense(&h, p(l.value_w, HIDDEN), p(l.value_b, 1), 1, false)[0];
-    (logits, value)
+    let mut value = [0.0f32];
+    dense_into(h, p(l.value_w, HIDDEN), p(l.value_b, 1), 1, false, &mut value);
+    (logits, value[0])
+}
+
+/// Allocating wrapper around [`policy_fwd_scratch`] for unit tests; hot
+/// paths (agents, benches, integration tests) use the scratch variant.
+#[cfg(test)]
+pub fn policy_fwd_native(params: &[f32], state: &[f32]) -> (Vec<f32>, f32) {
+    let mut s = PolicyScratch::default();
+    let (logits, value) = policy_fwd_scratch(params, state, &mut s);
+    (logits.to_vec(), value)
 }
 
 /// Offsets inside the flat predictor parameter vector.
@@ -159,19 +209,12 @@ pub fn predictor_fwd_scratch(params: &[f32], window: &[f32], s: &mut LstmScratch
     let LstmScratch { h, c, gates } = s;
     for &x_raw in window {
         let x = x_raw / LOAD_SCALE as f32;
-        // gates = x*wx + h@wh + b
-        for g in 0..4 * hd {
-            gates[g] = x * wx[g] + bias[g];
+        // gate pre-activation init stays elementwise (input dim is 1);
+        // the recurrent matmul accumulates onto it under the §14 lane chain
+        for (g, (wv, bv)) in gates.iter_mut().zip(wx.iter().zip(bias)) {
+            *g = x * wv + bv;
         }
-        for (row, &hv) in h.iter().enumerate() {
-            if hv == 0.0 {
-                continue;
-            }
-            let wrow = &wh[row * 4 * hd..(row + 1) * 4 * hd];
-            for (g, wv) in gates.iter_mut().zip(wrow) {
-                *g += hv * wv;
-            }
-        }
+        lane_matmul(h, 1, hd, wh, 4 * hd, gates, true);
         for j in 0..hd {
             let i_g = sigmoid(gates[j]);
             let f_g = sigmoid(gates[hd + j]);
@@ -183,11 +226,7 @@ pub fn predictor_fwd_scratch(params: &[f32], window: &[f32], s: &mut LstmScratch
     }
     let dw = &params[l.dense_w..l.dense_w + hd];
     let db = params[l.dense_b];
-    let mut out = db;
-    for (hv, wv) in h.iter().zip(dw) {
-        out += hv * wv;
-    }
-    out * LOAD_SCALE as f32
+    (db + lane_dot(h, dw)) * LOAD_SCALE as f32
 }
 
 /// Native LSTM predictor forward: raw req/s window (PRED_WINDOW,) → predicted
@@ -228,14 +267,13 @@ impl LstmBatchScratch {
 
 /// Batched native LSTM forward: `windows` is (batch, PRED_WINDOW) row-major
 /// raw req/s (left-padded like [`predictor_fwd_scratch`]'s input), one row
-/// per tenant sharing the SAME weight vector. Each timestep walks the
-/// recurrent weight matrix `wh` ONCE with every lane consuming each row
-/// while it is hot in L1 — the §7 single-pass discipline applied to the
-/// predictor, so a leader tick's predictor cost stops scaling with a full
-/// weight sweep per tenant. Per-lane accumulation order (gate init, `wh`
-/// rows ascending, cell update) is identical to the single-window path, so
-/// each row of the result is bitwise equal to `predictor_fwd_scratch` on
-/// that window alone.
+/// per tenant sharing the SAME weight vector. Each timestep streams the
+/// recurrent weight matrix `wh` ONCE (in §14 column panels) with every lane
+/// consuming it while hot in L1 — the §7 single-pass discipline applied to
+/// the predictor, so a leader tick's predictor cost stops scaling with a
+/// full weight sweep per tenant. Each lane's §14 chain (gate init, lane
+/// matmul, cell update) never sees the other lanes, so each row of the
+/// result is bitwise equal to `predictor_fwd_scratch` on that window alone.
 pub fn predictor_fwd_batch_scratch<'a>(
     params: &[f32],
     windows: &[f32],
@@ -262,20 +300,10 @@ pub fn predictor_fwd_batch_scratch<'a>(
                 *g = x * wv + bv;
             }
         }
-        // gates += h @ wh: one pass over wh rows, all lanes per row
-        for row in 0..hd {
-            let wrow = &wh[row * 4 * hd..(row + 1) * 4 * hd];
-            for b in 0..batch {
-                let hv = h[b * hd + row];
-                if hv == 0.0 {
-                    continue;
-                }
-                let grow = &mut gates[b * 4 * hd..(b + 1) * 4 * hd];
-                for (g, wv) in grow.iter_mut().zip(wrow) {
-                    *g += hv * wv;
-                }
-            }
-        }
+        // gates += h @ wh under the §14 lane chain: one pass over wh column
+        // panels with every lane consuming them, and each row's chain
+        // identical to the single-window path's
+        lane_matmul(h, batch, hd, wh, 4 * hd, gates, true);
         for b in 0..batch {
             let grow = &gates[b * 4 * hd..(b + 1) * 4 * hd];
             let hrow = &mut h[b * hd..(b + 1) * hd];
@@ -292,14 +320,98 @@ pub fn predictor_fwd_batch_scratch<'a>(
     }
     let dw = &params[l.dense_w..l.dense_w + hd];
     let db = params[l.dense_b];
-    for b in 0..batch {
-        let mut acc = db;
-        for (hv, wv) in h[b * hd..(b + 1) * hd].iter().zip(dw) {
-            acc += hv * wv;
-        }
-        out[b] = acc * LOAD_SCALE as f32;
+    for (b, ob) in out.iter_mut().enumerate() {
+        *ob = (db + lane_dot(&h[b * hd..(b + 1) * hd], dw)) * LOAD_SCALE as f32;
     }
     out
+}
+
+pub mod scalar_reference {
+    //! Pre-§14 scalar forwards, retained for the `perf_hotpath`
+    //! scalar-vs-SIMD speedup rows and as an independent numeric
+    //! cross-check. Left-to-right accumulation, `hv == 0.0` skips —
+    //! nothing in the engine computes with these.
+
+    use super::*;
+    use crate::nn::math::scalar_reference::dense_into;
+
+    /// Pre-§14 single-state policy forward (sequential scalar kernels)
+    /// reusing [`PolicyScratch`] so the bench loop stays allocation-free.
+    pub fn policy_fwd<'a>(
+        params: &[f32],
+        state: &[f32],
+        s: &'a mut PolicyScratch,
+    ) -> (&'a [f32], f32) {
+        assert_eq!(params.len(), POLICY_PARAM_COUNT, "bad param vector length");
+        assert_eq!(state.len(), STATE_DIM, "bad state length");
+        let l = &POLICY_LAYOUT;
+        let p = |a: usize, b: usize| &params[a..a + b];
+        s.reset();
+        let PolicyScratch { h, t1, t2, logits, .. } = s;
+        dense_into(state, p(l.fc_in_w, STATE_DIM * HIDDEN), p(l.fc_in_b, HIDDEN), HIDDEN, true, h);
+        for (w1, b1, w2, b2) in l.res {
+            dense_into(h, p(w1, HIDDEN * HIDDEN), p(b1, HIDDEN), HIDDEN, true, t1);
+            dense_into(t1, p(w2, HIDDEN * HIDDEN), p(b2, HIDDEN), HIDDEN, false, t2);
+            for (hi, oi) in h.iter_mut().zip(t2.iter()) {
+                *hi += *oi;
+            }
+        }
+        dense_into(
+            h,
+            p(l.head_w, HIDDEN * LOGITS_DIM),
+            p(l.head_b, LOGITS_DIM),
+            LOGITS_DIM,
+            false,
+            logits,
+        );
+        let mut value = [0.0f32];
+        dense_into(h, p(l.value_w, HIDDEN), p(l.value_b, 1), 1, false, &mut value);
+        (logits, value[0])
+    }
+
+    /// Pre-§14 single-window LSTM predictor forward (sequential scalar
+    /// recurrent matmul with the `hv == 0.0` skip).
+    pub fn predictor_fwd(params: &[f32], window: &[f32], s: &mut LstmScratch) -> f32 {
+        assert_eq!(params.len(), PREDICTOR_PARAM_COUNT);
+        assert_eq!(window.len(), PRED_WINDOW);
+        let l = &PREDICTOR_LAYOUT;
+        let hd = LSTM_HIDDEN;
+        let wx = &params[l.wx..l.wx + 4 * hd];
+        let wh = &params[l.wh..l.wh + hd * 4 * hd];
+        let bias = &params[l.b..l.b + 4 * hd];
+        s.reset(hd);
+        let LstmScratch { h, c, gates } = s;
+        for &x_raw in window {
+            let x = x_raw / LOAD_SCALE as f32;
+            for g in 0..4 * hd {
+                gates[g] = x * wx[g] + bias[g];
+            }
+            for (row, &hv) in h.iter().enumerate() {
+                if hv == 0.0 {
+                    continue;
+                }
+                let wrow = &wh[row * 4 * hd..(row + 1) * 4 * hd];
+                for (g, wv) in gates.iter_mut().zip(wrow) {
+                    *g += hv * wv;
+                }
+            }
+            for j in 0..hd {
+                let i_g = sigmoid(gates[j]);
+                let f_g = sigmoid(gates[hd + j]);
+                let g_g = gates[2 * hd + j].tanh();
+                let o_g = sigmoid(gates[3 * hd + j]);
+                c[j] = f_g * c[j] + i_g * g_g;
+                h[j] = o_g * c[j].tanh();
+            }
+        }
+        let dw = &params[l.dense_w..l.dense_w + hd];
+        let db = params[l.dense_b];
+        let mut out = db;
+        for (hv, wv) in h.iter().zip(dw) {
+            out += hv * wv;
+        }
+        out * LOAD_SCALE as f32
+    }
 }
 
 #[cfg(test)]
@@ -379,10 +491,55 @@ mod tests {
     }
 
     #[test]
+    fn scratch_forward_matches_wrapper_and_stops_allocating() {
+        let params: Vec<f32> =
+            (0..POLICY_PARAM_COUNT).map(|i| ((i % 19) as f32 - 9.0) * 0.004).collect();
+        let state: Vec<f32> = (0..STATE_DIM).map(|i| (i as f32 * 0.37).sin()).collect();
+        let (want_logits, want_value) = policy_fwd_native(&params, &state);
+        let mut s = PolicyScratch::default();
+        let (logits, value) = policy_fwd_scratch(&params, &state, &mut s);
+        assert_eq!(logits, want_logits.as_slice());
+        assert_eq!(value.to_bits(), want_value.to_bits());
+        let warm = s.grow_events();
+        for _ in 0..5 {
+            let _ = policy_fwd_scratch(&params, &state, &mut s);
+        }
+        assert_eq!(s.grow_events(), warm, "steady-state single forward must not allocate");
+    }
+
+    #[test]
+    fn lane_forwards_match_scalar_reference_within_tolerance() {
+        // §14 kernels only reorder reductions: the retained scalar
+        // reference must agree to rounding noise on both forwards
+        let params: Vec<f32> =
+            (0..POLICY_PARAM_COUNT).map(|i| ((i % 23) as f32 - 11.0) * 0.003).collect();
+        let state: Vec<f32> = (0..STATE_DIM).map(|i| (i as f32 * 0.21).cos()).collect();
+        let mut s_lane = PolicyScratch::default();
+        let mut s_ref = PolicyScratch::default();
+        let (lane_logits, lane_value) = {
+            let (l, v) = policy_fwd_scratch(&params, &state, &mut s_lane);
+            (l.to_vec(), v)
+        };
+        let (ref_logits, ref_value) = scalar_reference::policy_fwd(&params, &state, &mut s_ref);
+        for (a, b) in lane_logits.iter().zip(ref_logits) {
+            assert!((a - b).abs() < 1e-3, "logits: {a} vs {b}");
+        }
+        assert!((lane_value - ref_value).abs() < 1e-3);
+
+        let pparams: Vec<f32> =
+            (0..PREDICTOR_PARAM_COUNT).map(|i| ((i % 13) as f32 - 6.0) * 0.01).collect();
+        let window: Vec<f32> = (0..PRED_WINDOW).map(|i| 50.0 + (i as f32).sin() * 10.0).collect();
+        let lane_pred = predictor_fwd_native(&pparams, &window);
+        let mut ls = LstmScratch::default();
+        let ref_pred = scalar_reference::predictor_fwd(&pparams, &window, &mut ls);
+        assert!((lane_pred - ref_pred).abs() < 1e-2, "{lane_pred} vs {ref_pred}");
+    }
+
+    #[test]
     fn batched_predictor_matches_single_bitwise() {
         let params: Vec<f32> =
             (0..PREDICTOR_PARAM_COUNT).map(|i| ((i % 17) as f32 - 8.0) * 0.013).collect();
-        for batch in [1usize, 2, 5] {
+        for batch in [1usize, 2, 3, 4, 5, 6, 7, 8, 9] {
             let mut windows = Vec::with_capacity(batch * PRED_WINDOW);
             for b in 0..batch {
                 for i in 0..PRED_WINDOW {

@@ -1,0 +1,575 @@
+//! Fixed-lane SIMD substrate for the kernel layer (DESIGN.md §14).
+//!
+//! Everything hot in the engine — serve-path decisions, rollout lanes, the
+//! fused native PPO step, the batched LSTM predictor — bottoms out in a
+//! handful of f32 reduction kernels. This module gives them one shared
+//! vocabulary:
+//!
+//!  * [`LANES`]` = 8` — the fixed accumulator width on EVERY target.
+//!    Narrower vector units (SSE2, NEON) execute an 8-lane chain in two
+//!    registers; wider ones (AVX-512) simply don't get longer chains. The
+//!    lane count is part of the numeric contract, not a tuning knob.
+//!  * [`F32x8`] — an 8-wide f32 vector with three compile-time backends:
+//!    portable `[f32; 8]` (LLVM autovectorizes it on stable Rust), AVX2
+//!    intrinsics on `x86_64`, NEON intrinsics on `aarch64`. Selection is
+//!    `#[cfg(target_feature)]` at COMPILE TIME only — one binary always
+//!    computes one answer; there is no runtime dispatch to diverge on.
+//!  * [`combine8`] — THE horizontal reduction: the fixed pairwise tree
+//!    `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`, always evaluated in scalar
+//!    f32. Never `hadd`/shuffle trees — those associate differently and
+//!    would fork the answer by ISA.
+//!
+//! The accumulation contract replacing "scalar left-to-right" (§14): each
+//! output element accumulates its reduction axis into 8 interleaved partial
+//! sums — term k lands in lane `k mod 8`, appended in ascending k — and the
+//! lanes are combined by the pairwise tree above, then added (one scalar
+//! add) to the init value (bias / gate pre-activation / existing
+//! accumulator). The chain for a given output element depends only on its
+//! own input row and weight column, never on the batch size, thread count,
+//! or vector ISA — which is what keeps the §7–§9 bitwise-determinism
+//! contracts alive through the vectorization.
+//!
+//! Rules, checked by the CI target-feature matrix job (same fingerprints
+//! from a default build and a `-C target-feature=+avx2,+fma` build):
+//!
+//!  * no FMA contraction — `f32::mul_add` is banned in kernels, and rustc
+//!    never contracts `a * b + c` on its own, so `+fma` builds still print
+//!    identical kernel fingerprints;
+//!  * transcendentals (`exp`, `ln`, `tanh`, sigmoid) stay scalar-libm —
+//!    their bit patterns are unchanged from the scalar kernels;
+//!  * `f32::max` and comparisons stay scalar (vector max/min tie-breaking
+//!    on ±0.0 differs across ISAs).
+
+pub const LANES: usize = 8;
+
+/// The §14 horizontal reduction: fixed pairwise tree over the 8 lanes,
+/// evaluated in scalar f32 on every backend.
+#[inline(always)]
+pub fn combine8(l: &[f32; LANES]) -> f32 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+/// Pairwise-tree max over the 8 lanes (used by the masked softmax max;
+/// `f32::max` is associative and commutative for non-NaN inputs, so the
+/// tree shape is cosmetic here — kept for symmetry with [`combine8`]).
+#[inline(always)]
+pub fn combine8_max(l: &[f32; LANES]) -> f32 {
+    ((l[0].max(l[1])).max(l[2].max(l[3]))).max((l[4].max(l[5])).max(l[6].max(l[7])))
+}
+
+#[cfg(all(target_arch = "x86_64", target_feature = "avx2"))]
+mod backend {
+    //! AVX2 backend: one 256-bit register per [`F32x8`]. The whole crate is
+    //! compiled with `avx2` enabled when this path is selected (compile-time
+    //! `target_feature` cfg), so the intrinsics are unconditionally safe to
+    //! execute; `unsafe` below is only for the raw-pointer loads/stores.
+    use core::arch::x86_64::{
+        __m256, _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_setzero_ps,
+        _mm256_storeu_ps,
+    };
+
+    use super::LANES;
+
+    #[derive(Clone, Copy)]
+    pub struct F32x8(__m256);
+
+    impl F32x8 {
+        #[inline(always)]
+        pub fn zero() -> Self {
+            F32x8(unsafe { _mm256_setzero_ps() })
+        }
+
+        #[inline(always)]
+        pub fn splat(x: f32) -> Self {
+            F32x8(unsafe { core::arch::x86_64::_mm256_set1_ps(x) })
+        }
+
+        /// Loads the first 8 elements of `s` (unaligned).
+        #[inline(always)]
+        pub fn load(s: &[f32]) -> Self {
+            debug_assert!(s.len() >= LANES);
+            F32x8(unsafe { _mm256_loadu_ps(s.as_ptr()) })
+        }
+
+        /// Stores into the first 8 elements of `d` (unaligned).
+        #[inline(always)]
+        pub fn store(self, d: &mut [f32]) {
+            debug_assert!(d.len() >= LANES);
+            unsafe { _mm256_storeu_ps(d.as_mut_ptr(), self.0) }
+        }
+
+        #[inline(always)]
+        pub fn add(self, o: Self) -> Self {
+            F32x8(unsafe { _mm256_add_ps(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        pub fn mul(self, o: Self) -> Self {
+            F32x8(unsafe { _mm256_mul_ps(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        pub fn to_array(self) -> [f32; LANES] {
+            let mut a = [0.0f32; LANES];
+            self.store(&mut a);
+            a
+        }
+    }
+}
+
+#[cfg(all(target_arch = "aarch64", target_feature = "neon"))]
+mod backend {
+    //! NEON backend: two 128-bit registers per [`F32x8`]. NEON is baseline
+    //! on aarch64, so this is the default path on ARM edge hardware.
+    use core::arch::aarch64::{
+        float32x4_t, vaddq_f32, vdupq_n_f32, vld1q_f32, vmulq_f32, vst1q_f32,
+    };
+
+    use super::LANES;
+
+    #[derive(Clone, Copy)]
+    pub struct F32x8(float32x4_t, float32x4_t);
+
+    impl F32x8 {
+        #[inline(always)]
+        pub fn zero() -> Self {
+            Self::splat(0.0)
+        }
+
+        #[inline(always)]
+        pub fn splat(x: f32) -> Self {
+            unsafe { F32x8(vdupq_n_f32(x), vdupq_n_f32(x)) }
+        }
+
+        /// Loads the first 8 elements of `s` (unaligned).
+        #[inline(always)]
+        pub fn load(s: &[f32]) -> Self {
+            debug_assert!(s.len() >= LANES);
+            unsafe { F32x8(vld1q_f32(s.as_ptr()), vld1q_f32(s.as_ptr().add(4))) }
+        }
+
+        /// Stores into the first 8 elements of `d` (unaligned).
+        #[inline(always)]
+        pub fn store(self, d: &mut [f32]) {
+            debug_assert!(d.len() >= LANES);
+            unsafe {
+                vst1q_f32(d.as_mut_ptr(), self.0);
+                vst1q_f32(d.as_mut_ptr().add(4), self.1);
+            }
+        }
+
+        #[inline(always)]
+        pub fn add(self, o: Self) -> Self {
+            unsafe { F32x8(vaddq_f32(self.0, o.0), vaddq_f32(self.1, o.1)) }
+        }
+
+        #[inline(always)]
+        pub fn mul(self, o: Self) -> Self {
+            unsafe { F32x8(vmulq_f32(self.0, o.0), vmulq_f32(self.1, o.1)) }
+        }
+
+        #[inline(always)]
+        pub fn to_array(self) -> [f32; LANES] {
+            let mut a = [0.0f32; LANES];
+            self.store(&mut a);
+            a
+        }
+    }
+}
+
+#[cfg(not(any(
+    all(target_arch = "x86_64", target_feature = "avx2"),
+    all(target_arch = "aarch64", target_feature = "neon")
+)))]
+mod backend {
+    //! Portable backend: a plain `[f32; 8]` with elementwise ops. LLVM
+    //! autovectorizes these loops on stable Rust (two SSE2 registers on
+    //! baseline x86-64); element order and rounding are the IEEE ops the
+    //! intrinsic backends perform, so all three backends are bit-equal.
+    use super::LANES;
+
+    #[derive(Clone, Copy)]
+    pub struct F32x8([f32; LANES]);
+
+    impl F32x8 {
+        #[inline(always)]
+        pub fn zero() -> Self {
+            F32x8([0.0; LANES])
+        }
+
+        #[inline(always)]
+        pub fn splat(x: f32) -> Self {
+            F32x8([x; LANES])
+        }
+
+        /// Loads the first 8 elements of `s`.
+        #[inline(always)]
+        pub fn load(s: &[f32]) -> Self {
+            let mut a = [0.0f32; LANES];
+            a.copy_from_slice(&s[..LANES]);
+            F32x8(a)
+        }
+
+        /// Stores into the first 8 elements of `d`.
+        #[inline(always)]
+        pub fn store(self, d: &mut [f32]) {
+            d[..LANES].copy_from_slice(&self.0);
+        }
+
+        #[inline(always)]
+        pub fn add(self, o: Self) -> Self {
+            let mut a = self.0;
+            for (x, y) in a.iter_mut().zip(&o.0) {
+                *x += *y;
+            }
+            F32x8(a)
+        }
+
+        #[inline(always)]
+        pub fn mul(self, o: Self) -> Self {
+            let mut a = self.0;
+            for (x, y) in a.iter_mut().zip(&o.0) {
+                *x *= *y;
+            }
+            F32x8(a)
+        }
+
+        #[inline(always)]
+        pub fn to_array(self) -> [f32; LANES] {
+            self.0
+        }
+    }
+}
+
+pub use backend::F32x8;
+
+/// Pairwise tree over 8 *vector* accumulators. Elementwise this is exactly
+/// the scalar [`combine8`] tree applied to each of the 8 output columns.
+#[inline(always)]
+fn tree8(acc: &[F32x8; LANES]) -> F32x8 {
+    let s01 = acc[0].add(acc[1]);
+    let s23 = acc[2].add(acc[3]);
+    let s45 = acc[4].add(acc[5]);
+    let s67 = acc[6].add(acc[7]);
+    (s01.add(s23)).add(s45.add(s67))
+}
+
+/// §14 dot product: term k lands in lane `k mod 8` in ascending k, lanes
+/// combine by the pairwise tree. Both inputs are contiguous.
+pub fn lane_dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "lane_dot: length mismatch");
+    let n = a.len();
+    let mut accv = F32x8::zero();
+    let mut k = 0usize;
+    while k + LANES <= n {
+        accv = accv.add(F32x8::load(&a[k..]).mul(F32x8::load(&b[k..])));
+        k += LANES;
+    }
+    // partial final chunk: term k keeps its `k mod 8` lane
+    let mut acc = accv.to_array();
+    for (l, kk) in (k..n).enumerate() {
+        acc[l] += a[kk] * b[kk];
+    }
+    combine8(&acc)
+}
+
+/// §14 matmul: `out[b, j] (+)= Σ_k xs[b, k] · w[k, j]` under the lane
+/// contract (reduction term k in lane `k mod 8`, pairwise-tree combine, one
+/// final scalar add onto the init value).
+///
+/// `xs` is (batch, i) row-major, `w` is (i, o) row-major, `out` is
+/// (batch, o) row-major. `add == false` overwrites `out`; `add == true`
+/// adds the combined reduction onto the existing value — this is how the
+/// bias / gate pre-activation participates in the chain.
+///
+/// The per-element chain never looks at other batch rows, so a batch-B call
+/// is bitwise equal to B batch-1 calls — the §7 batch-size invariance holds
+/// by construction. Loop order is j-block outer / batch-row inner: the
+/// (i × 8) weight panel (~4 KiB for the policy trunk) stays hot in L1 while
+/// every batch row consumes it, and `w` is streamed exactly once in total.
+pub fn lane_matmul(
+    xs: &[f32],
+    batch: usize,
+    i: usize,
+    w: &[f32],
+    o: usize,
+    out: &mut [f32],
+    add: bool,
+) {
+    assert_eq!(xs.len(), batch * i, "lane_matmul: input shape mismatch");
+    assert_eq!(w.len(), i * o, "lane_matmul: weight shape mismatch");
+    assert_eq!(out.len(), batch * o, "lane_matmul: output shape mismatch");
+    if o == 1 {
+        // value heads / predictor read-out: w is one contiguous column
+        for (bi, dst) in out.iter_mut().enumerate() {
+            let d = lane_dot(&xs[bi * i..(bi + 1) * i], w);
+            *dst = if add { *dst + d } else { d };
+        }
+        return;
+    }
+    let jb = o - o % LANES;
+    let mut jj = 0usize;
+    while jj < jb {
+        for bi in 0..batch {
+            let x = &xs[bi * i..(bi + 1) * i];
+            let mut acc = [F32x8::zero(); LANES];
+            let mut k = 0usize;
+            while k + LANES <= i {
+                for (l, accl) in acc.iter_mut().enumerate() {
+                    let row = k + l;
+                    *accl =
+                        accl.add(F32x8::splat(x[row]).mul(F32x8::load(&w[row * o + jj..])));
+                }
+                k += LANES;
+            }
+            // partial final chunk: row k keeps its `k mod 8` lane
+            for (l, row) in (k..i).enumerate() {
+                acc[l] = acc[l].add(F32x8::splat(x[row]).mul(F32x8::load(&w[row * o + jj..])));
+            }
+            let tree = tree8(&acc);
+            let dst = &mut out[bi * o + jj..bi * o + jj + LANES];
+            if add {
+                F32x8::load(dst).add(tree).store(dst);
+            } else {
+                tree.store(dst);
+            }
+        }
+        jj += LANES;
+    }
+    // j tail (o mod 8 columns): scalar per-element loops with the IDENTICAL
+    // lane chain, so vector and tail columns share one numeric contract
+    for j in jb..o {
+        for bi in 0..batch {
+            let x = &xs[bi * i..(bi + 1) * i];
+            let mut acc = [0.0f32; LANES];
+            for (k, xv) in x.iter().enumerate() {
+                acc[k % LANES] += *xv * w[k * o + j];
+            }
+            let v = combine8(&acc);
+            let dst = &mut out[bi * o + j];
+            *dst = if add { *dst + v } else { v };
+        }
+    }
+}
+
+/// §14 column sum: `gb[j] += Σ_b dy[b, j]` with the batch as the reduction
+/// axis (row b in lane `b mod 8`, pairwise-tree combine, one add onto the
+/// existing accumulator).
+pub fn lane_colsum_acc(dy: &[f32], batch: usize, o: usize, gb: &mut [f32]) {
+    assert_eq!(dy.len(), batch * o, "lane_colsum: shape mismatch");
+    assert_eq!(gb.len(), o, "lane_colsum: accumulator shape mismatch");
+    let jb = o - o % LANES;
+    let mut jj = 0usize;
+    while jj < jb {
+        let mut acc = [F32x8::zero(); LANES];
+        let mut b = 0usize;
+        while b + LANES <= batch {
+            for (l, accl) in acc.iter_mut().enumerate() {
+                *accl = accl.add(F32x8::load(&dy[(b + l) * o + jj..]));
+            }
+            b += LANES;
+        }
+        for (l, row) in (b..batch).enumerate() {
+            acc[l] = acc[l].add(F32x8::load(&dy[row * o + jj..]));
+        }
+        let tree = tree8(&acc);
+        let dst = &mut gb[jj..jj + LANES];
+        F32x8::load(dst).add(tree).store(dst);
+        jj += LANES;
+    }
+    for j in jb..o {
+        let mut acc = [0.0f32; LANES];
+        for b in 0..batch {
+            acc[b % LANES] += dy[b * o + j];
+        }
+        gb[j] += combine8(&acc);
+    }
+}
+
+/// §14 outer-product accumulation: `gw[k, j] += Σ_b xs[b, k] · dy[b, j]`
+/// with the batch as the reduction axis (row b in lane `b mod 8`). j-block
+/// outer so the (batch × 8) `dy` panel stays in registers/L1 while each
+/// `gw` row is touched once per block.
+pub fn lane_outer_acc(
+    xs: &[f32],
+    batch: usize,
+    i: usize,
+    dy: &[f32],
+    o: usize,
+    gw: &mut [f32],
+) {
+    assert_eq!(xs.len(), batch * i, "lane_outer: input shape mismatch");
+    assert_eq!(dy.len(), batch * o, "lane_outer: upstream grad shape mismatch");
+    assert_eq!(gw.len(), i * o, "lane_outer: accumulator shape mismatch");
+    let jb = o - o % LANES;
+    let mut jj = 0usize;
+    while jj < jb {
+        for k in 0..i {
+            let mut acc = [F32x8::zero(); LANES];
+            let mut b = 0usize;
+            while b + LANES <= batch {
+                for (l, accl) in acc.iter_mut().enumerate() {
+                    let row = b + l;
+                    *accl = accl
+                        .add(F32x8::splat(xs[row * i + k]).mul(F32x8::load(&dy[row * o + jj..])));
+                }
+                b += LANES;
+            }
+            for (l, row) in (b..batch).enumerate() {
+                acc[l] = acc[l]
+                    .add(F32x8::splat(xs[row * i + k]).mul(F32x8::load(&dy[row * o + jj..])));
+            }
+            let tree = tree8(&acc);
+            let dst = &mut gw[k * o + jj..k * o + jj + LANES];
+            F32x8::load(dst).add(tree).store(dst);
+        }
+        jj += LANES;
+    }
+    for j in jb..o {
+        for k in 0..i {
+            let mut acc = [0.0f32; LANES];
+            for b in 0..batch {
+                acc[b % LANES] += xs[b * i + k] * dy[b * o + j];
+            }
+            gw[k * o + j] += combine8(&acc);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    /// Straight-line reimplementation of the §14 chain for ONE output
+    /// element — the executable spec every kernel is pinned against
+    /// bitwise, independent of the vector/tail code paths.
+    fn ref_element(terms: impl Iterator<Item = f32>, init: f32) -> f32 {
+        let mut lanes = [0.0f32; LANES];
+        for (k, t) in terms.enumerate() {
+            lanes[k % LANES] += t;
+        }
+        init + combine8(&lanes)
+    }
+
+    #[test]
+    fn combine8_is_the_documented_tree_not_a_fold() {
+        // values where the pairwise tree rounds differently from the
+        // sequential fold, so the test distinguishes the two orders
+        let l = [1.0e8f32, -1.0e8, 1.0, -0.25, 3.5e7, -3.5e7, 0.125, 2.0];
+        let tree = ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]));
+        assert_eq!(combine8(&l).to_bits(), tree.to_bits());
+        let fold: f32 = l.iter().sum();
+        assert_ne!(
+            combine8(&l).to_bits(),
+            fold.to_bits(),
+            "test inputs must distinguish tree from fold"
+        );
+    }
+
+    #[test]
+    fn lane_matmul_matches_reference_chain_bitwise() {
+        let mut rng = Pcg32::new(42);
+        for &(batch, i, o) in
+            &[(1usize, 1usize, 1usize), (3, 5, 3), (2, 8, 7), (9, 13, 9), (4, 25, 100), (5, 17, 16)]
+        {
+            let xs: Vec<f32> = (0..batch * i).map(|_| rng.normal() as f32).collect();
+            let w: Vec<f32> = (0..i * o).map(|_| rng.normal() as f32).collect();
+            let init: Vec<f32> = (0..batch * o).map(|_| rng.normal() as f32).collect();
+            let mut out = init.clone();
+            lane_matmul(&xs, batch, i, &w, o, &mut out, true);
+            for bi in 0..batch {
+                for j in 0..o {
+                    let want = ref_element(
+                        (0..i).map(|k| xs[bi * i + k] * w[k * o + j]),
+                        init[bi * o + j],
+                    );
+                    assert_eq!(
+                        out[bi * o + j].to_bits(),
+                        want.to_bits(),
+                        "({batch},{i},{o}) element [{bi},{j}]"
+                    );
+                }
+            }
+            // overwrite mode: init value 0.0
+            let mut out2 = vec![9.0f32; batch * o];
+            lane_matmul(&xs, batch, i, &w, o, &mut out2, false);
+            for bi in 0..batch {
+                for j in 0..o {
+                    let want =
+                        ref_element((0..i).map(|k| xs[bi * i + k] * w[k * o + j]), 0.0);
+                    assert_eq!(out2[bi * o + j].to_bits(), want.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_matmul_rows_are_batch_invariant_bitwise() {
+        // the load-bearing §7 property: a row's chain never sees the batch
+        let mut rng = Pcg32::new(7);
+        let (batch, i, o) = (9usize, 21usize, 13usize);
+        let xs: Vec<f32> = (0..batch * i).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..i * o).map(|_| rng.normal() as f32).collect();
+        let mut big = vec![0.0f32; batch * o];
+        lane_matmul(&xs, batch, i, &w, o, &mut big, false);
+        for bi in 0..batch {
+            let mut single = vec![0.0f32; o];
+            lane_matmul(&xs[bi * i..(bi + 1) * i], 1, i, &w, o, &mut single, false);
+            for j in 0..o {
+                assert_eq!(big[bi * o + j].to_bits(), single[j].to_bits(), "row {bi} col {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn lane_dot_matches_reference_chain_bitwise() {
+        let mut rng = Pcg32::new(3);
+        for n in [0usize, 1, 7, 8, 9, 25, 100, 128] {
+            let a: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let want = ref_element(a.iter().zip(&b).map(|(x, y)| *x * *y), 0.0);
+            assert_eq!(lane_dot(&a, &b).to_bits(), want.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn lane_colsum_matches_reference_chain_bitwise() {
+        let mut rng = Pcg32::new(11);
+        for &(batch, o) in &[(1usize, 1usize), (3, 7), (8, 9), (9, 16), (17, 13)] {
+            let dy: Vec<f32> = (0..batch * o).map(|_| rng.normal() as f32).collect();
+            let init: Vec<f32> = (0..o).map(|_| rng.normal() as f32).collect();
+            let mut gb = init.clone();
+            lane_colsum_acc(&dy, batch, o, &mut gb);
+            for j in 0..o {
+                let want = ref_element((0..batch).map(|b| dy[b * o + j]), init[j]);
+                assert_eq!(gb[j].to_bits(), want.to_bits(), "({batch},{o}) col {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn lane_outer_matches_reference_chain_bitwise() {
+        let mut rng = Pcg32::new(13);
+        for &(batch, i, o) in &[(1usize, 2usize, 3usize), (5, 4, 7), (8, 3, 8), (9, 5, 17)] {
+            let xs: Vec<f32> = (0..batch * i).map(|_| rng.normal() as f32).collect();
+            let dy: Vec<f32> = (0..batch * o).map(|_| rng.normal() as f32).collect();
+            let init: Vec<f32> = (0..i * o).map(|_| rng.normal() as f32).collect();
+            let mut gw = init.clone();
+            lane_outer_acc(&xs, batch, i, &dy, o, &mut gw);
+            for k in 0..i {
+                for j in 0..o {
+                    let want = ref_element(
+                        (0..batch).map(|b| xs[b * i + k] * dy[b * o + j]),
+                        init[k * o + j],
+                    );
+                    assert_eq!(
+                        gw[k * o + j].to_bits(),
+                        want.to_bits(),
+                        "({batch},{i},{o}) [{k},{j}]"
+                    );
+                }
+            }
+        }
+    }
+}

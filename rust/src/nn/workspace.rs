@@ -1,21 +1,23 @@
 //! Reusable scratch buffers for the decision hot path (DESIGN.md §7).
 //!
-//! `policy_fwd_native` is the readable reference mirror: it allocates a
-//! handful of `Vec`s per call, which is fine for tests but shows up hard on
-//! the per-decision profile once a leader ticks many tenants per second.
-//! [`Workspace`] owns every intermediate buffer the forward pass needs and
-//! is reused across decisions — after warm-up, a forward performs **zero**
-//! heap allocations (`grow_events()` is the proof hook the perf bench
-//! asserts on).
+//! `policy_fwd_scratch` is the readable single-state reference mirror;
+//! [`Workspace`] owns every intermediate buffer the *batched* forward and
+//! backward need and is reused across decisions — after warm-up, a forward
+//! performs **zero** heap allocations (`grow_events()` is the proof hook
+//! the perf bench asserts on).
 //!
 //! The same buffers back [`Workspace::policy_fwd_batch`]: B states evaluated
 //! in ONE pass over the flat parameter vector. The policy parameters are
 //! ~500 KiB — bigger than L2 on typical edge CPUs — so B sequential forwards
 //! stream the whole vector from memory B times, while the batched pass
-//! streams it once and keeps each weight row hot in L1 for all B rows
-//! (`math::dense_batch_into`). Accumulation order per output element is
-//! identical to the single-state path, so batched and sequential results
-//! agree bitwise (pinned by `rust/tests/batch_hotpath.rs`).
+//! streams it once and keeps each weight panel hot in L1 for all B rows
+//! (`math::dense_batch_into`). Every reduction runs the §14 fixed-lane
+//! chain (`nn::simd`), which by construction never looks at other batch
+//! rows — so batched and sequential results agree bitwise (pinned by
+//! `rust/tests/batch_hotpath.rs`), and no lane padding of the scratch rows
+//! is needed: HIDDEN (128) and LOGITS_DIM (144) are lane multiples, the
+//! o = 1 value head takes the fused-dot kernel, and ragged tails share the
+//! vector path's per-element chains exactly.
 
 use crate::nn::math::{
     argmax_masked_scratch, dense_batch_into, dense_bwd_batch_into, relu_bwd_into,
@@ -500,9 +502,10 @@ impl Workspace {
 /// Analytic backward of one chunk of rows [lo, hi): head + value layers,
 /// residual blocks in reverse, input layer — accumulating parameter
 /// gradients into `g` (this chunk's own accumulator, zeroed by the caller).
-/// Accumulation order within the chunk is fixed (rows ascending inside each
-/// kernel, layers in reverse-topological order), making the chunk's
-/// contribution bit-stable regardless of scheduling.
+/// Accumulation order within the chunk is fixed (the §14 lane chains over
+/// the chunk's rows inside each kernel, layers in reverse-topological
+/// order), making the chunk's contribution bit-stable regardless of
+/// scheduling.
 fn backward_chunk(ctx: &BwdCtx<'_>, lo: usize, hi: usize, g: &mut [f32], s: &mut BwdScratch) {
     let l = &POLICY_LAYOUT;
     let n = hi - lo;
@@ -532,20 +535,23 @@ fn backward_chunk(ctx: &BwdCtx<'_>, lo: usize, hi: usize, g: &mut [f32], s: &mut
             Some(&mut *dh),
         );
     }
-    // value head (o = 1, done inline): accumulates into dh
+    // value head (o = 1): same §14 backward kernel as every other layer —
+    // its dx lands in `da` and is folded onto dh (dense_bwd overwrites dx)
     {
         let (gvw, gvb) = g[l.value_w..l.value_b + 1].split_at_mut(HIDDEN);
-        let wv = &ctx.params[l.value_w..l.value_w + HIDDEN];
-        for (bi, d) in dv.iter().enumerate() {
-            gvb[0] += *d;
-            let hrow = &h_last[bi * HIDDEN..(bi + 1) * HIDDEN];
-            let dhrow = &mut dh[bi * HIDDEN..(bi + 1) * HIDDEN];
-            for ((gv, hv), (dhv, wvv)) in
-                gvw.iter_mut().zip(hrow).zip(dhrow.iter_mut().zip(wv))
-            {
-                *gv += *hv * *d;
-                *dhv += *wvv * *d;
-            }
+        dense_bwd_batch_into(
+            h_last,
+            n,
+            HIDDEN,
+            &ctx.params[l.value_w..l.value_w + HIDDEN],
+            1,
+            dv,
+            gvw,
+            gvb,
+            Some(&mut *da),
+        );
+        for (dhv, dav) in dh.iter_mut().zip(da.iter()) {
+            *dhv += *dav;
         }
     }
     // residual blocks in reverse: h_out = h_in + W2ᵀ relu(W1ᵀ h_in + b1) + b2

@@ -10,7 +10,8 @@
 //! the trainer thread constructs its own `PpoLearner::native` from the
 //! initial parameter vector — only plain `Transition` data and the
 //! `SharedPolicy` cell ever cross the thread boundary. Updates therefore
-//! always run through the native fused step, off the leader's clock.
+//! always run through the native fused step (§14 lane kernels inside),
+//! off the leader's clock.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};

@@ -9,10 +9,11 @@
 //! * **Native** — [`PpoLearner::update_native`]: an analytic, batched
 //!   backward pass through the policy ([`Workspace::policy_bwd_batch`],
 //!   minibatch rows sharded across `std::thread` workers with a
-//!   deterministic tree reduction) plus a fused clipped-ratio loss +
-//!   entropy bonus + value loss + grad-clip + Adam step in pure rust.
-//!   This is what makes `opd train` run at full speed on a plain CPU,
-//!   without PJRT artifacts.
+//!   deterministic tree reduction; the dense kernels inside each shard run
+//!   the fixed-lane SIMD chains of DESIGN.md §14) plus a fused
+//!   clipped-ratio loss + entropy bonus + value loss + grad-clip + Adam
+//!   step in pure rust. This is what makes `opd train` run at full speed
+//!   on a plain CPU, without PJRT artifacts.
 //!
 //! A minibatch whose loss or gradient comes out non-finite is *skipped* —
 //! parameters, Adam moments and `step` stay untouched and the returned

@@ -27,7 +27,8 @@
 //!    `Pcg32::stream(episode_seed, ACTION_STREAM)` — no draw order is
 //!    shared across episodes,
 //!  * `policy_fwd_batch` rows are bitwise independent of the other rows in
-//!    the batch (per-element accumulation chains fixed — §7), so which
+//!    the batch (per-element accumulation chains fixed by the §14 lane
+//!    kernels, batch-invariant by construction — §7), so which
 //!    lanes happen to share a forward is unobservable,
 //!  * the expert's switching hysteresis is reset per episode, and
 //!  * results land in fixed per-episode buffer slots (episode order), not

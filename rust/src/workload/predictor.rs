@@ -1,8 +1,10 @@
 //! Workload predictors (paper §IV-A): the LSTM (2-minute window → max load
 //! of the next 20 s) plus the naive baselines Fig. 3 is implicitly compared
 //! against. The native LSTM mirror is `Send` (it powers the rollout
-//! engine's thread-sharded environments); the PJRT-backed variant is a
-//! separate, leader-thread-confined type ([`HloLstmPredictor`]).
+//! engine's thread-sharded environments); its recurrent matmul and readout
+//! run the fixed-lane kernels of DESIGN.md §14, so single and batched
+//! evaluation agree bitwise. The PJRT-backed variant is a separate,
+//! leader-thread-confined type ([`HloLstmPredictor`]).
 
 use std::rc::Rc;
 

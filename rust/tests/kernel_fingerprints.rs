@@ -1,0 +1,187 @@
+//! Cross-build kernel determinism harness (DESIGN.md §14).
+//!
+//! Each test prints `KERNEL_FP <name> 0x<hash>` — an FNV-1a fingerprint
+//! over the exact output bits of one §14 kernel path. CI builds and runs
+//! this file twice, once at the default x86-64 baseline (portable lane
+//! structs) and once with `RUSTFLAGS="-C target-feature=+avx2,+fma"`
+//! (AVX2 intrinsic lanes), and diffs the printed lines: any divergence is
+//! a broken lane contract. The tests additionally assert in-process
+//! batch- and thread-count invariance, so a single run is already a
+//! determinism check on its own.
+//!
+//! Run with `--nocapture` (CI does) to surface the lines.
+
+use opd::nn::math::{dense_batch_into, dense_bwd_batch_into, log_softmax_masked_into};
+use opd::nn::policy::{
+    policy_fwd_scratch, predictor_fwd_batch_scratch, LstmBatchScratch, PolicyScratch,
+};
+use opd::nn::spec::*;
+use opd::nn::workspace::{params_fingerprint, Workspace};
+use opd::rl::{Minibatch, PpoLearner};
+use opd::util::prng::Pcg32;
+
+fn fp(name: &str, data: &[f32]) -> u64 {
+    let h = params_fingerprint(data);
+    println!("KERNEL_FP {name} 0x{h:016x}");
+    h
+}
+
+/// Dense forward + backward over shapes that straddle the 8-lane boundary
+/// (odd widths, j-tails, the o = 1 fused-dot path) plus the policy-layer
+/// shapes. Each batched row must be bitwise equal to the same row run at
+/// batch 1 — the §14 chain never sees the batch.
+#[test]
+fn dense_kernel_fingerprints_and_batch_invariance() {
+    let shapes = [
+        (1usize, 7usize, 5usize),
+        (3, 13, 9),
+        (4, 25, 100),
+        (16, 86, 128),
+        (8, 128, 144),
+        (6, 128, 1),
+    ];
+    let mut rng = Pcg32::new(101);
+    for (batch, i, o) in shapes {
+        let xs: Vec<f32> = (0..batch * i).map(|_| (rng.normal() * 0.5) as f32).collect();
+        let w: Vec<f32> = (0..i * o).map(|_| (rng.normal() * 0.2) as f32).collect();
+        let b: Vec<f32> = (0..o).map(|_| (rng.normal() * 0.1) as f32).collect();
+        let mut out = vec![0.0f32; batch * o];
+        dense_batch_into(&xs, batch, i, &w, &b, o, true, &mut out);
+        fp(&format!("dense_fwd_{batch}x{i}x{o}"), &out);
+        let mut row = vec![0.0f32; o];
+        for bi in 0..batch {
+            dense_batch_into(&xs[bi * i..(bi + 1) * i], 1, i, &w, &b, o, true, &mut row);
+            assert_eq!(
+                params_fingerprint(&row),
+                params_fingerprint(&out[bi * o..(bi + 1) * o]),
+                "shape ({batch},{i},{o}) row {bi}: batch changed the bits"
+            );
+        }
+        let dy: Vec<f32> = (0..batch * o).map(|_| (rng.normal() * 0.3) as f32).collect();
+        let mut gw = vec![0.0f32; i * o];
+        let mut gb = vec![0.0f32; o];
+        let mut dx = vec![0.0f32; batch * i];
+        dense_bwd_batch_into(&xs, batch, i, &w, o, &dy, &mut gw, &mut gb, Some(&mut dx));
+        fp(&format!("dense_bwd_gw_{batch}x{i}x{o}"), &gw);
+        fp(&format!("dense_bwd_gb_{batch}x{i}x{o}"), &gb);
+        fp(&format!("dense_bwd_dx_{batch}x{i}x{o}"), &dx);
+    }
+}
+
+/// 64 policy states, evaluated in chunks of {1, 4, 16, 64} AND through the
+/// single-state scratch path: one fingerprint for all five layouts.
+#[test]
+fn policy_forward_fingerprint_is_batch_invariant() {
+    let mut rng = Pcg32::new(7);
+    let params: Vec<f32> =
+        (0..POLICY_PARAM_COUNT).map(|_| (rng.normal() * 0.04) as f32).collect();
+    let n = 64usize;
+    let states: Vec<f32> = (0..n * STATE_DIM).map(|_| (rng.normal() * 0.5) as f32).collect();
+    let mut reference: Option<u64> = None;
+    for batch in [1usize, 4, 16, 64] {
+        let mut ws = Workspace::new();
+        let mut logits_all = Vec::with_capacity(n * LOGITS_DIM);
+        let mut values_all = Vec::with_capacity(n);
+        for start in (0..n).step_by(batch) {
+            let chunk = &states[start * STATE_DIM..(start + batch) * STATE_DIM];
+            let (logits, values) = ws.policy_fwd_batch(&params, chunk, batch);
+            logits_all.extend_from_slice(logits);
+            values_all.extend_from_slice(values);
+        }
+        logits_all.extend_from_slice(&values_all);
+        let h = params_fingerprint(&logits_all);
+        match reference {
+            None => {
+                reference = Some(fp("policy_fwd_64_states", &logits_all));
+            }
+            Some(want) => assert_eq!(h, want, "batch {batch} changed the forward bits"),
+        }
+    }
+    let mut ps = PolicyScratch::default();
+    let mut logits_all = Vec::with_capacity(n * LOGITS_DIM);
+    let mut values_all = Vec::with_capacity(n);
+    for s in 0..n {
+        let (logits, value) =
+            policy_fwd_scratch(&params, &states[s * STATE_DIM..(s + 1) * STATE_DIM], &mut ps);
+        logits_all.extend_from_slice(logits);
+        values_all.push(value);
+    }
+    logits_all.extend_from_slice(&values_all);
+    assert_eq!(
+        params_fingerprint(&logits_all),
+        reference.unwrap(),
+        "single-state scratch path diverged from the batched bits"
+    );
+}
+
+/// 64 LSTM windows in chunks of {1, 4, 16, 64}: the recurrent lane chains
+/// must make the predictions layout-independent to the bit.
+#[test]
+fn predictor_fingerprint_is_batch_invariant() {
+    let mut rng = Pcg32::new(9);
+    let params: Vec<f32> =
+        (0..PREDICTOR_PARAM_COUNT).map(|_| (rng.normal() * 0.3) as f32).collect();
+    let n = 64usize;
+    let windows: Vec<f32> =
+        (0..n * PRED_WINDOW).map(|_| rng.uniform_range(0.0, 200.0) as f32).collect();
+    let mut reference: Option<u64> = None;
+    for batch in [1usize, 4, 16, 64] {
+        let mut s = LstmBatchScratch::default();
+        let mut preds = Vec::with_capacity(n);
+        for start in (0..n).step_by(batch) {
+            let chunk = &windows[start * PRED_WINDOW..(start + batch) * PRED_WINDOW];
+            preds.extend_from_slice(predictor_fwd_batch_scratch(&params, chunk, batch, &mut s));
+        }
+        let h = params_fingerprint(&preds);
+        match reference {
+            None => {
+                reference = Some(fp("predictor_fwd_64_windows", &preds));
+            }
+            Some(want) => assert_eq!(h, want, "batch {batch} changed the predictor bits"),
+        }
+    }
+}
+
+/// Masked log-softmax over widths around the lane boundary, including a
+/// fully-masked head (NEG_INF fill).
+#[test]
+fn log_softmax_fingerprint() {
+    let mut rng = Pcg32::new(13);
+    let mut all = Vec::new();
+    for n in [1usize, 4, 7, 8, 9, 18] {
+        let logits: Vec<f32> = (0..n).map(|_| (rng.normal() * 2.0) as f32).collect();
+        let mask: Vec<bool> = (0..n).map(|k| k % 3 != 1).collect();
+        let mut out = vec![0.0f32; n];
+        log_softmax_masked_into(&logits, &mask, &mut out);
+        all.extend_from_slice(&out);
+        log_softmax_masked_into(&logits, &vec![false; n], &mut out);
+        all.extend_from_slice(&out);
+    }
+    fp("log_softmax_masked", &all);
+}
+
+/// Two full fused PPO updates on a TRAIN_BATCH minibatch: the resulting
+/// parameter vector must carry the same bits for every worker-thread
+/// count, and its fingerprint must match across target-feature builds.
+#[test]
+fn train_update_fingerprint_is_thread_invariant() {
+    let mut rng = Pcg32::new(21);
+    let params: Vec<f32> =
+        (0..POLICY_PARAM_COUNT).map(|_| (rng.normal() * 0.03) as f32).collect();
+    let mb = Minibatch::synthetic(&mut rng, TRAIN_BATCH);
+    let mut reference: Option<u64> = None;
+    for threads in [1usize, 2, 4, 8] {
+        let mut learner = PpoLearner::native(params.clone());
+        learner.threads = threads;
+        for _ in 0..2 {
+            let _ = learner.update(&mb).unwrap();
+        }
+        let h = params_fingerprint(&learner.params);
+        match reference {
+            None => {
+                reference = Some(fp("train_update_2steps", &learner.params));
+            }
+            Some(want) => assert_eq!(h, want, "threads {threads} changed the update bits"),
+        }
+    }
+}

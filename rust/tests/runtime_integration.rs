@@ -4,7 +4,7 @@
 //! These need `make artifacts` to have run; they are skipped (with a notice)
 //! when the artifacts are absent so `cargo test` stays usable pre-AOT.
 
-use opd::nn::policy::{policy_fwd_native, predictor_fwd_native};
+use opd::nn::policy::{policy_fwd_scratch, predictor_fwd_native, PolicyScratch};
 use opd::nn::spec::*;
 use opd::runtime::OpdRuntime;
 use opd::util::prng::Pcg32;
@@ -31,13 +31,14 @@ fn manifest_matches_binary_constants() {
 fn policy_fwd_hlo_matches_native_mirror() {
     let Some(rt) = runtime() else { return };
     let mut rng = Pcg32::new(7);
+    let mut scratch = PolicyScratch::default();
     for trial in 0..5 {
         let state: Vec<f32> =
             (0..STATE_DIM).map(|_| (rng.normal() * 0.5) as f32).collect();
         let (hlo_logits, hlo_value) = rt.policy_forward(&rt.policy_init, &state).unwrap();
-        let (nat_logits, nat_value) = policy_fwd_native(&rt.policy_init, &state);
+        let (nat_logits, nat_value) = policy_fwd_scratch(&rt.policy_init, &state, &mut scratch);
         assert_eq!(hlo_logits.len(), LOGITS_DIM);
-        for (i, (a, b)) in hlo_logits.iter().zip(&nat_logits).enumerate() {
+        for (i, (a, b)) in hlo_logits.iter().zip(nat_logits).enumerate() {
             assert!(
                 (a - b).abs() < 2e-3 + 1e-3 * b.abs(),
                 "trial {trial} logit {i}: hlo {a} vs native {b}"

@@ -1,8 +1,10 @@
 //! Integration tests for the native fused PPO train step (DESIGN.md §8):
 //! gradient correctness against central finite differences, shard-count
-//! invariance of the threaded backward, allocation-freedom after warm-up,
-//! divergence skipping, optimizer-state checkpointing, and a short
-//! end-to-end training run — all on plain CPU, no PJRT artifacts.
+//! invariance of the threaded backward (including every ragged batch size
+//! around the §14 lane boundary), bitwise-zero gradients for fully-masked
+//! logit columns, allocation-freedom after warm-up, divergence skipping,
+//! optimizer-state checkpointing, and a short end-to-end training run —
+//! all on plain CPU, no PJRT artifacts.
 
 use opd::cluster::ClusterTopology;
 use opd::nn::spec::*;
@@ -104,6 +106,78 @@ fn update_is_shard_count_invariant_bitwise() {
         let pa: Vec<u32> = single.params.iter().map(|p| p.to_bits()).collect();
         let pb: Vec<u32> = sharded.params.iter().map(|p| p.to_bits()).collect();
         assert_eq!(pa, pb, "step {step}: thread count changed the update");
+    }
+}
+
+/// §14 lane boundary sweep: the chunked backward must be bitwise
+/// thread-count-invariant at EVERY ragged batch size 1..=9, not just at
+/// chunk multiples — the chunk structure is fixed by BWD_CHUNK_ROWS and
+/// each element's lane chain ignores how rows are sharded.
+#[test]
+fn update_is_thread_invariant_at_ragged_batches() {
+    for rows in 1usize..=9 {
+        let params = small_params(40 + rows as u64);
+        let mut rng = Pcg32::new(50 + rows as u64);
+        let mut mb = Minibatch::synthetic(&mut rng, rows);
+        realistic_old_logp(&params, &mut mb, &mut rng);
+        let mut reference: Option<(u32, Vec<u32>)> = None;
+        for threads in [1usize, 2, 4, 8] {
+            let mut learner = PpoLearner::native(params.clone());
+            learner.threads = threads;
+            let m = learner.update(&mb).unwrap();
+            let bits: Vec<u32> = learner.params.iter().map(|p| p.to_bits()).collect();
+            match &reference {
+                None => reference = Some((m.grad_norm.to_bits(), bits)),
+                Some((gn, want)) => {
+                    assert_eq!(m.grad_norm.to_bits(), *gn, "rows {rows} threads {threads}");
+                    assert_eq!(&bits, want, "rows {rows} threads {threads} changed the update");
+                }
+            }
+        }
+    }
+}
+
+/// The §14 lane kernels drop the old `xv == 0.0` input skips; this pins the
+/// contract the skips used to provide end to end: logit columns masked in
+/// EVERY row (and whole deactivated tasks) get bitwise-zero head
+/// gradients — ±0.0 lane terms combine to +0.0 through the fixed pairwise
+/// tree, and mean/clip scaling keeps exact zeros exact.
+#[test]
+fn fully_masked_logit_columns_get_bitwise_zero_gradients() {
+    let rows = 8usize;
+    let params = small_params(61);
+    let mut rng = Pcg32::new(62);
+    let mut mb = Minibatch::synthetic(&mut rng, rows);
+    for r in 0..rows {
+        // mask variant 2 of task 0 everywhere; steer its action off the column
+        mb.head_mask[r * LOGITS_DIM + 2] = 0.0;
+        mb.actions[r * ACT_DIM] = 0.0;
+        // deactivate task 5 entirely
+        mb.task_mask[r * MAX_TASKS + 5] = 0.0;
+    }
+    realistic_old_logp(&params, &mut mb, &mut rng);
+    let mut ws = Workspace::new();
+    let mut scratch = StepScratch::default();
+    let (metrics, grad) = ppo_loss_grad_native(&params, &mb, &mut ws, &mut scratch, 2);
+    assert!(metrics.total_loss.is_finite());
+    let l = &opd::nn::policy::POLICY_LAYOUT;
+    for k in 0..HIDDEN {
+        assert_eq!(
+            grad[l.head_w + k * LOGITS_DIM + 2].to_bits(),
+            0,
+            "head_w row {k}, masked column 2 must be exactly zero"
+        );
+        for j in 5 * HEAD_DIM..6 * HEAD_DIM {
+            assert_eq!(
+                grad[l.head_w + k * LOGITS_DIM + j].to_bits(),
+                0,
+                "head_w row {k}, deactivated-task column {j} must be exactly zero"
+            );
+        }
+    }
+    assert_eq!(grad[l.head_b + 2].to_bits(), 0, "head_b masked column 2");
+    for j in 5 * HEAD_DIM..6 * HEAD_DIM {
+        assert_eq!(grad[l.head_b + j].to_bits(), 0, "head_b deactivated-task column {j}");
     }
 }
 
