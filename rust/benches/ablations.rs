@@ -11,7 +11,7 @@
 //!
 //! Run: cargo bench --bench ablations     (A needs `make artifacts`)
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use opd::agents::{Agent, AutoscaleAgent, GreedyAgent, IpaAgent};
 use opd::cli::make_env_predictor;
@@ -40,7 +40,7 @@ fn env_with(trace: &Trace, predictor: Box<dyn LoadPredictor + Send>) -> Env {
     )
 }
 
-fn ablation_expert(rt: &Rc<OpdRuntime>) {
+fn ablation_expert(rt: &Arc<OpdRuntime>) {
     println!("--- A. expert guidance (Algorithm 2), 30 episodes each ---");
     println!("{:>11} {:>16} {:>16}", "expert_freq", "reward ep 1-10", "reward ep 21-30");
     for freq in [0usize, 2, 4, 8] {
@@ -86,7 +86,7 @@ fn ablation_expert(rt: &Rc<OpdRuntime>) {
     }
 }
 
-fn ablation_predictor(rt: &Option<Rc<OpdRuntime>>) {
+fn ablation_predictor(rt: &Option<Arc<OpdRuntime>>) {
     println!("\n--- B. predictor quality → agent QoS (greedy + IPA, fluctuating 600 s) ---");
     let trace = Trace::new(
         "fluct",
@@ -174,7 +174,7 @@ fn ablation_variant_adaptation() {
 
 fn main() {
     println!("=== Ablations (DESIGN.md §5 design choices) ===\n");
-    let rt = OpdRuntime::load(None).map(Rc::new).ok();
+    let rt = OpdRuntime::load(None).map(Arc::new).ok();
     match &rt {
         Some(rt) => ablation_expert(rt),
         None => println!("--- A. expert guidance: SKIPPED (needs `make artifacts`) ---"),

@@ -1,7 +1,7 @@
 #![allow(dead_code)]
 //! Shared helpers for the per-figure bench harnesses.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use opd::cli::{make_agent, make_env_predictor};
 use opd::cluster::ClusterTopology;
@@ -17,7 +17,7 @@ pub const BENCH_SEED: u64 = 42;
 /// Checkpoint used by the Fig. 4/5 benches: an existing
 /// `opd_checkpoint.bin`, else train one quickly (fixed seed) and cache it
 /// under target/ so subsequent benches reuse it.
-pub fn ensure_checkpoint(rt: &Rc<OpdRuntime>) -> String {
+pub fn ensure_checkpoint(rt: &Arc<OpdRuntime>) -> String {
     for cand in ["opd_checkpoint.bin", "target/opd_bench_checkpoint.bin"] {
         if std::path::Path::new(cand).exists() {
             eprintln!("[bench] using checkpoint {cand}");
@@ -64,7 +64,7 @@ pub fn ensure_checkpoint(rt: &Rc<OpdRuntime>) -> String {
 
 /// Run all four agents on the same recorded trace (the Fig. 4/5 protocol).
 pub fn compare_on_workload(
-    rt: &Option<Rc<OpdRuntime>>,
+    rt: &Option<Arc<OpdRuntime>>,
     kind: WorkloadKind,
     cycle_secs: usize,
     params_path: Option<&str>,

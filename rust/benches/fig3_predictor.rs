@@ -7,7 +7,7 @@
 //!
 //! Run: cargo bench --bench fig3_predictor
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use opd::nn::spec::{PRED_HORIZON, PRED_WINDOW};
 use opd::runtime::OpdRuntime;
@@ -55,7 +55,7 @@ fn fig3_trace(seed: u64, n: usize) -> Vec<f64> {
 
 fn main() {
     println!("=== Fig. 3: LSTM workload prediction ===\n");
-    let rt = OpdRuntime::load(None).map(Rc::new).ok();
+    let rt = OpdRuntime::load(None).map(Arc::new).ok();
     // held-out trace with the paper's Fig. 3 smooth-periodic profile
     let trace = fig3_trace(31_337, 2400);
     // heavier control trace (the Fig. 4 fluctuating generator) for a

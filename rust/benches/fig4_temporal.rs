@@ -9,14 +9,14 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use opd::runtime::OpdRuntime;
 use opd::workload::WorkloadKind;
 
 fn main() {
     println!("=== Fig. 4: temporal cost & QoS under different workloads ===");
-    let rt = OpdRuntime::load(None).map(Rc::new).ok();
+    let rt = OpdRuntime::load(None).map(Arc::new).ok();
     let params = rt.as_ref().map(common::ensure_checkpoint);
     if rt.is_none() {
         println!("(no artifacts — OPD uses the native mirror with init params)");

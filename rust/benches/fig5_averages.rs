@@ -15,7 +15,7 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use opd::runtime::OpdRuntime;
 use opd::sim::CycleResult;
@@ -31,7 +31,7 @@ fn find<'a>(rs: &'a [CycleResult], name: &str) -> &'a CycleResult {
 
 fn main() {
     println!("=== Fig. 5: cycle-average cost & QoS per algorithm ===");
-    let rt = OpdRuntime::load(None).map(Rc::new).ok();
+    let rt = OpdRuntime::load(None).map(Arc::new).ok();
     let params = rt.as_ref().map(common::ensure_checkpoint);
 
     const CYCLE: usize = 1200;

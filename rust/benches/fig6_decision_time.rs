@@ -5,7 +5,7 @@
 //!
 //! Run: cargo bench --bench fig6_decision_time
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use opd::agents::{IpaAgent, OpdAgent};
 use opd::cluster::ClusterTopology;
@@ -33,7 +33,7 @@ fn env_for(preset: Preset, trace: &Trace) -> Env {
 
 fn main() {
     println!("=== Fig. 6: decision time vs pipeline complexity ===\n");
-    let rt = OpdRuntime::load(None).map(Rc::new).ok();
+    let rt = OpdRuntime::load(None).map(Arc::new).ok();
     let trace = Trace::new(
         "fluct",
         WorkloadGen::new(WorkloadKind::Fluctuating, SEED).trace(CYCLE + 1),

@@ -14,7 +14,7 @@
 //!
 //! Run: cargo bench --bench fig7_convergence
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use opd::cli::{make_env_predictor, native_init_params};
 use opd::cluster::ClusterTopology;
@@ -32,7 +32,7 @@ fn env_usize(name: &str, default: usize) -> usize {
 /// One full training run at the given rollout schedule; returns the history
 /// and the wall-clock seconds.
 fn train_once(
-    rt: &Option<Rc<OpdRuntime>>,
+    rt: &Option<Arc<OpdRuntime>>,
     episodes: usize,
     envs: usize,
     sync_every: usize,
@@ -71,7 +71,7 @@ fn train_once(
 /// Convergence-vs-throughput ablation: how wide can the parameter sync get
 /// (episodes sharing one snapshot) before the off-policy drift costs more
 /// reward than the sampling throughput buys?
-fn sweep(rt: &Option<Rc<OpdRuntime>>, episodes: usize) {
+fn sweep(rt: &Option<Arc<OpdRuntime>>, episodes: usize) {
     println!("=== Fig. 7 ablation: sync width vs convergence (K=8 lanes) ===\n");
     println!(
         "{:>10} {:>10} {:>16} {:>14} {:>12}",
@@ -97,7 +97,7 @@ fn sweep(rt: &Option<Rc<OpdRuntime>>, episodes: usize) {
 }
 
 fn main() {
-    let rt = match OpdRuntime::load(None).map(Rc::new) {
+    let rt = match OpdRuntime::load(None).map(Arc::new) {
         Ok(rt) => Some(rt),
         Err(e) => {
             println!("no artifacts ({e:#}) — using the native fused train step\n");

@@ -9,7 +9,7 @@
 //!
 //! Run: cargo bench --bench perf_hotpath
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use opd::agents::{Agent, IpaAgent, OpdAgent};
 use opd::cluster::ClusterTopology;
@@ -47,7 +47,7 @@ fn main() {
         "=== §Perf: decision-path microbenchmarks{} ===\n",
         if quick { " [quick]" } else { "" }
     );
-    let rt = OpdRuntime::load(None).map(Rc::new).ok();
+    let rt = OpdRuntime::load(None).map(Arc::new).ok();
     // --quick (CI): shorter measurement budget per case, same sweep shape
     let bench = if quick { Bench::quick() } else { Bench::default() };
 

@@ -3,7 +3,10 @@
 //! 1. **Decide-tick scaling**: due-wheel leader ticks across fleet sizes
 //!    (16 → 4096 tenants), p50/p99 per-tick wall time plus deploys/sec
 //!    through the incrementally-maintained placement index. Asserts the
-//!    tick path is allocation-flat after warm-up at every size.
+//!    tick path is allocation-flat after warm-up at every size. Plus the
+//!    sharded-tick thread sweep (DESIGN.md §15): an all-due storm fleet at
+//!    `tick_threads` ∈ {1, 2, 4, 8}, asserting bitwise-identical results
+//!    and alloc-flatness at every width while recording the speedup.
 //! 2. **HTTP substrate**: a live leader + keep-alive worker-pool server.
 //!    Keep-alive apply storm (create p50/p99 while the leader keeps
 //!    ticking), then GET throughput against an in-bench reconstruction of
@@ -112,6 +115,119 @@ fn bench_tick(n: usize) -> Json {
         .set("tick_p99_secs", p99)
         .set("deploys_per_sec", n as f64 / deploy_secs)
         .set("status_publish_secs", publish_secs)
+}
+
+/// The §15 storm fleet: every tenant on a 1 s adapt interval, so every tick
+/// decides the whole fleet — the worst case the sharded decide phase is
+/// built for. Half the fleet are native OPD agents in four shared-parameter
+/// groups with shared-weight LSTM predictors (the batched forward + batched
+/// predictor paths), half greedy baselines (the sequential path).
+fn storm_fleet(n: usize) -> MultiEnv {
+    let params: Vec<Vec<f32>> = (0..4)
+        .map(|g| {
+            let mut rng = opd::util::prng::Pcg32::new(100 + g);
+            (0..opd::nn::spec::POLICY_PARAM_COUNT)
+                .map(|_| (rng.normal() * 0.02) as f32)
+                .collect()
+        })
+        .collect();
+    let pred_weights: Vec<f32> = {
+        let mut rng = opd::util::prng::Pcg32::new(200);
+        (0..opd::nn::spec::PREDICTOR_PARAM_COUNT)
+            .map(|_| (rng.normal() * 0.02) as f32)
+            .collect()
+    };
+    let mut env = MultiEnv::new(ClusterTopology::uniform((n / 4).max(16), 64.0), 3.0);
+    for i in 0..n {
+        let pipeline = if i % 2 == 0 { "P1" } else { "iot-anomaly" };
+        let agent: Box<dyn opd::agents::Agent + Send> = if i % 2 == 0 {
+            Box::new(opd::agents::OpdAgent::native(params[(i / 2) % 4].clone(), i as u64))
+        } else {
+            baseline(AgentKind::Greedy, i as u64).unwrap()
+        };
+        let predictor: Box<dyn opd::workload::predictor::LoadPredictor + Send> = if i % 2 == 0 {
+            Box::new(opd::workload::predictor::LstmPredictor::native(pred_weights.clone()))
+        } else {
+            Box::new(MovingMaxPredictor::default())
+        };
+        env.deploy(
+            Tenant::new(
+                &format!("t{i}"),
+                catalog::by_name(pipeline).unwrap().spec,
+                agent,
+                QosWeights::default(),
+                LoadSource::Gen(WorkloadGen::new(WorkloadKind::Fluctuating, 1000 + i as u64)),
+                predictor,
+                1,
+            ),
+            None,
+        )
+        .unwrap();
+    }
+    env
+}
+
+/// 1b. sharded-tick thread sweep (DESIGN.md §15): tick p50/p99 of the
+/// all-due storm tick at each worker-pool width, asserting the §15 contract
+/// (bitwise-identical end state, alloc-flat after warm-up) as it measures.
+fn bench_tick_threads(quick: bool) -> Json {
+    let n = if quick { 256 } else { 1024 };
+    let (warmup, measure) = if quick { (4, 12) } else { (6, 30) };
+    let mut rows = Vec::new();
+    let mut base_p99 = 0.0;
+    let mut base_fp = 0u64;
+    for threads in [1usize, 2, 4, 8] {
+        let mut env = storm_fleet(n);
+        env.tick_threads = threads;
+        for _ in 0..warmup {
+            env.tick();
+        }
+        let warm_obs = env.obs_grow_events();
+        let warm_store = env.store.scratch_grow_events();
+        let mut tick_times = Vec::with_capacity(measure);
+        for _ in 0..measure {
+            let t0 = Instant::now();
+            env.tick();
+            tick_times.push(t0.elapsed().as_secs_f64());
+        }
+        assert_eq!(
+            env.obs_grow_events(),
+            warm_obs,
+            "warm sharded tick must not grow scratch ({threads} threads)"
+        );
+        assert_eq!(
+            env.store.scratch_grow_events(),
+            warm_store,
+            "warm sharded tick must not grow store scratch ({threads} threads)"
+        );
+        let fp = env.tick_fingerprint();
+        if threads == 1 {
+            base_fp = fp;
+        } else {
+            assert_eq!(fp, base_fp, "{threads}-thread tick diverged from single-thread");
+        }
+        let p50 = stats::percentile(&tick_times, 50.0);
+        let p99 = stats::percentile(&tick_times, 99.0);
+        if threads == 1 {
+            base_p99 = p99;
+        }
+        let speedup = base_p99 / p99;
+        println!(
+            "tick-threads ({n:5} tenants, {threads} threads): p50 {:9.1} µs  p99 {:9.1} µs  speedup ×{speedup:.2}",
+            p50 * 1e6,
+            p99 * 1e6,
+        );
+        rows.push(
+            Json::obj()
+                .set("tenants", n)
+                .set("threads", threads)
+                .set("tick_p50_secs", p50)
+                .set("tick_p99_secs", p99)
+                .set("p99_speedup_vs_1", speedup)
+                .set("fingerprint_matches_single_thread", true),
+        );
+    }
+    Json::Arr(rows)
 }
 
 /// The old serving shape, reconstructed for the comparison baseline: a
@@ -329,12 +445,14 @@ fn main() {
     );
     let sizes: &[usize] = if quick { &[16, 256] } else { &[16, 256, 1024, 4096] };
     let ticks = Json::Arr(sizes.iter().map(|&n| bench_tick(n)).collect());
+    let tick_threads = bench_tick_threads(quick);
     let http = bench_http(quick);
     let json = bench_json(quick);
     let out = Json::obj()
         .set("bench", "perf_serve")
         .set("quick", quick)
         .set("tick_scaling", ticks)
+        .set("tick_threads", tick_threads)
         .set("http", http)
         .set("lazy_json", json);
     std::fs::write("BENCH_serve.json", out.to_pretty()).expect("write BENCH_serve.json");

@@ -26,41 +26,42 @@ impl Agent for GreedyAgent {
     }
 
     fn decide(&mut self, obs: &Observation<'_>) -> Vec<TaskConfig> {
+        let mut out = Vec::with_capacity(obs.spec.n_tasks());
+        Agent::decide_into(self, obs, &mut out);
+        out
+    }
+
+    fn decide_into(&mut self, obs: &Observation<'_>, out: &mut Vec<TaskConfig>) {
         // provision for the worse of current and predicted load
         let demand = obs.load_now.max(obs.load_pred).max(1.0);
-        obs.spec
-            .tasks
-            .iter()
-            .map(|task| {
-                let prof = &task.variants[0]; // cheapest variant
-                let mut best: Option<(usize, usize)> = None; // (f, b_idx)
-                for (b_idx, _) in BATCH_CHOICES.iter().enumerate() {
-                    let thr = prof.replica_throughput(BATCH_CHOICES[b_idx]);
-                    let f_needed = (demand / thr).ceil() as usize;
-                    if f_needed == 0 || f_needed > F_MAX {
-                        continue;
-                    }
-                    let better = match best {
-                        None => true,
-                        Some((bf, bb)) => {
-                            f_needed < bf || (f_needed == bf && b_idx < bb)
-                        }
-                    };
-                    if better {
-                        best = Some((f_needed, b_idx));
-                    }
+        out.clear();
+        out.extend(obs.spec.tasks.iter().map(|task| {
+            let prof = &task.variants[0]; // cheapest variant
+            let mut best: Option<(usize, usize)> = None; // (f, b_idx)
+            for (b_idx, _) in BATCH_CHOICES.iter().enumerate() {
+                let thr = prof.replica_throughput(BATCH_CHOICES[b_idx]);
+                let f_needed = (demand / thr).ceil() as usize;
+                if f_needed == 0 || f_needed > F_MAX {
+                    continue;
                 }
-                match best {
-                    Some((f, b_idx)) => TaskConfig { variant: 0, replicas: f, batch_idx: b_idx },
-                    // demand unreachable even at F_MAX: max out throughput
-                    None => TaskConfig {
-                        variant: 0,
-                        replicas: F_MAX,
-                        batch_idx: BATCH_CHOICES.len() - 1,
-                    },
+                let better = match best {
+                    None => true,
+                    Some((bf, bb)) => f_needed < bf || (f_needed == bf && b_idx < bb),
+                };
+                if better {
+                    best = Some((f_needed, b_idx));
                 }
-            })
-            .collect()
+            }
+            match best {
+                Some((f, b_idx)) => TaskConfig { variant: 0, replicas: f, batch_idx: b_idx },
+                // demand unreachable even at F_MAX: max out throughput
+                None => TaskConfig {
+                    variant: 0,
+                    replicas: F_MAX,
+                    batch_idx: BATCH_CHOICES.len() - 1,
+                },
+            }
+        }));
     }
 }
 

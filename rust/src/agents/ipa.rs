@@ -892,8 +892,12 @@ impl Agent for IpaAgent {
 
     fn decide(&mut self, obs: &Observation<'_>) -> Vec<TaskConfig> {
         let mut out = Vec::with_capacity(obs.spec.n_tasks());
-        self.decide_into(obs, &mut out);
+        IpaAgent::decide_into(self, obs, &mut out);
         out
+    }
+
+    fn decide_into(&mut self, obs: &Observation<'_>, out: &mut Vec<TaskConfig>) {
+        IpaAgent::decide_into(self, obs, out)
     }
 }
 

@@ -29,6 +29,15 @@ pub trait Agent {
     fn name(&self) -> &'static str;
     fn decide(&mut self, obs: &Observation<'_>) -> Vec<TaskConfig>;
 
+    /// [`Agent::decide`] into a caller-owned buffer. The sharded tick's
+    /// worker phase (DESIGN.md §15) collects every proposed config into a
+    /// fixed per-due-tenant slot, so implementations should refill `out` in
+    /// place; the default delegates to `decide` (one `Vec` per decision —
+    /// exactly what the sequential path always cost).
+    fn decide_into(&mut self, obs: &Observation<'_>, out: &mut Vec<TaskConfig>) {
+        *out = self.decide(obs);
+    }
+
     /// Batched-evaluation support: the flat native parameter vector plus its
     /// stable fingerprint (`nn::params_fingerprint`). `None` (the default)
     /// keeps the agent on the per-tenant sequential path.
@@ -51,6 +60,28 @@ pub trait Agent {
         self.decide(obs)
     }
 
+    /// [`Agent::batch_decide`] into a caller-owned buffer (the slot-filling
+    /// twin of [`Agent::decide_into`]). Must consume the RNG exactly like
+    /// `batch_decide` so the two paths stay bitwise interchangeable.
+    fn batch_decide_into(
+        &mut self,
+        obs: &Observation<'_>,
+        state: &[f32],
+        logits: &[f32],
+        value: f32,
+        out: &mut Vec<TaskConfig>,
+    ) {
+        *out = self.batch_decide(obs, state, logits, value);
+    }
+
+    /// Position fingerprint of the agent's private decision RNG stream
+    /// (0 for deterministic agents without one). The §15 thread-invariance
+    /// tests fold this per tenant: equal fingerprints prove two runs drew
+    /// exactly the same deviates in the same order.
+    fn rng_fingerprint(&self) -> u64 {
+        0
+    }
+
     /// Online-learning support (DESIGN.md §11): the trajectory record of the
     /// most recent decision, for policies that keep one. `None` (the
     /// default) excludes the agent from the live transition stream.
@@ -69,8 +100,9 @@ pub trait Agent {
 }
 
 /// Construct a baseline agent by kind (OPD needs runtime wiring; see
-/// `OpdAgent::new` / the CLI).
-pub fn baseline(kind: AgentKind, seed: u64) -> Option<Box<dyn Agent>> {
+/// `OpdAgent::new` / the CLI). Baselines are plain-data and `Send`, so the
+/// boxes they come in can ride the sharded tick's worker pool (§15).
+pub fn baseline(kind: AgentKind, seed: u64) -> Option<Box<dyn Agent + Send>> {
     match kind {
         AgentKind::Random => Some(Box::new(RandomAgent::new(seed))),
         AgentKind::Greedy => Some(Box::new(GreedyAgent::new())),

@@ -10,14 +10,16 @@
 //! sampling uses stack scratch. The only per-decision heap allocation left
 //! is the `Vec<TaskConfig>` the `Agent` trait returns.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::agents::Agent;
 use crate::nn::spec::*;
 use crate::nn::workspace::{params_fingerprint, select_heads, Workspace};
 use crate::pipeline::TaskConfig;
 use crate::runtime::OpdRuntime;
-use crate::sim::env::{build_masks_into, build_state_into, decode_action, Observation};
+use crate::sim::env::{
+    build_masks_into, build_state_into, decode_action, decode_action_into, Observation,
+};
 use crate::util::prng::Pcg32;
 
 /// Trajectory record of the last decision (consumed by rl::trainer). The
@@ -37,7 +39,7 @@ enum Backend {
     /// AOT HLO program via PJRT (the production path). The parameter vector
     /// is pinned as a device buffer once per `set_params` — only the
     /// 86-float state crosses the host↔device boundary per decision (§Perf).
-    Hlo(Rc<OpdRuntime>, std::cell::OnceCell<Option<xla::PjRtBuffer>>),
+    Hlo(Arc<OpdRuntime>, std::cell::OnceCell<Option<xla::PjRtBuffer>>),
     /// pure-rust mirror (tests / no-artifacts fallback)
     Native,
 }
@@ -57,7 +59,7 @@ pub struct OpdAgent {
 impl OpdAgent {
     /// Production agent: HLO policy with the artifact's initial parameters
     /// (or trained parameters loaded separately via `set_params`).
-    pub fn from_runtime(rt: Rc<OpdRuntime>, seed: u64) -> Self {
+    pub fn from_runtime(rt: Arc<OpdRuntime>, seed: u64) -> Self {
         let params = rt.policy_init.clone();
         let params_fp = params_fingerprint(&params);
         Self {
@@ -197,6 +199,25 @@ impl Agent for OpdAgent {
         decode_action(obs.spec, &self.last.action_idx)
     }
 
+    fn decide_into(&mut self, obs: &Observation<'_>, out: &mut Vec<TaskConfig>) {
+        build_state_into(obs, &mut self.last.state);
+        build_masks_into(obs.spec, &mut self.last.head_mask, &mut self.last.task_mask);
+        let value = self.forward_scratch();
+        self.last.action_idx.clear();
+        self.last.action_idx.resize(ACT_DIM, 0);
+        let logp = select_heads(
+            self.ws.logits(),
+            &self.last.head_mask,
+            &self.last.task_mask,
+            self.greedy,
+            &mut self.rng,
+            &mut self.last.action_idx,
+        );
+        self.last.logp = logp;
+        self.last.value = value;
+        decode_action_into(obs.spec, &self.last.action_idx, out);
+    }
+
     fn batch_params(&self) -> Option<(&[f32], u64)> {
         match self.backend {
             // the batched pass is the native mirror; HLO-backed agents stay
@@ -230,6 +251,36 @@ impl Agent for OpdAgent {
         self.last.logp = logp;
         self.last.value = value;
         decode_action(obs.spec, &self.last.action_idx)
+    }
+
+    fn batch_decide_into(
+        &mut self,
+        obs: &Observation<'_>,
+        state: &[f32],
+        logits: &[f32],
+        value: f32,
+        out: &mut Vec<TaskConfig>,
+    ) {
+        self.last.state.clear();
+        self.last.state.extend_from_slice(state);
+        build_masks_into(obs.spec, &mut self.last.head_mask, &mut self.last.task_mask);
+        self.last.action_idx.clear();
+        self.last.action_idx.resize(ACT_DIM, 0);
+        let logp = select_heads(
+            logits,
+            &self.last.head_mask,
+            &self.last.task_mask,
+            self.greedy,
+            &mut self.rng,
+            &mut self.last.action_idx,
+        );
+        self.last.logp = logp;
+        self.last.value = value;
+        decode_action_into(obs.spec, &self.last.action_idx, out);
+    }
+
+    fn rng_fingerprint(&self) -> u64 {
+        self.rng.position_fingerprint()
     }
 
     fn decision_record(&self) -> Option<&DecisionRecord> {

@@ -23,16 +23,22 @@ impl Agent for RandomAgent {
     }
 
     fn decide(&mut self, obs: &Observation<'_>) -> Vec<TaskConfig> {
-        obs.spec
-            .tasks
-            .iter()
-            .map(|t| TaskConfig {
-                variant: self.rng.below(t.n_variants() as u32) as usize,
-                replicas: 1 + self.rng.below(F_MAX as u32) as usize,
-                batch_idx: self.rng.below(crate::pipeline::BATCH_CHOICES.len() as u32)
-                    as usize,
-            })
-            .collect()
+        let mut out = Vec::with_capacity(obs.spec.n_tasks());
+        Agent::decide_into(self, obs, &mut out);
+        out
+    }
+
+    fn decide_into(&mut self, obs: &Observation<'_>, out: &mut Vec<TaskConfig>) {
+        out.clear();
+        out.extend(obs.spec.tasks.iter().map(|t| TaskConfig {
+            variant: self.rng.below(t.n_variants() as u32) as usize,
+            replicas: 1 + self.rng.below(F_MAX as u32) as usize,
+            batch_idx: self.rng.below(crate::pipeline::BATCH_CHOICES.len() as u32) as usize,
+        }));
+    }
+
+    fn rng_fingerprint(&self) -> u64 {
+        self.rng.position_fingerprint()
     }
 }
 

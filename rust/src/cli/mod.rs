@@ -13,7 +13,7 @@
 
 pub mod args;
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
@@ -42,7 +42,7 @@ USAGE: opd <command> [flags]
 COMMANDS
   simulate   --pipeline P --workload W --agent A [--seed N] [--cycle S]
              [--interval S] [--params ckpt.bin] [--native] [--out out.json]
-             [--nodes N|C1,C2,..] [--chaos SPEC]
+             [--nodes N|C1,C2,..] [--chaos SPEC] [--tick-threads N]
              --chaos injects a deterministic fault plan (DESIGN.md \u{a7}13):
              comma-separated kind@secs=target[:arg] events — crash@30=1,
              recover@90=1, flap@60=0:0.5, kill@45=NAME — or random:SEED
@@ -62,7 +62,10 @@ COMMANDS
   predict    [--workload W] [--secs N] [--seed N] [--native]
   serve      --addr HOST:PORT [--pipeline P] [--workload W] [--agent A]
              [--name NAME] [--cycle S] [--interval S] [--realtime] [--empty]
-             [--nodes N|C1,C2,..]
+             [--nodes N|C1,C2,..] [--tick-threads N]
+             --tick-threads shards the tick's decide phase over N worker
+             threads (DESIGN.md \u{a7}15); results are bitwise identical at
+             any thread count, so 1 (the default) is purely a speed choice
              [--learn] [--learn-window N] [--learn-min-batch M]
              [--learn-checkpoint PATH]
              boots the multi-pipeline leader; --empty starts with no pipeline
@@ -138,12 +141,12 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
 }
 
 /// Try to load the PJRT runtime; `--native` forces the fallback.
-fn load_runtime(cfg: &ExperimentConfig, native: bool) -> Option<Rc<OpdRuntime>> {
+fn load_runtime(cfg: &ExperimentConfig, native: bool) -> Option<Arc<OpdRuntime>> {
     if native {
         return None;
     }
     match OpdRuntime::load(cfg.artifacts_dir.as_deref()) {
-        Ok(rt) => Some(Rc::new(rt)),
+        Ok(rt) => Some(Arc::new(rt)),
         Err(e) => {
             crate::log_warn!("PJRT runtime unavailable ({e:#}); using native fallback");
             None
@@ -151,9 +154,11 @@ fn load_runtime(cfg: &ExperimentConfig, native: bool) -> Option<Rc<OpdRuntime>> 
     }
 }
 
-/// Predictor choice for leader-thread tenants: the HLO LSTM when a runtime
-/// exists, else the moving-max baseline.
-pub fn make_predictor(rt: &Option<Rc<OpdRuntime>>) -> Box<dyn LoadPredictor> {
+/// Predictor choice for serve-path tenants: the HLO LSTM when a runtime
+/// exists, else the moving-max baseline. `Send` either way — the
+/// `Arc<OpdRuntime>` handle keeps the HLO variant shardable, so serve
+/// tenants can ride the tick worker pool (DESIGN.md §15).
+pub fn make_predictor(rt: &Option<Arc<OpdRuntime>>) -> Box<dyn LoadPredictor + Send> {
     match rt {
         Some(rt) => Box::new(HloLstmPredictor::new(rt.clone())),
         None => Box::new(MovingMaxPredictor::default()),
@@ -165,7 +170,7 @@ pub fn make_predictor(rt: &Option<Rc<OpdRuntime>>) -> Box<dyn LoadPredictor> {
 /// worker threads. Uses the native LSTM mirror on the artifact weights —
 /// for the 2.7k-parameter predictor the host mirror also skips a per-tick
 /// PJRT round trip, so nothing is lost over the HLO path.
-pub fn make_env_predictor(rt: &Option<Rc<OpdRuntime>>) -> Box<dyn LoadPredictor + Send> {
+pub fn make_env_predictor(rt: &Option<Arc<OpdRuntime>>) -> Box<dyn LoadPredictor + Send> {
     match rt {
         Some(rt) => Box::new(LstmPredictor::native(rt.predictor_weights.clone())),
         None => Box::new(MovingMaxPredictor::default()),
@@ -187,14 +192,16 @@ pub fn native_init_params(artifacts_dir: Option<&str>, seed: u64) -> Vec<f32> {
     )
 }
 
-/// Build an agent; OPD wires the runtime + optional checkpoint.
+/// Build an agent; OPD wires the runtime + optional checkpoint. `Send` for
+/// every kind — OPD shares its runtime via `Arc`, so serve tenants can ride
+/// the sharded tick's worker pool (DESIGN.md §15).
 pub fn make_agent(
     kind: AgentKind,
     seed: u64,
-    rt: &Option<Rc<OpdRuntime>>,
+    rt: &Option<Arc<OpdRuntime>>,
     params_path: Option<&str>,
     greedy: bool,
-) -> Result<Box<dyn Agent>> {
+) -> Result<Box<dyn Agent + Send>> {
     if let Some(b) = baseline(kind, seed) {
         return Ok(b);
     }
@@ -212,7 +219,7 @@ pub fn make_agent(
 }
 
 /// Build the environment for a config (fresh generator seeded by cfg.seed).
-pub fn make_env(cfg: &ExperimentConfig, rt: &Option<Rc<OpdRuntime>>) -> Result<Env> {
+pub fn make_env(cfg: &ExperimentConfig, rt: &Option<Arc<OpdRuntime>>) -> Result<Env> {
     Ok(Env::from_workload(
         cfg.pipeline_spec().map_err(|e| anyhow!(e))?,
         cfg.topology(),
@@ -275,10 +282,18 @@ pub fn cmd_simulate(args: &Args) -> Result<()> {
     let out_path = args.str_flag("out");
     let greedy = args.switch("greedy-eval");
     let chaos = args.str_flag("chaos");
+    let tick_threads = args.usize_flag("tick-threads", 1).map_err(|e| anyhow!(e))?;
     check_unknown(args)?;
     let rt = load_runtime(&cfg, native);
     if let Some(spec) = chaos {
-        return run_chaos_sim(&cfg, &rt, &spec, params_path.as_deref(), out_path.as_deref());
+        return run_chaos_sim(
+            &cfg,
+            &rt,
+            &spec,
+            params_path.as_deref(),
+            out_path.as_deref(),
+            tick_threads,
+        );
     }
     let mut env = make_env(&cfg, &rt)?;
     let mut agent = make_agent(cfg.agent, cfg.seed, &rt, params_path.as_deref(), greedy)?;
@@ -301,10 +316,11 @@ pub fn cmd_simulate(args: &Args) -> Result<()> {
 /// replayed offline bit-for-bit.
 fn run_chaos_sim(
     cfg: &ExperimentConfig,
-    rt: &Option<Rc<OpdRuntime>>,
+    rt: &Option<Arc<OpdRuntime>>,
     plan_spec: &str,
     params_path: Option<&str>,
     out_path: Option<&str>,
+    tick_threads: usize,
 ) -> Result<()> {
     use crate::cluster::FaultPlan;
     use crate::sim::{LoadSource, MultiEnv, Tenant};
@@ -312,6 +328,7 @@ fn run_chaos_sim(
     let topo = cfg.topology();
     let plan = FaultPlan::parse(plan_spec, topo.nodes.len()).map_err(|e| anyhow!(e))?;
     let mut env = MultiEnv::new(topo, cfg.startup_secs);
+    env.tick_threads = tick_threads.max(1);
     let agent = make_agent(cfg.agent, cfg.seed, rt, params_path, true)?;
     let tenant = Tenant::new(
         cfg.pipeline.clone(),
@@ -542,6 +559,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let learn_window = args.usize_flag("learn-window", 64).map_err(|e| anyhow!(e))?;
     let learn_min_batch = args.usize_flag("learn-min-batch", 16).map_err(|e| anyhow!(e))?;
     let learn_checkpoint = args.str_flag("learn-checkpoint");
+    let tick_threads = args.usize_flag("tick-threads", 1).map_err(|e| anyhow!(e))?;
     check_unknown(args)?;
     let rt = load_runtime(&cfg, native);
 
@@ -613,6 +631,9 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     };
     let (mut leader, tx) = Leader::new(cp.clone(), cfg.topology(), cfg.startup_secs, factory);
     leader.weights = cfg.weights;
+    // shard the tick's decide phase (DESIGN.md §15); bitwise identical at
+    // any thread count, so this is purely a throughput knob
+    leader.env.tick_threads = tick_threads.max(1);
     // --learn: boot the background online trainer (DESIGN.md §11). It shares
     // the fleet's initial policy so the first published generation is a
     // refinement, not a reset.

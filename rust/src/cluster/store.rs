@@ -16,8 +16,8 @@
 //!    variant switches restart a stage, scale-ups start cold, scale-downs
 //!    are immediate.
 
-use std::cell::RefCell;
 use std::collections::BTreeMap;
+use std::sync::Mutex;
 
 use crate::cluster::node::ClusterTopology;
 use crate::cluster::placement::{place_onto, PlacementRequest};
@@ -113,6 +113,13 @@ const USAGE_RESYNC_EVERY: u32 = 1024;
 /// epsilon. `apply`/`delete` maintain them incrementally (O(own containers),
 /// not O(fleet)); debug builds assert and snap to the rescan after every
 /// mutation, release builds resync every `USAGE_RESYNC_EVERY` mutations.
+/// **Snapshot surface** (DESIGN.md §15): between mutations, `&self` is a
+/// `Sync` read-only snapshot — the sharded tick's workers concurrently call
+/// `get` / `ready_replicas_into` / `cores_used_by_others` / `topo` reads
+/// while the leader holds no `&mut`. The placement scratch sits behind a
+/// `Mutex` solely to keep that auto-`Sync`; the worker phase never takes it
+/// (`capacity_for`/`fit_config` run only from the serial phases), so the
+/// lock is uncontended in every path.
 pub struct DeploymentStore {
     pub topo: ClusterTopology,
     pub startup_secs: f64,
@@ -120,7 +127,7 @@ pub struct DeploymentStore {
     /// Σ cores over all containers — incremental twin of `topo.used()`.
     total_used: f64,
     ops_since_resync: u32,
-    scratch: RefCell<StoreScratch>,
+    scratch: Mutex<StoreScratch>,
 }
 
 impl DeploymentStore {
@@ -131,7 +138,7 @@ impl DeploymentStore {
             deployments: BTreeMap::new(),
             total_used: 0.0,
             ops_since_resync: 0,
-            scratch: RefCell::new(StoreScratch::default()),
+            scratch: Mutex::new(StoreScratch::default()),
         }
     }
 
@@ -213,7 +220,7 @@ impl DeploymentStore {
     /// Total cores available to deployment `name` (W_max minus other
     /// tenants' allocations) — the budget its agent should plan against.
     pub fn capacity_for(&self, name: &str) -> f64 {
-        let mut scratch = self.scratch.borrow_mut();
+        let mut scratch = self.scratch.lock().unwrap();
         let cap = scratch.free.capacity();
         self.free_excluding_into(name, &mut scratch.free);
         if scratch.free.capacity() > cap {
@@ -232,7 +239,7 @@ impl DeploymentStore {
     /// Scratch-buffer capacity growth since construction (flat after warm-up
     /// on a steady-state fleet; see `MultiEnv::obs_grow_events`).
     pub fn scratch_grow_events(&self) -> u64 {
-        self.scratch.borrow().grow_events
+        self.scratch.lock().unwrap().grow_events
     }
 
     /// Shrink `cfgs` until it both respects the tenant's shared budget and
@@ -247,7 +254,7 @@ impl DeploymentStore {
         spec: &PipelineSpec,
         cfgs: &[TaskConfig],
     ) -> (Vec<TaskConfig>, bool) {
-        let mut scratch = self.scratch.borrow_mut();
+        let mut scratch = self.scratch.lock().unwrap();
         let caps = (scratch.free.capacity(), scratch.requests.capacity());
         self.free_excluding_into(name, &mut scratch.free);
         let StoreScratch { free, requests, grow_events } = &mut *scratch;
@@ -320,7 +327,7 @@ impl DeploymentStore {
         spec.validate_config(cfgs)?;
         let (applied, clamped) = self.fit_config(name, spec, cfgs);
         let bindings = {
-            let mut scratch = self.scratch.borrow_mut();
+            let mut scratch = self.scratch.lock().unwrap();
             self.free_excluding_into(name, &mut scratch.free);
             let StoreScratch { free, requests, .. } = &mut *scratch;
             build_requests_into(spec, &applied, requests);
@@ -636,6 +643,28 @@ impl DeploymentStore {
     /// — served by the incremental index in O(1).
     pub fn allocated_cores(&self) -> f64 {
         self.total_used
+    }
+
+    /// Order-sensitive FNV-1a digest of the usage index: `total_used`, then
+    /// per node its `cores_used` bits and up flag. Two stores with bitwise-
+    /// equal placement state produce equal fingerprints — the §15 thread-
+    /// invariance tests fold this per tick to prove the sharded decide phase
+    /// left placement byte-for-byte identical to the serial one.
+    pub fn usage_fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut fold = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        fold(self.total_used.to_bits());
+        for n in &self.topo.nodes {
+            fold(n.cores_used.to_bits());
+            fold(n.cores_total.to_bits());
+            fold(n.up as u64);
+        }
+        h
     }
 }
 

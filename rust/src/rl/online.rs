@@ -6,12 +6,11 @@
 //! `MultiEnv::tick` — so a batched decide group never mixes parameter
 //! fingerprints mid-flight.
 //!
-//! Threading: `PpoLearner` can hold a PJRT runtime handle (`Rc`, !Send), so
-//! the trainer thread constructs its own `PpoLearner::native` from the
-//! initial parameter vector — only plain `Transition` data and the
-//! `SharedPolicy` cell ever cross the thread boundary. Updates therefore
-//! always run through the native fused step (§14 lane kernels inside),
-//! off the leader's clock.
+//! Threading: the trainer thread constructs its own `PpoLearner::native`
+//! from the initial parameter vector — only plain `Transition` data and the
+//! `SharedPolicy` cell ever cross the thread boundary, keeping the trainer
+//! independent of any runtime handle. Updates therefore always run through
+//! the native fused step (§14 lane kernels inside), off the leader's clock.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -203,8 +202,8 @@ fn trainer_loop(
     init_params: Vec<f32>,
     cfg: OnlineConfig,
 ) -> OnlineStats {
-    // the learner lives entirely on this thread (it is !Send when it holds
-    // a PJRT handle; the native constructor keeps everything plain CPU)
+    // the learner lives entirely on this thread; the native constructor
+    // keeps everything plain CPU with no runtime handle to share
     let mut learner = PpoLearner::native(init_params);
     if cfg.threads > 0 {
         learner.threads = cfg.threads;

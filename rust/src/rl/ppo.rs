@@ -20,7 +20,7 @@
 //! metrics carry `diverged = true` — instead of aborting the training run.
 
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
@@ -335,7 +335,7 @@ pub fn ppo_loss_native(
 }
 
 pub struct PpoLearner {
-    rt: Option<Rc<OpdRuntime>>,
+    rt: Option<Arc<OpdRuntime>>,
     pub params: Vec<f32>,
     adam_m: Vec<f32>,
     adam_v: Vec<f32>,
@@ -356,12 +356,12 @@ fn default_threads() -> usize {
 }
 
 impl PpoLearner {
-    pub fn new(rt: Rc<OpdRuntime>) -> Self {
+    pub fn new(rt: Arc<OpdRuntime>) -> Self {
         let params = rt.policy_init.clone();
         Self::build(Some(rt), params)
     }
 
-    pub fn with_params(rt: Rc<OpdRuntime>, params: Vec<f32>) -> Self {
+    pub fn with_params(rt: Arc<OpdRuntime>, params: Vec<f32>) -> Self {
         Self::build(Some(rt), params)
     }
 
@@ -371,7 +371,7 @@ impl PpoLearner {
         Self::build(None, params)
     }
 
-    fn build(rt: Option<Rc<OpdRuntime>>, params: Vec<f32>) -> Self {
+    fn build(rt: Option<Arc<OpdRuntime>>, params: Vec<f32>) -> Self {
         assert_eq!(params.len(), POLICY_PARAM_COUNT);
         let n = params.len();
         Self {

@@ -14,7 +14,7 @@
 //! bitwise identical for ANY `envs` / thread count. `sync_every = 1` (the
 //! default) is the paper's per-episode schedule.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -169,7 +169,7 @@ pub struct Trainer<F: FnMut(u64) -> Env> {
 }
 
 impl<F: FnMut(u64) -> Env> Trainer<F> {
-    pub fn new(rt: Rc<OpdRuntime>, cfg: TrainerConfig, env_factory: F) -> Self {
+    pub fn new(rt: Arc<OpdRuntime>, cfg: TrainerConfig, env_factory: F) -> Self {
         let learner = PpoLearner::new(rt);
         Self::assemble(learner, cfg, env_factory)
     }

@@ -49,6 +49,11 @@ pub fn write_params(path: &Path, params: &[f32]) -> Result<()> {
 }
 
 /// Everything the coordinator needs from the AOT step, loaded once.
+///
+/// Shared as `Arc<OpdRuntime>`: the lazy members sit behind `OnceLock`, so
+/// the handle is `Send + Sync` and agents holding it can ride the sharded
+/// tick's worker pool (DESIGN.md §15) — with the offline xla stub every PJRT
+/// type is plain data, so the auto traits hold all the way down.
 pub struct OpdRuntime {
     pub engine: Engine,
     pub manifest: Manifest,
@@ -56,9 +61,9 @@ pub struct OpdRuntime {
     pub policy_fwd: Program,
     pub predictor_fwd: Program,
     /// loaded lazily by the trainer (compiling the train step takes longer)
-    policy_train: std::cell::OnceCell<Program>,
+    policy_train: std::sync::OnceLock<Program>,
     /// device-pinned predictor weights (lazy; §Perf)
-    pinned_predictor: std::cell::OnceCell<Option<xla::PjRtBuffer>>,
+    pinned_predictor: std::sync::OnceLock<Option<xla::PjRtBuffer>>,
     pub policy_init: Vec<f32>,
     pub predictor_weights: Vec<f32>,
 }
@@ -103,8 +108,8 @@ impl OpdRuntime {
             dir,
             policy_fwd,
             predictor_fwd,
-            policy_train: std::cell::OnceCell::new(),
-            pinned_predictor: std::cell::OnceCell::new(),
+            policy_train: std::sync::OnceLock::new(),
+            pinned_predictor: std::sync::OnceLock::new(),
             policy_init,
             predictor_weights,
         })

@@ -1,6 +1,6 @@
 //! v1 control-plane REST API: typed request/response structs plus the router
 //! wiring. HTTP handlers never touch the simulation directly — the sim/agent
-//! state is single-threaded by design (the PJRT runtime is not Sync) — they
+//! state is owned by the leader loop, one writer by design — they
 //! translate HTTP into `ControlRequest`s sent over a channel to the `Leader`
 //! loop and block on its typed reply. The same pattern as the paper's
 //! Kubernetes API server fronting a single controller loop.

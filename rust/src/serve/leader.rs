@@ -1,8 +1,11 @@
 //! The leader loop: owns the multi-pipeline environment and answers
-//! control-plane commands from the HTTP face over a channel. Deliberately
-//! single-threaded — the PJRT runtime (and therefore the OPD agent) is not
-//! Sync, so the HTTP workers only ever talk to the simulation through
-//! `ControlMsg`s; the loop interleaves command handling with 1 s sim ticks.
+//! control-plane commands from the HTTP face over a channel. The sim/agent
+//! state has exactly one writer — this loop — so the HTTP workers only ever
+//! talk to the simulation through `ControlMsg`s; the loop interleaves
+//! command handling with 1 s sim ticks. The tick itself may fan its decide
+//! phase out over the sharded worker pool (`--tick-threads`, DESIGN.md
+//! §15), but that pool is internal to `MultiEnv::tick` and hands control
+//! back before any state is applied, so the one-writer discipline holds.
 
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
@@ -21,12 +24,14 @@ use crate::util::json::{write_num, write_str, Json};
 use crate::workload::predictor::{LoadPredictor, MovingMaxPredictor};
 use crate::workload::WorkloadGen;
 
-/// Builds agents/predictors for newly applied pipelines. Wired by the CLI so
-/// OPD's runtime handles stay on the leader thread; the native constructor
-/// covers baseline agents without any PJRT wiring.
+/// Builds agents/predictors for newly applied pipelines. Wired by the CLI;
+/// the native constructor covers baseline agents without any PJRT wiring.
+/// Products are `Send` so tenants can ride the sharded tick's worker pool
+/// (DESIGN.md §15) — the `Arc<OpdRuntime>` handle keeps even the HLO-backed
+/// agent and predictor `Send`.
 pub struct TenantFactory {
-    pub make_agent: Box<dyn Fn(AgentKind, u64) -> Result<Box<dyn Agent>, String>>,
-    pub make_predictor: Box<dyn Fn() -> Box<dyn LoadPredictor>>,
+    pub make_agent: Box<dyn Fn(AgentKind, u64) -> Result<Box<dyn Agent + Send>, String>>,
+    pub make_predictor: Box<dyn Fn() -> Box<dyn LoadPredictor + Send>>,
 }
 
 impl TenantFactory {
@@ -336,6 +341,7 @@ impl Leader {
             }
             ControlRequest::DeletePipeline(name) => {
                 if self.env.remove(&name) {
+                    self.evict_tenant_telemetry(&name);
                     Ok((200, Json::obj().set("deleted", name.as_str())))
                 } else {
                     Err(ApiError::not_found(format!("no pipeline named '{name}'")))
@@ -374,6 +380,24 @@ impl Leader {
         let reply = self.handle(msg.req);
         let _ = msg.reply.send(reply);
         shutdown
+    }
+
+    /// Drop a deleted tenant's per-pipeline gauges, series and interned
+    /// publish rows. Without this the leader's metric-key maps only ever
+    /// grow under deploy/delete churn — the labels of dead tenants pin
+    /// memory and bloat every `/metrics` scrape forever (DESIGN.md §15).
+    fn evict_tenant_telemetry(&mut self, name: &str) {
+        use std::fmt::Write as _;
+        let m = &self.cp.metrics;
+        for gauge in ["opd_qos", "opd_cost_cores", "opd_load"] {
+            m.remove_series(gauge, &[("pipeline", name)]);
+        }
+        for prefix in ["load", "load_pred", "qos", "cost", "degraded"] {
+            self.key_buf.clear();
+            let _ = write!(self.key_buf, "{prefix}:{name}");
+            self.cp.series.remove(&self.key_buf);
+        }
+        self.published_decisions.remove(name);
     }
 
     /// Publish the tick's metrics/state to the observability endpoints.
@@ -788,6 +812,39 @@ mod tests {
         l.publish();
         let text = l.cp.metrics.expose();
         assert!(text.contains("opd_qos{"), "per-tenant gauges resume under the cap");
+    }
+
+    #[test]
+    fn delete_evicts_tenant_telemetry_under_churn() {
+        let (mut l, _tx) = leader();
+        l.deploy(&spec("keep", "P1", AgentKind::Greedy)).unwrap();
+        for round in 0..100 {
+            let name = format!("churn{round:03}");
+            l.handle(ControlRequest::ApplyPipeline {
+                spec: spec(&name, "P2", AgentKind::Random),
+                create_only: true,
+            })
+            .unwrap();
+            for _ in 0..3 {
+                l.env.tick();
+                l.publish();
+            }
+            l.handle(ControlRequest::DeletePipeline(name)).unwrap();
+        }
+        // the interned publish rows and the per-pipeline gauges/series must
+        // not retain the 100 dead tenants
+        assert_eq!(l.published_decisions.len(), 1, "only the survivor remains");
+        assert!(l.published_decisions.contains_key("keep"));
+        let text = l.cp.metrics.expose();
+        assert!(!text.contains("churn0"), "dead-tenant gauges evicted:\n{text}");
+        assert!(text.contains("opd_qos{pipeline=\"keep\"}"), "survivor gauges stay");
+        let mut names = Vec::new();
+        l.cp.series.for_each_name(|n| names.push(n.to_string()));
+        assert!(
+            names.iter().all(|n| !n.contains("churn")),
+            "dead-tenant series evicted: {names:?}"
+        );
+        assert!(names.iter().any(|n| n == "qos:keep"), "survivor series stay");
     }
 
     #[test]

@@ -1,10 +1,11 @@
 //! Serving layer: the leader process's HTTP face. Classic observability —
 //! Prometheus-format `/metrics`, JSON `/state`, `/series`, `/healthz` —
 //! mirroring the paper's Prometheus/Grafana monitoring story, plus the
-//! versioned v1 control-plane API (api.rs) backed by the single-threaded
-//! leader loop (leader.rs). The decision loop stays on the main thread (the
-//! PJRT runtime is single-threaded by design); HTTP workers reach it only
-//! through `ControlMsg` channels and the shared `ControlPlane` state.
+//! versioned v1 control-plane API (api.rs) backed by the leader loop
+//! (leader.rs). The decision loop owns all sim state on one thread — the
+//! sharded tick's worker pool (DESIGN.md §15) is internal to
+//! `MultiEnv::tick` — so HTTP workers reach it only through `ControlMsg`
+//! channels and the shared `ControlPlane` state.
 
 pub mod api;
 pub mod http;

@@ -8,10 +8,20 @@
 //! interval. Observations carry cross-pipeline context: the capacity a
 //! tenant plans against is W_max minus the cores other tenants hold, so the
 //! existing agents (greedy / IPA / OPD) respect shared capacity unchanged.
+//!
+//! The tick itself is sharded (DESIGN.md §15): a serial plan phase fixes the
+//! due list, fingerprint runs and logical counters against the tick-start
+//! snapshot, a parallel decide phase runs observation build + predictor +
+//! agent forwards on a persistent worker pool (each worker owns its scratch),
+//! and a serial apply phase commits the proposed configs in due-list order.
+//! Results are bitwise identical at any `tick_threads` — the §14 fixed-lane
+//! kernels are batch-invariant, every tenant draws from its own RNG stream,
+//! and nothing is applied until the workers are done.
 
 use std::cell::Cell;
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap};
+use std::sync::mpsc::{channel, Receiver, Sender};
 
 use crate::agents::Agent;
 use crate::cluster::{
@@ -59,11 +69,11 @@ impl TenantHealth {
 pub struct Tenant {
     pub name: String,
     pub spec: PipelineSpec,
-    pub agent: Box<dyn Agent>,
+    pub agent: Box<dyn Agent + Send>,
     pub weights: QosWeights,
     pub adapt_interval_secs: usize,
     source: LoadSource,
-    predictor: Box<dyn LoadPredictor>,
+    predictor: Box<dyn LoadPredictor + Send>,
     history: LoadHistory,
     last_rate: f64,
     /// simulation time of the next adaptation decision
@@ -104,10 +114,10 @@ impl Tenant {
     pub fn new(
         name: impl Into<String>,
         spec: PipelineSpec,
-        agent: Box<dyn Agent>,
+        agent: Box<dyn Agent + Send>,
         weights: QosWeights,
         source: LoadSource,
-        predictor: Box<dyn LoadPredictor>,
+        predictor: Box<dyn LoadPredictor + Send>,
         adapt_interval_secs: usize,
     ) -> Self {
         Self {
@@ -187,12 +197,12 @@ pub struct TenantStatus {
 
 /// Per-tenant observation ingredients captured before a batched forward
 /// (the tick-start snapshot every grouped tenant plans against). Shells are
-/// pooled on the env and refilled in place, so a warm group prep phase does
-/// not allocate (the Env obs-scratch pattern ported leader-side).
+/// pooled on each worker scratch and refilled in place, so a warm group prep
+/// phase does not allocate (the Env obs-scratch pattern ported leader-side).
 #[derive(Default)]
 struct GroupPrep {
-    /// index into the caller's group name list (the tenant map outlives the
-    /// prep, so no name/spec clones are held here)
+    /// due-list index of the member (the tenant map outlives the prep, so no
+    /// name/spec clones are held here)
     idx: usize,
     load_now: f64,
     load_pred: f64,
@@ -203,6 +213,163 @@ struct GroupPrep {
     current: Vec<TaskConfig>,
     ready: Vec<usize>,
     metrics: PipelineMetrics,
+}
+
+/// One due tenant's unit of work in the sharded tick (DESIGN.md §15). The
+/// serial plan phase fills a slot per due tenant — in work order: fingerprint
+/// runs first, sequential deciders after — and the parallel decide phase
+/// writes the proposed config back into it for the serial apply phase.
+struct DecideSlot {
+    /// index into the tick's due list (apply order)
+    due_idx: usize,
+    /// batch-path fingerprint run membership; `None` takes the sequential
+    /// decide path
+    fp: Option<u64>,
+    /// planned into the run's batched predictor pass (§9 join rule, decided
+    /// globally at plan time so chunk splits cannot change the counters)
+    pred_join: bool,
+    /// the due tenant. Null marks an inactive pooled slot (workers skip it).
+    /// Pointers of one tick are disjoint — the due list is deduped — and the
+    /// leader blocks until every chunk returns before touching the map.
+    tenant: *mut Tenant,
+    /// the proposed config (filled by the decide phase, committed serially)
+    action: Vec<TaskConfig>,
+    /// wall-clock seconds of this tenant's decide (fwd share + sampling)
+    decide_secs: f64,
+}
+
+// SAFETY: the raw tenant pointer is only dereferenced inside the tick, where
+// the leader hands disjoint slots to the workers and blocks for them all;
+// between ticks it is inert pooled data.
+unsafe impl Send for DecideSlot {}
+
+impl Default for DecideSlot {
+    fn default() -> Self {
+        Self {
+            due_idx: 0,
+            fp: None,
+            pred_join: false,
+            tenant: std::ptr::null_mut(),
+            action: Vec::new(),
+            decide_secs: 0.0,
+        }
+    }
+}
+
+/// Per-worker scratch of the sharded tick: everything the decide phase needs
+/// to run allocation-free once warm — one `Workspace` and LSTM batch scratch
+/// per worker, plus the observation/prep pools the old leader-owned decide
+/// path kept on the env.
+#[derive(Default)]
+struct TickScratch {
+    ws: Workspace,
+    batch_states: Vec<f32>,
+    /// raw f64 predictor window of one tenant
+    win: Vec<f64>,
+    /// stacked (B, PRED_WINDOW) f32 windows of one predictor pass
+    pred_windows: Vec<f32>,
+    /// copy of a run's shared predictor weights (borrow decoupling)
+    pred_weights: Vec<f32>,
+    /// run-relative row indices served by the batched predictor pass
+    pred_rows: Vec<usize>,
+    lstm_batch: LstmBatchScratch,
+    /// pooled GroupPrep shells for the batched decide path
+    preps: Vec<GroupPrep>,
+    /// sequential-decide observation scratch
+    obs_current: Vec<TaskConfig>,
+    obs_ready: Vec<usize>,
+    obs_metrics: PipelineMetrics,
+    /// growth events of the pooled shells/buffers above (flat once warm)
+    grow: u64,
+}
+
+impl TickScratch {
+    fn grow_events(&self) -> u64 {
+        self.grow + self.ws.grow_events() + self.lstm_batch.grow_events()
+    }
+}
+
+/// One chunk of due slots shipped to a tick worker and back (the rollout
+/// pool's ping-pong ownership shape — DESIGN.md §10): the worker owns the
+/// slots and its scratch while it runs; panics ride back in the job.
+struct TickJob {
+    /// offset of this chunk's first slot in the tick's slot array
+    start: usize,
+    /// worker-scratch index the chunk ran on
+    chunk: usize,
+    panic: Option<Box<dyn std::any::Any + Send>>,
+    slots: Vec<DecideSlot>,
+    scratch: TickScratch,
+    store: *const DeploymentStore,
+    now: f64,
+    n_tenants: usize,
+}
+
+// SAFETY: the store pointer is only read through `&DeploymentStore` while the
+// leader blocks on the done channel (the store is `Sync` — see its snapshot
+// surface note); slots carry `Send` payloads per the DecideSlot argument.
+unsafe impl Send for TickJob {}
+
+/// Persistent worker pool of the sharded tick: long-lived threads fed over
+/// per-worker channels, draining into one shared done channel.
+struct TickPool {
+    job_txs: Vec<Sender<TickJob>>,
+    done_rx: Receiver<TickJob>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl TickPool {
+    fn new(threads: usize) -> Self {
+        let (done_tx, done_rx) = channel::<TickJob>();
+        let mut job_txs = Vec::with_capacity(threads);
+        let mut handles = Vec::with_capacity(threads);
+        for w in 0..threads {
+            let (tx, rx) = channel::<TickJob>();
+            let done = done_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("opd-tick-{w}"))
+                .spawn(move || tick_worker(rx, done))
+                .expect("spawn tick worker");
+            job_txs.push(tx);
+            handles.push(handle);
+        }
+        Self { job_txs, done_rx, handles }
+    }
+
+    fn size(&self) -> usize {
+        self.job_txs.len()
+    }
+}
+
+impl Drop for TickPool {
+    fn drop(&mut self) {
+        // dropping the senders ends each worker's recv loop
+        self.job_txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Long-lived decide worker (DESIGN.md §15): receives a chunk of slots plus
+/// its owned scratch, runs the read-only decide phase against the shared
+/// tick-start snapshot, and ships the chunk back. A panic is carried back in
+/// the job and re-raised on the leader after every chunk returned.
+fn tick_worker(rx: Receiver<TickJob>, done: Sender<TickJob>) {
+    while let Ok(mut job) = rx.recv() {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // SAFETY: the leader keeps the store alive and untouched until
+            // every chunk of this tick is back (it blocks on the done
+            // channel before its next mutation).
+            let store = unsafe { &*job.store };
+            let (now, n_tenants) = (job.now, job.n_tenants);
+            process_slots(store, now, n_tenants, &mut job.slots, &mut job.scratch);
+        }));
+        job.panic = result.err();
+        if done.send(job).is_err() {
+            break;
+        }
+    }
 }
 
 /// The shared-cluster, multi-pipeline environment.
@@ -245,22 +412,25 @@ pub struct MultiEnv {
     repair_rng: Pcg32,
     /// reused name buffer for the per-tick repair scan
     repair_scratch: Vec<String>,
-    ws: Workspace,
-    batch_states: Vec<f32>,
-    /// reused predictor-window scratch (raw f64 window of one tenant)
-    win_scratch: Vec<f64>,
-    /// stacked (B, PRED_WINDOW) f32 windows of one predictor group
-    pred_windows: Vec<f32>,
-    /// copy of the group's shared predictor weights (borrow decoupling)
-    pred_weights: Vec<f32>,
-    /// member indices (into the group's name list) served by the batch
-    pred_group: Vec<usize>,
-    lstm_batch: LstmBatchScratch,
-    /// pooled GroupPrep shells for the batched decide path
-    preps: Vec<GroupPrep>,
-    /// sequential-decide / serving-loop observation scratch (the Env
-    /// obs-scratch pattern — DESIGN.md §7): current config, ready replicas
-    /// and metrics are assembled into these reused buffers
+    /// decide-phase worker count (DESIGN.md §15). 1 keeps everything on the
+    /// leader thread; any value produces bitwise-identical tick results.
+    pub tick_threads: usize,
+    /// persistent decide workers, built lazily on the first sharded tick and
+    /// rebuilt only when `tick_threads` changes
+    tick_pool: Option<TickPool>,
+    /// pooled per-due-tenant work slots, laid out in work order each tick
+    tick_slots: Vec<DecideSlot>,
+    /// recycled chunk shells for the worker ping-pong
+    slot_shells: Vec<Vec<DecideSlot>>,
+    /// per-worker scratch, index-stable across ticks so warm-up holds
+    tick_scratch: Vec<TickScratch>,
+    /// reused landing buffer for chunks coming back from the pool
+    tick_returned: Vec<TickJob>,
+    /// due-index → work-order slot position of the current tick
+    apply_order: Vec<usize>,
+    /// serving-loop observation scratch (the Env obs-scratch pattern —
+    /// DESIGN.md §7): current config, ready replicas and metrics are
+    /// assembled into these reused buffers
     obs_current: Vec<TaskConfig>,
     obs_ready: Vec<usize>,
     obs_metrics: PipelineMetrics,
@@ -280,8 +450,8 @@ pub struct MultiEnv {
     due_scratch: Vec<String>,
     /// (fingerprint, due-index) pairs of batch-capable due tenants
     fp_scratch: Vec<(u64, usize)>,
-    /// due-indices of the fingerprint group currently being decided
-    members_scratch: Vec<usize>,
+    /// due-indices taking the sequential decide path this tick
+    seq_scratch: Vec<usize>,
 }
 
 /// Due-wheel bucket of an adaptation deadline: the first whole-second tick
@@ -314,14 +484,13 @@ impl MultiEnv {
             fault_queue: Vec::new(),
             repair_rng: Pcg32::new(0xFA17),
             repair_scratch: Vec::new(),
-            ws: Workspace::new(),
-            batch_states: Vec::new(),
-            win_scratch: Vec::new(),
-            pred_windows: Vec::new(),
-            pred_weights: Vec::new(),
-            pred_group: Vec::new(),
-            lstm_batch: LstmBatchScratch::default(),
-            preps: Vec::new(),
+            tick_threads: 1,
+            tick_pool: None,
+            tick_slots: Vec::new(),
+            slot_shells: Vec::new(),
+            tick_scratch: Vec::new(),
+            tick_returned: Vec::new(),
+            apply_order: Vec::new(),
             obs_current: Vec::new(),
             obs_ready: Vec::new(),
             obs_metrics: PipelineMetrics::default(),
@@ -329,7 +498,7 @@ impl MultiEnv {
             due_wheel: BinaryHeap::new(),
             due_scratch: Vec::new(),
             fp_scratch: Vec::new(),
-            members_scratch: Vec::new(),
+            seq_scratch: Vec::new(),
         }
     }
 
@@ -381,6 +550,7 @@ impl MultiEnv {
         // tenant's old entry is lazily dropped when its bucket pops
         self.due_wheel.push((Reverse(due_key(tenant.next_decision)), tenant.name.clone()));
         self.tenants.insert(tenant.name.clone(), tenant);
+        self.maybe_compact_wheel();
         Ok(out)
     }
 
@@ -388,7 +558,26 @@ impl MultiEnv {
     pub fn remove(&mut self, name: &str) -> bool {
         let had = self.tenants.remove(name).is_some();
         self.store.delete(name);
+        self.maybe_compact_wheel();
         had
+    }
+
+    /// Compact the due wheel when lazy invalidation has left it more than
+    /// half stale: removals and redeploys strand entries that are only
+    /// dropped when their bucket pops, so a churny deploy/remove workload
+    /// that never ticks would otherwise grow the heap without bound. The
+    /// rebuild reuses the heap's own allocation (one live entry per tenant),
+    /// keeping its capacity bounded by the live fleet, not the churn.
+    fn maybe_compact_wheel(&mut self) {
+        if self.due_wheel.len() <= (2 * self.tenants.len()).max(8) {
+            return;
+        }
+        let mut entries = std::mem::take(&mut self.due_wheel).into_vec();
+        entries.clear();
+        for (name, t) in &self.tenants {
+            entries.push((Reverse(due_key(t.next_decision)), name.clone()));
+        }
+        self.due_wheel = BinaryHeap::from(entries);
     }
 
     /// Hot-swap the decision agent of a running pipeline. The swap bumps the
@@ -396,7 +585,11 @@ impl MultiEnv {
     /// only ever invoked between ticks — a new agent can never join a
     /// batched decide group mid-flight with a mismatched fingerprint: groups
     /// are formed fresh from `batch_params` at the top of every tick.
-    pub fn set_agent(&mut self, name: &str, mut agent: Box<dyn Agent>) -> Result<(), String> {
+    pub fn set_agent(
+        &mut self,
+        name: &str,
+        mut agent: Box<dyn Agent + Send>,
+    ) -> Result<(), String> {
         // an incoming native agent starts on the fleet's adopted online
         // policy (never a NEWER one — tick-boundary adoption stays uniform)
         if let Some(hook) = &self.online {
@@ -446,10 +639,12 @@ impl MultiEnv {
         self.tenants.get(name)?.agent.batch_params().map(|(_, fp)| fp)
     }
 
-    /// Cumulative growth events of the leader-side observation scratch;
-    /// flat after warm-up when the decide/tick paths are allocation-free.
+    /// Cumulative growth events of the leader-side observation scratch and
+    /// every decide worker's pooled buffers; flat after warm-up when the
+    /// decide/tick paths are allocation-free.
     pub fn obs_grow_events(&self) -> u64 {
         self.obs_grow_events.get()
+            + self.tick_scratch.iter().map(TickScratch::grow_events).sum::<u64>()
     }
 
     /// Tick-boundary adoption (DESIGN.md §11): if the background trainer has
@@ -638,286 +833,196 @@ impl MultiEnv {
         t.repair_attempts = t.repair_attempts.saturating_add(1);
     }
 
-    /// Run one tenant's adaptation decision against the shared cluster.
-    /// Observation ingredients are assembled into the env's reused scratch
-    /// buffers (the Env obs-scratch pattern — allocation-free after warm-up).
-    fn decide(&mut self, name: &str) {
-        let n_tenants = self.tenants.len();
-        let now = self.now;
-        let Self {
-            tenants,
-            store,
-            win_scratch,
-            obs_current,
-            obs_ready,
-            obs_metrics,
-            online,
-            online_transitions,
-            obs_grow_events,
-            repairs,
-            ..
-        } = self;
-        let t = match tenants.get_mut(name) {
-            Some(t) => t,
-            None => return,
-        };
-        t.history.window_into(PRED_WINDOW, win_scratch);
-        let load_pred = t.predictor.predict_max(win_scratch);
-        t.last_pred = load_pred;
-        let caps = (obs_current.capacity(), obs_ready.capacity());
-        obs_current.clear();
-        match store.get(name) {
-            Some(d) => obs_current.extend_from_slice(&d.config),
-            None => obs_current.extend(t.spec.default_config()),
-        }
-        store.ready_replicas_into(name, t.spec.n_tasks(), now, obs_ready);
-        pipeline_metrics_into(&t.spec, obs_current, obs_ready, t.last_rate, obs_metrics);
-        let cores_other = store.cores_used_by_others(name);
-        let obs = Observation {
-            spec: &t.spec,
-            load_now: t.last_rate,
-            load_pred,
-            capacity: (store.topo.capacity() - cores_other).max(0.0),
-            cores_free: store.topo.free(),
-            current: obs_current,
-            ready: obs_ready,
-            metrics: obs_metrics,
-            adapt_interval_secs: t.adapt_interval_secs as f64,
-            cores_other,
-            tenants: n_tenants,
-        };
-        let t0 = std::time::Instant::now();
-        let action = t.agent.decide(&obs);
-        t.last_decision_secs = t0.elapsed().as_secs_f64();
-        drop(obs);
-        match store.apply(name, &t.spec, &action, now) {
-            Ok(out) => {
-                t.generation = out.generation;
-                t.decisions += 1;
-                if out.clamped {
-                    t.clamped += 1;
-                }
-                t.restarts += out.restarts;
-                // a successful unclamped agent apply is also a repair: the
-                // tenant runs a full desired config again
-                if t.health != TenantHealth::Healthy && !out.clamped {
-                    t.health = TenantHealth::Healthy;
-                    t.repair_attempts = 0;
-                    *repairs += 1;
-                }
-                t.desired = out.applied;
-            }
-            // infeasible even after clamping (the other tenants hold the
-            // cluster): keep the previous deployment and try again next round
-            Err(_) => {}
-        }
-        t.next_decision = now + t.adapt_interval_secs as f64;
-        if obs_current.capacity() != caps.0 || obs_ready.capacity() != caps.1 {
-            obs_grow_events.set(obs_grow_events.get() + 1);
-        }
-        harvest_online(online, online_transitions, t);
-    }
-
-    /// Compute every group member's load prediction, setting `last_pred`.
-    /// Members whose predictors advertise the SAME native weight vector
-    /// (fingerprint match — in practice the whole group, since one factory
-    /// builds them) are evaluated in ONE batched LSTM pass: each timestep
-    /// sweeps the recurrent weights once for all members instead of once
-    /// per member, so the leader's per-tick predictor cost stops scaling
-    /// with a full weight sweep per tenant. Everyone else (naive baselines,
-    /// HLO-backed predictors, odd-weights members) predicts sequentially.
-    /// Row-bitwise equal to the sequential path, so batching never changes
-    /// a decision.
-    fn predict_group(&mut self, names: &[String], members: &[usize]) {
-        self.pred_windows.clear();
-        self.pred_group.clear();
-        let mut group_fp: Option<u64> = None;
-        for &i in members {
-            let name = &names[i];
-            let t = match self.tenants.get_mut(name) {
-                Some(t) => t,
-                None => continue,
-            };
-            t.history.window_into(PRED_WINDOW, &mut self.win_scratch);
-            let joins = matches!(
-                t.predictor.batch_params(),
-                Some((_, fp)) if group_fp.is_none() || group_fp == Some(fp)
-            );
-            if joins {
-                let (_, fp) = t.predictor.batch_params().expect("checked above");
-                group_fp = Some(fp);
-                let w = t
-                    .predictor
-                    .batch_window(&self.win_scratch)
-                    .expect("batch_params implies batch_window");
-                self.pred_windows.extend_from_slice(w);
-                self.pred_group.push(i);
+    /// §15 plan phase (serial): split the due list into fingerprint runs
+    /// and sequential deciders, fix the work order, capture each tenant's
+    /// slot, and emulate the logical batching counters over GLOBAL runs —
+    /// chunking in the decide phase can therefore never change them.
+    ///
+    /// Runs of ≥2 equal-fingerprint agents count as one batched group (the
+    /// grouping the old per-tick build produced); the §9 predictor-join rule
+    /// is evaluated over the whole run in member order, with the old
+    /// singleton fallback (a lone joiner predicts sequentially) preserved.
+    fn plan_slots(&mut self, due: &[String]) {
+        let n_due = due.len();
+        let mut pairs = std::mem::take(&mut self.fp_scratch);
+        let mut seq = std::mem::take(&mut self.seq_scratch);
+        pairs.clear();
+        seq.clear();
+        for (i, name) in due.iter().enumerate() {
+            let t = self.tenants.get(name).expect("due names are live");
+            let fp = if self.batching {
+                t.agent.batch_params().map(|(_, fp)| fp)
             } else {
-                t.last_pred = t.predictor.predict_max(&self.win_scratch);
+                None
+            };
+            match fp {
+                Some(fp) => pairs.push((fp, i)),
+                None => seq.push(i),
             }
         }
-        match self.pred_group.len() {
-            0 => {}
-            1 => {
-                // a lone batchable member gains nothing from the kernel —
-                // predict sequentially like everyone else
-                let t = self
-                    .tenants
-                    .get_mut(&names[self.pred_group[0]])
-                    .expect("group member exists");
-                t.history.window_into(PRED_WINDOW, &mut self.win_scratch);
-                t.last_pred = t.predictor.predict_max(&self.win_scratch);
+        // runs of equal fingerprint, ascending, members in due order
+        pairs.sort_unstable();
+        self.apply_order.clear();
+        self.apply_order.resize(n_due, 0);
+        if self.tick_slots.len() < n_due {
+            self.tick_slots.resize_with(n_due, DecideSlot::default);
+        }
+        for slot in &mut self.tick_slots {
+            slot.tenant = std::ptr::null_mut();
+        }
+        let mut w = 0usize;
+        let mut k = 0usize;
+        while k < pairs.len() {
+            let fp = pairs[k].0;
+            let start = k;
+            while k < pairs.len() && pairs[k].0 == fp {
+                k += 1;
             }
-            batch => {
-                // decouple the weights borrow from the tenant map: copy the
-                // shared vector into the reused buffer (2.7k floats)
-                {
-                    let t = self
-                        .tenants
-                        .get(&names[self.pred_group[0]])
-                        .expect("group member exists");
-                    let (w, _) = t.predictor.batch_params().expect("batched member");
-                    self.pred_weights.clear();
-                    self.pred_weights.extend_from_slice(w);
+            let run = &pairs[start..k];
+            if run.len() >= 2 {
+                self.batched_groups += 1;
+                self.batched_decisions += run.len();
+            }
+            // §9 predictor-join plan over the whole run: the first
+            // advertising member pins the shared weight vector
+            let mut group_fp: Option<u64> = None;
+            let mut joins = 0usize;
+            let mut first_join = 0usize;
+            for (off, &(_, i)) in run.iter().enumerate() {
+                let t = self.tenants.get_mut(&due[i]).expect("due names are live");
+                let joined = run.len() >= 2
+                    && matches!(
+                        t.predictor.batch_params(),
+                        Some((_, pfp)) if group_fp.is_none() || group_fp == Some(pfp)
+                    );
+                if joined {
+                    let (_, pfp) = t.predictor.batch_params().expect("checked above");
+                    group_fp = Some(pfp);
+                    if joins == 0 {
+                        first_join = w + off;
+                    }
+                    joins += 1;
                 }
-                let Self { tenants, pred_windows, pred_weights, pred_group, lstm_batch, .. } =
-                    self;
-                let preds =
-                    predictor_fwd_batch_scratch(pred_weights, pred_windows, batch, lstm_batch);
-                for (j, &i) in pred_group.iter().enumerate() {
-                    let t = tenants.get_mut(&names[i]).expect("group member exists");
-                    t.last_pred = (preds[j] as f64).max(0.0);
-                }
-                self.batched_predictions += batch;
+                let slot = &mut self.tick_slots[w + off];
+                slot.due_idx = i;
+                slot.fp = Some(fp);
+                slot.pred_join = joined;
+                slot.tenant = t as *mut Tenant;
+                self.apply_order[i] = w + off;
+            }
+            if joins >= 2 {
+                self.batched_predictions += joins;
                 self.batched_predictor_groups += 1;
+            } else if joins == 1 {
+                // a lone joiner gains nothing from the batched kernel — it
+                // predicts sequentially (the old §9 singleton fallback,
+                // bitwise equal either way)
+                self.tick_slots[first_join].pred_join = false;
             }
+            w += run.len();
         }
+        for &i in seq.iter() {
+            let t = self.tenants.get_mut(&due[i]).expect("due names are live");
+            let slot = &mut self.tick_slots[w];
+            slot.due_idx = i;
+            slot.fp = None;
+            slot.pred_join = false;
+            slot.tenant = t as *mut Tenant;
+            self.apply_order[i] = w;
+            w += 1;
+        }
+        self.fp_scratch = pairs;
+        self.seq_scratch = seq;
     }
 
-    /// Run one batched forward for a fingerprint group of ≥1 due tenants:
-    /// build every member's observation against the tick-start snapshot,
-    /// stack the Eq. 5 state rows, evaluate them in ONE pass over the shared
-    /// parameter vector, then sample/apply per tenant (each with its own RNG
-    /// stream). Unlike the sequential path — where tenant k observes the
-    /// applies of tenants 1..k−1 within the same tick — grouped tenants plan
-    /// against the snapshot; the store still clamps each apply against what
-    /// is actually allocated, so shared-capacity invariants are unchanged.
-    fn decide_group(&mut self, names: &[String], members: &[usize]) {
-        let n_tenants = self.tenants.len();
-        self.predict_group(names, members);
-        self.batch_states.clear();
-        let now = self.now;
-        let mut batch = 0usize;
-        {
-            let Self { tenants, store, preps, batch_states, obs_grow_events, .. } = self;
-            for &i in members {
-                let name = &names[i];
-                let t = match tenants.get_mut(name) {
-                    Some(t) => t,
-                    None => continue,
-                };
-                // refill a pooled prep shell in place (no name/spec clones,
-                // no per-member buffer allocations once warm)
-                if batch == preps.len() {
-                    preps.push(GroupPrep::default());
-                    obs_grow_events.set(obs_grow_events.get() + 1);
-                }
-                let p = &mut preps[batch];
-                p.idx = i;
-                // load_pred was computed by predict_group (batched when the
-                // members share predictor weights)
-                p.load_pred = t.last_pred;
-                p.load_now = t.last_rate;
-                p.adapt_interval_secs = t.adapt_interval_secs as f64;
-                let caps = (p.current.capacity(), p.ready.capacity());
-                p.current.clear();
-                match store.get(name) {
-                    Some(d) => p.current.extend_from_slice(&d.config),
-                    None => p.current.extend(t.spec.default_config()),
-                }
-                store.ready_replicas_into(name, t.spec.n_tasks(), now, &mut p.ready);
-                pipeline_metrics_into(&t.spec, &p.current, &p.ready, p.load_now, &mut p.metrics);
-                p.cores_other = store.cores_used_by_others(name);
-                p.capacity = (store.topo.capacity() - p.cores_other).max(0.0);
-                p.cores_free = store.topo.free();
-                let obs = Observation {
-                    spec: &t.spec,
-                    load_now: p.load_now,
-                    load_pred: p.load_pred,
-                    capacity: p.capacity,
-                    cores_free: p.cores_free,
-                    current: &p.current,
-                    ready: &p.ready,
-                    metrics: &p.metrics,
-                    adapt_interval_secs: p.adapt_interval_secs,
-                    cores_other: p.cores_other,
-                    tenants: n_tenants,
-                };
-                build_state_append(&obs, batch_states);
-                drop(obs);
-                if p.current.capacity() != caps.0 || p.ready.capacity() != caps.1 {
-                    obs_grow_events.set(obs_grow_events.get() + 1);
-                }
-                batch += 1;
-            }
-        }
-        if batch == 0 {
+    /// §15 decide phase: every slot's observation build, predictor and agent
+    /// forward runs against the immutable tick-start snapshot — on the
+    /// leader thread at `tick_threads <= 1`, else chunked over the pool.
+    /// Chunks may split a fingerprint run; the §14 kernels are
+    /// batch-invariant, so the split is unobservable in the results.
+    fn run_decide_phase(&mut self, n_due: usize) {
+        if n_due == 0 {
             return;
         }
-        let fwd_secs = {
-            let leader =
-                self.tenants.get(&names[self.preps[0].idx]).expect("group member exists");
-            let (params, _) = leader
-                .agent
-                .batch_params()
-                .expect("grouped agents advertise batch support");
-            let t0 = std::time::Instant::now();
-            let _ = self.ws.policy_fwd_batch(params, &self.batch_states, batch);
-            t0.elapsed().as_secs_f64()
-        };
-        self.batched_groups += 1;
-        self.batched_decisions += batch;
-        let fwd_share = fwd_secs / batch as f64;
+        let threads = self.tick_threads.max(1).min(n_due);
+        while self.tick_scratch.len() < threads {
+            self.tick_scratch.push(TickScratch::default());
+        }
+        let now = self.now;
+        let n_tenants = self.tenants.len();
+        if threads <= 1 {
+            let Self { store, tick_slots, tick_scratch, .. } = self;
+            process_slots(store, now, n_tenants, tick_slots, &mut tick_scratch[0]);
+            return;
+        }
+        // the pool is sized by the knob, not the clamped chunk count, so a
+        // tick with few due tenants never tears down and respawns threads
+        let pool_size = self.tick_threads;
+        if self.tick_pool.as_ref().map(TickPool::size) != Some(pool_size) {
+            self.tick_pool = Some(TickPool::new(pool_size));
+        }
+        let per = n_due.div_ceil(threads);
+        let n_chunks = n_due.div_ceil(per);
+        let Self { store, tick_pool, tick_slots, slot_shells, tick_scratch, tick_returned, .. } =
+            self;
+        let pool = tick_pool.as_ref().expect("pool built above");
+        let store_ptr: *const DeploymentStore = store;
+        // tail-first drain: each chunk moves out with zero copies, and the
+        // last chunk carries the pooled null-slot tail (workers skip nulls)
+        for c in (0..n_chunks).rev() {
+            let start = c * per;
+            let mut shell = slot_shells.pop().unwrap_or_default();
+            shell.clear();
+            shell.extend(tick_slots.drain(start..));
+            let job = TickJob {
+                start,
+                chunk: c,
+                panic: None,
+                slots: shell,
+                scratch: std::mem::take(&mut tick_scratch[c]),
+                store: store_ptr,
+                now,
+                n_tenants,
+            };
+            pool.job_txs[c % threads].send(job).expect("tick worker alive");
+        }
+        for _ in 0..n_chunks {
+            tick_returned.push(pool.done_rx.recv().expect("tick worker alive"));
+        }
+        if let Some(p) = tick_returned.iter_mut().find_map(|j| j.panic.take()) {
+            std::panic::resume_unwind(p);
+        }
+        // rebuild the slot array in order; shells go back to the pool
+        tick_returned.sort_unstable_by_key(|j| j.start);
+        for job in tick_returned.drain(..) {
+            let TickJob { chunk, slots, scratch, .. } = job;
+            tick_scratch[chunk] = scratch;
+            let mut shell = slots;
+            tick_slots.append(&mut shell);
+            slot_shells.push(shell);
+        }
+    }
+
+    /// §15 apply phase (serial): commit every proposed config in due-list
+    /// order. The store sees exactly one writer, and each apply observes the
+    /// applies before it — identical bookkeeping to the old sequential path.
+    fn apply_slots(&mut self, due: &[String]) {
+        let now = self.now;
         let Self {
             tenants,
             store,
-            preps,
-            batch_states,
-            ws,
+            tick_slots,
+            apply_order,
             online,
             online_transitions,
             repairs,
             ..
         } = self;
-        for (row, p) in preps[..batch].iter().enumerate() {
-            let name = &names[p.idx];
-            let t = match tenants.get_mut(name) {
-                Some(t) => t,
-                None => continue,
-            };
-            let obs = Observation {
-                spec: &t.spec,
-                load_now: p.load_now,
-                load_pred: p.load_pred,
-                capacity: p.capacity,
-                cores_free: p.cores_free,
-                current: &p.current,
-                ready: &p.ready,
-                metrics: &p.metrics,
-                adapt_interval_secs: p.adapt_interval_secs,
-                cores_other: p.cores_other,
-                tenants: n_tenants,
-            };
-            let state = &batch_states[row * STATE_DIM..(row + 1) * STATE_DIM];
-            let logits = &ws.logits()[row * LOGITS_DIM..(row + 1) * LOGITS_DIM];
-            let value = ws.values()[row];
-            let t0 = std::time::Instant::now();
-            let action = t.agent.batch_decide(&obs, state, logits, value);
-            let decide_secs = fwd_share + t0.elapsed().as_secs_f64();
-            drop(obs);
-            let outcome = store.apply(name, &t.spec, &action, now);
-            t.last_decision_secs = decide_secs;
-            match outcome {
+        for (di, name) in due.iter().enumerate() {
+            let slot = &mut tick_slots[apply_order[di]];
+            let Some(t) = tenants.get_mut(name) else { continue };
+            t.last_decision_secs = slot.decide_secs;
+            match store.apply(name, &t.spec, &slot.action, now) {
                 Ok(out) => {
                     t.generation = out.generation;
                     t.decisions += 1;
@@ -925,6 +1030,8 @@ impl MultiEnv {
                         t.clamped += 1;
                     }
                     t.restarts += out.restarts;
+                    // a successful unclamped agent apply is also a repair:
+                    // the tenant runs a full desired config again
                     if t.health != TenantHealth::Healthy && !out.clamped {
                         t.health = TenantHealth::Healthy;
                         t.repair_attempts = 0;
@@ -932,8 +1039,8 @@ impl MultiEnv {
                     }
                     t.desired = out.applied;
                 }
-                // infeasible even after clamping: keep the previous
-                // deployment and try again next round (same as decide())
+                // infeasible even after clamping (the other tenants hold the
+                // cluster): keep the previous deployment, try again next round
                 Err(_) => {}
             }
             t.next_decision = now + t.adapt_interval_secs as f64;
@@ -941,13 +1048,65 @@ impl MultiEnv {
         }
     }
 
+    /// Digest of everything a tick is contracted to produce bitwise
+    /// identically at any `tick_threads` (DESIGN.md §15): per-tenant
+    /// decision state, RNG stream positions, deployed configs, the store's
+    /// usage index and the logical batching/fault counters. Wall-clock
+    /// timing fields are deliberately excluded — they are the only
+    /// thread-count-dependent output.
+    pub fn tick_fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut fold = |h: &mut u64, v: u64| {
+            for b in v.to_le_bytes() {
+                *h ^= b as u64;
+                *h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        for (name, t) in &self.tenants {
+            fold(&mut h, name.len() as u64);
+            fold(&mut h, t.generation);
+            fold(&mut h, t.decisions as u64);
+            fold(&mut h, t.clamped as u64);
+            fold(&mut h, t.restarts as u64);
+            fold(&mut h, t.last_pred.to_bits());
+            fold(&mut h, t.last_qos.to_bits());
+            fold(&mut h, t.last_cost.to_bits());
+            fold(&mut h, t.next_decision.to_bits());
+            fold(&mut h, t.degraded_secs.to_bits());
+            fold(&mut h, t.health as u64);
+            fold(&mut h, t.agent.rng_fingerprint());
+            if let Some(d) = self.store.get(name) {
+                for c in &d.config {
+                    fold(&mut h, c.variant as u64);
+                    fold(&mut h, c.replicas as u64);
+                    fold(&mut h, c.batch_idx as u64);
+                }
+            }
+        }
+        fold(&mut h, self.store.usage_fingerprint());
+        fold(&mut h, self.batched_decisions as u64);
+        fold(&mut h, self.batched_groups as u64);
+        fold(&mut h, self.batched_predictions as u64);
+        fold(&mut h, self.batched_predictor_groups as u64);
+        fold(&mut h, self.online_transitions as u64);
+        fold(&mut h, self.repairs as u64);
+        fold(&mut h, self.node_failures as u64);
+        fold(&mut h, self.evacuations as u64);
+        fold(&mut h, self.tenant_kills as u64);
+        h
+    }
+
     /// Advance the shared clock by one second: adopt any newly published
     /// online policy, run every adaptation decision that is due, then serve
     /// one second of load for every tenant.
     ///
-    /// With batching on, due tenants whose agents share one native parameter
-    /// vector (same `batch_params` fingerprint) are decided through a single
-    /// batched forward; everyone else takes the sequential path first.
+    /// The decision round is the three-phase sharded tick of DESIGN.md §15:
+    /// a serial plan phase fixes the due list, the fingerprint runs and the
+    /// logical batching counters; a parallel decide phase proposes a config
+    /// per due tenant against the tick-start snapshot (chunks of the due
+    /// list on the worker pool when `tick_threads > 1`); a serial apply
+    /// phase commits them in due-list order. Faults, repairs and parameter
+    /// adoption stay serial, so chaos plans replay bit-for-bit too.
     pub fn tick(&mut self) {
         // adoption happens BEFORE groups form, so a batched group never
         // mixes parameter fingerprints (DESIGN.md §11)
@@ -960,7 +1119,9 @@ impl MultiEnv {
             self.due_wheel.capacity(),
             self.due_scratch.capacity(),
             self.fp_scratch.capacity(),
-            self.members_scratch.capacity(),
+            self.seq_scratch.capacity(),
+            self.apply_order.capacity(),
+            self.tick_slots.capacity(),
         );
         // pop every due deadline bucket off the wheel — O(due · log n)
         // instead of the old O(tenants) linear scan (DESIGN.md §12)
@@ -982,44 +1143,10 @@ impl MultiEnv {
         // key-ordered) and drop same-tick duplicates from redeploys
         due.sort_unstable();
         due.dedup();
-        if self.batching {
-            let mut pairs = std::mem::take(&mut self.fp_scratch);
-            pairs.clear();
-            for (i, name) in due.iter().enumerate() {
-                let fp = self
-                    .tenants
-                    .get(name)
-                    .and_then(|t| t.agent.batch_params().map(|(_, fp)| fp));
-                match fp {
-                    Some(fp) => pairs.push((fp, i)),
-                    None => self.decide(name),
-                }
-            }
-            // runs of equal fingerprint, ascending, members in name order —
-            // exactly the grouping the old per-tick BTreeMap build produced
-            pairs.sort_unstable();
-            let mut members = std::mem::take(&mut self.members_scratch);
-            let mut k = 0;
-            while k < pairs.len() {
-                let fp = pairs[k].0;
-                members.clear();
-                while k < pairs.len() && pairs[k].0 == fp {
-                    members.push(pairs[k].1);
-                    k += 1;
-                }
-                if members.len() >= 2 {
-                    self.decide_group(&due, &members);
-                } else {
-                    self.decide(&due[members[0]]);
-                }
-            }
-            self.members_scratch = members;
-            self.fp_scratch = pairs;
-        } else {
-            for name in &due {
-                self.decide(name);
-            }
-        }
+        // the three-phase sharded decision round (DESIGN.md §15)
+        self.plan_slots(&due);
+        self.run_decide_phase(due.len());
+        self.apply_slots(&due);
         // reschedule: each decided tenant's name String moves back onto the
         // wheel at its new deadline, so steady-state ticks never clone
         for name in due.drain(..) {
@@ -1033,7 +1160,9 @@ impl MultiEnv {
             self.due_wheel.capacity(),
             self.due_scratch.capacity(),
             self.fp_scratch.capacity(),
-            self.members_scratch.capacity(),
+            self.seq_scratch.capacity(),
+            self.apply_order.capacity(),
+            self.tick_slots.capacity(),
         );
         if caps_now != scratch_caps {
             self.obs_grow_events.set(self.obs_grow_events.get() + 1);
@@ -1156,6 +1285,218 @@ impl MultiEnv {
             }
         }
         out.truncate(n);
+    }
+}
+
+/// §15 decide-phase kernel, shared by the leader (single-thread path) and
+/// the tick workers: walk a chunk of planned slots, deciding sequential
+/// slots one by one and fingerprint runs through the batched forward. A
+/// chunk boundary can split a global run; the resulting sub-run still
+/// evaluates bitwise identically (§14 batch invariance), and the logical
+/// counters were already fixed at plan time.
+fn process_slots(
+    store: &DeploymentStore,
+    now: f64,
+    n_tenants: usize,
+    slots: &mut [DecideSlot],
+    s: &mut TickScratch,
+) {
+    let mut k = 0;
+    while k < slots.len() {
+        if slots[k].tenant.is_null() {
+            k += 1;
+            continue;
+        }
+        match slots[k].fp {
+            None => {
+                decide_slot_sequential(store, now, n_tenants, &mut slots[k], s);
+                k += 1;
+            }
+            Some(fp) => {
+                let start = k;
+                while k < slots.len() && !slots[k].tenant.is_null() && slots[k].fp == Some(fp) {
+                    k += 1;
+                }
+                decide_slot_run(store, now, n_tenants, &mut slots[start..k], s);
+            }
+        }
+    }
+}
+
+/// One sequential decision against the tick-start snapshot: predictor,
+/// observation build into the worker's scratch, `agent.decide_into` the
+/// slot's pooled action buffer. The apply happens later, serially.
+fn decide_slot_sequential(
+    store: &DeploymentStore,
+    now: f64,
+    n_tenants: usize,
+    slot: &mut DecideSlot,
+    s: &mut TickScratch,
+) {
+    // SAFETY: slot pointers of one tick are disjoint (the due list is
+    // deduped) and the leader blocks until every chunk returns, so this
+    // exclusive borrow never aliases another.
+    let t = unsafe { &mut *slot.tenant };
+    t.history.window_into(PRED_WINDOW, &mut s.win);
+    t.last_pred = t.predictor.predict_max(&s.win);
+    let caps = (s.obs_current.capacity(), s.obs_ready.capacity());
+    s.obs_current.clear();
+    match store.get(&t.name) {
+        Some(d) => s.obs_current.extend_from_slice(&d.config),
+        None => s.obs_current.extend(t.spec.default_config()),
+    }
+    store.ready_replicas_into(&t.name, t.spec.n_tasks(), now, &mut s.obs_ready);
+    pipeline_metrics_into(&t.spec, &s.obs_current, &s.obs_ready, t.last_rate, &mut s.obs_metrics);
+    let cores_other = store.cores_used_by_others(&t.name);
+    let obs = Observation {
+        spec: &t.spec,
+        load_now: t.last_rate,
+        load_pred: t.last_pred,
+        capacity: (store.topo.capacity() - cores_other).max(0.0),
+        cores_free: store.topo.free(),
+        current: &s.obs_current,
+        ready: &s.obs_ready,
+        metrics: &s.obs_metrics,
+        adapt_interval_secs: t.adapt_interval_secs as f64,
+        cores_other,
+        tenants: n_tenants,
+    };
+    let t0 = std::time::Instant::now();
+    t.agent.decide_into(&obs, &mut slot.action);
+    slot.decide_secs = t0.elapsed().as_secs_f64();
+    drop(obs);
+    if s.obs_current.capacity() != caps.0 || s.obs_ready.capacity() != caps.1 {
+        s.grow += 1;
+    }
+}
+
+/// One (sub-)run of equal-fingerprint slots: batched predictor pass over the
+/// planned joiners (§9), observation build + Eq. 5 state stacking per
+/// member, ONE batched policy forward over the shared parameter vector, then
+/// per-member sampling into the slot's action buffer (each tenant on its own
+/// RNG stream).
+fn decide_slot_run(
+    store: &DeploymentStore,
+    now: f64,
+    n_tenants: usize,
+    run: &mut [DecideSlot],
+    s: &mut TickScratch,
+) {
+    // predictor sub-phase: joiners stack their windows for one batched LSTM
+    // pass; everyone else predicts sequentially (row-bitwise equal — §9)
+    s.pred_windows.clear();
+    s.pred_rows.clear();
+    for (j, slot) in run.iter_mut().enumerate() {
+        // SAFETY: disjoint per the DecideSlot pointer argument.
+        let t = unsafe { &mut *slot.tenant };
+        t.history.window_into(PRED_WINDOW, &mut s.win);
+        if slot.pred_join {
+            let w = t.predictor.batch_window(&s.win).expect("pred_join implies batch_window");
+            s.pred_windows.extend_from_slice(w);
+            s.pred_rows.push(j);
+        } else {
+            t.last_pred = t.predictor.predict_max(&s.win);
+        }
+    }
+    if !s.pred_rows.is_empty() {
+        let batch = s.pred_rows.len();
+        {
+            // decouple the weights borrow from the tenants: copy the shared
+            // vector into the reused buffer (2.7k floats)
+            // SAFETY: shared borrow of a slot tenant; nothing else borrows
+            // it at this point.
+            let leader = unsafe { &*run[s.pred_rows[0]].tenant };
+            let (w, _) = leader.predictor.batch_params().expect("joined member");
+            s.pred_weights.clear();
+            s.pred_weights.extend_from_slice(w);
+        }
+        let preds =
+            predictor_fwd_batch_scratch(&s.pred_weights, &s.pred_windows, batch, &mut s.lstm_batch);
+        for (j, &row) in s.pred_rows.iter().enumerate() {
+            // SAFETY: disjoint per the DecideSlot pointer argument.
+            let t = unsafe { &mut *run[row].tenant };
+            t.last_pred = (preds[j] as f64).max(0.0);
+        }
+    }
+    // observation build + state stacking against the snapshot
+    s.batch_states.clear();
+    let batch = run.len();
+    for (row, slot) in run.iter().enumerate() {
+        // SAFETY: shared borrow; the matching exclusive borrows above ended.
+        let t = unsafe { &*slot.tenant };
+        if row == s.preps.len() {
+            s.preps.push(GroupPrep::default());
+            s.grow += 1;
+        }
+        let p = &mut s.preps[row];
+        p.idx = slot.due_idx;
+        p.load_pred = t.last_pred;
+        p.load_now = t.last_rate;
+        p.adapt_interval_secs = t.adapt_interval_secs as f64;
+        let caps = (p.current.capacity(), p.ready.capacity());
+        p.current.clear();
+        match store.get(&t.name) {
+            Some(d) => p.current.extend_from_slice(&d.config),
+            None => p.current.extend(t.spec.default_config()),
+        }
+        store.ready_replicas_into(&t.name, t.spec.n_tasks(), now, &mut p.ready);
+        pipeline_metrics_into(&t.spec, &p.current, &p.ready, p.load_now, &mut p.metrics);
+        p.cores_other = store.cores_used_by_others(&t.name);
+        p.capacity = (store.topo.capacity() - p.cores_other).max(0.0);
+        p.cores_free = store.topo.free();
+        let obs = Observation {
+            spec: &t.spec,
+            load_now: p.load_now,
+            load_pred: p.load_pred,
+            capacity: p.capacity,
+            cores_free: p.cores_free,
+            current: &p.current,
+            ready: &p.ready,
+            metrics: &p.metrics,
+            adapt_interval_secs: p.adapt_interval_secs,
+            cores_other: p.cores_other,
+            tenants: n_tenants,
+        };
+        build_state_append(&obs, &mut s.batch_states);
+        drop(obs);
+        if p.current.capacity() != caps.0 || p.ready.capacity() != caps.1 {
+            s.grow += 1;
+        }
+    }
+    // ONE pass over the shared parameter vector evaluates every member row
+    let fwd_secs = {
+        // SAFETY: shared borrow, as above.
+        let leader = unsafe { &*run[0].tenant };
+        let (params, _) =
+            leader.agent.batch_params().expect("grouped agents advertise batch support");
+        let t0 = std::time::Instant::now();
+        let _ = s.ws.policy_fwd_batch(params, &s.batch_states, batch);
+        t0.elapsed().as_secs_f64()
+    };
+    let fwd_share = fwd_secs / batch as f64;
+    for (row, slot) in run.iter_mut().enumerate() {
+        // SAFETY: disjoint per the DecideSlot pointer argument.
+        let t = unsafe { &mut *slot.tenant };
+        let p = &s.preps[row];
+        let obs = Observation {
+            spec: &t.spec,
+            load_now: p.load_now,
+            load_pred: p.load_pred,
+            capacity: p.capacity,
+            cores_free: p.cores_free,
+            current: &p.current,
+            ready: &p.ready,
+            metrics: &p.metrics,
+            adapt_interval_secs: p.adapt_interval_secs,
+            cores_other: p.cores_other,
+            tenants: n_tenants,
+        };
+        let state = &s.batch_states[row * STATE_DIM..(row + 1) * STATE_DIM];
+        let logits = &s.ws.logits()[row * LOGITS_DIM..(row + 1) * LOGITS_DIM];
+        let value = s.ws.values()[row];
+        let t0 = std::time::Instant::now();
+        t.agent.batch_decide_into(&obs, state, logits, value, &mut slot.action);
+        slot.decide_secs = fwd_share + t0.elapsed().as_secs_f64();
     }
 }
 
@@ -1735,5 +2076,78 @@ mod tests {
         };
         assert_eq!(run(7), run(7), "same seed replays bitwise");
         assert_ne!(run(7), run(8), "a different seed perturbs the run");
+    }
+
+    #[test]
+    fn due_wheel_compacts_under_deploy_remove_churn() {
+        let mut env = MultiEnv::new(ClusterTopology::uniform(16, 64.0), 1.0);
+        for i in 0..8 {
+            let name = format!("base{i}");
+            env.deploy(tenant_iv(&name, "P1", WorkloadKind::SteadyLow, i as u64, 5), None)
+                .unwrap();
+        }
+        // churn one slot hard without ever ticking: every deploy pushes a
+        // wheel entry, so without compaction the heap would end up holding
+        // hundreds of stale pairs that only a pop could shed
+        for round in 0..500u64 {
+            env.deploy(tenant_iv("churn", "P1", WorkloadKind::SteadyLow, round, 5), None)
+                .unwrap();
+            assert!(env.remove("churn"));
+        }
+        assert!(
+            env.due_wheel.len() <= 2 * env.n_tenants() + 1,
+            "wheel holds {} entries for {} tenants",
+            env.due_wheel.len(),
+            env.n_tenants()
+        );
+        assert!(
+            env.due_wheel.capacity() <= 128,
+            "wheel capacity {} must stay bounded under churn",
+            env.due_wheel.capacity()
+        );
+        // the rebuilt wheel still fires everyone on schedule
+        env.run_for(6);
+        for i in 0..8 {
+            assert_eq!(env.status(&format!("base{i}")).unwrap().decisions, 1);
+        }
+    }
+
+    fn invariance_fleet(n: usize) -> MultiEnv {
+        let mut env = MultiEnv::new(ClusterTopology::uniform(16, 64.0), 1.0);
+        let params_a = shared_params(21);
+        let params_b = shared_params(22);
+        for i in 0..n {
+            let name = format!("t{i:03}");
+            let iv = [1, 2, 3, 5][i % 4];
+            let t = if i % 3 == 0 {
+                let params = if i % 2 == 0 { params_a.clone() } else { params_b.clone() };
+                let mut t = opd_tenant(&name, "P1", params, i as u64);
+                t.adapt_interval_secs = iv;
+                t
+            } else {
+                tenant_iv(&name, "P1", WorkloadKind::Fluctuating, i as u64, iv)
+            };
+            env.deploy(t, None).unwrap();
+        }
+        env.schedule_plan(&FaultPlan::seeded(5, 16, 20.0, 8.0), 0.0);
+        env
+    }
+
+    #[test]
+    fn sharded_tick_matches_single_thread_bitwise() {
+        let trace = |threads: usize| {
+            let mut env = invariance_fleet(24);
+            env.tick_threads = threads;
+            let mut fps = Vec::new();
+            for _ in 0..30 {
+                env.tick();
+                fps.push(env.tick_fingerprint());
+            }
+            fps
+        };
+        let base = trace(1);
+        for threads in [2, 4] {
+            assert_eq!(trace(threads), base, "tick_threads={threads} must replay bitwise");
+        }
     }
 }

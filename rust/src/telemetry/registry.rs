@@ -80,6 +80,19 @@ impl MetricsRegistry {
         self.inner.lock().unwrap().gauges.get(&key(name, labels)).copied()
     }
 
+    /// Drop every metric registered under `name{labels}` (counter, gauge or
+    /// histogram). Returns true when anything was removed. The leader calls
+    /// this when a tenant is deleted so per-pipeline gauges do not pin label
+    /// cardinality forever (DESIGN.md §15).
+    pub fn remove_series(&self, name: &str, labels: &[(&str, &str)]) -> bool {
+        let k = key(name, labels);
+        let mut g = self.inner.lock().unwrap();
+        let mut hit = g.counters.remove(&k).is_some();
+        hit |= g.gauges.remove(&k).is_some();
+        hit |= g.histograms.remove(&k).is_some();
+        hit
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap();
         MetricsSnapshot { counters: g.counters.clone(), gauges: g.gauges.clone() }
@@ -189,6 +202,23 @@ mod tests {
         // +Inf bucket must equal total count
         let inf_line = text.lines().find(|l| l.contains("le=\"+Inf\"")).unwrap();
         assert!(inf_line.ends_with(" 3"), "{inf_line}");
+    }
+
+    #[test]
+    fn remove_series_evicts_all_kinds() {
+        let r = MetricsRegistry::new();
+        r.set_gauge("qos", &[("pipeline", "a")], 3.5);
+        r.set_gauge("qos", &[("pipeline", "b")], 4.0);
+        r.inc("hits", &[("pipeline", "a")], 2.0);
+        r.observe("lat", &[("pipeline", "a")], 0.01);
+        assert!(r.remove_series("qos", &[("pipeline", "a")]));
+        assert!(r.remove_series("hits", &[("pipeline", "a")]));
+        assert!(r.remove_series("lat", &[("pipeline", "a")]));
+        assert!(!r.remove_series("qos", &[("pipeline", "a")]), "already gone");
+        assert_eq!(r.gauge("qos", &[("pipeline", "a")]), None);
+        assert_eq!(r.gauge("qos", &[("pipeline", "b")]), Some(4.0), "others untouched");
+        let text = r.expose();
+        assert!(!text.contains("pipeline=\"a\""), "{text}");
     }
 
     #[test]

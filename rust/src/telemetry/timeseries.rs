@@ -48,6 +48,13 @@ impl TimeSeriesStore {
         }
     }
 
+    /// Drop a series outright. Returns true when it existed. The leader
+    /// calls this on tenant delete so per-pipeline series do not accumulate
+    /// across deploy/remove churn (DESIGN.md §15).
+    pub fn remove(&self, name: &str) -> bool {
+        self.series.lock().unwrap().remove(name).is_some()
+    }
+
     pub fn len(&self, name: &str) -> usize {
         self.series.lock().unwrap().get(name).map(|h| h.len()).unwrap_or(0)
     }
@@ -108,6 +115,18 @@ mod tests {
         assert_eq!(ts.latest("a"), Some(1.0));
         assert_eq!(ts.latest("b"), Some(2.0));
         assert_eq!(ts.names(), vec!["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn remove_drops_one_series() {
+        let ts = TimeSeriesStore::new(10);
+        ts.record("load:a", 1.0);
+        ts.record("load:b", 2.0);
+        assert!(ts.remove("load:a"));
+        assert!(!ts.remove("load:a"), "already gone");
+        assert_eq!(ts.latest("load:a"), None);
+        assert_eq!(ts.latest("load:b"), Some(2.0));
+        assert_eq!(ts.names(), vec!["load:b".to_string()]);
     }
 
     #[test]

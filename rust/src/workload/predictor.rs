@@ -3,10 +3,11 @@
 //! against. The native LSTM mirror is `Send` (it powers the rollout
 //! engine's thread-sharded environments); its recurrent matmul and readout
 //! run the fixed-lane kernels of DESIGN.md §14, so single and batched
-//! evaluation agree bitwise. The PJRT-backed variant is a separate,
-//! leader-thread-confined type ([`HloLstmPredictor`]).
+//! evaluation agree bitwise. The PJRT-backed variant ([`HloLstmPredictor`])
+//! shares its runtime via `Arc`, so it too is `Send` and can ride the
+//! sharded tick's worker pool (§15).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::nn::policy::{predictor_fwd_scratch, LstmScratch};
 use crate::nn::spec::{PRED_HORIZON, PRED_WINDOW};
@@ -151,17 +152,17 @@ impl LoadPredictor for LstmPredictor {
 
 /// The LSTM predictor through the AOT HLO program (Pallas LSTM cell kernel
 /// inside the lowered graph), falling back to the native mirror when the
-/// device call fails. Holds an `Rc<OpdRuntime>`, so it is leader-thread
-/// confined and does not participate in the batched predictor path.
+/// device call fails. Exposes no `batch_params`, so it never joins the
+/// batched predictor path; the `Arc<OpdRuntime>` handle keeps it `Send`.
 pub struct HloLstmPredictor {
-    runtime: Rc<OpdRuntime>,
+    runtime: Arc<OpdRuntime>,
     weights: Vec<f32>,
     window_buf: Vec<f32>,
     scratch: LstmScratch,
 }
 
 impl HloLstmPredictor {
-    pub fn new(runtime: Rc<OpdRuntime>) -> Self {
+    pub fn new(runtime: Arc<OpdRuntime>) -> Self {
         Self {
             weights: runtime.predictor_weights.clone(),
             runtime,

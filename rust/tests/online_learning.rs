@@ -27,7 +27,7 @@ fn opd_factory(init: Vec<f32>) -> TenantFactory {
             AgentKind::Opd => {
                 let mut a = OpdAgent::native(init.clone(), seed);
                 a.greedy = false;
-                Ok(Box::new(a) as Box<dyn Agent>)
+                Ok(Box::new(a) as Box<dyn Agent + Send>)
             }
             other => baseline(other, seed).ok_or_else(|| "unreachable".to_string()),
         }),

@@ -110,7 +110,7 @@ fn opd_agent_over_hlo_produces_valid_configs() {
     use opd::workload::predictor::LstmPredictor;
     use opd::workload::WorkloadKind;
     let Some(rt) = runtime() else { return };
-    let rt = std::rc::Rc::new(rt);
+    let rt = Arc::new(rt);
     let mut env = Env::from_workload(
         catalog::video_analytics().spec,
         ClusterTopology::paper_testbed(),

@@ -1,0 +1,120 @@
+//! Sharded-tick invariance (DESIGN.md §15): `MultiEnv::tick` fans its
+//! decide phase out over `tick_threads` workers, and the contract is that
+//! the thread count is observationally invisible — per-tenant config
+//! history, agent RNG stream positions, the store's usage index and every
+//! batching/fault counter must be bitwise identical at any `--tick-threads`,
+//! with a seeded chaos plan running (faults/repairs stay serial).
+
+use opd::cluster::{ClusterTopology, FaultPlan};
+use opd::pipeline::{catalog, QosWeights};
+use opd::sim::{LoadSource, MultiEnv, Tenant};
+use opd::workload::predictor::{LstmPredictor, MovingMaxPredictor};
+use opd::workload::{WorkloadGen, WorkloadKind};
+
+/// Deterministic policy parameter vector (shared by a fingerprint group).
+fn shared_params(seed: u64) -> Vec<f32> {
+    let mut rng = opd::util::prng::Pcg32::new(seed);
+    (0..opd::nn::spec::POLICY_PARAM_COUNT).map(|_| (rng.normal() * 0.02) as f32).collect()
+}
+
+/// Deterministic LSTM predictor weights (shared by a predictor group).
+fn shared_pred_weights(seed: u64) -> Vec<f32> {
+    let mut rng = opd::util::prng::Pcg32::new(seed);
+    (0..opd::nn::spec::PREDICTOR_PARAM_COUNT).map(|_| (rng.normal() * 0.02) as f32).collect()
+}
+
+/// A mixed fleet exercising every decide path the sharded tick has: OPD
+/// natives in two shared-parameter groups (batched policy forwards + batched
+/// LSTM predictions), greedy baselines on the sequential path, and varied
+/// adapt intervals so due sets differ tick to tick.
+fn fleet(n: usize) -> MultiEnv {
+    let mut env = MultiEnv::new(ClusterTopology::uniform(64, 64.0), 1.0);
+    let params = [shared_params(21), shared_params(22)];
+    let pred_weights = shared_pred_weights(33);
+    let pipelines = ["P1", "P2", "P3", "P4"];
+    for i in 0..n {
+        let name = format!("t{i:04}");
+        let spec = catalog::by_name(pipelines[i % pipelines.len()]).unwrap().spec;
+        let interval = [1, 2, 3, 5][i % 4];
+        let kind = if i % 2 == 0 { WorkloadKind::Fluctuating } else { WorkloadKind::SteadyLow };
+        let tenant = if i % 8 == 0 {
+            let mut agent = opd::agents::OpdAgent::native(params[(i / 8) % 2].clone(), i as u64);
+            agent.greedy = false; // sampling → the RNG stream position matters
+            Tenant::new(
+                name,
+                spec,
+                Box::new(agent),
+                QosWeights::default(),
+                LoadSource::Gen(WorkloadGen::new(kind, i as u64)),
+                Box::new(LstmPredictor::native(pred_weights.clone())),
+                interval,
+            )
+        } else {
+            Tenant::new(
+                name,
+                spec,
+                Box::new(opd::agents::GreedyAgent::new()),
+                QosWeights::default(),
+                LoadSource::Gen(WorkloadGen::new(kind, i as u64)),
+                Box::new(MovingMaxPredictor::default()),
+                interval,
+            )
+        };
+        env.deploy(tenant, None).unwrap();
+    }
+    env.schedule_plan(&FaultPlan::seeded(5, 64, 18.0, 6.0), 0.0);
+    env
+}
+
+/// Run `ticks` seconds at a given shard width and fingerprint every tick —
+/// the full per-tick trajectory must match, not just the end state.
+fn trace(n: usize, threads: usize, ticks: usize) -> Vec<u64> {
+    let mut env = fleet(n);
+    env.tick_threads = threads;
+    (0..ticks)
+        .map(|_| {
+            env.tick();
+            env.tick_fingerprint()
+        })
+        .collect()
+}
+
+#[test]
+fn single_tenant_is_thread_invariant() {
+    let base = trace(1, 1, 30);
+    for threads in [2, 4, 8] {
+        assert_eq!(trace(1, threads, 30), base, "{threads} threads diverged");
+    }
+}
+
+#[test]
+fn mid_fleet_is_thread_invariant() {
+    let base = trace(64, 1, 24);
+    for threads in [2, 4, 8] {
+        assert_eq!(trace(64, threads, 24), base, "{threads} threads diverged");
+    }
+}
+
+#[test]
+fn large_fleet_is_thread_invariant() {
+    let base = trace(300, 1, 16);
+    for threads in [2, 4, 8] {
+        assert_eq!(trace(300, threads, 16), base, "{threads} threads diverged");
+    }
+}
+
+/// The batched paths actually engage under sharding (the invariance above
+/// would be vacuous if every tenant fell back to the sequential path), and
+/// the chaos plan actually fires.
+#[test]
+fn sharded_run_exercises_batched_paths_and_chaos() {
+    let mut env = fleet(64);
+    env.tick_threads = 4;
+    for _ in 0..24 {
+        env.tick();
+    }
+    assert!(env.batched_decisions > 0, "OPD groups should batch-decide");
+    assert!(env.batched_predictions > 0, "LSTM groups should batch-predict");
+    assert!(env.node_failures > 0, "the seeded plan should fire by t=18");
+    assert_eq!(env.n_tenants(), 64, "node failures must not drop tenants");
+}

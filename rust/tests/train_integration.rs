@@ -2,7 +2,7 @@
 //! update parameters, and improve the policy on a short task. Skipped when
 //! artifacts are absent.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use opd::cluster::ClusterTopology;
 use opd::nn::spec::*;
@@ -14,9 +14,9 @@ use opd::util::prng::Pcg32;
 use opd::workload::predictor::MovingMaxPredictor;
 use opd::workload::WorkloadKind;
 
-fn runtime() -> Option<Rc<OpdRuntime>> {
+fn runtime() -> Option<Arc<OpdRuntime>> {
     match OpdRuntime::load(None) {
-        Ok(rt) => Some(Rc::new(rt)),
+        Ok(rt) => Some(Arc::new(rt)),
         Err(e) => {
             eprintln!("SKIP (no artifacts): {e:#}");
             None
